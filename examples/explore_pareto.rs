@@ -1,0 +1,30 @@
+//! Scenario: a hardware team sweeping the accelerator design space for an
+//! edge deployment — regenerates the paper's exploration artifacts
+//! (Fig 4 scatter, Fig 9 violins, Fig 10/11 Pareto + Table 2) against the
+//! full CIFAR + ImageNet workload suite.
+//!
+//! Run: cargo run --release --example explore_pareto [samples]
+
+use std::path::Path;
+
+use quidam::coordinator::{figures, Coordinator};
+
+fn main() {
+    let samples: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(2000);
+    let coord = Coordinator::default();
+    let out = Path::new("results");
+    std::fs::create_dir_all(out).ok();
+
+    println!("building PPA models (cached in artifacts/ppa_models.json)...");
+    let models = coord.load_or_build_models(
+        Path::new("artifacts/ppa_models.json"), 240, 5, 42);
+
+    print!("{}", figures::fig4(&coord, &models, out, samples));
+    print!("{}", figures::fig9(&coord, &models, out, samples / 2));
+    print!("{}", figures::fig10_11_table2(&coord, &models, out, samples));
+    print!("{}", figures::table3(&coord, out));
+    println!("CSV data in results/ — see EXPERIMENTS.md for paper-vs-measured.");
+}

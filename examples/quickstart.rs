@@ -1,0 +1,70 @@
+//! Quickstart: the 60-second QUIDAM tour.
+//!
+//! Builds (or loads) the pre-characterized PPA models, then asks the
+//! framework the paper's basic question: "what do power / performance /
+//! area look like for this accelerator config on this DNN?" across all
+//! four PE types — reproducing the headline observation that LightPEs
+//! dominate INT16/FP32 on performance-per-area and energy.
+//!
+//! Run: cargo run --release --example quickstart
+
+use quidam::config::AcceleratorConfig;
+use quidam::coordinator::Coordinator;
+use quidam::dse;
+use quidam::models::{zoo, Dataset};
+use quidam::pe::PeType;
+use quidam::report::render_table;
+
+fn main() {
+    let coord = Coordinator::default();
+    // Characterization: ~2 min cold, instant when cached.
+    println!("loading pre-characterized PPA models (artifacts/ppa_models.json)...");
+    let models = coord.load_or_build_models(
+        std::path::Path::new("artifacts/ppa_models.json"),
+        240,  // configs per PE type
+        5,    // polynomial degree (paper Fig 5)
+        42,
+    );
+
+    let net = zoo::resnet_cifar(20, Dataset::Cifar10);
+    println!("workload: {} ({:.1} MMACs)\n", net.name,
+             net.total_macs() as f64 / 1e6);
+
+    let mut rows = Vec::new();
+    let mut pts = Vec::new();
+    for pe in PeType::ALL {
+        let cfg = AcceleratorConfig::baseline(pe);
+        let p = dse::evaluate(&models, &cfg, &net.layers);
+        pts.push(p);
+        rows.push(vec![
+            pe.name().into(),
+            format!("{:.3}", p.latency_s * 1e3),
+            format!("{:.1}", p.power_mw),
+            format!("{:.2}", p.area_um2 / 1e6),
+            format!("{:.3}", p.energy_j * 1e3),
+        ]);
+    }
+    println!("{}", render_table(
+        "Eyeriss-like baseline (12x14 array) per PE type",
+        &["pe", "latency ms", "power mW", "area mm2", "energy mJ"],
+        &rows,
+    ));
+
+    // The paper's normalization: everything vs the best INT16 point.
+    let norm = dse::normalize(&pts);
+    let mut rows = Vec::new();
+    for p in &norm {
+        rows.push(vec![
+            p.cfg.pe_type.name().into(),
+            format!("{:.2}x", p.norm_ppa),
+            format!("{:.2}x", p.norm_energy),
+        ]);
+    }
+    println!("{}", render_table(
+        "Normalized to the INT16 reference (paper Figs 4/9)",
+        &["pe", "perf/area", "energy"],
+        &rows,
+    ));
+    println!("LightPEs should show >1x perf/area and <1x energy — the \
+              paper's core observation.");
+}

@@ -1,0 +1,16 @@
+"""L1 Pallas kernels for QUIDAM's quantization-aware processing elements.
+
+Build-time only: these lower (interpret=True) into the L2 HLO artifacts that
+the Rust coordinator executes via PJRT. Python never runs on the request path.
+"""
+
+from .pot_matmul import (  # noqa: F401
+    POT_MAX_EXP,
+    pot_encode_k1,
+    pot_encode_k2,
+    pot_decode_k1,
+    pot_decode_k2,
+    pot_matmul_k1,
+    pot_matmul_k2,
+)
+from .intq_matmul import fake_quant, intq_matmul  # noqa: F401

@@ -1,0 +1,72 @@
+"""Integer fake-quantized matmul — the conventional INT16/INT8 PE path.
+
+QUIDAM's conventional PEs (paper Fig. 3a/3b) use full multipliers at INT16 or
+FP32 precision. This kernel models the *numerics* of b-bit symmetric linear
+quantization (values snapped to a (2^(b-1)-1)-level grid) while executing the
+same MXU-shaped blocked matmul schedule as the LightPE kernels, so the L2
+model can swap PE arithmetic by swapping kernels.
+
+Storage/energy of the narrower datapath is modeled in the Rust synthesis
+layer; here we care about bit-exact grid snapping and the VMEM/MXU schedule.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BM = 128
+DEFAULT_BN = 128
+DEFAULT_BK = 128
+
+
+def fake_quant(x: jax.Array, bits: int, scale: jax.Array | None = None):
+    """Symmetric linear fake-quantization to ``bits`` bits.
+
+    Returns values snapped to ``scale * round(x/scale)`` with the integer
+    grid clipped to [-(2^(b-1)-1), 2^(b-1)-1]. ``scale`` defaults to
+    max|x| / qmax (per-tensor).
+    """
+    qmax = float(2 ** (bits - 1) - 1)
+    if scale is None:
+        scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-8) / qmax
+    q = jnp.clip(jnp.round(x / scale), -qmax, qmax)
+    return q * scale
+
+
+def _intq_matmul_kernel(x_ref, w_ref, o_ref):
+    """Grid (i, j, k): straight blocked MAC over pre-quantized operands."""
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def intq_matmul(x, w, *, bm=DEFAULT_BM, bn=DEFAULT_BN, bk=DEFAULT_BK,
+                interpret=True):
+    """Blocked matmul over fake-quantized operands: (M,K) @ (K,N) -> (M,N)."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"inner dims mismatch: {k} vs {k2}"
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (
+        f"shape ({m},{k})x({k},{n}) not divisible by blocks ({bm},{bn},{bk})"
+    )
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        _intq_matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(x, w)

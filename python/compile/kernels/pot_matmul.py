@@ -1,0 +1,155 @@
+"""Power-of-two (shift-add) quantized matmul — the LightPE compute hot-spot.
+
+QUIDAM's LightPE-1/LightPE-2 processing elements (paper §3.2, Eq. 1) replace
+the multiplier in the MAC with shifts:
+
+    LightPE-1:  w = ±2^-m            (4-bit code: sign + 3-bit |m|)
+    LightPE-2:  w = ±(2^-m1 + 2^-m2) (7-bit code: sign + 3-bit |m1| + 3-bit |m2|)
+
+so ``x*w`` is one shift (k=1) or two shifts plus one add (k=2).
+
+Hardware adaptation (DESIGN.md §3): on TPU the "shift" is an exponent-field
+decode done on the VPU in VMEM — codes stream from HBM 4-8x denser than FP32
+— followed by an MXU-shaped blocked matmul over the decoded tile. The kernels
+below express that schedule with a (M/bm, N/bn, K/bk) grid and BlockSpecs;
+``interpret=True`` everywhere because CPU PJRT cannot execute Mosaic
+custom-calls (the real-TPU lowering).
+
+Code layout (int32 lanes for interpret-mode portability; storage density is
+modeled in the Rust synthesis layer):
+
+    k=1:  bit 3   = sign (1 -> negative), bits 2..0 = m
+    k=2:  bit 6   = sign,                bits 5..3 = m1, bits 2..0 = m2
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Exponents m are restricted to 0..7 (paper §3.2: "m = 0, 1, ..., 7").
+POT_MAX_EXP = 7
+
+# Block shapes for the HBM->VMEM schedule. 128 matches the MXU systolic
+# array edge; small-K tails are handled by padding in the L2 wrapper.
+DEFAULT_BM = 128
+DEFAULT_BN = 128
+DEFAULT_BK = 128
+
+
+# ---------------------------------------------------------------------------
+# Encode / decode (trace-time ops; the decode also runs inside the kernel)
+# ---------------------------------------------------------------------------
+
+def pot_encode_k1(w: jax.Array) -> jax.Array:
+    """Encode float weights (|w| <= 1 after scaling) as LightPE-1 codes.
+
+    Chooses m minimizing |w - sign(w)*2^-m| over m in 0..POT_MAX_EXP by
+    rounding -log2|w|. Zero / tiny weights saturate to the smallest
+    magnitude 2^-7 (the paper's code has no exact-zero representation).
+    """
+    aw = jnp.abs(w)
+    safe = jnp.maximum(aw, 2.0 ** (-POT_MAX_EXP - 1))
+    # Round in log space: m* = round(-log2|w|), clipped to the code range.
+    m = jnp.clip(jnp.round(-jnp.log2(safe)), 0, POT_MAX_EXP).astype(jnp.int32)
+    sign_bit = (w < 0).astype(jnp.int32)
+    return (sign_bit << 3) | m
+
+
+def pot_decode_k1(code: jax.Array) -> jax.Array:
+    """Decode LightPE-1 codes to float: the TPU analogue of the shift."""
+    m = (code & 0x7).astype(jnp.float32)
+    sign = 1.0 - 2.0 * ((code >> 3) & 0x1).astype(jnp.float32)
+    return sign * jnp.exp2(-m)
+
+
+def pot_encode_k2(w: jax.Array) -> jax.Array:
+    """Encode float weights as LightPE-2 codes (greedy two-term expansion).
+
+    Greedy residual fit (LightNN [8]): pick the largest power-of-two *not
+    exceeding* |w| (ceil in log space, so the residual is non-negative),
+    then round the residual to its nearest power. Both terms saturate at
+    2^-POT_MAX_EXP, the representation floor.
+    """
+    aw = jnp.abs(w)
+    safe = jnp.maximum(aw, 2.0 ** (-POT_MAX_EXP - 1))
+    # ceil(-log2|w|) gives 2^-m1 <= |w| (floor would overshoot and leave a
+    # negative residual).
+    m1 = jnp.clip(jnp.ceil(-jnp.log2(safe)), 0, POT_MAX_EXP).astype(jnp.int32)
+    r = jnp.maximum(aw - jnp.exp2(-m1.astype(jnp.float32)), 0.0)
+    safe_r = jnp.maximum(r, 2.0 ** (-POT_MAX_EXP - 1))
+    m2 = jnp.clip(jnp.round(-jnp.log2(safe_r)), 0, POT_MAX_EXP).astype(jnp.int32)
+    sign_bit = (aw > 0) & (w < 0)
+    return (sign_bit.astype(jnp.int32) << 6) | (m1 << 3) | m2
+
+
+def pot_decode_k2(code: jax.Array) -> jax.Array:
+    """Decode LightPE-2 codes: two exponent decodes + one add (2 shifts, 1 add)."""
+    m1 = ((code >> 3) & 0x7).astype(jnp.float32)
+    m2 = (code & 0x7).astype(jnp.float32)
+    sign = 1.0 - 2.0 * ((code >> 6) & 0x1).astype(jnp.float32)
+    return sign * (jnp.exp2(-m1) + jnp.exp2(-m2))
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernels
+# ---------------------------------------------------------------------------
+
+def _pot_matmul_kernel(x_ref, code_ref, o_ref, *, nsteps: int, decode):
+    """Grid (i, j, k): o[i,j] += x[i,k] @ decode(code[k,j]).
+
+    The decode is the LightPE shift stage (VPU, in VMEM); the dot is the
+    MXU stage. Accumulation across the k grid dimension uses o_ref as the
+    VMEM-resident accumulator (zeroed on the first k step).
+    """
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    w = decode(code_ref[...])
+    o_ref[...] += jnp.dot(
+        x_ref[...], w, preferred_element_type=jnp.float32
+    )
+
+
+def _pot_matmul(x, code, *, decode, bm, bn, bk, interpret=True):
+    m, k = x.shape
+    k2, n = code.shape
+    assert k == k2, f"inner dims mismatch: {k} vs {k2}"
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (
+        f"shape ({m},{k})x({k},{n}) not divisible by blocks ({bm},{bn},{bk});"
+        " pad in the caller"
+    )
+    grid = (m // bm, n // bn, k // bk)
+    kernel = functools.partial(
+        _pot_matmul_kernel, nsteps=grid[2], decode=decode
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(x, code)
+
+
+def pot_matmul_k1(x, code, *, bm=DEFAULT_BM, bn=DEFAULT_BN, bk=DEFAULT_BK,
+                  interpret=True):
+    """LightPE-1 matmul: x (M,K) f32 @ decode_k1(code) (K,N) -> (M,N) f32."""
+    return _pot_matmul(x, code, decode=pot_decode_k1,
+                       bm=bm, bn=bn, bk=bk, interpret=interpret)
+
+
+def pot_matmul_k2(x, code, *, bm=DEFAULT_BM, bn=DEFAULT_BN, bk=DEFAULT_BK,
+                  interpret=True):
+    """LightPE-2 matmul: x (M,K) f32 @ decode_k2(code) (K,N) -> (M,N) f32."""
+    return _pot_matmul(x, code, decode=pot_decode_k2,
+                       bm=bm, bn=bn, bk=bk, interpret=interpret)

@@ -1,0 +1,60 @@
+"""Pure-jnp correctness oracles for the L1 Pallas kernels.
+
+Every kernel must satisfy ``assert_allclose(kernel(...), ref(...))`` (pytest
++ hypothesis sweeps in python/tests/). The refs are deliberately written
+with no Pallas, no blocking — just the mathematical definition.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .pot_matmul import POT_MAX_EXP
+
+
+def pot_decode_k1_ref(code):
+    """w = ±2^-m from the 4-bit LightPE-1 code (bit3 sign, bits2..0 m)."""
+    m = (code & 0x7).astype(jnp.float32)
+    sign = jnp.where((code >> 3) & 0x1 == 1, -1.0, 1.0)
+    return sign * (2.0 ** (-m))
+
+
+def pot_decode_k2_ref(code):
+    """w = ±(2^-m1 + 2^-m2) from the 7-bit LightPE-2 code."""
+    m1 = ((code >> 3) & 0x7).astype(jnp.float32)
+    m2 = (code & 0x7).astype(jnp.float32)
+    sign = jnp.where((code >> 6) & 0x1 == 1, -1.0, 1.0)
+    return sign * (2.0 ** (-m1) + 2.0 ** (-m2))
+
+
+def pot_matmul_k1_ref(x, code):
+    return x @ pot_decode_k1_ref(code)
+
+
+def pot_matmul_k2_ref(x, code):
+    return x @ pot_decode_k2_ref(code)
+
+
+def matmul_ref(x, w):
+    return x @ w
+
+
+def fake_quant_ref(x, bits, scale=None):
+    qmax = float(2 ** (bits - 1) - 1)
+    if scale is None:
+        scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-8) / qmax
+    return jnp.clip(jnp.round(x / scale), -qmax, qmax) * scale
+
+
+def pot_quant_error_bound_k1():
+    """Worst-case relative error of the k=1 rounding encode for |w| in
+    [2^-POT_MAX_EXP, 1]: rounding in log2 space is off by <= 0.5, so the
+    reconstructed magnitude is within a factor 2^±0.5 -> rel err <= 2^0.5-1.
+    """
+    return 2.0 ** 0.5 - 1.0
+
+
+def pot_representable_k1():
+    """All 16 representable LightPE-1 values."""
+    mags = [2.0 ** (-m) for m in range(POT_MAX_EXP + 1)]
+    return sorted({s * v for s in (-1.0, 1.0) for v in mags})

@@ -1,0 +1,278 @@
+"""L2 — QUIDAM's quantization-aware CNN in JAX (build-time only).
+
+A configurable VGG-style CNN (the paper's Table-4 block structure:
+Conv-BN-ReLU x reps -> MaxPool stages -> GAP -> FC) whose conv layers run
+through the L1 Pallas kernels selected by PE type:
+
+    fp32      -> plain f32 matmul                    (Fig 3a)
+    int16     -> intq_matmul over 16-bit fake-quant  (Fig 3b)
+    lightpe1  -> pot_matmul_k1 over ±2^-m codes      (Fig 3c, 1 shift)
+    lightpe2  -> pot_matmul_k2 over ±(2^-m1+2^-m2)   (Fig 3d, 2 shifts + add)
+
+Training uses straight-through estimation (STE): forward runs the quantized
+kernel, backward treats quantization as identity — the standard QAT recipe
+the paper's accuracy results rely on. Everything here is AOT-lowered by
+aot.py to HLO text; the Rust coordinator executes the artifacts via PJRT.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import (
+    intq_matmul,
+    fake_quant,
+    pot_encode_k1,
+    pot_encode_k2,
+    pot_matmul_k1,
+    pot_matmul_k2,
+)
+
+PE_TYPES = ("fp32", "int16", "lightpe1", "lightpe2")
+
+# Activation precision for the quantized PEs (paper §3.2: 8-bit activations
+# for LightPEs, 16-bit for INT16).
+ACT_BITS = {"int16": 16, "lightpe1": 8, "lightpe2": 8}
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Architecture hyperparameters (a point in the Table-4 search space)."""
+
+    image_size: int = 16
+    in_channels: int = 3
+    num_classes: int = 10
+    # (repetitions, channels) per stage; a MaxPool(2x2) follows each stage.
+    blocks: tuple = ((2, 32), (2, 64))
+    pe_type: str = "fp32"
+
+    def __post_init__(self):
+        assert self.pe_type in PE_TYPES, self.pe_type
+        assert self.image_size % (2 ** len(self.blocks)) == 0, (
+            "image size must survive the MaxPool stages"
+        )
+
+
+# ---------------------------------------------------------------------------
+# Quantized matmul dispatch (with STE custom_vjp)
+# ---------------------------------------------------------------------------
+
+def _pad_to(x, rows, cols):
+    r, c = x.shape
+    if r == rows and c == cols:
+        return x
+    return jnp.pad(x, ((0, rows - r), (0, cols - c)))
+
+
+def _block_pad(dim, blk=128):
+    """Padded size + block: dims <= blk stay exact; larger pad to blk."""
+    if dim <= blk:
+        return dim, dim
+    pad = (dim + blk - 1) // blk * blk
+    return pad, blk
+
+
+def _padded_call(x, w_or_code, fn):
+    """Run an L1 kernel with zero-padding to block-divisible shapes.
+
+    Zero-padded x columns multiply whatever the padded code region decodes
+    to by 0.0, so arbitrary pad codes are sound.
+    """
+    m, k = x.shape
+    _, n = w_or_code.shape
+    mp, bm = _block_pad(m)
+    kp, bk = _block_pad(k)
+    np_, bn = _block_pad(n)
+    xp = _pad_to(x, mp, kp)
+    wp = _pad_to(w_or_code, kp, np_)
+    y = fn(xp, wp, bm=bm, bn=bn, bk=bk)
+    return y[:m, :n]
+
+
+def _qmatmul_fwd_impl(x, w, pe_type):
+    """Forward quantized matmul (the exported numerics)."""
+    if pe_type == "fp32":
+        return x @ w
+    xq = fake_quant(x, ACT_BITS[pe_type])
+    if pe_type == "int16":
+        wq = fake_quant(w, 16)
+        return _padded_call(xq, wq, intq_matmul)
+    # LightPE: per-tensor scale so |w/s| <= 1 is representable by 2^-m sums.
+    s = jnp.maximum(jnp.max(jnp.abs(w)), 1e-8)
+    if pe_type == "lightpe1":
+        code = pot_encode_k1(w / s)
+        return _padded_call(xq, code, pot_matmul_k1) * s
+    code = pot_encode_k2(w / s)
+    return _padded_call(xq, code, pot_matmul_k2) * s
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def qmatmul(x, w, pe_type):
+    return _qmatmul_fwd_impl(x, w, pe_type)
+
+
+def _qmatmul_fwd(x, w, pe_type):
+    return _qmatmul_fwd_impl(x, w, pe_type), (x, w)
+
+
+def _qmatmul_bwd(pe_type, res, g):
+    # STE: gradient flows as if y = x @ w (quantize == identity).
+    x, w = res
+    return g @ w.T, x.T @ g
+
+
+qmatmul.defvjp(_qmatmul_fwd, _qmatmul_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Layers
+# ---------------------------------------------------------------------------
+
+def _im2col(x, kh=3, kw=3):
+    """(B,H,W,C) -> (B*H*W, kh*kw*C) SAME-padded 3x3 patches.
+
+    The dataflow analogue of the row-stationary ifmap reuse: each output
+    pixel's receptive field becomes one matmul row.
+    """
+    b, h, w, c = x.shape
+    xp = jnp.pad(x, ((0, 0), (1, 1), (1, 1), (0, 0)))
+    cols = []
+    for di in range(kh):
+        for dj in range(kw):
+            cols.append(xp[:, di:di + h, dj:dj + w, :])
+    patches = jnp.concatenate(cols, axis=-1)  # (B,H,W,kh*kw*C)
+    return patches.reshape(b * h * w, kh * kw * c)
+
+
+def conv3x3(x, w, pe_type):
+    """3x3 SAME conv via im2col + quantized matmul. w: (3,3,Cin,Cout)."""
+    b, h, wd, c = x.shape
+    f = w.shape[-1]
+    cols = _im2col(x)
+    wmat = w.reshape(9 * c, f)
+    y = qmatmul(cols, wmat, pe_type)
+    return y.reshape(b, h, wd, f)
+
+
+def batch_norm(x, gamma, beta, eps=1e-5):
+    """Batch-statistics normalization over (B,H,W) per channel."""
+    mean = jnp.mean(x, axis=(0, 1, 2), keepdims=True)
+    var = jnp.var(x, axis=(0, 1, 2), keepdims=True)
+    return gamma * (x - mean) * jax.lax.rsqrt(var + eps) + beta
+
+
+def max_pool_2x2(x):
+    b, h, w, c = x.shape
+    return jnp.max(x.reshape(b, h // 2, 2, w // 2, 2, c), axis=(2, 4))
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: ModelConfig, seed: int = 0):
+    """He-init parameters, returned as an ordered flat list of arrays.
+
+    Order (the manifest contract with the Rust trainer):
+      for each conv layer: [w, gamma, beta] ...; then [fc_w, fc_b].
+    """
+    key = jax.random.PRNGKey(seed)
+    params = []
+    cin = cfg.in_channels
+    for reps, ch in cfg.blocks:
+        for _ in range(reps):
+            key, k1 = jax.random.split(key)
+            fan_in = 9 * cin
+            w = jax.random.normal(k1, (3, 3, cin, ch), jnp.float32)
+            w = w * jnp.sqrt(2.0 / fan_in)
+            params += [w, jnp.ones((ch,)), jnp.zeros((ch,))]
+            cin = ch
+    key, k1 = jax.random.split(key)
+    fcw = jax.random.normal(k1, (cin, cfg.num_classes), jnp.float32)
+    fcw = fcw * jnp.sqrt(1.0 / cin)
+    params += [fcw, jnp.zeros((cfg.num_classes,))]
+    return params
+
+
+def param_names(cfg: ModelConfig):
+    names = []
+    li = 0
+    for reps, _ in cfg.blocks:
+        for _ in range(reps):
+            names += [f"conv{li}_w", f"conv{li}_gamma", f"conv{li}_beta"]
+            li += 1
+    names += ["fc_w", "fc_b"]
+    return names
+
+
+# ---------------------------------------------------------------------------
+# Forward / loss / train step
+# ---------------------------------------------------------------------------
+
+def forward(cfg: ModelConfig, params, x):
+    """x: (B, H, W, C) f32 in [0,1] -> logits (B, num_classes)."""
+    i = 0
+    for reps, _ in cfg.blocks:
+        for _ in range(reps):
+            w, gamma, beta = params[i], params[i + 1], params[i + 2]
+            i += 3
+            x = conv3x3(x, w, cfg.pe_type)
+            x = batch_norm(x, gamma, beta)
+            x = jax.nn.relu(x)
+        x = max_pool_2x2(x)
+    x = jnp.mean(x, axis=(1, 2))  # global average pool
+    fcw, fcb = params[i], params[i + 1]
+    # The classifier head stays full precision (standard QAT practice and
+    # what the paper's training recipe implies for the final layer).
+    return x @ fcw + fcb
+
+
+def loss_fn(cfg: ModelConfig, params, x, y):
+    """Softmax cross-entropy + weight decay (paper recipe: wd 5e-4)."""
+    logits = forward(cfg, params, x)
+    logp = jax.nn.log_softmax(logits)
+    ce = -jnp.mean(jnp.sum(jax.nn.one_hot(y, cfg.num_classes) * logp, -1))
+    wd = 5e-4 * sum(jnp.sum(p * p) for p in params[::3])  # conv/fc weights
+    return ce + wd
+
+
+def make_train_step(cfg: ModelConfig):
+    """SGD + Nesterov momentum train step (paper §4.3 recipe).
+
+    Signature (flat, PJRT-friendly):
+        (*params, *momentum, x, y, lr) -> (*new_params, *new_momentum, loss)
+    """
+    nparams = len(init_params(cfg))
+
+    def train_step(*args):
+        params = list(args[:nparams])
+        mom = list(args[nparams:2 * nparams])
+        x, y, lr = args[2 * nparams:]
+        loss, grads = jax.value_and_grad(
+            lambda ps: loss_fn(cfg, ps, x, y)
+        )(params)
+        beta = 0.9
+        new_mom = [beta * m + g for m, g in zip(mom, grads)]
+        # Nesterov update.
+        new_params = [
+            p - lr * (g + beta * m)
+            for p, g, m in zip(params, grads, new_mom)
+        ]
+        return tuple(new_params) + tuple(new_mom) + (loss,)
+
+    return train_step, nparams
+
+
+def make_infer(cfg: ModelConfig):
+    nparams = len(init_params(cfg))
+
+    def infer(*args):
+        params = list(args[:nparams])
+        x = args[nparams]
+        return (forward(cfg, params, x),)
+
+    return infer, nparams

@@ -1,0 +1,64 @@
+"""AOT export tests: HLO text artifacts parse and the manifest contract holds."""
+
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot
+from compile.model import ModelConfig, init_params, make_infer
+
+
+def test_to_hlo_text_smoke():
+    lowered = jax.jit(lambda a, b: (a @ b + 1.0,)).lower(
+        jax.ShapeDtypeStruct((4, 4), jnp.float32),
+        jax.ShapeDtypeStruct((4, 4), jnp.float32),
+    )
+    text = aot.to_hlo_text(lowered)
+    assert text.startswith("HloModule")
+    assert "dot(" in text or "dot " in text
+
+
+def test_infer_lowering_contains_no_python(tmp_path):
+    """The exported graph is self-contained HLO (no pycall/callback ops)."""
+    cfg = ModelConfig(blocks=((1, 8),), image_size=8, pe_type="lightpe1")
+    infer, n = make_infer(cfg)
+    params = init_params(cfg)
+    specs = [jax.ShapeDtypeStruct(p.shape, p.dtype) for p in params]
+    specs.append(jax.ShapeDtypeStruct((2, 8, 8, 3), jnp.float32))
+    text = aot.to_hlo_text(jax.jit(infer).lower(*specs))
+    assert "custom-call" not in text.lower() or "mosaic" not in text.lower()
+    assert "callback" not in text.lower()
+
+
+@pytest.mark.slow
+def test_full_export(tmp_path):
+    """End-to-end aot.py run into a temp dir; manifest indexes every file."""
+    out = tmp_path / "artifacts"
+    env = dict(os.environ)
+    r = subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out", str(out),
+         "--batch", "4", "--image-size", "8", "--blocks", "1x8"],
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        capture_output=True, text=True, env=env,
+    )
+    assert r.returncode == 0, r.stderr
+    manifest = json.loads((out / "manifest.json").read_text())
+    assert manifest["version"] == 1
+    arts = manifest["artifacts"]
+    for pe in ("fp32", "int16", "lightpe1", "lightpe2"):
+        assert f"train_step_{pe}" in arts and f"infer_{pe}" in arts
+    for name, meta in arts.items():
+        path = out / meta["file"]
+        assert path.exists(), name
+        head = path.read_text()[:200]
+        assert head.startswith("HloModule"), name
+        # I/O contract sanity
+        assert meta["inputs"] and meta["outputs"]
+    # train_step outputs mirror inputs (params+mom) plus the loss scalar
+    ts = arts["train_step_fp32"]
+    assert len(ts["outputs"]) == len(ts["inputs"]) - 2  # minus x/y/lr, plus loss

@@ -1,0 +1,199 @@
+"""Kernel-vs-oracle correctness: the CORE L1 signal.
+
+hypothesis sweeps shapes/values; every Pallas kernel must match its pure-jnp
+ref bit-closely, and the power-of-two codecs must satisfy the paper's
+representation invariants (§3.2, Eq. 1).
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    POT_MAX_EXP,
+    fake_quant,
+    intq_matmul,
+    pot_decode_k1,
+    pot_decode_k2,
+    pot_encode_k1,
+    pot_encode_k2,
+    pot_matmul_k1,
+    pot_matmul_k2,
+)
+from compile.kernels import ref
+
+DIMS = st.sampled_from([1, 2, 3, 4, 8, 16, 32, 48, 64])
+SEEDS = st.integers(min_value=0, max_value=2**31 - 1)
+
+
+def _rand(rng, *shape):
+    return jnp.asarray(rng.normal(size=shape).astype(np.float32))
+
+
+# ---------------------------------------------------------------------------
+# Codec invariants
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=30, deadline=None)
+@given(SEEDS)
+def test_k1_code_in_range(seed):
+    rng = np.random.default_rng(seed)
+    w = _rand(rng, 17, 9)
+    code = np.asarray(pot_encode_k1(w / jnp.max(jnp.abs(w))))
+    assert code.min() >= 0 and code.max() <= 0xF  # 4-bit code (paper §3.2)
+
+
+@settings(max_examples=30, deadline=None)
+@given(SEEDS)
+def test_k2_code_in_range(seed):
+    rng = np.random.default_rng(seed)
+    w = _rand(rng, 13, 7)
+    code = np.asarray(pot_encode_k2(w / jnp.max(jnp.abs(w))))
+    assert code.min() >= 0 and code.max() <= 0x7F  # 7-bit code
+
+
+def test_k1_decode_all_codes_are_pot():
+    """Every decodable k=1 value is ±2^-m, m in 0..7."""
+    codes = jnp.arange(16, dtype=jnp.int32)
+    vals = np.asarray(pot_decode_k1(codes))
+    allowed = set(ref.pot_representable_k1())
+    assert set(np.round(vals, 10).tolist()) <= {round(v, 10) for v in allowed}
+
+
+def test_k2_decode_is_two_term_sum():
+    codes = jnp.arange(128, dtype=jnp.int32)
+    vals = np.asarray(pot_decode_k2(codes))
+    for c, v in zip(range(128), vals):
+        m1, m2 = (c >> 3) & 7, c & 7
+        sign = -1.0 if (c >> 6) else 1.0
+        assert v == pytest.approx(sign * (2.0 ** -m1 + 2.0 ** -m2))
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.floats(min_value=2.0 ** -POT_MAX_EXP, max_value=1.0,
+                 allow_nan=False))
+def test_k1_roundtrip_error_bound(mag):
+    """For |w| in the representable band, rel. err <= 2^0.5 - 1 (log rounding)."""
+    for s in (-1.0, 1.0):
+        w = jnp.asarray([s * mag], dtype=jnp.float32)
+        wd = float(pot_decode_k1(pot_encode_k1(w))[0])
+        rel = abs(wd - s * mag) / mag
+        assert rel <= ref.pot_quant_error_bound_k1() + 1e-6
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.floats(min_value=2.0 ** -POT_MAX_EXP, max_value=1.0,
+                 allow_nan=False), st.sampled_from([-1.0, 1.0]))
+def test_k2_at_least_as_good_as_k1(mag, s):
+    """Two terms never reconstruct worse than the k=1 floor term alone."""
+    w = jnp.asarray([s * mag], dtype=jnp.float32)
+    e1 = abs(float(pot_decode_k1(pot_encode_k1(w))[0]) - s * mag)
+    e2 = abs(float(pot_decode_k2(pot_encode_k2(w))[0]) - s * mag)
+    # k2's greedy first term is the ceil (not nearest) power, so allow the
+    # documented slack: its total error is bounded by the k1 error plus the
+    # representation floor.
+    assert e2 <= e1 + 2.0 ** -POT_MAX_EXP + 1e-6
+
+
+@settings(max_examples=30, deadline=None)
+@given(SEEDS)
+def test_k2_sign_preserved(seed):
+    rng = np.random.default_rng(seed)
+    w = _rand(rng, 33)
+    w = w / jnp.max(jnp.abs(w))
+    wd = np.asarray(pot_decode_k2(pot_encode_k2(w)))
+    wn = np.asarray(w)
+    nz = np.abs(wn) > 2.0 ** -POT_MAX_EXP
+    assert (np.sign(wd[nz]) == np.sign(wn[nz])).all()
+
+
+# ---------------------------------------------------------------------------
+# Kernel vs oracle (hypothesis sweep over shapes and block splits)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(DIMS, DIMS, DIMS, SEEDS)
+def test_pot_matmul_k1_matches_ref(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x = _rand(rng, m, k)
+    code = jnp.asarray(rng.integers(0, 16, size=(k, n)).astype(np.int32))
+    got = pot_matmul_k1(x, code, bm=m, bn=n, bk=k)
+    np.testing.assert_allclose(
+        got, ref.pot_matmul_k1_ref(x, code), rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(DIMS, DIMS, DIMS, SEEDS)
+def test_pot_matmul_k2_matches_ref(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x = _rand(rng, m, k)
+    code = jnp.asarray(rng.integers(0, 128, size=(k, n)).astype(np.int32))
+    got = pot_matmul_k2(x, code, bm=m, bn=n, bk=k)
+    np.testing.assert_allclose(
+        got, ref.pot_matmul_k2_ref(x, code), rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(DIMS, DIMS, DIMS, SEEDS)
+def test_intq_matmul_matches_ref(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x, w = _rand(rng, m, k), _rand(rng, k, n)
+    got = intq_matmul(x, w, bm=m, bn=n, bk=k)
+    np.testing.assert_allclose(
+        got, ref.matmul_ref(x, w), rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("bm,bn,bk", [(16, 16, 16), (32, 8, 48), (8, 32, 96)])
+def test_blocked_grid_equals_single_block(bm, bn, bk):
+    """K-dim accumulation across grid steps == one-shot matmul."""
+    rng = np.random.default_rng(7)
+    x = _rand(rng, 32, 96)
+    code = jnp.asarray(rng.integers(0, 16, size=(96, 32)).astype(np.int32))
+    whole = pot_matmul_k1(x, code, bm=32, bn=32, bk=96)
+    split = pot_matmul_k1(x, code, bm=bm, bn=bn, bk=bk)
+    np.testing.assert_allclose(whole, split, rtol=1e-5, atol=1e-5)
+
+
+def test_block_shape_must_divide():
+    rng = np.random.default_rng(0)
+    x = _rand(rng, 30, 20)
+    code = jnp.asarray(rng.integers(0, 16, size=(20, 10)).astype(np.int32))
+    with pytest.raises(AssertionError):
+        pot_matmul_k1(x, code, bm=7, bn=10, bk=20)
+
+
+# ---------------------------------------------------------------------------
+# fake_quant properties (INT16/INT8 path)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=30, deadline=None)
+@given(SEEDS, st.sampled_from([4, 8, 16]))
+def test_fake_quant_grid(seed, bits):
+    """Quantized values land on the scale*integer grid within qmax levels."""
+    rng = np.random.default_rng(seed)
+    x = _rand(rng, 41)
+    qmax = 2 ** (bits - 1) - 1
+    scale = float(jnp.max(jnp.abs(x))) / qmax
+    q = np.asarray(fake_quant(x, bits))
+    ints = q / scale
+    np.testing.assert_allclose(ints, np.round(ints), atol=1e-3)
+    assert np.abs(ints).max() <= qmax + 1e-3
+
+
+@settings(max_examples=30, deadline=None)
+@given(SEEDS)
+def test_fake_quant_16bit_near_lossless(seed):
+    rng = np.random.default_rng(seed)
+    x = _rand(rng, 64)
+    q = np.asarray(fake_quant(x, 16))
+    np.testing.assert_allclose(q, np.asarray(x), rtol=1e-3, atol=1e-3)
+
+
+def test_fake_quant_idempotent():
+    rng = np.random.default_rng(3)
+    x = _rand(rng, 128)
+    q1 = fake_quant(x, 8)
+    scale = float(jnp.max(jnp.abs(x))) / 127.0
+    q2 = fake_quant(q1, 8, scale=jnp.float32(scale))
+    np.testing.assert_allclose(np.asarray(q1), np.asarray(q2), atol=1e-6)

@@ -1,0 +1,127 @@
+"""L2 model tests: shapes, STE gradients, training signal, PE-type parity."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.model import (
+    ACT_BITS,
+    ModelConfig,
+    PE_TYPES,
+    forward,
+    init_params,
+    loss_fn,
+    make_infer,
+    make_train_step,
+    param_names,
+    qmatmul,
+)
+
+
+def _data(rng, b=8, s=16, c=3, classes=10):
+    x = jnp.asarray(rng.uniform(0, 1, size=(b, s, s, c)).astype(np.float32))
+    y = jnp.asarray(rng.integers(0, classes, size=(b,)).astype(np.int32))
+    return x, y
+
+
+@pytest.mark.parametrize("pe", PE_TYPES)
+def test_forward_shape(pe):
+    cfg = ModelConfig(blocks=((1, 8), (1, 16)), pe_type=pe)
+    params = init_params(cfg)
+    x, _ = _data(np.random.default_rng(0))
+    logits = forward(cfg, params, x)
+    assert logits.shape == (8, 10)
+    assert bool(jnp.isfinite(logits).all())
+
+
+@pytest.mark.parametrize("blocks", [((1, 8),), ((2, 8), (1, 16)),
+                                    ((1, 8), (1, 8), (1, 8), (1, 16))])
+def test_param_layout_matches_names(blocks):
+    cfg = ModelConfig(blocks=blocks, image_size=16)
+    params = init_params(cfg)
+    names = param_names(cfg)
+    assert len(params) == len(names)
+    # 3 tensors per conv layer + fc_w + fc_b
+    nconv = sum(r for r, _ in blocks)
+    assert len(params) == 3 * nconv + 2
+    assert names[-2:] == ["fc_w", "fc_b"]
+
+
+def test_image_size_pool_constraint():
+    with pytest.raises(AssertionError):
+        ModelConfig(image_size=10, blocks=((1, 8), (1, 8), (1, 8)))
+
+
+@pytest.mark.parametrize("pe", ["int16", "lightpe1", "lightpe2"])
+def test_qmatmul_ste_gradient_is_dense(pe):
+    """STE: grad of qmatmul == grad of the unquantized matmul."""
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=(4, 6)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(6, 3)).astype(np.float32))
+    g = jax.grad(lambda w_: jnp.sum(qmatmul(x, w_, pe) ** 2) / 2)(w)
+    # d/dw of 0.5*||y||^2 with STE is x^T @ y (y from the quantized fwd).
+    y = qmatmul(x, w, pe)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(x.T @ y),
+                               rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2**31 - 1),
+       st.sampled_from(["int16", "lightpe1", "lightpe2"]))
+def test_qmatmul_close_to_dense(seed, pe):
+    """Quantized fwd approximates the dense product within the PE's grid."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(8, 16)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(16, 4)).astype(np.float32))
+    dense = np.asarray(x @ w)
+    q = np.asarray(qmatmul(x, w, pe))
+    scale = np.abs(dense).max() + 1e-6
+    tol = {"int16": 0.01, "lightpe2": 0.3, "lightpe1": 0.8}[pe]
+    assert np.abs(q - dense).max() / scale <= tol
+
+
+@pytest.mark.parametrize("pe", PE_TYPES)
+def test_train_step_reduces_loss(pe):
+    cfg = ModelConfig(blocks=((1, 8),), pe_type=pe, image_size=8)
+    params = init_params(cfg)
+    ts, n = make_train_step(cfg)
+    ts = jax.jit(ts)
+    mom = [jnp.zeros_like(p) for p in params]
+    rng = np.random.default_rng(0)
+    x, y = _data(rng, b=16, s=8)
+    first = last = None
+    for _ in range(10):
+        out = ts(*params, *mom, x, y, jnp.float32(0.05))
+        params, mom = list(out[:n]), list(out[n:2 * n])
+        loss = float(out[-1])
+        first = loss if first is None else first
+        last = loss
+    assert last < first, f"{pe}: loss did not decrease ({first} -> {last})"
+
+
+def test_infer_matches_forward():
+    cfg = ModelConfig(blocks=((1, 8),), pe_type="lightpe2", image_size=8)
+    params = init_params(cfg)
+    infer, n = make_infer(cfg)
+    x, _ = _data(np.random.default_rng(2), b=4, s=8)
+    (logits,) = infer(*params, x)
+    np.testing.assert_allclose(np.asarray(logits),
+                               np.asarray(forward(cfg, params, x)),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_act_bits_match_paper():
+    """Paper §3.2: LightPEs use 8-bit activations; INT16 uses 16."""
+    assert ACT_BITS == {"int16": 16, "lightpe1": 8, "lightpe2": 8}
+
+
+def test_loss_includes_weight_decay():
+    cfg = ModelConfig(blocks=((1, 8),), image_size=8)
+    params = init_params(cfg)
+    x, y = _data(np.random.default_rng(0), b=4, s=8)
+    l1 = float(loss_fn(cfg, params, x, y))
+    big = [p * 10 if i % 3 == 0 else p for i, p in enumerate(params)]
+    l2 = float(loss_fn(cfg, big, x, y))
+    assert l2 > l1  # blown-up conv weights must cost via wd

@@ -1,0 +1,76 @@
+//! Component microbenchmarks — the L3 hot paths the perf pass tracks
+//! (EXPERIMENTS.md §Perf): synthesis oracle, dataflow analytics, the
+//! cycle-level simulator, polynomial expansion/prediction, regression fit,
+//! and Pareto extraction.
+
+use quidam::bench_harness::{group, Bench};
+use quidam::config::{AcceleratorConfig, SweepSpace};
+use quidam::dataflow::analyze_layer;
+use quidam::dse;
+use quidam::models::{zoo, Dataset};
+use quidam::pe::PeType;
+use quidam::ppa::{characterize, latency_features, PpaModels};
+use quidam::regression::{FitOptions, PolyModel};
+use quidam::simulator::simulate_layer;
+use quidam::synthesis::synthesize;
+use quidam::tech::TechLibrary;
+use quidam::util::rng::Rng;
+
+fn main() {
+    let mut b = Bench::default();
+    let tech = TechLibrary::freepdk45();
+    let cfg = AcceleratorConfig::baseline(PeType::LightPe1);
+    let net = zoo::resnet_cifar(20, Dataset::Cifar10);
+    let layer = &net.layers[5];
+
+    group("synthesis oracle");
+    b.run("synthesize/full_design", || synthesize(&cfg, &tech));
+
+    group("dataflow + simulator (per conv layer)");
+    b.run("dataflow/analyze_layer", || {
+        analyze_layer(&cfg, layer, 455.0, &tech)
+    });
+    b.run("simulator/simulate_layer", || {
+        simulate_layer(&cfg, layer, 455.0, &tech)
+    });
+    b.run("simulator/resnet20_full", || {
+        quidam::simulator::simulate_network(&cfg, &net.layers, 455.0, &tech)
+    });
+
+    group("regression");
+    let space = SweepSpace::default();
+    let uniq = quidam::coordinator::unique_layers(&[net.clone()]);
+    let data = characterize(&space, PeType::LightPe1, &uniq, 40, &tech, 1);
+    b.run("regression/fit_power_deg5", || {
+        PolyModel::fit(&data.power_x, &data.power_y, FitOptions {
+            max_degree: 5, max_vars: 3, ridge: 1e-8, log_target: false, log_features: false,
+        })
+    });
+    let lat_model = PolyModel::fit(&data.lat_x, &data.lat_y, FitOptions {
+        max_degree: 5, max_vars: 2, ridge: 1e-8, log_target: true, log_features: true,
+    });
+    let feats = latency_features(&cfg, layer);
+    b.run("regression/predict_latency_deg5", || lat_model.predict(&feats));
+
+    group("DSE engine");
+    let mut char_map = std::collections::BTreeMap::new();
+    for pe in PeType::ALL {
+        char_map.insert(pe, characterize(&space, pe, &uniq, 30, &tech, 2));
+    }
+    let models = PpaModels::fit(&char_map, 2);
+    b.run("dse/evaluate_config_resnet20", || {
+        dse::evaluate(&models, &cfg, &net.layers)
+    });
+    let mut rng = Rng::new(3);
+    let pts: Vec<dse::DesignPoint> = (0..2000)
+        .map(|_| dse::evaluate(&models, &space.sample(&mut rng), &net.layers[..4]))
+        .collect();
+    b.run("dse/normalize_2000_points", || dse::normalize(&pts));
+    let xs: Vec<f64> = pts.iter().map(|p| p.energy_j).collect();
+    let ys: Vec<f64> = pts.iter().map(|p| p.perf_per_area).collect();
+    b.run("dse/pareto_front_2000_points", || {
+        dse::pareto_front_min_max(&xs, &ys)
+    });
+
+    println!("\n{} benches complete", b.results().len());
+}

@@ -1,0 +1,44 @@
+//! End-to-end figure/table regeneration benches — one per paper artifact
+//! (DESIGN.md §5). Each bench times the full harness that produces the
+//! corresponding figure's data, so `cargo bench` both regenerates and
+//! times every table AND figure of the paper's evaluation.
+
+use std::path::PathBuf;
+
+use quidam::bench_harness::{group, Bench};
+use quidam::coordinator::{figures, paper_workloads, unique_layers, Coordinator};
+use quidam::ppa::PpaModels;
+
+fn main() {
+    // Figure harnesses are heavyweight; run each a few times only.
+    std::env::set_var("QUIDAM_BENCH_QUICK", "1");
+    let mut b = Bench::default();
+    b.max_iters = 5;
+
+    let coord = Coordinator::default();
+    let out = PathBuf::from("results/bench");
+    std::fs::create_dir_all(&out).ok();
+
+    // One shared pre-characterization (the paper's one-off cost).
+    let layers = unique_layers(&paper_workloads());
+    let data = coord.characterize_all(&layers, 60, 42);
+    let models = PpaModels::fit(&data, 5);
+
+    group("figure regeneration (end-to-end harness per paper artifact)");
+    b.run("fig4/dse_scatter", || figures::fig4(&coord, &models, &out, 400));
+    b.run("fig5/degree_selection", || figures::fig5(&coord, &out, 60));
+    b.run("fig678/model_accuracy", || figures::fig678(&coord, &models, &out, 30));
+    b.run("fig9/violins", || figures::fig9(&coord, &models, &out, 200));
+    b.run("fig10_11/pareto_table2", || {
+        figures::fig10_11_table2(&coord, &models, &out, 400)
+    });
+    b.run("fig12/coexploration_1000archs", || {
+        figures::fig12(&coord, &models, &out, 1000)
+    });
+    b.run("table3/clock_frequencies", || figures::table3(&coord, &out));
+    b.run("table4/search_space", || figures::table4(&out));
+    b.run("speedup/section4_1", || figures::speedup(&coord, &models, &out, 50));
+
+    println!("\nall {} paper artifacts regenerated + timed; CSVs in {}",
+             b.results().len(), out.display());
+}

@@ -1,0 +1,55 @@
+//! PJRT runtime hot-path benches: kernel-probe execution and train-step
+//! throughput through the compiled artifacts (the L3 request path).
+//! Skips quietly when artifacts/ has not been built.
+
+use quidam::bench_harness::{group, Bench};
+use quidam::pe::PeType;
+use quidam::runtime::{literal_f32, literal_i32, Runtime};
+use quidam::trainer::{data::SynthDataset, Trainer};
+use quidam::util::rng::Rng;
+
+fn main() {
+    let dir = std::path::Path::new("artifacts");
+    if !dir.join("manifest.json").exists() {
+        println!("SKIP bench_runtime: run `make artifacts` first");
+        return;
+    }
+    let mut rt = Runtime::new(dir).expect("runtime");
+    println!("PJRT platform: {}", rt.platform());
+    let mut b = Bench::default();
+    b.max_iters = 200;
+
+    const D: usize = 128;
+    let mut rng = Rng::new(9);
+    let x: Vec<f32> = (0..D * D).map(|_| rng.normal() as f32).collect();
+    let w: Vec<f32> = (0..D * D).map(|_| rng.normal() as f32).collect();
+    let codes: Vec<i32> = (0..D * D).map(|_| rng.below(128) as i32).collect();
+
+    group("kernel probes (128x128x128 matmul through PJRT)");
+    for name in ["probe_intq", "probe_pot_k1", "probe_pot_k2"] {
+        rt.load(name).unwrap();
+        let is_pot = name.contains("pot");
+        b.run(name, || {
+            let a = literal_f32(&x, &[D, D]).unwrap();
+            let bq = if is_pot {
+                literal_i32(&codes, &[D, D]).unwrap()
+            } else {
+                literal_f32(&w, &[D, D]).unwrap()
+            };
+            rt.execute(name, &[a, bq]).unwrap()
+        });
+    }
+
+    group("train_step throughput (one optimizer step, full batch)");
+    let image = rt.manifest.model.get("image_size").as_usize().unwrap();
+    let classes = rt.manifest.model.get("num_classes").as_usize().unwrap();
+    let ds = SynthDataset::generate(512, image, classes, 5);
+    b.max_iters = 20;
+    for pe in [PeType::Fp32, PeType::LightPe2] {
+        let mut tr = Trainer::new(&rt, pe, 1).unwrap();
+        b.run(&format!("train_step/{}", pe.name()), || {
+            tr.train(&mut rt, &ds, 1, 0.01, 2, |_| {}).unwrap()
+        });
+    }
+    println!("\nruntime benches complete");
+}

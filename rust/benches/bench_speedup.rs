@@ -1,0 +1,72 @@
+//! §4.1 speedup claim: "QUIDAM can speed up the design exploration process
+//! by 3-4 orders of magnitude as it removes the need for expensive
+//! synthesis and characterization of each design."
+//!
+//! Measures per-query cost of (a) the fitted polynomial PPA models and
+//! (b) the ground-truth flow (synthesis oracle + cycle-level simulation of
+//! the full network), then reports the measured ratio and the
+//! paper-equivalent ratio including a 4h Design-Compiler run per design.
+
+use quidam::bench_harness::{fmt_ns, group, Bench};
+use quidam::config::SweepSpace;
+use quidam::coordinator::{paper_workloads, unique_layers, Coordinator};
+use quidam::models::{zoo, Dataset};
+use quidam::ppa::PpaModels;
+use quidam::pe::PeType;
+use quidam::simulator::simulate_network;
+use quidam::synthesis::synthesize;
+use quidam::util::rng::Rng;
+
+fn main() {
+    let coord = Coordinator::default();
+    let space = SweepSpace::default();
+    let net = zoo::resnet_cifar(20, Dataset::Cifar10);
+
+    // Fit once (not timed — this is the paper's one-off pre-characterization).
+    let layers = unique_layers(&paper_workloads());
+    let data = coord.characterize_all(&layers, 60, 42);
+    let models = PpaModels::fit(&data, 5);
+
+    let mut rng = Rng::new(0xBE);
+    let cfgs: Vec<_> = (0..64).map(|_| space.sample(&mut rng)).collect();
+    let mut i = 0usize;
+    let mut j = 0usize;
+
+    let mut b = Bench::default();
+    group("per-design-query cost (ResNet-20 workload)");
+    b.run("fast/fitted_ppa_models", || {
+        i = (i + 1) % cfgs.len();
+        let c = &cfgs[i];
+        (models.network_latency_s(c, &net.layers),
+         models.power_mw(c),
+         models.area_um2(c))
+    });
+    b.run("slow/synthesis_plus_simulation", || {
+        j = (j + 1) % cfgs.len();
+        let c = &cfgs[j];
+        let syn = synthesize(c, &coord.tech);
+        let sim = simulate_network(c, &net.layers, syn.fclk_mhz, &coord.tech);
+        (sim.latency_s, syn.power_mw, syn.area_um2)
+    });
+
+    let ratio = b.ratio("slow/synthesis_plus_simulation",
+                        "fast/fitted_ppa_models").unwrap();
+    let fast_ns = b.results()[0].median_ns;
+    let dc_ns = 4.0 * 3600.0 * 1e9; // a 4h Synopsys DC run per design
+    println!("\nmodel query vs in-repo oracle: {ratio:.2}x \
+              (the oracle is itself our analytical substitute for DC+VCS)");
+    println!(
+        "paper-equivalent (incl. 4h synthesis per design): {:.1e}x  \
+         (model query {} vs {} + DC)",
+        (dc_ns + b.results()[1].median_ns) / fast_ns,
+        fmt_ns(fast_ns),
+        fmt_ns(b.results()[1].median_ns),
+    );
+    println!("paper claims 3-4 orders of magnitude (§4.1)");
+    // PE-type coverage checksum so nothing is optimized away.
+    let total: f64 = PeType::ALL
+        .iter()
+        .map(|&pe| models.power_mw(&quidam::config::AcceleratorConfig::baseline(pe)))
+        .sum();
+    println!("[checksum {total:.3}]");
+}

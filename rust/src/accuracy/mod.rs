@@ -1,0 +1,20 @@
+//! Accuracy providers for the Pareto analyses (Figs 10-12, Table 2).
+//!
+//! Three sources, reflecting DESIGN.md §2's training substitution:
+//!   * `paper`  — the paper's reported top-1 accuracies (Table 2), used to
+//!     regenerate tables in "paper" mode;
+//!   * `proxy`  — an analytic capacity/quantization-noise model standing in
+//!     for the weight-sharing supernet of §4.5 (fast enough for 110k archs);
+//!   * measured — real QAT runs through the PJRT train_step artifacts
+//!     (`trainer`), anchoring the proxy on a live workload.
+
+pub mod paper;
+pub mod proxy;
+
+use crate::models::Dataset;
+use crate::pe::PeType;
+
+/// Top-1 accuracy (%) of (model, dataset, pe) from some provider.
+pub trait AccuracyProvider {
+    fn accuracy(&self, model: &str, dataset: Dataset, pe: PeType) -> Option<f64>;
+}

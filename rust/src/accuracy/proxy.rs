@@ -1,0 +1,196 @@
+//! Analytic accuracy proxy — the weight-sharing supernet substitute (§4.5).
+//!
+//! The paper trains one weight-shared supernet over the 110,592-arch Table-4
+//! space and evaluates sampled children on the validation set. We replace
+//! that estimator with an analytic model with the same observable structure:
+//!
+//!   err(arch, pe) = err_floor(dataset)
+//!                 + A * capacity^(-p)              (capacity term)
+//!                 + B_pe * capacity^(-q)           (quantization term)
+//!                 + jitter(arch)                   (per-child variance)
+//!
+//! calibrated on the paper's own Table 2 anchor points, preserving the two
+//! observations the co-exploration experiment relies on: more capacity →
+//! higher accuracy, and the LightPE accuracy gap *shrinks* as model
+//! complexity grows (§4.4). Real QAT runs via `trainer` anchor the PE
+//! ordering on a live workload (examples/e2e_codesign.rs).
+
+use super::AccuracyProvider;
+use crate::models::nas::ArchId;
+use crate::models::Dataset;
+use crate::pe::PeType;
+use crate::quant::{rms_rel_error, QuantMode};
+
+/// Calibrated proxy constants.
+#[derive(Debug, Clone, Copy)]
+pub struct ProxyParams {
+    pub err_floor: f64,
+    pub cap_a: f64,
+    pub cap_p: f64,
+    pub quant_b: f64,
+    pub quant_q: f64,
+    pub jitter: f64,
+}
+
+impl ProxyParams {
+    pub fn for_dataset(d: Dataset) -> ProxyParams {
+        match d {
+            // Anchored on Table 2: VGG-16 (cap=1) fp32 err 6.04%,
+            // ResNet-20-class small models ~7.5%; LightPE-1 gap 0.36% at
+            // cap 1 and ~2% at tiny capacity.
+            Dataset::Cifar10 => ProxyParams {
+                err_floor: 5.6,
+                cap_a: 0.45,
+                cap_p: 0.45,
+                quant_b: 0.9,
+                quant_q: 0.35,
+                jitter: 0.25,
+            },
+            Dataset::Cifar100 => ProxyParams {
+                err_floor: 26.2,
+                cap_a: 0.55,
+                cap_p: 0.50,
+                quant_b: 2.4,
+                quant_q: 0.40,
+                jitter: 0.35,
+            },
+            Dataset::ImageNet => ProxyParams {
+                err_floor: 23.0,
+                cap_a: 1.0,
+                cap_p: 0.50,
+                quant_b: 3.0,
+                quant_q: 0.40,
+                jitter: 0.40,
+            },
+        }
+    }
+}
+
+/// Reference per-PE quantization noise (RMS rel. error on a normal weight
+/// population) — computed once; the proxy scales it.
+fn quant_noise(pe: PeType) -> f64 {
+    // Deterministic reference population.
+    let mut rng = crate::util::rng::Rng::new(0xACC0);
+    let ws: Vec<f64> = (0..2000).map(|_| rng.normal()).collect();
+    rms_rel_error(&ws, QuantMode::from(pe))
+}
+
+/// Deterministic per-arch jitter in [-1, 1] (supernet evaluation variance).
+fn arch_jitter(arch: &ArchId, pe: PeType) -> f64 {
+    let mut h: u64 = 0x9e3779b97f4a7c15 ^ (pe as u64);
+    for s in 0..5 {
+        h ^= (arch.reps[s] as u64) << (s * 3);
+        h = h.wrapping_mul(0x100000001b3);
+        h ^= (arch.chans[s] as u64) << (s * 3 + 1);
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    let mut z = h;
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+    z ^= z >> 31;
+    (z >> 11) as f64 / (1u64 << 52) as f64 - 1.0
+}
+
+/// Top-1 error (%) predicted for a Table-4 architecture under a PE type.
+pub fn predict_error(arch: &ArchId, dataset: Dataset, pe: PeType) -> f64 {
+    let p = ProxyParams::for_dataset(dataset);
+    let cap = arch.relative_capacity().max(1e-4);
+    let noise = quant_noise(pe);
+    let err = p.err_floor
+        + p.cap_a * cap.powf(-p.cap_p)
+        + p.quant_b * noise * cap.powf(-p.quant_q)
+        + p.jitter * arch_jitter(arch, pe);
+    err.clamp(0.5, 99.0)
+}
+
+/// Top-1 accuracy (%) = 100 - error.
+pub fn predict_accuracy(arch: &ArchId, dataset: Dataset, pe: PeType) -> f64 {
+    100.0 - predict_error(arch, dataset, pe)
+}
+
+/// Provider over named zoo models, mapping them onto capacity anchors so
+/// Figs 10/11 can be generated in "proxy" mode too.
+pub struct ProxyAccuracy;
+
+impl AccuracyProvider for ProxyAccuracy {
+    fn accuracy(&self, model: &str, dataset: Dataset, pe: PeType) -> Option<f64> {
+        // Map zoo models to equivalent Table-4 capacities.
+        let arch = match model {
+            "vgg16" => ArchId::largest(),
+            "resnet56" => ArchId { reps: [1, 1, 1, 1, 1], chans: [1, 1, 1, 1, 1] },
+            "resnet20" => ArchId { reps: [0, 0, 0, 0, 0], chans: [0, 0, 0, 0, 0] },
+            _ => return None,
+        };
+        Some(predict_accuracy(&arch, dataset, pe))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn capacity_improves_accuracy() {
+        let small = ArchId { reps: [0; 5], chans: [0; 5] };
+        let big = ArchId::largest();
+        for pe in PeType::ALL {
+            let a_small = predict_accuracy(&small, Dataset::Cifar10, pe);
+            let a_big = predict_accuracy(&big, Dataset::Cifar10, pe);
+            assert!(a_big > a_small - 0.6, "{pe}: {a_big} vs {a_small}");
+        }
+    }
+
+    #[test]
+    fn pe_ordering_fp32_best_lpe1_worst() {
+        let arch = ArchId::largest();
+        let acc: Vec<f64> = PeType::ALL
+            .iter()
+            .map(|&pe| {
+                // Average out jitter across datasets by using one arch.
+                predict_accuracy(&arch, Dataset::Cifar100, pe)
+            })
+            .collect();
+        // fp32 >= int16 >= lpe2 >= lpe1 within jitter.
+        assert!(acc[0] >= acc[3], "{acc:?}");
+        assert!(acc[1] >= acc[3] - 0.5, "{acc:?}");
+    }
+
+    #[test]
+    fn gap_shrinks_with_capacity() {
+        // §4.4: "as the model complexity increases, the accuracy gap
+        // between LightPEs and conventional designs decreases."
+        let small = ArchId { reps: [0; 5], chans: [0; 5] };
+        let big = ArchId::largest();
+        let gap = |a: &ArchId| {
+            predict_error(a, Dataset::Cifar100, PeType::LightPe1)
+                - predict_error(a, Dataset::Cifar100, PeType::Fp32)
+        };
+        assert!(gap(&big) < gap(&small), "{} !< {}", gap(&big), gap(&small));
+    }
+
+    #[test]
+    fn proxy_anchors_near_table2() {
+        // VGG-16 CIFAR-10 FP32: paper 93.96; proxy within ~1.5 points.
+        let a = ProxyAccuracy
+            .accuracy("vgg16", Dataset::Cifar10, PeType::Fp32)
+            .unwrap();
+        assert!((a - 93.96).abs() < 1.5, "proxy vgg16 fp32 {a}");
+        // LightPE-2 on-par claim preserved.
+        let l2 = ProxyAccuracy
+            .accuracy("vgg16", Dataset::Cifar10, PeType::LightPe2)
+            .unwrap();
+        assert!((a - l2).abs() < 1.0);
+    }
+
+    #[test]
+    fn jitter_bounded_and_deterministic() {
+        let mut rng = Rng::new(3);
+        for _ in 0..100 {
+            let arch = ArchId::sample(&mut rng);
+            let e1 = predict_error(&arch, Dataset::Cifar10, PeType::LightPe1);
+            let e2 = predict_error(&arch, Dataset::Cifar10, PeType::LightPe1);
+            assert_eq!(e1, e2);
+            assert!((0.5..=99.0).contains(&e1));
+        }
+    }
+}

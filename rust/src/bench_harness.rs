@@ -1,0 +1,158 @@
+//! Criterion-substitute micro-benchmark harness (criterion is not in the
+//! vendored crate set). Used by every target in `rust/benches/` with
+//! `harness = false`.
+//!
+//! Method: warm up, then run timed batches until either `max_iters` or the
+//! time budget is exhausted; report min / median / mean / p95 per
+//! iteration. Deterministic workloads come from util::rng seeds, so runs
+//! are comparable across the perf pass (EXPERIMENTS.md §Perf).
+
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub min_ns: f64,
+    pub median_ns: f64,
+    pub mean_ns: f64,
+    pub p95_ns: f64,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>10} iters  min {:>12}  med {:>12}  mean {:>12}  p95 {:>12}",
+            self.name,
+            self.iters,
+            fmt_ns(self.min_ns),
+            fmt_ns(self.median_ns),
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.p95_ns),
+        )
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+pub struct Bench {
+    pub budget: Duration,
+    pub max_iters: usize,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        // Honor the conventional quick-run env var.
+        let quick = std::env::var("QUIDAM_BENCH_QUICK").is_ok();
+        Bench {
+            budget: if quick { Duration::from_millis(200) } else { Duration::from_secs(2) },
+            max_iters: if quick { 50 } else { 10_000 },
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bench {
+    /// Time `f`, preventing the compiler from eliding its result via the
+    /// returned checksum accumulator.
+    pub fn run<T, F: FnMut() -> T>(&mut self, name: &str, mut f: F) -> &BenchResult {
+        // Warmup: a few calls, also primes caches/allocations.
+        for _ in 0..3 {
+            std::hint::black_box(f());
+        }
+        let mut samples: Vec<f64> = Vec::new();
+        let start = Instant::now();
+        while samples.len() < self.max_iters && start.elapsed() < self.budget {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t0.elapsed().as_nanos() as f64);
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = samples.len();
+        let result = BenchResult {
+            name: name.to_string(),
+            iters: n,
+            min_ns: samples[0],
+            median_ns: samples[n / 2],
+            mean_ns: samples.iter().sum::<f64>() / n as f64,
+            p95_ns: samples[(n as f64 * 0.95) as usize % n],
+        };
+        println!("{}", result.report());
+        self.results.push(result);
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+
+    /// Ratio of two named results' medians (for speedup-style claims).
+    pub fn ratio(&self, slow: &str, fast: &str) -> Option<f64> {
+        let get = |n: &str| {
+            self.results.iter().find(|r| r.name == n).map(|r| r.median_ns)
+        };
+        Some(get(slow)? / get(fast)?)
+    }
+}
+
+/// Group header helper, so bench output reads like criterion's.
+pub fn group(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let mut b = Bench { budget: Duration::from_millis(50), max_iters: 100, results: vec![] };
+        let r = b.run("spin", || {
+            let mut s = 0u64;
+            for i in 0..1000 {
+                s = s.wrapping_add(i);
+            }
+            s
+        }).clone();
+        assert!(r.iters > 0);
+        assert!(r.min_ns > 0.0);
+        assert!(r.min_ns <= r.median_ns && r.median_ns <= r.p95_ns * 1.001);
+    }
+
+    #[test]
+    fn ratio_between_results() {
+        let mut b = Bench { budget: Duration::from_millis(40), max_iters: 50, results: vec![] };
+        b.run("fast", || 1u64);
+        b.run("slow", || {
+            // black_box the bound so LLVM cannot constant-fold the loop.
+            let n = std::hint::black_box(20_000u64);
+            let mut s = 0u64;
+            for i in 0..n {
+                s = s.wrapping_add(std::hint::black_box(i));
+            }
+            s
+        });
+        let r = b.ratio("slow", "fast").unwrap();
+        assert!(r > 1.0, "slow/fast ratio {r}");
+        assert!(b.ratio("nope", "fast").is_none());
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert!(fmt_ns(500.0).ends_with("ns"));
+        assert!(fmt_ns(5e4).ends_with("µs"));
+        assert!(fmt_ns(5e7).ends_with("ms"));
+        assert!(fmt_ns(5e9).ends_with("s"));
+    }
+}

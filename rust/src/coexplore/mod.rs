@@ -1,0 +1,179 @@
+//! DNN accelerator + model co-exploration (paper §4.5, Fig 12).
+//!
+//! Jointly samples hardware configurations and Table-4 architectures,
+//! scores each pair with the fast PPA models (energy, area) and the
+//! accuracy proxy (top-1 error), and extracts the co-design Pareto front.
+//! Results are normalized to the minimum-energy / minimum-area pair in the
+//! INT16 sub-space, exactly as Fig 12's caption specifies.
+
+use crate::config::SweepSpace;
+use crate::dse;
+use crate::models::nas::ArchId;
+use crate::models::Dataset;
+use crate::pe::PeType;
+use crate::ppa::PpaModels;
+use crate::accuracy::proxy::predict_error;
+use crate::util::rng::Rng;
+
+/// One (hardware, architecture) pair, scored.
+#[derive(Debug, Clone, Copy)]
+pub struct CoPoint {
+    pub arch: ArchId,
+    pub cfg: crate::config::AcceleratorConfig,
+    pub top1_err: f64,
+    pub energy_j: f64,
+    pub area_um2: f64,
+}
+
+/// Normalized view (vs min-energy / min-area INT16 pair).
+#[derive(Debug, Clone, Copy)]
+pub struct NormCoPoint {
+    pub pe: PeType,
+    pub top1_err: f64,
+    pub norm_energy: f64,
+    pub norm_area: f64,
+}
+
+/// Sample and score `n_archs` architectures x `hw_per_arch` hardware
+/// configs (paper: 1000 DNN models x randomly sampled accelerators).
+pub fn explore(
+    models: &PpaModels,
+    space: &SweepSpace,
+    dataset: Dataset,
+    n_archs: usize,
+    hw_per_arch: usize,
+    seed: u64,
+    threads: usize,
+) -> Vec<CoPoint> {
+    let mut rng = Rng::new(seed);
+    // Pre-sample the work list, then score in parallel.
+    let mut work: Vec<(ArchId, crate::config::AcceleratorConfig)> = Vec::new();
+    for _ in 0..n_archs {
+        let arch = ArchId::sample(&mut rng);
+        for _ in 0..hw_per_arch {
+            work.push((arch, space.sample(&mut rng)));
+        }
+    }
+    let threads = threads.clamp(1, 64);
+    let chunk = work.len().div_ceil(threads);
+    let mut out: Vec<Option<CoPoint>> = vec![None; work.len()];
+    std::thread::scope(|s| {
+        for (slot, batch) in out.chunks_mut(chunk).zip(work.chunks(chunk)) {
+            s.spawn(move || {
+                for (o, (arch, cfg)) in slot.iter_mut().zip(batch) {
+                    let layers = arch.to_model(dataset).layers;
+                    let pt = dse::evaluate(models, cfg, &layers);
+                    *o = Some(CoPoint {
+                        arch: *arch,
+                        cfg: *cfg,
+                        top1_err: predict_error(arch, dataset, cfg.pe_type),
+                        energy_j: pt.energy_j,
+                        area_um2: pt.area_um2,
+                    });
+                }
+            });
+        }
+    });
+    out.into_iter().flatten().collect()
+}
+
+/// Normalize per Fig 12: energy vs the minimum-energy INT16 pair, area vs
+/// the minimum-area INT16 pair.
+pub fn normalize(points: &[CoPoint]) -> Vec<NormCoPoint> {
+    let int16 = || points.iter().filter(|p| p.cfg.pe_type == PeType::Int16);
+    let e_ref = int16().map(|p| p.energy_j).fold(f64::INFINITY, f64::min);
+    let a_ref = int16().map(|p| p.area_um2).fold(f64::INFINITY, f64::min);
+    assert!(e_ref.is_finite() && a_ref.is_finite(), "no INT16 pairs sampled");
+    points
+        .iter()
+        .map(|p| NormCoPoint {
+            pe: p.cfg.pe_type,
+            top1_err: p.top1_err,
+            norm_energy: p.energy_j / e_ref,
+            norm_area: p.area_um2 / a_ref,
+        })
+        .collect()
+}
+
+/// Pareto front over (top-1 error, normalized metric), both minimized.
+/// Returns indices into `points`.
+pub fn pareto(points: &[NormCoPoint], use_area: bool) -> Vec<usize> {
+    let xs: Vec<f64> = points
+        .iter()
+        .map(|p| if use_area { p.norm_area } else { p.norm_energy })
+        .collect();
+    let ys: Vec<f64> = points.iter().map(|p| p.top1_err).collect();
+    dse::pareto_front_min_min(&xs, &ys)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::zoo;
+    use crate::ppa::characterize;
+    use crate::tech::TechLibrary;
+    use std::collections::BTreeMap;
+
+    fn models() -> PpaModels {
+        let tech = TechLibrary::freepdk45();
+        let space = SweepSpace::default();
+        let layers = zoo::resnet_cifar(20, Dataset::Cifar10).layers;
+        let mut m = BTreeMap::new();
+        for pe in PeType::ALL {
+            m.insert(pe, characterize(&space, pe, &layers, 40, &tech, 5));
+        }
+        PpaModels::fit(&m, 2)
+    }
+
+    #[test]
+    fn explore_scores_all_pairs() {
+        let m = models();
+        let pts = explore(&m, &SweepSpace::default(), Dataset::Cifar10,
+                          20, 2, 9, 4);
+        assert_eq!(pts.len(), 40);
+        for p in &pts {
+            assert!(p.top1_err > 0.0 && p.top1_err < 100.0);
+            assert!(p.energy_j > 0.0 && p.area_um2 > 0.0);
+        }
+    }
+
+    #[test]
+    fn normalization_references_are_unity() {
+        let m = models();
+        let pts = explore(&m, &SweepSpace::default(), Dataset::Cifar10,
+                          30, 2, 11, 4);
+        let norm = normalize(&pts);
+        let min_e = norm
+            .iter()
+            .filter(|p| p.pe == PeType::Int16)
+            .map(|p| p.norm_energy)
+            .fold(f64::INFINITY, f64::min);
+        assert!((min_e - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn lightpes_on_pareto_front() {
+        // Fig 12's observation: LightPEs populate the co-design front.
+        let m = models();
+        let pts = explore(&m, &SweepSpace::default(), Dataset::Cifar10,
+                          60, 2, 13, 4);
+        let norm = normalize(&pts);
+        let front = pareto(&norm, false);
+        assert!(!front.is_empty());
+        let light_on_front = front.iter().any(|&i| {
+            matches!(norm[i].pe, PeType::LightPe1 | PeType::LightPe2)
+        });
+        assert!(light_on_front, "no LightPE on the energy Pareto front");
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let m = models();
+        let a = explore(&m, &SweepSpace::default(), Dataset::Cifar10, 10, 1, 21, 2);
+        let b = explore(&m, &SweepSpace::default(), Dataset::Cifar10, 10, 1, 21, 2);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.energy_j, y.energy_j);
+            assert_eq!(x.top1_err, y.top1_err);
+        }
+    }
+}

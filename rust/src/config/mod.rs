@@ -1,0 +1,282 @@
+//! Accelerator configuration — the hardware half of QUIDAM's design space.
+//!
+//! Paper Fig. 2: the framework takes *accelerator parameters* (PE type,
+//! 2D array shape, per-PE scratchpad sizes, global buffer size, bandwidth)
+//! and *DNN configuration* as inputs. This module defines the hardware
+//! config, its legal ranges, and the sweep/sampling helpers the DSE layer
+//! iterates over.
+
+use crate::pe::PeType;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// One point in the accelerator design space.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AcceleratorConfig {
+    pub pe_type: PeType,
+    /// PE array shape (paper: "number of PEs per row and column").
+    pub rows: usize,
+    pub cols: usize,
+    /// Per-PE scratchpad sizes in *entries* (words of the PE's datatype) —
+    /// SP_if, SP_fw, SP_ps in the paper's feature vectors.
+    pub sp_if: usize,
+    pub sp_fw: usize,
+    pub sp_ps: usize,
+    /// Global buffer size in KiB (GBS feature).
+    pub gb_kib: usize,
+    /// Off-chip bandwidth in bytes/cycle (paper: "device bandwidth").
+    pub dram_bw: usize,
+}
+
+impl AcceleratorConfig {
+    /// Eyeriss-like default (the paper's architecture template): 12x14
+    /// array, 12/224/24-entry scratchpads, 108 KiB global buffer.
+    pub fn baseline(pe_type: PeType) -> Self {
+        AcceleratorConfig {
+            pe_type,
+            rows: 12,
+            cols: 14,
+            sp_if: 12,
+            sp_fw: 224,
+            sp_ps: 24,
+            gb_kib: 108,
+            dram_bw: 16,
+        }
+    }
+
+    pub fn num_pes(&self) -> usize {
+        self.rows * self.cols
+    }
+
+    /// Feature vector for the power/area models. Paper §3.3 uses 4 dims
+    /// (SP_if, SP_ps, SP_fw, #PE); we append GBS because our sweep varies
+    /// the global buffer, whose SRAM dominates area/leakage — without it
+    /// the models carry irreducible error (documented in DESIGN.md §2).
+    pub fn ppa_features(&self) -> Vec<f64> {
+        vec![
+            self.sp_if as f64,
+            self.sp_ps as f64,
+            self.sp_fw as f64,
+            self.num_pes() as f64,
+            self.gb_kib as f64,
+        ]
+    }
+
+    /// Sanity bounds used by validation and property tests.
+    pub fn validate(&self) -> Result<(), String> {
+        let ok = (1..=64).contains(&self.rows)
+            && (1..=64).contains(&self.cols)
+            && (4..=64).contains(&self.sp_if)
+            && (16..=512).contains(&self.sp_fw)
+            && (8..=64).contains(&self.sp_ps)
+            && (16..=1024).contains(&self.gb_kib)
+            && (1..=256).contains(&self.dram_bw);
+        if ok {
+            Ok(())
+        } else {
+            Err(format!("config out of legal range: {self:?}"))
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("pe_type", Json::Str(self.pe_type.name().into())),
+            ("rows", Json::Num(self.rows as f64)),
+            ("cols", Json::Num(self.cols as f64)),
+            ("sp_if", Json::Num(self.sp_if as f64)),
+            ("sp_fw", Json::Num(self.sp_fw as f64)),
+            ("sp_ps", Json::Num(self.sp_ps as f64)),
+            ("gb_kib", Json::Num(self.gb_kib as f64)),
+            ("dram_bw", Json::Num(self.dram_bw as f64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self, String> {
+        let pe_type = PeType::from_name(
+            j.get("pe_type").as_str().ok_or("missing pe_type")?,
+        )?;
+        let g = |k: &str| -> Result<usize, String> {
+            j.get(k).as_usize().ok_or_else(|| format!("missing {k}"))
+        };
+        Ok(AcceleratorConfig {
+            pe_type,
+            rows: g("rows")?,
+            cols: g("cols")?,
+            sp_if: g("sp_if")?,
+            sp_fw: g("sp_fw")?,
+            sp_ps: g("sp_ps")?,
+            gb_kib: g("gb_kib")?,
+            dram_bw: g("dram_bw")?,
+        })
+    }
+}
+
+/// The sweep grid used for characterization and DSE (paper §3.3: "we
+/// generate a variety of possible designs by varying global buffer size,
+/// number of PEs per row and column, bit precision, and PE type", plus the
+/// per-PE scratchpad sizes).
+#[derive(Debug, Clone)]
+pub struct SweepSpace {
+    pub rows: Vec<usize>,
+    pub cols: Vec<usize>,
+    pub sp_if: Vec<usize>,
+    pub sp_fw: Vec<usize>,
+    pub sp_ps: Vec<usize>,
+    pub gb_kib: Vec<usize>,
+    pub dram_bw: Vec<usize>,
+    pub pe_types: Vec<PeType>,
+}
+
+impl Default for SweepSpace {
+    fn default() -> Self {
+        SweepSpace {
+            rows: vec![6, 8, 12, 16, 24],
+            cols: vec![8, 12, 14, 16, 28],
+            sp_if: vec![8, 12, 16, 24],
+            sp_fw: vec![64, 128, 224, 448],
+            sp_ps: vec![16, 24, 32],
+            gb_kib: vec![64, 108, 256, 512],
+            dram_bw: vec![8, 16, 32],
+            pe_types: PeType::ALL.to_vec(),
+        }
+    }
+}
+
+impl SweepSpace {
+    /// Number of points in the full cartesian grid.
+    pub fn len(&self) -> usize {
+        self.rows.len()
+            * self.cols.len()
+            * self.sp_if.len()
+            * self.sp_fw.len()
+            * self.sp_ps.len()
+            * self.gb_kib.len()
+            * self.dram_bw.len()
+            * self.pe_types.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Decode the i-th point of the cartesian grid (mixed-radix index).
+    pub fn point(&self, mut i: usize) -> AcceleratorConfig {
+        let mut take = |xs: &Vec<usize>| {
+            let v = xs[i % xs.len()];
+            i /= xs.len();
+            v
+        };
+        let rows = take(&self.rows);
+        let cols = take(&self.cols);
+        let sp_if = take(&self.sp_if);
+        let sp_fw = take(&self.sp_fw);
+        let sp_ps = take(&self.sp_ps);
+        let gb_kib = take(&self.gb_kib);
+        let dram_bw = take(&self.dram_bw);
+        let pe_type = self.pe_types[i % self.pe_types.len()];
+        AcceleratorConfig {
+            pe_type,
+            rows,
+            cols,
+            sp_if,
+            sp_fw,
+            sp_ps,
+            gb_kib,
+            dram_bw,
+        }
+    }
+
+    /// Uniform random sample (for characterization / Fig-12 hw sampling).
+    pub fn sample(&self, rng: &mut Rng) -> AcceleratorConfig {
+        AcceleratorConfig {
+            pe_type: *rng.choose(&self.pe_types),
+            rows: *rng.choose(&self.rows),
+            cols: *rng.choose(&self.cols),
+            sp_if: *rng.choose(&self.sp_if),
+            sp_fw: *rng.choose(&self.sp_fw),
+            sp_ps: *rng.choose(&self.sp_ps),
+            gb_kib: *rng.choose(&self.gb_kib),
+            dram_bw: *rng.choose(&self.dram_bw),
+        }
+    }
+
+    /// Restrict to a single PE type (per-PE-type model fitting, §3.3).
+    pub fn for_pe(&self, pe: PeType) -> SweepSpace {
+        let mut s = self.clone();
+        s.pe_types = vec![pe];
+        s
+    }
+
+    /// Iterate every point of the grid.
+    pub fn iter(&self) -> impl Iterator<Item = AcceleratorConfig> + '_ {
+        (0..self.len()).map(move |i| self.point(i))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::Prop;
+
+    #[test]
+    fn baseline_is_valid() {
+        for pe in PeType::ALL {
+            AcceleratorConfig::baseline(pe).validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn ppa_features_order_matches_paper() {
+        let c = AcceleratorConfig::baseline(PeType::Int16);
+        assert_eq!(c.ppa_features(), vec![12.0, 24.0, 224.0, 168.0, 108.0]);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let c = AcceleratorConfig::baseline(PeType::LightPe2);
+        let j = c.to_json();
+        let c2 = AcceleratorConfig::from_json(&j).unwrap();
+        assert_eq!(c, c2);
+    }
+
+    #[test]
+    fn grid_point_bijection_prefix() {
+        let s = SweepSpace::default();
+        // Distinct indices give distinct configs over a healthy prefix.
+        let pts: Vec<_> = (0..200).map(|i| s.point(i)).collect();
+        for (i, a) in pts.iter().enumerate() {
+            for b in &pts[i + 1..] {
+                assert_ne!(a, b);
+            }
+        }
+    }
+
+    #[test]
+    fn grid_points_all_valid_prop() {
+        let s = SweepSpace::default();
+        let n = s.len();
+        Prop::quick(200).check(n, |rng, _| {
+            let c = s.point(rng.below(n));
+            c.validate().map_err(|e| e)
+        });
+    }
+
+    #[test]
+    fn samples_come_from_grid_values() {
+        let s = SweepSpace::default();
+        let mut rng = Rng::new(9);
+        for _ in 0..100 {
+            let c = s.sample(&mut rng);
+            assert!(s.rows.contains(&c.rows));
+            assert!(s.sp_fw.contains(&c.sp_fw));
+            c.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn for_pe_restricts() {
+        let s = SweepSpace::default().for_pe(PeType::Fp32);
+        assert_eq!(s.pe_types, vec![PeType::Fp32]);
+        assert_eq!(s.len(), SweepSpace::default().len() / 4);
+    }
+}

@@ -1,0 +1,532 @@
+//! Figure/table harnesses — one function per artifact of the paper's
+//! evaluation (Figs 4-12, Tables 2-4, §4.1 speedup). Each writes its CSV
+//! under `out` and returns a rendered terminal summary. DESIGN.md §5 maps
+//! every entry here to the paper.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::time::Instant;
+
+use crate::accuracy::paper::{PaperAccuracy, TABLE2_HW, TABLE3_FCLK};
+use crate::accuracy::AccuracyProvider;
+use crate::coexplore;
+use crate::config::AcceleratorConfig;
+use crate::dse::{self, DesignPoint};
+use crate::models::{nas, zoo, Dataset};
+use crate::pe::PeType;
+use crate::ppa::{characterize, PpaModels};
+use crate::regression::{select_degree, FitOptions};
+use crate::report::{f1, f3, render_scatter_loglog, render_table, render_violin, sci, write_csv};
+use crate::simulator::simulate_network;
+use crate::synthesis::synthesize;
+use crate::tech::scaling;
+use crate::util::rng::Rng;
+use crate::util::stats::{mape, mean, pearson_r};
+
+use super::Coordinator;
+
+fn sample_points(
+    coord: &Coordinator,
+    models: &PpaModels,
+    layers: &[crate::models::ConvLayer],
+    n: usize,
+    seed: u64,
+) -> Vec<DesignPoint> {
+    // Sample the sweep uniformly (the full grid is exercised by --full /
+    // benches); always include the baselines so normalization is stable.
+    let mut rng = Rng::new(seed);
+    let mut cfgs: Vec<AcceleratorConfig> =
+        PeType::ALL.iter().map(|&pe| AcceleratorConfig::baseline(pe)).collect();
+    for _ in 0..n {
+        cfgs.push(coord.space.sample(&mut rng));
+    }
+    let chunk = cfgs.len().div_ceil(coord.threads.max(1));
+    let mut out: Vec<Option<DesignPoint>> = vec![None; cfgs.len()];
+    std::thread::scope(|s| {
+        for (slot, batch) in out.chunks_mut(chunk).zip(cfgs.chunks(chunk)) {
+            s.spawn(move || {
+                for (o, cfg) in slot.iter_mut().zip(batch) {
+                    *o = Some(dse::evaluate(models, cfg, layers));
+                }
+            });
+        }
+    });
+    out.into_iter().flatten().collect()
+}
+
+/// Fig 4: DSE scatter — normalized perf/area vs normalized energy across
+/// PE types ("energy varies 35x ... perf/area varies 5x").
+pub fn fig4(coord: &Coordinator, models: &PpaModels, out: &Path, n: usize) -> String {
+    let net = zoo::resnet_cifar(20, Dataset::Cifar10);
+    let pts = sample_points(coord, models, &net.layers, n, 0xF14);
+    let norm = dse::normalize(&pts);
+    let mut rows = Vec::new();
+    let mut series: Vec<(&str, Vec<(f64, f64)>)> = Vec::new();
+    for pe in PeType::ALL {
+        let s: Vec<(f64, f64)> = norm
+            .iter()
+            .filter(|p| p.cfg.pe_type == pe)
+            .map(|p| (p.norm_energy, p.norm_ppa))
+            .collect();
+        for (e, a) in &s {
+            rows.push(vec![pe.name().into(), sci(*e), sci(*a)]);
+        }
+        series.push((pe.name(), s));
+    }
+    write_csv(&out.join("fig4_dse_scatter.csv"),
+              &["pe_type", "norm_energy", "norm_perf_per_area"], &rows).ok();
+    // Spread claims — the paper's phrasing is *conditional*: energy varies
+    // 35x "for almost the same performance per area region" and vice
+    // versa, so measure spread within a +/-25% band of the median of the
+    // other axis.
+    let med_ppa = crate::util::stats::median(
+        &norm.iter().map(|p| p.norm_ppa).collect::<Vec<_>>());
+    let med_e = crate::util::stats::median(
+        &norm.iter().map(|p| p.norm_energy).collect::<Vec<_>>());
+    let spread = |v: &[f64]| {
+        v.iter().cloned().fold(f64::MIN, f64::max)
+            / v.iter().cloned().fold(f64::MAX, f64::min).max(1e-30)
+    };
+    let e_band: Vec<f64> = norm
+        .iter()
+        .filter(|p| (p.norm_ppa / med_ppa).abs().ln().abs() < 0.25)
+        .map(|p| p.norm_energy)
+        .collect();
+    let a_band: Vec<f64> = norm
+        .iter()
+        .filter(|p| (p.norm_energy / med_e).abs().ln().abs() < 0.25)
+        .map(|p| p.norm_ppa)
+        .collect();
+    let mut s = render_scatter_loglog(
+        "Fig 4: norm perf/area vs norm energy", "norm energy",
+        "norm perf/area", &series, 72, 20);
+    s += &format!(
+        "at ~constant perf/area: energy varies {:.1}x (paper ~35x);          at ~constant energy: perf/area varies {:.1}x (paper ~5x)\n",
+        spread(&e_band), spread(&a_band));
+    s
+}
+
+/// Fig 5: MAPE/RMSPE vs polynomial degree (k-fold model selection).
+pub fn fig5(coord: &Coordinator, out: &Path, n_cfgs: usize) -> String {
+    let layers = super::unique_layers(&[zoo::resnet_cifar(20, Dataset::Cifar10)]);
+    let d = characterize(&coord.space, PeType::Int16, &layers, n_cfgs,
+                         &coord.tech, 0xF15);
+    let base = FitOptions { max_degree: 0, max_vars: 3, ridge: 1e-8, log_target: false, log_features: false };
+    let (scores, best) = select_degree(&d.power_x, &d.power_y, base, 8, 5, 0xF15);
+    let mut rows = Vec::new();
+    let mut table = Vec::new();
+    for s in &scores {
+        rows.push(vec![s.degree.to_string(), f3(s.mape), f3(s.rmspe)]);
+        table.push(vec![s.degree.to_string(), f3(s.mape), f3(s.rmspe)]);
+    }
+    write_csv(&out.join("fig5_degree_selection.csv"),
+              &["degree", "mape_pct", "rmspe_pct"], &rows).ok();
+    let mut s = render_table("Fig 5: power-model CV error vs degree",
+                             &["degree", "MAPE %", "RMSPE %"], &table);
+    s += &format!("selected degree: {best} (paper selects 5)\n");
+    s
+}
+
+/// Figs 6/7/8: predicted-vs-actual power / performance / area per PE type.
+pub fn fig678(coord: &Coordinator, models: &PpaModels, out: &Path,
+              n_eval: usize) -> String {
+    let layers = super::unique_layers(&super::paper_workloads());
+    let mut text = String::new();
+    let mut rows6 = Vec::new();
+    let mut rows7 = Vec::new();
+    let mut rows8 = Vec::new();
+    let mut table = Vec::new();
+    for pe in PeType::ALL {
+        // Fresh held-out configs (different seed than training).
+        let d = characterize(&coord.space, pe, &layers, n_eval,
+                             &coord.tech, 0xEA17);
+        let m = models.models(pe);
+        let pow_pred: Vec<f64> =
+            d.power_x.iter().map(|x| m.power.predict(x)).collect();
+        let area_pred: Vec<f64> =
+            d.area_x.iter().map(|x| m.area.predict(x)).collect();
+        let lat_pred: Vec<f64> =
+            d.lat_x.iter().map(|x| m.latency.predict(x)).collect();
+        // Performance = 1/latency (paper's Fig 7 axis).
+        let perf_act: Vec<f64> = d.lat_y.iter().map(|l| 1.0 / l).collect();
+        let perf_pred: Vec<f64> = lat_pred.iter().map(|l| 1.0 / l).collect();
+        for (a, p) in d.power_y.iter().zip(&pow_pred) {
+            rows6.push(vec![pe.name().into(), f3(*a), f3(*p)]);
+        }
+        for (a, p) in perf_act.iter().zip(&perf_pred) {
+            rows7.push(vec![pe.name().into(), sci(*a), sci(*p)]);
+        }
+        for (a, p) in d.area_y.iter().zip(&area_pred) {
+            rows8.push(vec![pe.name().into(), f1(*a), f1(*p)]);
+        }
+        table.push(vec![
+            pe.name().into(),
+            format!("{:.2} / {:.3}", mape(&d.power_y, &pow_pred),
+                    pearson_r(&d.power_y, &pow_pred)),
+            format!("{:.2} / {:.3}", mape(&perf_act, &perf_pred),
+                    pearson_r(&perf_act, &perf_pred)),
+            format!("{:.2} / {:.3}", mape(&d.area_y, &area_pred),
+                    pearson_r(&d.area_y, &area_pred)),
+        ]);
+    }
+    write_csv(&out.join("fig6_power_pred_vs_actual.csv"),
+              &["pe_type", "actual_mw", "predicted_mw"], &rows6).ok();
+    write_csv(&out.join("fig7_perf_pred_vs_actual.csv"),
+              &["pe_type", "actual_inv_s", "predicted_inv_s"], &rows7).ok();
+    write_csv(&out.join("fig8_area_pred_vs_actual.csv"),
+              &["pe_type", "actual_um2", "predicted_um2"], &rows8).ok();
+    text += &render_table(
+        "Figs 6-8: held-out model accuracy (MAPE % / pearson r)",
+        &["pe", "power", "performance", "area"], &table);
+    text += "paper: power/area models correlate more tightly than latency (Fig 7) — \
+             latency depends on both hw and DNN features.\n";
+    text
+}
+
+/// Fig 9: violin distributions of norm perf/area + energy per PE type, and
+/// the on-average improvement claims.
+pub fn fig9(coord: &Coordinator, models: &PpaModels, out: &Path, n: usize) -> String {
+    let workloads = super::paper_workloads();
+    let mut all_ppa: BTreeMap<PeType, Vec<f64>> = BTreeMap::new();
+    let mut all_energy: BTreeMap<PeType, Vec<f64>> = BTreeMap::new();
+    let mut best_ppa: BTreeMap<PeType, Vec<f64>> = BTreeMap::new();
+    let mut best_energy: BTreeMap<PeType, Vec<f64>> = BTreeMap::new();
+    let mut rows = Vec::new();
+    for (wi, w) in workloads.iter().enumerate() {
+        let pts = sample_points(coord, models, &w.layers, n, 0xF19 + wi as u64);
+        let norm = dse::normalize(&pts);
+        for p in &norm {
+            all_ppa.entry(p.cfg.pe_type).or_default().push(p.norm_ppa);
+            all_energy.entry(p.cfg.pe_type).or_default().push(p.norm_energy);
+            rows.push(vec![
+                format!("{}-{}", w.name, w.dataset.name()),
+                p.cfg.pe_type.name().into(),
+                sci(p.norm_ppa),
+                sci(p.norm_energy),
+            ]);
+        }
+        for pe in PeType::ALL {
+            let per_pe: Vec<&dse::NormPoint> =
+                norm.iter().filter(|p| p.cfg.pe_type == pe).collect();
+            if let Some(b) = per_pe.iter().map(|p| p.norm_ppa)
+                .max_by(|a, b| a.partial_cmp(b).unwrap()) {
+                best_ppa.entry(pe).or_default().push(b);
+            }
+            if let Some(b) = per_pe.iter().map(|p| p.norm_energy)
+                .min_by(|a, b| a.partial_cmp(b).unwrap()) {
+                best_energy.entry(pe).or_default().push(b);
+            }
+        }
+    }
+    write_csv(&out.join("fig9_distributions.csv"),
+              &["workload", "pe_type", "norm_perf_per_area", "norm_energy"],
+              &rows).ok();
+    let mut s = String::new();
+    let groups = |m: &BTreeMap<PeType, Vec<f64>>| -> Vec<(String, crate::util::stats::FiveNum)> {
+        PeType::ALL.iter().map(|pe| {
+            (pe.name().to_string(), crate::util::stats::five_num(&m[pe]))
+        }).collect()
+    };
+    s += &render_violin("Fig 9 (left): norm perf/area per PE type",
+                        &groups(&all_ppa), 60);
+    s += &render_violin("Fig 9 (right): norm energy per PE type",
+                        &groups(&all_energy), 60);
+    let avg = |m: &BTreeMap<PeType, Vec<f64>>, pe: PeType| mean(&m[&pe]);
+    s += &format!(
+        "avg best-config gains vs best INT16 —\n  \
+         perf/area: LightPE-1 {:.1}x (paper 4.8x), LightPE-2 {:.1}x (paper 4.1x)\n  \
+         energy:    LightPE-1 {:.2}x (paper 0.21x), LightPE-2 {:.2}x (paper 0.25x)\n  \
+         INT16 vs best FP32: perf/area {:.1}x (paper 1.8x), energy {:.2}x (paper ~0.67x)\n",
+        avg(&best_ppa, PeType::LightPe1),
+        avg(&best_ppa, PeType::LightPe2),
+        avg(&best_energy, PeType::LightPe1),
+        avg(&best_energy, PeType::LightPe2),
+        1.0 / avg(&best_ppa, PeType::Fp32),
+        1.0 / avg(&best_energy, PeType::Fp32),
+    );
+    s
+}
+
+/// Figs 10/11 + Table 2: accuracy vs perf/area and accuracy vs energy
+/// Pareto per model/dataset, using the paper's reported accuracies.
+pub fn fig10_11_table2(
+    coord: &Coordinator,
+    models: &PpaModels,
+    out: &Path,
+    n: usize,
+) -> String {
+    let acc = PaperAccuracy;
+    let mut rows = Vec::new();
+    let mut table2 = Vec::new();
+    let suite = [
+        ("vgg16", zoo::vgg16(Dataset::Cifar10)),
+        ("resnet20", zoo::resnet_cifar(20, Dataset::Cifar10)),
+        ("resnet56", zoo::resnet_cifar(56, Dataset::Cifar10)),
+    ];
+    let mut text = String::new();
+    for (name, net) in &suite {
+        let pts = sample_points(coord, models, &net.layers, n, 0xF10);
+        let ref_pt = dse::best_int16_reference(&pts).unwrap();
+        // Energy column normalizes against the *minimum-energy* INT16
+        // configuration (Fig 11 / Table 2 convention: INT16 energy = 1x).
+        let ref_e = pts
+            .iter()
+            .filter(|p| p.cfg.pe_type == crate::pe::PeType::Int16)
+            .map(|p| p.energy_j)
+            .fold(f64::INFINITY, f64::min);
+        // Best per PE by perf/area (Fig 10) and by energy (Fig 11).
+        let best_ppa = dse::best_per_pe(&pts, |p| p.perf_per_area);
+        let best_e = dse::best_per_pe(&pts, |p| -p.energy_j);
+        for ds in [Dataset::Cifar10, Dataset::Cifar100] {
+            for (pe, p) in &best_ppa {
+                let a = acc.accuracy(name, ds, *pe).unwrap_or(f64::NAN);
+                rows.push(vec![
+                    name.to_string(), ds.name().into(), pe.name().into(),
+                    "best_ppa".into(), f3(p.perf_per_area / ref_pt.perf_per_area),
+                    f3(p.energy_j / ref_e), f3(a),
+                ]);
+            }
+            for (pe, p) in &best_e {
+                let a = acc.accuracy(name, ds, *pe).unwrap_or(f64::NAN);
+                rows.push(vec![
+                    name.to_string(), ds.name().into(), pe.name().into(),
+                    "best_energy".into(), f3(p.perf_per_area / ref_pt.perf_per_area),
+                    f3(p.energy_j / ref_e), f3(a),
+                ]);
+            }
+        }
+        // Table 2 rows (measured hw metrics + paper accuracy + paper hw).
+        for (pe, p) in &best_ppa {
+            let a10 = acc.accuracy(name, Dataset::Cifar10, *pe).unwrap_or(f64::NAN);
+            let a100 = acc.accuracy(name, Dataset::Cifar100, *pe).unwrap_or(f64::NAN);
+            let e_best = best_e.iter().find(|(q, _)| q == pe).unwrap().1;
+            let paper = TABLE2_HW
+                .iter()
+                .find(|(m, q, _, _)| m == name && q == pe)
+                .map(|(_, _, e, ppa)| (*e, *ppa))
+                .unwrap_or((f64::NAN, f64::NAN));
+            table2.push(vec![
+                name.to_string(), pe.name().into(), f1(a10), f1(a100),
+                format!("{:.2}x", e_best.energy_j / ref_e),
+                format!("{:.2}x", paper.0),
+                format!("{:.1}x", p.perf_per_area / ref_pt.perf_per_area),
+                format!("{:.1}x", paper.1),
+            ]);
+        }
+    }
+    write_csv(&out.join("fig10_11_pareto_points.csv"),
+              &["model", "dataset", "pe_type", "selection",
+                "norm_perf_per_area", "norm_energy", "top1_acc"], &rows).ok();
+    write_csv(&out.join("table2_pareto_optimal.csv"),
+              &["model", "pe_type", "acc_c10", "acc_c100",
+                "energy_meas", "energy_paper", "ppa_meas", "ppa_paper"],
+              &table2).ok();
+    text += &render_table(
+        "Table 2: Pareto-optimal results (accuracy from paper; hw measured vs paper)",
+        &["model", "pe", "C10 %", "C100 %", "E meas", "E paper",
+          "P/A meas", "P/A paper"],
+        &table2);
+    text
+}
+
+/// Fig 12: co-exploration Pareto (1000 archs).
+pub fn fig12(coord: &Coordinator, models: &PpaModels, out: &Path,
+             n_archs: usize) -> String {
+    let pts = coexplore::explore(models, &coord.space, Dataset::Cifar10,
+                                 n_archs, 2, 0xF12, coord.threads);
+    let norm = coexplore::normalize(&pts);
+    let front_e = coexplore::pareto(&norm, false);
+    let front_a = coexplore::pareto(&norm, true);
+    let mut rows = Vec::new();
+    for (i, p) in norm.iter().enumerate() {
+        rows.push(vec![
+            p.pe.name().into(), f3(p.top1_err), sci(p.norm_energy),
+            sci(p.norm_area),
+            (front_e.contains(&i) as u8).to_string(),
+            (front_a.contains(&i) as u8).to_string(),
+        ]);
+    }
+    write_csv(&out.join("fig12_coexploration.csv"),
+              &["pe_type", "top1_err", "norm_energy", "norm_area",
+                "on_energy_front", "on_area_front"], &rows).ok();
+    let series: Vec<(&str, Vec<(f64, f64)>)> = PeType::ALL
+        .iter()
+        .map(|&pe| {
+            (pe.name(), norm.iter().filter(|p| p.pe == pe)
+                .map(|p| (p.norm_energy, p.top1_err)).collect())
+        })
+        .collect();
+    let mut s = render_scatter_loglog(
+        "Fig 12 (left): top-1 error vs norm energy (co-exploration)",
+        "norm energy", "top-1 err %", &series, 72, 18);
+    let light_frac = front_e
+        .iter()
+        .filter(|&&i| matches!(norm[i].pe, PeType::LightPe1 | PeType::LightPe2))
+        .count() as f64
+        / front_e.len().max(1) as f64;
+    s += &format!(
+        "{} pairs scored; energy-front size {}, {:.0}% LightPE (paper: \
+         LightPEs consistently on the front)\n",
+        norm.len(), front_e.len(), 100.0 * light_frac);
+    s
+}
+
+/// Table 3: clock frequencies per PE type + Eyeriss technology scaling.
+pub fn table3(coord: &Coordinator, out: &Path) -> String {
+    let mut rows = Vec::new();
+    for (pe, paper_mhz) in TABLE3_FCLK {
+        let syn = synthesize(&AcceleratorConfig::baseline(*pe), &coord.tech);
+        let scaled65 = scaling::scale_frequency_mhz(syn.fclk_mhz, 45.0, 65.0);
+        rows.push(vec![
+            pe.name().into(), f1(syn.fclk_mhz), f1(*paper_mhz),
+            f1(scaled65),
+        ]);
+    }
+    write_csv(&out.join("table3_clock_frequencies.csv"),
+              &["pe_type", "fclk_meas_mhz", "fclk_paper_mhz",
+                "scaled_65nm_mhz"], &rows).ok();
+    let mut s = render_table(
+        "Table 3: clock frequencies (45 nm) + 65 nm scaling",
+        &["pe", "measured MHz", "paper MHz", "@65nm MHz"], &rows);
+    s += "Eyeriss (65 nm) reports 200 MHz; paper's scaled INT16 = 197 MHz.\n";
+    s
+}
+
+/// Table 4: the NAS search space.
+pub fn table4(out: &Path) -> String {
+    let mut rows = Vec::new();
+    for s in 0..5 {
+        rows.push(vec![
+            format!("Conv-BN-ReLU x{s}"),
+            format!("{:?}", nas::REPS[s]),
+            format!("{:?}", nas::CHANNELS[s]),
+        ]);
+    }
+    write_csv(&out.join("table4_search_space.csv"),
+              &["stage", "repetitions", "channels"], &rows).ok();
+    let mut s = render_table("Table 4: co-exploration search space",
+                             &["stage", "reps", "channels"], &rows);
+    s += &format!("total candidate architectures: {} (paper: 110,592)\n",
+                  nas::space_size());
+    s
+}
+
+/// §4.1 speedup: fitted models vs synthesis+simulation, per query.
+pub fn speedup(coord: &Coordinator, models: &PpaModels, out: &Path,
+               n: usize) -> String {
+    let net = zoo::resnet_cifar(20, Dataset::Cifar10);
+    let mut rng = Rng::new(0x5EED);
+    let cfgs: Vec<AcceleratorConfig> =
+        (0..n).map(|_| coord.space.sample(&mut rng)).collect();
+
+    let t0 = Instant::now();
+    let mut acc_fast = 0.0;
+    for cfg in &cfgs {
+        acc_fast += models.network_latency_s(cfg, &net.layers)
+            + models.power_mw(cfg)
+            + models.area_um2(cfg);
+    }
+    let fast = t0.elapsed().as_secs_f64() / n as f64;
+
+    let t0 = Instant::now();
+    let mut acc_slow = 0.0;
+    for cfg in &cfgs {
+        let syn = synthesize(cfg, &coord.tech);
+        let sim = simulate_network(cfg, &net.layers, syn.fclk_mhz, &coord.tech);
+        acc_slow += sim.latency_s + syn.power_mw + syn.area_um2;
+    }
+    let slow = t0.elapsed().as_secs_f64() / n as f64;
+    // The paper's flow additionally pays RTL synthesis wall-time (hours-days
+    // per design vs our analytical oracle); we report both the measured
+    // in-repo ratio and the paper-equivalent including a DC-run constant.
+    let dc_seconds_per_design = 4.0 * 3600.0; // conservative: 4h synth+sim
+    let rows = vec![vec![
+        sci(fast), sci(slow), f1(slow / fast),
+        sci((dc_seconds_per_design + slow) / fast),
+    ]];
+    write_csv(&out.join("speedup_model_vs_groundtruth.csv"),
+              &["model_s_per_query", "sim_s_per_query", "ratio",
+                "ratio_incl_synthesis"], &rows).ok();
+    format!(
+        "§4.1 speedup: fitted-model query {:.2e}s; in-repo ground truth \
+         (analytical synthesis oracle + simulator — itself our substitution \
+         for the paper's DC+VCS flow) {:.2e}s. The paper compares against \
+         RTL synthesis + characterization per design: with a 4h DC run the \
+         paper-equivalent ratio is {:.1e}x (paper claims 3-4 orders of \
+         magnitude). [checksums {acc_fast:.3e}/{acc_slow:.3e}]\n",
+        fast, slow, (dc_seconds_per_design + slow) / fast
+    )
+}
+
+/// Latency-model feature sanity used by tests and docs.
+pub fn latency_feature_names() -> [&'static str; 15] {
+    ["sp_if", "sp_ps", "sp_fw", "pe_rows", "pe_cols", "gbs",
+     "A", "C", "F", "K", "S", "P", "RS", "DS", "MACS"]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SweepSpace;
+
+    fn tiny() -> (Coordinator, PpaModels, std::path::PathBuf) {
+        let mut coord = Coordinator::default();
+        coord.space = SweepSpace {
+            rows: vec![8, 12],
+            cols: vec![8, 14],
+            sp_if: vec![12, 16],
+            sp_fw: vec![128, 224],
+            sp_ps: vec![24],
+            gb_kib: vec![108, 256],
+            dram_bw: vec![16],
+            pe_types: PeType::ALL.to_vec(),
+        };
+        // Characterize over the full workload feature range — fig9
+        // evaluates ImageNet models too, and log-space latency models
+        // extrapolate poorly outside the training hull.
+        let layers = super::super::unique_layers(&super::super::paper_workloads());
+        let data = coord.characterize_all(&layers, 24, 2);
+        let models = PpaModels::fit(&data, 2);
+        let dir = std::env::temp_dir().join(format!(
+            "quidam_figs_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        (coord, models, dir)
+    }
+
+    #[test]
+    fn all_figures_produce_output() {
+        let (coord, models, dir) = tiny();
+        let outputs = [
+            fig4(&coord, &models, &dir, 60),
+            fig5(&coord, &dir, 30),
+            fig9(&coord, &models, &dir, 40),
+            fig10_11_table2(&coord, &models, &dir, 40),
+            fig12(&coord, &models, &dir, 30),
+            table3(&coord, &dir),
+            table4(&dir),
+            speedup(&coord, &models, &dir, 20),
+        ];
+        for (i, o) in outputs.iter().enumerate() {
+            assert!(!o.is_empty(), "figure {i} produced nothing");
+        }
+        // CSVs on disk.
+        for f in [
+            "fig4_dse_scatter.csv", "fig5_degree_selection.csv",
+            "fig9_distributions.csv", "fig10_11_pareto_points.csv",
+            "table2_pareto_optimal.csv", "fig12_coexploration.csv",
+            "table3_clock_frequencies.csv", "table4_search_space.csv",
+            "speedup_model_vs_groundtruth.csv",
+        ] {
+            assert!(dir.join(f).exists(), "missing {f}");
+        }
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn feature_names_match_dimension() {
+        let cfg = AcceleratorConfig::baseline(PeType::Int16);
+        let l = &zoo::resnet_cifar(20, Dataset::Cifar10).layers[1];
+        assert_eq!(crate::ppa::latency_features(&cfg, l).len(),
+                   latency_feature_names().len());
+    }
+}

@@ -1,0 +1,175 @@
+//! L3 coordinator — orchestrates the QUIDAM pipeline:
+//!
+//!   characterize (synthesis + simulation, parallel across PE types)
+//!     -> fit polynomial PPA models (with k-fold model selection)
+//!       -> explore / pareto / co-explore (fast model-driven DSE)
+//!         -> reports (every figure + table of the paper's evaluation)
+//!
+//! The figure harnesses live in `figures`; the CLI (main.rs), the examples,
+//! and the benches all call through this module so the pipeline is
+//! exercised identically everywhere.
+
+pub mod figures;
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::config::SweepSpace;
+use crate::models::{zoo, ConvLayer, Dataset, DnnModel};
+use crate::pe::PeType;
+use crate::ppa::{characterize, CharData, PpaModels};
+use crate::tech::TechLibrary;
+
+/// Shared pipeline context.
+pub struct Coordinator {
+    pub tech: TechLibrary,
+    pub space: SweepSpace,
+    pub threads: usize,
+}
+
+impl Default for Coordinator {
+    fn default() -> Self {
+        Coordinator {
+            tech: TechLibrary::freepdk45(),
+            space: SweepSpace::default(),
+            threads: std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(4),
+        }
+    }
+}
+
+/// Deduplicate layers by shape signature — ResNets repeat identical blocks,
+/// so characterization only needs each unique (A,C,F,K,S,P,RS,DS) once.
+pub fn unique_layers(models: &[DnnModel]) -> Vec<ConvLayer> {
+    let mut seen = std::collections::BTreeSet::new();
+    let mut out = Vec::new();
+    for m in models {
+        for l in &m.layers {
+            let key = (l.a, l.c, l.f, l.k, l.s, l.p, l.rs, l.ds);
+            if seen.insert(key) {
+                out.push(l.clone());
+            }
+        }
+    }
+    out
+}
+
+/// The paper's full workload suite (§4.2): CIFAR + ImageNet models.
+pub fn paper_workloads() -> Vec<DnnModel> {
+    let mut v = zoo::cifar_suite(Dataset::Cifar10);
+    v.extend(zoo::imagenet_suite());
+    v
+}
+
+impl Coordinator {
+    /// Characterize all four PE types in parallel (one worker per type).
+    pub fn characterize_all(
+        &self,
+        layers: &[ConvLayer],
+        n_cfgs: usize,
+        seed: u64,
+    ) -> BTreeMap<PeType, CharData> {
+        let mut out = BTreeMap::new();
+        let results: Vec<(PeType, CharData)> = std::thread::scope(|s| {
+            let handles: Vec<_> = PeType::ALL
+                .iter()
+                .map(|&pe| {
+                    let tech = &self.tech;
+                    let space = &self.space;
+                    s.spawn(move || {
+                        (pe, characterize(space, pe, layers, n_cfgs, tech, seed))
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for (pe, d) in results {
+            out.insert(pe, d);
+        }
+        out
+    }
+
+    /// Build (or load from `cache`) the pre-characterized PPA models.
+    pub fn load_or_build_models(
+        &self,
+        cache: &Path,
+        n_cfgs: usize,
+        degree: u32,
+        seed: u64,
+    ) -> PpaModels {
+        if cache.exists() {
+            if let Ok(m) = PpaModels::load(cache) {
+                if m.degree == degree {
+                    return m;
+                }
+            }
+        }
+        let layers = unique_layers(&paper_workloads());
+        let data = self.characterize_all(&layers, n_cfgs, seed);
+        let models = PpaModels::fit(&data, degree);
+        if let Some(dir) = cache.parent() {
+            let _ = std::fs::create_dir_all(dir);
+        }
+        let _ = models.save(cache);
+        models
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unique_layers_dedupes_resnet_blocks() {
+        let m = zoo::resnet_cifar(56, Dataset::Cifar10);
+        let uniq = unique_layers(&[m.clone()]);
+        assert!(uniq.len() < m.layers.len() / 3,
+            "{} unique of {}", uniq.len(), m.layers.len());
+    }
+
+    #[test]
+    fn paper_workloads_complete() {
+        let w = paper_workloads();
+        assert_eq!(w.len(), 6);
+        let names: Vec<&str> = w.iter().map(|m| m.name.as_str()).collect();
+        assert!(names.contains(&"vgg16"));
+        assert!(names.contains(&"resnet50"));
+    }
+
+    #[test]
+    fn characterize_all_covers_every_pe() {
+        let coord = Coordinator::default();
+        let layers = unique_layers(&[zoo::resnet_cifar(20, Dataset::Cifar10)]);
+        let data = coord.characterize_all(&layers, 10, 1);
+        assert_eq!(data.len(), 4);
+        for (pe, d) in &data {
+            assert!(!d.configs.is_empty(), "{pe} empty");
+        }
+    }
+
+    #[test]
+    fn model_cache_roundtrip() {
+        let dir = std::env::temp_dir().join("quidam_test_models");
+        let _ = std::fs::remove_dir_all(&dir);
+        let cache = dir.join("ppa.json");
+        let mut coord = Coordinator::default();
+        // Tiny characterization for test speed.
+        coord.space = SweepSpace {
+            rows: vec![8, 12],
+            cols: vec![8, 14],
+            sp_if: vec![12, 16],
+            sp_fw: vec![128, 224],
+            sp_ps: vec![24],
+            gb_kib: vec![108],
+            dram_bw: vec![16],
+            pe_types: PeType::ALL.to_vec(),
+        };
+        let m1 = coord.load_or_build_models(&cache, 12, 2, 3);
+        assert!(cache.exists());
+        let m2 = coord.load_or_build_models(&cache, 12, 2, 3);
+        let cfg = crate::config::AcceleratorConfig::baseline(PeType::Int16);
+        assert!((m1.power_mw(&cfg) - m2.power_mw(&cfg)).abs() < 1e-9);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,332 @@
+//! Row-stationary dataflow mapping (Eyeriss [2]) — analytic layer model.
+//!
+//! QUIDAM's architecture template "utilizes row stationary dataflow" (§3.1):
+//! filter rows stay resident in PE scratchpads, ifmap rows slide diagonally,
+//! partial sums accumulate vertically. This module computes, for one conv
+//! layer on one accelerator config: the logical->physical folding, per-pass
+//! structure, compute/memory cycle counts, storage-hierarchy access counts,
+//! and energy. It is the fast analytic core; `simulator` layers discrete
+//! microarchitectural effects (bank conflicts, FIFO backpressure, DRAM
+//! burst quantization) on top of the same mapping to produce the
+//! characterization ground truth.
+
+use crate::config::AcceleratorConfig;
+use crate::models::ConvLayer;
+use crate::synthesis;
+use crate::tech::TechLibrary;
+
+/// DRAM energy per byte (fJ) — ~10 pJ/B, the classic ~200x on-chip gap.
+pub const DRAM_FJ_PER_BYTE: f64 = 10_000.0;
+
+/// How one layer folds onto the physical array.
+#[derive(Debug, Clone, Copy)]
+pub struct Mapping {
+    /// Channels processed together per pass (bounded by SP_if).
+    pub q: usize,
+    /// Filters resident per PE per pass (bounded by SP_fw).
+    pub p: usize,
+    /// Vertical replication: independent filter groups when K < rows.
+    pub r: usize,
+    /// Horizontal strips: ceil(E / cols).
+    pub strips: usize,
+    /// Vertical folds: ceil(K / rows).
+    pub vfolds: usize,
+    /// Channel passes: ceil(C / q).
+    pub cpasses: usize,
+    /// Filter passes: ceil(F / (p*r)).
+    pub fpasses: usize,
+}
+
+impl Mapping {
+    pub fn total_passes(&self) -> u64 {
+        self.strips as u64
+            * self.vfolds as u64
+            * self.cpasses as u64
+            * self.fpasses as u64
+    }
+}
+
+/// Performance + traffic of one layer on one config.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct LayerPerf {
+    pub macs: u64,
+    pub compute_cycles: u64,
+    pub mem_cycles: u64,
+    /// Total latency in cycles (max of compute/memory + fill/drain).
+    pub cycles: u64,
+    /// Latency in seconds at the design's synthesized clock.
+    pub latency_s: f64,
+    /// Storage-hierarchy access counts.
+    pub sp_reads: u64,
+    pub gb_reads: u64,
+    pub dram_bytes: u64,
+    /// Energy (J).
+    pub energy_j: f64,
+    /// MAC-array utilization in [0, 1].
+    pub utilization: f64,
+}
+
+fn ceil_div(a: usize, b: usize) -> usize {
+    a.div_ceil(b.max(1))
+}
+
+/// Fold the layer onto the array (row-stationary §3.1).
+pub fn map_layer(cfg: &AcceleratorConfig, l: &ConvLayer) -> Mapping {
+    let e = l.out_dim();
+    // SP_if holds q sliding windows of width K.
+    let q = (cfg.sp_if / l.k.max(1)).clamp(1, l.c);
+    // SP_fw holds p filter rows of K weights for each of the q channels.
+    let p = (cfg.sp_fw / (l.k * q).max(1)).clamp(1, l.f);
+    // When the kernel is shorter than the array, replicate filter groups.
+    let r = (cfg.rows / l.k.max(1)).clamp(1, ceil_div(l.f, p));
+    Mapping {
+        q,
+        p,
+        r,
+        strips: ceil_div(e, cfg.cols),
+        vfolds: ceil_div(l.k, cfg.rows),
+        cpasses: ceil_div(l.c, q),
+        fpasses: ceil_div(l.f, p * r),
+    }
+}
+
+/// Analytic per-layer performance under row-stationary mapping.
+pub fn analyze_layer(
+    cfg: &AcceleratorConfig,
+    l: &ConvLayer,
+    fclk_mhz: f64,
+    tech: &TechLibrary,
+) -> LayerPerf {
+    let m = map_layer(cfg, l);
+    let e = l.out_dim() as u64;
+    let macs = l.macs();
+
+    // Each pass: every active PE computes one output row (width E) of a
+    // 1-D row convolution — E x K x q x p MACs at 1 MAC/cycle; passes run
+    // back-to-back with a fill/drain bubble.
+    let work_per_pass = e * (l.k * m.q * m.p) as u64;
+    let fill = (cfg.rows + cfg.cols) as u64;
+    let passes = m.total_passes();
+    // Partial-sum spill penalty: if SP_ps can't hold p running sums the PE
+    // round-trips psums through the array per output (discrete knee).
+    let spill = ceil_div(m.p, cfg.sp_ps.max(1)) as u64;
+    let compute_cycles = passes * (work_per_pass * spill + fill);
+
+    // --- Traffic.
+    let act_bytes = (cfg.pe_type.act_bits() / 8).max(1) as u64;
+    let wgt_bits = cfg.pe_type.wgt_bits() as u64;
+    let ifmap_bytes = l.ifmap_elems() * act_bytes;
+    let wgt_bytes = (l.weights() * wgt_bits).div_ceil(8);
+    let ofmap_bytes = l.ofmap_elems() * act_bytes;
+    // Ifmap re-fetched once per filter pass; weights once per strip.
+    let gb_reads = l.ifmap_elems() * m.fpasses as u64
+        + l.weights() * m.strips as u64
+        + l.ofmap_elems() * spill;
+    // DRAM: working set vs global buffer determines reload trips.
+    let gb_bytes = (cfg.gb_kib * 1024) as u64;
+    let working = ifmap_bytes + wgt_bytes;
+    let trips = working.div_ceil(gb_bytes).max(1);
+    let dram_bytes = ifmap_bytes * trips.min(m.fpasses as u64)
+        + wgt_bytes
+        + ofmap_bytes;
+    let mem_cycles = dram_bytes / (cfg.dram_bw as u64).max(1);
+
+    // Scratchpad reads: 3 per MAC (if/fw/ps) by construction of the PE.
+    let sp_reads = 3 * macs;
+
+    let cycles = compute_cycles.max(mem_cycles) + fill;
+    let latency_s = cycles as f64 / (fclk_mhz * 1e6);
+
+    // Energy: MAC + local spads (bundled in e_mac) + GB + DRAM.
+    let banks = synthesis::gb_banks(cfg.gb_kib);
+    let bank_words = cfg.gb_kib * 1024 * 8 / 64 / banks;
+    let e_gb = tech.sram.macro_for(bank_words.max(1), 64).e_read_fj;
+    let e_mac = synthesis::energy_per_mac_fj(cfg, tech)
+        - 0.08 * e_gb; // avoid double counting the amortized GB term
+    let energy_fj = macs as f64 * e_mac
+        + gb_reads as f64 * e_gb
+        + dram_bytes as f64 * DRAM_FJ_PER_BYTE;
+
+    let utilization =
+        macs as f64 / ((compute_cycles.max(1) * cfg.num_pes() as u64) as f64);
+
+    LayerPerf {
+        macs,
+        compute_cycles,
+        mem_cycles,
+        cycles,
+        latency_s,
+        sp_reads,
+        gb_reads,
+        dram_bytes,
+        energy_j: energy_fj * 1e-15,
+        utilization: utilization.min(1.0),
+    }
+}
+
+/// Sum of per-layer analytic results for a whole network.
+pub fn analyze_network(
+    cfg: &AcceleratorConfig,
+    layers: &[ConvLayer],
+    fclk_mhz: f64,
+    tech: &TechLibrary,
+) -> LayerPerf {
+    let mut total = LayerPerf::default();
+    for l in layers {
+        let p = analyze_layer(cfg, l, fclk_mhz, tech);
+        total.macs += p.macs;
+        total.compute_cycles += p.compute_cycles;
+        total.mem_cycles += p.mem_cycles;
+        total.cycles += p.cycles;
+        total.latency_s += p.latency_s;
+        total.sp_reads += p.sp_reads;
+        total.gb_reads += p.gb_reads;
+        total.dram_bytes += p.dram_bytes;
+        total.energy_j += p.energy_j;
+    }
+    total.utilization = total.macs as f64
+        / ((total.compute_cycles.max(1)) as f64 * cfg.num_pes() as f64);
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::zoo;
+    use crate::models::Dataset;
+    use crate::pe::PeType;
+    use crate::util::prop::Prop;
+    use crate::util::rng::Rng;
+
+    fn setup() -> (AcceleratorConfig, TechLibrary) {
+        (AcceleratorConfig::baseline(PeType::Int16), TechLibrary::freepdk45())
+    }
+
+    fn layer() -> ConvLayer {
+        ConvLayer::new("t", 32, 16, 32, 3, 1, 1)
+    }
+
+    #[test]
+    fn mapping_respects_scratchpads() {
+        let (cfg, _) = setup();
+        let m = map_layer(&cfg, &layer());
+        assert!(m.q * layer().k <= cfg.sp_if.max(layer().k));
+        assert!(m.p >= 1 && m.q >= 1 && m.r >= 1);
+        // 3-row kernels on a 12-row array -> 4x replication.
+        assert_eq!(m.r.min(4), 4.min(m.r));
+        assert_eq!(m.vfolds, 1);
+    }
+
+    #[test]
+    fn passes_cover_all_work() {
+        // q*cpasses >= C and p*r*fpasses >= F for any config/layer.
+        let space = crate::config::SweepSpace::default();
+        let n = space.len();
+        Prop::quick(150).check(n, |rng, _| {
+            let cfg = space.point(rng.below(n));
+            let l = ConvLayer::new(
+                "x",
+                *rng.choose(&[8usize, 16, 32, 56]),
+                *rng.choose(&[3usize, 16, 64, 128]),
+                *rng.choose(&[16usize, 64, 256]),
+                *rng.choose(&[1usize, 3, 5, 7]),
+                *rng.choose(&[1usize, 2]),
+                1,
+            );
+            let m = map_layer(&cfg, &l);
+            if m.q * m.cpasses < l.c {
+                return Err(format!("channels uncovered: {m:?} {l:?}"));
+            }
+            if m.p * m.r * m.fpasses < l.f {
+                return Err(format!("filters uncovered: {m:?} {l:?}"));
+            }
+            if m.strips * cfg.cols < l.out_dim() {
+                return Err("output rows uncovered".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn compute_cycles_lower_bounded_by_perfect_parallelism() {
+        let (cfg, tech) = setup();
+        let p = analyze_layer(&cfg, &layer(), 285.0, &tech);
+        let ideal = p.macs / cfg.num_pes() as u64;
+        assert!(p.compute_cycles >= ideal,
+            "{} < ideal {}", p.compute_cycles, ideal);
+        assert!(p.utilization > 0.0 && p.utilization <= 1.0);
+    }
+
+    #[test]
+    fn more_pes_reduce_latency() {
+        let tech = TechLibrary::freepdk45();
+        let mut small = AcceleratorConfig::baseline(PeType::Int16);
+        small.rows = 6;
+        small.cols = 7;
+        let big = AcceleratorConfig::baseline(PeType::Int16);
+        let l = layer();
+        let ps = analyze_layer(&small, &l, 285.0, &tech);
+        let pb = analyze_layer(&big, &l, 285.0, &tech);
+        assert!(pb.compute_cycles < ps.compute_cycles);
+    }
+
+    #[test]
+    fn bandwidth_starvation_shows_in_mem_cycles() {
+        let tech = TechLibrary::freepdk45();
+        let mut cfg = AcceleratorConfig::baseline(PeType::Fp32);
+        cfg.dram_bw = 1;
+        let l = ConvLayer::new("fc", 1, 4096, 4096, 1, 1, 0); // weight heavy
+        let p = analyze_layer(&cfg, &l, 275.0, &tech);
+        assert!(p.mem_cycles > p.compute_cycles,
+            "fc layer at 1 B/cyc must be memory bound");
+        assert_eq!(p.cycles, p.mem_cycles + (cfg.rows + cfg.cols) as u64);
+    }
+
+    #[test]
+    fn lightpe_network_energy_below_fp32() {
+        let tech = TechLibrary::freepdk45();
+        let net = zoo::resnet_cifar(20, Dataset::Cifar10);
+        let e = |pe| {
+            let cfg = AcceleratorConfig::baseline(pe);
+            let f = crate::synthesis::synthesize(&cfg, &tech).fclk_mhz;
+            analyze_network(&cfg, &net.layers, f, &tech).energy_j
+        };
+        let (e_fp, e_l1) = (e(PeType::Fp32), e(PeType::LightPe1));
+        assert!(e_l1 < 0.5 * e_fp, "lpe1 {e_l1} vs fp32 {e_fp}");
+    }
+
+    #[test]
+    fn energy_positive_and_dram_counted() {
+        let (cfg, tech) = setup();
+        let p = analyze_layer(&cfg, &layer(), 285.0, &tech);
+        assert!(p.energy_j > 0.0);
+        assert!(p.dram_bytes > 0);
+        assert!(p.gb_reads > 0);
+        assert_eq!(p.sp_reads, 3 * p.macs);
+    }
+
+    #[test]
+    fn network_totals_are_sums() {
+        let (cfg, tech) = setup();
+        let net = zoo::resnet_cifar(20, Dataset::Cifar10);
+        let total = analyze_network(&cfg, &net.layers, 285.0, &tech);
+        let sum: u64 = net
+            .layers
+            .iter()
+            .map(|l| analyze_layer(&cfg, l, 285.0, &tech).cycles)
+            .sum();
+        assert_eq!(total.cycles, sum);
+        assert_eq!(total.macs, net.total_macs());
+    }
+
+    #[test]
+    fn deterministic() {
+        let (cfg, tech) = setup();
+        let mut rng = Rng::new(1);
+        let _ = rng.next_u64();
+        let a = analyze_layer(&cfg, &layer(), 285.0, &tech);
+        let b = analyze_layer(&cfg, &layer(), 285.0, &tech);
+        assert_eq!(a.cycles, b.cycles);
+        assert_eq!(a.energy_j, b.energy_j);
+    }
+}

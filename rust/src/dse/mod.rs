@@ -1,0 +1,270 @@
+//! Design-space exploration engine: evaluate hardware configs through the
+//! pre-characterized PPA models, normalize against the best-INT16 reference
+//! (the paper's convention in Figs 4/9/10/11), and extract Pareto fronts.
+
+use crate::config::{AcceleratorConfig, SweepSpace};
+use crate::models::ConvLayer;
+use crate::pe::PeType;
+use crate::ppa::PpaModels;
+use crate::util::stats::FiveNum;
+
+/// One evaluated design point on a fixed workload.
+#[derive(Debug, Clone, Copy)]
+pub struct DesignPoint {
+    pub cfg: AcceleratorConfig,
+    pub latency_s: f64,
+    pub power_mw: f64,
+    pub area_um2: f64,
+    pub energy_j: f64,
+    /// 1/latency/area — the paper's performance-per-area metric.
+    pub perf_per_area: f64,
+}
+
+/// Evaluate one config on a workload through the fitted models (fast path).
+pub fn evaluate(
+    models: &PpaModels,
+    cfg: &AcceleratorConfig,
+    layers: &[ConvLayer],
+) -> DesignPoint {
+    let latency_s = models.network_latency_s(cfg, layers);
+    let power_mw = models.power_mw(cfg);
+    let area_um2 = models.area_um2(cfg);
+    DesignPoint {
+        cfg: *cfg,
+        latency_s,
+        power_mw,
+        area_um2,
+        energy_j: power_mw * 1e-3 * latency_s,
+        perf_per_area: 1.0 / (latency_s * area_um2).max(1e-30),
+    }
+}
+
+/// Evaluate every point of a sweep in parallel (std::thread::scope — the
+/// vendored crate set has no rayon).
+pub fn evaluate_space(
+    models: &PpaModels,
+    space: &SweepSpace,
+    layers: &[ConvLayer],
+    threads: usize,
+) -> Vec<DesignPoint> {
+    let n = space.len();
+    let threads = threads.clamp(1, 64);
+    let chunk = n.div_ceil(threads);
+    let mut out: Vec<Option<DesignPoint>> = vec![None; n];
+    std::thread::scope(|s| {
+        for (t, slot) in out.chunks_mut(chunk).enumerate() {
+            let start = t * chunk;
+            s.spawn(move || {
+                for (off, o) in slot.iter_mut().enumerate() {
+                    let cfg = space.point(start + off);
+                    *o = Some(evaluate(models, &cfg, layers));
+                }
+            });
+        }
+    });
+    out.into_iter().flatten().collect()
+}
+
+/// The paper's normalization reference: the INT16 config with the highest
+/// performance per area in the evaluated set.
+pub fn best_int16_reference(points: &[DesignPoint]) -> Option<DesignPoint> {
+    points
+        .iter()
+        .filter(|p| p.cfg.pe_type == PeType::Int16)
+        .max_by(|a, b| a.perf_per_area.partial_cmp(&b.perf_per_area).unwrap())
+        .copied()
+}
+
+/// A point normalized to the reference (norm perf/area up = better,
+/// norm energy down = better).
+#[derive(Debug, Clone, Copy)]
+pub struct NormPoint {
+    pub cfg: AcceleratorConfig,
+    pub norm_ppa: f64,
+    pub norm_energy: f64,
+}
+
+pub fn normalize(points: &[DesignPoint]) -> Vec<NormPoint> {
+    let r = best_int16_reference(points).expect("no INT16 point to normalize against");
+    points
+        .iter()
+        .map(|p| NormPoint {
+            cfg: p.cfg,
+            norm_ppa: p.perf_per_area / r.perf_per_area,
+            norm_energy: p.energy_j / r.energy_j,
+        })
+        .collect()
+}
+
+/// Violin-plot statistics per PE type (Fig 9).
+pub fn violin_by_pe(
+    norm: &[NormPoint],
+    metric: impl Fn(&NormPoint) -> f64,
+) -> Vec<(PeType, FiveNum, Vec<f64>)> {
+    PeType::ALL
+        .iter()
+        .map(|&pe| {
+            let vals: Vec<f64> = norm
+                .iter()
+                .filter(|p| p.cfg.pe_type == pe)
+                .map(&metric)
+                .collect();
+            (pe, crate::util::stats::five_num(&vals), vals)
+        })
+        .collect()
+}
+
+/// Best config per PE type under a maximizing objective (Figs 10/11 plot
+/// "the hardware configuration with the highest perf/area (resp. lowest
+/// energy) for each PE type").
+pub fn best_per_pe(
+    points: &[DesignPoint],
+    objective: impl Fn(&DesignPoint) -> f64,
+) -> Vec<(PeType, DesignPoint)> {
+    PeType::ALL
+        .iter()
+        .filter_map(|&pe| {
+            points
+                .iter()
+                .filter(|p| p.cfg.pe_type == pe)
+                .max_by(|a, b| objective(a).partial_cmp(&objective(b)).unwrap())
+                .map(|p| (pe, *p))
+        })
+        .collect()
+}
+
+/// 2-D Pareto front: minimize `x`, maximize `y`. Returns indices sorted by x.
+pub fn pareto_front_min_max(xs: &[f64], ys: &[f64]) -> Vec<usize> {
+    assert_eq!(xs.len(), ys.len());
+    let mut idx: Vec<usize> = (0..xs.len()).collect();
+    idx.sort_by(|&a, &b| {
+        xs[a].partial_cmp(&xs[b])
+            .unwrap()
+            .then(ys[b].partial_cmp(&ys[a]).unwrap())
+    });
+    let mut front = Vec::new();
+    let mut best_y = f64::NEG_INFINITY;
+    for i in idx {
+        if ys[i] > best_y {
+            front.push(i);
+            best_y = ys[i];
+        }
+    }
+    front
+}
+
+/// 2-D Pareto front minimizing both axes.
+pub fn pareto_front_min_min(xs: &[f64], ys: &[f64]) -> Vec<usize> {
+    let neg: Vec<f64> = ys.iter().map(|v| -v).collect();
+    pareto_front_min_max(xs, &neg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::{zoo, Dataset};
+    use crate::ppa::{characterize, PpaModels};
+    use crate::tech::TechLibrary;
+    use std::collections::BTreeMap;
+
+    fn models() -> PpaModels {
+        let tech = TechLibrary::freepdk45();
+        let space = SweepSpace::default();
+        let layers = zoo::resnet_cifar(20, Dataset::Cifar10).layers;
+        let mut m = BTreeMap::new();
+        for pe in PeType::ALL {
+            m.insert(pe, characterize(&space, pe, &layers, 40, &tech, 3));
+        }
+        PpaModels::fit(&m, 2)
+    }
+
+    fn small_space() -> SweepSpace {
+        SweepSpace {
+            rows: vec![8, 12],
+            cols: vec![8, 14],
+            sp_if: vec![12],
+            sp_fw: vec![128, 224],
+            sp_ps: vec![24],
+            gb_kib: vec![108],
+            dram_bw: vec![16],
+            pe_types: PeType::ALL.to_vec(),
+        }
+    }
+
+    #[test]
+    fn evaluate_space_covers_grid_and_parallel_matches_serial() {
+        let m = models();
+        let layers = &zoo::resnet_cifar(20, Dataset::Cifar10).layers;
+        let space = small_space();
+        let par = evaluate_space(&m, &space, layers, 4);
+        let ser = evaluate_space(&m, &space, layers, 1);
+        assert_eq!(par.len(), space.len());
+        for (a, b) in par.iter().zip(&ser) {
+            assert_eq!(a.cfg, b.cfg);
+            assert_eq!(a.energy_j, b.energy_j);
+        }
+    }
+
+    #[test]
+    fn normalization_reference_is_unity() {
+        let m = models();
+        let layers = &zoo::resnet_cifar(20, Dataset::Cifar10).layers;
+        let pts = evaluate_space(&m, &small_space(), layers, 2);
+        let norm = normalize(&pts);
+        let best = norm
+            .iter()
+            .filter(|p| p.cfg.pe_type == PeType::Int16)
+            .map(|p| p.norm_ppa)
+            .fold(f64::NEG_INFINITY, f64::max);
+        assert!((best - 1.0).abs() < 1e-9, "best INT16 norm_ppa = {best}");
+    }
+
+    #[test]
+    fn lightpe_dominates_normalized_metrics() {
+        // Fig 9's headline: LightPEs achieve higher perf/area and lower
+        // energy than the INT16 reference.
+        let m = models();
+        let layers = &zoo::resnet_cifar(20, Dataset::Cifar10).layers;
+        let pts = evaluate_space(&m, &small_space(), layers, 2);
+        let norm = normalize(&pts);
+        let med = |pe: PeType, f: &dyn Fn(&NormPoint) -> f64| {
+            let v: Vec<f64> = norm
+                .iter()
+                .filter(|p| p.cfg.pe_type == pe)
+                .map(f)
+                .collect();
+            crate::util::stats::median(&v)
+        };
+        assert!(med(PeType::LightPe1, &|p| p.norm_ppa) > 1.5);
+        assert!(med(PeType::LightPe1, &|p| p.norm_energy) < 0.6);
+        assert!(med(PeType::Fp32, &|p| p.norm_energy) > 1.0);
+    }
+
+    #[test]
+    fn pareto_front_min_max_correct() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        let ys = [1.0, 3.0, 2.0, 4.0];
+        // (1,1) kept; (2,3) kept; (3,2) dominated by (2,3); (4,4) kept.
+        assert_eq!(pareto_front_min_max(&xs, &ys), vec![0, 1, 3]);
+    }
+
+    #[test]
+    fn pareto_front_handles_duplicates() {
+        let xs = [1.0, 1.0, 2.0];
+        let ys = [5.0, 5.0, 6.0];
+        let f = pareto_front_min_max(&xs, &ys);
+        assert_eq!(f.len(), 2); // one of the dups + the better-y point
+    }
+
+    #[test]
+    fn best_per_pe_returns_all_types() {
+        let m = models();
+        let layers = &zoo::resnet_cifar(20, Dataset::Cifar10).layers;
+        let pts = evaluate_space(&m, &small_space(), layers, 2);
+        let best = best_per_pe(&pts, |p| p.perf_per_area);
+        assert_eq!(best.len(), 4);
+        for (pe, p) in best {
+            assert_eq!(p.cfg.pe_type, pe);
+        }
+    }
+}

@@ -1,0 +1,27 @@
+//! QUIDAM — quantization-aware DNN accelerator and model co-exploration.
+//!
+//! Rust reproduction of Inci et al., 2022 (see DESIGN.md). Layer 3 of the
+//! three-layer stack: the DSE framework, synthesis oracle, dataflow
+//! simulator, polynomial PPA models, co-exploration engine, RTL generator,
+//! and the PJRT runtime that executes the JAX/Pallas AOT artifacts.
+
+pub mod accuracy;
+pub mod bench_harness;
+pub mod coexplore;
+pub mod config;
+pub mod coordinator;
+pub mod dataflow;
+pub mod dse;
+pub mod models;
+pub mod pe;
+pub mod ppa;
+pub mod quant;
+pub mod regression;
+pub mod report;
+pub mod rtl;
+pub mod runtime;
+pub mod simulator;
+pub mod synthesis;
+pub mod tech;
+pub mod trainer;
+pub mod util;

@@ -1,0 +1,172 @@
+//! QUIDAM CLI — leader entrypoint for the L3 coordinator.
+//!
+//! Subcommands mirror the pipeline stages (DESIGN.md §5 maps each figure
+//! command to the paper):
+//!
+//!   quidam characterize [--cfgs N] [--degree D] [--models PATH]
+//!   quidam evaluate     --pe TYPE [--rows R --cols C ...]
+//!   quidam figures      [--out DIR] [--samples N] (all figures + tables)
+//!   quidam fig4|fig5|fig678|fig9|fig10|fig12|table3|table4|speedup
+//!   quidam coexplore    [--archs N]
+//!   quidam rtl          --pe TYPE [--out-file FILE]
+//!   quidam train        --pe TYPE [--steps N] (PJRT QAT on synth-CIFAR)
+//!   quidam eval-trained (train + accuracy for every PE type)
+
+use std::path::PathBuf;
+
+use quidam::config::AcceleratorConfig;
+use quidam::coordinator::{figures, Coordinator};
+use quidam::dse;
+use quidam::models::{zoo, Dataset};
+use quidam::pe::PeType;
+use quidam::report::render_table;
+use quidam::rtl::verilog;
+use quidam::trainer::{data::SynthDataset, Trainer};
+use quidam::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let sub = args.subcommand.clone().unwrap_or_else(|| "help".into());
+    match run(&sub, &args) {
+        Ok(()) => {}
+        Err(e) => {
+            eprintln!("quidam {sub}: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}
+
+fn models_for(coord: &Coordinator, args: &Args) -> quidam::ppa::PpaModels {
+    let cache = PathBuf::from(args.get_or("models", "artifacts/ppa_models.json"));
+    let cfgs = args.usize_or("cfgs", 240);
+    let degree = args.usize_or("degree", 5) as u32;
+    coord.load_or_build_models(&cache, cfgs, degree, args.usize_or("seed", 42) as u64)
+}
+
+fn run(sub: &str, args: &Args) -> anyhow::Result<()> {
+    let coord = Coordinator::default();
+    let out = PathBuf::from(args.get_or("out", "results"));
+    std::fs::create_dir_all(&out).ok();
+    let samples = args.usize_or("samples", 2000);
+    match sub {
+        "characterize" => {
+            let m = models_for(&coord, args);
+            println!(
+                "fit degree-{} models for {} PE types -> {}",
+                m.degree,
+                m.per_pe.len(),
+                args.get_or("models", "artifacts/ppa_models.json")
+            );
+        }
+        "evaluate" => {
+            let m = models_for(&coord, args);
+            let pe = PeType::from_name(&args.get_or("pe", "lightpe1"))
+                .map_err(anyhow::Error::msg)?;
+            let mut cfg = AcceleratorConfig::baseline(pe);
+            cfg.rows = args.usize_or("rows", cfg.rows);
+            cfg.cols = args.usize_or("cols", cfg.cols);
+            cfg.sp_if = args.usize_or("sp-if", cfg.sp_if);
+            cfg.sp_fw = args.usize_or("sp-fw", cfg.sp_fw);
+            cfg.sp_ps = args.usize_or("sp-ps", cfg.sp_ps);
+            cfg.gb_kib = args.usize_or("gb", cfg.gb_kib);
+            cfg.validate().map_err(anyhow::Error::msg)?;
+            let net = zoo::resnet_cifar(20, Dataset::Cifar10);
+            let p = dse::evaluate(&m, &cfg, &net.layers);
+            println!("{}", render_table(
+                &format!("QUIDAM estimate: {} on {}", pe, net.name),
+                &["metric", "value"],
+                &[
+                    vec!["latency".into(), format!("{:.3} ms", p.latency_s * 1e3)],
+                    vec!["power".into(), format!("{:.1} mW", p.power_mw)],
+                    vec!["area".into(), format!("{:.2} mm2", p.area_um2 / 1e6)],
+                    vec!["energy".into(), format!("{:.3} mJ", p.energy_j * 1e3)],
+                    vec!["perf/area".into(), format!("{:.3e} 1/s/um2", p.perf_per_area)],
+                ],
+            ));
+        }
+        "figures" => {
+            let m = models_for(&coord, args);
+            print!("{}", figures::fig4(&coord, &m, &out, samples));
+            print!("{}", figures::fig5(&coord, &out, args.usize_or("fig5-cfgs", 600)));
+            print!("{}", figures::fig678(&coord, &m, &out, 60));
+            print!("{}", figures::fig9(&coord, &m, &out, samples / 2));
+            print!("{}", figures::fig10_11_table2(&coord, &m, &out, samples));
+            print!("{}", figures::fig12(&coord, &m, &out, args.usize_or("archs", 1000)));
+            print!("{}", figures::table3(&coord, &out));
+            print!("{}", figures::table4(&out));
+            print!("{}", figures::speedup(&coord, &m, &out, 200));
+            println!("CSV outputs in {}", out.display());
+        }
+        "fig4" => print!("{}", figures::fig4(&coord, &models_for(&coord, args), &out, samples)),
+        "fig5" => print!("{}", figures::fig5(&coord, &out, args.usize_or("fig5-cfgs", 600))),
+        "fig678" => print!("{}", figures::fig678(&coord, &models_for(&coord, args), &out, 60)),
+        "fig9" => print!("{}", figures::fig9(&coord, &models_for(&coord, args), &out, samples / 2)),
+        "fig10" | "fig11" | "table2" => print!("{}",
+            figures::fig10_11_table2(&coord, &models_for(&coord, args), &out, samples)),
+        "fig12" | "coexplore" => print!("{}",
+            figures::fig12(&coord, &models_for(&coord, args), &out,
+                           args.usize_or("archs", 1000))),
+        "table3" => print!("{}", figures::table3(&coord, &out)),
+        "table4" => print!("{}", figures::table4(&out)),
+        "speedup" => print!("{}",
+            figures::speedup(&coord, &models_for(&coord, args), &out, 200)),
+        "rtl" => {
+            let pe = PeType::from_name(&args.get_or("pe", "lightpe1"))
+                .map_err(anyhow::Error::msg)?;
+            let cfg = AcceleratorConfig::baseline(pe);
+            let v = verilog::generate_design(&cfg);
+            match args.get("out-file") {
+                Some(path) => {
+                    std::fs::write(path, &v)?;
+                    println!("wrote {} bytes of Verilog to {path}", v.len());
+                }
+                None => print!("{v}"),
+            }
+        }
+        "train" | "eval-trained" => {
+            let dir = args.get_or("artifacts", "artifacts");
+            let mut rt = quidam::runtime::Runtime::new(dir)?;
+            println!("PJRT platform: {}", rt.platform());
+            let pes: Vec<PeType> = if sub == "train" {
+                vec![PeType::from_name(&args.get_or("pe", "lightpe2"))
+                    .map_err(anyhow::Error::msg)?]
+            } else {
+                PeType::ALL.to_vec()
+            };
+            let steps = args.usize_or("steps", 300);
+            let image = rt.manifest.model.get("image_size").as_usize().unwrap_or(16);
+            let classes = rt.manifest.model.get("num_classes").as_usize().unwrap_or(10);
+            let train_ds = SynthDataset::generate(4096, image, classes, 7);
+            let test_ds = SynthDataset::generate(1024, image, classes, 8);
+            let mut rows = Vec::new();
+            for pe in pes {
+                let mut tr = Trainer::new(&rt, pe, 42)?;
+                let logs = tr.train(&mut rt, &train_ds, steps, 0.05, 9, |l| {
+                    if l.step % 25 == 0 {
+                        println!("  [{}] step {:4}  loss {:.4}  lr {:.4}",
+                                 pe, l.step, l.loss, l.lr);
+                    }
+                })?;
+                let acc = tr.evaluate(&mut rt, &test_ds)?;
+                println!("{}: final loss {:.4}, synth-CIFAR top-1 {:.2}%",
+                         pe, logs.last().unwrap().loss, acc);
+                rows.push(vec![pe.name().into(),
+                               format!("{:.4}", logs.last().unwrap().loss),
+                               format!("{acc:.2}")]);
+            }
+            if rows.len() > 1 {
+                println!("{}", render_table("QAT on synth-CIFAR (PJRT)",
+                    &["pe", "final loss", "top-1 %"], &rows));
+            }
+        }
+        _ => {
+            println!(
+                "QUIDAM — quantization-aware DNN accelerator + model co-exploration\n\
+                 usage: quidam <characterize|evaluate|figures|fig4|fig5|fig678|fig9|\n\
+                 fig10|fig12|table3|table4|speedup|coexplore|rtl|train|eval-trained>\n\
+                 common flags: --models PATH --cfgs N --degree D --samples N --out DIR"
+            );
+        }
+    }
+    Ok(())
+}

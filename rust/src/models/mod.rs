@@ -1,0 +1,136 @@
+//! DNN workload descriptions — the model half of the co-exploration space.
+//!
+//! Layer records carry exactly the features the paper's latency model uses
+//! (§3.3): ifmap dimension A, input channels C, filter count F, kernel K,
+//! stride S, padding P, plus the ResNet skip-connection indicators RS/DS.
+
+pub mod nas;
+pub mod zoo;
+
+/// One convolutional (or fc-as-conv) layer.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ConvLayer {
+    pub name: String,
+    /// Input feature-map spatial dimension (square), the paper's `A`.
+    pub a: usize,
+    /// Input channels `C`.
+    pub c: usize,
+    /// Filters `F` (output channels).
+    pub f: usize,
+    /// Kernel size `K` (square).
+    pub k: usize,
+    /// Stride `S`.
+    pub s: usize,
+    /// Padding `P`.
+    pub p: usize,
+    /// Regular skip connection entering this layer (ResNet identity), `RS`.
+    pub rs: bool,
+    /// Dotted (projection / downsampling) skip connection, `DS`.
+    pub ds: bool,
+}
+
+impl ConvLayer {
+    pub fn new(name: &str, a: usize, c: usize, f: usize, k: usize, s: usize,
+               p: usize) -> ConvLayer {
+        ConvLayer {
+            name: name.to_string(),
+            a, c, f, k, s, p,
+            rs: false,
+            ds: false,
+        }
+    }
+
+    /// Output spatial dimension E = (A + 2P - K)/S + 1.
+    pub fn out_dim(&self) -> usize {
+        (self.a + 2 * self.p - self.k) / self.s + 1
+    }
+
+    /// Multiply-accumulates for this layer.
+    pub fn macs(&self) -> u64 {
+        let e = self.out_dim() as u64;
+        e * e * (self.k * self.k * self.c * self.f) as u64
+    }
+
+    /// Weight count.
+    pub fn weights(&self) -> u64 {
+        (self.k * self.k * self.c * self.f) as u64
+    }
+
+    /// Ifmap elements.
+    pub fn ifmap_elems(&self) -> u64 {
+        (self.a * self.a * self.c) as u64
+    }
+
+    /// Ofmap elements.
+    pub fn ofmap_elems(&self) -> u64 {
+        let e = self.out_dim() as u64;
+        e * e * self.f as u64
+    }
+}
+
+/// A whole network = named sequence of conv layers (pool/fc folded in).
+#[derive(Debug, Clone)]
+pub struct DnnModel {
+    pub name: String,
+    pub dataset: Dataset,
+    pub layers: Vec<ConvLayer>,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Dataset {
+    Cifar10,
+    Cifar100,
+    ImageNet,
+}
+
+impl Dataset {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Dataset::Cifar10 => "cifar10",
+            Dataset::Cifar100 => "cifar100",
+            Dataset::ImageNet => "imagenet",
+        }
+    }
+    pub fn classes(&self) -> usize {
+        match self {
+            Dataset::Cifar10 => 10,
+            Dataset::Cifar100 => 100,
+            Dataset::ImageNet => 1000,
+        }
+    }
+    pub fn image_size(&self) -> usize {
+        match self {
+            Dataset::Cifar10 | Dataset::Cifar100 => 32,
+            Dataset::ImageNet => 224,
+        }
+    }
+}
+
+impl DnnModel {
+    pub fn total_macs(&self) -> u64 {
+        self.layers.iter().map(|l| l.macs()).sum()
+    }
+    pub fn total_weights(&self) -> u64 {
+        self.layers.iter().map(|l| l.weights()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn out_dim_and_macs() {
+        let l = ConvLayer::new("c", 32, 3, 16, 3, 1, 1);
+        assert_eq!(l.out_dim(), 32);
+        assert_eq!(l.macs(), 32 * 32 * 3 * 3 * 3 * 16);
+        let s2 = ConvLayer::new("s2", 32, 16, 32, 3, 2, 1);
+        assert_eq!(s2.out_dim(), 16);
+    }
+
+    #[test]
+    fn dataset_metadata() {
+        assert_eq!(Dataset::Cifar100.classes(), 100);
+        assert_eq!(Dataset::ImageNet.image_size(), 224);
+    }
+}

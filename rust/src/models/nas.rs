@@ -1,0 +1,177 @@
+//! Table 4 — the co-exploration neural-architecture search space.
+//!
+//! Five Conv-BN-ReLU stages separated by MaxPools; per-stage repetition and
+//! channel choices exactly as Table 4, giving 110,592 candidates whose
+//! largest member is VGG-16-shaped.
+
+use super::{ConvLayer, Dataset, DnnModel};
+use crate::util::rng::Rng;
+
+/// Per-stage choice lists (Table 4).
+pub const REPS: [&[usize]; 5] = [
+    &[1, 2],
+    &[1, 2],
+    &[1, 2, 3],
+    &[1, 2, 3],
+    &[1, 2, 3],
+];
+pub const CHANNELS: [&[usize]; 5] = [
+    &[40, 48, 56, 64],
+    &[80, 96, 112, 128],
+    &[160, 192, 224, 256],
+    &[320, 384, 448, 512],
+    &[320, 384, 448, 512],
+];
+
+/// One candidate architecture: (rep index, channel index) per stage.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ArchId {
+    pub reps: [usize; 5],
+    pub chans: [usize; 5],
+}
+
+/// Total search-space size (paper: 110,592).
+pub fn space_size() -> usize {
+    (0..5).map(|i| REPS[i].len() * CHANNELS[i].len()).product()
+}
+
+/// Decode the i-th point of the space (mixed radix over stages).
+pub fn decode(mut i: usize) -> ArchId {
+    let mut reps = [0usize; 5];
+    let mut chans = [0usize; 5];
+    for s in 0..5 {
+        reps[s] = i % REPS[s].len();
+        i /= REPS[s].len();
+        chans[s] = i % CHANNELS[s].len();
+        i /= CHANNELS[s].len();
+    }
+    ArchId { reps, chans }
+}
+
+/// Encode back to the index (inverse of `decode`).
+pub fn encode(a: &ArchId) -> usize {
+    let mut i = 0usize;
+    let mut mul = 1usize;
+    for s in 0..5 {
+        i += a.reps[s] * mul;
+        mul *= REPS[s].len();
+        i += a.chans[s] * mul;
+        mul *= CHANNELS[s].len();
+    }
+    i
+}
+
+impl ArchId {
+    /// The largest configuration == VGG-16-shaped anchor (Table 4 text).
+    pub fn largest() -> ArchId {
+        ArchId {
+            reps: [
+                REPS[0].len() - 1,
+                REPS[1].len() - 1,
+                REPS[2].len() - 1,
+                REPS[3].len() - 1,
+                REPS[4].len() - 1,
+            ],
+            chans: [3, 3, 3, 3, 3],
+        }
+    }
+
+    pub fn sample(rng: &mut Rng) -> ArchId {
+        let mut reps = [0usize; 5];
+        let mut chans = [0usize; 5];
+        for s in 0..5 {
+            reps[s] = rng.below(REPS[s].len());
+            chans[s] = rng.below(CHANNELS[s].len());
+        }
+        ArchId { reps, chans }
+    }
+
+    pub fn stage_reps(&self, s: usize) -> usize {
+        REPS[s][self.reps[s]]
+    }
+
+    pub fn stage_channels(&self, s: usize) -> usize {
+        CHANNELS[s][self.chans[s]]
+    }
+
+    /// Materialize as a DnnModel on a CIFAR-sized input.
+    pub fn to_model(&self, dataset: Dataset) -> DnnModel {
+        let mut layers = Vec::new();
+        let mut a = dataset.image_size();
+        let mut c = 3;
+        for s in 0..5 {
+            let ch = self.stage_channels(s);
+            for r in 0..self.stage_reps(s) {
+                layers.push(ConvLayer::new(
+                    &format!("s{}c{}", s, r), a, c, ch, 3, 1, 1,
+                ));
+                c = ch;
+            }
+            a = (a / 2).max(1); // MaxPool between stages
+        }
+        layers.push(ConvLayer::new("fc", 1, c, dataset.classes(), 1, 1, 0));
+        DnnModel {
+            name: format!("nas{}", encode(self)),
+            dataset,
+            layers,
+        }
+    }
+
+    /// Capacity proxy: total weights relative to the largest member.
+    pub fn relative_capacity(&self) -> f64 {
+        let me = self.to_model(Dataset::Cifar10).total_weights() as f64;
+        let big = ArchId::largest().to_model(Dataset::Cifar10).total_weights()
+            as f64;
+        me / big
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::Prop;
+
+    #[test]
+    fn space_size_matches_paper() {
+        assert_eq!(space_size(), 110_592);
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        Prop::quick(300).check(space_size(), |rng, _| {
+            let i = rng.below(space_size());
+            let a = decode(i);
+            if encode(&a) != i {
+                return Err(format!("roundtrip broke at {i}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn largest_is_vgg16_shaped() {
+        let m = ArchId::largest().to_model(Dataset::Cifar10);
+        // 2+2+3+3+3 convs + fc
+        assert_eq!(m.layers.len(), 13 + 1);
+        assert_eq!(m.layers[12].f, 512);
+    }
+
+    #[test]
+    fn capacity_monotone_in_channels() {
+        let small = ArchId { reps: [0; 5], chans: [0; 5] };
+        let big = ArchId::largest();
+        assert!(small.relative_capacity() < big.relative_capacity());
+        assert!((big.relative_capacity() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sampled_archs_valid() {
+        let mut rng = Rng::new(11);
+        for _ in 0..50 {
+            let a = ArchId::sample(&mut rng);
+            let m = a.to_model(Dataset::Cifar10);
+            assert!(m.layers.len() >= 5 + 1);
+            assert!(encode(&a) < space_size());
+        }
+    }
+}

@@ -1,0 +1,224 @@
+//! The paper's evaluation workloads (§4): VGG-16, ResNet-20/34/50/56 on
+//! CIFAR-10/100 and ImageNet. Layer tables follow the original papers
+//! ([44], [16]) with the CIFAR-style ResNet stem for depth-20/56.
+
+use super::{ConvLayer, Dataset, DnnModel};
+
+/// VGG-16 (configuration D) — conv layers only, pooling folded into the
+/// ifmap sizes; the classifier is costed as 1x1 convs over the pooled map.
+pub fn vgg16(dataset: Dataset) -> DnnModel {
+    let a0 = dataset.image_size();
+    let stages: [(usize, usize); 5] =
+        [(2, 64), (2, 128), (3, 256), (3, 512), (3, 512)];
+    let mut layers = Vec::new();
+    let mut a = a0;
+    let mut c = 3;
+    for (si, (reps, ch)) in stages.iter().enumerate() {
+        for r in 0..*reps {
+            layers.push(ConvLayer::new(
+                &format!("conv{}_{}", si + 1, r + 1), a, c, *ch, 3, 1, 1,
+            ));
+            c = *ch;
+        }
+        a /= 2; // 2x2 max-pool after each stage
+    }
+    // Classifier: fc6/fc7/fc8 as 1x1 convs on the a x a pooled map (a=1 for
+    // CIFAR after 5 pools on 32px; a=7 for ImageNet).
+    let fc_dims: [usize; 2] = [4096, 4096];
+    let mut cin = c * a.max(1) * a.max(1);
+    let mut fc_a = 1;
+    // Fold the spatial tail into channels for the first fc.
+    let _ = &mut fc_a;
+    for (i, d) in fc_dims.iter().enumerate() {
+        layers.push(ConvLayer::new(&format!("fc{}", i + 6), 1, cin, *d, 1, 1, 0));
+        cin = *d;
+    }
+    layers.push(ConvLayer::new("fc8", 1, cin, dataset.classes(), 1, 1, 0));
+    DnnModel { name: "vgg16".into(), dataset, layers }
+}
+
+/// CIFAR-style ResNet (He et al. §4.2): 6n+2 layers, n blocks per stage,
+/// stages at 16/32/64 channels on 32/16/8 px maps. depth = 20 -> n=3,
+/// depth = 56 -> n=9.
+pub fn resnet_cifar(depth: usize, dataset: Dataset) -> DnnModel {
+    assert!(depth % 6 == 2, "CIFAR ResNet depth must be 6n+2");
+    let n = (depth - 2) / 6;
+    let mut layers = vec![ConvLayer::new("stem", 32, 3, 16, 3, 1, 1)];
+    let mut c = 16;
+    let mut a = 32;
+    for (si, ch) in [16usize, 32, 64].iter().enumerate() {
+        for b in 0..n {
+            let stride = if si > 0 && b == 0 { 2 } else { 1 };
+            let mut l1 = ConvLayer::new(
+                &format!("s{}b{}c1", si, b), a, c, *ch, 3, stride, 1,
+            );
+            // Block entry: dotted (projection) skip when shape changes,
+            // regular skip otherwise.
+            if stride == 2 || c != *ch {
+                l1.ds = true;
+            } else {
+                l1.rs = true;
+            }
+            let a_out = l1.out_dim();
+            let mut l2 = ConvLayer::new(
+                &format!("s{}b{}c2", si, b), a_out, *ch, *ch, 3, 1, 1,
+            );
+            l2.rs = true;
+            layers.push(l1);
+            layers.push(l2);
+            c = *ch;
+            a = a_out;
+        }
+    }
+    layers.push(ConvLayer::new("fc", 1, c, dataset.classes(), 1, 1, 0));
+    DnnModel { name: format!("resnet{depth}"), dataset, layers }
+}
+
+/// ImageNet ResNet-34 (basic blocks: [3,4,6,3] at 64/128/256/512).
+pub fn resnet34() -> DnnModel {
+    let mut layers = vec![ConvLayer::new("stem", 224, 3, 64, 7, 2, 3)];
+    let mut a = 56; // after stride-2 stem + 3x3/2 max-pool
+    let mut c = 64;
+    for (si, (blocks, ch)) in
+        [(3usize, 64usize), (4, 128), (6, 256), (3, 512)].iter().enumerate()
+    {
+        for b in 0..*blocks {
+            let stride = if si > 0 && b == 0 { 2 } else { 1 };
+            let mut l1 = ConvLayer::new(
+                &format!("s{}b{}c1", si, b), a, c, *ch, 3, stride, 1,
+            );
+            if stride == 2 || c != *ch {
+                l1.ds = true;
+            } else {
+                l1.rs = true;
+            }
+            let a_out = l1.out_dim();
+            let mut l2 = ConvLayer::new(
+                &format!("s{}b{}c2", si, b), a_out, *ch, *ch, 3, 1, 1,
+            );
+            l2.rs = true;
+            layers.push(l1);
+            layers.push(l2);
+            a = a_out;
+            c = *ch;
+        }
+    }
+    layers.push(ConvLayer::new("fc", 1, c, 1000, 1, 1, 0));
+    DnnModel { name: "resnet34".into(), dataset: Dataset::ImageNet, layers }
+}
+
+/// ImageNet ResNet-50 (bottleneck blocks: [3,4,6,3] at 256/512/1024/2048).
+pub fn resnet50() -> DnnModel {
+    let mut layers = vec![ConvLayer::new("stem", 224, 3, 64, 7, 2, 3)];
+    let mut a = 56;
+    let mut c = 64;
+    for (si, (blocks, mid)) in
+        [(3usize, 64usize), (4, 128), (6, 256), (3, 512)].iter().enumerate()
+    {
+        let out = mid * 4;
+        for b in 0..*blocks {
+            let stride = if si > 0 && b == 0 { 2 } else { 1 };
+            let mut l1 = ConvLayer::new(
+                &format!("s{}b{}c1", si, b), a, c, *mid, 1, 1, 0,
+            );
+            if b == 0 {
+                l1.ds = true;
+            } else {
+                l1.rs = true;
+            }
+            let mut l2 = ConvLayer::new(
+                &format!("s{}b{}c2", si, b), a, *mid, *mid, 3, stride, 1,
+            );
+            l2.rs = b != 0;
+            let a_out = l2.out_dim();
+            let mut l3 = ConvLayer::new(
+                &format!("s{}b{}c3", si, b), a_out, *mid, out, 1, 1, 0,
+            );
+            l3.rs = true;
+            layers.push(l1);
+            layers.push(l2);
+            layers.push(l3);
+            a = a_out;
+            c = out;
+        }
+    }
+    layers.push(ConvLayer::new("fc", 1, c, 1000, 1, 1, 0));
+    DnnModel { name: "resnet50".into(), dataset: Dataset::ImageNet, layers }
+}
+
+/// The paper's CIFAR workload set (§4.2): VGG-16, ResNet-20, ResNet-56.
+pub fn cifar_suite(dataset: Dataset) -> Vec<DnnModel> {
+    vec![
+        vgg16(dataset),
+        resnet_cifar(20, dataset),
+        resnet_cifar(56, dataset),
+    ]
+}
+
+/// The paper's ImageNet workload set (§4.2): VGG-16, ResNet-34, ResNet-50.
+pub fn imagenet_suite() -> Vec<DnnModel> {
+    vec![vgg16(Dataset::ImageNet), resnet34(), resnet50()]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vgg16_has_13_convs_plus_3_fc() {
+        let m = vgg16(Dataset::Cifar10);
+        assert_eq!(m.layers.len(), 16);
+        // ~15M weights for the conv trunk at CIFAR scale is in family.
+        assert!(m.total_weights() > 10_000_000);
+    }
+
+    #[test]
+    fn vgg16_imagenet_macs_in_family() {
+        // Published VGG-16 @224px: ~15.5 GMACs for the conv layers.
+        let m = vgg16(Dataset::ImageNet);
+        let g = m.total_macs() as f64 / 1e9;
+        assert!(g > 14.0 && g < 17.5, "got {g} GMACs");
+    }
+
+    #[test]
+    fn resnet20_structure() {
+        let m = resnet_cifar(20, Dataset::Cifar10);
+        // stem + 18 convs + fc
+        assert_eq!(m.layers.len(), 1 + 18 + 1);
+        // Published: ~0.27M params, ~40.8 MMACs.
+        let params = m.total_weights() as f64 / 1e6;
+        assert!(params > 0.2 && params < 0.35, "params {params}M");
+        let mm = m.total_macs() as f64 / 1e6;
+        assert!(mm > 35.0 && mm < 50.0, "macs {mm}M");
+    }
+
+    #[test]
+    fn resnet56_deeper_than_20() {
+        let m20 = resnet_cifar(20, Dataset::Cifar10);
+        let m56 = resnet_cifar(56, Dataset::Cifar10);
+        assert_eq!(m56.layers.len(), 1 + 54 + 1);
+        assert!(m56.total_macs() > 2 * m20.total_macs());
+    }
+
+    #[test]
+    fn resnet50_macs_in_family() {
+        // Published ResNet-50: ~3.8-4.1 GMACs.
+        let g = resnet50().total_macs() as f64 / 1e9;
+        assert!(g > 3.2 && g < 4.8, "got {g} GMACs");
+    }
+
+    #[test]
+    fn skip_flags_present_on_resnets() {
+        let m = resnet_cifar(20, Dataset::Cifar10);
+        assert!(m.layers.iter().any(|l| l.rs));
+        assert!(m.layers.iter().any(|l| l.ds));
+        // VGG has none.
+        assert!(!vgg16(Dataset::Cifar10).layers.iter().any(|l| l.rs || l.ds));
+    }
+
+    #[test]
+    fn suites_match_paper() {
+        assert_eq!(cifar_suite(Dataset::Cifar10).len(), 3);
+        assert_eq!(imagenet_suite().len(), 3);
+    }
+}

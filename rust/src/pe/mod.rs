@@ -1,0 +1,265 @@
+//! Processing-element microarchitecture + gate-level cost composition.
+//!
+//! Paper Fig. 3: every PE has four FIFOs (ifmap, filter, psum-in, psum-out),
+//! three scratchpads (SP_if, SP_fw, SP_ps), an arithmetic unit that differs
+//! per PE type, and two accumulation muxes. The four PE types:
+//!
+//!   FP32     — fp32 multiplier + fp32 adder            (Fig 3a)
+//!   INT16    — 16x16 array multiplier + 32-bit adder    (Fig 3b)
+//!   LightPE-1 — code decode + 1 barrel shift + 20b add  (Fig 3c, w = ±2^-m)
+//!   LightPE-2 — decode + 2 shifts + 16b add + 20b add   (Fig 3d,
+//!               w = ±(2^-m1 + 2^-m2))
+//!
+//! Gate-depth constants are calibrated so the full-design clock frequencies
+//! of `synthesis` reproduce the paper's Table 3 within a few percent (see
+//! `synthesis::tests::table3_clock_frequencies`).
+
+use crate::tech::TechLibrary;
+
+/// The paper's four processing-element types.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum PeType {
+    Fp32,
+    Int16,
+    LightPe2,
+    LightPe1,
+}
+
+impl PeType {
+    pub const ALL: [PeType; 4] =
+        [PeType::Fp32, PeType::Int16, PeType::LightPe2, PeType::LightPe1];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            PeType::Fp32 => "fp32",
+            PeType::Int16 => "int16",
+            PeType::LightPe2 => "lightpe2",
+            PeType::LightPe1 => "lightpe1",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Result<PeType, String> {
+        match s {
+            "fp32" => Ok(PeType::Fp32),
+            "int16" => Ok(PeType::Int16),
+            "lightpe2" => Ok(PeType::LightPe2),
+            "lightpe1" => Ok(PeType::LightPe1),
+            other => Err(format!("unknown PE type '{other}'")),
+        }
+    }
+
+    /// Activation bit width (paper §3.2: LightPEs use 8-bit activations).
+    pub fn act_bits(&self) -> usize {
+        match self {
+            PeType::Fp32 => 32,
+            PeType::Int16 => 16,
+            PeType::LightPe1 | PeType::LightPe2 => 8,
+        }
+    }
+
+    /// Weight *storage* bits: FP32 32, INT16 16, LightPE-1 4 (sign + |m|),
+    /// LightPE-2 7 used / 8 stored (sign + |m1| + |m2|).
+    pub fn wgt_bits(&self) -> usize {
+        match self {
+            PeType::Fp32 => 32,
+            PeType::Int16 => 16,
+            PeType::LightPe1 => 4,
+            PeType::LightPe2 => 8,
+        }
+    }
+
+    /// Partial-sum accumulator width.
+    pub fn psum_bits(&self) -> usize {
+        match self {
+            PeType::Fp32 | PeType::Int16 => 32,
+            PeType::LightPe1 | PeType::LightPe2 => 20,
+        }
+    }
+
+    /// Arithmetic-unit logic depth (FO4). Calibrated against Table 3.
+    pub fn arith_depth_fo4(&self) -> f64 {
+        match self {
+            // fp32 multiply (68) + fp32 add (50)
+            PeType::Fp32 => 118.0,
+            // 16x16 array multiply (62) + 32b accumulate add (47)
+            PeType::Int16 => 109.0,
+            // decode + 2 barrel shifts + 16b add + 20b accumulate add
+            PeType::LightPe2 => 66.0,
+            // decode + 1 barrel shift + 20b accumulate add
+            PeType::LightPe1 => 60.0,
+        }
+    }
+
+    /// Arithmetic-unit area (NAND2-equivalent gates).
+    pub fn arith_area_ge(&self) -> f64 {
+        match self {
+            PeType::Fp32 => 11_300.0, // 7500 mult + 3800 add
+            PeType::Int16 => 1_884.0, // 1660 array mult + 224 add
+            PeType::LightPe2 => 552.0, // decode + 2 shifters + 2 adders
+            PeType::LightPe1 => 280.0, // decode + shifter + adder
+        }
+    }
+
+    /// Shift/add op counts per MAC (k shifts, k-1 extra adds) — used by the
+    /// RTL generator and by documentation; the energy model works off
+    /// `arith_area_ge`.
+    pub fn shifts_per_mac(&self) -> usize {
+        match self {
+            PeType::Fp32 | PeType::Int16 => 0,
+            PeType::LightPe1 => 1,
+            PeType::LightPe2 => 2,
+        }
+    }
+}
+
+impl std::fmt::Display for PeType {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// FIFO depth (entries) used by every PE port.
+pub const FIFO_DEPTH: usize = 4;
+
+/// Synthesized cost of a single PE instance.
+#[derive(Debug, Clone, Copy)]
+pub struct PeCost {
+    pub area_um2: f64,
+    /// Dynamic energy of one MAC incl. local scratchpad traffic (fJ).
+    pub e_mac_fj: f64,
+    /// Leakage (mW).
+    pub leak_mw: f64,
+    /// Register-to-register critical path through the PE (ps).
+    pub t_crit_ps: f64,
+}
+
+/// Compose the gate-level cost of one PE for the given scratchpad sizes
+/// (entries). This is the per-PE half of the synthesis oracle; `synthesis`
+/// adds the array, NoC, and global buffer.
+pub fn pe_cost(
+    pe: PeType,
+    sp_if: usize,
+    sp_fw: usize,
+    sp_ps: usize,
+    tech: &TechLibrary,
+) -> PeCost {
+    let act = pe.act_bits();
+    let wgt = pe.wgt_bits();
+    let ps = pe.psum_bits();
+
+    // Scratchpad macros (Fig 3: ifmap, filter, psum).
+    let m_if = tech.sram.macro_for(sp_if, act);
+    let m_fw = tech.sram.macro_for(sp_fw, wgt);
+    let m_ps = tech.sram.macro_for(sp_ps, ps);
+
+    // Four FIFOs: ifmap(act), filter(wgt), psum-in(ps), psum-out(ps).
+    let fifo_bits = (FIFO_DEPTH * (act + wgt + 2 * ps)) as f64;
+    let fifo_ge = fifo_bits * tech.ff_area_ge + 4.0 * 50.0; // + control
+    // Two accumulation muxes (psum select / reset) + pipeline registers +
+    // local control FSM.
+    let mux_ge = 2.0 * 1.5 * ps as f64;
+    let reg_ge = (act + wgt + 2 * ps) as f64 * tech.ff_area_ge;
+    let ctrl_ge = 300.0;
+    let logic_ge =
+        pe.arith_area_ge() + fifo_ge + mux_ge + reg_ge + ctrl_ge;
+
+    let area = tech.area_um2(logic_ge)
+        + m_if.area_um2
+        + m_fw.area_um2
+        + m_ps.area_um2;
+
+    // Critical path: widest scratchpad read -> arithmetic -> accumulation
+    // mux -> flop. (Fig 3 datapath, single-cycle MAC.)
+    let sp_read = m_if.t_access_ps.max(m_fw.t_access_ps).max(m_ps.t_access_ps);
+    let t_crit = sp_read
+        + tech.chain_ps(pe.arith_depth_fo4())
+        + tech.chain_ps(4.0) // mux + wiring slack
+        + tech.ff_ovh_ps;
+
+    // Energy of one MAC: arithmetic toggle + one read from each scratchpad
+    // + psum writeback + amortized FIFO movement (1 transfer / 4 MACs).
+    let e_mac = tech.op_energy_fj(pe.arith_area_ge() + mux_ge)
+        + m_if.e_read_fj
+        + m_fw.e_read_fj
+        + m_ps.e_read_fj
+        + m_ps.e_write_fj
+        + 0.25 * tech.op_energy_fj(fifo_ge);
+
+    let leak = tech.leakage_mw(logic_ge)
+        + m_if.leak_mw
+        + m_fw.leak_mw
+        + m_ps.leak_mw;
+
+    PeCost { area_um2: area, e_mac_fj: e_mac, leak_mw: leak, t_crit_ps: t_crit }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn default_cost(pe: PeType) -> PeCost {
+        pe_cost(pe, 12, 224, 24, &TechLibrary::freepdk45())
+    }
+
+    #[test]
+    fn pe_name_roundtrip() {
+        for pe in PeType::ALL {
+            assert_eq!(PeType::from_name(pe.name()).unwrap(), pe);
+        }
+        assert!(PeType::from_name("int8").is_err());
+    }
+
+    #[test]
+    fn bit_widths_match_paper() {
+        assert_eq!(PeType::LightPe1.wgt_bits(), 4); // sign + 3-bit |m|
+        assert_eq!(PeType::LightPe2.wgt_bits(), 8); // sign + |m1| + |m2|
+        assert_eq!(PeType::LightPe1.act_bits(), 8);
+        assert_eq!(PeType::LightPe2.act_bits(), 8);
+        assert_eq!(PeType::Int16.act_bits(), 16);
+    }
+
+    #[test]
+    fn area_ordering_fp32_int16_lpe2_lpe1() {
+        // Figs 6/8: FP32 highest, LightPEs lowest, for one PE.
+        let a: Vec<f64> =
+            PeType::ALL.iter().map(|&p| default_cost(p).area_um2).collect();
+        assert!(a[0] > a[1], "fp32 {} <= int16 {}", a[0], a[1]);
+        assert!(a[1] > a[2], "int16 {} <= lpe2 {}", a[1], a[2]);
+        assert!(a[2] > a[3], "lpe2 {} <= lpe1 {}", a[2], a[3]);
+    }
+
+    #[test]
+    fn energy_ordering_matches_area_ordering() {
+        let e: Vec<f64> =
+            PeType::ALL.iter().map(|&p| default_cost(p).e_mac_fj).collect();
+        assert!(e[0] > e[1] && e[1] > e[2] && e[2] > e[3], "{e:?}");
+    }
+
+    #[test]
+    fn lightpe_critical_path_shorter() {
+        let t_fp = default_cost(PeType::Fp32).t_crit_ps;
+        let t_l1 = default_cost(PeType::LightPe1).t_crit_ps;
+        assert!(t_l1 < 0.7 * t_fp, "lpe1 {t_l1} vs fp32 {t_fp}");
+    }
+
+    #[test]
+    fn scratchpad_growth_increases_cost_monotonically() {
+        let tech = TechLibrary::freepdk45();
+        let mut prev_area = 0.0;
+        let mut prev_e = 0.0;
+        for sp_fw in [64, 128, 224, 448] {
+            let c = pe_cost(PeType::Int16, 12, sp_fw, 24, &tech);
+            assert!(c.area_um2 > prev_area);
+            assert!(c.e_mac_fj > prev_e);
+            prev_area = c.area_um2;
+            prev_e = c.e_mac_fj;
+        }
+    }
+
+    #[test]
+    fn shift_counts() {
+        assert_eq!(PeType::LightPe1.shifts_per_mac(), 1);
+        assert_eq!(PeType::LightPe2.shifts_per_mac(), 2);
+        assert_eq!(PeType::Fp32.shifts_per_mac(), 0);
+    }
+}

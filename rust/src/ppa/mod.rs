@@ -1,0 +1,440 @@
+//! Pre-characterized PPA models — the heart of the paper's speedup claim.
+//!
+//! Pipeline (§3.3): sample hardware configs, run the synthesis oracle
+//! (power/area ground truth) and the cycle-level simulator over workload
+//! layers (latency ground truth), then fit per-PE-type polynomial models:
+//!
+//!   power  <- f(SP_if, SP_ps, SP_fw, #PE, GBS)                   (5-dim)
+//!   area   <- f(SP_if, SP_ps, SP_fw, #PE, GBS)                   (5-dim)
+//!   latency <- f(SP_if, SP_ps, SP_fw, PE_rows, PE_cols, GBS,
+//!                A, C, F, K, S, P, RS, DS)          (12 + 2 skip features)
+//!
+//! The fitted models answer in ~µs what synthesis + simulation answers in
+//! ~ms-s — the paper's "3-4 orders of magnitude" DSE speedup (§4.1),
+//! measured in benches/bench_speedup.rs.
+
+use std::collections::BTreeMap;
+
+use crate::config::{AcceleratorConfig, SweepSpace};
+use crate::models::ConvLayer;
+use crate::pe::PeType;
+use crate::regression::poly::{Monomial, PolyBasis};
+use crate::regression::{FitOptions, PolyModel};
+use crate::simulator::simulate_layer;
+use crate::synthesis::synthesize;
+use crate::tech::TechLibrary;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// The latency-model feature vector (paper §3.3, 12 dims + RS/DS).
+pub fn latency_features(cfg: &AcceleratorConfig, l: &ConvLayer) -> Vec<f64> {
+    vec![
+        cfg.sp_if as f64,
+        cfg.sp_ps as f64,
+        cfg.sp_fw as f64,
+        cfg.rows as f64,
+        cfg.cols as f64,
+        cfg.gb_kib as f64,
+        l.a as f64,
+        l.c as f64,
+        l.f as f64,
+        l.k as f64,
+        l.s as f64,
+        l.p as f64,
+        f64::from(l.rs),
+        f64::from(l.ds),
+        // Derived: total MACs — log-linear in the log-feature space and the
+        // dominant latency term; a deviation from the paper's 12-dim vector
+        // documented in DESIGN.md §2.
+        l.macs() as f64,
+    ]
+}
+
+/// Ground-truth characterization rows for one PE type.
+#[derive(Debug, Clone, Default)]
+pub struct CharData {
+    pub power_x: Vec<Vec<f64>>,
+    pub power_y: Vec<f64>,
+    pub area_x: Vec<Vec<f64>>,
+    pub area_y: Vec<f64>,
+    pub lat_x: Vec<Vec<f64>>,
+    pub lat_y: Vec<f64>,
+    /// (config, fclk) pairs actually characterized (for reports).
+    pub configs: Vec<(AcceleratorConfig, f64)>,
+}
+
+/// Run the slow flow (synthesis + simulation) over `n_cfgs` sampled configs
+/// of one PE type, collecting regression rows. `layers` are the workload
+/// layers characterized for the latency model.
+pub fn characterize(
+    space: &SweepSpace,
+    pe: PeType,
+    layers: &[ConvLayer],
+    n_cfgs: usize,
+    tech: &TechLibrary,
+    seed: u64,
+) -> CharData {
+    let space = space.for_pe(pe);
+    let mut rng = Rng::new(seed ^ pe as u64);
+    let mut data = CharData::default();
+    let mut seen = std::collections::BTreeSet::new();
+    let mut tries = 0;
+    while data.configs.len() < n_cfgs && tries < n_cfgs * 20 {
+        tries += 1;
+        let cfg = space.sample(&mut rng);
+        // Dedup on the sampled grid point.
+        let key = format!("{cfg:?}");
+        if !seen.insert(key) {
+            continue;
+        }
+        let syn = synthesize(&cfg, tech);
+        data.power_x.push(cfg.ppa_features());
+        data.power_y.push(syn.power_mw);
+        data.area_x.push(cfg.ppa_features());
+        data.area_y.push(syn.area_um2);
+        for l in layers {
+            let perf = simulate_layer(&cfg, l, syn.fclk_mhz, tech);
+            data.lat_x.push(latency_features(&cfg, l));
+            data.lat_y.push(perf.latency_s);
+        }
+        data.configs.push((cfg, syn.fclk_mhz));
+    }
+    data
+}
+
+/// Fitted power/performance/area models for one PE type.
+#[derive(Debug, Clone)]
+pub struct PeModels {
+    pub power: PolyModel,
+    pub area: PolyModel,
+    pub latency: PolyModel,
+}
+
+/// The full pre-characterized model store (one entry per PE type).
+#[derive(Debug, Clone)]
+pub struct PpaModels {
+    pub per_pe: BTreeMap<PeType, PeModels>,
+    pub degree: u32,
+}
+
+/// Default fit: degree 5 for the 4-dim power/area models (paper Fig 5);
+/// the 14-dim latency model keeps degree 5 but caps monomials at 2
+/// interacting variables to keep the normal equations tractable
+/// (DESIGN.md §2).
+pub fn default_fit_options(degree: u32) -> (FitOptions, FitOptions) {
+    // Power/area fit in log space over log features: they are products /
+    // sums of feature powers, and log-target guarantees positive
+    // predictions even when the DSE samples outside the characterized
+    // hull (linear-space extrapolation produced negative power).
+    let ppa = FitOptions { max_degree: degree, max_vars: 3, ridge: 1e-8, log_target: true, log_features: true };
+    let lat = FitOptions { max_degree: degree, max_vars: 2, ridge: 1e-8, log_target: true, log_features: true };
+    (ppa, lat)
+}
+
+impl PpaModels {
+    pub fn fit(char_data: &BTreeMap<PeType, CharData>, degree: u32) -> PpaModels {
+        let (ppa_opt, lat_opt) = default_fit_options(degree);
+        let mut per_pe = BTreeMap::new();
+        for (&pe, d) in char_data {
+            per_pe.insert(pe, PeModels {
+                power: PolyModel::fit(&d.power_x, &d.power_y, ppa_opt),
+                area: PolyModel::fit(&d.area_x, &d.area_y, ppa_opt),
+                latency: PolyModel::fit(&d.lat_x, &d.lat_y, lat_opt),
+            });
+        }
+        PpaModels { per_pe, degree }
+    }
+
+    pub fn models(&self, pe: PeType) -> &PeModels {
+        self.per_pe
+            .get(&pe)
+            .unwrap_or_else(|| panic!("no models fit for {pe}"))
+    }
+
+    /// Predicted power (mW).
+    pub fn power_mw(&self, cfg: &AcceleratorConfig) -> f64 {
+        self.models(cfg.pe_type).power.predict(&cfg.ppa_features())
+    }
+
+    /// Predicted area (µm²).
+    pub fn area_um2(&self, cfg: &AcceleratorConfig) -> f64 {
+        self.models(cfg.pe_type).area.predict(&cfg.ppa_features())
+    }
+
+    /// Predicted per-layer latency (s), clamped to a physical range so
+    /// log-space extrapolation far outside the characterized feature hull
+    /// cannot produce inf/NaN downstream.
+    pub fn layer_latency_s(&self, cfg: &AcceleratorConfig, l: &ConvLayer) -> f64 {
+        let v = self
+            .models(cfg.pe_type)
+            .latency
+            .predict(&latency_features(cfg, l));
+        if v.is_finite() {
+            v.clamp(1e-9, 1e4)
+        } else {
+            1e4
+        }
+    }
+
+    /// Network latency = Σ layer latencies (paper's layer-level strategy).
+    /// Identical layer shapes (ResNet blocks repeat) are predicted once
+    /// and multiplied — a pure hot-path optimization (EXPERIMENTS.md §Perf).
+    pub fn network_latency_s(
+        &self,
+        cfg: &AcceleratorConfig,
+        layers: &[ConvLayer],
+    ) -> f64 {
+        // Layer lists are short (tens); a linear scan beats hashing.
+        let mut uniq: Vec<(&ConvLayer, usize)> = Vec::with_capacity(layers.len());
+        'outer: for l in layers {
+            for (u, count) in &mut uniq {
+                if u.a == l.a && u.c == l.c && u.f == l.f && u.k == l.k
+                    && u.s == l.s && u.p == l.p && u.rs == l.rs && u.ds == l.ds
+                {
+                    *count += 1;
+                    continue 'outer;
+                }
+            }
+            uniq.push((l, 1));
+        }
+        uniq.iter()
+            .map(|(l, n)| *n as f64 * self.layer_latency_s(cfg, l))
+            .sum()
+    }
+
+    /// Performance = 1 / latency (the paper's definition).
+    pub fn network_performance(
+        &self,
+        cfg: &AcceleratorConfig,
+        layers: &[ConvLayer],
+    ) -> f64 {
+        1.0 / self.network_latency_s(cfg, layers).max(1e-30)
+    }
+
+    /// Energy (J) = predicted power x predicted latency.
+    pub fn network_energy_j(
+        &self,
+        cfg: &AcceleratorConfig,
+        layers: &[ConvLayer],
+    ) -> f64 {
+        self.power_mw(cfg) * 1e-3 * self.network_latency_s(cfg, layers)
+    }
+
+    /// Performance per area (1/s/µm²) — the paper's headline HW metric.
+    pub fn perf_per_area(
+        &self,
+        cfg: &AcceleratorConfig,
+        layers: &[ConvLayer],
+    ) -> f64 {
+        self.network_performance(cfg, layers) / self.area_um2(cfg)
+    }
+
+    // ---------------------------------------------------------------------
+    // Persistence (hand-rolled JSON; see util::json).
+    // ---------------------------------------------------------------------
+
+    pub fn to_json(&self) -> Json {
+        let mut obj = vec![("degree", Json::Num(self.degree as f64))];
+        let mut pe_objs = Vec::new();
+        for (pe, m) in &self.per_pe {
+            pe_objs.push((
+                pe.name(),
+                Json::obj(vec![
+                    ("power", model_to_json(&m.power)),
+                    ("area", model_to_json(&m.area)),
+                    ("latency", model_to_json(&m.latency)),
+                ]),
+            ));
+        }
+        obj.push(("models", Json::obj(pe_objs)));
+        Json::obj(obj)
+    }
+
+    pub fn from_json(j: &Json) -> Result<PpaModels, String> {
+        let degree = j.get("degree").as_usize().ok_or("missing degree")? as u32;
+        let mut per_pe = BTreeMap::new();
+        let models = j.get("models").as_obj().ok_or("missing models")?;
+        for (name, mj) in models {
+            let pe = PeType::from_name(name)?;
+            per_pe.insert(pe, PeModels {
+                power: model_from_json(mj.get("power"))?,
+                area: model_from_json(mj.get("area"))?,
+                latency: model_from_json(mj.get("latency"))?,
+            });
+        }
+        Ok(PpaModels { per_pe, degree })
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json().to_string())
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<PpaModels, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| e.to_string())?;
+        let j = Json::parse(&text).map_err(|e| e.to_string())?;
+        PpaModels::from_json(&j)
+    }
+}
+
+fn model_to_json(m: &PolyModel) -> Json {
+    let terms: Vec<Json> = m
+        .basis
+        .terms
+        .iter()
+        .map(|t| {
+            Json::Arr(
+                t.0.iter()
+                    .flat_map(|&(i, e)| [Json::Num(i as f64), Json::Num(e as f64)])
+                    .collect(),
+            )
+        })
+        .collect();
+    Json::obj(vec![
+        ("dim", Json::Num(m.basis.dim as f64)),
+        ("max_degree", Json::Num(m.basis.max_degree as f64)),
+        ("scale", Json::arr_f64(&m.basis.scale)),
+        ("terms", Json::Arr(terms)),
+        ("coef", Json::arr_f64(&m.coef)),
+        ("log_target", Json::Bool(m.log_target)),
+        ("log_features", Json::Bool(m.log_features)),
+    ])
+}
+
+fn model_from_json(j: &Json) -> Result<PolyModel, String> {
+    let dim = j.get("dim").as_usize().ok_or("dim")?;
+    let max_degree = j.get("max_degree").as_usize().ok_or("max_degree")? as u32;
+    let scale: Vec<f64> = j
+        .get("scale")
+        .as_arr()
+        .ok_or("scale")?
+        .iter()
+        .filter_map(|v| v.as_f64())
+        .collect();
+    let terms: Vec<Monomial> = j
+        .get("terms")
+        .as_arr()
+        .ok_or("terms")?
+        .iter()
+        .map(|t| {
+            let flat: Vec<usize> = t
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .filter_map(|v| v.as_usize())
+                .collect();
+            Monomial(
+                flat.chunks(2).map(|c| (c[0], c[1] as u32)).collect(),
+            )
+        })
+        .collect();
+    let coef: Vec<f64> = j
+        .get("coef")
+        .as_arr()
+        .ok_or("coef")?
+        .iter()
+        .filter_map(|v| v.as_f64())
+        .collect();
+    if coef.len() != terms.len() {
+        return Err("coef/terms length mismatch".into());
+    }
+    let basis = PolyBasis { dim, max_degree, terms, scale };
+    let flat = crate::regression::poly::FlatBasis::compile(&basis);
+    Ok(PolyModel {
+        basis,
+        coef,
+        log_target: j.get("log_target").as_bool().unwrap_or(true),
+        log_features: j.get("log_features").as_bool().unwrap_or(false),
+        flat,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::{zoo, Dataset};
+    use crate::util::stats::mape;
+
+    fn quick_char() -> BTreeMap<PeType, CharData> {
+        let tech = TechLibrary::freepdk45();
+        let space = SweepSpace::default();
+        let layers = zoo::resnet_cifar(20, Dataset::Cifar10).layers;
+        let mut m = BTreeMap::new();
+        for pe in PeType::ALL {
+            m.insert(pe, characterize(&space, pe, &layers, 60, &tech, 7));
+        }
+        m
+    }
+
+    #[test]
+    fn characterize_collects_rows() {
+        let tech = TechLibrary::freepdk45();
+        let space = SweepSpace::default();
+        let layers = zoo::resnet_cifar(20, Dataset::Cifar10).layers;
+        let d = characterize(&space, PeType::Int16, &layers[..4], 20, &tech, 1);
+        assert_eq!(d.power_x.len(), d.configs.len());
+        assert_eq!(d.lat_x.len(), d.configs.len() * 4);
+        assert!(d.configs.len() >= 15); // dedup may skip a few
+        assert!(d.power_y.iter().all(|&p| p > 0.0));
+        assert!(d.lat_y.iter().all(|&l| l > 0.0));
+    }
+
+    #[test]
+    fn fitted_models_track_ground_truth() {
+        let char_data = quick_char();
+        let models = PpaModels::fit(&char_data, 2);
+        for (&pe, d) in &char_data {
+            let m = models.models(pe);
+            let pred: Vec<f64> =
+                d.power_x.iter().map(|x| m.power.predict(x)).collect();
+            let e = mape(&d.power_y, &pred);
+            assert!(e < 10.0, "{pe} power train MAPE {e}");
+            let pred: Vec<f64> =
+                d.area_x.iter().map(|x| m.area.predict(x)).collect();
+            let e = mape(&d.area_y, &pred);
+            assert!(e < 10.0, "{pe} area train MAPE {e}");
+        }
+    }
+
+    #[test]
+    fn predictions_positive_and_ordered_by_pe() {
+        let models = PpaModels::fit(&quick_char(), 2);
+        let layers = &zoo::resnet_cifar(20, Dataset::Cifar10).layers;
+        let mut last_area = f64::INFINITY;
+        for pe in PeType::ALL {
+            let cfg = AcceleratorConfig::baseline(pe);
+            let a = models.area_um2(&cfg);
+            let p = models.power_mw(&cfg);
+            let e = models.network_energy_j(&cfg, layers);
+            assert!(a > 0.0 && p > 0.0 && e > 0.0);
+            assert!(a < last_area, "{pe} area {a} !< {last_area}");
+            last_area = a;
+        }
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_predictions() {
+        let models = PpaModels::fit(&quick_char(), 2);
+        let j = models.to_json();
+        let back = PpaModels::from_json(&Json::parse(&j.to_string()).unwrap())
+            .unwrap();
+        let cfg = AcceleratorConfig::baseline(PeType::LightPe1);
+        let l = &zoo::resnet_cifar(20, Dataset::Cifar10).layers[3];
+        assert!(
+            (models.layer_latency_s(&cfg, l) - back.layer_latency_s(&cfg, l))
+                .abs()
+                < 1e-12
+        );
+        assert!((models.power_mw(&cfg) - back.power_mw(&cfg)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn network_latency_sums_layers() {
+        let models = PpaModels::fit(&quick_char(), 2);
+        let cfg = AcceleratorConfig::baseline(PeType::Int16);
+        let layers = &zoo::resnet_cifar(20, Dataset::Cifar10).layers[..5];
+        let total = models.network_latency_s(&cfg, layers);
+        let sum: f64 =
+            layers.iter().map(|l| models.layer_latency_s(&cfg, l)).sum();
+        assert!((total - sum).abs() < 1e-15);
+    }
+}

@@ -1,0 +1,175 @@
+//! Quantization codecs — the Rust mirror of the L1 kernel semantics.
+//!
+//! Implements the paper's §3.2 representations exactly as the Pallas
+//! kernels do (python/compile/kernels/pot_matmul.py):
+//!
+//!   LightPE-1: w = ±2^-m, m in 0..7      code: bit3 sign, bits2..0 m
+//!   LightPE-2: w = ±(2^-m1 + 2^-m2)      code: bit6 sign, bits5..3 m1,
+//!                                               bits2..0 m2
+//!
+//! plus symmetric integer fake-quantization for the INT16/INT8 paths. Used
+//! by the RTL functional verification (`rtl::interp`) and by the accuracy
+//! proxy's quantization-noise estimates. Cross-checked against the Python
+//! codecs by `tests/integration_runtime.rs` through the PJRT probes.
+
+pub const POT_MAX_EXP: u32 = 7;
+
+/// Encode |w|<=1 as a LightPE-1 4-bit code (nearest power in log space).
+pub fn encode_k1(w: f64) -> u8 {
+    let aw = w.abs().max(2.0_f64.powi(-(POT_MAX_EXP as i32) - 1));
+    let m = (-aw.log2()).round().clamp(0.0, POT_MAX_EXP as f64) as u8;
+    let sign = u8::from(w < 0.0);
+    (sign << 3) | m
+}
+
+/// Decode a LightPE-1 code.
+pub fn decode_k1(code: u8) -> f64 {
+    let m = (code & 0x7) as i32;
+    let sign = if (code >> 3) & 1 == 1 { -1.0 } else { 1.0 };
+    sign * 2.0_f64.powi(-m)
+}
+
+/// Encode |w|<=1 as a LightPE-2 7-bit code (greedy two-term expansion:
+/// first term = largest power not exceeding |w| (ceil in log space),
+/// second = nearest power to the residual).
+pub fn encode_k2(w: f64) -> u8 {
+    let floor_mag = 2.0_f64.powi(-(POT_MAX_EXP as i32) - 1);
+    let aw = w.abs().max(floor_mag);
+    let m1 = (-aw.log2()).ceil().clamp(0.0, POT_MAX_EXP as f64) as u8;
+    let r = (w.abs() - 2.0_f64.powi(-(m1 as i32))).max(0.0);
+    let rr = r.max(floor_mag);
+    let m2 = (-rr.log2()).round().clamp(0.0, POT_MAX_EXP as f64) as u8;
+    let sign = u8::from(w < 0.0 && w.abs() > 0.0);
+    (sign << 6) | (m1 << 3) | m2
+}
+
+/// Decode a LightPE-2 code.
+pub fn decode_k2(code: u8) -> f64 {
+    let m1 = ((code >> 3) & 0x7) as i32;
+    let m2 = (code & 0x7) as i32;
+    let sign = if (code >> 6) & 1 == 1 { -1.0 } else { 1.0 };
+    sign * (2.0_f64.powi(-m1) + 2.0_f64.powi(-m2))
+}
+
+/// Symmetric b-bit fake quantization with the given scale (or max-abs).
+pub fn fake_quant(x: &[f64], bits: u32) -> Vec<f64> {
+    let qmax = ((1u64 << (bits - 1)) - 1) as f64;
+    let scale = x.iter().fold(0.0_f64, |a, v| a.max(v.abs())).max(1e-12) / qmax;
+    x.iter()
+        .map(|v| (v / scale).round().clamp(-qmax, qmax) * scale)
+        .collect()
+}
+
+/// RMS relative quantization error of a weight tensor under each PE type —
+/// the signal the accuracy proxy converts into an accuracy penalty.
+pub fn rms_rel_error(ws: &[f64], mode: QuantMode) -> f64 {
+    assert!(!ws.is_empty());
+    let scale = ws.iter().fold(0.0_f64, |a, v| a.max(v.abs())).max(1e-12);
+    let mut se = 0.0;
+    for &w in ws {
+        let wn = w / scale;
+        let dq = match mode {
+            QuantMode::Fp32 => wn,
+            QuantMode::Int16 => fake_quant(&[wn], 16)[0],
+            QuantMode::PotK1 => decode_k1(encode_k1(wn)),
+            QuantMode::PotK2 => decode_k2(encode_k2(wn)),
+        };
+        let e = dq - wn;
+        se += e * e;
+    }
+    (se / ws.len() as f64).sqrt()
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum QuantMode {
+    Fp32,
+    Int16,
+    PotK1,
+    PotK2,
+}
+
+impl From<crate::pe::PeType> for QuantMode {
+    fn from(pe: crate::pe::PeType) -> Self {
+        match pe {
+            crate::pe::PeType::Fp32 => QuantMode::Fp32,
+            crate::pe::PeType::Int16 => QuantMode::Int16,
+            crate::pe::PeType::LightPe1 => QuantMode::PotK1,
+            crate::pe::PeType::LightPe2 => QuantMode::PotK2,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::Prop;
+
+    #[test]
+    fn k1_codes_cover_all_16_values() {
+        for code in 0u8..16 {
+            let v = decode_k1(code);
+            assert!(v.abs() >= 2.0_f64.powi(-7) && v.abs() <= 1.0);
+            assert_eq!(encode_k1(v), code, "re-encode of {v}");
+        }
+    }
+
+    #[test]
+    fn k2_decode_matches_bitfields() {
+        for code in 0u8..128 {
+            let m1 = ((code >> 3) & 7) as i32;
+            let m2 = (code & 7) as i32;
+            let sign = if code >> 6 == 1 { -1.0 } else { 1.0 };
+            assert_eq!(
+                decode_k2(code),
+                sign * (2.0_f64.powi(-m1) + 2.0_f64.powi(-m2))
+            );
+        }
+    }
+
+    #[test]
+    fn k1_roundtrip_error_bounded() {
+        // Nearest-power rounding: rel err <= 2^0.5 - 1 in-band.
+        Prop::quick(300).check(1000, |rng, _| {
+            let mag = rng.range_f64(2.0_f64.powi(-7), 1.0);
+            let s = if rng.f64() < 0.5 { -1.0 } else { 1.0 };
+            let w = s * mag;
+            let rel = (decode_k1(encode_k1(w)) - w).abs() / mag;
+            if rel > 2.0_f64.sqrt() - 1.0 + 1e-9 {
+                return Err(format!("w={w} rel={rel}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn k2_better_than_k1_on_average() {
+        let mut rng = crate::util::rng::Rng::new(6);
+        let ws: Vec<f64> = (0..4000).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+        let e1 = rms_rel_error(&ws, QuantMode::PotK1);
+        let e2 = rms_rel_error(&ws, QuantMode::PotK2);
+        assert!(e2 < e1, "k2 {e2} !< k1 {e1}");
+    }
+
+    #[test]
+    fn error_ordering_matches_precision_ladder() {
+        // fp32 < int16 < pot-k2 < pot-k1 in quantization error.
+        let mut rng = crate::util::rng::Rng::new(7);
+        let ws: Vec<f64> = (0..4000).map(|_| rng.normal()).collect();
+        let e_fp = rms_rel_error(&ws, QuantMode::Fp32);
+        let e_i16 = rms_rel_error(&ws, QuantMode::Int16);
+        let e_k2 = rms_rel_error(&ws, QuantMode::PotK2);
+        let e_k1 = rms_rel_error(&ws, QuantMode::PotK1);
+        assert!(e_fp < 1e-12);
+        assert!(e_i16 < e_k2 && e_k2 < e_k1, "{e_i16} {e_k2} {e_k1}");
+    }
+
+    #[test]
+    fn fake_quant_grid() {
+        let q = fake_quant(&[0.5, -1.0, 0.26], 4);
+        let scale = 1.0 / 7.0;
+        for v in q {
+            let n = v / scale;
+            assert!((n - n.round()).abs() < 1e-9);
+        }
+    }
+}

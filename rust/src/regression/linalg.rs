@@ -1,0 +1,186 @@
+//! Dense linear algebra for the regression layer: column-major matrix,
+//! normal equations, and Cholesky solve (no external BLAS in the vendored
+//! crate set).
+
+/// Row-major dense matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Mat {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_rows(rows: &[Vec<f64>]) -> Mat {
+        let r = rows.len();
+        let c = rows.first().map(|x| x.len()).unwrap_or(0);
+        let mut data = Vec::with_capacity(r * c);
+        for row in rows {
+            assert_eq!(row.len(), c, "ragged rows");
+            data.extend_from_slice(row);
+        }
+        Mat { rows: r, cols: c, data }
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f64 {
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f64) {
+        self.data[i * self.cols + j] = v;
+    }
+
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Gram matrix XᵀX (cols x cols) — the normal-equations LHS.
+    pub fn gram(&self) -> Mat {
+        let c = self.cols;
+        let mut g = Mat::zeros(c, c);
+        for i in 0..self.rows {
+            let r = self.row(i);
+            for a in 0..c {
+                let ra = r[a];
+                if ra == 0.0 {
+                    continue;
+                }
+                // Symmetric: fill upper triangle, mirror after.
+                for b in a..c {
+                    g.data[a * c + b] += ra * r[b];
+                }
+            }
+        }
+        for a in 0..c {
+            for b in 0..a {
+                g.data[a * c + b] = g.data[b * c + a];
+            }
+        }
+        g
+    }
+
+    /// Xᵀy (cols-vector) — the normal-equations RHS.
+    pub fn xty(&self, y: &[f64]) -> Vec<f64> {
+        assert_eq!(y.len(), self.rows);
+        let mut out = vec![0.0; self.cols];
+        for i in 0..self.rows {
+            let r = self.row(i);
+            let yi = y[i];
+            for (o, &v) in out.iter_mut().zip(r) {
+                *o += v * yi;
+            }
+        }
+        out
+    }
+}
+
+/// Solve (A + ridge·I) x = b for symmetric positive-definite A, in place,
+/// via Cholesky. Returns None if the matrix is not PD even after ridging.
+pub fn cholesky_solve(a: &Mat, b: &[f64], ridge: f64) -> Option<Vec<f64>> {
+    assert_eq!(a.rows, a.cols);
+    assert_eq!(b.len(), a.rows);
+    let n = a.rows;
+    let mut l = a.clone();
+    for i in 0..n {
+        l.data[i * n + i] += ridge;
+    }
+    // Cholesky decomposition L·Lᵀ (lower triangle of `l`).
+    for j in 0..n {
+        let mut d = l.at(j, j);
+        for k in 0..j {
+            let v = l.at(j, k);
+            d -= v * v;
+        }
+        if d <= 0.0 {
+            return None;
+        }
+        let dj = d.sqrt();
+        l.set(j, j, dj);
+        for i in (j + 1)..n {
+            let mut s = l.at(i, j);
+            for k in 0..j {
+                s -= l.at(i, k) * l.at(j, k);
+            }
+            l.set(i, j, s / dj);
+        }
+    }
+    // Forward solve L z = b.
+    let mut z = vec![0.0; n];
+    for i in 0..n {
+        let mut s = b[i];
+        for k in 0..i {
+            s -= l.at(i, k) * z[k];
+        }
+        z[i] = s / l.at(i, i);
+    }
+    // Back solve Lᵀ x = z.
+    let mut x = vec![0.0; n];
+    for i in (0..n).rev() {
+        let mut s = z[i];
+        for k in (i + 1)..n {
+            s -= l.at(k, i) * x[k];
+        }
+        x[i] = s / l.at(i, i);
+    }
+    Some(x)
+}
+
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gram_and_xty() {
+        let x = Mat::from_rows(&[vec![1.0, 2.0], vec![3.0, 4.0]]);
+        let g = x.gram();
+        assert_eq!(g.at(0, 0), 10.0);
+        assert_eq!(g.at(0, 1), 14.0);
+        assert_eq!(g.at(1, 0), 14.0);
+        assert_eq!(g.at(1, 1), 20.0);
+        assert_eq!(x.xty(&[1.0, 1.0]), vec![4.0, 6.0]);
+    }
+
+    #[test]
+    fn cholesky_solves_spd_system() {
+        // A = [[4,2],[2,3]], b = [10, 9] -> x = [1.5, 2.0]
+        let a = Mat::from_rows(&[vec![4.0, 2.0], vec![2.0, 3.0]]);
+        let x = cholesky_solve(&a, &[10.0, 9.0], 0.0).unwrap();
+        assert!((x[0] - 1.5).abs() < 1e-12);
+        assert!((x[1] - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn least_squares_recovers_coefficients() {
+        // y = 3 + 2a - b over a small grid, exactly representable.
+        let mut rows = Vec::new();
+        let mut y = Vec::new();
+        for a in 0..5 {
+            for b in 0..5 {
+                rows.push(vec![1.0, a as f64, b as f64]);
+                y.push(3.0 + 2.0 * a as f64 - b as f64);
+            }
+        }
+        let x = Mat::from_rows(&rows);
+        let coef = cholesky_solve(&x.gram(), &x.xty(&y), 1e-10).unwrap();
+        assert!((coef[0] - 3.0).abs() < 1e-6);
+        assert!((coef[1] - 2.0).abs() < 1e-6);
+        assert!((coef[2] + 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn non_pd_returns_none() {
+        let a = Mat::from_rows(&[vec![0.0, 0.0], vec![0.0, -1.0]]);
+        assert!(cholesky_solve(&a, &[1.0, 1.0], 0.0).is_none());
+    }
+}

@@ -1,0 +1,286 @@
+//! Polynomial regression + model selection — the paper's §3.3 methodology.
+//!
+//! Ridge-regularized polynomial regression fit via normal equations +
+//! Cholesky; model selection by k-fold cross-validation on MAPE/RMSPE
+//! (Fig 5: both dip until degree 5, then rise as high-degree models chase
+//! synthesis noise). Targets are fit in log-space (they span decades) and
+//! exponentiated on prediction.
+
+pub mod linalg;
+pub mod poly;
+
+use crate::util::rng::Rng;
+use crate::util::stats::{mape, rmspe};
+use std::cell::RefCell;
+
+use linalg::{cholesky_solve, Mat};
+use poly::{FlatBasis, PolyBasis};
+
+thread_local! {
+    /// Reusable powers scratch for the predict hot path (per thread).
+    static POWERS: RefCell<Vec<f64>> = const { RefCell::new(Vec::new()) };
+}
+
+/// ln(1+x) per feature (see FitOptions::log_features).
+fn log1p_row(x: &[f64]) -> Vec<f64> {
+    x.iter().map(|v| (1.0 + v.max(0.0)).ln()).collect()
+}
+
+/// A fitted polynomial regression model.
+#[derive(Debug, Clone)]
+pub struct PolyModel {
+    pub basis: PolyBasis,
+    pub coef: Vec<f64>,
+    /// Fit in log-space (targets must then be strictly positive).
+    pub log_target: bool,
+    /// Features transformed as ln(1+x) before expansion.
+    pub log_features: bool,
+    /// Flat compilation of `basis` for the predict hot path.
+    pub flat: FlatBasis,
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct FitOptions {
+    pub max_degree: u32,
+    /// Cap on distinct variables per monomial (see poly.rs).
+    pub max_vars: usize,
+    pub ridge: f64,
+    pub log_target: bool,
+    /// Transform features as ln(1+x) before expansion. Latency is
+    /// multiplicative in its features (more PEs / bigger layers scale it
+    /// by factors), so log-features + log-target makes it near-linear.
+    pub log_features: bool,
+}
+
+impl Default for FitOptions {
+    fn default() -> Self {
+        FitOptions {
+            max_degree: 5,
+            max_vars: 3,
+            ridge: 1e-8,
+            log_target: true,
+            log_features: false,
+        }
+    }
+}
+
+impl PolyModel {
+    /// Fit on rows `xs` with targets `ys`.
+    pub fn fit(xs: &[Vec<f64>], ys: &[f64], opt: FitOptions) -> PolyModel {
+        assert_eq!(xs.len(), ys.len());
+        assert!(!xs.is_empty(), "empty training set");
+        let dim = xs[0].len();
+        let txs: Vec<Vec<f64>>;
+        let xs_ref: &[Vec<f64>] = if opt.log_features {
+            txs = xs.iter().map(|x| log1p_row(x)).collect();
+            &txs
+        } else {
+            xs
+        };
+        let mut basis = PolyBasis::new(dim, opt.max_degree, opt.max_vars);
+        basis.fit_scale(xs_ref);
+        let design = Mat::from_rows(
+            &xs_ref.iter().map(|x| basis.expand(x)).collect::<Vec<_>>());
+        let t: Vec<f64> = if opt.log_target {
+            ys.iter().map(|y| y.max(1e-30).ln()).collect()
+        } else {
+            ys.to_vec()
+        };
+        let gram = design.gram();
+        // Scale ridge with the gram trace so it is dimensionless.
+        let trace: f64 = (0..gram.rows).map(|i| gram.at(i, i)).sum();
+        let lambda = opt.ridge * trace / gram.rows as f64;
+        let coef = cholesky_solve(&gram, &design.xty(&t), lambda.max(1e-12))
+            .expect("normal equations not PD despite ridge");
+        let flat = FlatBasis::compile(&basis);
+        PolyModel {
+            basis,
+            coef,
+            log_target: opt.log_target,
+            log_features: opt.log_features,
+            flat,
+        }
+    }
+
+    /// Rebuild the flat compilation (after deserialization).
+    pub fn recompile(&mut self) {
+        self.flat = FlatBasis::compile(&self.basis);
+    }
+
+    pub fn predict(&self, x: &[f64]) -> f64 {
+        let v = POWERS.with(|p| {
+            let mut powers = p.borrow_mut();
+            if self.log_features {
+                // Stack buffer for the common small dims; heap fallback.
+                let tx = log1p_row(x);
+                self.flat.dot(&tx, &self.coef, &mut powers)
+            } else {
+                self.flat.dot(x, &self.coef, &mut powers)
+            }
+        });
+        if self.log_target {
+            v.exp()
+        } else {
+            v
+        }
+    }
+
+    pub fn predict_all(&self, xs: &[Vec<f64>]) -> Vec<f64> {
+        xs.iter().map(|x| self.predict(x)).collect()
+    }
+}
+
+/// Cross-validation quality of one (degree, options) choice.
+#[derive(Debug, Clone, Copy)]
+pub struct CvScore {
+    pub degree: u32,
+    pub mape: f64,
+    pub rmspe: f64,
+}
+
+/// k-fold cross validation (paper [35]): returns mean held-out MAPE/RMSPE.
+pub fn kfold_cv(
+    xs: &[Vec<f64>],
+    ys: &[f64],
+    opt: FitOptions,
+    k: usize,
+    seed: u64,
+) -> CvScore {
+    assert!(k >= 2 && xs.len() >= k, "need at least k={k} samples");
+    let mut idx: Vec<usize> = (0..xs.len()).collect();
+    Rng::new(seed).shuffle(&mut idx);
+    let mut mapes = Vec::with_capacity(k);
+    let mut rmspes = Vec::with_capacity(k);
+    for fold in 0..k {
+        let test: Vec<usize> =
+            idx.iter().copied().skip(fold).step_by(k).collect();
+        let train: Vec<usize> = idx
+            .iter()
+            .copied()
+            .filter(|i| !test.contains(i))
+            .collect();
+        let tx: Vec<Vec<f64>> = train.iter().map(|&i| xs[i].clone()).collect();
+        let ty: Vec<f64> = train.iter().map(|&i| ys[i]).collect();
+        let model = PolyModel::fit(&tx, &ty, opt);
+        let actual: Vec<f64> = test.iter().map(|&i| ys[i]).collect();
+        let pred: Vec<f64> =
+            test.iter().map(|&i| model.predict(&xs[i])).collect();
+        mapes.push(mape(&actual, &pred));
+        rmspes.push(rmspe(&actual, &pred));
+    }
+    CvScore {
+        degree: opt.max_degree,
+        mape: mapes.iter().sum::<f64>() / k as f64,
+        rmspe: rmspes.iter().sum::<f64>() / k as f64,
+    }
+}
+
+/// Sweep polynomial degree 1..=max and return CV scores (Fig 5) plus the
+/// index of the degree minimizing MAPE+RMSPE jointly (the paper picks the
+/// degree where "both are lowest at the same time").
+pub fn select_degree(
+    xs: &[Vec<f64>],
+    ys: &[f64],
+    base: FitOptions,
+    max_degree: u32,
+    k: usize,
+    seed: u64,
+) -> (Vec<CvScore>, u32) {
+    let mut scores = Vec::new();
+    for d in 1..=max_degree {
+        let opt = FitOptions { max_degree: d, ..base };
+        scores.push(kfold_cv(xs, ys, opt, k, seed));
+    }
+    let best = scores
+        .iter()
+        .min_by(|a, b| {
+            (a.mape + a.rmspe)
+                .partial_cmp(&(b.mape + b.rmspe))
+                .unwrap()
+        })
+        .map(|s| s.degree)
+        .unwrap_or(1);
+    (scores, best)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn cubic_data(n: usize, noise: f64, seed: u64) -> (Vec<Vec<f64>>, Vec<f64>) {
+        let mut rng = Rng::new(seed);
+        let mut xs = Vec::new();
+        let mut ys = Vec::new();
+        for _ in 0..n {
+            let a = rng.range_f64(1.0, 4.0);
+            let b = rng.range_f64(1.0, 4.0);
+            let y = 5.0 + a * a * a + 2.0 * a * b + b
+                + noise * rng.normal();
+            xs.push(vec![a, b]);
+            ys.push(y);
+        }
+        (xs, ys)
+    }
+
+    #[test]
+    fn fits_exact_polynomial() {
+        let (xs, ys) = cubic_data(300, 0.0, 1);
+        let model = PolyModel::fit(&xs, &ys, FitOptions {
+            max_degree: 3,
+            max_vars: 2,
+            ridge: 1e-10,
+            log_target: false,
+            log_features: false,
+        });
+        for (x, y) in xs.iter().zip(&ys).take(50) {
+            assert!((model.predict(x) - y).abs() < 1e-4 * y.abs().max(1.0));
+        }
+    }
+
+    #[test]
+    fn log_target_fit_handles_decade_spans() {
+        // y = exp(linear) spans many decades; log fit nails it.
+        let mut rng = Rng::new(2);
+        let xs: Vec<Vec<f64>> =
+            (0..200).map(|_| vec![rng.range_f64(0.0, 10.0)]).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| (x[0]).exp()).collect();
+        let model = PolyModel::fit(&xs, &ys, FitOptions {
+            max_degree: 1,
+            max_vars: 1,
+            ridge: 1e-10,
+            log_target: true,
+            log_features: false,
+        });
+        let preds = model.predict_all(&xs);
+        assert!(mape(&ys, &preds) < 1.0, "mape {}", mape(&ys, &preds));
+    }
+
+    #[test]
+    fn underfit_has_higher_cv_error_than_right_degree() {
+        let (xs, ys) = cubic_data(400, 0.5, 3);
+        let base = FitOptions { max_vars: 2, log_target: false, ridge: 1e-8, max_degree: 0, log_features: false };
+        let s1 = kfold_cv(&xs, &ys, FitOptions { max_degree: 1, ..base }, 5, 7);
+        let s3 = kfold_cv(&xs, &ys, FitOptions { max_degree: 3, ..base }, 5, 7);
+        assert!(s3.mape < s1.mape, "deg3 {} !< deg1 {}", s3.mape, s1.mape);
+    }
+
+    #[test]
+    fn select_degree_finds_generating_degree() {
+        let (xs, ys) = cubic_data(400, 0.5, 4);
+        let base = FitOptions { max_vars: 2, log_target: false, ridge: 1e-8, max_degree: 0, log_features: false };
+        let (scores, best) = select_degree(&xs, &ys, base, 6, 5, 11);
+        assert_eq!(scores.len(), 6);
+        assert!((3..=5).contains(&best), "picked degree {best}");
+    }
+
+    #[test]
+    fn cv_deterministic_per_seed() {
+        let (xs, ys) = cubic_data(120, 0.3, 5);
+        let opt = FitOptions { max_degree: 2, max_vars: 2, ridge: 1e-8, log_target: false, log_features: false };
+        let a = kfold_cv(&xs, &ys, opt, 4, 42);
+        let b = kfold_cv(&xs, &ys, opt, 4, 42);
+        assert_eq!(a.mape, b.mape);
+        assert_eq!(a.rmspe, b.rmspe);
+    }
+}

@@ -1,0 +1,247 @@
+//! Polynomial feature expansion — Eq. 2 of the paper:
+//!
+//! ```text
+//! F(x) = Σ_j c_j Π_i x_i^{q_ij},   Σ_i q_ij <= K.
+//! ```
+//!
+//! Monomials are enumerated up to total degree `max_degree`; for
+//! high-dimensional feature spaces (the 12/14-dim latency model) the
+//! number of interacting variables per term can be capped to keep the
+//! normal equations tractable (DESIGN.md notes this as our scaling of the
+//! paper's degree-5 latency model).
+
+/// One monomial: sparse (feature index, exponent) pairs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Monomial(pub Vec<(usize, u32)>);
+
+impl Monomial {
+    pub fn degree(&self) -> u32 {
+        self.0.iter().map(|&(_, e)| e).sum()
+    }
+
+    pub fn eval(&self, x: &[f64]) -> f64 {
+        self.0.iter().map(|&(i, e)| x[i].powi(e as i32)).product()
+    }
+}
+
+/// The expansion: a fixed monomial basis + per-feature scale factors
+/// (features are normalized to ~[0,1] before exponentiation so degree-5
+/// terms stay numerically sane).
+#[derive(Debug, Clone)]
+pub struct PolyBasis {
+    pub dim: usize,
+    pub max_degree: u32,
+    pub terms: Vec<Monomial>,
+    pub scale: Vec<f64>,
+}
+
+/// Flat, cache-friendly compilation of a PolyBasis for the predict hot
+/// path: per-feature power tables + (feature, exponent) factor pairs laid
+/// out contiguously. Built once per fitted model; `dot` evaluates the
+/// full expansion against a coefficient vector with zero allocation
+/// beyond one reusable powers buffer.
+#[derive(Debug, Clone)]
+pub struct FlatBasis {
+    dim: usize,
+    max_degree: usize,
+    scale: Vec<f64>,
+    /// factors[offsets[t]..offsets[t+1]] = (feature, exponent) of term t.
+    offsets: Vec<u32>,
+    factors: Vec<(u8, u8)>,
+}
+
+impl FlatBasis {
+    pub fn compile(basis: &PolyBasis) -> FlatBasis {
+        let mut offsets = Vec::with_capacity(basis.terms.len() + 1);
+        let mut factors = Vec::new();
+        offsets.push(0u32);
+        for m in &basis.terms {
+            for &(i, e) in &m.0 {
+                factors.push((i as u8, e as u8));
+            }
+            offsets.push(factors.len() as u32);
+        }
+        FlatBasis {
+            dim: basis.dim,
+            max_degree: basis.max_degree as usize,
+            scale: basis.scale.clone(),
+            offsets,
+            factors,
+        }
+    }
+
+    pub fn num_terms(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    /// Σ_t coef[t] · Π factors(t), using `powers` as scratch (resized as
+    /// needed; pass a reusable buffer to stay allocation-free).
+    pub fn dot(&self, x: &[f64], coef: &[f64], powers: &mut Vec<f64>) -> f64 {
+        debug_assert_eq!(x.len(), self.dim);
+        let stride = self.max_degree + 1;
+        powers.clear();
+        powers.resize(self.dim * stride, 1.0);
+        for i in 0..self.dim {
+            let xs = x[i] / self.scale[i];
+            let row = &mut powers[i * stride..(i + 1) * stride];
+            let mut p = 1.0;
+            for e in 1..stride {
+                p *= xs;
+                row[e] = p;
+            }
+        }
+        let mut acc = 0.0;
+        for t in 0..self.num_terms() {
+            let mut v = coef[t];
+            let lo = self.offsets[t] as usize;
+            let hi = self.offsets[t + 1] as usize;
+            for &(i, e) in &self.factors[lo..hi] {
+                v *= powers[i as usize * stride + e as usize];
+            }
+            acc += v;
+        }
+        acc
+    }
+}
+
+impl PolyBasis {
+    /// Enumerate all monomials of total degree <= `max_degree` with at most
+    /// `max_vars` distinct variables (0 terms = intercept included).
+    pub fn new(dim: usize, max_degree: u32, max_vars: usize) -> PolyBasis {
+        let mut terms = vec![Monomial(vec![])]; // intercept
+        let mut stack: Vec<(usize, u32, Vec<(usize, u32)>)> =
+            vec![(0, 0, vec![])];
+        while let Some((start, deg, cur)) = stack.pop() {
+            for i in start..dim {
+                for e in 1..=(max_degree - deg) {
+                    let mut m = cur.clone();
+                    m.push((i, e));
+                    if m.len() <= max_vars {
+                        terms.push(Monomial(m.clone()));
+                        if m.len() < max_vars && deg + e < max_degree {
+                            stack.push((i + 1, deg + e, m));
+                        }
+                    }
+                }
+            }
+        }
+        terms.sort_by_key(|m| (m.degree(), m.0.clone()));
+        terms.dedup();
+        PolyBasis { dim, max_degree, terms, scale: vec![1.0; dim] }
+    }
+
+    /// Fit per-feature scales from training inputs (max-abs scaling).
+    pub fn fit_scale(&mut self, xs: &[Vec<f64>]) {
+        self.scale = vec![1.0; self.dim];
+        for x in xs {
+            for (s, v) in self.scale.iter_mut().zip(x) {
+                *s = s.max(v.abs());
+            }
+        }
+        for s in &mut self.scale {
+            if *s == 0.0 {
+                *s = 1.0;
+            }
+        }
+    }
+
+    pub fn num_terms(&self) -> usize {
+        self.terms.len()
+    }
+
+    /// Expand one input into the design-matrix row.
+    pub fn expand(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.dim, "feature dim mismatch");
+        let xs: Vec<f64> =
+            x.iter().zip(&self.scale).map(|(v, s)| v / s).collect();
+        self.terms.iter().map(|m| m.eval(&xs)).collect()
+    }
+}
+
+/// n-choose-k as f64 (for the closed-form term count check).
+pub fn binom(n: usize, k: usize) -> usize {
+    if k > n {
+        return 0;
+    }
+    let mut r = 1usize;
+    for i in 0..k {
+        r = r * (n - i) / (i + 1);
+    }
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_basis_count_matches_closed_form() {
+        // #monomials of total degree <= K in d vars = C(d+K, K).
+        for (d, k) in [(2usize, 3u32), (4, 5), (3, 4)] {
+            let b = PolyBasis::new(d, k, d);
+            assert_eq!(
+                b.num_terms(),
+                binom(d + k as usize, k as usize),
+                "d={d} k={k}"
+            );
+        }
+    }
+
+    #[test]
+    fn capped_vars_reduces_terms() {
+        let full = PolyBasis::new(12, 5, 12).num_terms();
+        let capped = PolyBasis::new(12, 5, 2).num_terms();
+        assert!(capped < full / 4, "capped {capped} full {full}");
+    }
+
+    #[test]
+    fn expand_quadratic_by_hand() {
+        // d=2, K=2 basis: 1, a, a², b, ab, b² (order by degree then index).
+        let b = PolyBasis::new(2, 2, 2);
+        let row = b.expand(&[2.0, 3.0]);
+        let mut got = row.clone();
+        got.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        let mut want = vec![1.0, 2.0, 3.0, 4.0, 6.0, 9.0];
+        want.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn scaling_keeps_rows_bounded() {
+        let mut b = PolyBasis::new(3, 5, 3);
+        let xs = vec![vec![224.0, 672.0, 108.0], vec![64.0, 100.0, 32.0]];
+        b.fit_scale(&xs);
+        for x in &xs {
+            for v in b.expand(x) {
+                assert!(v.abs() <= 1.0 + 1e-9, "unbounded term {v}");
+            }
+        }
+    }
+
+    #[test]
+    fn flat_basis_matches_expand_dot() {
+        let mut b = PolyBasis::new(4, 5, 3);
+        b.fit_scale(&[vec![10.0, 20.0, 5.0, 400.0]]);
+        let flat = FlatBasis::compile(&b);
+        assert_eq!(flat.num_terms(), b.num_terms());
+        let coef: Vec<f64> = (0..b.num_terms()).map(|i| (i % 7) as f64 - 3.0).collect();
+        let mut powers = Vec::new();
+        for x in [
+            vec![1.0, 2.0, 3.0, 4.0],
+            vec![10.0, 20.0, 5.0, 400.0],
+            vec![0.0, 0.5, 2.5, 80.0],
+        ] {
+            let slow: f64 = b.expand(&x).iter().zip(&coef).map(|(a, c)| a * c).sum();
+            let fast = flat.dot(&x, &coef, &mut powers);
+            assert!((slow - fast).abs() < 1e-9 * slow.abs().max(1.0),
+                "{slow} vs {fast}");
+        }
+    }
+
+    #[test]
+    fn intercept_always_first_one() {
+        let b = PolyBasis::new(4, 3, 4);
+        let row = b.expand(&[5.0, 6.0, 7.0, 8.0]);
+        assert_eq!(row[0], 1.0);
+    }
+}

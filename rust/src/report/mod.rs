@@ -1,0 +1,211 @@
+//! Report emission: CSV files + terminal ASCII renderings of the paper's
+//! figures (scatter, violin, Pareto) and tables. Every figure harness in
+//! examples/ and benches/ funnels through here so the outputs are uniform.
+
+use std::fmt::Write as _;
+use std::io::Write as _;
+use std::path::Path;
+
+/// Write rows as CSV with a header.
+pub fn write_csv(
+    path: &Path,
+    header: &[&str],
+    rows: &[Vec<String>],
+) -> std::io::Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::fs::File::create(path)?;
+    writeln!(f, "{}", header.join(","))?;
+    for r in rows {
+        writeln!(f, "{}", r.join(","))?;
+    }
+    Ok(())
+}
+
+/// Fixed-width table with a title (Table 2/3 style).
+pub fn render_table(title: &str, header: &[&str], rows: &[Vec<String>]) -> String {
+    let mut widths: Vec<usize> = header.iter().map(|h| h.len()).collect();
+    for r in rows {
+        for (w, cell) in widths.iter_mut().zip(r) {
+            *w = (*w).max(cell.len());
+        }
+    }
+    let mut out = String::new();
+    let _ = writeln!(out, "== {title} ==");
+    let line = |out: &mut String| {
+        for w in &widths {
+            let _ = write!(out, "+{}", "-".repeat(w + 2));
+        }
+        let _ = writeln!(out, "+");
+    };
+    line(&mut out);
+    for (w, h) in widths.iter().zip(header) {
+        let _ = write!(out, "| {h:<w$} ");
+    }
+    let _ = writeln!(out, "|");
+    line(&mut out);
+    for r in rows {
+        for (w, cell) in widths.iter().zip(r) {
+            let _ = write!(out, "| {cell:<w$} ");
+        }
+        let _ = writeln!(out, "|");
+    }
+    line(&mut out);
+    out
+}
+
+/// Log-log ASCII scatter plot (Fig 4 style). Each series is a (label,
+/// points) pair; the glyph is the first char of the label.
+pub fn render_scatter_loglog(
+    title: &str,
+    xlabel: &str,
+    ylabel: &str,
+    series: &[(&str, Vec<(f64, f64)>)],
+    w: usize,
+    h: usize,
+) -> String {
+    let all: Vec<(f64, f64)> = series
+        .iter()
+        .flat_map(|(_, pts)| pts.iter().copied())
+        .filter(|(x, y)| *x > 0.0 && *y > 0.0)
+        .collect();
+    if all.is_empty() {
+        return format!("== {title} == (no data)\n");
+    }
+    let lx = |v: f64| v.log10();
+    let (mut x0, mut x1, mut y0, mut y1) =
+        (f64::MAX, f64::MIN, f64::MAX, f64::MIN);
+    for (x, y) in &all {
+        x0 = x0.min(lx(*x));
+        x1 = x1.max(lx(*x));
+        y0 = y0.min(lx(*y));
+        y1 = y1.max(lx(*y));
+    }
+    let (xs, ys) = ((x1 - x0).max(1e-9), (y1 - y0).max(1e-9));
+    let mut grid = vec![vec![' '; w]; h];
+    for (label, pts) in series {
+        let g = label.chars().next().unwrap_or('*').to_ascii_uppercase();
+        for (x, y) in pts {
+            if *x <= 0.0 || *y <= 0.0 {
+                continue;
+            }
+            let c = (((lx(*x) - x0) / xs) * (w - 1) as f64) as usize;
+            let r = h - 1 - (((lx(*y) - y0) / ys) * (h - 1) as f64) as usize;
+            grid[r.min(h - 1)][c.min(w - 1)] = g;
+        }
+    }
+    let mut out = String::new();
+    let _ = writeln!(out, "== {title} ==  [log-log]  y: {ylabel}");
+    for row in grid {
+        let _ = writeln!(out, "  |{}", row.into_iter().collect::<String>());
+    }
+    let _ = writeln!(out, "  +{}", "-".repeat(w));
+    let _ = writeln!(out, "   x: {xlabel}  ({:.2} .. {:.2} dec)", x0, x1);
+    for (label, _) in series {
+        let _ = write!(out, "   {}={}", label.chars().next().unwrap_or('*')
+            .to_ascii_uppercase(), label);
+    }
+    let _ = writeln!(out);
+    out
+}
+
+/// ASCII violin (Fig 9 style): five-number summary per group with a
+/// log-scale bar from min to max and markers at q1/median/q3.
+pub fn render_violin(
+    title: &str,
+    groups: &[(String, crate::util::stats::FiveNum)],
+    width: usize,
+) -> String {
+    let (mut lo, mut hi) = (f64::MAX, f64::MIN);
+    for (_, f) in groups {
+        lo = lo.min(f.min.max(1e-12));
+        hi = hi.max(f.max);
+    }
+    let (llo, lhi) = (lo.log10(), hi.log10().max(lo.log10() + 1e-9));
+    let pos = |v: f64| {
+        (((v.max(1e-12).log10() - llo) / (lhi - llo)) * (width - 1) as f64)
+            as usize
+    };
+    let mut out = String::new();
+    let _ = writeln!(out, "== {title} ==  [log scale {lo:.3} .. {hi:.3}]");
+    for (name, f) in groups {
+        let mut bar = vec![' '; width];
+        for i in pos(f.min)..=pos(f.max).min(width - 1) {
+            bar[i] = '-';
+        }
+        for i in pos(f.q1)..=pos(f.q3).min(width - 1) {
+            bar[i] = '=';
+        }
+        bar[pos(f.median).min(width - 1)] = '#';
+        let _ = writeln!(
+            out,
+            "  {:>9} |{}| med {:.3}",
+            name,
+            bar.into_iter().collect::<String>(),
+            f.median
+        );
+    }
+    out
+}
+
+/// Format helpers used across examples/benches.
+pub fn f3(v: f64) -> String {
+    format!("{v:.3}")
+}
+pub fn f1(v: f64) -> String {
+    format!("{v:.1}")
+}
+pub fn sci(v: f64) -> String {
+    format!("{v:.3e}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::five_num;
+
+    #[test]
+    fn table_renders_all_rows() {
+        let s = render_table(
+            "T",
+            &["a", "bb"],
+            &[vec!["1".into(), "2".into()], vec!["xxx".into(), "y".into()]],
+        );
+        assert!(s.contains("== T =="));
+        assert!(s.contains("xxx"));
+        assert!(s.lines().count() >= 6);
+    }
+
+    #[test]
+    fn scatter_places_points() {
+        let s = render_scatter_loglog(
+            "S",
+            "x",
+            "y",
+            &[("fp32", vec![(1.0, 1.0), (100.0, 100.0)])],
+            40,
+            10,
+        );
+        assert!(s.contains('F'));
+        assert!(s.contains("log-log"));
+    }
+
+    #[test]
+    fn violin_shows_median_marker() {
+        let f = five_num(&[1.0, 2.0, 3.0, 4.0, 10.0]);
+        let s = render_violin("V", &[("int16".into(), f)], 30);
+        assert!(s.contains('#'));
+        assert!(s.contains("int16"));
+    }
+
+    #[test]
+    fn csv_roundtrip(){
+        let dir = std::env::temp_dir().join("quidam_test_csv");
+        let p = dir.join("t.csv");
+        write_csv(&p, &["a", "b"], &[vec!["1".into(), "2".into()]]).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert_eq!(text, "a,b\n1,2\n");
+        let _ = std::fs::remove_dir_all(dir);
+    }
+}

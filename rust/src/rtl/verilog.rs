@@ -1,0 +1,365 @@
+//! Parameterized Verilog emitter (paper Table 1: "Fully-Parameterized RTL").
+//!
+//! Generates synthesizable Verilog-2001 for the selected configuration:
+//! one PE module per PE type (Fig 3 datapath: 4 FIFOs, 3 scratchpads,
+//! arithmetic, 2 accumulation muxes), a generic synchronous FIFO and
+//! scratchpad, and the array top that instantiates rows x cols PEs with
+//! X/Y multicast delivery buses. The `rtl::interp` models are the
+//! functional reference for the datapath lines emitted here.
+
+use std::fmt::Write;
+
+use crate::config::AcceleratorConfig;
+use crate::pe::{PeType, FIFO_DEPTH};
+
+/// Common building blocks (FIFO + scratchpad), shared by all PE types.
+pub fn generate_common() -> String {
+    let mut v = String::new();
+    let _ = write!(
+        v,
+        r#"// ---------------------------------------------------------------
+// QUIDAM common blocks (generated — do not edit)
+// ---------------------------------------------------------------
+module quidam_fifo #(
+    parameter WIDTH = 16,
+    parameter DEPTH = {FIFO_DEPTH}
+) (
+    input  wire             clk,
+    input  wire             rst_n,
+    input  wire             push,
+    input  wire [WIDTH-1:0] din,
+    input  wire             pop,
+    output wire [WIDTH-1:0] dout,
+    output wire             full,
+    output wire             empty
+);
+    localparam AW = $clog2(DEPTH);
+    reg [WIDTH-1:0] mem [0:DEPTH-1];
+    reg [AW:0] wptr, rptr;
+    assign full  = (wptr - rptr) == DEPTH;
+    assign empty = wptr == rptr;
+    assign dout  = mem[rptr[AW-1:0]];
+    always @(posedge clk or negedge rst_n) begin
+        if (!rst_n) begin
+            wptr <= 0; rptr <= 0;
+        end else begin
+            if (push && !full) begin
+                mem[wptr[AW-1:0]] <= din;
+                wptr <= wptr + 1'b1;
+            end
+            if (pop && !empty) rptr <= rptr + 1'b1;
+        end
+    end
+endmodule
+
+module quidam_spad #(
+    parameter WIDTH = 16,
+    parameter DEPTH = 224
+) (
+    input  wire                     clk,
+    input  wire                     we,
+    input  wire [$clog2(DEPTH)-1:0] waddr,
+    input  wire [WIDTH-1:0]         wdata,
+    input  wire [$clog2(DEPTH)-1:0] raddr,
+    output reg  [WIDTH-1:0]         rdata
+);
+    reg [WIDTH-1:0] mem [0:DEPTH-1];
+    always @(posedge clk) begin
+        if (we) mem[waddr] <= wdata;
+        rdata <= mem[raddr];
+    end
+endmodule
+"#
+    );
+    v
+}
+
+/// The arithmetic stage of one PE type (Fig 3a-3d).
+fn arith_body(pe: PeType) -> String {
+    match pe {
+        PeType::Fp32 => r#"
+    // Fig 3a: fp32 multiply + fp32 accumulate add (IEEE-754 single;
+    // mapped to DesignWare fp units at synthesis).
+    wire [31:0] product;
+    quidam_fp32_mul u_mul (.a(act_q), .b(wgt_q), .y(product));
+    wire [31:0] acc_in = psum_sel ? psum_in : psum_spad_q;
+    quidam_fp32_add u_add (.a(product), .b(acc_in), .y(mac_out));
+"#
+        .to_string(),
+        PeType::Int16 => r#"
+    // Fig 3b: 16x16 integer array multiplier + 32-bit accumulate.
+    wire signed [31:0] product = $signed(act_q) * $signed(wgt_q);
+    wire signed [31:0] acc_in  = psum_sel ? psum_in : psum_spad_q;
+    assign mac_out = product + acc_in;
+"#
+        .to_string(),
+        PeType::LightPe1 => r#"
+    // Fig 3c: LightPE-1 — one arithmetic shift replaces the multiplier.
+    // Weight code: {sign, m[2:0]}; w = ±2^-m (see rtl::interp).
+    wire        w_sign = wgt_q[3];
+    wire [2:0]  w_m    = wgt_q[2:0];
+    wire signed [19:0] shifted = $signed({{12{act_q[7]}}, act_q}) >>> w_m;
+    wire signed [19:0] product = w_sign ? -shifted : shifted;
+    wire signed [19:0] acc_in  = psum_sel ? psum_in : psum_spad_q;
+    assign mac_out = product + acc_in;
+"#
+        .to_string(),
+        PeType::LightPe2 => r#"
+    // Fig 3d: LightPE-2 — two shifts + one add (w = ±(2^-m1 + 2^-m2)).
+    // Weight code: {sign, m1[2:0], m2[2:0]}.
+    wire        w_sign = wgt_q[6];
+    wire [2:0]  w_m1   = wgt_q[5:3];
+    wire [2:0]  w_m2   = wgt_q[2:0];
+    wire signed [19:0] act_ext = {{12{act_q[7]}}, act_q};
+    wire signed [19:0] sh1 = act_ext >>> w_m1;
+    wire signed [19:0] sh2 = act_ext >>> w_m2;
+    wire signed [19:0] product = w_sign ? -(sh1 + sh2) : (sh1 + sh2);
+    wire signed [19:0] acc_in  = psum_sel ? psum_in : psum_spad_q;
+    assign mac_out = product + acc_in;
+"#
+        .to_string(),
+    }
+}
+
+/// One PE module for the given type and scratchpad sizing.
+pub fn generate_pe(pe: PeType, cfg: &AcceleratorConfig) -> String {
+    let act_w = pe.act_bits();
+    let wgt_w = pe.wgt_bits();
+    let ps_w = pe.psum_bits();
+    let mut v = String::new();
+    let _ = write!(
+        v,
+        r#"// PE type: {name} (act {act_w}b, wgt {wgt_w}b, psum {ps_w}b)
+module quidam_pe_{name} #(
+    parameter SP_IF = {sp_if},
+    parameter SP_FW = {sp_fw},
+    parameter SP_PS = {sp_ps}
+) (
+    input  wire                clk,
+    input  wire                rst_n,
+    // ifmap / filter / psum-in / psum-out FIFO ports (Fig 3)
+    input  wire                if_push,
+    input  wire [{act_hi}:0]   if_din,
+    input  wire                fw_push,
+    input  wire [{wgt_hi}:0]   fw_din,
+    input  wire                ps_push,
+    input  wire [{ps_hi}:0]    ps_din,
+    input  wire                out_pop,
+    output wire [{ps_hi}:0]    out_dout,
+    output wire                out_empty,
+    // control
+    input  wire                mac_en,
+    input  wire                psum_sel,   // accumulate from psum-in FIFO
+    input  wire                psum_clr,   // reset accumulation (mux 2)
+    input  wire [$clog2(SP_IF)-1:0] if_raddr,
+    input  wire [$clog2(SP_FW)-1:0] fw_raddr,
+    input  wire [$clog2(SP_PS)-1:0] ps_raddr,
+    input  wire [$clog2(SP_PS)-1:0] ps_waddr
+);
+    // --- FIFOs ---------------------------------------------------------
+    wire [{act_hi}:0] if_q;  wire if_full, if_empty;
+    wire [{wgt_hi}:0] fw_q;  wire fw_full, fw_empty;
+    wire [{ps_hi}:0]  psin_q; wire psin_full, psin_empty;
+    quidam_fifo #(.WIDTH({act_w})) u_fifo_if (
+        .clk(clk), .rst_n(rst_n), .push(if_push), .din(if_din),
+        .pop(mac_en), .dout(if_q), .full(if_full), .empty(if_empty));
+    quidam_fifo #(.WIDTH({wgt_w})) u_fifo_fw (
+        .clk(clk), .rst_n(rst_n), .push(fw_push), .din(fw_din),
+        .pop(mac_en), .dout(fw_q), .full(fw_full), .empty(fw_empty));
+    quidam_fifo #(.WIDTH({ps_w})) u_fifo_psin (
+        .clk(clk), .rst_n(rst_n), .push(ps_push), .din(ps_din),
+        .pop(psum_sel), .dout(psin_q), .full(psin_full), .empty(psin_empty));
+
+    // --- Scratchpads (ifmap / filter / psum) ---------------------------
+    wire [{act_hi}:0] act_q;
+    wire [{wgt_hi}:0] wgt_q;
+    wire [{ps_hi}:0]  psum_spad_q;
+    quidam_spad #(.WIDTH({act_w}), .DEPTH(SP_IF)) u_sp_if (
+        .clk(clk), .we(if_push), .waddr(if_raddr), .wdata(if_q),
+        .raddr(if_raddr), .rdata(act_q));
+    quidam_spad #(.WIDTH({wgt_w}), .DEPTH(SP_FW)) u_sp_fw (
+        .clk(clk), .we(fw_push), .waddr(fw_raddr), .wdata(fw_q),
+        .raddr(fw_raddr), .rdata(wgt_q));
+    wire [{ps_hi}:0] mac_out;
+    wire [{ps_hi}:0] psum_wdata = psum_clr ? {{{ps_w}{{1'b0}}}} : mac_out;
+    quidam_spad #(.WIDTH({ps_w}), .DEPTH(SP_PS)) u_sp_ps (
+        .clk(clk), .we(mac_en), .waddr(ps_waddr), .wdata(psum_wdata),
+        .raddr(ps_raddr), .rdata(psum_spad_q));
+    wire [{ps_hi}:0] psum_in = psin_q;
+
+    // --- Arithmetic (PE-type specific) ----------------------------------
+{arith}
+    // --- Output FIFO -----------------------------------------------------
+    quidam_fifo #(.WIDTH({ps_w})) u_fifo_out (
+        .clk(clk), .rst_n(rst_n), .push(mac_en), .din(mac_out),
+        .pop(out_pop), .dout(out_dout), .full(), .empty(out_empty));
+endmodule
+"#,
+        name = pe.name(),
+        sp_if = cfg.sp_if,
+        sp_fw = cfg.sp_fw,
+        sp_ps = cfg.sp_ps,
+        act_hi = act_w - 1,
+        wgt_hi = wgt_w - 1,
+        ps_hi = ps_w - 1,
+        arith = arith_body(pe),
+    );
+    v
+}
+
+/// Array top: rows x cols PE instances + delivery buses.
+pub fn generate_top(cfg: &AcceleratorConfig) -> String {
+    let pe = cfg.pe_type;
+    let mut v = String::new();
+    let _ = write!(
+        v,
+        r#"// Array top: {rows} x {cols} {name} PEs, GB {gb} KiB
+module quidam_top (
+    input  wire clk,
+    input  wire rst_n,
+    input  wire [{act_hi}:0] if_bus,   // X multicast: ifmap rows
+    input  wire [{wgt_hi}:0] fw_bus,   // Y multicast: filter rows
+    input  wire [{npe}-1:0]  if_sel,
+    input  wire [{npe}-1:0]  fw_sel,
+    input  wire [{npe}-1:0]  mac_en,
+    input  wire [{npe}-1:0]  psum_sel,
+    input  wire [{npe}-1:0]  psum_clr,
+    output wire [{ps_w}*{npe}-1:0] psum_out
+);
+"#,
+        rows = cfg.rows,
+        cols = cfg.cols,
+        name = pe.name(),
+        gb = cfg.gb_kib,
+        act_hi = pe.act_bits() - 1,
+        wgt_hi = pe.wgt_bits() - 1,
+        npe = cfg.num_pes(),
+        ps_w = pe.psum_bits(),
+    );
+    for r in 0..cfg.rows {
+        for c in 0..cfg.cols {
+            let i = r * cfg.cols + c;
+            let _ = write!(
+                v,
+                r#"    quidam_pe_{name} #(.SP_IF({sp_if}), .SP_FW({sp_fw}), .SP_PS({sp_ps})) u_pe_r{r}_c{c} (
+        .clk(clk), .rst_n(rst_n),
+        .if_push(if_sel[{i}]), .if_din(if_bus),
+        .fw_push(fw_sel[{i}]), .fw_din(fw_bus),
+        .ps_push(1'b0), .ps_din({{{ps_w}{{1'b0}}}}),
+        .out_pop(1'b1),
+        .out_dout(psum_out[{ps_w}*{i} +: {ps_w}]), .out_empty(),
+        .mac_en(mac_en[{i}]), .psum_sel(psum_sel[{i}]), .psum_clr(psum_clr[{i}]),
+        .if_raddr('0), .fw_raddr('0), .ps_raddr('0), .ps_waddr('0));
+"#,
+                name = pe.name(),
+                sp_if = cfg.sp_if,
+                sp_fw = cfg.sp_fw,
+                sp_ps = cfg.sp_ps,
+                ps_w = pe.psum_bits(),
+            );
+        }
+    }
+    v.push_str("endmodule\n");
+    v
+}
+
+/// Full design bundle: common blocks + the configured PE + array top.
+pub fn generate_design(cfg: &AcceleratorConfig) -> String {
+    let mut v = String::new();
+    let _ = writeln!(
+        v,
+        "// QUIDAM generated design — pe={}, array {}x{}, SP if/fw/ps = {}/{}/{}, GB {} KiB",
+        cfg.pe_type, cfg.rows, cfg.cols, cfg.sp_if, cfg.sp_fw, cfg.sp_ps,
+        cfg.gb_kib
+    );
+    v.push_str(&generate_common());
+    v.push_str(&generate_pe(cfg.pe_type, cfg));
+    v.push_str(&generate_top(cfg));
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(pe: PeType) -> AcceleratorConfig {
+        AcceleratorConfig::baseline(pe)
+    }
+
+    #[test]
+    fn common_blocks_present() {
+        let v = generate_common();
+        assert!(v.contains("module quidam_fifo"));
+        assert!(v.contains("module quidam_spad"));
+        assert!(v.contains(&format!("DEPTH = {FIFO_DEPTH}")));
+    }
+
+    #[test]
+    fn lightpe1_uses_shift_not_multiply() {
+        let v = generate_pe(PeType::LightPe1, &cfg(PeType::LightPe1));
+        assert!(v.contains(">>>"), "no arithmetic shift in LightPE-1");
+        assert!(!v.contains(" * $signed"), "multiplier leaked into LightPE-1");
+        assert!(v.contains("wgt_q[3]")); // 4-bit code sign bit
+    }
+
+    #[test]
+    fn lightpe2_has_two_shifts_one_add() {
+        let v = generate_pe(PeType::LightPe2, &cfg(PeType::LightPe2));
+        assert_eq!(v.matches(">>> w_m").count(), 2, "need exactly 2 shifts");
+        assert!(v.contains("sh1 + sh2"), "missing the one add");
+        assert!(v.contains("wgt_q[6]")); // 7-bit code sign bit
+    }
+
+    #[test]
+    fn int16_uses_signed_multiply() {
+        let v = generate_pe(PeType::Int16, &cfg(PeType::Int16));
+        assert!(v.contains("$signed(act_q) * $signed(wgt_q)"));
+    }
+
+    #[test]
+    fn pe_widths_match_pe_type() {
+        for pe in PeType::ALL {
+            let v = generate_pe(pe, &cfg(pe));
+            assert!(
+                v.contains(&format!(
+                    "act {}b, wgt {}b, psum {}b",
+                    pe.act_bits(),
+                    pe.wgt_bits(),
+                    pe.psum_bits()
+                )),
+                "{pe} header"
+            );
+            assert!(v.contains(&format!("SP_FW = {}", cfg(pe).sp_fw)));
+        }
+    }
+
+    #[test]
+    fn top_instantiates_all_pes() {
+        let c = cfg(PeType::LightPe2);
+        let v = generate_top(&c);
+        assert_eq!(
+            v.matches("quidam_pe_lightpe2 #(").count(),
+            c.num_pes(),
+            "PE instance count"
+        );
+        assert!(v.contains("u_pe_r11_c13")); // last of 12x14
+    }
+
+    #[test]
+    fn full_design_contains_all_sections() {
+        let v = generate_design(&cfg(PeType::LightPe1));
+        for needle in [
+            "module quidam_fifo",
+            "module quidam_spad",
+            "module quidam_pe_lightpe1",
+            "module quidam_top",
+        ] {
+            assert!(v.contains(needle), "missing {needle}");
+        }
+        // Balanced module/endmodule pairs.
+        assert_eq!(
+            v.matches("\nmodule quidam").count(),
+            v.matches("endmodule").count()
+        );
+    }
+}

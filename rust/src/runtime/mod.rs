@@ -1,0 +1,296 @@
+//! PJRT runtime — loads the AOT HLO-text artifacts and executes them.
+//!
+//! The interchange contract (python/compile/aot.py):
+//!   * artifacts/<name>.hlo.txt — HLO *text* (xla_extension 0.5.1 rejects
+//!     jax>=0.5 serialized protos with 64-bit ids; the text parser
+//!     reassigns ids — see /opt/xla-example/README.md);
+//!   * artifacts/manifest.json — per-artifact I/O shapes/dtypes.
+//!
+//! Executables are compiled once per artifact on the PJRT CPU client and
+//! cached; the training/inference hot loop then runs entirely in Rust
+//! (Python is never on the request path).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Shape + dtype of one artifact input/output.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+
+    fn from_json(j: &Json) -> Result<TensorSpec> {
+        Ok(TensorSpec {
+            name: j.get("name").as_str().unwrap_or("?").to_string(),
+            shape: j
+                .get("shape")
+                .as_arr()
+                .ok_or_else(|| anyhow!("spec missing shape"))?
+                .iter()
+                .filter_map(|v| v.as_usize())
+                .collect(),
+            dtype: j.get("dtype").as_str().unwrap_or("float32").to_string(),
+        })
+    }
+}
+
+/// One artifact's manifest entry.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: String,
+    pub kind: String,
+    pub pe_type: String,
+    pub nparams: usize,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// Parsed artifacts/manifest.json.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub model: Json,
+    pub artifacts: BTreeMap<String, ArtifactMeta>,
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let j = Json::parse(text).map_err(|e| anyhow!("manifest: {e}"))?;
+        let mut artifacts = BTreeMap::new();
+        let arts = j
+            .get("artifacts")
+            .as_obj()
+            .ok_or_else(|| anyhow!("manifest missing artifacts"))?;
+        for (name, a) in arts {
+            let specs = |key: &str| -> Result<Vec<TensorSpec>> {
+                a.get(key)
+                    .as_arr()
+                    .unwrap_or(&[])
+                    .iter()
+                    .map(TensorSpec::from_json)
+                    .collect()
+            };
+            artifacts.insert(name.clone(), ArtifactMeta {
+                name: name.clone(),
+                file: a.get("file").as_str().unwrap_or_default().to_string(),
+                kind: a.get("kind").as_str().unwrap_or_default().to_string(),
+                pe_type: a.get("pe_type").as_str().unwrap_or_default().to_string(),
+                nparams: a.get("nparams").as_usize().unwrap_or(0),
+                inputs: specs("inputs")?,
+                outputs: specs("outputs")?,
+            });
+        }
+        Ok(Manifest { model: j.get("model").clone(), artifacts })
+    }
+
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} (run `make artifacts`)"))?;
+        Manifest::parse(&text)
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactMeta> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact '{name}' not in manifest"))
+    }
+}
+
+/// The PJRT execution engine.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    pub manifest: Manifest,
+    cache: BTreeMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    /// CPU PJRT client over an artifact directory.
+    pub fn new(dir: impl Into<PathBuf>) -> Result<Runtime> {
+        let dir = dir.into();
+        let manifest = Manifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("PJRT CPU client: {e:?}"))?;
+        Ok(Runtime { client, dir, manifest, cache: BTreeMap::new() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (once) and cache an artifact's executable.
+    pub fn load(&mut self, name: &str) -> Result<()> {
+        if self.cache.contains_key(name) {
+            return Ok(());
+        }
+        let meta = self.manifest.get(name)?;
+        let path = self.dir.join(&meta.file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("parsing {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+        self.cache.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute an artifact. Inputs are validated against the manifest; the
+    /// jax-side lowering uses return_tuple=True, so the single output
+    /// literal is decomposed into the manifest's output list.
+    pub fn execute(&mut self, name: &str, inputs: &[xla::Literal])
+        -> Result<Vec<xla::Literal>>
+    {
+        self.load(name)?;
+        let meta = self.manifest.get(name)?.clone();
+        if inputs.len() != meta.inputs.len() {
+            bail!(
+                "{name}: expected {} inputs, got {}",
+                meta.inputs.len(),
+                inputs.len()
+            );
+        }
+        for (lit, spec) in inputs.iter().zip(&meta.inputs) {
+            let n = lit.element_count();
+            if n != spec.elements() {
+                bail!(
+                    "{name}: input '{}' has {} elements, expected {} {:?}",
+                    spec.name, n, spec.elements(), spec.shape
+                );
+            }
+        }
+        let exe = self.cache.get(name).expect("loaded above");
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow!("executing {name}: {e:?}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching {name} result: {e:?}"))?;
+        let outs = lit
+            .to_tuple()
+            .map_err(|e| anyhow!("untupling {name} result: {e:?}"))?;
+        if outs.len() != meta.outputs.len() {
+            bail!(
+                "{name}: got {} outputs, manifest says {}",
+                outs.len(),
+                meta.outputs.len()
+            );
+        }
+        Ok(outs)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Literal helpers
+// ---------------------------------------------------------------------------
+
+/// Build an f32 literal of the given shape from a flat slice.
+pub fn literal_f32(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+    let n: usize = shape.iter().product::<usize>().max(1);
+    if n != data.len() {
+        bail!("literal_f32: {} elements for shape {shape:?}", data.len());
+    }
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    if dims.is_empty() {
+        return Ok(xla::Literal::scalar(data[0]));
+    }
+    xla::Literal::vec1(data)
+        .reshape(&dims)
+        .map_err(|e| anyhow!("reshape: {e:?}"))
+}
+
+/// Build an i32 literal of the given shape.
+pub fn literal_i32(data: &[i32], shape: &[usize]) -> Result<xla::Literal> {
+    let n: usize = shape.iter().product::<usize>().max(1);
+    if n != data.len() {
+        bail!("literal_i32: {} elements for shape {shape:?}", data.len());
+    }
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    if dims.is_empty() {
+        return Ok(xla::Literal::scalar(data[0]));
+    }
+    xla::Literal::vec1(data)
+        .reshape(&dims)
+        .map_err(|e| anyhow!("reshape: {e:?}"))
+}
+
+/// Extract an f32 vector from a literal.
+pub fn to_vec_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec f32: {e:?}"))
+}
+
+/// Extract the single f32 scalar of a literal.
+pub fn scalar_f32(lit: &xla::Literal) -> Result<f32> {
+    lit.get_first_element::<f32>()
+        .map_err(|e| anyhow!("scalar: {e:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "model": {"batch": 4, "image_size": 8},
+      "artifacts": {
+        "infer_fp32": {
+          "file": "infer_fp32.hlo.txt", "kind": "infer", "pe_type": "fp32",
+          "nparams": 2,
+          "inputs": [
+            {"name": "w", "shape": [3, 3], "dtype": "float32"},
+            {"name": "x", "shape": [4, 8, 8, 3], "dtype": "float32"}
+          ],
+          "outputs": [
+            {"name": "logits", "shape": [4, 10], "dtype": "float32"}
+          ]
+        }
+      }
+    }"#;
+
+    #[test]
+    fn manifest_parses() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let a = m.get("infer_fp32").unwrap();
+        assert_eq!(a.kind, "infer");
+        assert_eq!(a.nparams, 2);
+        assert_eq!(a.inputs[1].shape, vec![4, 8, 8, 3]);
+        assert_eq!(a.inputs[1].elements(), 768);
+        assert_eq!(a.outputs[0].name, "logits");
+        assert_eq!(m.model.get("batch").as_usize(), Some(4));
+    }
+
+    #[test]
+    fn manifest_missing_artifact_errors() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert!(m.get("nope").is_err());
+    }
+
+    #[test]
+    fn manifest_rejects_garbage() {
+        assert!(Manifest::parse("{\"artifacts\": 3}").is_err());
+        assert!(Manifest::parse("not json").is_err());
+    }
+
+    #[test]
+    fn literal_helpers_roundtrip() {
+        let lit = literal_f32(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).unwrap();
+        assert_eq!(to_vec_f32(&lit).unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(lit.element_count(), 4);
+        let s = literal_f32(&[7.0], &[]).unwrap();
+        assert_eq!(scalar_f32(&s).unwrap(), 7.0);
+        assert!(literal_f32(&[1.0], &[3]).is_err());
+    }
+}

@@ -1,0 +1,249 @@
+//! Full-design synthesis oracle — the Synopsys DC + FreePDK45 substitute.
+//!
+//! Composes the gate-level PE model (`pe`), banked global buffer (`tech`),
+//! array interconnect, and control into whole-accelerator area (µm²), power
+//! (mW, dynamic @ assumed activity + leakage), and maximum clock frequency
+//! (MHz). This is the "actual" (ground-truth) generator the polynomial PPA
+//! models are trained against, exactly as the paper trains on DC output
+//! (§3.3), and it is deliberately ~10^4x slower to query than the fitted
+//! models are (the paper's §4.1 speedup claim — see benches/bench_speedup).
+//!
+//! Determinism + realism: real synthesis results are not perfectly smooth
+//! functions of the configuration (placement, sizing, and retiming noise).
+//! We add a small deterministic, config-hashed perturbation (±3% area/power,
+//! ±1.5% timing) so the regression layer faces a realistic fitting problem
+//! (non-zero MAPE in Figs 5-8 instead of an exactly-learnable function).
+
+use crate::config::AcceleratorConfig;
+use crate::pe::pe_cost;
+#[cfg(test)]
+use crate::pe::PeType;
+use crate::tech::TechLibrary;
+
+/// Number of global-buffer banks (Eyeriss uses 27; we bank by capacity).
+pub fn gb_banks(gb_kib: usize) -> usize {
+    (gb_kib / 8).clamp(4, 32)
+}
+
+/// Per-component area/power breakdown (µm² / mW).
+#[derive(Debug, Clone, Copy)]
+pub struct Breakdown {
+    pub pe_array_area: f64,
+    pub gb_area: f64,
+    pub noc_area: f64,
+    pub ctrl_area: f64,
+    pub pe_dyn_mw: f64,
+    pub gb_dyn_mw: f64,
+    pub noc_dyn_mw: f64,
+    pub leak_mw: f64,
+}
+
+/// Whole-design synthesis result.
+#[derive(Debug, Clone, Copy)]
+pub struct SynthesisResult {
+    pub area_um2: f64,
+    pub power_mw: f64,
+    pub fclk_mhz: f64,
+    pub breakdown: Breakdown,
+}
+
+/// Nominal MAC issue rate assumed for power characterization (matches the
+/// "inherently assumed switching activity" of the DC flow, §3.3).
+const UTILIZATION: f64 = 0.85;
+/// Global-buffer accesses per PE per cycle (row-stationary reuse keeps most
+/// traffic inside the scratchpads).
+const GB_ACC_PER_PE: f64 = 0.08;
+/// Simulated synthesis variability amplitudes.
+const NOISE_AREA: f64 = 0.03;
+const NOISE_POWER: f64 = 0.03;
+const NOISE_TIMING: f64 = 0.015;
+
+/// Deterministic config hash -> [-1, 1] (FNV-1a over the field encoding).
+fn hash_unit(cfg: &AcceleratorConfig, salt: u64) -> f64 {
+    let mut h: u64 = 0xcbf29ce484222325 ^ salt;
+    let mut mix = |v: u64| {
+        h ^= v;
+        h = h.wrapping_mul(0x100000001b3);
+    };
+    mix(cfg.pe_type as u64);
+    mix(cfg.rows as u64);
+    mix(cfg.cols as u64);
+    mix(cfg.sp_if as u64);
+    mix(cfg.sp_fw as u64);
+    mix(cfg.sp_ps as u64);
+    mix(cfg.gb_kib as u64);
+    mix(cfg.dram_bw as u64);
+    // Final avalanche, map to [-1, 1].
+    let mut z = h;
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d049bb133111eb);
+    z ^= z >> 31;
+    (z >> 11) as f64 / (1u64 << 52) as f64 - 1.0
+}
+
+/// Synthesize a full design. Pure + deterministic per config.
+pub fn synthesize(cfg: &AcceleratorConfig, tech: &TechLibrary) -> SynthesisResult {
+    let n_pe = cfg.num_pes() as f64;
+    let pe = pe_cost(cfg.pe_type, cfg.sp_if, cfg.sp_fw, cfg.sp_ps, tech);
+
+    // --- Global buffer: banked SRAM, word width = 64 bits (bus width).
+    let banks = gb_banks(cfg.gb_kib);
+    let bank_words = cfg.gb_kib * 1024 * 8 / 64 / banks;
+    let bank = tech.sram.macro_for(bank_words.max(1), 64);
+    let gb_area = bank.area_um2 * banks as f64;
+    let gb_leak = bank.leak_mw * banks as f64;
+
+    // --- NoC: X/Y multicast buses (row-stationary delivery). Wire area and
+    // energy grow with the physical span (~sqrt of PE count) and bus count.
+    let span = n_pe.sqrt();
+    let bus_bits = (cfg.pe_type.act_bits() + cfg.pe_type.wgt_bits()) as f64;
+    let noc_ge = (cfg.rows + cfg.cols) as f64 * bus_bits * 4.0 + n_pe * 30.0;
+    let noc_area = tech.area_um2(noc_ge) + span * 210.0; // + wire tracks
+    let e_noc_per_transfer = 0.35 * span; // fJ, wire capacitance ~ span
+
+    // --- Top-level control, DMA, configuration fabric.
+    let ctrl_ge = 9_000.0 + 40.0 * n_pe;
+    let ctrl_area = tech.area_um2(ctrl_ge);
+
+    // --- Timing: PE reg-to-reg path vs pipelined GB bank access.
+    let t_gb_eff = bank.t_access_ps * 0.6 + tech.ff_ovh_ps;
+    let mut t_crit = pe.t_crit_ps.max(t_gb_eff);
+    t_crit *= 1.0 + NOISE_TIMING * hash_unit(cfg, 0x71);
+    let fclk_mhz = 1.0e6 / t_crit;
+
+    // --- Power at fclk: PE MACs + GB traffic + NoC transfers + leakage.
+    // fJ * MHz = 1e-6 mW.
+    let pe_dyn =
+        n_pe * UTILIZATION * pe.e_mac_fj * fclk_mhz * 1e-6;
+    let gb_dyn = n_pe * GB_ACC_PER_PE * bank.e_read_fj * fclk_mhz * 1e-6;
+    let noc_dyn = n_pe * GB_ACC_PER_PE * e_noc_per_transfer * fclk_mhz * 1e-6
+        + tech.op_energy_fj(noc_ge) * 0.1 * fclk_mhz * 1e-6;
+    let leak = n_pe * pe.leak_mw
+        + gb_leak
+        + tech.leakage_mw(noc_ge + ctrl_ge);
+
+    let mut area = n_pe * pe.area_um2 + gb_area + noc_area + ctrl_area;
+    let mut power = pe_dyn + gb_dyn + noc_dyn + leak;
+    area *= 1.0 + NOISE_AREA * hash_unit(cfg, 0xa2ea);
+    power *= 1.0 + NOISE_POWER * hash_unit(cfg, 0x90e2);
+
+    SynthesisResult {
+        area_um2: area,
+        power_mw: power,
+        fclk_mhz,
+        breakdown: Breakdown {
+            pe_array_area: n_pe * pe.area_um2,
+            gb_area,
+            noc_area,
+            ctrl_area,
+            pe_dyn_mw: pe_dyn,
+            gb_dyn_mw: gb_dyn,
+            noc_dyn_mw: noc_dyn,
+            leak_mw: leak,
+        },
+    }
+}
+
+/// Energy per MAC at the array level (fJ), incl. amortized GB/NoC traffic.
+/// Used by the dataflow layer to convert access counts into energy.
+pub fn energy_per_mac_fj(cfg: &AcceleratorConfig, tech: &TechLibrary) -> f64 {
+    let pe = pe_cost(cfg.pe_type, cfg.sp_if, cfg.sp_fw, cfg.sp_ps, tech);
+    let banks = gb_banks(cfg.gb_kib);
+    let bank_words = cfg.gb_kib * 1024 * 8 / 64 / banks;
+    let bank = tech.sram.macro_for(bank_words.max(1), 64);
+    pe.e_mac_fj + GB_ACC_PER_PE * bank.e_read_fj
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn synth(pe: PeType) -> SynthesisResult {
+        synthesize(&AcceleratorConfig::baseline(pe), &TechLibrary::freepdk45())
+    }
+
+    /// Table 3: FP32 275, INT16 285, LightPE-2 435, LightPE-1 455 MHz.
+    #[test]
+    fn table3_clock_frequencies() {
+        let expect = [
+            (PeType::Fp32, 275.0),
+            (PeType::Int16, 285.0),
+            (PeType::LightPe2, 435.0),
+            (PeType::LightPe1, 455.0),
+        ];
+        for (pe, f_paper) in expect {
+            let f = synth(pe).fclk_mhz;
+            let rel = (f - f_paper).abs() / f_paper;
+            assert!(rel < 0.08, "{pe}: {f:.1} MHz vs paper {f_paper} ({:.1}%)",
+                rel * 100.0);
+        }
+    }
+
+    #[test]
+    fn lightpe_speedup_vs_conventional() {
+        // Paper §4.4: LightPEs up to 1.7x / 1.6x faster than FP32 / INT16.
+        let f_fp32 = synth(PeType::Fp32).fclk_mhz;
+        let f_int16 = synth(PeType::Int16).fclk_mhz;
+        let f_l1 = synth(PeType::LightPe1).fclk_mhz;
+        assert!(f_l1 / f_fp32 > 1.4 && f_l1 / f_fp32 < 1.9);
+        assert!(f_l1 / f_int16 > 1.3 && f_l1 / f_int16 < 1.8);
+    }
+
+    #[test]
+    fn area_power_orderings() {
+        let r: Vec<SynthesisResult> = PeType::ALL.iter().map(|&p| synth(p)).collect();
+        // FP32 > INT16 > LPE2 > LPE1 in both area and power.
+        for i in 0..3 {
+            assert!(r[i].area_um2 > r[i + 1].area_um2, "area idx {i}");
+            assert!(r[i].power_mw > r[i + 1].power_mw, "power idx {i}");
+        }
+    }
+
+    #[test]
+    fn more_pes_more_area_power() {
+        let tech = TechLibrary::freepdk45();
+        let mut small = AcceleratorConfig::baseline(PeType::Int16);
+        small.rows = 6;
+        small.cols = 8;
+        let mut big = small;
+        big.rows = 24;
+        big.cols = 28;
+        let rs = synthesize(&small, &tech);
+        let rb = synthesize(&big, &tech);
+        assert!(rb.area_um2 > 5.0 * rs.area_um2);
+        assert!(rb.power_mw > 5.0 * rs.power_mw);
+    }
+
+    #[test]
+    fn noise_is_deterministic_and_small() {
+        let tech = TechLibrary::freepdk45();
+        let cfg = AcceleratorConfig::baseline(PeType::LightPe2);
+        let a = synthesize(&cfg, &tech);
+        let b = synthesize(&cfg, &tech);
+        assert_eq!(a.area_um2, b.area_um2);
+        assert_eq!(a.power_mw, b.power_mw);
+        // Perturbation bounded: compare against the unperturbed component sum.
+        let bd = a.breakdown;
+        let raw_area =
+            bd.pe_array_area + bd.gb_area + bd.noc_area + bd.ctrl_area;
+        assert!((a.area_um2 - raw_area).abs() / raw_area < 0.031);
+    }
+
+    #[test]
+    fn breakdown_components_positive() {
+        let b = synth(PeType::Fp32).breakdown;
+        for v in [
+            b.pe_array_area, b.gb_area, b.noc_area, b.ctrl_area,
+            b.pe_dyn_mw, b.gb_dyn_mw, b.noc_dyn_mw, b.leak_mw,
+        ] {
+            assert!(v > 0.0);
+        }
+    }
+
+    #[test]
+    fn gb_banking_bounds() {
+        assert_eq!(gb_banks(8), 4);
+        assert_eq!(gb_banks(64), 8);
+        assert_eq!(gb_banks(1024), 32);
+    }
+}

@@ -1,0 +1,106 @@
+//! Technology library — the FreePDK45 substitute (DESIGN.md §2).
+//!
+//! The paper synthesizes every design with Synopsys Design Compiler on
+//! FreePDK45 [45]. We replace that flow with an analytical 45 nm library:
+//! every datapath block is costed in NAND2-equivalent gates (GE), timing in
+//! FO4 delays, SRAM macros with a CACTI-style capacity model, and leakage
+//! proportional to area. Constants are calibrated so that the *full-design*
+//! clock frequencies reproduce the paper's Table 3 (275/285/435/455 MHz)
+//! and the area/power orderings of Figs 6/8 (FP32 >> INT16 >> LightPE-2 >
+//! LightPE-1).
+
+pub mod scaling;
+pub mod sram;
+
+pub use sram::{SramMacro, SramModel};
+
+/// Process + standard-cell constants for one technology node.
+#[derive(Debug, Clone)]
+pub struct TechLibrary {
+    pub node_nm: f64,
+    /// FO4 inverter delay (ps) — the timing unit for gate depths.
+    pub fo4_ps: f64,
+    /// Area of one NAND2-equivalent gate (µm²).
+    pub ge_area_um2: f64,
+    /// Dynamic energy per GE toggle at nominal VDD (fJ).
+    pub e_gate_fj: f64,
+    /// Leakage per GE (nW).
+    pub leak_nw_per_ge: f64,
+    /// Flip-flop: area (GE), setup+clk-to-q (ps), energy/clock (fJ).
+    pub ff_area_ge: f64,
+    pub ff_ovh_ps: f64,
+    pub ff_e_fj: f64,
+    /// Internal switching-activity factor assumed by the power model
+    /// (Design Compiler's "inherently assumed switching activity", §3.3).
+    pub activity: f64,
+    pub sram: SramModel,
+}
+
+impl TechLibrary {
+    /// FreePDK45-like 45 nm library.
+    ///
+    /// GE area ~0.8 µm² (NAND2X1), FO4 ~25 ps, ~1 fJ/GE-toggle at 1.1 V,
+    /// ~12 nW/GE leakage — standard open-literature 45 nm figures.
+    pub fn freepdk45() -> TechLibrary {
+        TechLibrary {
+            node_nm: 45.0,
+            fo4_ps: 25.0,
+            ge_area_um2: 0.80,
+            e_gate_fj: 1.0,
+            leak_nw_per_ge: 12.0,
+            ff_area_ge: 6.0,
+            ff_ovh_ps: 120.0,
+            ff_e_fj: 8.0,
+            activity: 0.25,
+            sram: SramModel::freepdk45(),
+        }
+    }
+
+    /// Delay of a gate chain `depth` FO4 units deep (ps).
+    pub fn chain_ps(&self, depth_fo4: f64) -> f64 {
+        depth_fo4 * self.fo4_ps
+    }
+
+    /// Area of `ge` NAND2 equivalents (µm²).
+    pub fn area_um2(&self, ge: f64) -> f64 {
+        ge * self.ge_area_um2
+    }
+
+    /// Dynamic energy of one operation through a block of `ge` gates (fJ),
+    /// at the library's assumed internal activity.
+    pub fn op_energy_fj(&self, ge: f64) -> f64 {
+        ge * self.e_gate_fj * self.activity
+    }
+
+    /// Leakage power of `ge` gates (mW).
+    pub fn leakage_mw(&self, ge: f64) -> f64 {
+        ge * self.leak_nw_per_ge * 1e-6
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn library_constants_sane() {
+        let t = TechLibrary::freepdk45();
+        assert_eq!(t.node_nm, 45.0);
+        assert!(t.fo4_ps > 10.0 && t.fo4_ps < 50.0);
+        assert!(t.ge_area_um2 > 0.2 && t.ge_area_um2 < 2.0);
+    }
+
+    #[test]
+    fn chain_delay_linear() {
+        let t = TechLibrary::freepdk45();
+        assert_eq!(t.chain_ps(10.0), 250.0);
+        assert_eq!(t.chain_ps(0.0), 0.0);
+    }
+
+    #[test]
+    fn energy_and_leakage_scale_with_size() {
+        let t = TechLibrary::freepdk45();
+        assert!(t.op_energy_fj(2000.0) > t.op_energy_fj(100.0));
+        assert!(t.leakage_mw(1e6) > t.leakage_mw(1e3));
+    }
+}

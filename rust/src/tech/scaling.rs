@@ -1,0 +1,50 @@
+//! Technology-node scaling (the paper's DeepScaleTool [41] substitute).
+//!
+//! Table 3 compares QUIDAM's 45 nm clock frequencies against Eyeriss at
+//! 65 nm by applying "the prominent technology scaling rules": delay scales
+//! ~linearly with feature size (constant-field scaling), area with the
+//! square, and dynamic energy roughly with the cube (C·V² with both C and V
+//! shrinking). The paper's own check: INT16 @285 MHz (45 nm) scales to
+//! ~197 MHz at 65 nm, matching Eyeriss's 200 MHz.
+
+/// Frequency scaling: f(to) = f(from) * from_nm / to_nm.
+pub fn scale_frequency_mhz(f_mhz: f64, from_nm: f64, to_nm: f64) -> f64 {
+    f_mhz * from_nm / to_nm
+}
+
+/// Area scaling: a(to) = a(from) * (to_nm / from_nm)^2.
+pub fn scale_area_um2(area: f64, from_nm: f64, to_nm: f64) -> f64 {
+    area * (to_nm / from_nm).powi(2)
+}
+
+/// Dynamic energy scaling ~ (to/from)^3 (C ~ s, V ~ s).
+pub fn scale_energy(e: f64, from_nm: f64, to_nm: f64) -> f64 {
+    e * (to_nm / from_nm).powi(3)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_table3_int16_to_eyeriss_node() {
+        // 285 MHz at 45 nm -> ~197 MHz at 65 nm (paper §4.4).
+        let f = scale_frequency_mhz(285.0, 45.0, 65.0);
+        assert!((f - 197.3).abs() < 1.0, "got {f}");
+    }
+
+    #[test]
+    fn scaling_roundtrips() {
+        let f = scale_frequency_mhz(scale_frequency_mhz(400.0, 45.0, 65.0), 65.0, 45.0);
+        assert!((f - 400.0).abs() < 1e-9);
+        let a = scale_area_um2(scale_area_um2(100.0, 45.0, 65.0), 65.0, 45.0);
+        assert!((a - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn smaller_node_is_faster_smaller_cheaper() {
+        assert!(scale_frequency_mhz(100.0, 65.0, 45.0) > 100.0);
+        assert!(scale_area_um2(100.0, 65.0, 45.0) < 100.0);
+        assert!(scale_energy(100.0, 65.0, 45.0) < 100.0);
+    }
+}

@@ -1,0 +1,121 @@
+//! CACTI-style SRAM/register-file macro model.
+//!
+//! Scratchpads (per-PE, small) and the global buffer (hundreds of KiB) are
+//! the dominant storage in the paper's architecture (Fig 2/3). Access
+//! energy and latency grow with capacity (wordline/bitline length ~ sqrt of
+//! the array), which is what makes scratchpad sizing a real DSE axis.
+
+/// Capacity-dependent macro parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct SramMacro {
+    pub bits: f64,
+    pub area_um2: f64,
+    /// Energy per read of one word (fJ) — writes cost 1.1x.
+    pub e_read_fj: f64,
+    pub e_write_fj: f64,
+    /// Access time (ps).
+    pub t_access_ps: f64,
+    /// Leakage (mW).
+    pub leak_mw: f64,
+}
+
+/// Per-node SRAM constants.
+#[derive(Debug, Clone)]
+pub struct SramModel {
+    /// 6T bitcell area (µm²).
+    pub cell_um2: f64,
+    /// Fixed periphery area (µm²) + per-bit periphery factor.
+    pub periph_um2: f64,
+    pub periph_factor: f64,
+    /// Read energy: base per access + per-bit-of-word + wire term ∝ sqrt(bits).
+    pub e_base_fj: f64,
+    pub e_per_bit_fj: f64,
+    pub e_wire_fj: f64,
+    /// Access time: base + log2(words) term (decoder) + sqrt (wire) term.
+    pub t_base_ps: f64,
+    pub t_decode_ps: f64,
+    pub t_wire_ps: f64,
+    /// Leakage per bit (nW).
+    pub leak_nw_per_bit: f64,
+}
+
+impl SramModel {
+    pub fn freepdk45() -> SramModel {
+        SramModel {
+            cell_um2: 0.50,
+            periph_um2: 60.0,
+            periph_factor: 0.18,
+            e_base_fj: 9.0,
+            e_per_bit_fj: 0.45,
+            e_wire_fj: 0.35,
+            t_base_ps: 150.0,
+            t_decode_ps: 28.0,
+            t_wire_ps: 3.2,
+            leak_nw_per_bit: 0.35,
+        }
+    }
+
+    /// Build the macro for `words` entries of `word_bits` each.
+    pub fn macro_for(&self, words: usize, word_bits: usize) -> SramMacro {
+        assert!(words > 0 && word_bits > 0);
+        let bits = (words * word_bits) as f64;
+        let area = self.periph_um2
+            + bits * self.cell_um2 * (1.0 + self.periph_factor);
+        let e_read = self.e_base_fj
+            + word_bits as f64 * self.e_per_bit_fj
+            + bits.sqrt() * self.e_wire_fj;
+        let t = self.t_base_ps
+            + (words as f64).log2().max(0.0) * self.t_decode_ps
+            + bits.sqrt() * self.t_wire_ps;
+        SramMacro {
+            bits,
+            area_um2: area,
+            e_read_fj: e_read,
+            e_write_fj: e_read * 1.1,
+            t_access_ps: t,
+            leak_mw: bits * self.leak_nw_per_bit * 1e-6,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bigger_arrays_cost_more() {
+        let m = SramModel::freepdk45();
+        let small = m.macro_for(16, 16);
+        let big = m.macro_for(1024, 16);
+        assert!(big.area_um2 > small.area_um2);
+        assert!(big.e_read_fj > small.e_read_fj);
+        assert!(big.t_access_ps > small.t_access_ps);
+        assert!(big.leak_mw > small.leak_mw);
+    }
+
+    #[test]
+    fn wider_words_cost_energy_not_decode_time() {
+        let m = SramModel::freepdk45();
+        let narrow = m.macro_for(256, 8);
+        let wide = m.macro_for(256, 32);
+        assert!(wide.e_read_fj > narrow.e_read_fj);
+        // Same word count -> same decoder depth; only the wire term grows
+        // (sqrt(8192)-sqrt(2048) bits of wordline at ~3.2 ps/sqrt-bit).
+        assert!(wide.t_access_ps - narrow.t_access_ps < 200.0);
+    }
+
+    #[test]
+    fn eyeriss_like_gb_access_energy_dominates_rf() {
+        // Eyeriss energy hierarchy: global buffer access >> scratchpad.
+        let m = SramModel::freepdk45();
+        let rf = m.macro_for(224, 16); // filter scratchpad
+        let gb = m.macro_for(108 * 1024 / 2, 16); // 108 KiB as 16-bit words
+        assert!(gb.e_read_fj > 4.0 * rf.e_read_fj);
+    }
+
+    #[test]
+    fn write_costs_more_than_read() {
+        let m = SramModel::freepdk45().macro_for(64, 16);
+        assert!(m.e_write_fj > m.e_read_fj);
+    }
+}

@@ -1,0 +1,204 @@
+//! Training driver — QAT through the AOT train_step artifacts.
+//!
+//! The paper trains VGG/ResNet variants on CIFAR for 200 epochs on GPUs;
+//! our substitution (DESIGN.md §2) trains compact Table-4-style CNNs on a
+//! synthetic structured dataset, with the *entire* hot loop in Rust: batch
+//! assembly, PJRT execution of `train_step_<pe>`, and parameter state all
+//! live here. Python only authored the graph at build time.
+
+pub mod data;
+
+use anyhow::{anyhow, Result};
+
+use crate::pe::PeType;
+use crate::runtime::{literal_f32, literal_i32, scalar_f32, Runtime};
+use crate::util::rng::Rng;
+use data::SynthDataset;
+
+/// Loss-curve entry.
+#[derive(Debug, Clone, Copy)]
+pub struct StepLog {
+    pub step: usize,
+    pub loss: f32,
+    pub lr: f32,
+}
+
+/// Trainer state for one PE type's artifact pair.
+pub struct Trainer {
+    pub pe: PeType,
+    batch: usize,
+    image: usize,
+    params: Vec<xla::Literal>,
+    momentum: Vec<xla::Literal>,
+    param_shapes: Vec<Vec<usize>>,
+}
+
+impl Trainer {
+    /// Initialize parameters (He init) from the manifest's shape contract.
+    pub fn new(rt: &Runtime, pe: PeType, seed: u64) -> Result<Trainer> {
+        let meta = rt.manifest.get(&format!("train_step_{}", pe.name()))?;
+        let n = meta.nparams;
+        let batch = rt
+            .manifest
+            .model
+            .get("batch")
+            .as_usize()
+            .ok_or_else(|| anyhow!("manifest missing model.batch"))?;
+        let image = rt
+            .manifest
+            .model
+            .get("image_size")
+            .as_usize()
+            .ok_or_else(|| anyhow!("manifest missing model.image_size"))?;
+        let mut rng = Rng::new(seed);
+        let mut params = Vec::with_capacity(n);
+        let mut momentum = Vec::with_capacity(n);
+        let mut param_shapes = Vec::with_capacity(n);
+        for spec in &meta.inputs[..n] {
+            let count = spec.elements();
+            let data: Vec<f32> = if spec.name.ends_with("_gamma") {
+                vec![1.0; count]
+            } else if spec.name.ends_with("_beta") || spec.name == "fc_b" {
+                vec![0.0; count]
+            } else {
+                // He init: std = sqrt(2 / fan_in); fan_in = prod(shape[..-1]).
+                let fan_in: usize =
+                    spec.shape[..spec.shape.len() - 1].iter().product::<usize>().max(1);
+                let std = (2.0 / fan_in as f64).sqrt();
+                (0..count).map(|_| (rng.normal() * std) as f32).collect()
+            };
+            params.push(literal_f32(&data, &spec.shape)?);
+            momentum.push(literal_f32(&vec![0.0; count], &spec.shape)?);
+            param_shapes.push(spec.shape.clone());
+        }
+        Ok(Trainer { pe, batch, image, params, momentum, param_shapes })
+    }
+
+    pub fn batch_size(&self) -> usize {
+        self.batch
+    }
+
+    pub fn num_params(&self) -> usize {
+        self.params.len()
+    }
+
+    pub fn param_elements(&self) -> usize {
+        self.param_shapes.iter().map(|s| s.iter().product::<usize>()).sum()
+    }
+
+    /// The paper's lr schedule, scaled to a short run: start at `lr0`,
+    /// divide by 5 at 30%, 60%, 80% of the run.
+    pub fn lr_at(lr0: f32, step: usize, total: usize) -> f32 {
+        let frac = step as f32 / total.max(1) as f32;
+        let drops = [0.3, 0.6, 0.8].iter().filter(|&&d| frac >= d).count();
+        lr0 / 5.0f32.powi(drops as i32)
+    }
+
+    /// Run `steps` training steps, sampling batches from `ds`.
+    pub fn train(
+        &mut self,
+        rt: &mut Runtime,
+        ds: &SynthDataset,
+        steps: usize,
+        lr0: f32,
+        seed: u64,
+        mut on_log: impl FnMut(StepLog),
+    ) -> Result<Vec<StepLog>> {
+        let name = format!("train_step_{}", self.pe.name());
+        rt.load(&name)?;
+        let mut rng = Rng::new(seed);
+        let mut logs = Vec::with_capacity(steps);
+        for step in 0..steps {
+            let (xb, yb) = ds.batch(self.batch, &mut rng);
+            let lr = Self::lr_at(lr0, step, steps);
+            let mut inputs: Vec<xla::Literal> = Vec::with_capacity(
+                2 * self.params.len() + 3,
+            );
+            // Order per manifest: params..., momentum..., x, y, lr.
+            inputs.extend(self.params.drain(..));
+            inputs.extend(self.momentum.drain(..));
+            inputs.push(literal_f32(
+                &xb,
+                &[self.batch, self.image, self.image, 3],
+            )?);
+            inputs.push(literal_i32(&yb, &[self.batch])?);
+            inputs.push(literal_f32(&[lr], &[])?);
+            let mut outs = rt.execute(&name, &inputs)?;
+            let loss = scalar_f32(outs.last().unwrap())?;
+            outs.pop();
+            let n = outs.len() / 2;
+            self.momentum = outs.split_off(n);
+            self.params = outs;
+            let log = StepLog { step, loss, lr };
+            logs.push(log);
+            on_log(log);
+            if !loss.is_finite() {
+                return Err(anyhow!("{name}: loss diverged at step {step}"));
+            }
+        }
+        Ok(logs)
+    }
+
+    /// Top-1 accuracy of the current parameters on a dataset (batched
+    /// through the infer artifact; the tail remainder is padded).
+    pub fn evaluate(&self, rt: &mut Runtime, ds: &SynthDataset) -> Result<f64> {
+        let name = format!("infer_{}", self.pe.name());
+        rt.load(&name)?;
+        let img_elems = self.image * self.image * 3;
+        let mut correct = 0usize;
+        let mut total = 0usize;
+        let mut i = 0;
+        while i < ds.len() {
+            let take = (ds.len() - i).min(self.batch);
+            let mut xb = vec![0.0f32; self.batch * img_elems];
+            for b in 0..take {
+                let (img, _) = ds.example(i + b);
+                xb[b * img_elems..(b + 1) * img_elems].copy_from_slice(img);
+            }
+            let mut inputs: Vec<xla::Literal> =
+                Vec::with_capacity(self.params.len() + 1);
+            for (p, shape) in self.params.iter().zip(&self.param_shapes) {
+                // Literals are consumed per call; rebuild cheap views.
+                let data = crate::runtime::to_vec_f32(p)?;
+                inputs.push(literal_f32(&data, shape)?);
+            }
+            inputs.push(literal_f32(
+                &xb,
+                &[self.batch, self.image, self.image, 3],
+            )?);
+            let outs = rt.execute(&name, &inputs)?;
+            let logits = crate::runtime::to_vec_f32(&outs[0])?;
+            let classes = logits.len() / self.batch;
+            for b in 0..take {
+                let row = &logits[b * classes..(b + 1) * classes];
+                let pred = row
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(i, _)| i)
+                    .unwrap();
+                let (_, label) = ds.example(i + b);
+                if pred == label as usize {
+                    correct += 1;
+                }
+                total += 1;
+            }
+            i += take;
+        }
+        Ok(100.0 * correct as f64 / total.max(1) as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lr_schedule_matches_paper_shape() {
+        // /5 drops at 30%/60%/80% of the run (scaled 60/120/160-of-200).
+        assert_eq!(Trainer::lr_at(0.1, 0, 100), 0.1);
+        assert_eq!(Trainer::lr_at(0.1, 30, 100), 0.1 / 5.0);
+        assert_eq!(Trainer::lr_at(0.1, 60, 100), 0.1 / 25.0);
+        assert_eq!(Trainer::lr_at(0.1, 85, 100), 0.1 / 125.0);
+    }
+}

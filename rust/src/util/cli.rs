@@ -1,0 +1,112 @@
+//! Tiny CLI argument parser (clap is not in the vendored crate set).
+//!
+//! Grammar: `quidam <subcommand> [--flag] [--key value] [positional...]`.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Args {
+        let mut out = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.options.insert(name.to_string(), v);
+                } else {
+                    out.flags.push(name.to_string());
+                }
+            } else if out.subcommand.is_none() && out.positional.is_empty() {
+                out.subcommand = Some(a);
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        // NOTE on grammar: `--name value` always binds the value, so bare
+        // flags must be given last (or with no following bare word).
+        let a = parse("explore out.csv --pe lightpe1 --samples 200 --verbose");
+        assert_eq!(a.subcommand.as_deref(), Some("explore"));
+        assert_eq!(a.get("pe"), Some("lightpe1"));
+        assert_eq!(a.usize_or("samples", 0), 200);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["out.csv"]);
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse("fit --degree=5 --ridge=1e-6");
+        assert_eq!(a.usize_or("degree", 0), 5);
+        assert!((a.f64_or("ridge", 0.0) - 1e-6).abs() < 1e-18);
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = parse("report --json");
+        assert!(a.flag("json"));
+        assert!(a.get("json").is_none());
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("x");
+        assert_eq!(a.usize_or("k", 7), 7);
+        assert_eq!(a.get_or("mode", "fast"), "fast");
+    }
+}

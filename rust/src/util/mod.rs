@@ -1,0 +1,13 @@
+//! Self-contained utility layer.
+//!
+//! The build environment vendors only the `xla` crate's dependency closure
+//! (no serde / rand / clap / criterion / proptest), so this module provides
+//! the small, deterministic substitutes the rest of the framework uses:
+//! JSON, a splittable PRNG, summary statistics, CLI parsing, and a
+//! property-test driver (see DESIGN.md §2, offline-crate substitutions).
+
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,95 @@
+//! Mini property-testing driver (proptest is not in the vendored crate set).
+//!
+//! `check` runs a property over N generated cases and, on failure, performs
+//! a simple halving shrink over the generator's size parameter to report a
+//! smaller counterexample. Used by the proptest-style invariant tests on the
+//! coordinator, dataflow, and regression modules.
+
+use crate::util::rng::Rng;
+
+pub struct Prop {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for Prop {
+    fn default() -> Self {
+        Prop { cases: 100, seed: 0x0051_da00 }
+    }
+}
+
+impl Prop {
+    pub fn new(cases: usize, seed: u64) -> Self {
+        Prop { cases, seed }
+    }
+
+    /// Run `prop(rng, size)` for sizes ramping 1..=max_size. On failure,
+    /// retry with halved sizes to find a smaller failing case, then panic
+    /// with the seed + size so the case can be replayed.
+    pub fn check<F>(&self, max_size: usize, mut prop: F)
+    where
+        F: FnMut(&mut Rng, usize) -> Result<(), String>,
+    {
+        let mut rng = Rng::new(self.seed);
+        for case in 0..self.cases {
+            let size = 1 + (case * max_size) / self.cases.max(1);
+            let mut case_rng = rng.split(case as u64);
+            if let Err(msg) = prop(&mut case_rng, size) {
+                // Shrink: halve the size while it still fails.
+                let mut best = (size, msg);
+                let mut s = size / 2;
+                while s >= 1 {
+                    let mut r = rng.split(case as u64);
+                    match prop(&mut r, s) {
+                        Err(m) => {
+                            best = (s, m);
+                            s /= 2;
+                        }
+                        Ok(()) => break,
+                    }
+                }
+                panic!(
+                    "property failed (seed={} case={} size={}): {}",
+                    self.seed, case, best.0, best.1
+                );
+            }
+        }
+    }
+}
+
+impl Prop {
+    pub fn quick(cases: usize) -> Prop {
+        Prop { cases, seed: 0x51d5_eed0 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        Prop::quick(50).check(64, |rng, size| {
+            let mut v: Vec<u64> = (0..size).map(|_| rng.next_u64()).collect();
+            v.sort();
+            for w in v.windows(2) {
+                if w[0] > w[1] {
+                    return Err("sort broke ordering".into());
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_reports() {
+        Prop::quick(10).check(8, |_rng, size| {
+            if size >= 2 {
+                Err(format!("size {size} >= 2"))
+            } else {
+                Ok(())
+            }
+        });
+    }
+}

@@ -1,0 +1,146 @@
+//! Summary statistics + the paper's regression quality metrics.
+//!
+//! MAPE and RMSPE (Fig 5) are percentage errors; quantiles back the violin
+//! plots (Fig 9); `pearson_r` backs the predicted-vs-actual scatter quality
+//! line (Figs 6-8).
+
+/// Mean absolute percentage error (%): 100/n * Σ |ŷ-y| / |y|.
+pub fn mape(actual: &[f64], pred: &[f64]) -> f64 {
+    assert_eq!(actual.len(), pred.len());
+    assert!(!actual.is_empty());
+    100.0
+        * actual
+            .iter()
+            .zip(pred)
+            .map(|(a, p)| ((p - a) / a.abs().max(1e-12)).abs())
+            .sum::<f64>()
+        / actual.len() as f64
+}
+
+/// Root mean square percentage error (%): 100 * sqrt(mean(((ŷ-y)/y)^2)).
+pub fn rmspe(actual: &[f64], pred: &[f64]) -> f64 {
+    assert_eq!(actual.len(), pred.len());
+    assert!(!actual.is_empty());
+    let ms = actual
+        .iter()
+        .zip(pred)
+        .map(|(a, p)| {
+            let e = (p - a) / a.abs().max(1e-12);
+            e * e
+        })
+        .sum::<f64>()
+        / actual.len() as f64;
+    100.0 * ms.sqrt()
+}
+
+pub fn mean(xs: &[f64]) -> f64 {
+    assert!(!xs.is_empty());
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+pub fn stddev(xs: &[f64]) -> f64 {
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64)
+        .sqrt()
+}
+
+/// Linear-interpolated quantile, q in [0,1].
+pub fn quantile(xs: &[f64], q: f64) -> f64 {
+    assert!(!xs.is_empty());
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pos = q.clamp(0.0, 1.0) * (v.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (pos - lo as f64) * (v[hi] - v[lo])
+    }
+}
+
+pub fn median(xs: &[f64]) -> f64 {
+    quantile(xs, 0.5)
+}
+
+/// Pearson correlation coefficient.
+pub fn pearson_r(x: &[f64], y: &[f64]) -> f64 {
+    assert_eq!(x.len(), y.len());
+    let mx = mean(x);
+    let my = mean(y);
+    let mut num = 0.0;
+    let mut dx = 0.0;
+    let mut dy = 0.0;
+    for (a, b) in x.iter().zip(y) {
+        num += (a - mx) * (b - my);
+        dx += (a - mx) * (a - mx);
+        dy += (b - my) * (b - my);
+    }
+    num / (dx.sqrt() * dy.sqrt()).max(1e-300)
+}
+
+/// Five-number summary (min, q1, median, q3, max) for violin plots (Fig 9).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FiveNum {
+    pub min: f64,
+    pub q1: f64,
+    pub median: f64,
+    pub q3: f64,
+    pub max: f64,
+}
+
+pub fn five_num(xs: &[f64]) -> FiveNum {
+    FiveNum {
+        min: quantile(xs, 0.0),
+        q1: quantile(xs, 0.25),
+        median: quantile(xs, 0.5),
+        q3: quantile(xs, 0.75),
+        max: quantile(xs, 1.0),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mape_rmspe_zero_on_perfect_fit() {
+        let a = [1.0, 2.0, 4.0];
+        assert_eq!(mape(&a, &a), 0.0);
+        assert_eq!(rmspe(&a, &a), 0.0);
+    }
+
+    #[test]
+    fn mape_simple_case() {
+        // 10% high on every point -> MAPE == RMSPE == 10%.
+        let a = [1.0, 2.0, 10.0];
+        let p = [1.1, 2.2, 11.0];
+        assert!((mape(&a, &p) - 10.0).abs() < 1e-9);
+        assert!((rmspe(&a, &p) - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rmspe_penalizes_outliers_more() {
+        let a = [1.0, 1.0, 1.0, 1.0];
+        let p = [1.0, 1.0, 1.0, 1.4]; // one 40% outlier
+        assert!(rmspe(&a, &p) > mape(&a, &p));
+    }
+
+    #[test]
+    fn quantiles() {
+        let xs = [3.0, 1.0, 2.0, 4.0];
+        assert_eq!(quantile(&xs, 0.0), 1.0);
+        assert_eq!(quantile(&xs, 1.0), 4.0);
+        assert_eq!(median(&xs), 2.5);
+        let f = five_num(&xs);
+        assert_eq!(f.min, 1.0);
+        assert_eq!(f.max, 4.0);
+    }
+
+    #[test]
+    fn pearson_perfect_and_anti() {
+        let x = [1.0, 2.0, 3.0];
+        assert!((pearson_r(&x, &[2.0, 4.0, 6.0]) - 1.0).abs() < 1e-12);
+        assert!((pearson_r(&x, &[3.0, 2.0, 1.0]) + 1.0).abs() < 1e-12);
+    }
+}

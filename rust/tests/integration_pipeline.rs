@@ -1,0 +1,140 @@
+//! Whole-pipeline integration (no PJRT needed): characterize -> fit ->
+//! explore -> pareto -> co-explore -> RTL, asserting the paper's
+//! qualitative conclusions hold end-to-end through the public API.
+
+use std::collections::BTreeMap;
+
+use quidam::accuracy::paper::PaperAccuracy;
+use quidam::accuracy::AccuracyProvider;
+use quidam::coexplore;
+use quidam::config::{AcceleratorConfig, SweepSpace};
+use quidam::coordinator::{paper_workloads, unique_layers, Coordinator};
+use quidam::dse;
+use quidam::models::{zoo, Dataset};
+use quidam::pe::PeType;
+use quidam::ppa::PpaModels;
+use quidam::rtl::verilog;
+use quidam::synthesis::synthesize;
+use quidam::tech::TechLibrary;
+use quidam::util::stats::{mape, median};
+
+fn pipeline_models(coord: &Coordinator) -> PpaModels {
+    let layers = unique_layers(&paper_workloads());
+    let data = coord.characterize_all(&layers, 150, 1234);
+    PpaModels::fit(&data, 3)
+}
+
+#[test]
+fn full_pipeline_reproduces_headline_claims() {
+    let coord = Coordinator::default();
+    let models = pipeline_models(&coord);
+
+    // --- Held-out model quality (Figs 6-8 signal).
+    let layers = unique_layers(&[zoo::resnet_cifar(20, Dataset::Cifar10)]);
+    let tech = TechLibrary::freepdk45();
+    let held = quidam::ppa::characterize(
+        &coord.space, PeType::Int16, &layers, 30, &tech, 0xDEAD);
+    let m = models.models(PeType::Int16);
+    let pred: Vec<f64> = held.power_x.iter().map(|x| m.power.predict(x)).collect();
+    assert!(mape(&held.power_y, &pred) < 8.0, "power MAPE too high");
+    let pred: Vec<f64> = held.area_x.iter().map(|x| m.area.predict(x)).collect();
+    assert!(mape(&held.area_y, &pred) < 8.0, "area MAPE too high");
+
+    // --- DSE over a real sub-grid (Fig 9 signal).
+    let space = SweepSpace {
+        rows: vec![8, 12, 16],
+        cols: vec![8, 14],
+        sp_if: vec![12],
+        sp_fw: vec![128, 224],
+        sp_ps: vec![24],
+        gb_kib: vec![108],
+        dram_bw: vec![16],
+        pe_types: PeType::ALL.to_vec(),
+    };
+    let net = zoo::resnet_cifar(20, Dataset::Cifar10);
+    let pts = dse::evaluate_space(&models, &space, &net.layers, 4);
+    assert_eq!(pts.len(), space.len());
+    let norm = dse::normalize(&pts);
+    let med = |pe: PeType, energy: bool| {
+        let v: Vec<f64> = norm
+            .iter()
+            .filter(|p| p.cfg.pe_type == pe)
+            .map(|p| if energy { p.norm_energy } else { p.norm_ppa })
+            .collect();
+        median(&v)
+    };
+    // LightPEs beat the INT16 reference on both axes; FP32 is worse.
+    assert!(med(PeType::LightPe1, false) > 1.2, "lpe1 ppa median");
+    assert!(med(PeType::LightPe2, false) > 1.0, "lpe2 ppa median");
+    assert!(med(PeType::LightPe1, true) < 0.7, "lpe1 energy median");
+    assert!(med(PeType::Fp32, true) > med(PeType::Int16, true),
+        "fp32 must burn more energy than int16");
+
+    // --- Accuracy-vs-efficiency Pareto (Fig 10 signal): at least one
+    // LightPE lands on the front for ResNet-20/CIFAR-10.
+    let acc = PaperAccuracy;
+    let best = dse::best_per_pe(&pts, |p| p.perf_per_area);
+    let xs: Vec<f64> = best
+        .iter()
+        .map(|(pe, _)| {
+            100.0 - acc.accuracy("resnet20", Dataset::Cifar10, *pe).unwrap()
+        })
+        .collect();
+    let ys: Vec<f64> = best.iter().map(|(_, p)| p.perf_per_area).collect();
+    let front = dse::pareto_front_min_max(&xs, &ys);
+    let light_on_front = front
+        .iter()
+        .any(|&i| matches!(best[i].0, PeType::LightPe1 | PeType::LightPe2));
+    assert!(light_on_front, "no LightPE on the accuracy/ppa front");
+
+    // --- Co-exploration (Fig 12 signal).
+    let co = coexplore::explore(&models, &space, Dataset::Cifar10, 50, 2, 7, 4);
+    let co_norm = coexplore::normalize(&co);
+    let front = coexplore::pareto(&co_norm, false);
+    assert!(!front.is_empty());
+
+    // --- RTL of the winning design elaborates.
+    let (best_pe, best_pt) = best
+        .iter()
+        .max_by(|a, b| a.1.perf_per_area.partial_cmp(&b.1.perf_per_area).unwrap())
+        .unwrap();
+    let v = verilog::generate_design(&best_pt.cfg);
+    assert!(v.contains(&format!("quidam_pe_{}", best_pe.name())));
+}
+
+#[test]
+fn model_predictions_track_ground_truth_ordering() {
+    // For every PE type the fitted models and the synthesis oracle must
+    // agree on the area/power ordering at the baseline configs.
+    let coord = Coordinator::default();
+    let models = pipeline_models(&coord);
+    let tech = TechLibrary::freepdk45();
+    let mut truth = BTreeMap::new();
+    let mut pred = BTreeMap::new();
+    for pe in PeType::ALL {
+        let cfg = AcceleratorConfig::baseline(pe);
+        truth.insert(pe, synthesize(&cfg, &tech).area_um2);
+        pred.insert(pe, models.area_um2(&cfg));
+    }
+    let mut t: Vec<_> = truth.iter().collect();
+    let mut p: Vec<_> = pred.iter().collect();
+    t.sort_by(|a, b| a.1.partial_cmp(b.1).unwrap());
+    p.sort_by(|a, b| a.1.partial_cmp(b.1).unwrap());
+    let t_order: Vec<_> = t.iter().map(|(pe, _)| **pe).collect();
+    let p_order: Vec<_> = p.iter().map(|(pe, _)| **pe).collect();
+    assert_eq!(t_order, p_order, "model inverted the PE area ordering");
+}
+
+#[test]
+fn table3_pipeline_consistency() {
+    // The synthesized fclk ordering must match the paper's Table 3 and the
+    // scaled INT16 value must land near Eyeriss's 200 MHz.
+    let tech = TechLibrary::freepdk45();
+    let f = |pe| synthesize(&AcceleratorConfig::baseline(pe), &tech).fclk_mhz;
+    assert!(f(PeType::LightPe1) > f(PeType::LightPe2));
+    assert!(f(PeType::LightPe2) > f(PeType::Int16));
+    assert!(f(PeType::Int16) > f(PeType::Fp32));
+    let scaled = quidam::tech::scaling::scale_frequency_mhz(
+        f(PeType::Int16), 45.0, 65.0);
+    assert!((scaled - 200.0).abs() < 20.0, "scaled INT16 {scaled} MHz");
+}

@@ -1,0 +1,180 @@
+//! Cross-layer integration: the Rust L3 runtime executing the L2/L1 AOT
+//! artifacts, cross-checked against the Rust-side quantization codecs.
+//!
+//! These tests prove the three layers agree: the Pallas kernel lowered from
+//! Python (probe_* artifacts) must reproduce `quant::decode_*` semantics
+//! bit-closely when executed through PJRT from Rust, and the train_step
+//! artifact must actually learn. Requires `make artifacts`; tests skip
+//! (with a loud note) when the artifact directory is missing so plain
+//! `cargo test` stays green in a fresh checkout.
+
+use quidam::pe::PeType;
+use quidam::quant;
+use quidam::runtime::{literal_f32, literal_i32, to_vec_f32, Runtime};
+use quidam::trainer::{data::SynthDataset, Trainer};
+use quidam::util::rng::Rng;
+
+const DIM: usize = 128;
+
+fn runtime() -> Option<Runtime> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts/ missing — run `make artifacts` first");
+        return None;
+    }
+    Some(Runtime::new(dir).expect("runtime"))
+}
+
+fn rand_x(rng: &mut Rng) -> Vec<f32> {
+    (0..DIM * DIM).map(|_| rng.normal() as f32).collect()
+}
+
+/// Reference matmul: y = x @ w, both row-major DIM x DIM.
+fn matmul_ref(x: &[f32], w: &[f64]) -> Vec<f32> {
+    let mut y = vec![0.0f32; DIM * DIM];
+    for i in 0..DIM {
+        for k in 0..DIM {
+            let xv = x[i * DIM + k] as f64;
+            if xv == 0.0 {
+                continue;
+            }
+            for j in 0..DIM {
+                y[i * DIM + j] += (xv * w[k * DIM + j]) as f32;
+            }
+        }
+    }
+    y
+}
+
+fn assert_close(got: &[f32], want: &[f32], tol: f32, what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length");
+    let mut worst = 0.0f32;
+    for (g, w) in got.iter().zip(want) {
+        let scale = w.abs().max(1.0);
+        worst = worst.max((g - w).abs() / scale);
+    }
+    assert!(worst < tol, "{what}: worst rel err {worst} > {tol}");
+}
+
+#[test]
+fn pot_k1_kernel_matches_rust_codec() {
+    let Some(mut rt) = runtime() else { return };
+    let mut rng = Rng::new(1);
+    let x = rand_x(&mut rng);
+    let codes: Vec<i32> = (0..DIM * DIM).map(|_| rng.below(16) as i32).collect();
+    let w: Vec<f64> = codes.iter().map(|&c| quant::decode_k1(c as u8)).collect();
+    let outs = rt
+        .execute("probe_pot_k1", &[
+            literal_f32(&x, &[DIM, DIM]).unwrap(),
+            literal_i32(&codes, &[DIM, DIM]).unwrap(),
+        ])
+        .expect("execute probe_pot_k1");
+    let got = to_vec_f32(&outs[0]).unwrap();
+    assert_close(&got, &matmul_ref(&x, &w), 2e-3, "pot_k1 kernel vs codec");
+}
+
+#[test]
+fn pot_k2_kernel_matches_rust_codec() {
+    let Some(mut rt) = runtime() else { return };
+    let mut rng = Rng::new(2);
+    let x = rand_x(&mut rng);
+    let codes: Vec<i32> = (0..DIM * DIM).map(|_| rng.below(128) as i32).collect();
+    let w: Vec<f64> = codes.iter().map(|&c| quant::decode_k2(c as u8)).collect();
+    let outs = rt
+        .execute("probe_pot_k2", &[
+            literal_f32(&x, &[DIM, DIM]).unwrap(),
+            literal_i32(&codes, &[DIM, DIM]).unwrap(),
+        ])
+        .expect("execute probe_pot_k2");
+    let got = to_vec_f32(&outs[0]).unwrap();
+    assert_close(&got, &matmul_ref(&x, &w), 2e-3, "pot_k2 kernel vs codec");
+}
+
+#[test]
+fn intq_kernel_is_plain_matmul() {
+    let Some(mut rt) = runtime() else { return };
+    let mut rng = Rng::new(3);
+    let x = rand_x(&mut rng);
+    let wf: Vec<f32> = (0..DIM * DIM).map(|_| rng.normal() as f32).collect();
+    let w64: Vec<f64> = wf.iter().map(|&v| v as f64).collect();
+    let outs = rt
+        .execute("probe_intq", &[
+            literal_f32(&x, &[DIM, DIM]).unwrap(),
+            literal_f32(&wf, &[DIM, DIM]).unwrap(),
+        ])
+        .expect("execute probe_intq");
+    let got = to_vec_f32(&outs[0]).unwrap();
+    assert_close(&got, &matmul_ref(&x, &w64), 2e-3, "intq kernel");
+}
+
+#[test]
+fn execute_rejects_wrong_arity_and_shape() {
+    let Some(mut rt) = runtime() else { return };
+    let x = literal_f32(&vec![0.0; DIM * DIM], &[DIM, DIM]).unwrap();
+    assert!(rt.execute("probe_intq", &[x]).is_err(), "arity check");
+    let bad = literal_f32(&vec![0.0; 4], &[2, 2]).unwrap();
+    let x = literal_f32(&vec![0.0; DIM * DIM], &[DIM, DIM]).unwrap();
+    assert!(rt.execute("probe_intq", &[x, bad]).is_err(), "shape check");
+    assert!(rt.execute("no_such_artifact", &[]).is_err(), "name check");
+}
+
+#[test]
+fn manifest_covers_all_pe_types() {
+    let Some(rt) = runtime() else { return };
+    for pe in PeType::ALL {
+        for kind in ["train_step", "infer"] {
+            let name = format!("{kind}_{}", pe.name());
+            let meta = rt.manifest.get(&name).expect(&name);
+            assert!(meta.nparams > 0, "{name} nparams");
+            assert!(!meta.inputs.is_empty() && !meta.outputs.is_empty());
+        }
+    }
+}
+
+#[test]
+fn train_step_learns_fp32() {
+    let Some(mut rt) = runtime() else { return };
+    let image = rt.manifest.model.get("image_size").as_usize().unwrap();
+    let classes = rt.manifest.model.get("num_classes").as_usize().unwrap();
+    let ds = SynthDataset::generate(512, image, classes, 11);
+    let mut tr = Trainer::new(&rt, PeType::Fp32, 1).unwrap();
+    let logs = tr
+        .train(&mut rt, &ds, 30, 0.05, 5, |_| {})
+        .expect("training");
+    let first: f32 = logs[..5].iter().map(|l| l.loss).sum::<f32>() / 5.0;
+    let last: f32 = logs[logs.len() - 5..].iter().map(|l| l.loss).sum::<f32>() / 5.0;
+    assert!(
+        last < first,
+        "fp32 loss did not improve: {first} -> {last}"
+    );
+}
+
+#[test]
+fn train_step_learns_lightpe1_shift_add_path() {
+    let Some(mut rt) = runtime() else { return };
+    let image = rt.manifest.model.get("image_size").as_usize().unwrap();
+    let classes = rt.manifest.model.get("num_classes").as_usize().unwrap();
+    let ds = SynthDataset::generate(512, image, classes, 12);
+    let mut tr = Trainer::new(&rt, PeType::LightPe1, 2).unwrap();
+    let logs = tr.train(&mut rt, &ds, 30, 0.05, 6, |_| {}).expect("training");
+    let first: f32 = logs[..5].iter().map(|l| l.loss).sum::<f32>() / 5.0;
+    let last: f32 = logs[logs.len() - 5..].iter().map(|l| l.loss).sum::<f32>() / 5.0;
+    assert!(last < first, "lightpe1 loss did not improve: {first} -> {last}");
+}
+
+#[test]
+fn infer_beats_chance_after_short_training() {
+    let Some(mut rt) = runtime() else { return };
+    let image = rt.manifest.model.get("image_size").as_usize().unwrap();
+    let classes = rt.manifest.model.get("num_classes").as_usize().unwrap();
+    let train = SynthDataset::generate(1024, image, classes, 13);
+    let test = SynthDataset::generate(256, image, classes, 14);
+    let mut tr = Trainer::new(&rt, PeType::LightPe2, 3).unwrap();
+    tr.train(&mut rt, &train, 60, 0.05, 7, |_| {}).expect("training");
+    let acc = tr.evaluate(&mut rt, &test).expect("eval");
+    let chance = 100.0 / classes as f64;
+    assert!(
+        acc > 1.8 * chance,
+        "lightpe2 accuracy {acc:.1}% not above chance {chance:.1}%"
+    );
+}
