@@ -51,7 +51,7 @@ fn main() {
     ));
 
     // The paper's normalization: everything vs the best INT16 point.
-    let norm = dse::normalize(&pts);
+    let norm = dse::normalize(&pts).expect("baselines include INT16");
     let mut rows = Vec::new();
     for p in &norm {
         rows.push(vec![

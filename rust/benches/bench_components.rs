@@ -7,14 +7,39 @@ use quidam::bench_harness::{group, Bench};
 use quidam::config::{AcceleratorConfig, SweepSpace};
 use quidam::dataflow::analyze_layer;
 use quidam::dse;
+use quidam::models::nas::ArchId;
 use quidam::models::{zoo, Dataset};
 use quidam::pe::PeType;
 use quidam::ppa::{characterize, latency_features, PpaModels};
 use quidam::regression::{FitOptions, PolyModel};
 use quidam::simulator::simulate_layer;
+use quidam::sweep;
 use quidam::synthesis::synthesize;
 use quidam::tech::TechLibrary;
 use quidam::util::rng::Rng;
+
+/// The old engine's splitting strategy (one pre-sized chunk per thread),
+/// kept here as the baseline the work-stealing scheduler is measured
+/// against on an imbalanced workload.
+fn fixed_chunk_eval<F>(n: usize, threads: usize, f: F) -> Vec<dse::DesignPoint>
+where
+    F: Fn(usize) -> dse::DesignPoint + Sync,
+{
+    let chunk = n.div_ceil(threads);
+    let mut out: Vec<Option<dse::DesignPoint>> = vec![None; n];
+    std::thread::scope(|s| {
+        for (t, slot) in out.chunks_mut(chunk).enumerate() {
+            let start = t * chunk;
+            let f = &f;
+            s.spawn(move || {
+                for (off, o) in slot.iter_mut().enumerate() {
+                    *o = Some(f(start + off));
+                }
+            });
+        }
+    });
+    out.into_iter().flatten().collect()
+}
 
 fn main() {
     let mut b = Bench::default();
@@ -71,6 +96,56 @@ fn main() {
     b.run("dse/pareto_front_2000_points", || {
         dse::pareto_front_min_max(&xs, &ys)
     });
+    b.run("dse/running_front_2000_points", || {
+        let mut front = quidam::sweep::reducers::ParetoFront2D::new(
+            quidam::sweep::reducers::YSense::Maximize);
+        for (i, (&x, &y)) in xs.iter().zip(&ys).enumerate() {
+            front.insert(x, y, i);
+        }
+        front.len()
+    });
+
+    group("sweep engine (points/s, imbalanced coexplore workload)");
+    // Co-exploration items are imbalanced by construction: each sampled
+    // architecture has a different layer count. Sorting them by cost puts
+    // every expensive item in the last fixed chunk — the old engine's
+    // worst case; the work-stealing queue just keeps feeding idle threads.
+    let mut wrng = Rng::new(0xBA1A);
+    let mut work: Vec<(ArchId, AcceleratorConfig)> = (0..768)
+        .map(|_| (ArchId::sample(&mut wrng), space.sample(&mut wrng)))
+        .collect();
+    work.sort_by_cached_key(|(a, _)| a.to_model(Dataset::Cifar10).layers.len());
+    let eval_item = |i: usize| {
+        let (arch, cfg) = &work[i];
+        let layers = arch.to_model(Dataset::Cifar10).layers;
+        dse::evaluate(&models, cfg, &layers)
+    };
+    let threads = 4;
+    b.run("sweep/serial", || {
+        (0..work.len()).map(eval_item).collect::<Vec<_>>()
+    });
+    b.run("sweep/fixed_chunk_4t", || {
+        fixed_chunk_eval(work.len(), threads, eval_item)
+    });
+    b.run("sweep/work_stealing_4t", || {
+        sweep::collect_indexed(work.len(), threads, eval_item)
+    });
+    let per_item = |name: &str| {
+        b.results()
+            .iter()
+            .find(|r| r.name == name)
+            .map(|r| work.len() as f64 / (r.median_ns * 1e-9))
+            .unwrap_or(0.0)
+    };
+    println!(
+        "\nsweep throughput: serial {:.0} points/s, fixed-chunk {:.0}, \
+         work-stealing {:.0}  (stealing vs fixed: {:.2}x)",
+        per_item("sweep/serial"),
+        per_item("sweep/fixed_chunk_4t"),
+        per_item("sweep/work_stealing_4t"),
+        b.ratio("sweep/fixed_chunk_4t", "sweep/work_stealing_4t")
+            .unwrap_or(f64::NAN),
+    );
 
     println!("\n{} benches complete", b.results().len());
 }

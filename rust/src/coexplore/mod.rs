@@ -13,6 +13,8 @@ use crate::models::Dataset;
 use crate::pe::PeType;
 use crate::ppa::PpaModels;
 use crate::accuracy::proxy::predict_error;
+use crate::sweep;
+use crate::sweep::reducers::{ParetoFront2D, YSense};
 use crate::util::rng::Rng;
 
 /// One (hardware, architecture) pair, scored.
@@ -36,6 +38,11 @@ pub struct NormCoPoint {
 
 /// Sample and score `n_archs` architectures x `hw_per_arch` hardware
 /// configs (paper: 1000 DNN models x randomly sampled accelerators).
+///
+/// Runs on the work-stealing scheduler: co-exploration items are the
+/// archetypal imbalanced workload (each architecture has a different
+/// layer count), which is exactly where the old fixed-chunk split left
+/// threads idle behind the slowest chunk.
 pub fn explore(
     models: &PpaModels,
     space: &SweepSpace,
@@ -46,7 +53,8 @@ pub fn explore(
     threads: usize,
 ) -> Vec<CoPoint> {
     let mut rng = Rng::new(seed);
-    // Pre-sample the work list, then score in parallel.
+    // Pre-sample the work list (deterministic per seed), then score on
+    // the shared queue.
     let mut work: Vec<(ArchId, crate::config::AcceleratorConfig)> = Vec::new();
     for _ in 0..n_archs {
         let arch = ArchId::sample(&mut rng);
@@ -54,27 +62,27 @@ pub fn explore(
             work.push((arch, space.sample(&mut rng)));
         }
     }
-    let threads = threads.clamp(1, 64);
-    let chunk = work.len().div_ceil(threads);
-    let mut out: Vec<Option<CoPoint>> = vec![None; work.len()];
-    std::thread::scope(|s| {
-        for (slot, batch) in out.chunks_mut(chunk).zip(work.chunks(chunk)) {
-            s.spawn(move || {
-                for (o, (arch, cfg)) in slot.iter_mut().zip(batch) {
-                    let layers = arch.to_model(dataset).layers;
-                    let pt = dse::evaluate(models, cfg, &layers);
-                    *o = Some(CoPoint {
-                        arch: *arch,
-                        cfg: *cfg,
-                        top1_err: predict_error(arch, dataset, cfg.pe_type),
-                        energy_j: pt.energy_j,
-                        area_um2: pt.area_um2,
-                    });
-                }
-            });
-        }
-    });
-    out.into_iter().flatten().collect()
+    sweep::collect_indexed(work.len(), threads, |i| {
+        let (arch, cfg) = &work[i];
+        score_pair(models, dataset, *arch, *cfg)
+    })
+}
+
+fn score_pair(
+    models: &PpaModels,
+    dataset: Dataset,
+    arch: ArchId,
+    cfg: crate::config::AcceleratorConfig,
+) -> CoPoint {
+    let layers = arch.to_model(dataset).layers;
+    let pt = dse::evaluate(models, &cfg, &layers);
+    CoPoint {
+        arch,
+        cfg,
+        top1_err: predict_error(&arch, dataset, cfg.pe_type),
+        energy_j: pt.energy_j,
+        area_um2: pt.area_um2,
+    }
 }
 
 /// Normalize per Fig 12: energy vs the minimum-energy INT16 pair, area vs
@@ -96,14 +104,19 @@ pub fn normalize(points: &[CoPoint]) -> Vec<NormCoPoint> {
 }
 
 /// Pareto front over (top-1 error, normalized metric), both minimized.
-/// Returns indices into `points`.
+/// Returns indices into `points`, sorted by the metric axis.
+///
+/// Built on the running-front reducer, so the same code path serves both
+/// post-hoc extraction here and streaming extraction in fig12/`explore`
+/// (front membership is invariant under the positive per-axis scaling
+/// `normalize` applies, so raw and normalized fronts agree).
 pub fn pareto(points: &[NormCoPoint], use_area: bool) -> Vec<usize> {
-    let xs: Vec<f64> = points
-        .iter()
-        .map(|p| if use_area { p.norm_area } else { p.norm_energy })
-        .collect();
-    let ys: Vec<f64> = points.iter().map(|p| p.top1_err).collect();
-    dse::pareto_front_min_min(&xs, &ys)
+    let mut front: ParetoFront2D<usize> = ParetoFront2D::new(YSense::Minimize);
+    for (i, p) in points.iter().enumerate() {
+        let x = if use_area { p.norm_area } else { p.norm_energy };
+        front.insert(x, p.top1_err, i);
+    }
+    front.points().iter().map(|p| p.2).collect()
 }
 
 #[cfg(test)]

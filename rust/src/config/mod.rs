@@ -207,11 +207,140 @@ impl SweepSpace {
         s
     }
 
-    /// Iterate every point of the grid.
-    pub fn iter(&self) -> impl Iterator<Item = AcceleratorConfig> + '_ {
-        (0..self.len()).map(move |i| self.point(i))
+    /// Lazily iterate every point of the grid, in `point(i)` order. No
+    /// materialization: the iterator holds one cursor, so walking a
+    /// million-point grid allocates nothing (the sweep engine's streaming
+    /// contract, DESIGN.md §4).
+    pub fn iter(&self) -> SweepIter<'_> {
+        SweepIter { space: self, next: 0, len: self.len() }
+    }
+
+    /// A denser grid (~1.9M points with all four PE types) for scale runs
+    /// of `quidam explore`; every axis stays inside `validate()` ranges.
+    pub fn dense() -> SweepSpace {
+        SweepSpace {
+            rows: (8..=64).step_by(2).collect(),
+            cols: (8..=64).step_by(2).collect(),
+            sp_if: vec![8, 12, 16, 24],
+            sp_fw: vec![64, 128, 224, 448],
+            sp_ps: vec![16, 24, 32],
+            gb_kib: vec![64, 108, 256, 512],
+            dram_bw: vec![8, 16, 32],
+            pe_types: PeType::ALL.to_vec(),
+        }
+    }
+
+    /// Check every grid point lies inside `AcceleratorConfig::validate`'s
+    /// legal ranges. Field checks are independent, so validating the
+    /// element-wise min and max of each axis covers the whole cartesian
+    /// grid without walking it.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.pe_types.is_empty() {
+            return Err("sweep space has no PE types".into());
+        }
+        let minmax = |xs: &[usize], name: &str| -> Result<(usize, usize), String> {
+            match (xs.iter().min(), xs.iter().max()) {
+                (Some(&lo), Some(&hi)) => Ok((lo, hi)),
+                _ => Err(format!("sweep axis '{name}' is empty")),
+            }
+        };
+        let rows = minmax(&self.rows, "rows")?;
+        let cols = minmax(&self.cols, "cols")?;
+        let sp_if = minmax(&self.sp_if, "sp-if")?;
+        let sp_fw = minmax(&self.sp_fw, "sp-fw")?;
+        let sp_ps = minmax(&self.sp_ps, "sp-ps")?;
+        let gb_kib = minmax(&self.gb_kib, "gb")?;
+        let dram_bw = minmax(&self.dram_bw, "dram-bw")?;
+        let picks: [fn((usize, usize)) -> usize; 2] = [|p| p.0, |p| p.1];
+        for pick in picks {
+            AcceleratorConfig {
+                pe_type: self.pe_types[0],
+                rows: pick(rows),
+                cols: pick(cols),
+                sp_if: pick(sp_if),
+                sp_fw: pick(sp_fw),
+                sp_ps: pick(sp_ps),
+                gb_kib: pick(gb_kib),
+                dram_bw: pick(dram_bw),
+            }
+            .validate()?;
+        }
+        Ok(())
+    }
+
+    /// Override one axis by name (CLI `--rows 8,12,16` / `--rows 8:64:4`).
+    pub fn set_axis(&mut self, name: &str, values: Vec<usize>) -> Result<(), String> {
+        if values.is_empty() {
+            return Err(format!("axis '{name}': empty value list"));
+        }
+        match name {
+            "rows" => self.rows = values,
+            "cols" => self.cols = values,
+            "sp-if" => self.sp_if = values,
+            "sp-fw" => self.sp_fw = values,
+            "sp-ps" => self.sp_ps = values,
+            "gb" => self.gb_kib = values,
+            "dram-bw" => self.dram_bw = values,
+            other => return Err(format!("unknown sweep axis '{other}'")),
+        }
+        Ok(())
     }
 }
+
+/// Parse a CLI axis value list: either comma-separated (`8,12,16`) or an
+/// inclusive range with step (`8:64:4`, step defaulting to 1 as `8:64`).
+pub fn parse_axis(s: &str) -> Result<Vec<usize>, String> {
+    let bad = |what: &str| format!("bad axis value '{s}': {what}");
+    if s.contains(':') {
+        let parts: Vec<&str> = s.split(':').collect();
+        if parts.len() != 2 && parts.len() != 3 {
+            return Err(bad("want lo:hi or lo:hi:step"));
+        }
+        let lo: usize = parts[0].parse().map_err(|_| bad("lo"))?;
+        let hi: usize = parts[1].parse().map_err(|_| bad("hi"))?;
+        let step: usize = if parts.len() == 3 {
+            parts[2].parse().map_err(|_| bad("step"))?
+        } else {
+            1
+        };
+        if step == 0 || hi < lo {
+            return Err(bad("want lo <= hi and step > 0"));
+        }
+        Ok((lo..=hi).step_by(step).collect())
+    } else {
+        s.split(',')
+            .map(|v| v.trim().parse().map_err(|_| bad(v)))
+            .collect()
+    }
+}
+
+/// Lazy cursor over a [`SweepSpace`] grid (see [`SweepSpace::iter`]).
+#[derive(Debug, Clone)]
+pub struct SweepIter<'a> {
+    space: &'a SweepSpace,
+    next: usize,
+    len: usize,
+}
+
+impl Iterator for SweepIter<'_> {
+    type Item = AcceleratorConfig;
+
+    fn next(&mut self) -> Option<AcceleratorConfig> {
+        if self.next >= self.len {
+            return None;
+        }
+        let cfg = self.space.point(self.next);
+        self.next += 1;
+        Some(cfg)
+    }
+
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        let left = self.len - self.next.min(self.len);
+        (left, Some(left))
+    }
+}
+
+impl ExactSizeIterator for SweepIter<'_> {}
 
 #[cfg(test)]
 mod tests {
@@ -278,5 +407,87 @@ mod tests {
         let s = SweepSpace::default().for_pe(PeType::Fp32);
         assert_eq!(s.pe_types, vec![PeType::Fp32]);
         assert_eq!(s.len(), SweepSpace::default().len() / 4);
+    }
+
+    #[test]
+    fn lazy_iter_covers_grid_exactly_once_matching_point_index() {
+        let s = SweepSpace {
+            rows: vec![8, 12],
+            cols: vec![8, 14, 16],
+            sp_if: vec![12],
+            sp_fw: vec![128, 224],
+            sp_ps: vec![24],
+            gb_kib: vec![108, 256],
+            dram_bw: vec![16],
+            pe_types: PeType::ALL.to_vec(),
+        };
+        let it = s.iter();
+        assert_eq!(it.len(), s.len());
+        let mut seen = std::collections::BTreeSet::new();
+        let mut count = 0usize;
+        for (i, cfg) in s.iter().enumerate() {
+            assert_eq!(cfg, s.point(i), "iterator diverged at {i}");
+            assert!(seen.insert(format!("{cfg:?}")), "duplicate at {i}");
+            count += 1;
+        }
+        assert_eq!(count, s.len());
+    }
+
+    #[test]
+    fn lazy_iter_size_hint_shrinks() {
+        let s = SweepSpace::default();
+        let mut it = s.iter();
+        let n = s.len();
+        assert_eq!(it.size_hint(), (n, Some(n)));
+        it.next();
+        assert_eq!(it.size_hint(), (n - 1, Some(n - 1)));
+    }
+
+    #[test]
+    fn dense_space_reaches_million_points_and_stays_legal() {
+        let s = SweepSpace::dense();
+        assert!(s.len() >= 1_000_000, "dense grid only {} points", s.len());
+        // Spot-check corners of the grid without walking all of it.
+        s.point(0).validate().unwrap();
+        s.point(s.len() - 1).validate().unwrap();
+        s.point(s.len() / 2).validate().unwrap();
+    }
+
+    #[test]
+    fn parse_axis_forms() {
+        assert_eq!(parse_axis("8,12,16").unwrap(), vec![8, 12, 16]);
+        assert_eq!(parse_axis("8").unwrap(), vec![8]);
+        assert_eq!(parse_axis("8:14:2").unwrap(), vec![8, 10, 12, 14]);
+        assert_eq!(parse_axis("3:5").unwrap(), vec![3, 4, 5]);
+        assert!(parse_axis("8:4").is_err());
+        assert!(parse_axis("8:14:0").is_err());
+        assert!(parse_axis("a,b").is_err());
+        assert!(parse_axis("1:2:3:4").is_err());
+    }
+
+    #[test]
+    fn set_axis_overrides_and_rejects_unknown() {
+        let mut s = SweepSpace::default();
+        s.set_axis("rows", vec![4, 8]).unwrap();
+        assert_eq!(s.rows, vec![4, 8]);
+        s.set_axis("gb", vec![64]).unwrap();
+        assert_eq!(s.gb_kib, vec![64]);
+        assert!(s.set_axis("rows", vec![]).is_err());
+        assert!(s.set_axis("nope", vec![1]).is_err());
+    }
+
+    #[test]
+    fn space_validate_catches_out_of_range_axes() {
+        assert!(SweepSpace::default().validate().is_ok());
+        assert!(SweepSpace::dense().validate().is_ok());
+        let mut s = SweepSpace::default();
+        s.set_axis("rows", vec![0, 8]).unwrap(); // rows=0 is illegal
+        assert!(s.validate().is_err());
+        let mut s = SweepSpace::default();
+        s.set_axis("gb", vec![4096]).unwrap(); // above the 1024 KiB cap
+        assert!(s.validate().is_err());
+        let mut s = SweepSpace::default();
+        s.pe_types.clear();
+        assert!(s.validate().is_err());
     }
 }

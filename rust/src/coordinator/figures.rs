@@ -18,10 +18,11 @@ use crate::ppa::{characterize, PpaModels};
 use crate::regression::{select_degree, FitOptions};
 use crate::report::{f1, f3, render_scatter_loglog, render_table, render_violin, sci, write_csv};
 use crate::simulator::simulate_network;
+use crate::sweep;
 use crate::synthesis::synthesize;
 use crate::tech::scaling;
 use crate::util::rng::Rng;
-use crate::util::stats::{mape, mean, pearson_r};
+use crate::util::stats::{mape, mean, pearson_r, StreamingFiveNum};
 
 use super::Coordinator;
 
@@ -32,26 +33,24 @@ fn sample_points(
     n: usize,
     seed: u64,
 ) -> Vec<DesignPoint> {
-    // Sample the sweep uniformly (the full grid is exercised by --full /
-    // benches); always include the baselines so normalization is stable.
+    // Sample the sweep uniformly (the full grid is exercised by `quidam
+    // explore` / benches); always include the baselines so normalization
+    // is stable.
+    let cfgs = sampled_configs(coord, n, seed);
+    sweep::collect_indexed(cfgs.len(), coord.threads, |i| {
+        dse::evaluate(models, &cfgs[i], layers)
+    })
+}
+
+/// The four baselines plus `n` uniform samples of the coordinator's space.
+fn sampled_configs(coord: &Coordinator, n: usize, seed: u64) -> Vec<AcceleratorConfig> {
     let mut rng = Rng::new(seed);
     let mut cfgs: Vec<AcceleratorConfig> =
         PeType::ALL.iter().map(|&pe| AcceleratorConfig::baseline(pe)).collect();
     for _ in 0..n {
         cfgs.push(coord.space.sample(&mut rng));
     }
-    let chunk = cfgs.len().div_ceil(coord.threads.max(1));
-    let mut out: Vec<Option<DesignPoint>> = vec![None; cfgs.len()];
-    std::thread::scope(|s| {
-        for (slot, batch) in out.chunks_mut(chunk).zip(cfgs.chunks(chunk)) {
-            s.spawn(move || {
-                for (o, cfg) in slot.iter_mut().zip(batch) {
-                    *o = Some(dse::evaluate(models, cfg, layers));
-                }
-            });
-        }
-    });
-    out.into_iter().flatten().collect()
+    cfgs
 }
 
 /// Fig 4: DSE scatter — normalized perf/area vs normalized energy across
@@ -59,7 +58,10 @@ fn sample_points(
 pub fn fig4(coord: &Coordinator, models: &PpaModels, out: &Path, n: usize) -> String {
     let net = zoo::resnet_cifar(20, Dataset::Cifar10);
     let pts = sample_points(coord, models, &net.layers, n, 0xF14);
-    let norm = dse::normalize(&pts);
+    let norm = match dse::normalize(&pts) {
+        Ok(n) => n,
+        Err(e) => return format!("== Fig 4 == skipped: {e}\n"),
+    };
     let mut rows = Vec::new();
     let mut series: Vec<(&str, Vec<(f64, f64)>)> = Vec::new();
     for pe in PeType::ALL {
@@ -185,19 +187,31 @@ pub fn fig678(coord: &Coordinator, models: &PpaModels, out: &Path,
 
 /// Fig 9: violin distributions of norm perf/area + energy per PE type, and
 /// the on-average improvement claims.
+///
+/// The violin statistics fold through the streaming five-number reducers
+/// (util::stats::StreamingFiveNum) rather than buffering metric vectors —
+/// the same path `quidam explore` uses at million-point scale, exercised
+/// here at figure scale so the two cannot drift apart.
 pub fn fig9(coord: &Coordinator, models: &PpaModels, out: &Path, n: usize) -> String {
     let workloads = super::paper_workloads();
-    let mut all_ppa: BTreeMap<PeType, Vec<f64>> = BTreeMap::new();
-    let mut all_energy: BTreeMap<PeType, Vec<f64>> = BTreeMap::new();
+    let mut all_ppa: BTreeMap<PeType, StreamingFiveNum> = BTreeMap::new();
+    let mut all_energy: BTreeMap<PeType, StreamingFiveNum> = BTreeMap::new();
     let mut best_ppa: BTreeMap<PeType, Vec<f64>> = BTreeMap::new();
     let mut best_energy: BTreeMap<PeType, Vec<f64>> = BTreeMap::new();
     let mut rows = Vec::new();
+    let mut skipped = String::new();
     for (wi, w) in workloads.iter().enumerate() {
         let pts = sample_points(coord, models, &w.layers, n, 0xF19 + wi as u64);
-        let norm = dse::normalize(&pts);
+        let norm = match dse::normalize(&pts) {
+            Ok(norm) => norm,
+            Err(e) => {
+                skipped += &format!("  (skipped {}: {e})\n", w.name);
+                continue;
+            }
+        };
         for p in &norm {
-            all_ppa.entry(p.cfg.pe_type).or_default().push(p.norm_ppa);
-            all_energy.entry(p.cfg.pe_type).or_default().push(p.norm_energy);
+            all_ppa.entry(p.cfg.pe_type).or_default().observe(p.norm_ppa);
+            all_energy.entry(p.cfg.pe_type).or_default().observe(p.norm_energy);
             rows.push(vec![
                 format!("{}-{}", w.name, w.dataset.name()),
                 p.cfg.pe_type.name().into(),
@@ -209,11 +223,13 @@ pub fn fig9(coord: &Coordinator, models: &PpaModels, out: &Path, n: usize) -> St
             let per_pe: Vec<&dse::NormPoint> =
                 norm.iter().filter(|p| p.cfg.pe_type == pe).collect();
             if let Some(b) = per_pe.iter().map(|p| p.norm_ppa)
-                .max_by(|a, b| a.partial_cmp(b).unwrap()) {
+                .filter(|v| v.is_finite())
+                .max_by(f64::total_cmp) {
                 best_ppa.entry(pe).or_default().push(b);
             }
             if let Some(b) = per_pe.iter().map(|p| p.norm_energy)
-                .min_by(|a, b| a.partial_cmp(b).unwrap()) {
+                .filter(|v| v.is_finite())
+                .min_by(f64::total_cmp) {
                 best_energy.entry(pe).or_default().push(b);
             }
         }
@@ -221,10 +237,10 @@ pub fn fig9(coord: &Coordinator, models: &PpaModels, out: &Path, n: usize) -> St
     write_csv(&out.join("fig9_distributions.csv"),
               &["workload", "pe_type", "norm_perf_per_area", "norm_energy"],
               &rows).ok();
-    let mut s = String::new();
-    let groups = |m: &BTreeMap<PeType, Vec<f64>>| -> Vec<(String, crate::util::stats::FiveNum)> {
-        PeType::ALL.iter().map(|pe| {
-            (pe.name().to_string(), crate::util::stats::five_num(&m[pe]))
+    let mut s = skipped;
+    let groups = |m: &BTreeMap<PeType, StreamingFiveNum>| -> Vec<(String, crate::util::stats::FiveNum)> {
+        PeType::ALL.iter().copied().filter(|pe| m.contains_key(pe)).map(|pe| {
+            (pe.name().to_string(), m[&pe].summary())
         }).collect()
     };
     s += &render_violin("Fig 9 (left): norm perf/area per PE type",
@@ -265,18 +281,31 @@ pub fn fig10_11_table2(
     ];
     let mut text = String::new();
     for (name, net) in &suite {
-        let pts = sample_points(coord, models, &net.layers, n, 0xF10);
-        let ref_pt = dse::best_int16_reference(&pts).unwrap();
+        // One streaming pass through the SweepSummary reducer: running
+        // best-INT16 reference, per-PE top-1 by perf/area AND by energy,
+        // and exact per-PE energy minima — no materialized point vector.
+        let cfgs = sampled_configs(coord, n, 0xF10);
+        let summary = dse::stream_configs(
+            models, &cfgs, &net.layers, coord.threads,
+            dse::Objective::PerfPerArea, 1);
+        let Some(ref_pt) = summary.best_int16 else {
+            text += &format!("(skipped {name}: no INT16 point sampled)\n");
+            continue;
+        };
         // Energy column normalizes against the *minimum-energy* INT16
         // configuration (Fig 11 / Table 2 convention: INT16 energy = 1x).
-        let ref_e = pts
-            .iter()
-            .filter(|p| p.cfg.pe_type == crate::pe::PeType::Int16)
-            .map(|p| p.energy_j)
-            .fold(f64::INFINITY, f64::min);
+        let ref_e = summary.energy_stats[&crate::pe::PeType::Int16]
+            .summary()
+            .min;
         // Best per PE by perf/area (Fig 10) and by energy (Fig 11).
-        let best_ppa = dse::best_per_pe(&pts, |p| p.perf_per_area);
-        let best_e = dse::best_per_pe(&pts, |p| -p.energy_j);
+        let best_of = |m: &BTreeMap<PeType, crate::sweep::reducers::TopK<DesignPoint>>|
+            -> Vec<(PeType, DesignPoint)> {
+            m.iter()
+                .filter_map(|(&pe, t)| t.best().map(|(_, p)| (pe, *p)))
+                .collect()
+        };
+        let best_ppa = best_of(&summary.top);
+        let best_e = best_of(&summary.top_energy);
         for ds in [Dataset::Cifar10, Dataset::Cifar100] {
             for (pe, p) in &best_ppa {
                 let a = acc.accuracy(name, ds, *pe).unwrap_or(f64::NAN);

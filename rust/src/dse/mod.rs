@@ -1,12 +1,21 @@
 //! Design-space exploration engine: evaluate hardware configs through the
 //! pre-characterized PPA models, normalize against the best-INT16 reference
 //! (the paper's convention in Figs 4/9/10/11), and extract Pareto fronts.
+//!
+//! Evaluation runs on the work-stealing scheduler in [`crate::sweep`];
+//! million-point sweeps should use [`stream_space`], which folds every
+//! point into O(front)-memory online reducers instead of materializing a
+//! `Vec<DesignPoint>` (DESIGN.md §4).
+
+use std::collections::BTreeMap;
 
 use crate::config::{AcceleratorConfig, SweepSpace};
 use crate::models::ConvLayer;
 use crate::pe::PeType;
 use crate::ppa::PpaModels;
-use crate::util::stats::FiveNum;
+use crate::sweep::reducers::{ParetoFront2D, TopK, YSense};
+use crate::sweep::{self, Reducer};
+use crate::util::stats::{FiveNum, StreamingFiveNum};
 
 /// One evaluated design point on a fixed workload.
 #[derive(Debug, Clone, Copy)]
@@ -39,39 +48,241 @@ pub fn evaluate(
     }
 }
 
-/// Evaluate every point of a sweep in parallel (std::thread::scope — the
-/// vendored crate set has no rayon).
+/// Evaluate every point of a sweep on the work-stealing scheduler,
+/// materializing the results in grid order. For spaces too large to hold
+/// in memory use [`stream_space`] instead.
 pub fn evaluate_space(
     models: &PpaModels,
     space: &SweepSpace,
     layers: &[ConvLayer],
     threads: usize,
 ) -> Vec<DesignPoint> {
-    let n = space.len();
-    let threads = threads.clamp(1, 64);
-    let chunk = n.div_ceil(threads);
-    let mut out: Vec<Option<DesignPoint>> = vec![None; n];
-    std::thread::scope(|s| {
-        for (t, slot) in out.chunks_mut(chunk).enumerate() {
-            let start = t * chunk;
-            s.spawn(move || {
-                for (off, o) in slot.iter_mut().enumerate() {
-                    let cfg = space.point(start + off);
-                    *o = Some(evaluate(models, &cfg, layers));
-                }
-            });
+    sweep::collect_indexed(space.len(), threads, |i| {
+        evaluate(models, &space.point(i), layers)
+    })
+}
+
+/// Maximizing objectives a sweep can rank designs by (`quidam explore
+/// --objective`). Metrics the paper minimizes (energy, latency, power)
+/// are scored negated so "bigger score is better" holds everywhere.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Objective {
+    PerfPerArea,
+    Energy,
+    Latency,
+    Power,
+}
+
+impl Objective {
+    pub fn from_name(s: &str) -> Result<Objective, String> {
+        match s {
+            "ppa" | "perf-per-area" => Ok(Objective::PerfPerArea),
+            "energy" => Ok(Objective::Energy),
+            "latency" => Ok(Objective::Latency),
+            "power" => Ok(Objective::Power),
+            other => Err(format!(
+                "unknown objective '{other}' (want ppa|energy|latency|power)"
+            )),
         }
-    });
-    out.into_iter().flatten().collect()
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Objective::PerfPerArea => "perf_per_area",
+            Objective::Energy => "energy",
+            Objective::Latency => "latency",
+            Objective::Power => "power",
+        }
+    }
+
+    /// The raw metric value for reporting.
+    pub fn value(&self, p: &DesignPoint) -> f64 {
+        match self {
+            Objective::PerfPerArea => p.perf_per_area,
+            Objective::Energy => p.energy_j,
+            Objective::Latency => p.latency_s,
+            Objective::Power => p.power_mw,
+        }
+    }
+
+    /// Maximizing score (minimized metrics are negated).
+    pub fn score(&self, p: &DesignPoint) -> f64 {
+        match self {
+            Objective::PerfPerArea => p.perf_per_area,
+            _ => -self.value(p),
+        }
+    }
+}
+
+/// Streaming summary of a sweep: running energy-vs-perf/area Pareto front,
+/// per-PE top-K by objective, per-PE five-number metric summaries, and the
+/// running best-INT16 normalization reference. Memory is O(front + K +
+/// constants) — independent of how many points stream through.
+pub struct SweepSummary {
+    pub objective: Objective,
+    /// Running front over (energy_j, perf_per_area): min energy, max ppa.
+    pub front: ParetoFront2D<AcceleratorConfig>,
+    /// Best K configs per PE type under `objective`.
+    pub top: BTreeMap<PeType, TopK<DesignPoint>>,
+    /// Best K configs per PE type by (lowest) energy — always tracked,
+    /// since the paper's Fig 10/11 pair reports both selections.
+    pub top_energy: BTreeMap<PeType, TopK<DesignPoint>>,
+    /// Per-PE streaming five-number summary of the objective metric.
+    pub obj_stats: BTreeMap<PeType, StreamingFiveNum>,
+    /// Per-PE streaming five-number summary of energy.
+    pub energy_stats: BTreeMap<PeType, StreamingFiveNum>,
+    /// Running best-perf/area INT16 point (the paper's normalization ref).
+    pub best_int16: Option<DesignPoint>,
+    pub count: usize,
+    /// Top-K size used when a PE type is first observed.
+    k_hint: usize,
+}
+
+impl SweepSummary {
+    pub fn new(objective: Objective, top_k: usize) -> SweepSummary {
+        SweepSummary {
+            objective,
+            front: ParetoFront2D::new(YSense::Maximize),
+            top: BTreeMap::new(),
+            top_energy: BTreeMap::new(),
+            obj_stats: BTreeMap::new(),
+            energy_stats: BTreeMap::new(),
+            best_int16: None,
+            count: 0,
+            k_hint: top_k.max(1),
+        }
+    }
+
+    pub fn observe(&mut self, p: &DesignPoint) {
+        self.count += 1;
+        self.front.insert(p.energy_j, p.perf_per_area, p.cfg);
+        let k = self.k_hint;
+        self.top
+            .entry(p.cfg.pe_type)
+            .or_insert_with(|| TopK::new(k))
+            .insert(self.objective.score(p), *p);
+        self.top_energy
+            .entry(p.cfg.pe_type)
+            .or_insert_with(|| TopK::new(k))
+            .insert(-p.energy_j, *p);
+        self.obj_stats
+            .entry(p.cfg.pe_type)
+            .or_default()
+            .observe(self.objective.value(p));
+        self.energy_stats
+            .entry(p.cfg.pe_type)
+            .or_default()
+            .observe(p.energy_j);
+        if p.cfg.pe_type == PeType::Int16
+            && p.perf_per_area.is_finite()
+            && self
+                .best_int16
+                .map(|b| p.perf_per_area > b.perf_per_area)
+                .unwrap_or(true)
+        {
+            self.best_int16 = Some(*p);
+        }
+    }
+}
+
+fn merge_topk_map(
+    dst: &mut BTreeMap<PeType, TopK<DesignPoint>>,
+    src: BTreeMap<PeType, TopK<DesignPoint>>,
+) {
+    for (pe, t) in src {
+        match dst.entry(pe) {
+            std::collections::btree_map::Entry::Occupied(mut e) => {
+                e.get_mut().merge(t)
+            }
+            std::collections::btree_map::Entry::Vacant(e) => {
+                e.insert(t);
+            }
+        }
+    }
+}
+
+impl Reducer for SweepSummary {
+    fn merge(&mut self, other: Self) {
+        self.count += other.count;
+        self.front.merge(other.front);
+        merge_topk_map(&mut self.top, other.top);
+        merge_topk_map(&mut self.top_energy, other.top_energy);
+        for (pe, s) in other.obj_stats {
+            self.obj_stats.entry(pe).or_default().merge(&s);
+        }
+        for (pe, s) in other.energy_stats {
+            self.energy_stats.entry(pe).or_default().merge(&s);
+        }
+        if let Some(o) = other.best_int16 {
+            if self
+                .best_int16
+                .map(|b| o.perf_per_area > b.perf_per_area)
+                .unwrap_or(true)
+            {
+                self.best_int16 = Some(o);
+            }
+        }
+    }
+}
+
+/// Stream an entire sweep through the work-stealing scheduler without
+/// materializing it. Each evaluated point is folded into a
+/// [`SweepSummary`]; `row` may render it into an output line which is
+/// forwarded (bounded, with backpressure) to `sink` on the calling
+/// thread. Peak memory: O(threads x summary), not O(space).
+pub fn stream_space<F, W>(
+    models: &PpaModels,
+    space: &SweepSpace,
+    layers: &[ConvLayer],
+    threads: usize,
+    objective: Objective,
+    top_k: usize,
+    row: F,
+    sink: W,
+) -> SweepSummary
+where
+    F: Fn(&DesignPoint) -> Option<String> + Sync,
+    W: FnMut(String),
+{
+    sweep::map_reduce_stream(
+        space.len(),
+        threads,
+        || SweepSummary::new(objective, top_k),
+        |i, summary| {
+            let p = evaluate(models, &space.point(i), layers);
+            summary.observe(&p);
+            row(&p)
+        },
+        sink,
+    )
+}
+
+/// Stream an explicit config list (rather than a grid) into a
+/// [`SweepSummary`] on the work-stealing scheduler. Used by the figure
+/// harnesses, whose sampled sweeps include hand-picked baselines.
+pub fn stream_configs(
+    models: &PpaModels,
+    cfgs: &[AcceleratorConfig],
+    layers: &[ConvLayer],
+    threads: usize,
+    objective: Objective,
+    top_k: usize,
+) -> SweepSummary {
+    sweep::map_reduce(
+        cfgs.len(),
+        threads,
+        || SweepSummary::new(objective, top_k),
+        |i, summary| summary.observe(&evaluate(models, &cfgs[i], layers)),
+    )
 }
 
 /// The paper's normalization reference: the INT16 config with the highest
-/// performance per area in the evaluated set.
+/// finite performance per area in the evaluated set.
 pub fn best_int16_reference(points: &[DesignPoint]) -> Option<DesignPoint> {
     points
         .iter()
-        .filter(|p| p.cfg.pe_type == PeType::Int16)
-        .max_by(|a, b| a.perf_per_area.partial_cmp(&b.perf_per_area).unwrap())
+        .filter(|p| p.cfg.pe_type == PeType::Int16 && p.perf_per_area.is_finite())
+        .max_by(|a, b| a.perf_per_area.total_cmp(&b.perf_per_area))
         .copied()
 }
 
@@ -84,16 +295,20 @@ pub struct NormPoint {
     pub norm_energy: f64,
 }
 
-pub fn normalize(points: &[DesignPoint]) -> Vec<NormPoint> {
-    let r = best_int16_reference(points).expect("no INT16 point to normalize against");
-    points
+/// Normalize against the best-INT16 reference. Errors (instead of the old
+/// panic) when the evaluated set contains no usable INT16 point — e.g. a
+/// sweep restricted to LightPEs only.
+pub fn normalize(points: &[DesignPoint]) -> Result<Vec<NormPoint>, String> {
+    let r = best_int16_reference(points)
+        .ok_or("no INT16 point to normalize against (sweep a space that includes pe_type int16)")?;
+    Ok(points
         .iter()
         .map(|p| NormPoint {
             cfg: p.cfg,
             norm_ppa: p.perf_per_area / r.perf_per_area,
             norm_energy: p.energy_j / r.energy_j,
         })
-        .collect()
+        .collect())
 }
 
 /// Violin-plot statistics per PE type (Fig 9).
@@ -116,7 +331,8 @@ pub fn violin_by_pe(
 
 /// Best config per PE type under a maximizing objective (Figs 10/11 plot
 /// "the hardware configuration with the highest perf/area (resp. lowest
-/// energy) for each PE type").
+/// energy) for each PE type"). Points with non-finite objective values
+/// are ignored rather than poisoning the comparison.
 pub fn best_per_pe(
     points: &[DesignPoint],
     objective: impl Fn(&DesignPoint) -> f64,
@@ -126,21 +342,24 @@ pub fn best_per_pe(
         .filter_map(|&pe| {
             points
                 .iter()
-                .filter(|p| p.cfg.pe_type == pe)
-                .max_by(|a, b| objective(a).partial_cmp(&objective(b)).unwrap())
+                .filter(|p| p.cfg.pe_type == pe && objective(p).is_finite())
+                .max_by(|a, b| objective(a).total_cmp(&objective(b)))
                 .map(|p| (pe, *p))
         })
         .collect()
 }
 
-/// 2-D Pareto front: minimize `x`, maximize `y`. Returns indices sorted by x.
+/// 2-D Pareto front: minimize `x`, maximize `y`. Returns indices sorted
+/// by x. Total-order comparison throughout; points with non-finite
+/// coordinates never join the front (the old implementation panicked on
+/// the first NaN).
 pub fn pareto_front_min_max(xs: &[f64], ys: &[f64]) -> Vec<usize> {
     assert_eq!(xs.len(), ys.len());
-    let mut idx: Vec<usize> = (0..xs.len()).collect();
+    let mut idx: Vec<usize> = (0..xs.len())
+        .filter(|&i| xs[i].is_finite() && ys[i].is_finite())
+        .collect();
     idx.sort_by(|&a, &b| {
-        xs[a].partial_cmp(&xs[b])
-            .unwrap()
-            .then(ys[b].partial_cmp(&ys[a]).unwrap())
+        xs[a].total_cmp(&xs[b]).then(ys[b].total_cmp(&ys[a]))
     });
     let mut front = Vec::new();
     let mut best_y = f64::NEG_INFINITY;
@@ -163,7 +382,7 @@ pub fn pareto_front_min_min(xs: &[f64], ys: &[f64]) -> Vec<usize> {
 mod tests {
     use super::*;
     use crate::models::{zoo, Dataset};
-    use crate::ppa::{characterize, PpaModels};
+    use crate::ppa::characterize;
     use crate::tech::TechLibrary;
     use std::collections::BTreeMap;
 
@@ -210,7 +429,7 @@ mod tests {
         let m = models();
         let layers = &zoo::resnet_cifar(20, Dataset::Cifar10).layers;
         let pts = evaluate_space(&m, &small_space(), layers, 2);
-        let norm = normalize(&pts);
+        let norm = normalize(&pts).unwrap();
         let best = norm
             .iter()
             .filter(|p| p.cfg.pe_type == PeType::Int16)
@@ -220,13 +439,27 @@ mod tests {
     }
 
     #[test]
+    fn normalize_errors_without_int16_instead_of_panicking() {
+        // Regression: the old code `expect`ed an INT16 point and panicked
+        // on LightPE-only sweeps.
+        let m = models();
+        let layers = &zoo::resnet_cifar(20, Dataset::Cifar10).layers;
+        let mut space = small_space();
+        space.pe_types = vec![PeType::LightPe1, PeType::LightPe2];
+        let pts = evaluate_space(&m, &space, layers, 2);
+        let err = normalize(&pts).unwrap_err();
+        assert!(err.contains("INT16"), "unhelpful error: {err}");
+        assert!(normalize(&[]).is_err());
+    }
+
+    #[test]
     fn lightpe_dominates_normalized_metrics() {
         // Fig 9's headline: LightPEs achieve higher perf/area and lower
         // energy than the INT16 reference.
         let m = models();
         let layers = &zoo::resnet_cifar(20, Dataset::Cifar10).layers;
         let pts = evaluate_space(&m, &small_space(), layers, 2);
-        let norm = normalize(&pts);
+        let norm = normalize(&pts).unwrap();
         let med = |pe: PeType, f: &dyn Fn(&NormPoint) -> f64| {
             let v: Vec<f64> = norm
                 .iter()
@@ -257,6 +490,16 @@ mod tests {
     }
 
     #[test]
+    fn pareto_front_ignores_nan_instead_of_panicking() {
+        // Regression: partial_cmp().unwrap() used to panic on NaN metrics.
+        let xs = [1.0, f64::NAN, 2.0, 3.0];
+        let ys = [1.0, 9.0, f64::NAN, 4.0];
+        assert_eq!(pareto_front_min_max(&xs, &ys), vec![0, 3]);
+        let all_nan = [f64::NAN, f64::NAN];
+        assert!(pareto_front_min_max(&all_nan, &all_nan).is_empty());
+    }
+
+    #[test]
     fn best_per_pe_returns_all_types() {
         let m = models();
         let layers = &zoo::resnet_cifar(20, Dataset::Cifar10).layers;
@@ -265,6 +508,74 @@ mod tests {
         assert_eq!(best.len(), 4);
         for (pe, p) in best {
             assert_eq!(p.cfg.pe_type, pe);
+        }
+    }
+
+    #[test]
+    fn best_per_pe_skips_nan_objective() {
+        let m = models();
+        let layers = &zoo::resnet_cifar(20, Dataset::Cifar10).layers;
+        let mut pts = evaluate_space(&m, &small_space(), layers, 2);
+        // Poison one point's metric; it must neither win nor panic.
+        pts[0].perf_per_area = f64::NAN;
+        let best = best_per_pe(&pts, |p| p.perf_per_area);
+        assert_eq!(best.len(), 4);
+        for (_, p) in best {
+            assert!(p.perf_per_area.is_finite());
+        }
+    }
+
+    #[test]
+    fn stream_space_summary_matches_batch() {
+        let m = models();
+        let layers = &zoo::resnet_cifar(20, Dataset::Cifar10).layers;
+        let space = small_space();
+        let mut rows = 0usize;
+        let summary = stream_space(
+            &m,
+            &space,
+            layers,
+            4,
+            Objective::PerfPerArea,
+            3,
+            |_p| Some(String::new()),
+            |_row| rows += 1,
+        );
+        assert_eq!(summary.count, space.len());
+        assert_eq!(rows, space.len());
+
+        // Running front == batch front (associativity of Pareto extraction).
+        let pts = evaluate_space(&m, &space, layers, 1);
+        let xs: Vec<f64> = pts.iter().map(|p| p.energy_j).collect();
+        let ys: Vec<f64> = pts.iter().map(|p| p.perf_per_area).collect();
+        let batch = pareto_front_min_max(&xs, &ys);
+        assert_eq!(summary.front.len(), batch.len());
+        let mut streamed: Vec<AcceleratorConfig> =
+            summary.front.points().iter().map(|p| p.2).collect();
+        let mut expect: Vec<AcceleratorConfig> =
+            batch.iter().map(|&i| pts[i].cfg).collect();
+        let key = |c: &AcceleratorConfig| format!("{c:?}");
+        streamed.sort_by_key(key);
+        expect.sort_by_key(key);
+        assert_eq!(streamed, expect);
+
+        // Running INT16 reference == batch reference.
+        let batch_ref = best_int16_reference(&pts).unwrap();
+        let stream_ref = summary.best_int16.unwrap();
+        assert_eq!(stream_ref.cfg, batch_ref.cfg);
+
+        // Per-PE top-1 by objective == batch best_per_pe.
+        let batch_best = best_per_pe(&pts, |p| p.perf_per_area);
+        for (pe, bp) in batch_best {
+            let top = summary.top.get(&pe).unwrap();
+            assert_eq!(top.best().unwrap().1.cfg, bp.cfg, "{pe} top-1");
+        }
+
+        // Streaming stats cover every point per PE.
+        let per_pe: usize = space.len() / PeType::ALL.len();
+        for pe in PeType::ALL {
+            assert_eq!(summary.obj_stats[&pe].count, per_pe);
+            assert_eq!(summary.energy_stats[&pe].count, per_pe);
         }
     }
 }

@@ -21,6 +21,7 @@ pub mod report;
 pub mod rtl;
 pub mod runtime;
 pub mod simulator;
+pub mod sweep;
 pub mod synthesis;
 pub mod tech;
 pub mod trainer;

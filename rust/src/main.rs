@@ -5,6 +5,10 @@
 //!
 //!   quidam characterize [--cfgs N] [--degree D] [--models PATH]
 //!   quidam evaluate     --pe TYPE [--rows R --cols C ...]
+//!   quidam explore      [--dense] [--threads N] [--top-k K]
+//!                       [--objective ppa|energy|latency|power]
+//!                       [--points-out FILE] [--format csv|jsonl] (streaming
+//!                       work-stealing sweep; full flag list in README.md)
 //!   quidam figures      [--out DIR] [--samples N] (all figures + tables)
 //!   quidam fig4|fig5|fig678|fig9|fig10|fig12|table3|table4|speedup
 //!   quidam coexplore    [--archs N]
@@ -12,9 +16,11 @@
 //!   quidam train        --pe TYPE [--steps N] (PJRT QAT on synth-CIFAR)
 //!   quidam eval-trained (train + accuracy for every PE type)
 
+use std::io::Write as _;
 use std::path::PathBuf;
+use std::time::Instant;
 
-use quidam::config::AcceleratorConfig;
+use quidam::config::{parse_axis, AcceleratorConfig, SweepSpace};
 use quidam::coordinator::{figures, Coordinator};
 use quidam::dse;
 use quidam::models::{zoo, Dataset};
@@ -41,6 +47,229 @@ fn models_for(coord: &Coordinator, args: &Args) -> quidam::ppa::PpaModels {
     let cfgs = args.usize_or("cfgs", 240);
     let degree = args.usize_or("degree", 5) as u32;
     coord.load_or_build_models(&cache, cfgs, degree, args.usize_or("seed", 42) as u64)
+}
+
+/// `quidam explore` — stream a (possibly million-point) sweep through the
+/// work-stealing scheduler and the online reducers. Peak memory is bounded
+/// by the reducers (Pareto front + top-K + five-number summaries), never
+/// by the size of the grid; per-point output streams to `--points-out`
+/// through a bounded channel.
+fn run_explore(coord: &Coordinator, args: &Args, out: &std::path::Path) -> anyhow::Result<()> {
+    let models = models_for(coord, args);
+
+    // --- Sweep space: default grid, --dense scale grid, per-axis overrides.
+    let mut space = if args.flag("dense") {
+        SweepSpace::dense()
+    } else {
+        coord.space.clone()
+    };
+    for axis in ["rows", "cols", "sp-if", "sp-fw", "sp-ps", "gb", "dram-bw"] {
+        if let Some(v) = args.get(axis) {
+            let vals = parse_axis(v).map_err(anyhow::Error::msg)?;
+            space.set_axis(axis, vals).map_err(anyhow::Error::msg)?;
+        }
+    }
+    if let Some(pes) = args.get("pe") {
+        space.pe_types = pes
+            .split(',')
+            .map(|p| PeType::from_name(p.trim()))
+            .collect::<Result<Vec<_>, _>>()
+            .map_err(anyhow::Error::msg)?;
+    }
+    // Reject grids that leave AcceleratorConfig::validate's legal ranges
+    // before spending any sweep time on them.
+    space.validate().map_err(anyhow::Error::msg)?;
+
+    let threads = args.usize_or("threads", coord.threads);
+    let top_k = args.usize_or("top-k", 5);
+    let objective = dse::Objective::from_name(&args.get_or("objective", "ppa"))
+        .map_err(anyhow::Error::msg)?;
+    let net = match args.get_or("net", "resnet20").as_str() {
+        "resnet20" => zoo::resnet_cifar(20, Dataset::Cifar10),
+        "resnet56" => zoo::resnet_cifar(56, Dataset::Cifar10),
+        "vgg16" => zoo::vgg16(Dataset::Cifar10),
+        other => anyhow::bail!("unknown --net '{other}' (want resnet20|resnet56|vgg16)"),
+    };
+
+    // --- Optional per-point streaming output.
+    let jsonl = match args.get_or("format", "csv").as_str() {
+        "csv" => false,
+        "json" | "jsonl" => true,
+        other => anyhow::bail!("unknown --format '{other}' (want csv|jsonl)"),
+    };
+    const COLS: [&str; 13] = [
+        "pe_type", "rows", "cols", "sp_if", "sp_fw", "sp_ps", "gb_kib",
+        "dram_bw", "latency_s", "power_mw", "area_um2", "energy_j",
+        "perf_per_area",
+    ];
+    let mut writer: Option<std::io::BufWriter<std::fs::File>> =
+        match args.get("points-out") {
+            Some(path) => {
+                let mut w = std::io::BufWriter::new(std::fs::File::create(path)?);
+                if !jsonl {
+                    writeln!(w, "{}", COLS.join(","))?;
+                }
+                Some(w)
+            }
+            None => None,
+        };
+    let emit = writer.is_some();
+    // JSON has no NaN/inf literals — emit null so every line stays
+    // parseable even when a metric degenerates.
+    let jnum = |v: f64| -> String {
+        if v.is_finite() { format!("{v:e}") } else { "null".into() }
+    };
+    let row = |p: &dse::DesignPoint| -> Option<String> {
+        if !emit {
+            return None;
+        }
+        let c = &p.cfg;
+        Some(if jsonl {
+            format!(
+                "{{\"pe_type\":\"{}\",\"rows\":{},\"cols\":{},\"sp_if\":{},\
+                 \"sp_fw\":{},\"sp_ps\":{},\"gb_kib\":{},\"dram_bw\":{},\
+                 \"latency_s\":{},\"power_mw\":{},\"area_um2\":{},\
+                 \"energy_j\":{},\"perf_per_area\":{}}}",
+                c.pe_type.name(), c.rows, c.cols, c.sp_if, c.sp_fw, c.sp_ps,
+                c.gb_kib, c.dram_bw, jnum(p.latency_s), jnum(p.power_mw),
+                jnum(p.area_um2), jnum(p.energy_j), jnum(p.perf_per_area),
+            )
+        } else {
+            format!(
+                "{},{},{},{},{},{},{},{},{:e},{:e},{:e},{:e},{:e}",
+                c.pe_type.name(), c.rows, c.cols, c.sp_if, c.sp_fw, c.sp_ps,
+                c.gb_kib, c.dram_bw, p.latency_s, p.power_mw, p.area_um2,
+                p.energy_j, p.perf_per_area,
+            )
+        })
+    };
+
+    // --- The sweep itself.
+    let n = space.len();
+    println!(
+        "exploring {n} points ({} PE types, workload {}) on {threads} \
+         threads, objective {}",
+        space.pe_types.len(), net.name, objective.name(),
+    );
+    let t0 = Instant::now();
+    let mut write_err: Option<std::io::Error> = None;
+    let summary = dse::stream_space(
+        &models, &space, &net.layers, threads, objective, top_k, row,
+        |line| {
+            if write_err.is_none() {
+                if let Some(w) = writer.as_mut() {
+                    if let Err(e) = writeln!(w, "{line}") {
+                        write_err = Some(e);
+                    }
+                }
+            }
+        },
+    );
+    let dt = t0.elapsed().as_secs_f64();
+    if let Some(e) = write_err {
+        return Err(anyhow::Error::from(e)
+            .context(format!("writing {}", args.get_or("points-out", "?"))));
+    }
+    if let Some(mut w) = writer.take() {
+        w.flush()?;
+        println!("streamed {} per-point rows to {}", summary.count,
+                 args.get_or("points-out", "?"));
+    }
+    println!(
+        "{} points in {dt:.2}s — {:.0} points/s",
+        summary.count,
+        summary.count as f64 / dt.max(1e-9),
+    );
+
+    // --- Report: Pareto front, per-PE top-K, per-PE distributions.
+    std::fs::create_dir_all(out).ok();
+    let front_path = out.join("explore_front.csv");
+    let front_rows: Vec<Vec<String>> = summary
+        .front
+        .points()
+        .iter()
+        .map(|(e, ppa, cfg)| {
+            vec![
+                cfg.pe_type.name().to_string(),
+                cfg.rows.to_string(), cfg.cols.to_string(),
+                cfg.sp_if.to_string(), cfg.sp_fw.to_string(),
+                cfg.sp_ps.to_string(), cfg.gb_kib.to_string(),
+                cfg.dram_bw.to_string(),
+                format!("{e:e}"), format!("{ppa:e}"),
+            ]
+        })
+        .collect();
+    quidam::report::write_csv(
+        &front_path,
+        &["pe_type", "rows", "cols", "sp_if", "sp_fw", "sp_ps", "gb_kib",
+          "dram_bw", "energy_j", "perf_per_area"],
+        &front_rows,
+    )?;
+    println!(
+        "energy/perf-per-area Pareto front: {} points -> {}",
+        summary.front.len(),
+        front_path.display(),
+    );
+
+    let mut rows = Vec::new();
+    for (pe, top) in &summary.top {
+        for (rank, (_score, p)) in top.sorted().into_iter().enumerate() {
+            let c = p.cfg;
+            rows.push(vec![
+                pe.name().into(),
+                (rank + 1).to_string(),
+                format!("{:.3e}", objective.value(p)),
+                format!("{:.3e}", p.energy_j),
+                format!("{}x{} sp {}/{}/{} gb {} bw {}",
+                        c.rows, c.cols, c.sp_if, c.sp_fw, c.sp_ps,
+                        c.gb_kib, c.dram_bw),
+            ]);
+        }
+    }
+    println!("{}", render_table(
+        &format!("top-{top_k} per PE type by {}", objective.name()),
+        &["pe", "#", objective.name(), "energy J", "config"],
+        &rows,
+    ));
+
+    let mut dist = Vec::new();
+    for (pe, s) in &summary.obj_stats {
+        let f = s.summary();
+        dist.push(vec![
+            pe.name().into(),
+            format!("{:.3e}", f.min), format!("{:.3e}", f.q1),
+            format!("{:.3e}", f.median), format!("{:.3e}", f.q3),
+            format!("{:.3e}", f.max),
+        ]);
+    }
+    println!("{}", render_table(
+        &format!("{} distribution per PE type (streaming five-number)",
+                 objective.name()),
+        &["pe", "min", "q1", "median", "q3", "max"],
+        &dist,
+    ));
+
+    match summary.best_int16 {
+        Some(r) => {
+            if let Some((_, best)) = summary
+                .top
+                .iter()
+                .filter_map(|(_, t)| t.best())
+                .max_by(|a, b| a.0.total_cmp(&b.0))
+            {
+                println!(
+                    "best {} vs best-INT16 reference: {:.2}x perf/area, {:.2}x energy",
+                    best.cfg.pe_type.name(),
+                    best.perf_per_area / r.perf_per_area,
+                    best.energy_j / r.energy_j,
+                );
+            }
+        }
+        None => println!(
+            "(no INT16 point in this sweep — normalized columns omitted)"
+        ),
+    }
+    Ok(())
 }
 
 fn run(sub: &str, args: &Args) -> anyhow::Result<()> {
@@ -84,6 +313,7 @@ fn run(sub: &str, args: &Args) -> anyhow::Result<()> {
                 ],
             ));
         }
+        "explore" => run_explore(&coord, args, &out)?,
         "figures" => {
             let m = models_for(&coord, args);
             print!("{}", figures::fig4(&coord, &m, &out, samples));
@@ -162,9 +392,14 @@ fn run(sub: &str, args: &Args) -> anyhow::Result<()> {
         _ => {
             println!(
                 "QUIDAM — quantization-aware DNN accelerator + model co-exploration\n\
-                 usage: quidam <characterize|evaluate|figures|fig4|fig5|fig678|fig9|\n\
+                 usage: quidam <characterize|evaluate|explore|figures|fig4|fig5|fig678|fig9|\n\
                  fig10|fig12|table3|table4|speedup|coexplore|rtl|train|eval-trained>\n\
-                 common flags: --models PATH --cfgs N --degree D --samples N --out DIR"
+                 common flags: --models PATH --cfgs N --degree D --samples N --out DIR\n\
+                 explore flags: --dense --threads N --top-k K --objective ppa|energy|latency|power\n\
+                 \x20               --net resnet20|resnet56|vgg16 --points-out FILE --format csv|jsonl\n\
+                 \x20               --rows/--cols/--sp-if/--sp-fw/--sp-ps/--gb/--dram-bw LIST|LO:HI:STEP\n\
+                 \x20               --pe fp32,int16,lightpe2,lightpe1\n\
+                 full CLI reference: README.md; design notes: DESIGN.md"
             );
         }
     }

@@ -1,0 +1,298 @@
+//! Streaming, work-stealing sweep engine — the exploration core behind
+//! `dse::evaluate_space`, `coexplore::explore`, and the `quidam explore`
+//! CLI (DESIGN.md §4).
+//!
+//! The paper's headline is that pre-characterized PPA models answer a
+//! design query in microseconds; at that speed the *engine* becomes the
+//! bottleneck. Two problems with the old fixed-chunk `thread::scope`
+//! loops:
+//!
+//!   1. Load imbalance — co-exploration items differ wildly in cost (each
+//!      architecture has a different layer count), so pre-split chunks
+//!      leave threads idle behind the slowest chunk.
+//!   2. O(space) memory — materializing every `DesignPoint` in a `Vec`
+//!      caps sweeps at what fits in RAM; a million-point grid wants
+//!      streaming reduction instead.
+//!
+//! This module fixes both: a shared atomic-counter work queue that threads
+//! *steal* fixed-size index blocks from (self-scheduling — idle threads
+//! keep pulling work until the queue drains), plus reducer-based drivers
+//! that fold each evaluated point into O(front)-memory online summaries
+//! ([`reducers::ParetoFront2D`], [`reducers::TopK`],
+//! `util::stats::StreamingFiveNum`) instead of collecting it.
+
+pub mod reducers;
+
+use std::ops::Range;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+
+/// Hard cap on worker threads (matches the old engine's clamp).
+pub const MAX_THREADS: usize = 64;
+
+/// Block of indices a worker steals per queue hit. Small enough to
+/// balance imbalanced items, large enough to amortize the atomic.
+pub const DEFAULT_BLOCK: usize = 64;
+
+/// Clamp a requested thread count against the work size.
+pub fn effective_threads(threads: usize, n: usize) -> usize {
+    threads.clamp(1, MAX_THREADS).min(n.max(1))
+}
+
+/// Shared work queue: a single atomic cursor over `0..n`. Workers claim
+/// disjoint blocks with one `fetch_add` — no per-thread deques, no locks,
+/// and natural work stealing (fast threads simply claim more blocks).
+pub struct WorkQueue {
+    next: AtomicUsize,
+    n: usize,
+    block: usize,
+}
+
+impl WorkQueue {
+    pub fn new(n: usize, block: usize) -> WorkQueue {
+        WorkQueue { next: AtomicUsize::new(0), n, block: block.max(1) }
+    }
+
+    /// Claim the next unclaimed index block; `None` once the queue drains.
+    pub fn claim(&self) -> Option<Range<usize>> {
+        let start = self.next.fetch_add(self.block, Ordering::Relaxed);
+        if start >= self.n {
+            None
+        } else {
+            Some(start..(start + self.block).min(self.n))
+        }
+    }
+}
+
+/// Anything that can absorb per-worker results and be folded across
+/// workers at the end of a sweep.
+pub trait Reducer: Send {
+    /// Fold another worker's reducer into this one.
+    fn merge(&mut self, other: Self);
+}
+
+/// Evaluate `f(i)` for every `i in 0..n` on the work-stealing queue and
+/// return the results **in index order**. Workers collect (block-start,
+/// block-results) pairs locally; assembly is a sort + append, so no
+/// cross-thread mutable aliasing is needed.
+pub fn collect_indexed<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let threads = effective_threads(threads, n);
+    if n == 0 {
+        return Vec::new();
+    }
+    if threads == 1 {
+        return (0..n).map(f).collect();
+    }
+    let queue = WorkQueue::new(n, DEFAULT_BLOCK);
+    let mut blocks: Vec<(usize, Vec<T>)> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..threads)
+            .map(|_| {
+                let queue = &queue;
+                let f = &f;
+                s.spawn(move || {
+                    let mut local: Vec<(usize, Vec<T>)> = Vec::new();
+                    while let Some(range) = queue.claim() {
+                        let start = range.start;
+                        local.push((start, range.map(|i| f(i)).collect()));
+                    }
+                    local
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .flat_map(|h| h.join().expect("sweep worker panicked"))
+            .collect()
+    });
+    blocks.sort_by_key(|(start, _)| *start);
+    let mut out = Vec::with_capacity(n);
+    for (_, mut b) in blocks {
+        out.append(&mut b);
+    }
+    out
+}
+
+/// Streaming map-reduce: every worker folds its stolen indices into its
+/// own reducer (`body(i, &mut r)`), and the per-worker reducers are merged
+/// at the end. Nothing per-point is retained — memory is O(threads x
+/// reducer), independent of `n`.
+pub fn map_reduce<R, I, F>(n: usize, threads: usize, init: I, body: F) -> R
+where
+    R: Reducer,
+    I: Fn() -> R + Sync,
+    F: Fn(usize, &mut R) + Sync,
+{
+    map_reduce_stream(n, threads, init, |i, r| {
+        body(i, r);
+        None
+    }, |_row| {})
+}
+
+/// [`map_reduce`] plus a streaming row sink: when `body` returns
+/// `Some(row)`, the row is forwarded over a **bounded** channel to `sink`,
+/// which runs on the calling thread (e.g. a `BufWriter` emitting CSV).
+/// The bound gives backpressure, so peak memory stays at
+/// O(threads x reducer + channel bound) even for million-point sweeps.
+pub fn map_reduce_stream<R, I, F, W>(
+    n: usize,
+    threads: usize,
+    init: I,
+    body: F,
+    mut sink: W,
+) -> R
+where
+    R: Reducer,
+    I: Fn() -> R + Sync,
+    F: Fn(usize, &mut R) -> Option<String> + Sync,
+    W: FnMut(String),
+{
+    let threads = effective_threads(threads, n);
+    let queue = WorkQueue::new(n, DEFAULT_BLOCK);
+    let (tx, rx) = mpsc::sync_channel::<String>(4096);
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..threads)
+            .map(|_| {
+                let queue = &queue;
+                let body = &body;
+                let init = &init;
+                let tx = tx.clone();
+                s.spawn(move || {
+                    let mut r = init();
+                    while let Some(range) = queue.claim() {
+                        for i in range {
+                            if let Some(row) = body(i, &mut r) {
+                                // Receiver outlives workers inside this
+                                // scope; a send error only means the sink
+                                // was dropped early — rows are best-effort.
+                                let _ = tx.send(row);
+                            }
+                        }
+                    }
+                    r
+                })
+            })
+            .collect();
+        // The scope's own thread drains the channel while workers run.
+        drop(tx);
+        for row in rx {
+            sink(row);
+        }
+        let mut acc: Option<R> = None;
+        for h in handles {
+            let r = h.join().expect("sweep worker panicked");
+            match &mut acc {
+                None => acc = Some(r),
+                Some(a) => a.merge(r),
+            }
+        }
+        acc.unwrap_or_else(&init)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[derive(Default)]
+    struct Sum(u64, usize);
+
+    impl Reducer for Sum {
+        fn merge(&mut self, other: Self) {
+            self.0 += other.0;
+            self.1 += other.1;
+        }
+    }
+
+    #[test]
+    fn queue_claims_cover_range_exactly_once() {
+        let q = WorkQueue::new(1000, 7);
+        let mut seen = vec![false; 1000];
+        while let Some(r) = q.claim() {
+            for i in r {
+                assert!(!seen[i], "index {i} claimed twice");
+                seen[i] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn collect_indexed_matches_serial_in_order() {
+        for n in [0usize, 1, 63, 64, 65, 1000] {
+            for threads in [1usize, 2, 8] {
+                let got = collect_indexed(n, threads, |i| i * i);
+                let want: Vec<usize> = (0..n).map(|i| i * i).collect();
+                assert_eq!(got, want, "n={n} threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn map_reduce_sums_every_index() {
+        let n = 10_000u64;
+        let r = map_reduce(n as usize, 8, Sum::default, |i, r| {
+            r.0 += i as u64;
+            r.1 += 1;
+        });
+        assert_eq!(r.0, n * (n - 1) / 2);
+        assert_eq!(r.1, n as usize);
+    }
+
+    #[test]
+    fn map_reduce_empty_space_returns_init() {
+        let r = map_reduce(0, 4, Sum::default, |_, _| unreachable!());
+        assert_eq!(r.1, 0);
+    }
+
+    #[test]
+    fn stream_sink_receives_every_emitted_row() {
+        let mut rows: Vec<String> = Vec::new();
+        let r = map_reduce_stream(
+            500,
+            4,
+            Sum::default,
+            |i, r| {
+                r.1 += 1;
+                (i % 10 == 0).then(|| format!("row-{i}"))
+            },
+            |row| rows.push(row),
+        );
+        assert_eq!(r.1, 500);
+        assert_eq!(rows.len(), 50);
+        rows.sort();
+        assert!(rows.contains(&"row-0".to_string()));
+        assert!(rows.contains(&"row-490".to_string()));
+    }
+
+    #[test]
+    fn work_stealing_balances_imbalanced_items() {
+        // One thread must not end up doing all the expensive tail items:
+        // with 2 threads and items whose cost is concentrated in one
+        // half, the queue should still let both threads contribute.
+        let processed = AtomicU64::new(0);
+        let r = map_reduce(256, 2, Sum::default, |i, r| {
+            // Imbalanced cost: late items spin longer.
+            let spin = if i >= 128 { 2000 } else { 10 };
+            let mut acc = 0u64;
+            for k in 0..spin {
+                acc = acc.wrapping_add(std::hint::black_box(k));
+            }
+            processed.fetch_add(std::hint::black_box(acc) % 2, Ordering::Relaxed);
+            r.1 += 1;
+        });
+        assert_eq!(r.1, 256);
+    }
+
+    #[test]
+    fn effective_threads_clamps() {
+        assert_eq!(effective_threads(0, 100), 1);
+        assert_eq!(effective_threads(8, 3), 3);
+        assert_eq!(effective_threads(1000, 1_000_000), MAX_THREADS);
+        assert_eq!(effective_threads(4, 0), 1);
+    }
+}

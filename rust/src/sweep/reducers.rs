@@ -1,0 +1,333 @@
+//! Online reducers for streaming sweeps: a running 2-D Pareto front and a
+//! bounded top-K selector. Both hold O(result) memory — the whole point of
+//! the streaming engine is that a million-point sweep only ever retains
+//! what it will report (DESIGN.md §4).
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use super::Reducer;
+
+/// Objective sense for the y axis of [`ParetoFront2D`] (x is always
+/// minimized, matching `dse::pareto_front_min_max` / `_min_min`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum YSense {
+    Maximize,
+    Minimize,
+}
+
+/// Running 2-D Pareto front: minimize `x`, maximize or minimize `y`.
+///
+/// Invariant: points are sorted by strictly increasing `x` with strictly
+/// improving `y-key`, so membership tests and dominated-run removal are a
+/// binary search plus a contiguous drain. Insertion is O(log f + k)
+/// where f is the front size and k the number of points the new one
+/// dominates; memory is O(f).
+#[derive(Debug, Clone)]
+pub struct ParetoFront2D<T> {
+    /// (x, y, payload); `key()` maps y into "bigger is better" space.
+    pts: Vec<(f64, f64, T)>,
+    sense: YSense,
+    seen: usize,
+}
+
+impl<T> ParetoFront2D<T> {
+    pub fn new(sense: YSense) -> ParetoFront2D<T> {
+        ParetoFront2D { pts: Vec::new(), sense, seen: 0 }
+    }
+
+    fn key(&self, y: f64) -> f64 {
+        match self.sense {
+            YSense::Maximize => y,
+            YSense::Minimize => -y,
+        }
+    }
+
+    /// Total points offered (including dominated and non-finite ones).
+    pub fn seen(&self) -> usize {
+        self.seen
+    }
+
+    pub fn len(&self) -> usize {
+        self.pts.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pts.is_empty()
+    }
+
+    /// Front points, sorted by ascending x.
+    pub fn points(&self) -> &[(f64, f64, T)] {
+        &self.pts
+    }
+
+    /// Offer a point; returns true if it joined the front. Non-finite
+    /// coordinates are rejected (NaN metrics must not poison the front).
+    pub fn insert(&mut self, x: f64, y: f64, payload: T) -> bool {
+        self.seen += 1;
+        if !x.is_finite() || !y.is_finite() {
+            return false;
+        }
+        let ky = self.key(y);
+        // First index with pts[i].x >= x.
+        let idx = self.pts.partition_point(|p| p.0 < x);
+        // Dominated by the best-y point at smaller x?
+        if idx > 0 && self.key(self.pts[idx - 1].1) >= ky {
+            return false;
+        }
+        // Dominated by an existing point at equal x?
+        if idx < self.pts.len()
+            && self.pts[idx].0 == x
+            && self.key(self.pts[idx].1) >= ky
+        {
+            return false;
+        }
+        // Remove the contiguous run of points this one dominates
+        // (x' >= x with key(y') <= ky).
+        let mut end = idx;
+        while end < self.pts.len() && self.key(self.pts[end].1) <= ky {
+            end += 1;
+        }
+        self.pts.splice(idx..end, [(x, y, payload)]);
+        true
+    }
+}
+
+impl<T: Send> Reducer for ParetoFront2D<T> {
+    fn merge(&mut self, other: Self) {
+        let seen = other.seen;
+        for (x, y, payload) in other.pts {
+            self.insert(x, y, payload);
+            self.seen -= 1; // insert() counted it; it was already seen once
+        }
+        self.seen += seen;
+    }
+}
+
+/// Heap entry ordered by score only (total order via `f64::total_cmp`,
+/// so NaN payload scores can never panic a comparison — they are filtered
+/// before insertion anyway).
+struct Entry<T> {
+    score: f64,
+    item: T,
+}
+
+impl<T> PartialEq for Entry<T> {
+    fn eq(&self, other: &Self) -> bool {
+        self.score.total_cmp(&other.score) == Ordering::Equal
+    }
+}
+impl<T> Eq for Entry<T> {}
+impl<T> PartialOrd for Entry<T> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<T> Ord for Entry<T> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Reversed: BinaryHeap is a max-heap, we want the *worst* kept
+        // item on top so it's the one evicted.
+        other.score.total_cmp(&self.score)
+    }
+}
+
+/// Bounded best-K selector by a maximizing score. O(log k) insert,
+/// O(k) memory.
+pub struct TopK<T> {
+    k: usize,
+    heap: BinaryHeap<Entry<T>>,
+}
+
+impl<T> TopK<T> {
+    pub fn new(k: usize) -> TopK<T> {
+        TopK { k: k.max(1), heap: BinaryHeap::with_capacity(k.max(1) + 1) }
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Offer an item; returns true if it was kept (possibly evicting the
+    /// current worst). Non-finite scores are rejected.
+    pub fn insert(&mut self, score: f64, item: T) -> bool {
+        if !score.is_finite() {
+            return false;
+        }
+        if self.heap.len() < self.k {
+            self.heap.push(Entry { score, item });
+            return true;
+        }
+        // Worst kept score is on top of the reversed heap.
+        if self.heap.peek().map(|e| e.score < score).unwrap_or(false) {
+            self.heap.pop();
+            self.heap.push(Entry { score, item });
+            return true;
+        }
+        false
+    }
+
+    /// Kept items, best first, without consuming the reducer.
+    pub fn sorted(&self) -> Vec<(f64, &T)> {
+        let mut v: Vec<(f64, &T)> =
+            self.heap.iter().map(|e| (e.score, &e.item)).collect();
+        v.sort_by(|a, b| b.0.total_cmp(&a.0));
+        v
+    }
+
+    /// Kept items, best first.
+    pub fn into_sorted(self) -> Vec<(f64, T)> {
+        let mut v: Vec<(f64, T)> = self
+            .heap
+            .into_iter()
+            .map(|e| (e.score, e.item))
+            .collect();
+        v.sort_by(|a, b| b.0.total_cmp(&a.0));
+        v
+    }
+
+    /// Best (score, item) without consuming the reducer.
+    pub fn best(&self) -> Option<(f64, &T)> {
+        self.heap
+            .iter()
+            .max_by(|a, b| a.score.total_cmp(&b.score))
+            .map(|e| (e.score, &e.item))
+    }
+}
+
+impl<T: Send> Reducer for TopK<T> {
+    fn merge(&mut self, other: Self) {
+        for e in other.heap {
+            self.insert(e.score, e.item);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn front_min_max_matches_batch_extraction() {
+        // Same fixture as dse::tests::pareto_front_min_max_correct.
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        let ys = [1.0, 3.0, 2.0, 4.0];
+        let mut f = ParetoFront2D::new(YSense::Maximize);
+        for (i, (&x, &y)) in xs.iter().zip(&ys).enumerate() {
+            f.insert(x, y, i);
+        }
+        let idx: Vec<usize> = f.points().iter().map(|p| p.2).collect();
+        assert_eq!(idx, vec![0, 1, 3]);
+        assert_eq!(f.seen(), 4);
+    }
+
+    #[test]
+    fn front_min_min_sense() {
+        let mut f = ParetoFront2D::new(YSense::Minimize);
+        f.insert(1.0, 5.0, "a");
+        f.insert(2.0, 3.0, "b");
+        f.insert(3.0, 4.0, "c"); // dominated by b
+        f.insert(0.5, 9.0, "d");
+        let names: Vec<&str> = f.points().iter().map(|p| p.2).collect();
+        assert_eq!(names, vec!["d", "a", "b"]);
+    }
+
+    #[test]
+    fn front_insertion_order_invariant() {
+        let pts = [(3.0, 2.0), (1.0, 1.0), (4.0, 4.0), (2.0, 3.0), (2.5, 3.0)];
+        let mut forward = ParetoFront2D::new(YSense::Maximize);
+        let mut backward = ParetoFront2D::new(YSense::Maximize);
+        for &(x, y) in &pts {
+            forward.insert(x, y, ());
+        }
+        for &(x, y) in pts.iter().rev() {
+            backward.insert(x, y, ());
+        }
+        let a: Vec<(f64, f64)> = forward.points().iter().map(|p| (p.0, p.1)).collect();
+        let b: Vec<(f64, f64)> = backward.points().iter().map(|p| (p.0, p.1)).collect();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn front_rejects_nan_and_duplicates() {
+        let mut f = ParetoFront2D::new(YSense::Maximize);
+        assert!(!f.insert(f64::NAN, 1.0, ()));
+        assert!(!f.insert(1.0, f64::NAN, ()));
+        assert!(f.insert(1.0, 1.0, ()));
+        assert!(!f.insert(1.0, 1.0, ())); // equal point does not re-join
+        assert!(f.insert(1.0, 2.0, ())); // better y at same x replaces
+        assert_eq!(f.len(), 1);
+        assert_eq!(f.seen(), 5);
+    }
+
+    #[test]
+    fn front_merge_equals_single_stream() {
+        let mut rng = crate::util::rng::Rng::new(31);
+        let pts: Vec<(f64, f64)> =
+            (0..500).map(|_| (rng.f64(), rng.f64())).collect();
+        let mut single = ParetoFront2D::new(YSense::Maximize);
+        for &(x, y) in &pts {
+            single.insert(x, y, ());
+        }
+        let mut a = ParetoFront2D::new(YSense::Maximize);
+        let mut b = ParetoFront2D::new(YSense::Maximize);
+        for (i, &(x, y)) in pts.iter().enumerate() {
+            if i % 2 == 0 {
+                a.insert(x, y, ());
+            } else {
+                b.insert(x, y, ());
+            }
+        }
+        a.merge(b);
+        let sa: Vec<(f64, f64)> = single.points().iter().map(|p| (p.0, p.1)).collect();
+        let sb: Vec<(f64, f64)> = a.points().iter().map(|p| (p.0, p.1)).collect();
+        assert_eq!(sa, sb);
+        assert_eq!(a.seen(), 500);
+    }
+
+    #[test]
+    fn topk_keeps_best_scores() {
+        let mut t = TopK::new(3);
+        for (s, name) in [(1.0, "a"), (5.0, "b"), (2.0, "c"), (4.0, "d"), (3.0, "e")] {
+            t.insert(s, name);
+        }
+        assert!(!t.insert(f64::NAN, "nan"));
+        let kept = t.into_sorted();
+        let names: Vec<&str> = kept.iter().map(|&(_, n)| n).collect();
+        assert_eq!(names, vec!["b", "d", "e"]);
+        assert_eq!(kept[0].0, 5.0);
+    }
+
+    #[test]
+    fn topk_merge_equals_single_stream() {
+        let mut rng = crate::util::rng::Rng::new(37);
+        let scores: Vec<f64> = (0..200).map(|_| rng.f64()).collect();
+        let mut single = TopK::new(8);
+        let mut a = TopK::new(8);
+        let mut b = TopK::new(8);
+        for (i, &s) in scores.iter().enumerate() {
+            single.insert(s, i);
+            if i % 2 == 0 {
+                a.insert(s, i);
+            } else {
+                b.insert(s, i);
+            }
+        }
+        a.merge(b);
+        assert_eq!(a.into_sorted(), single.into_sorted());
+    }
+
+    #[test]
+    fn topk_best_peek() {
+        let mut t = TopK::new(2);
+        assert!(t.best().is_none());
+        t.insert(1.0, "x");
+        t.insert(9.0, "y");
+        t.insert(5.0, "z");
+        assert_eq!(t.best().unwrap().0, 9.0);
+        assert_eq!(*t.best().unwrap().1, "y");
+    }
+}

@@ -109,4 +109,56 @@ mod tests {
         assert_eq!(a.usize_or("k", 7), 7);
         assert_eq!(a.get_or("mode", "fast"), "fast");
     }
+
+    #[test]
+    fn negative_number_option_values() {
+        // "-5" does not start with "--", so it binds as the option value
+        // rather than being mistaken for a flag.
+        let a = parse("fit --offset -5 --scale -2.5 --name -x");
+        assert_eq!(a.get("offset"), Some("-5"));
+        assert!((a.f64_or("scale", 0.0) + 2.5).abs() < 1e-12);
+        assert_eq!(a.get("name"), Some("-x"));
+        // usize parse of a negative value falls back to the default
+        // instead of panicking.
+        assert_eq!(a.usize_or("offset", 9), 9);
+    }
+
+    #[test]
+    fn flag_before_positional_binds_as_value() {
+        // Documented grammar limitation: `--name value` always binds, so
+        // a bare flag followed by a positional swallows it. Flags must
+        // come last (see the NOTE in subcommand_and_options).
+        let a = parse("explore --verbose out.csv");
+        assert!(!a.flag("verbose"));
+        assert_eq!(a.get("verbose"), Some("out.csv"));
+        assert!(a.positional.is_empty());
+        // With nothing following, the same token is a flag.
+        let b = parse("explore out.csv --verbose");
+        assert!(b.flag("verbose"));
+        assert_eq!(b.positional, vec!["out.csv"]);
+    }
+
+    #[test]
+    fn repeated_keys_last_wins() {
+        let a = parse("run --k 1 --k 2 --k=3");
+        assert_eq!(a.get("k"), Some("3"));
+        assert_eq!(a.usize_or("k", 0), 3);
+        let b = parse("run --k=3 --k 1");
+        assert_eq!(b.get("k"), Some("1"));
+    }
+
+    #[test]
+    fn flag_followed_by_flag_stays_flag() {
+        let a = parse("run --quick --json");
+        assert!(a.flag("quick"));
+        assert!(a.flag("json"));
+        assert!(a.options.is_empty());
+    }
+
+    #[test]
+    fn empty_input_has_no_subcommand() {
+        let a = parse("");
+        assert!(a.subcommand.is_none());
+        assert!(a.positional.is_empty() && a.flags.is_empty());
+    }
 }

@@ -99,6 +99,224 @@ pub fn five_num(xs: &[f64]) -> FiveNum {
     }
 }
 
+impl FiveNum {
+    /// Divide every statistic by a positive constant — quantiles are
+    /// scale-equivariant, so this converts raw-metric summaries into
+    /// normalized ones without a second pass over the data.
+    pub fn scaled(&self, div: f64) -> FiveNum {
+        FiveNum {
+            min: self.min / div,
+            q1: self.q1 / div,
+            median: self.median / div,
+            q3: self.q3 / div,
+            max: self.max / div,
+        }
+    }
+}
+
+/// Streaming quantile estimator — the P² algorithm (Jain & Chlamtac 1985).
+/// O(1) memory per quantile; the workhorse behind the sweep engine's
+/// streaming five-number summaries (million-point sweeps cannot buffer
+/// their metric vectors).
+#[derive(Debug, Clone)]
+pub struct P2Quantile {
+    p: f64,
+    /// First observations, buffered until the 5 markers can be seeded.
+    init: Vec<f64>,
+    count: usize,
+    /// Marker heights.
+    q: [f64; 5],
+    /// Marker positions (1-based observation ranks).
+    n: [f64; 5],
+    /// Desired marker positions.
+    np: [f64; 5],
+    /// Desired-position increments per observation.
+    dn: [f64; 5],
+    /// Terminal-merge override (see `merge_weighted`).
+    merged: Option<f64>,
+}
+
+impl P2Quantile {
+    pub fn new(p: f64) -> P2Quantile {
+        let p = p.clamp(0.0, 1.0);
+        P2Quantile {
+            p,
+            init: Vec::with_capacity(5),
+            count: 0,
+            q: [0.0; 5],
+            n: [1.0, 2.0, 3.0, 4.0, 5.0],
+            np: [1.0, 1.0 + 2.0 * p, 1.0 + 4.0 * p, 3.0 + 2.0 * p, 5.0],
+            dn: [0.0, p / 2.0, p, (1.0 + p) / 2.0, 1.0],
+            merged: None,
+        }
+    }
+
+    pub fn count(&self) -> usize {
+        self.count
+    }
+
+    pub fn observe(&mut self, x: f64) {
+        if !x.is_finite() {
+            return;
+        }
+        self.count += 1;
+        if self.count <= 5 {
+            self.init.push(x);
+            if self.count == 5 {
+                self.init.sort_by(f64::total_cmp);
+                for (qi, v) in self.q.iter_mut().zip(&self.init) {
+                    *qi = *v;
+                }
+            }
+            return;
+        }
+        // Locate the cell, extending the extreme markers if needed.
+        let k = if x < self.q[0] {
+            self.q[0] = x;
+            0
+        } else if x >= self.q[4] {
+            self.q[4] = x;
+            3
+        } else {
+            let mut k = 0;
+            for i in 0..4 {
+                if self.q[i] <= x {
+                    k = i;
+                }
+            }
+            k
+        };
+        for ni in &mut self.n[k + 1..] {
+            *ni += 1.0;
+        }
+        for (npi, dni) in self.np.iter_mut().zip(&self.dn) {
+            *npi += dni;
+        }
+        // Adjust the interior markers toward their desired positions.
+        for i in 1..4 {
+            let d = self.np[i] - self.n[i];
+            if (d >= 1.0 && self.n[i + 1] - self.n[i] > 1.0)
+                || (d <= -1.0 && self.n[i - 1] - self.n[i] < -1.0)
+            {
+                let d = d.signum();
+                let qs = self.parabolic(i, d);
+                self.q[i] = if self.q[i - 1] < qs && qs < self.q[i + 1] {
+                    qs
+                } else {
+                    self.linear(i, d)
+                };
+                self.n[i] += d;
+            }
+        }
+    }
+
+    fn parabolic(&self, i: usize, d: f64) -> f64 {
+        let (q, n) = (&self.q, &self.n);
+        q[i] + d / (n[i + 1] - n[i - 1])
+            * ((n[i] - n[i - 1] + d) * (q[i + 1] - q[i]) / (n[i + 1] - n[i])
+                + (n[i + 1] - n[i] - d) * (q[i] - q[i - 1]) / (n[i] - n[i - 1]))
+    }
+
+    fn linear(&self, i: usize, d: f64) -> f64 {
+        let j = (i as f64 + d) as usize;
+        self.q[i] + d * (self.q[j] - self.q[i]) / (self.n[j] - self.n[i])
+    }
+
+    /// Current estimate (exact while fewer than 5 observations).
+    pub fn value(&self) -> f64 {
+        if let Some(v) = self.merged {
+            return v;
+        }
+        if self.count == 0 {
+            return f64::NAN;
+        }
+        if self.count <= 5 {
+            let mut v = self.init.clone();
+            v.sort_by(f64::total_cmp);
+            return quantile(&v, self.p);
+        }
+        self.q[2]
+    }
+
+    /// Terminal-phase merge for parallel reduction: combine two workers'
+    /// estimates as a count-weighted average. Approximate (P² markers are
+    /// not exactly mergeable); call only after all observations are in.
+    pub fn merge_weighted(&mut self, other: &P2Quantile) {
+        if other.count == 0 {
+            return;
+        }
+        if self.count == 0 {
+            *self = other.clone();
+            return;
+        }
+        let (a, b) = (self.count as f64, other.count as f64);
+        self.merged = Some((self.value() * a + other.value() * b) / (a + b));
+        self.count += other.count;
+    }
+}
+
+/// Streaming five-number summary: exact min/max/count, P² interior
+/// quantiles. Memory is O(1) regardless of stream length.
+#[derive(Debug, Clone)]
+pub struct StreamingFiveNum {
+    pub count: usize,
+    min: f64,
+    max: f64,
+    q1: P2Quantile,
+    med: P2Quantile,
+    q3: P2Quantile,
+}
+
+impl Default for StreamingFiveNum {
+    fn default() -> Self {
+        StreamingFiveNum {
+            count: 0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+            q1: P2Quantile::new(0.25),
+            med: P2Quantile::new(0.5),
+            q3: P2Quantile::new(0.75),
+        }
+    }
+}
+
+impl StreamingFiveNum {
+    pub fn observe(&mut self, x: f64) {
+        if !x.is_finite() {
+            return;
+        }
+        self.count += 1;
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+        self.q1.observe(x);
+        self.med.observe(x);
+        self.q3.observe(x);
+    }
+
+    /// Terminal-phase merge (see `P2Quantile::merge_weighted`).
+    pub fn merge(&mut self, other: &StreamingFiveNum) {
+        if other.count == 0 {
+            return;
+        }
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+        self.q1.merge_weighted(&other.q1);
+        self.med.merge_weighted(&other.med);
+        self.q3.merge_weighted(&other.q3);
+        self.count += other.count;
+    }
+
+    pub fn summary(&self) -> FiveNum {
+        FiveNum {
+            min: self.min,
+            q1: self.q1.value(),
+            median: self.med.value(),
+            q3: self.q3.value(),
+            max: self.max,
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -142,5 +360,89 @@ mod tests {
         let x = [1.0, 2.0, 3.0];
         assert!((pearson_r(&x, &[2.0, 4.0, 6.0]) - 1.0).abs() < 1e-12);
         assert!((pearson_r(&x, &[3.0, 2.0, 1.0]) + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn p2_tracks_exact_quantiles_on_uniform_stream() {
+        let mut rng = crate::util::rng::Rng::new(17);
+        let xs: Vec<f64> = (0..20_000).map(|_| rng.f64()).collect();
+        for p in [0.25, 0.5, 0.75] {
+            let mut est = P2Quantile::new(p);
+            for &x in &xs {
+                est.observe(x);
+            }
+            let exact = quantile(&xs, p);
+            assert!(
+                (est.value() - exact).abs() < 0.02,
+                "p={p}: P² {} vs exact {exact}",
+                est.value()
+            );
+        }
+    }
+
+    #[test]
+    fn p2_exact_below_five_observations() {
+        let mut est = P2Quantile::new(0.5);
+        assert!(est.value().is_nan());
+        for x in [3.0, 1.0, 2.0] {
+            est.observe(x);
+        }
+        assert_eq!(est.value(), 2.0);
+        assert_eq!(est.count(), 3);
+    }
+
+    #[test]
+    fn p2_ignores_nan() {
+        let mut est = P2Quantile::new(0.5);
+        for x in [1.0, f64::NAN, 2.0, 3.0] {
+            est.observe(x);
+        }
+        assert_eq!(est.count(), 3);
+        assert_eq!(est.value(), 2.0);
+    }
+
+    #[test]
+    fn streaming_five_num_matches_batch() {
+        let mut rng = crate::util::rng::Rng::new(23);
+        let xs: Vec<f64> = (0..10_000).map(|_| rng.normal()).collect();
+        let mut s = StreamingFiveNum::default();
+        for &x in &xs {
+            s.observe(x);
+        }
+        let est = s.summary();
+        let exact = five_num(&xs);
+        assert_eq!(est.min, exact.min);
+        assert_eq!(est.max, exact.max);
+        assert!((est.median - exact.median).abs() < 0.05);
+        assert!((est.q1 - exact.q1).abs() < 0.05);
+        assert!((est.q3 - exact.q3).abs() < 0.05);
+    }
+
+    #[test]
+    fn streaming_five_num_merge_is_count_weighted() {
+        let mut a = StreamingFiveNum::default();
+        let mut b = StreamingFiveNum::default();
+        for i in 0..1000 {
+            a.observe(i as f64 / 1000.0);
+            b.observe(2.0 + i as f64 / 1000.0);
+        }
+        let mut empty = StreamingFiveNum::default();
+        empty.merge(&a);
+        assert_eq!(empty.count, 1000);
+        a.merge(&b);
+        assert_eq!(a.count, 2000);
+        assert_eq!(a.summary().min, 0.0);
+        assert!((a.summary().max - 2.999).abs() < 1e-9);
+        // Merged median lands between the two stream medians.
+        let m = a.summary().median;
+        assert!(m > 0.4 && m < 2.6, "merged median {m}");
+    }
+
+    #[test]
+    fn five_num_scaled_divides_every_stat() {
+        let f = five_num(&[2.0, 4.0, 6.0, 8.0]).scaled(2.0);
+        assert_eq!(f.min, 1.0);
+        assert_eq!(f.max, 4.0);
+        assert_eq!(f.median, 2.5);
     }
 }

@@ -54,7 +54,7 @@ fn full_pipeline_reproduces_headline_claims() {
     let net = zoo::resnet_cifar(20, Dataset::Cifar10);
     let pts = dse::evaluate_space(&models, &space, &net.layers, 4);
     assert_eq!(pts.len(), space.len());
-    let norm = dse::normalize(&pts);
+    let norm = dse::normalize(&pts).expect("space includes INT16 points");
     let med = |pe: PeType, energy: bool| {
         let v: Vec<f64> = norm
             .iter()

@@ -1,0 +1,243 @@
+//! Stub of the `xla` (xla-rs) PJRT bindings — vendored so the runtime and
+//! trainer layers compile and their host-side tensor plumbing stays fully
+//! testable in an environment without an XLA/PJRT shared library
+//! (DESIGN.md §2, offline-crate substitutions).
+//!
+//! What works: `Literal` construction, reshape, extraction, tuples — the
+//! entire host-side data path, bit-identical to what the real bindings
+//! hand to PJRT. What doesn't: creating a `PjRtClient`. `PjRtClient::cpu()`
+//! returns an error, so any code path that would actually execute an HLO
+//! artifact degrades into a clear "PJRT unavailable" failure instead of a
+//! link error at build time.
+
+use std::fmt;
+
+/// Stub error type; callers only format it with `{:?}`.
+pub struct Error(pub String);
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+const UNAVAILABLE: &str =
+    "PJRT unavailable: vendored xla stub (this build has no XLA runtime; \
+     see DESIGN.md §2)";
+
+// ---------------------------------------------------------------------------
+// Literal — fully functional host-side tensors
+// ---------------------------------------------------------------------------
+
+/// Element storage. Public only so `NativeType` can be implemented; not
+/// part of the emulated xla-rs API.
+#[doc(hidden)]
+#[derive(Debug, Clone, PartialEq)]
+pub enum Storage {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    Tuple(Vec<Literal>),
+}
+
+/// Element types the stub supports (the repo only moves f32/i32 tensors).
+pub trait NativeType: Copy + Sized {
+    #[doc(hidden)]
+    fn wrap(v: Vec<Self>) -> Storage;
+    #[doc(hidden)]
+    fn unwrap(s: &Storage) -> Option<Vec<Self>>;
+}
+
+impl NativeType for f32 {
+    fn wrap(v: Vec<f32>) -> Storage {
+        Storage::F32(v)
+    }
+    fn unwrap(s: &Storage) -> Option<Vec<f32>> {
+        match s {
+            Storage::F32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn wrap(v: Vec<i32>) -> Storage {
+        Storage::I32(v)
+    }
+    fn unwrap(s: &Storage) -> Option<Vec<i32>> {
+        match s {
+            Storage::I32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+/// Host-side tensor with a shape, mirroring `xla::Literal`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Literal {
+    data: Storage,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// Rank-0 literal.
+    pub fn scalar<T: NativeType>(v: T) -> Literal {
+        Literal { data: T::wrap(vec![v]), dims: Vec::new() }
+    }
+
+    /// Rank-1 literal.
+    pub fn vec1<T: NativeType>(v: &[T]) -> Literal {
+        Literal { data: T::wrap(v.to_vec()), dims: vec![v.len() as i64] }
+    }
+
+    /// Reinterpret with new dimensions (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        if n as usize != self.element_count() {
+            return Err(Error(format!(
+                "reshape: {} elements into shape {dims:?}",
+                self.element_count()
+            )));
+        }
+        Ok(Literal { data: self.data.clone(), dims: dims.to_vec() })
+    }
+
+    pub fn element_count(&self) -> usize {
+        match &self.data {
+            Storage::F32(v) => v.len(),
+            Storage::I32(v) => v.len(),
+            Storage::Tuple(ls) => ls.iter().map(Literal::element_count).sum(),
+        }
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::unwrap(&self.data)
+            .ok_or_else(|| Error("to_vec: element type mismatch".into()))
+    }
+
+    pub fn get_first_element<T: NativeType>(&self) -> Result<T> {
+        self.to_vec::<T>()?
+            .first()
+            .copied()
+            .ok_or_else(|| Error("get_first_element: empty literal".into()))
+    }
+
+    /// Decompose a tuple literal into its parts.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        match self.data {
+            Storage::Tuple(ls) => Ok(ls),
+            _ => Err(Error("to_tuple: literal is not a tuple".into())),
+        }
+    }
+
+    /// Build a tuple literal (test/plumbing helper).
+    pub fn tuple(parts: Vec<Literal>) -> Literal {
+        Literal { data: Storage::Tuple(parts), dims: Vec::new() }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// PJRT surface — compiles, but execution is unavailable
+// ---------------------------------------------------------------------------
+
+/// Parsed HLO module (stub: retains nothing).
+pub struct HloModuleProto {}
+
+impl HloModuleProto {
+    pub fn from_text_file<P: AsRef<std::path::Path>>(path: P) -> Result<Self> {
+        // Reading works (the artifact contract is plain text); only
+        // compilation/execution is stubbed out.
+        std::fs::read_to_string(path.as_ref())
+            .map(|_| HloModuleProto {})
+            .map_err(|e| Error(format!("{}: {e}", path.as_ref().display())))
+    }
+}
+
+/// Computation wrapper (stub).
+pub struct XlaComputation {}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation {}
+    }
+}
+
+/// PJRT client handle. Construction always fails in the stub.
+pub struct PjRtClient {}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error(UNAVAILABLE.into()))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _c: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error(UNAVAILABLE.into()))
+    }
+}
+
+/// Compiled executable handle (unreachable in the stub, but type-complete).
+pub struct PjRtLoadedExecutable {}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error(UNAVAILABLE.into()))
+    }
+}
+
+/// Device buffer handle (unreachable in the stub, but type-complete).
+pub struct PjRtBuffer {}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error(UNAVAILABLE.into()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        let r = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.element_count(), 4);
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(l.reshape(&[3, 3]).is_err());
+        assert!(r.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn scalar_and_tuple() {
+        let s = Literal::scalar(7i32);
+        assert_eq!(s.element_count(), 1);
+        assert_eq!(s.get_first_element::<i32>().unwrap(), 7);
+        let t = Literal::tuple(vec![s.clone(), Literal::scalar(1.5f32)]);
+        assert_eq!(t.element_count(), 2);
+        let parts = t.to_tuple().unwrap();
+        assert_eq!(parts.len(), 2);
+        assert!(s.to_tuple().is_err());
+    }
+
+    #[test]
+    fn client_reports_unavailable() {
+        let e = PjRtClient::cpu().err().unwrap();
+        assert!(format!("{e:?}").contains("PJRT unavailable"));
+    }
+}
