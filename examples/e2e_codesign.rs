@@ -73,7 +73,8 @@ fn main() -> anyhow::Result<()> {
     // ---- Stage 3: hardware metrics from the DSE ----------------------
     let coord = Coordinator::default();
     let models = coord.load_or_build_models(
-        std::path::Path::new("artifacts/ppa_models.json"), 240, 5, 42);
+        std::path::Path::new("artifacts/ppa_models.json"), 240, 5, 42)
+        .map_err(anyhow::Error::msg)?;
     let net = zoo::resnet_cifar(20, Dataset::Cifar10);
     let pts = dse::evaluate_space(&models, &coord.space, &net.layers,
                                   coord.threads);

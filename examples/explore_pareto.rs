@@ -20,7 +20,8 @@ fn main() {
 
     println!("building PPA models (cached in artifacts/ppa_models.json)...");
     let models = coord.load_or_build_models(
-        Path::new("artifacts/ppa_models.json"), 240, 5, 42);
+        Path::new("artifacts/ppa_models.json"), 240, 5, 42)
+        .expect("failed to load/build PPA models");
 
     print!("{}", figures::fig4(&coord, &models, out, samples));
     print!("{}", figures::fig9(&coord, &models, out, samples / 2));

@@ -24,7 +24,7 @@ fn main() {
         240,  // configs per PE type
         5,    // polynomial degree (paper Fig 5)
         42,
-    );
+    ).expect("failed to load/build PPA models");
 
     let net = zoo::resnet_cifar(20, Dataset::Cifar10);
     println!("workload: {} ({:.1} MMACs)\n", net.name,

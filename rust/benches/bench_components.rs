@@ -10,7 +10,7 @@ use quidam::dse;
 use quidam::models::nas::ArchId;
 use quidam::models::{zoo, Dataset};
 use quidam::pe::PeType;
-use quidam::ppa::{characterize, latency_features, PpaModels};
+use quidam::ppa::{characterize, latency_features, CompiledNetModel, PpaModels};
 use quidam::regression::{FitOptions, PolyModel};
 use quidam::simulator::simulate_layer;
 use quidam::sweep;
@@ -104,6 +104,50 @@ fn main() {
         }
         front.len()
     });
+
+    group("compiled PPA models (workload-specialized latency, resnet20)");
+    // The tentpole comparison: generic per-point evaluation rebuilds the
+    // full 15-dim latency basis per layer per config; the compiled path
+    // pre-folds the constant layer features into per-layer coefficients
+    // over a shared 6-dim hardware-only basis (ppa::CompiledNetModel).
+    // Fit at the CLI-default degree 5 — the configuration the docs' 1126
+    // -> 181 term-count analysis describes (evaluation cost is a function
+    // of the basis, not of fit quality, so the thin characterization set
+    // is fine here).
+    let models5 = PpaModels::fit(&char_map, 5);
+    let compiled = CompiledNetModel::compile(&models5, &net.layers)
+        .expect("resnet20 compiles against the fitted latency layout");
+    let mut crng = Rng::new(0xC0DE);
+    let eval_cfgs: Vec<AcceleratorConfig> =
+        (0..64).map(|_| space.sample(&mut crng)).collect();
+    // Parity spot-check before timing (the strict 1e-12 contract is
+    // property-tested in ppa::compiled on well-conditioned models; the
+    // looser guard here tolerates the thin degree-5 fit's cancellation).
+    for c in &eval_cfgs {
+        let g = dse::evaluate(&models5, c, &net.layers);
+        let f = dse::evaluate_compiled(&compiled, c);
+        assert!(
+            (g.latency_s - f.latency_s).abs()
+                <= 1e-9 * g.latency_s.abs().max(1e-300),
+            "parity broke: {} vs {}", g.latency_s, f.latency_s,
+        );
+    }
+    let mut gi = 0usize;
+    b.run("ppa/generic_eval_resnet20", || {
+        gi = (gi + 1) % eval_cfgs.len();
+        dse::evaluate(&models5, &eval_cfgs[gi], &net.layers)
+    });
+    let mut ci = 0usize;
+    b.run("ppa/compiled_eval_resnet20", || {
+        ci = (ci + 1) % eval_cfgs.len();
+        dse::evaluate_compiled(&compiled, &eval_cfgs[ci])
+    });
+    println!(
+        "\ncompiled-vs-generic per-point evaluation: {:.2}x (acceptance \
+         floor 2x; EXPERIMENTS.md §Perf)",
+        b.ratio("ppa/generic_eval_resnet20", "ppa/compiled_eval_resnet20")
+            .unwrap_or(f64::NAN),
+    );
 
     group("sweep engine (points/s, imbalanced coexplore workload)");
     // Co-exploration items are imbalanced by construction: each sampled

@@ -33,7 +33,7 @@ fn main() {
         figures::fig10_11_table2(&coord, &models, &out, 400)
     });
     b.run("fig12/coexploration_1000archs", || {
-        figures::fig12(&coord, &models, &out, 1000)
+        figures::fig12(&coord, &models, &out, 1000).unwrap()
     });
     b.run("table3/clock_frequencies", || figures::table3(&coord, &out));
     b.run("table4/search_space", || figures::table4(&out));

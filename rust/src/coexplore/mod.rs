@@ -54,45 +54,70 @@ pub fn explore(
 ) -> Vec<CoPoint> {
     let mut rng = Rng::new(seed);
     // Pre-sample the work list (deterministic per seed), then score on
-    // the shared queue.
-    let mut work: Vec<(ArchId, crate::config::AcceleratorConfig)> = Vec::new();
-    for _ in 0..n_archs {
-        let arch = ArchId::sample(&mut rng);
+    // the shared queue. Items reference their architecture by index so
+    // the PPA models are compiled once per sampled architecture — the
+    // folded latency coefficients depend only on the workload layers,
+    // not on the hardware config being scored.
+    let mut archs: Vec<ArchId> = Vec::with_capacity(n_archs);
+    let mut work: Vec<(usize, crate::config::AcceleratorConfig)> = Vec::new();
+    for a in 0..n_archs {
+        archs.push(ArchId::sample(&mut rng));
         for _ in 0..hw_per_arch {
-            work.push((arch, space.sample(&mut rng)));
+            work.push((a, space.sample(&mut rng)));
         }
     }
+    // Compile once per sampled architecture — but only when the per-arch
+    // hardware fan-out amortizes the folding cost. Folding is several
+    // generic evaluations' worth of work per PE type, so narrow fan-outs
+    // (Fig 12 scores 2 configs per arch) stay on the generic path, and
+    // wide ones compile only the PE types the space actually samples.
+    // Compilation itself fans out on the scheduler.
+    let compile_worthwhile = hw_per_arch >= 8 * space.pe_types.len().max(1);
+    let prepared: Vec<(Vec<crate::models::ConvLayer>, Option<crate::ppa::CompiledNetModel>)> =
+        sweep::collect_indexed(archs.len(), threads, |a| {
+            let layers = archs[a].to_model(dataset).layers;
+            let compiled = if compile_worthwhile {
+                crate::ppa::CompiledNetModel::compile_for(
+                    models, &layers, &space.pe_types).ok()
+            } else {
+                None
+            };
+            (layers, compiled)
+        });
     sweep::collect_indexed(work.len(), threads, |i| {
-        let (arch, cfg) = &work[i];
-        score_pair(models, dataset, *arch, *cfg)
+        let (a, cfg) = &work[i];
+        let (layers, compiled) = &prepared[*a];
+        let pt = match compiled {
+            Some(c) => dse::evaluate_compiled(c, cfg),
+            None => dse::evaluate(models, cfg, layers),
+        };
+        CoPoint {
+            arch: archs[*a],
+            cfg: *cfg,
+            top1_err: predict_error(&archs[*a], dataset, cfg.pe_type),
+            energy_j: pt.energy_j,
+            area_um2: pt.area_um2,
+        }
     })
 }
 
-fn score_pair(
-    models: &PpaModels,
-    dataset: Dataset,
-    arch: ArchId,
-    cfg: crate::config::AcceleratorConfig,
-) -> CoPoint {
-    let layers = arch.to_model(dataset).layers;
-    let pt = dse::evaluate(models, &cfg, &layers);
-    CoPoint {
-        arch,
-        cfg,
-        top1_err: predict_error(&arch, dataset, cfg.pe_type),
-        energy_j: pt.energy_j,
-        area_um2: pt.area_um2,
-    }
-}
-
 /// Normalize per Fig 12: energy vs the minimum-energy INT16 pair, area vs
-/// the minimum-area INT16 pair.
-pub fn normalize(points: &[CoPoint]) -> Vec<NormCoPoint> {
+/// the minimum-area INT16 pair. Errors (instead of the old `assert!`
+/// panic) when no usable INT16 pair was sampled — e.g. a co-exploration
+/// space restricted to LightPEs — mirroring the PR 1 fix to
+/// `dse::normalize`.
+pub fn normalize(points: &[CoPoint]) -> Result<Vec<NormCoPoint>, String> {
     let int16 = || points.iter().filter(|p| p.cfg.pe_type == PeType::Int16);
     let e_ref = int16().map(|p| p.energy_j).fold(f64::INFINITY, f64::min);
     let a_ref = int16().map(|p| p.area_um2).fold(f64::INFINITY, f64::min);
-    assert!(e_ref.is_finite() && a_ref.is_finite(), "no INT16 pairs sampled");
-    points
+    if !(e_ref.is_finite() && a_ref.is_finite()) {
+        return Err(
+            "no INT16 pair to normalize against (co-explore a space that \
+             includes pe_type int16)"
+                .into(),
+        );
+    }
+    Ok(points
         .iter()
         .map(|p| NormCoPoint {
             pe: p.cfg.pe_type,
@@ -100,7 +125,7 @@ pub fn normalize(points: &[CoPoint]) -> Vec<NormCoPoint> {
             norm_energy: p.energy_j / e_ref,
             norm_area: p.area_um2 / a_ref,
         })
-        .collect()
+        .collect())
 }
 
 /// Pareto front over (top-1 error, normalized metric), both minimized.
@@ -155,7 +180,7 @@ mod tests {
         let m = models();
         let pts = explore(&m, &SweepSpace::default(), Dataset::Cifar10,
                           30, 2, 11, 4);
-        let norm = normalize(&pts);
+        let norm = normalize(&pts).unwrap();
         let min_e = norm
             .iter()
             .filter(|p| p.pe == PeType::Int16)
@@ -170,13 +195,50 @@ mod tests {
         let m = models();
         let pts = explore(&m, &SweepSpace::default(), Dataset::Cifar10,
                           60, 2, 13, 4);
-        let norm = normalize(&pts);
+        let norm = normalize(&pts).unwrap();
         let front = pareto(&norm, false);
         assert!(!front.is_empty());
         let light_on_front = front.iter().any(|&i| {
             matches!(norm[i].pe, PeType::LightPe1 | PeType::LightPe2)
         });
         assert!(light_on_front, "no LightPE on the energy Pareto front");
+    }
+
+    #[test]
+    fn normalize_errors_without_int16_instead_of_panicking() {
+        // Regression: the old `assert!` panicked when the sampled space
+        // excluded INT16 (e.g. `quidam coexplore --pe lightpe1,lightpe2`).
+        let m = models();
+        let mut space = SweepSpace::default();
+        space.pe_types = vec![PeType::LightPe1, PeType::LightPe2];
+        let pts = explore(&m, &space, Dataset::Cifar10, 6, 2, 3, 2);
+        assert!(!pts.is_empty());
+        let err = normalize(&pts).unwrap_err();
+        assert!(err.contains("INT16"), "unhelpful error: {err}");
+        assert!(normalize(&[]).is_err());
+    }
+
+    #[test]
+    fn wide_fanout_compiled_path_matches_generic_scoring() {
+        // hw_per_arch clears the compile-worthwhile threshold, so this
+        // exercises the per-arch compiled path; spot-check against
+        // independent generic evaluation.
+        let m = models();
+        let space = SweepSpace::default();
+        let pts = explore(&m, &space, Dataset::Cifar10, 2, 40, 31, 4);
+        assert_eq!(pts.len(), 80);
+        for p in pts.iter().step_by(17) {
+            let layers = p.arch.to_model(Dataset::Cifar10).layers;
+            let g = dse::evaluate(&m, &p.cfg, &layers);
+            assert!(
+                (p.energy_j - g.energy_j).abs() <= 1e-12 * g.energy_j.abs(),
+                "energy {} vs {}", p.energy_j, g.energy_j
+            );
+            assert!(
+                (p.area_um2 - g.area_um2).abs() <= 1e-12 * g.area_um2.abs(),
+                "area {} vs {}", p.area_um2, g.area_um2
+            );
+        }
     }
 
     #[test]

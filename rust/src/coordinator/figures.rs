@@ -14,7 +14,7 @@ use crate::config::AcceleratorConfig;
 use crate::dse::{self, DesignPoint};
 use crate::models::{nas, zoo, Dataset};
 use crate::pe::PeType;
-use crate::ppa::{characterize, PpaModels};
+use crate::ppa::{characterize, CompiledNetModel, PpaModels};
 use crate::regression::{select_degree, FitOptions};
 use crate::report::{f1, f3, render_scatter_loglog, render_table, render_violin, sci, write_csv};
 use crate::simulator::simulate_network;
@@ -35,10 +35,13 @@ fn sample_points(
 ) -> Vec<DesignPoint> {
     // Sample the sweep uniformly (the full grid is exercised by `quidam
     // explore` / benches); always include the baselines so normalization
-    // is stable.
+    // is stable. Models compile against the workload once; every sampled
+    // config then evaluates through the specialized bases.
     let cfgs = sampled_configs(coord, n, seed);
-    sweep::collect_indexed(cfgs.len(), coord.threads, |i| {
-        dse::evaluate(models, &cfgs[i], layers)
+    let compiled = CompiledNetModel::compile(models, layers).ok();
+    sweep::collect_indexed(cfgs.len(), coord.threads, |i| match &compiled {
+        Some(c) => dse::evaluate_compiled(c, &cfgs[i]),
+        None => dse::evaluate(models, &cfgs[i], layers),
     })
 }
 
@@ -358,12 +361,14 @@ pub fn fig10_11_table2(
     text
 }
 
-/// Fig 12: co-exploration Pareto (1000 archs).
+/// Fig 12: co-exploration Pareto (1000 archs). Errs when the sampled
+/// space contains no INT16 pair to normalize against (`quidam coexplore
+/// --pe lightpe1,lightpe2` surfaces this instead of panicking).
 pub fn fig12(coord: &Coordinator, models: &PpaModels, out: &Path,
-             n_archs: usize) -> String {
+             n_archs: usize) -> Result<String, String> {
     let pts = coexplore::explore(models, &coord.space, Dataset::Cifar10,
                                  n_archs, 2, 0xF12, coord.threads);
-    let norm = coexplore::normalize(&pts);
+    let norm = coexplore::normalize(&pts)?;
     let front_e = coexplore::pareto(&norm, false);
     let front_a = coexplore::pareto(&norm, true);
     let mut rows = Vec::new();
@@ -397,7 +402,7 @@ pub fn fig12(coord: &Coordinator, models: &PpaModels, out: &Path,
         "{} pairs scored; energy-front size {}, {:.0}% LightPE (paper: \
          LightPEs consistently on the front)\n",
         norm.len(), front_e.len(), 100.0 * light_frac);
-    s
+    Ok(s)
 }
 
 /// Table 3: clock frequencies per PE type + Eyeriss technology scaling.
@@ -530,7 +535,7 @@ mod tests {
             fig5(&coord, &dir, 30),
             fig9(&coord, &models, &dir, 40),
             fig10_11_table2(&coord, &models, &dir, 40),
-            fig12(&coord, &models, &dir, 30),
+            fig12(&coord, &models, &dir, 30).unwrap(),
             table3(&coord, &dir),
             table4(&dir),
             speedup(&coord, &models, &dir, 20),

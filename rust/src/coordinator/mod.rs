@@ -91,18 +91,25 @@ impl Coordinator {
     }
 
     /// Build (or load from `cache`) the pre-characterized PPA models.
+    ///
+    /// A present-but-unparseable cache is an error, not a trigger for a
+    /// silent minutes-long re-characterization: a corrupt `--models` file
+    /// almost always means the user pointed at the wrong path, and the
+    /// old behavior both hid that and overwrote the file. A cache fit at
+    /// a different degree is expected staleness and is refit.
     pub fn load_or_build_models(
         &self,
         cache: &Path,
         n_cfgs: usize,
         degree: u32,
         seed: u64,
-    ) -> PpaModels {
+    ) -> Result<PpaModels, String> {
         if cache.exists() {
-            if let Ok(m) = PpaModels::load(cache) {
-                if m.degree == degree {
-                    return m;
-                }
+            let m = PpaModels::load(cache).map_err(|e| {
+                format!("loading PPA models from {}: {e}", cache.display())
+            })?;
+            if m.degree == degree {
+                return Ok(m);
             }
         }
         let layers = unique_layers(&paper_workloads());
@@ -112,7 +119,7 @@ impl Coordinator {
             let _ = std::fs::create_dir_all(dir);
         }
         let _ = models.save(cache);
-        models
+        Ok(models)
     }
 }
 
@@ -165,11 +172,27 @@ mod tests {
             dram_bw: vec![16],
             pe_types: PeType::ALL.to_vec(),
         };
-        let m1 = coord.load_or_build_models(&cache, 12, 2, 3);
+        let m1 = coord.load_or_build_models(&cache, 12, 2, 3).unwrap();
         assert!(cache.exists());
-        let m2 = coord.load_or_build_models(&cache, 12, 2, 3);
+        let m2 = coord.load_or_build_models(&cache, 12, 2, 3).unwrap();
         let cfg = crate::config::AcceleratorConfig::baseline(PeType::Int16);
         assert!((m1.power_mw(&cfg) - m2.power_mw(&cfg)).abs() < 1e-9);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_model_cache_is_an_error_not_a_rebuild() {
+        let dir = std::env::temp_dir().join(format!(
+            "quidam_corrupt_cache_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let cache = dir.join("ppa.json");
+        std::fs::write(&cache, "{not json").unwrap();
+        let before = std::fs::read_to_string(&cache).unwrap();
+        let coord = Coordinator::default();
+        let err = coord.load_or_build_models(&cache, 4, 2, 1).unwrap_err();
+        assert!(err.contains("ppa.json"), "error names the file: {err}");
+        // The corrupt file is left untouched, not overwritten.
+        assert_eq!(std::fs::read_to_string(&cache).unwrap(), before);
         let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -12,7 +12,7 @@ use std::collections::BTreeMap;
 use crate::config::{AcceleratorConfig, SweepSpace};
 use crate::models::ConvLayer;
 use crate::pe::PeType;
-use crate::ppa::PpaModels;
+use crate::ppa::{CompiledNetModel, PpaModels};
 use crate::sweep::reducers::{ParetoFront2D, TopK, YSense};
 use crate::sweep::{self, Reducer};
 use crate::util::stats::{FiveNum, StreamingFiveNum};
@@ -29,15 +29,13 @@ pub struct DesignPoint {
     pub perf_per_area: f64,
 }
 
-/// Evaluate one config on a workload through the fitted models (fast path).
-pub fn evaluate(
-    models: &PpaModels,
+/// Assemble a design point from the three predicted metrics.
+fn design_point(
     cfg: &AcceleratorConfig,
-    layers: &[ConvLayer],
+    latency_s: f64,
+    power_mw: f64,
+    area_um2: f64,
 ) -> DesignPoint {
-    let latency_s = models.network_latency_s(cfg, layers);
-    let power_mw = models.power_mw(cfg);
-    let area_um2 = models.area_um2(cfg);
     DesignPoint {
         cfg: *cfg,
         latency_s,
@@ -48,17 +46,64 @@ pub fn evaluate(
     }
 }
 
+/// Evaluate one config on a workload through the fitted models (fast path).
+/// For sweeps, [`evaluate_compiled`] against a pre-compiled workload model
+/// is several times faster per point.
+pub fn evaluate(
+    models: &PpaModels,
+    cfg: &AcceleratorConfig,
+    layers: &[ConvLayer],
+) -> DesignPoint {
+    design_point(
+        cfg,
+        models.network_latency_s(cfg, layers),
+        models.power_mw(cfg),
+        models.area_um2(cfg),
+    )
+}
+
+/// Evaluate one config through a workload-specialized model (the sweep hot
+/// path) — agrees with [`evaluate`] on the compiled layers to ~1e-12.
+pub fn evaluate_compiled(
+    compiled: &CompiledNetModel,
+    cfg: &AcceleratorConfig,
+) -> DesignPoint {
+    design_point(
+        cfg,
+        compiled.network_latency_s(cfg),
+        compiled.power_mw(cfg),
+        compiled.area_um2(cfg),
+    )
+}
+
+/// Compile `models` against `layers`, falling back to `None` (generic
+/// evaluation) when the latency model cannot host the workload features —
+/// sweeps must keep working even against a hand-edited model file.
+fn try_compile(
+    models: &PpaModels,
+    layers: &[ConvLayer],
+) -> Option<CompiledNetModel> {
+    CompiledNetModel::compile(models, layers).ok()
+}
+
 /// Evaluate every point of a sweep on the work-stealing scheduler,
-/// materializing the results in grid order. For spaces too large to hold
-/// in memory use [`stream_space`] instead.
+/// materializing the results in grid order. The PPA models are compiled
+/// against the workload once; each point then evaluates through the small
+/// specialized bases. For spaces too large to hold in memory use
+/// [`stream_space`] instead.
 pub fn evaluate_space(
     models: &PpaModels,
     space: &SweepSpace,
     layers: &[ConvLayer],
     threads: usize,
 ) -> Vec<DesignPoint> {
+    let compiled = try_compile(models, layers);
     sweep::collect_indexed(space.len(), threads, |i| {
-        evaluate(models, &space.point(i), layers)
+        let cfg = space.point(i);
+        match &compiled {
+            Some(c) => evaluate_compiled(c, &cfg),
+            None => evaluate(models, &cfg, layers),
+        }
     })
 }
 
@@ -244,12 +289,17 @@ where
     F: Fn(&DesignPoint) -> Option<String> + Sync,
     W: FnMut(String),
 {
+    let compiled = try_compile(models, layers);
     sweep::map_reduce_stream(
         space.len(),
         threads,
         || SweepSummary::new(objective, top_k),
         |i, summary| {
-            let p = evaluate(models, &space.point(i), layers);
+            let cfg = space.point(i);
+            let p = match &compiled {
+                Some(c) => evaluate_compiled(c, &cfg),
+                None => evaluate(models, &cfg, layers),
+            };
             summary.observe(&p);
             row(&p)
         },
@@ -268,11 +318,18 @@ pub fn stream_configs(
     objective: Objective,
     top_k: usize,
 ) -> SweepSummary {
+    let compiled = try_compile(models, layers);
     sweep::map_reduce(
         cfgs.len(),
         threads,
         || SweepSummary::new(objective, top_k),
-        |i, summary| summary.observe(&evaluate(models, &cfgs[i], layers)),
+        |i, summary| {
+            let p = match &compiled {
+                Some(c) => evaluate_compiled(c, &cfgs[i]),
+                None => evaluate(models, &cfgs[i], layers),
+            };
+            summary.observe(&p);
+        },
     )
 }
 

@@ -11,7 +11,7 @@
 //!                       work-stealing sweep; full flag list in README.md)
 //!   quidam figures      [--out DIR] [--samples N] (all figures + tables)
 //!   quidam fig4|fig5|fig678|fig9|fig10|fig12|table3|table4|speedup
-//!   quidam coexplore    [--archs N]
+//!   quidam coexplore    [--archs N] [--pe LIST] (errors without int16)
 //!   quidam rtl          --pe TYPE [--out-file FILE]
 //!   quidam train        --pe TYPE [--steps N] (PJRT QAT on synth-CIFAR)
 //!   quidam eval-trained (train + accuracy for every PE type)
@@ -42,11 +42,28 @@ fn main() {
     }
 }
 
-fn models_for(coord: &Coordinator, args: &Args) -> quidam::ppa::PpaModels {
+/// Strict numeric flag lookup — `--cfgs abc` is an error naming the flag,
+/// not a silent fallback to the default (util::cli::Args::parse_usize).
+fn num(args: &Args, key: &str, default: usize) -> anyhow::Result<usize> {
+    args.parse_usize(key, default).map_err(anyhow::Error::msg)
+}
+
+fn models_for(coord: &Coordinator, args: &Args) -> anyhow::Result<quidam::ppa::PpaModels> {
     let cache = PathBuf::from(args.get_or("models", "artifacts/ppa_models.json"));
-    let cfgs = args.usize_or("cfgs", 240);
-    let degree = args.usize_or("degree", 5) as u32;
-    coord.load_or_build_models(&cache, cfgs, degree, args.usize_or("seed", 42) as u64)
+    let cfgs = num(args, "cfgs", 240)?;
+    let degree = num(args, "degree", 5)? as u32;
+    let seed = num(args, "seed", 42)? as u64;
+    coord
+        .load_or_build_models(&cache, cfgs, degree, seed)
+        .map_err(anyhow::Error::msg)
+}
+
+/// Parse a `--pe fp32,int16,...` list into PE types.
+fn parse_pe_list(pes: &str) -> anyhow::Result<Vec<PeType>> {
+    pes.split(',')
+        .map(|p| PeType::from_name(p.trim()))
+        .collect::<Result<Vec<_>, _>>()
+        .map_err(anyhow::Error::msg)
 }
 
 /// `quidam explore` — stream a (possibly million-point) sweep through the
@@ -55,8 +72,6 @@ fn models_for(coord: &Coordinator, args: &Args) -> quidam::ppa::PpaModels {
 /// by the size of the grid; per-point output streams to `--points-out`
 /// through a bounded channel.
 fn run_explore(coord: &Coordinator, args: &Args, out: &std::path::Path) -> anyhow::Result<()> {
-    let models = models_for(coord, args);
-
     // --- Sweep space: default grid, --dense scale grid, per-axis overrides.
     let mut space = if args.flag("dense") {
         SweepSpace::dense()
@@ -70,18 +85,14 @@ fn run_explore(coord: &Coordinator, args: &Args, out: &std::path::Path) -> anyho
         }
     }
     if let Some(pes) = args.get("pe") {
-        space.pe_types = pes
-            .split(',')
-            .map(|p| PeType::from_name(p.trim()))
-            .collect::<Result<Vec<_>, _>>()
-            .map_err(anyhow::Error::msg)?;
+        space.pe_types = parse_pe_list(pes)?;
     }
     // Reject grids that leave AcceleratorConfig::validate's legal ranges
     // before spending any sweep time on them.
     space.validate().map_err(anyhow::Error::msg)?;
 
-    let threads = args.usize_or("threads", coord.threads);
-    let top_k = args.usize_or("top-k", 5);
+    let threads = num(args, "threads", coord.threads)?;
+    let top_k = num(args, "top-k", 5)?;
     let objective = dse::Objective::from_name(&args.get_or("objective", "ppa"))
         .map_err(anyhow::Error::msg)?;
     let net = match args.get_or("net", "resnet20").as_str() {
@@ -97,6 +108,10 @@ fn run_explore(coord: &Coordinator, args: &Args, out: &std::path::Path) -> anyho
         "json" | "jsonl" => true,
         other => anyhow::bail!("unknown --format '{other}' (want csv|jsonl)"),
     };
+
+    // Every cheap flag is parsed; only now pay for (or load) the models —
+    // a flag typo must not cost a minutes-long characterization first.
+    let models = models_for(coord, args)?;
     const COLS: [&str; 13] = [
         "pe_type", "rows", "cols", "sp_if", "sp_fw", "sp_ps", "gb_kib",
         "dram_bw", "latency_s", "power_mw", "area_um2", "energy_j",
@@ -273,13 +288,22 @@ fn run_explore(coord: &Coordinator, args: &Args, out: &std::path::Path) -> anyho
 }
 
 fn run(sub: &str, args: &Args) -> anyhow::Result<()> {
-    let coord = Coordinator::default();
+    let mut coord = Coordinator::default();
+    // Restrict the coordinator's sampled space for the co-exploration
+    // commands (`quidam coexplore --pe lightpe1,lightpe2`); `explore` has
+    // its own copy-on-override handling in run_explore.
+    if matches!(sub, "fig12" | "coexplore") {
+        if let Some(pes) = args.get("pe") {
+            coord.space.pe_types = parse_pe_list(pes)?;
+        }
+    }
+    let coord = coord;
     let out = PathBuf::from(args.get_or("out", "results"));
     std::fs::create_dir_all(&out).ok();
-    let samples = args.usize_or("samples", 2000);
+    let samples = num(args, "samples", 2000)?;
     match sub {
         "characterize" => {
-            let m = models_for(&coord, args);
+            let m = models_for(&coord, args)?;
             println!(
                 "fit degree-{} models for {} PE types -> {}",
                 m.degree,
@@ -288,16 +312,16 @@ fn run(sub: &str, args: &Args) -> anyhow::Result<()> {
             );
         }
         "evaluate" => {
-            let m = models_for(&coord, args);
+            let m = models_for(&coord, args)?;
             let pe = PeType::from_name(&args.get_or("pe", "lightpe1"))
                 .map_err(anyhow::Error::msg)?;
             let mut cfg = AcceleratorConfig::baseline(pe);
-            cfg.rows = args.usize_or("rows", cfg.rows);
-            cfg.cols = args.usize_or("cols", cfg.cols);
-            cfg.sp_if = args.usize_or("sp-if", cfg.sp_if);
-            cfg.sp_fw = args.usize_or("sp-fw", cfg.sp_fw);
-            cfg.sp_ps = args.usize_or("sp-ps", cfg.sp_ps);
-            cfg.gb_kib = args.usize_or("gb", cfg.gb_kib);
+            cfg.rows = num(args, "rows", cfg.rows)?;
+            cfg.cols = num(args, "cols", cfg.cols)?;
+            cfg.sp_if = num(args, "sp-if", cfg.sp_if)?;
+            cfg.sp_fw = num(args, "sp-fw", cfg.sp_fw)?;
+            cfg.sp_ps = num(args, "sp-ps", cfg.sp_ps)?;
+            cfg.gb_kib = num(args, "gb", cfg.gb_kib)?;
             cfg.validate().map_err(anyhow::Error::msg)?;
             let net = zoo::resnet_cifar(20, Dataset::Cifar10);
             let p = dse::evaluate(&m, &cfg, &net.layers);
@@ -315,31 +339,33 @@ fn run(sub: &str, args: &Args) -> anyhow::Result<()> {
         }
         "explore" => run_explore(&coord, args, &out)?,
         "figures" => {
-            let m = models_for(&coord, args);
+            let m = models_for(&coord, args)?;
             print!("{}", figures::fig4(&coord, &m, &out, samples));
-            print!("{}", figures::fig5(&coord, &out, args.usize_or("fig5-cfgs", 600)));
+            print!("{}", figures::fig5(&coord, &out, num(args, "fig5-cfgs", 600)?));
             print!("{}", figures::fig678(&coord, &m, &out, 60));
             print!("{}", figures::fig9(&coord, &m, &out, samples / 2));
             print!("{}", figures::fig10_11_table2(&coord, &m, &out, samples));
-            print!("{}", figures::fig12(&coord, &m, &out, args.usize_or("archs", 1000)));
+            print!("{}", figures::fig12(&coord, &m, &out, num(args, "archs", 1000)?)
+                .map_err(anyhow::Error::msg)?);
             print!("{}", figures::table3(&coord, &out));
             print!("{}", figures::table4(&out));
             print!("{}", figures::speedup(&coord, &m, &out, 200));
             println!("CSV outputs in {}", out.display());
         }
-        "fig4" => print!("{}", figures::fig4(&coord, &models_for(&coord, args), &out, samples)),
-        "fig5" => print!("{}", figures::fig5(&coord, &out, args.usize_or("fig5-cfgs", 600))),
-        "fig678" => print!("{}", figures::fig678(&coord, &models_for(&coord, args), &out, 60)),
-        "fig9" => print!("{}", figures::fig9(&coord, &models_for(&coord, args), &out, samples / 2)),
+        "fig4" => print!("{}", figures::fig4(&coord, &models_for(&coord, args)?, &out, samples)),
+        "fig5" => print!("{}", figures::fig5(&coord, &out, num(args, "fig5-cfgs", 600)?)),
+        "fig678" => print!("{}", figures::fig678(&coord, &models_for(&coord, args)?, &out, 60)),
+        "fig9" => print!("{}", figures::fig9(&coord, &models_for(&coord, args)?, &out, samples / 2)),
         "fig10" | "fig11" | "table2" => print!("{}",
-            figures::fig10_11_table2(&coord, &models_for(&coord, args), &out, samples)),
+            figures::fig10_11_table2(&coord, &models_for(&coord, args)?, &out, samples)),
         "fig12" | "coexplore" => print!("{}",
-            figures::fig12(&coord, &models_for(&coord, args), &out,
-                           args.usize_or("archs", 1000))),
+            figures::fig12(&coord, &models_for(&coord, args)?, &out,
+                           num(args, "archs", 1000)?)
+                .map_err(anyhow::Error::msg)?),
         "table3" => print!("{}", figures::table3(&coord, &out)),
         "table4" => print!("{}", figures::table4(&out)),
         "speedup" => print!("{}",
-            figures::speedup(&coord, &models_for(&coord, args), &out, 200)),
+            figures::speedup(&coord, &models_for(&coord, args)?, &out, 200)),
         "rtl" => {
             let pe = PeType::from_name(&args.get_or("pe", "lightpe1"))
                 .map_err(anyhow::Error::msg)?;
@@ -363,7 +389,7 @@ fn run(sub: &str, args: &Args) -> anyhow::Result<()> {
             } else {
                 PeType::ALL.to_vec()
             };
-            let steps = args.usize_or("steps", 300);
+            let steps = num(args, "steps", 300)?;
             let image = rt.manifest.model.get("image_size").as_usize().unwrap_or(16);
             let classes = rt.manifest.model.get("num_classes").as_usize().unwrap_or(10);
             let train_ds = SynthDataset::generate(4096, image, classes, 7);

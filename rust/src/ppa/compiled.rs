@@ -1,0 +1,326 @@
+//! Workload-specialized PPA model compilation — partial evaluation of the
+//! fitted latency polynomial against a fixed workload.
+//!
+//! The sweep hot path answers "how fast is config X on network N" for
+//! millions of X and *one* N. The generic path rebuilds the full 15-dim
+//! latency feature vector and evaluates every monomial product per layer
+//! per config, even though the 9 layer features are constant across the
+//! entire sweep. [`CompiledNetModel`] folds those constants into the
+//! coefficients once per unique layer shape (`PolyModel::specialize`),
+//! leaving a small hardware-only residual basis that every layer shares —
+//! so the per-config inner loop fills one 6-feature power table and takes
+//! one dot product per unique layer.
+//!
+//! Correctness contract: compiled and generic predictions agree to ~1e-12
+//! relative (constant factors are folded, nothing is approximated); the
+//! property tests below and `benches/bench_components.rs` enforce it.
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+
+use crate::config::AcceleratorConfig;
+use crate::models::ConvLayer;
+use crate::pe::PeType;
+use crate::regression::poly::{FlatBasis, PolyBasis};
+
+use super::{
+    cfg_latency_features, layer_latency_features, unique_layer_counts,
+    PpaModels, N_CFG_LATENCY_FEATURES,
+};
+
+thread_local! {
+    /// Reusable power-table scratch for the compiled hot path (per thread).
+    static POWERS: RefCell<Vec<f64>> = const { RefCell::new(Vec::new()) };
+}
+
+/// One PE type's compiled evaluators: power/area (already hardware-only)
+/// plus the workload-specialized latency models — a single residual basis
+/// over the hardware features shared by one folded coefficient vector per
+/// unique layer shape.
+struct CompiledPeModels {
+    power: crate::regression::PolyModel,
+    area: crate::regression::PolyModel,
+    /// Residual hardware-only basis; identical structure for every layer
+    /// (specialization structure depends on *which* features are bound,
+    /// never on their values).
+    lat_flat: FlatBasis,
+    lat_log_features: bool,
+    lat_log_target: bool,
+    /// (folded coefficients, multiplicity) per unique layer shape, in
+    /// first-seen order — the same order the generic path sums in.
+    lat_layers: Vec<(Vec<f64>, f64)>,
+}
+
+impl CompiledPeModels {
+    fn network_latency_s(
+        &self,
+        cfg: &AcceleratorConfig,
+        powers: &mut Vec<f64>,
+    ) -> f64 {
+        if self.lat_layers.is_empty() {
+            return 0.0;
+        }
+        let x = cfg_latency_features(cfg);
+        let tx = if self.lat_log_features {
+            crate::regression::log1p_row(&x)
+        } else {
+            x
+        };
+        self.lat_flat.fill_powers(&tx, powers);
+        let mut total = 0.0;
+        for (coef, n) in &self.lat_layers {
+            let mut v = self.lat_flat.dot_prepared(coef, powers);
+            if self.lat_log_target {
+                v = v.exp();
+            }
+            // Same clamp as PpaModels::layer_latency_s — the parity
+            // contract includes the degenerate-extrapolation handling.
+            total += n * if v.is_finite() { v.clamp(1e-9, 1e4) } else { 1e4 };
+        }
+        total
+    }
+}
+
+/// The full pre-characterized model store, specialized against one
+/// workload. Build once per (models, layer list) pair with [`compile`],
+/// then evaluate millions of configs through
+/// [`crate::dse::evaluate_compiled`].
+///
+/// [`compile`]: CompiledNetModel::compile
+pub struct CompiledNetModel {
+    per_pe: BTreeMap<PeType, CompiledPeModels>,
+}
+
+impl CompiledNetModel {
+    /// Specialize `models`' latency polynomials against `layers`, once per
+    /// unique layer shape per PE type (dedup shared with the generic path
+    /// via `ppa::unique_layer_counts`). Errs only when a latency model's
+    /// feature layout cannot host the layer features (e.g. a hand-edited
+    /// model file with the wrong `dim`) — callers on infallible paths can
+    /// fall back to generic evaluation.
+    pub fn compile(
+        models: &PpaModels,
+        layers: &[ConvLayer],
+    ) -> Result<CompiledNetModel, String> {
+        Self::compile_for(models, layers, &PeType::ALL)
+    }
+
+    /// Like [`compile`], restricted to the PE types a sweep will actually
+    /// evaluate — compilation cost scales with the PE count, so callers
+    /// over narrowed spaces (co-exploration) should not pay for all four.
+    /// PE types absent from `models` are skipped.
+    ///
+    /// [`compile`]: CompiledNetModel::compile
+    pub fn compile_for(
+        models: &PpaModels,
+        layers: &[ConvLayer],
+        pes: &[PeType],
+    ) -> Result<CompiledNetModel, String> {
+        let uniq = unique_layer_counts(layers);
+        let mut per_pe = BTreeMap::new();
+        for (&pe, m) in models.per_pe.iter().filter(|&(pe, _)| pes.contains(pe)) {
+            let lat = &m.latency;
+            let mut lat_flat: Option<FlatBasis> = None;
+            let mut first_terms: Option<Vec<crate::regression::poly::Monomial>> =
+                None;
+            let mut lat_layers = Vec::with_capacity(uniq.len());
+            for (l, count) in &uniq {
+                let bound: Vec<(usize, f64)> = layer_latency_features(l)
+                    .into_iter()
+                    .enumerate()
+                    .map(|(k, v)| (N_CFG_LATENCY_FEATURES + k, v))
+                    .collect();
+                let spec = lat.specialize(&bound).map_err(|e| {
+                    format!("compiling {pe} latency model for layer {}: {e}", l.name)
+                })?;
+                // Every layer yields the same residual term structure, so
+                // one FlatBasis serves all folded coefficient vectors.
+                if first_terms.is_none() {
+                    lat_flat = Some(spec.flat.clone());
+                    first_terms = Some(spec.basis.terms.clone());
+                } else {
+                    debug_assert_eq!(
+                        first_terms.as_deref(),
+                        Some(spec.basis.terms.as_slice()),
+                    );
+                }
+                lat_layers.push((spec.coef, *count as f64));
+            }
+            let lat_flat = match lat_flat {
+                Some(f) => f,
+                // Empty workload: latency is an empty sum; compile an
+                // empty basis that is never evaluated.
+                None => FlatBasis::compile(&PolyBasis {
+                    dim: 0,
+                    max_degree: lat.basis.max_degree,
+                    terms: vec![],
+                    scale: vec![],
+                }),
+            };
+            per_pe.insert(pe, CompiledPeModels {
+                power: m.power.clone(),
+                area: m.area.clone(),
+                lat_flat,
+                lat_log_features: lat.log_features,
+                lat_log_target: lat.log_target,
+                lat_layers,
+            });
+        }
+        Ok(CompiledNetModel { per_pe })
+    }
+
+    fn pe(&self, pe: PeType) -> &CompiledPeModels {
+        self.per_pe
+            .get(&pe)
+            .unwrap_or_else(|| panic!("no compiled models for {pe}"))
+    }
+
+    /// Predicted power (mW) — identical to `PpaModels::power_mw`.
+    pub fn power_mw(&self, cfg: &AcceleratorConfig) -> f64 {
+        self.pe(cfg.pe_type).power.predict(&cfg.ppa_features())
+    }
+
+    /// Predicted area (µm²) — identical to `PpaModels::area_um2`.
+    pub fn area_um2(&self, cfg: &AcceleratorConfig) -> f64 {
+        self.pe(cfg.pe_type).area.predict(&cfg.ppa_features())
+    }
+
+    /// Network latency (s) over the compiled workload — agrees with
+    /// `PpaModels::network_latency_s` on the same layers to ~1e-12.
+    pub fn network_latency_s(&self, cfg: &AcceleratorConfig) -> f64 {
+        POWERS.with(|p| {
+            self.pe(cfg.pe_type)
+                .network_latency_s(cfg, &mut p.borrow_mut())
+        })
+    }
+
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SweepSpace;
+    use crate::dse;
+    use crate::models::{zoo, Dataset};
+    use crate::ppa::characterize;
+    use crate::tech::TechLibrary;
+    use crate::util::prop::Prop;
+
+    fn models() -> PpaModels {
+        let tech = TechLibrary::freepdk45();
+        let space = SweepSpace::default();
+        let layers = zoo::resnet_cifar(20, Dataset::Cifar10).layers;
+        let mut m = BTreeMap::new();
+        for pe in PeType::ALL {
+            m.insert(pe, characterize(&space, pe, &layers, 40, &tech, 17));
+        }
+        PpaModels::fit(&m, 2)
+    }
+
+    fn assert_rel_close(a: f64, b: f64, what: &str) -> Result<(), String> {
+        if (a - b).abs() <= 1e-12 * a.abs().max(b.abs()).max(1e-300) {
+            Ok(())
+        } else {
+            Err(format!("{what}: generic {a} vs compiled {b}"))
+        }
+    }
+
+    #[test]
+    fn compiled_matches_generic_on_full_grid() {
+        let m = models();
+        let layers = &zoo::resnet_cifar(20, Dataset::Cifar10).layers;
+        let compiled = CompiledNetModel::compile(&m, layers).unwrap();
+        let space = SweepSpace {
+            rows: vec![8, 12],
+            cols: vec![8, 14],
+            sp_if: vec![12, 24],
+            sp_fw: vec![128, 224],
+            sp_ps: vec![24],
+            gb_kib: vec![108, 512],
+            dram_bw: vec![16],
+            pe_types: PeType::ALL.to_vec(),
+        };
+        assert!(space.len() >= 64);
+        for cfg in space.iter() {
+            let g = dse::evaluate(&m, &cfg, layers);
+            let c = dse::evaluate_compiled(&compiled, &cfg);
+            for (a, b, what) in [
+                (g.latency_s, c.latency_s, "latency"),
+                (g.power_mw, c.power_mw, "power"),
+                (g.area_um2, c.area_um2, "area"),
+                (g.energy_j, c.energy_j, "energy"),
+                (g.perf_per_area, c.perf_per_area, "perf_per_area"),
+            ] {
+                assert_rel_close(a, b, what)
+                    .unwrap_or_else(|e| panic!("{cfg:?}: {e}"));
+            }
+        }
+    }
+
+    #[test]
+    fn compiled_matches_generic_on_random_configs_and_layers() {
+        let m = models();
+        let pool = zoo::resnet_cifar(56, Dataset::Cifar10).layers;
+        let space = SweepSpace::default();
+        Prop::quick(40).check(pool.len(), |rng, size| {
+            let layers: Vec<ConvLayer> = (0..size)
+                .map(|_| pool[rng.below(pool.len())].clone())
+                .collect();
+            let compiled = CompiledNetModel::compile(&m, &layers)?;
+            let cfg = space.sample(rng);
+            let g = dse::evaluate(&m, &cfg, &layers);
+            let c = dse::evaluate_compiled(&compiled, &cfg);
+            assert_rel_close(g.latency_s, c.latency_s, "latency")?;
+            assert_rel_close(g.power_mw, c.power_mw, "power")?;
+            assert_rel_close(g.area_um2, c.area_um2, "area")?;
+            assert_rel_close(g.energy_j, c.energy_j, "energy")?;
+            assert_rel_close(g.perf_per_area, c.perf_per_area, "perf/area")
+        });
+    }
+
+    #[test]
+    fn compiled_empty_workload_is_zero_latency() {
+        let m = models();
+        let compiled = CompiledNetModel::compile(&m, &[]).unwrap();
+        let cfg = AcceleratorConfig::baseline(PeType::Int16);
+        assert_eq!(compiled.network_latency_s(&cfg), 0.0);
+        assert_eq!(
+            compiled.network_latency_s(&cfg),
+            m.network_latency_s(&cfg, &[])
+        );
+    }
+
+    #[test]
+    fn unique_layer_counts_matches_layer_multiplicity() {
+        let layers = zoo::resnet_cifar(20, Dataset::Cifar10).layers;
+        let uniq = unique_layer_counts(&layers);
+        assert!(uniq.len() < layers.len());
+        let total: usize = uniq.iter().map(|(_, n)| n).sum();
+        assert_eq!(total, layers.len());
+    }
+
+    #[test]
+    fn compile_for_restricts_pe_types() {
+        let m = models();
+        let layers = &zoo::resnet_cifar(20, Dataset::Cifar10).layers;
+        let c = CompiledNetModel::compile_for(
+            &m, layers, &[PeType::LightPe1]).unwrap();
+        let cfg = AcceleratorConfig::baseline(PeType::LightPe1);
+        let full = CompiledNetModel::compile(&m, layers).unwrap();
+        assert_eq!(c.network_latency_s(&cfg), full.network_latency_s(&cfg));
+    }
+
+    #[test]
+    fn compile_rejects_models_with_wrong_feature_layout() {
+        // A latency model whose dim cannot host the 9 layer features
+        // (possible via a hand-edited --models file) errs instead of
+        // panicking or predicting garbage.
+        let mut m = models();
+        for pm in m.per_pe.values_mut() {
+            pm.latency = pm.power.clone(); // 5-dim model in the latency slot
+        }
+        let layers = zoo::resnet_cifar(20, Dataset::Cifar10).layers;
+        let err = CompiledNetModel::compile(&m, &layers).unwrap_err();
+        assert!(err.contains("out of range"), "{err}");
+    }
+}

@@ -13,6 +13,10 @@
 //! ~ms-s — the paper's "3-4 orders of magnitude" DSE speedup (§4.1),
 //! measured in benches/bench_speedup.rs.
 
+pub mod compiled;
+
+pub use compiled::CompiledNetModel;
+
 use std::collections::BTreeMap;
 
 use crate::config::{AcceleratorConfig, SweepSpace};
@@ -26,8 +30,14 @@ use crate::tech::TechLibrary;
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 
-/// The latency-model feature vector (paper §3.3, 12 dims + RS/DS).
-pub fn latency_features(cfg: &AcceleratorConfig, l: &ConvLayer) -> Vec<f64> {
+/// Number of hardware-config features leading the latency vector — the
+/// features that stay *free* when `compiled::CompiledNetModel` specializes
+/// the latency model against a fixed workload.
+pub const N_CFG_LATENCY_FEATURES: usize = 6;
+
+/// Hardware half of the latency feature vector (indices
+/// `0..N_CFG_LATENCY_FEATURES`).
+pub fn cfg_latency_features(cfg: &AcceleratorConfig) -> Vec<f64> {
     vec![
         cfg.sp_if as f64,
         cfg.sp_ps as f64,
@@ -35,6 +45,14 @@ pub fn latency_features(cfg: &AcceleratorConfig, l: &ConvLayer) -> Vec<f64> {
         cfg.rows as f64,
         cfg.cols as f64,
         cfg.gb_kib as f64,
+    ]
+}
+
+/// Workload half of the latency feature vector (indices
+/// `N_CFG_LATENCY_FEATURES..`) — constant per layer across a sweep, which
+/// is exactly what model specialization folds away.
+pub fn layer_latency_features(l: &ConvLayer) -> Vec<f64> {
+    vec![
         l.a as f64,
         l.c as f64,
         l.f as f64,
@@ -48,6 +66,36 @@ pub fn latency_features(cfg: &AcceleratorConfig, l: &ConvLayer) -> Vec<f64> {
         // documented in DESIGN.md §2.
         l.macs() as f64,
     ]
+}
+
+/// The latency-model feature vector (paper §3.3, 12 dims + RS/DS):
+/// hardware features first, then layer features.
+pub fn latency_features(cfg: &AcceleratorConfig, l: &ConvLayer) -> Vec<f64> {
+    let mut v = cfg_latency_features(cfg);
+    v.extend(layer_latency_features(l));
+    v
+}
+
+/// Deduplicate layers by shape — first-seen order, with multiplicities.
+/// Layer lists are short (tens), so a linear scan beats hashing. Shared by
+/// the generic latency sum and `compiled::CompiledNetModel`: the compiled
+/// path's 1e-12 parity contract depends on both paths visiting the same
+/// unique layers in the same order, so there is exactly one copy of this
+/// scan.
+pub(crate) fn unique_layer_counts(layers: &[ConvLayer]) -> Vec<(&ConvLayer, usize)> {
+    let mut uniq: Vec<(&ConvLayer, usize)> = Vec::with_capacity(layers.len());
+    'outer: for l in layers {
+        for (u, count) in &mut uniq {
+            if u.a == l.a && u.c == l.c && u.f == l.f && u.k == l.k
+                && u.s == l.s && u.p == l.p && u.rs == l.rs && u.ds == l.ds
+            {
+                *count += 1;
+                continue 'outer;
+            }
+        }
+        uniq.push((l, 1));
+    }
+    uniq
 }
 
 /// Ground-truth characterization rows for one PE type.
@@ -184,20 +232,8 @@ impl PpaModels {
         cfg: &AcceleratorConfig,
         layers: &[ConvLayer],
     ) -> f64 {
-        // Layer lists are short (tens); a linear scan beats hashing.
-        let mut uniq: Vec<(&ConvLayer, usize)> = Vec::with_capacity(layers.len());
-        'outer: for l in layers {
-            for (u, count) in &mut uniq {
-                if u.a == l.a && u.c == l.c && u.f == l.f && u.k == l.k
-                    && u.s == l.s && u.p == l.p && u.rs == l.rs && u.ds == l.ds
-                {
-                    *count += 1;
-                    continue 'outer;
-                }
-            }
-            uniq.push((l, 1));
-        }
-        uniq.iter()
+        unique_layer_counts(layers)
+            .iter()
             .map(|(l, n)| *n as f64 * self.layer_latency_s(cfg, l))
             .sum()
     }
@@ -300,42 +336,84 @@ fn model_to_json(m: &PolyModel) -> Json {
     ])
 }
 
+/// Strictly parse a numeric array — a non-numeric entry is an error, not a
+/// silently dropped element (the old `filter_map` shifted every later
+/// coefficient one slot left, misaligning the whole basis).
+fn f64_arr_from_json(j: &Json, what: &str) -> Result<Vec<f64>, String> {
+    let arr = j.as_arr().ok_or_else(|| format!("missing '{what}' array"))?;
+    let mut out = Vec::with_capacity(arr.len());
+    for (i, v) in arr.iter().enumerate() {
+        out.push(
+            v.as_f64()
+                .ok_or_else(|| format!("{what}[{i}] is not a number"))?,
+        );
+    }
+    Ok(out)
+}
+
 fn model_from_json(j: &Json) -> Result<PolyModel, String> {
-    let dim = j.get("dim").as_usize().ok_or("dim")?;
-    let max_degree = j.get("max_degree").as_usize().ok_or("max_degree")? as u32;
-    let scale: Vec<f64> = j
-        .get("scale")
-        .as_arr()
-        .ok_or("scale")?
-        .iter()
-        .filter_map(|v| v.as_f64())
-        .collect();
-    let terms: Vec<Monomial> = j
-        .get("terms")
-        .as_arr()
-        .ok_or("terms")?
-        .iter()
-        .map(|t| {
-            let flat: Vec<usize> = t
-                .as_arr()
-                .unwrap_or(&[])
-                .iter()
-                .filter_map(|v| v.as_usize())
-                .collect();
-            Monomial(
-                flat.chunks(2).map(|c| (c[0], c[1] as u32)).collect(),
-            )
-        })
-        .collect();
-    let coef: Vec<f64> = j
-        .get("coef")
-        .as_arr()
-        .ok_or("coef")?
-        .iter()
-        .filter_map(|v| v.as_f64())
-        .collect();
+    let dim = j.get("dim").as_usize().ok_or("missing numeric 'dim'")?;
+    let max_degree =
+        j.get("max_degree").as_usize().ok_or("missing numeric 'max_degree'")?
+            as u32;
+    // FlatBasis packs feature indices and exponents into u8; reject
+    // models that could silently truncate (no real model comes close).
+    if dim > 256 {
+        return Err(format!("dim {dim} exceeds the supported 256 features"));
+    }
+    if max_degree > 255 {
+        return Err(format!(
+            "max_degree {max_degree} exceeds the supported 255"
+        ));
+    }
+    let scale = f64_arr_from_json(j.get("scale"), "scale")?;
+    if scale.len() != dim {
+        return Err(format!(
+            "scale has {} entries, want dim = {dim}",
+            scale.len()
+        ));
+    }
+    let tj = j.get("terms").as_arr().ok_or("missing 'terms' array")?;
+    let mut terms = Vec::with_capacity(tj.len());
+    for (ti, t) in tj.iter().enumerate() {
+        let arr = t
+            .as_arr()
+            .ok_or_else(|| format!("terms[{ti}] is not an array"))?;
+        if arr.len() % 2 != 0 {
+            return Err(format!(
+                "terms[{ti}] has odd length {} (want flat (feature, exponent) pairs)",
+                arr.len()
+            ));
+        }
+        let mut flat = Vec::with_capacity(arr.len());
+        for (k, v) in arr.iter().enumerate() {
+            flat.push(v.as_usize().ok_or_else(|| {
+                format!("terms[{ti}][{k}] is not a non-negative integer")
+            })?);
+        }
+        let factors: Vec<(usize, u32)> =
+            flat.chunks(2).map(|c| (c[0], c[1] as u32)).collect();
+        for &(i, e) in &factors {
+            if i >= dim {
+                return Err(format!(
+                    "terms[{ti}] references feature {i} >= dim {dim}"
+                ));
+            }
+            if e > max_degree {
+                return Err(format!(
+                    "terms[{ti}] exponent {e} exceeds max_degree {max_degree}"
+                ));
+            }
+        }
+        terms.push(Monomial(factors));
+    }
+    let coef = f64_arr_from_json(j.get("coef"), "coef")?;
     if coef.len() != terms.len() {
-        return Err("coef/terms length mismatch".into());
+        return Err(format!(
+            "coef/terms length mismatch ({} coefficients, {} terms)",
+            coef.len(),
+            terms.len()
+        ));
     }
     let basis = PolyBasis { dim, max_degree, terms, scale };
     let flat = crate::regression::poly::FlatBasis::compile(&basis);
@@ -425,6 +503,57 @@ mod tests {
                 < 1e-12
         );
         assert!((models.power_mw(&cfg) - back.power_mw(&cfg)).abs() < 1e-9);
+    }
+
+    /// Template for one serialized PolyModel with pluggable fields.
+    fn model_json(terms: &str, coef: &str, scale: &str) -> Json {
+        let s = format!(
+            r#"{{"dim":2,"max_degree":2,"scale":{scale},"terms":{terms},"coef":{coef},"log_target":false,"log_features":false}}"#
+        );
+        Json::parse(&s).unwrap()
+    }
+
+    #[test]
+    fn model_from_json_rejects_corrupt_files_instead_of_panicking() {
+        // Baseline: a well-formed model parses.
+        let ok = model_json("[[],[0,1],[1,2]]", "[1.0,2.0,3.0]", "[1.0,1.0]");
+        assert!(model_from_json(&ok).is_ok());
+
+        // Odd-length monomial array: the old `flat.chunks(2)` indexed
+        // c[1] out of bounds and panicked.
+        let odd = model_json("[[0]]", "[1.0]", "[1.0,1.0]");
+        let e = model_from_json(&odd).unwrap_err();
+        assert!(e.contains("odd length"), "{e}");
+
+        // Non-numeric coef entry: the old filter_map silently dropped it,
+        // misaligning every later coefficient against the basis.
+        let bad_coef = model_json("[[],[0,1]]", r#"[1.0,"x"]"#, "[1.0,1.0]");
+        let e = model_from_json(&bad_coef).unwrap_err();
+        assert!(e.contains("coef"), "{e}");
+
+        // Non-numeric scale entry, and scale/dim length mismatch.
+        let bad_scale = model_json("[[]]", "[1.0]", r#"[1.0,null]"#);
+        assert!(model_from_json(&bad_scale).unwrap_err().contains("scale"));
+        let short_scale = model_json("[[]]", "[1.0]", "[1.0]");
+        assert!(model_from_json(&short_scale).unwrap_err().contains("dim"));
+
+        // Feature index out of range / exponent beyond max_degree would
+        // index past the FlatBasis power table at predict time.
+        let bad_idx = model_json("[[5,1]]", "[1.0]", "[1.0,1.0]");
+        assert!(model_from_json(&bad_idx).unwrap_err().contains("feature"));
+        let bad_exp = model_json("[[0,7]]", "[1.0]", "[1.0,1.0]");
+        assert!(model_from_json(&bad_exp).unwrap_err().contains("exponent"));
+
+        // Non-integer term entry.
+        let frac = model_json(r#"[[0,"e"]]"#, "[1.0]", "[1.0,1.0]");
+        assert!(model_from_json(&frac).is_err());
+
+        // Whole-store parse: a corrupt nested model surfaces as Err from
+        // PpaModels::from_json (the `quidam --models` load path).
+        let store =
+            r#"{"degree":2,"models":{"int16":{"power":{"dim":2},"area":{},"latency":{}}}}"#;
+        let j = Json::parse(store).unwrap();
+        assert!(PpaModels::from_json(&j).is_err());
     }
 
     #[test]

@@ -21,9 +21,16 @@ thread_local! {
     static POWERS: RefCell<Vec<f64>> = const { RefCell::new(Vec::new()) };
 }
 
+/// ln(1+x) for one feature (see FitOptions::log_features). Shared with
+/// `poly::PolyModel::specialize`, which must transform bound raw values
+/// exactly the way `predict` transforms full inputs.
+pub(crate) fn log1p_val(v: f64) -> f64 {
+    (1.0 + v.max(0.0)).ln()
+}
+
 /// ln(1+x) per feature (see FitOptions::log_features).
-fn log1p_row(x: &[f64]) -> Vec<f64> {
-    x.iter().map(|v| (1.0 + v.max(0.0)).ln()).collect()
+pub(crate) fn log1p_row(x: &[f64]) -> Vec<f64> {
+    x.iter().map(|&v| log1p_val(v)).collect()
 }
 
 /// A fitted polynomial regression model.
@@ -272,6 +279,37 @@ mod tests {
         let (scores, best) = select_degree(&xs, &ys, base, 6, 5, 11);
         assert_eq!(scores.len(), 6);
         assert!((3..=5).contains(&best), "picked degree {best}");
+    }
+
+    #[test]
+    fn specialized_model_prediction_parity() {
+        // Latency-model shape: log features + log target, suffix bound.
+        let mut rng = Rng::new(11);
+        let xs: Vec<Vec<f64>> = (0..200)
+            .map(|_| (0..5).map(|_| rng.range_f64(1.0, 50.0)).collect())
+            .collect();
+        let ys: Vec<f64> = xs
+            .iter()
+            .map(|x| x.iter().product::<f64>().sqrt() + 1.0)
+            .collect();
+        let m = PolyModel::fit(&xs, &ys, FitOptions {
+            max_degree: 3,
+            max_vars: 2,
+            ridge: 1e-8,
+            log_target: true,
+            log_features: true,
+        });
+        for x in xs.iter().take(25) {
+            let s = m.specialize(&[(3, x[3]), (4, x[4])]).unwrap();
+            let full = m.predict(x);
+            let part = s.predict(&x[..3]);
+            assert!(
+                (full - part).abs() <= 1e-12 * full.abs().max(1.0),
+                "{full} vs {part}"
+            );
+        }
+        // Out-of-range binding surfaces as Err, not a panic.
+        assert!(m.specialize(&[(9, 1.0)]).is_err());
     }
 
     #[test]

@@ -10,6 +10,8 @@
 //! normal equations tractable (DESIGN.md notes this as our scaling of the
 //! paper's degree-5 latency model).
 
+use super::{log1p_val, PolyModel};
+
 /// One monomial: sparse (feature index, exponent) pairs.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Monomial(pub Vec<(usize, u32)>);
@@ -74,9 +76,14 @@ impl FlatBasis {
         self.offsets.len() - 1
     }
 
-    /// Σ_t coef[t] · Π factors(t), using `powers` as scratch (resized as
-    /// needed; pass a reusable buffer to stay allocation-free).
-    pub fn dot(&self, x: &[f64], coef: &[f64], powers: &mut Vec<f64>) -> f64 {
+    /// Fill the per-feature power table for `x` (scaled, exponents
+    /// 0..=max_degree), resizing `powers` as needed. Split out of [`dot`]
+    /// so callers evaluating many coefficient vectors against the same
+    /// input — the workload-specialized per-layer latency models — pay
+    /// for the table once per input, not once per coefficient vector.
+    ///
+    /// [`dot`]: FlatBasis::dot
+    pub fn fill_powers(&self, x: &[f64], powers: &mut Vec<f64>) {
         debug_assert_eq!(x.len(), self.dim);
         let stride = self.max_degree + 1;
         powers.clear();
@@ -90,6 +97,13 @@ impl FlatBasis {
                 row[e] = p;
             }
         }
+    }
+
+    /// Σ_t coef[t] · Π factors(t) against a table from [`fill_powers`].
+    ///
+    /// [`fill_powers`]: FlatBasis::fill_powers
+    pub fn dot_prepared(&self, coef: &[f64], powers: &[f64]) -> f64 {
+        let stride = self.max_degree + 1;
         let mut acc = 0.0;
         for t in 0..self.num_terms() {
             let mut v = coef[t];
@@ -101,6 +115,13 @@ impl FlatBasis {
             acc += v;
         }
         acc
+    }
+
+    /// Σ_t coef[t] · Π factors(t), using `powers` as scratch (resized as
+    /// needed; pass a reusable buffer to stay allocation-free).
+    pub fn dot(&self, x: &[f64], coef: &[f64], powers: &mut Vec<f64>) -> f64 {
+        self.fill_powers(x, powers);
+        self.dot_prepared(coef, powers)
     }
 }
 
@@ -149,12 +170,118 @@ impl PolyBasis {
         self.terms.len()
     }
 
+    /// Partially evaluate the basis against known-constant features.
+    ///
+    /// `bound` lists (feature index, value) pairs in the space the basis
+    /// is evaluated in (after any log-feature transform, before scaling —
+    /// the same space [`expand`]/[`FlatBasis::dot`] take). Each monomial's
+    /// bound factors fold into its coefficient; the residual monomials are
+    /// re-indexed over the surviving features (ascending original order)
+    /// and duplicate residuals merge by summing coefficients. Returns the
+    /// specialized basis, its coefficients, and the original indices of
+    /// the surviving features.
+    ///
+    /// The residual *term structure* depends only on which indices are
+    /// bound, never on their values — zero coefficients are kept — so
+    /// every specialization of one basis against the same index set can
+    /// share a single [`FlatBasis`] compilation.
+    ///
+    /// [`expand`]: PolyBasis::expand
+    pub fn specialize(
+        &self,
+        coef: &[f64],
+        bound: &[(usize, f64)],
+    ) -> Result<(PolyBasis, Vec<f64>, Vec<usize>), String> {
+        if coef.len() != self.terms.len() {
+            return Err(format!(
+                "specialize: {} coefficients for {} terms",
+                coef.len(),
+                self.terms.len()
+            ));
+        }
+        let mut value: Vec<Option<f64>> = vec![None; self.dim];
+        for &(i, v) in bound {
+            if i >= self.dim {
+                return Err(format!(
+                    "specialize: bound feature {i} out of range (dim {})",
+                    self.dim
+                ));
+            }
+            if value[i].replace(v).is_some() {
+                return Err(format!("specialize: feature {i} bound twice"));
+            }
+        }
+        let free: Vec<usize> =
+            (0..self.dim).filter(|&i| value[i].is_none()).collect();
+        let mut remap = vec![usize::MAX; self.dim];
+        for (k, &i) in free.iter().enumerate() {
+            remap[i] = k;
+        }
+        // Fold each term's bound factors into its coefficient and merge
+        // collapsed duplicates (BTreeMap keyed on the residual factors).
+        let mut merged: std::collections::BTreeMap<Vec<(usize, u32)>, f64> =
+            std::collections::BTreeMap::new();
+        for (m, &c) in self.terms.iter().zip(coef) {
+            let mut folded = c;
+            let mut residual: Vec<(usize, u32)> = Vec::new();
+            for &(i, e) in &m.0 {
+                match value[i] {
+                    Some(v) => folded *= (v / self.scale[i]).powi(e as i32),
+                    None => residual.push((remap[i], e)),
+                }
+            }
+            *merged.entry(residual).or_insert(0.0) += folded;
+        }
+        let mut pairs: Vec<(Monomial, f64)> = merged
+            .into_iter()
+            .map(|(factors, c)| (Monomial(factors), c))
+            .collect();
+        // Canonical term order, matching `PolyBasis::new`.
+        pairs.sort_by_key(|(m, _)| (m.degree(), m.0.clone()));
+        let (terms, out_coef): (Vec<Monomial>, Vec<f64>) =
+            pairs.into_iter().unzip();
+        let scale: Vec<f64> = free.iter().map(|&i| self.scale[i]).collect();
+        Ok((
+            PolyBasis { dim: free.len(), max_degree: self.max_degree, terms, scale },
+            out_coef,
+            free,
+        ))
+    }
+
     /// Expand one input into the design-matrix row.
     pub fn expand(&self, x: &[f64]) -> Vec<f64> {
         assert_eq!(x.len(), self.dim, "feature dim mismatch");
         let xs: Vec<f64> =
             x.iter().zip(&self.scale).map(|(v, s)| v / s).collect();
         self.terms.iter().map(|m| m.eval(&xs)).collect()
+    }
+}
+
+impl PolyModel {
+    /// Partially evaluate the fitted model against known-constant *raw*
+    /// features (the log-feature transform, when the model uses one, is
+    /// applied here). The returned model predicts from the surviving
+    /// features only, passed in ascending original-index order.
+    ///
+    /// Correctness contract: for any input agreeing with `bound` on the
+    /// bound positions, the specialized prediction equals the full one up
+    /// to float reassociation (~1e-12 relative) — constant monomial
+    /// factors are folded into coefficients, nothing is approximated.
+    pub fn specialize(&self, bound: &[(usize, f64)]) -> Result<PolyModel, String> {
+        let tb: Vec<(usize, f64)> = if self.log_features {
+            bound.iter().map(|&(i, v)| (i, log1p_val(v))).collect()
+        } else {
+            bound.to_vec()
+        };
+        let (basis, coef, _free) = self.basis.specialize(&self.coef, &tb)?;
+        let flat = FlatBasis::compile(&basis);
+        Ok(PolyModel {
+            basis,
+            coef,
+            log_target: self.log_target,
+            log_features: self.log_features,
+            flat,
+        })
     }
 }
 
@@ -236,6 +363,78 @@ mod tests {
             assert!((slow - fast).abs() < 1e-9 * slow.abs().max(1.0),
                 "{slow} vs {fast}");
         }
+    }
+
+    #[test]
+    fn specialize_matches_full_expand_dot() {
+        let mut b = PolyBasis::new(4, 3, 2);
+        b.fit_scale(&[vec![5.0, 10.0, 2.0, 8.0]]);
+        let coef: Vec<f64> =
+            (0..b.num_terms()).map(|i| ((i * 7) % 11) as f64 - 5.0).collect();
+        let x = [1.5, 4.0, 0.5, 7.0];
+        let full: f64 =
+            b.expand(&x).iter().zip(&coef).map(|(t, c)| t * c).sum();
+        let (sb, sc, free) = b.specialize(&coef, &[(1, 4.0), (3, 7.0)]).unwrap();
+        assert_eq!(free, vec![0, 2]);
+        assert_eq!(sb.dim, 2);
+        let part: f64 =
+            sb.expand(&[1.5, 0.5]).iter().zip(&sc).map(|(t, c)| t * c).sum();
+        assert!(
+            (full - part).abs() < 1e-12 * full.abs().max(1.0),
+            "{full} vs {part}"
+        );
+        // Collapsed duplicates merged: strictly fewer terms than the full
+        // basis, and exactly the <=2-var degree-3 monomials over 2 vars.
+        assert!(sb.num_terms() < b.num_terms());
+        assert_eq!(sb.terms, PolyBasis::new(2, 3, 2).terms);
+    }
+
+    #[test]
+    fn specialize_structure_independent_of_bound_values() {
+        let b = PolyBasis::new(5, 4, 2);
+        let coef = vec![1.0; b.num_terms()];
+        let (s1, _, _) = b.specialize(&coef, &[(0, 2.0), (4, 3.0)]).unwrap();
+        let (s2, _, _) = b.specialize(&coef, &[(0, 0.0), (4, -9.5)]).unwrap();
+        assert_eq!(s1.terms, s2.terms);
+        assert_eq!(s1.scale, s2.scale);
+    }
+
+    #[test]
+    fn specialize_rejects_bad_bounds() {
+        let b = PolyBasis::new(3, 2, 2);
+        let coef = vec![1.0; b.num_terms()];
+        assert!(b.specialize(&coef, &[(3, 1.0)]).is_err());
+        assert!(b.specialize(&coef, &[(0, 1.0), (0, 2.0)]).is_err());
+        assert!(b.specialize(&[1.0], &[(0, 1.0)]).is_err());
+        // Binding nothing reproduces the basis; binding everything leaves
+        // the intercept only.
+        let (same, sc, free) = b.specialize(&coef, &[]).unwrap();
+        assert_eq!(same.terms, b.terms);
+        assert_eq!(sc, coef);
+        assert_eq!(free, vec![0, 1, 2]);
+        let (none, nc, nfree) = b
+            .specialize(&coef, &[(0, 1.0), (1, 1.0), (2, 1.0)])
+            .unwrap();
+        assert_eq!(none.dim, 0);
+        assert_eq!(none.num_terms(), 1); // every term collapses to 1
+        assert!(nfree.is_empty());
+        // All scales are 1, all values 1 => folded sum = Σ coef.
+        assert!((nc[0] - coef.iter().sum::<f64>()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fill_powers_then_dot_prepared_matches_dot() {
+        let mut b = PolyBasis::new(3, 4, 3);
+        b.fit_scale(&[vec![7.0, 3.0, 90.0]]);
+        let flat = FlatBasis::compile(&b);
+        let coef: Vec<f64> =
+            (0..b.num_terms()).map(|i| (i % 5) as f64 - 2.0).collect();
+        let x = [2.0, 1.5, 44.0];
+        let mut powers = Vec::new();
+        let whole = flat.dot(&x, &coef, &mut powers);
+        flat.fill_powers(&x, &mut powers);
+        let split = flat.dot_prepared(&coef, &powers);
+        assert_eq!(whole, split);
     }
 
     #[test]

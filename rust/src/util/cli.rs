@@ -52,6 +52,10 @@ impl Args {
         self.get(key).unwrap_or(default).to_string()
     }
 
+    /// Lenient numeric lookup: absent *or unparseable* values yield the
+    /// default. CLI entrypoints should prefer [`Args::parse_usize`], which
+    /// reports a typo (`--cfgs abc`) instead of silently running with the
+    /// default.
     pub fn usize_or(&self, key: &str, default: usize) -> usize {
         self.get(key)
             .and_then(|v| v.parse().ok())
@@ -62,6 +66,31 @@ impl Args {
         self.get(key)
             .and_then(|v| v.parse().ok())
             .unwrap_or(default)
+    }
+
+    /// Strict numeric lookup: the default applies only when the option is
+    /// absent; a present-but-unparseable value is an error naming the
+    /// flag.
+    pub fn parse_usize(&self, key: &str, default: usize) -> Result<usize, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| {
+                format!(
+                    "--{key}: invalid value '{v}' (expected a non-negative \
+                     integer)"
+                )
+            }),
+        }
+    }
+
+    /// Strict float lookup; see [`Args::parse_usize`].
+    pub fn parse_f64(&self, key: &str, default: f64) -> Result<f64, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| {
+                format!("--{key}: invalid value '{v}' (expected a number)")
+            }),
+        }
     }
 
     pub fn flag(&self, name: &str) -> bool {
@@ -136,6 +165,28 @@ mod tests {
         let b = parse("explore out.csv --verbose");
         assert!(b.flag("verbose"));
         assert_eq!(b.positional, vec!["out.csv"]);
+    }
+
+    #[test]
+    fn parse_usize_errors_on_garbage_instead_of_defaulting() {
+        // Regression: `quidam explore --cfgs abc` used to silently run
+        // with the default 240.
+        let a = parse("explore --cfgs abc --threads 8");
+        assert_eq!(a.parse_usize("threads", 4).unwrap(), 8);
+        assert_eq!(a.parse_usize("missing", 4).unwrap(), 4);
+        let e = a.parse_usize("cfgs", 240).unwrap_err();
+        assert!(e.contains("--cfgs") && e.contains("abc"), "{e}");
+        assert!(a.parse_f64("cfgs", 1.0).is_err());
+        // The lenient variant keeps its documented fallback behavior.
+        assert_eq!(a.usize_or("cfgs", 240), 240);
+    }
+
+    #[test]
+    fn parse_f64_accepts_scientific_notation() {
+        let a = parse("fit --ridge 1e-6 --bad 1..2");
+        assert!((a.parse_f64("ridge", 0.0).unwrap() - 1e-6).abs() < 1e-18);
+        assert!((a.parse_f64("absent", 2.5).unwrap() - 2.5).abs() < 1e-12);
+        assert!(a.parse_f64("bad", 0.0).unwrap_err().contains("--bad"));
     }
 
     #[test]

@@ -89,7 +89,7 @@ fn full_pipeline_reproduces_headline_claims() {
 
     // --- Co-exploration (Fig 12 signal).
     let co = coexplore::explore(&models, &space, Dataset::Cifar10, 50, 2, 7, 4);
-    let co_norm = coexplore::normalize(&co);
+    let co_norm = coexplore::normalize(&co).unwrap();
     let front = coexplore::pareto(&co_norm, false);
     assert!(!front.is_empty());
 
