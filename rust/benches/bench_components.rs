@@ -73,7 +73,8 @@ fn main() {
     });
     let lat_model = PolyModel::fit(&data.lat_x, &data.lat_y, FitOptions {
         max_degree: 5, max_vars: 2, ridge: 1e-8, log_target: true, log_features: true,
-    });
+    })
+    .expect("latency fit");
     let feats = latency_features(&cfg, layer);
     b.run("regression/predict_latency_deg5", || lat_model.predict(&feats));
 
@@ -82,7 +83,7 @@ fn main() {
     for pe in PeType::ALL {
         char_map.insert(pe, characterize(&space, pe, &uniq, 30, &tech, 2));
     }
-    let models = PpaModels::fit(&char_map, 2);
+    let models = PpaModels::fit(&char_map, 2).expect("model fit");
     b.run("dse/evaluate_config_resnet20", || {
         dse::evaluate(&models, &cfg, &net.layers)
     });
@@ -114,7 +115,7 @@ fn main() {
     // -> 181 term-count analysis describes (evaluation cost is a function
     // of the basis, not of fit quality, so the thin characterization set
     // is fine here).
-    let models5 = PpaModels::fit(&char_map, 5);
+    let models5 = PpaModels::fit(&char_map, 5).expect("model fit");
     let compiled = CompiledNetModel::compile(&models5, &net.layers)
         .expect("resnet20 compiles against the fitted latency layout");
     let mut crng = Rng::new(0xC0DE);

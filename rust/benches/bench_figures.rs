@@ -22,7 +22,7 @@ fn main() {
     // One shared pre-characterization (the paper's one-off cost).
     let layers = unique_layers(&paper_workloads());
     let data = coord.characterize_all(&layers, 60, 42);
-    let models = PpaModels::fit(&data, 5);
+    let models = PpaModels::fit(&data, 5).expect("model fit");
 
     group("figure regeneration (end-to-end harness per paper artifact)");
     b.run("fig4/dse_scatter", || figures::fig4(&coord, &models, &out, 400));

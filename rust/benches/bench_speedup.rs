@@ -25,7 +25,7 @@ fn main() {
     // Fit once (not timed — this is the paper's one-off pre-characterization).
     let layers = unique_layers(&paper_workloads());
     let data = coord.characterize_all(&layers, 60, 42);
-    let models = PpaModels::fit(&data, 5);
+    let models = PpaModels::fit(&data, 5).expect("model fit");
 
     let mut rng = Rng::new(0xBE);
     let cfgs: Vec<_> = (0..64).map(|_| space.sample(&mut rng)).collect();

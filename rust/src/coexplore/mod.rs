@@ -52,6 +52,29 @@ pub fn explore(
     seed: u64,
     threads: usize,
 ) -> Vec<CoPoint> {
+    explore_ctl(
+        models, space, dataset, n_archs, hw_per_arch, seed, threads,
+        &sweep::SweepCtl::new(),
+    )
+}
+
+/// [`explore`] with cooperative cancellation + progress (the job
+/// manager's entry point). The progress counter covers both phases —
+/// `n_archs` architecture preparations, then `n_archs * hw_per_arch`
+/// scored pairs — and a cancelled run returns the contiguous prefix of
+/// pairs scored before the flag flipped (empty if cancellation landed in
+/// the preparation phase).
+#[allow(clippy::too_many_arguments)]
+pub fn explore_ctl(
+    models: &PpaModels,
+    space: &SweepSpace,
+    dataset: Dataset,
+    n_archs: usize,
+    hw_per_arch: usize,
+    seed: u64,
+    threads: usize,
+    ctl: &sweep::SweepCtl,
+) -> Vec<CoPoint> {
     let mut rng = Rng::new(seed);
     // Pre-sample the work list (deterministic per seed), then score on
     // the shared queue. Items reference their architecture by index so
@@ -74,7 +97,7 @@ pub fn explore(
     // Compilation itself fans out on the scheduler.
     let compile_worthwhile = hw_per_arch >= 8 * space.pe_types.len().max(1);
     let prepared: Vec<(Vec<crate::models::ConvLayer>, Option<crate::ppa::CompiledNetModel>)> =
-        sweep::collect_indexed(archs.len(), threads, |a| {
+        sweep::collect_indexed_ctl(archs.len(), threads, ctl, |a| {
             let layers = archs[a].to_model(dataset).layers;
             let compiled = if compile_worthwhile {
                 crate::ppa::CompiledNetModel::compile_for(
@@ -84,7 +107,12 @@ pub fn explore(
             };
             (layers, compiled)
         });
-    sweep::collect_indexed(work.len(), threads, |i| {
+    if prepared.len() < archs.len() {
+        // Cancelled during preparation: scoring would index past the
+        // prepared prefix, so there are no scored pairs to return.
+        return Vec::new();
+    }
+    sweep::collect_indexed_ctl(work.len(), threads, ctl, |i| {
         let (a, cfg) = &work[i];
         let (layers, compiled) = &prepared[*a];
         let pt = match compiled {
@@ -160,7 +188,7 @@ mod tests {
         for pe in PeType::ALL {
             m.insert(pe, characterize(&space, pe, &layers, 40, &tech, 5));
         }
-        PpaModels::fit(&m, 2)
+        PpaModels::fit(&m, 2).unwrap()
     }
 
     #[test]
@@ -238,6 +266,31 @@ mod tests {
                 (p.area_um2 - g.area_um2).abs() <= 1e-12 * g.area_um2.abs(),
                 "area {} vs {}", p.area_um2, g.area_um2
             );
+        }
+    }
+
+    #[test]
+    fn cancelled_explore_returns_no_partial_garbage() {
+        // Pre-cancelled: cancellation lands in the preparation phase, so
+        // no (arch, config) pair may be scored against a missing arch.
+        let m = models();
+        let ctl = crate::sweep::SweepCtl::new();
+        ctl.cancel();
+        let pts = explore_ctl(
+            &m, &SweepSpace::default(), Dataset::Cifar10, 10, 2, 9, 2, &ctl,
+        );
+        assert!(pts.is_empty());
+        // An un-cancelled ctl run matches the plain entry point.
+        let ctl = crate::sweep::SweepCtl::new();
+        let a = explore_ctl(
+            &m, &SweepSpace::default(), Dataset::Cifar10, 8, 2, 21, 2, &ctl,
+        );
+        let b = explore(&m, &SweepSpace::default(), Dataset::Cifar10, 8, 2, 21, 2);
+        assert_eq!(a.len(), b.len());
+        // Progress covered both phases: 8 archs prepared + 16 pairs scored.
+        assert_eq!(ctl.done(), 8 + 16);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.energy_j, y.energy_j);
         }
     }
 

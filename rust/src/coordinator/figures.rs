@@ -117,7 +117,11 @@ pub fn fig5(coord: &Coordinator, out: &Path, n_cfgs: usize) -> String {
     let d = characterize(&coord.space, PeType::Int16, &layers, n_cfgs,
                          &coord.tech, 0xF15);
     let base = FitOptions { max_degree: 0, max_vars: 3, ridge: 1e-8, log_target: false, log_features: false };
-    let (scores, best) = select_degree(&d.power_x, &d.power_y, base, 8, 5, 0xF15);
+    let (scores, best) =
+        match select_degree(&d.power_x, &d.power_y, base, 8, 5, 0xF15) {
+            Ok(v) => v,
+            Err(e) => return format!("Fig 5: degree selection failed: {e}\n"),
+        };
     let mut rows = Vec::new();
     let mut table = Vec::new();
     for s in &scores {
@@ -520,7 +524,7 @@ mod tests {
         // extrapolate poorly outside the training hull.
         let layers = super::super::unique_layers(&super::super::paper_workloads());
         let data = coord.characterize_all(&layers, 24, 2);
-        let models = PpaModels::fit(&data, 2);
+        let models = PpaModels::fit(&data, 2).unwrap();
         let dir = std::env::temp_dir().join(format!(
             "quidam_figs_{}", std::process::id()));
         std::fs::create_dir_all(&dir).unwrap();

@@ -114,7 +114,7 @@ impl Coordinator {
         }
         let layers = unique_layers(&paper_workloads());
         let data = self.characterize_all(&layers, n_cfgs, seed);
-        let models = PpaModels::fit(&data, degree);
+        let models = PpaModels::fit(&data, degree)?;
         if let Some(dir) = cache.parent() {
             let _ = std::fs::create_dir_all(dir);
         }

@@ -14,7 +14,8 @@ use crate::models::ConvLayer;
 use crate::pe::PeType;
 use crate::ppa::{CompiledNetModel, PpaModels};
 use crate::sweep::reducers::{ParetoFront2D, TopK, YSense};
-use crate::sweep::{self, Reducer};
+use crate::sweep::{self, Reducer, SweepCtl};
+use crate::util::json::Json;
 use crate::util::stats::{FiveNum, StreamingFiveNum};
 
 /// One evaluated design point on a fixed workload.
@@ -27,6 +28,32 @@ pub struct DesignPoint {
     pub energy_j: f64,
     /// 1/latency/area — the paper's performance-per-area metric.
     pub perf_per_area: f64,
+}
+
+impl DesignPoint {
+    /// Flat JSON view — config fields inline beside the metrics, matching
+    /// the `quidam explore --format jsonl` row schema. Non-finite metrics
+    /// serialize as `null` (JSON has no NaN/inf literals), so every
+    /// emitted record stays parseable. Shared by the CLI's JSONL streaming
+    /// and the serving layer's /v1/ppa + /v1/sweep responses.
+    pub fn to_json(&self) -> Json {
+        let c = &self.cfg;
+        Json::obj(vec![
+            ("pe_type", Json::Str(c.pe_type.name().into())),
+            ("rows", Json::Num(c.rows as f64)),
+            ("cols", Json::Num(c.cols as f64)),
+            ("sp_if", Json::Num(c.sp_if as f64)),
+            ("sp_fw", Json::Num(c.sp_fw as f64)),
+            ("sp_ps", Json::Num(c.sp_ps as f64)),
+            ("gb_kib", Json::Num(c.gb_kib as f64)),
+            ("dram_bw", Json::Num(c.dram_bw as f64)),
+            ("latency_s", Json::num_or_null(self.latency_s)),
+            ("power_mw", Json::num_or_null(self.power_mw)),
+            ("area_um2", Json::num_or_null(self.area_um2)),
+            ("energy_j", Json::num_or_null(self.energy_j)),
+            ("perf_per_area", Json::num_or_null(self.perf_per_area)),
+        ])
+    }
 }
 
 /// Assemble a design point from the three predicted metrics.
@@ -289,21 +316,79 @@ where
     F: Fn(&DesignPoint) -> Option<String> + Sync,
     W: FnMut(String),
 {
+    stream_space_ctl(
+        models, space, layers, threads, objective, top_k, row, sink,
+        &SweepCtl::new(),
+    )
+}
+
+/// [`stream_space`] with cooperative cancellation + progress. A cancelled
+/// run merges whatever every worker had folded — a consistent partial
+/// summary of exactly `ctl.done()` grid points (blocks fold completely or
+/// not at all), which is how the job manager serves a partial Pareto
+/// front for a cancelled job.
+#[allow(clippy::too_many_arguments)]
+pub fn stream_space_ctl<F, W>(
+    models: &PpaModels,
+    space: &SweepSpace,
+    layers: &[ConvLayer],
+    threads: usize,
+    objective: Objective,
+    top_k: usize,
+    row: F,
+    sink: W,
+    ctl: &SweepCtl,
+) -> SweepSummary
+where
+    F: Fn(&DesignPoint) -> Option<String> + Sync,
+    W: FnMut(String),
+{
     let compiled = try_compile(models, layers);
-    sweep::map_reduce_stream(
+    stream_space_eval(
+        space,
+        threads,
+        objective,
+        top_k,
+        |cfg| match &compiled {
+            Some(c) => evaluate_compiled(c, cfg),
+            None => evaluate(models, cfg, layers),
+        },
+        row,
+        sink,
+        ctl,
+    )
+}
+
+/// [`stream_space_ctl`] with a caller-supplied per-config evaluator — the
+/// serving layer evaluates through *cached* workload-compiled models, so
+/// the engine must not insist on compiling its own copy per request.
+#[allow(clippy::too_many_arguments)]
+pub fn stream_space_eval<E, F, W>(
+    space: &SweepSpace,
+    threads: usize,
+    objective: Objective,
+    top_k: usize,
+    eval: E,
+    row: F,
+    sink: W,
+    ctl: &SweepCtl,
+) -> SweepSummary
+where
+    E: Fn(&AcceleratorConfig) -> DesignPoint + Sync,
+    F: Fn(&DesignPoint) -> Option<String> + Sync,
+    W: FnMut(String),
+{
+    sweep::map_reduce_stream_ctl(
         space.len(),
         threads,
         || SweepSummary::new(objective, top_k),
         |i, summary| {
-            let cfg = space.point(i);
-            let p = match &compiled {
-                Some(c) => evaluate_compiled(c, &cfg),
-                None => evaluate(models, &cfg, layers),
-            };
+            let p = eval(&space.point(i));
             summary.observe(&p);
             row(&p)
         },
         sink,
+        ctl,
     )
 }
 
@@ -451,7 +536,7 @@ mod tests {
         for pe in PeType::ALL {
             m.insert(pe, characterize(&space, pe, &layers, 40, &tech, 3));
         }
-        PpaModels::fit(&m, 2)
+        PpaModels::fit(&m, 2).unwrap()
     }
 
     fn small_space() -> SweepSpace {
@@ -580,6 +665,62 @@ mod tests {
         for (_, p) in best {
             assert!(p.perf_per_area.is_finite());
         }
+    }
+
+    #[test]
+    fn cancelled_stream_space_stops_quickly_with_consistent_reducers() {
+        let m = models();
+        let layers = &zoo::resnet_cifar(20, Dataset::Cifar10).layers;
+        let space = SweepSpace::default();
+        let n = space.len();
+        let ctl = SweepCtl::new();
+        // Cancel from the row callback after the very first evaluated
+        // point; workers stop at their next block boundary.
+        let summary = stream_space_ctl(
+            &m,
+            &space,
+            layers,
+            4,
+            Objective::PerfPerArea,
+            3,
+            |_p| {
+                ctl.cancel();
+                None
+            },
+            |_row| {},
+            &ctl,
+        );
+        assert!(summary.count > 0);
+        assert!(
+            summary.count < n,
+            "cancel ignored: all {n} points evaluated"
+        );
+        // Reducers are consistent with the progress counter: exactly the
+        // points the counter reports were folded, and the per-PE streams
+        // partition them.
+        assert_eq!(summary.count, ctl.done());
+        let stats_total: usize =
+            summary.obj_stats.values().map(|s| s.count).sum();
+        assert_eq!(stats_total, summary.count);
+        assert!(summary.front.len() <= summary.count);
+        assert!(!summary.front.is_empty());
+    }
+
+    #[test]
+    fn design_point_json_is_parseable_and_null_guards_nan() {
+        let m = models();
+        let layers = &zoo::resnet_cifar(20, Dataset::Cifar10).layers;
+        let cfg = crate::config::AcceleratorConfig::baseline(PeType::Int16);
+        let mut p = evaluate(&m, &cfg, layers);
+        let j = crate::util::json::Json::parse(&p.to_json().to_string())
+            .unwrap();
+        assert_eq!(j.get("pe_type").as_str(), Some("int16"));
+        assert_eq!(j.get("rows").as_usize(), Some(12));
+        assert_eq!(j.get("energy_j").as_f64(), Some(p.energy_j));
+        p.perf_per_area = f64::NAN;
+        let j = crate::util::json::Json::parse(&p.to_json().to_string())
+            .unwrap();
+        assert_eq!(j.get("perf_per_area"), &crate::util::json::Json::Null);
     }
 
     #[test]

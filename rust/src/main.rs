@@ -9,6 +9,9 @@
 //!                       [--objective ppa|energy|latency|power]
 //!                       [--points-out FILE] [--format csv|jsonl] (streaming
 //!                       work-stealing sweep; full flag list in README.md)
+//!   quidam serve        [--addr HOST:PORT] [--http-threads N] [--threads N]
+//!                       [--cache-mib M] [--port-file FILE] (persistent PPA
+//!                       query + exploration service; DESIGN.md §6)
 //!   quidam figures      [--out DIR] [--samples N] (all figures + tables)
 //!   quidam fig4|fig5|fig678|fig9|fig10|fig12|table3|table4|speedup
 //!   quidam coexplore    [--archs N] [--pe LIST] (errors without int16)
@@ -129,26 +132,15 @@ fn run_explore(coord: &Coordinator, args: &Args, out: &std::path::Path) -> anyho
             None => None,
         };
     let emit = writer.is_some();
-    // JSON has no NaN/inf literals — emit null so every line stays
-    // parseable even when a metric degenerates.
-    let jnum = |v: f64| -> String {
-        if v.is_finite() { format!("{v:e}") } else { "null".into() }
-    };
     let row = |p: &dse::DesignPoint| -> Option<String> {
         if !emit {
             return None;
         }
         let c = &p.cfg;
         Some(if jsonl {
-            format!(
-                "{{\"pe_type\":\"{}\",\"rows\":{},\"cols\":{},\"sp_if\":{},\
-                 \"sp_fw\":{},\"sp_ps\":{},\"gb_kib\":{},\"dram_bw\":{},\
-                 \"latency_s\":{},\"power_mw\":{},\"area_um2\":{},\
-                 \"energy_j\":{},\"perf_per_area\":{}}}",
-                c.pe_type.name(), c.rows, c.cols, c.sp_if, c.sp_fw, c.sp_ps,
-                c.gb_kib, c.dram_bw, jnum(p.latency_s), jnum(p.power_mw),
-                jnum(p.area_um2), jnum(p.energy_j), jnum(p.perf_per_area),
-            )
+            // DesignPoint::to_json emits null for non-finite metrics, so
+            // every line stays parseable even when a metric degenerates.
+            p.to_json().to_string()
         } else {
             format!(
                 "{},{},{},{},{},{},{},{},{:e},{:e},{:e},{:e},{:e}",
@@ -338,6 +330,41 @@ fn run(sub: &str, args: &Args) -> anyhow::Result<()> {
             ));
         }
         "explore" => run_explore(&coord, args, &out)?,
+        "serve" => {
+            let addr = args.get_or("addr", "127.0.0.1:8787");
+            let http_threads = args
+                .parse_pos_usize("http-threads", 8)
+                .map_err(anyhow::Error::msg)?;
+            let sweep_threads = args
+                .parse_pos_usize("threads", coord.threads)
+                .map_err(anyhow::Error::msg)?;
+            let cache_mib = args
+                .parse_pos_usize("cache-mib", 64)
+                .map_err(anyhow::Error::msg)?;
+            // Models load/fit once, before the socket opens: a request
+            // must never pay characterization.
+            let models = models_for(&coord, args)?;
+            let opts = quidam::server::ServeOptions {
+                addr,
+                http_threads,
+                sweep_threads,
+                cache_mib,
+                ..Default::default()
+            };
+            let server = quidam::server::Server::bind(models, opts)
+                .map_err(anyhow::Error::msg)?;
+            let bound = server.local_addr();
+            println!(
+                "quidam serve listening on http://{bound} \
+                 ({http_threads} http workers, {sweep_threads} sweep \
+                 threads, {cache_mib} MiB cache)"
+            );
+            // CI / scripts bind port 0 and read the resolved port here.
+            if let Some(path) = args.get("port-file") {
+                std::fs::write(path, bound.port().to_string())?;
+            }
+            server.run();
+        }
         "figures" => {
             let m = models_for(&coord, args)?;
             print!("{}", figures::fig4(&coord, &m, &out, samples));
@@ -418,13 +445,15 @@ fn run(sub: &str, args: &Args) -> anyhow::Result<()> {
         _ => {
             println!(
                 "QUIDAM — quantization-aware DNN accelerator + model co-exploration\n\
-                 usage: quidam <characterize|evaluate|explore|figures|fig4|fig5|fig678|fig9|\n\
+                 usage: quidam <characterize|evaluate|explore|serve|figures|fig4|fig5|fig678|fig9|\n\
                  fig10|fig12|table3|table4|speedup|coexplore|rtl|train|eval-trained>\n\
                  common flags: --models PATH --cfgs N --degree D --samples N --out DIR\n\
                  explore flags: --dense --threads N --top-k K --objective ppa|energy|latency|power\n\
                  \x20               --net resnet20|resnet56|vgg16 --points-out FILE --format csv|jsonl\n\
                  \x20               --rows/--cols/--sp-if/--sp-fw/--sp-ps/--gb/--dram-bw LIST|LO:HI:STEP\n\
                  \x20               --pe fp32,int16,lightpe2,lightpe1\n\
+                 serve flags:   --addr HOST:PORT --http-threads N --threads N --cache-mib M\n\
+                 \x20               --port-file FILE (endpoint table: DESIGN.md §6)\n\
                  full CLI reference: README.md; design notes: DESIGN.md"
             );
         }

@@ -194,6 +194,28 @@ impl CompiledNetModel {
         })
     }
 
+    /// Rough heap footprint in bytes — the weight the serving layer's
+    /// byte-budgeted LRU charges a cached compiled model. Counts the
+    /// dominant arrays (coefficient vectors, basis terms); constant
+    /// per-struct overhead is ignored.
+    pub fn approx_bytes(&self) -> usize {
+        let model_bytes = |m: &crate::regression::PolyModel| {
+            (m.coef.len() + m.basis.scale.len()) * 8
+                + m.basis.terms.iter().map(|t| t.0.len() * 16).sum::<usize>()
+        };
+        self.per_pe
+            .values()
+            .map(|pe| {
+                model_bytes(&pe.power)
+                    + model_bytes(&pe.area)
+                    + pe.lat_layers
+                        .iter()
+                        .map(|(coef, _)| coef.len() * 8 + 8)
+                        .sum::<usize>()
+                    + pe.lat_flat.approx_bytes()
+            })
+            .sum()
+    }
 }
 
 #[cfg(test)]
@@ -214,7 +236,7 @@ mod tests {
         for pe in PeType::ALL {
             m.insert(pe, characterize(&space, pe, &layers, 40, &tech, 17));
         }
-        PpaModels::fit(&m, 2)
+        PpaModels::fit(&m, 2).unwrap()
     }
 
     fn assert_rel_close(a: f64, b: f64, what: &str) -> Result<(), String> {

@@ -180,17 +180,30 @@ pub fn default_fit_options(degree: u32) -> (FitOptions, FitOptions) {
 }
 
 impl PpaModels {
-    pub fn fit(char_data: &BTreeMap<PeType, CharData>, degree: u32) -> PpaModels {
+    /// Fit the per-PE model set. Errors (instead of the old panic deep in
+    /// `PolyModel::fit`) when any characterization sample is degenerate,
+    /// naming the PE type and metric — surfaced unchanged through
+    /// `Coordinator::load_or_build_models` so a long-lived `quidam serve`
+    /// process reports the bad sample rather than aborting.
+    pub fn fit(
+        char_data: &BTreeMap<PeType, CharData>,
+        degree: u32,
+    ) -> Result<PpaModels, String> {
         let (ppa_opt, lat_opt) = default_fit_options(degree);
         let mut per_pe = BTreeMap::new();
         for (&pe, d) in char_data {
             per_pe.insert(pe, PeModels {
-                power: PolyModel::fit(&d.power_x, &d.power_y, ppa_opt),
-                area: PolyModel::fit(&d.area_x, &d.area_y, ppa_opt),
-                latency: PolyModel::fit(&d.lat_x, &d.lat_y, lat_opt),
+                power: PolyModel::fit(&d.power_x, &d.power_y, ppa_opt)
+                    .map_err(|e| format!("fitting {pe} power model: {e}"))?,
+                area: PolyModel::fit(&d.area_x, &d.area_y, ppa_opt)
+                    .map_err(|e| format!("fitting {pe} area model: {e}"))?,
+                latency: PolyModel::fit(&d.lat_x, &d.lat_y, lat_opt)
+                    .map_err(|e| {
+                        format!("fitting {pe} latency model: {e}")
+                    })?,
             });
         }
-        PpaModels { per_pe, degree }
+        Ok(PpaModels { per_pe, degree })
     }
 
     pub fn models(&self, pe: PeType) -> &PeModels {
@@ -459,7 +472,7 @@ mod tests {
     #[test]
     fn fitted_models_track_ground_truth() {
         let char_data = quick_char();
-        let models = PpaModels::fit(&char_data, 2);
+        let models = PpaModels::fit(&char_data, 2).unwrap();
         for (&pe, d) in &char_data {
             let m = models.models(pe);
             let pred: Vec<f64> =
@@ -475,7 +488,7 @@ mod tests {
 
     #[test]
     fn predictions_positive_and_ordered_by_pe() {
-        let models = PpaModels::fit(&quick_char(), 2);
+        let models = PpaModels::fit(&quick_char(), 2).unwrap();
         let layers = &zoo::resnet_cifar(20, Dataset::Cifar10).layers;
         let mut last_area = f64::INFINITY;
         for pe in PeType::ALL {
@@ -491,7 +504,7 @@ mod tests {
 
     #[test]
     fn json_roundtrip_preserves_predictions() {
-        let models = PpaModels::fit(&quick_char(), 2);
+        let models = PpaModels::fit(&quick_char(), 2).unwrap();
         let j = models.to_json();
         let back = PpaModels::from_json(&Json::parse(&j.to_string()).unwrap())
             .unwrap();
@@ -557,8 +570,19 @@ mod tests {
     }
 
     #[test]
+    fn fit_surfaces_degenerate_characterization_as_error() {
+        // Regression: an empty characterization sample used to abort via
+        // `.expect("normal equations not PD despite ridge")` deep in the
+        // regression layer; the error now names the PE type and metric.
+        let mut m = BTreeMap::new();
+        m.insert(PeType::Int16, CharData::default());
+        let e = PpaModels::fit(&m, 2).unwrap_err();
+        assert!(e.contains("int16") && e.contains("power"), "{e}");
+    }
+
+    #[test]
     fn network_latency_sums_layers() {
-        let models = PpaModels::fit(&quick_char(), 2);
+        let models = PpaModels::fit(&quick_char(), 2).unwrap();
         let cfg = AcceleratorConfig::baseline(PeType::Int16);
         let layers = &zoo::resnet_cifar(20, Dataset::Cifar10).layers[..5];
         let total = models.network_latency_s(&cfg, layers);

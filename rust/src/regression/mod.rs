@@ -72,10 +72,27 @@ impl Default for FitOptions {
 }
 
 impl PolyModel {
-    /// Fit on rows `xs` with targets `ys`.
-    pub fn fit(xs: &[Vec<f64>], ys: &[f64], opt: FitOptions) -> PolyModel {
-        assert_eq!(xs.len(), ys.len());
-        assert!(!xs.is_empty(), "empty training set");
+    /// Fit on rows `xs` with targets `ys`. Errors (instead of the old
+    /// panic) on a degenerate sample — empty, mismatched, or one whose
+    /// normal equations stay non-positive-definite despite the ridge —
+    /// so a bad characterization run surfaces cleanly through
+    /// `ppa::PpaModels::fit` / `load_or_build_models` rather than
+    /// aborting a long-lived server.
+    pub fn fit(
+        xs: &[Vec<f64>],
+        ys: &[f64],
+        opt: FitOptions,
+    ) -> Result<PolyModel, String> {
+        if xs.len() != ys.len() {
+            return Err(format!(
+                "{} feature rows vs {} targets",
+                xs.len(),
+                ys.len()
+            ));
+        }
+        if xs.is_empty() {
+            return Err("empty training set".into());
+        }
         let dim = xs[0].len();
         let txs: Vec<Vec<f64>>;
         let xs_ref: &[Vec<f64>] = if opt.log_features {
@@ -98,15 +115,23 @@ impl PolyModel {
         let trace: f64 = (0..gram.rows).map(|i| gram.at(i, i)).sum();
         let lambda = opt.ridge * trace / gram.rows as f64;
         let coef = cholesky_solve(&gram, &design.xty(&t), lambda.max(1e-12))
-            .expect("normal equations not PD despite ridge");
+            .ok_or_else(|| {
+                format!(
+                    "normal equations not positive-definite despite ridge \
+                     {lambda:.3e} ({} samples, {} basis terms) — the \
+                     characterization sample is degenerate",
+                    xs.len(),
+                    basis.terms.len()
+                )
+            })?;
         let flat = FlatBasis::compile(&basis);
-        PolyModel {
+        Ok(PolyModel {
             basis,
             coef,
             log_target: opt.log_target,
             log_features: opt.log_features,
             flat,
-        }
+        })
     }
 
     /// Rebuild the flat compilation (after deserialization).
@@ -146,13 +171,14 @@ pub struct CvScore {
 }
 
 /// k-fold cross validation (paper [35]): returns mean held-out MAPE/RMSPE.
+/// Propagates a degenerate-fold fit failure (see [`PolyModel::fit`]).
 pub fn kfold_cv(
     xs: &[Vec<f64>],
     ys: &[f64],
     opt: FitOptions,
     k: usize,
     seed: u64,
-) -> CvScore {
+) -> Result<CvScore, String> {
     assert!(k >= 2 && xs.len() >= k, "need at least k={k} samples");
     let mut idx: Vec<usize> = (0..xs.len()).collect();
     Rng::new(seed).shuffle(&mut idx);
@@ -168,18 +194,19 @@ pub fn kfold_cv(
             .collect();
         let tx: Vec<Vec<f64>> = train.iter().map(|&i| xs[i].clone()).collect();
         let ty: Vec<f64> = train.iter().map(|&i| ys[i]).collect();
-        let model = PolyModel::fit(&tx, &ty, opt);
+        let model = PolyModel::fit(&tx, &ty, opt)
+            .map_err(|e| format!("fold {fold}: {e}"))?;
         let actual: Vec<f64> = test.iter().map(|&i| ys[i]).collect();
         let pred: Vec<f64> =
             test.iter().map(|&i| model.predict(&xs[i])).collect();
         mapes.push(mape(&actual, &pred));
         rmspes.push(rmspe(&actual, &pred));
     }
-    CvScore {
+    Ok(CvScore {
         degree: opt.max_degree,
         mape: mapes.iter().sum::<f64>() / k as f64,
         rmspe: rmspes.iter().sum::<f64>() / k as f64,
-    }
+    })
 }
 
 /// Sweep polynomial degree 1..=max and return CV scores (Fig 5) plus the
@@ -192,22 +219,21 @@ pub fn select_degree(
     max_degree: u32,
     k: usize,
     seed: u64,
-) -> (Vec<CvScore>, u32) {
+) -> Result<(Vec<CvScore>, u32), String> {
     let mut scores = Vec::new();
     for d in 1..=max_degree {
         let opt = FitOptions { max_degree: d, ..base };
-        scores.push(kfold_cv(xs, ys, opt, k, seed));
+        scores.push(kfold_cv(xs, ys, opt, k, seed)?);
     }
     let best = scores
         .iter()
         .min_by(|a, b| {
             (a.mape + a.rmspe)
-                .partial_cmp(&(b.mape + b.rmspe))
-                .unwrap()
+                .total_cmp(&(b.mape + b.rmspe))
         })
         .map(|s| s.degree)
         .unwrap_or(1);
-    (scores, best)
+    Ok((scores, best))
 }
 
 #[cfg(test)]
@@ -239,7 +265,8 @@ mod tests {
             ridge: 1e-10,
             log_target: false,
             log_features: false,
-        });
+        })
+        .unwrap();
         for (x, y) in xs.iter().zip(&ys).take(50) {
             assert!((model.predict(x) - y).abs() < 1e-4 * y.abs().max(1.0));
         }
@@ -258,7 +285,8 @@ mod tests {
             ridge: 1e-10,
             log_target: true,
             log_features: false,
-        });
+        })
+        .unwrap();
         let preds = model.predict_all(&xs);
         assert!(mape(&ys, &preds) < 1.0, "mape {}", mape(&ys, &preds));
     }
@@ -267,8 +295,10 @@ mod tests {
     fn underfit_has_higher_cv_error_than_right_degree() {
         let (xs, ys) = cubic_data(400, 0.5, 3);
         let base = FitOptions { max_vars: 2, log_target: false, ridge: 1e-8, max_degree: 0, log_features: false };
-        let s1 = kfold_cv(&xs, &ys, FitOptions { max_degree: 1, ..base }, 5, 7);
-        let s3 = kfold_cv(&xs, &ys, FitOptions { max_degree: 3, ..base }, 5, 7);
+        let s1 = kfold_cv(&xs, &ys, FitOptions { max_degree: 1, ..base }, 5, 7)
+            .unwrap();
+        let s3 = kfold_cv(&xs, &ys, FitOptions { max_degree: 3, ..base }, 5, 7)
+            .unwrap();
         assert!(s3.mape < s1.mape, "deg3 {} !< deg1 {}", s3.mape, s1.mape);
     }
 
@@ -276,7 +306,7 @@ mod tests {
     fn select_degree_finds_generating_degree() {
         let (xs, ys) = cubic_data(400, 0.5, 4);
         let base = FitOptions { max_vars: 2, log_target: false, ridge: 1e-8, max_degree: 0, log_features: false };
-        let (scores, best) = select_degree(&xs, &ys, base, 6, 5, 11);
+        let (scores, best) = select_degree(&xs, &ys, base, 6, 5, 11).unwrap();
         assert_eq!(scores.len(), 6);
         assert!((3..=5).contains(&best), "picked degree {best}");
     }
@@ -298,7 +328,8 @@ mod tests {
             ridge: 1e-8,
             log_target: true,
             log_features: true,
-        });
+        })
+        .unwrap();
         for x in xs.iter().take(25) {
             let s = m.specialize(&[(3, x[3]), (4, x[4])]).unwrap();
             let full = m.predict(x);
@@ -313,11 +344,22 @@ mod tests {
     }
 
     #[test]
+    fn fit_errors_on_degenerate_sample_instead_of_panicking() {
+        // Regression: an empty or mismatched characterization sample used
+        // to abort via assert!/expect; a serving process must see Err.
+        let opt = FitOptions::default();
+        assert!(PolyModel::fit(&[], &[], opt).is_err());
+        let e = PolyModel::fit(&[vec![1.0, 2.0]], &[1.0, 2.0], opt)
+            .unwrap_err();
+        assert!(e.contains("1 feature rows"), "{e}");
+    }
+
+    #[test]
     fn cv_deterministic_per_seed() {
         let (xs, ys) = cubic_data(120, 0.3, 5);
         let opt = FitOptions { max_degree: 2, max_vars: 2, ridge: 1e-8, log_target: false, log_features: false };
-        let a = kfold_cv(&xs, &ys, opt, 4, 42);
-        let b = kfold_cv(&xs, &ys, opt, 4, 42);
+        let a = kfold_cv(&xs, &ys, opt, 4, 42).unwrap();
+        let b = kfold_cv(&xs, &ys, opt, 4, 42).unwrap();
         assert_eq!(a.mape, b.mape);
         assert_eq!(a.rmspe, b.rmspe);
     }

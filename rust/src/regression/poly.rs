@@ -76,6 +76,11 @@ impl FlatBasis {
         self.offsets.len() - 1
     }
 
+    /// Rough heap footprint in bytes (serving-layer cache accounting).
+    pub fn approx_bytes(&self) -> usize {
+        self.scale.len() * 8 + self.offsets.len() * 4 + self.factors.len() * 2
+    }
+
     /// Fill the per-feature power table for `x` (scaled, exponents
     /// 0..=max_degree), resizing `powers` as needed. Split out of [`dot`]
     /// so callers evaluating many coefficient vectors against the same

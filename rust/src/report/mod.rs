@@ -6,7 +6,33 @@ use std::fmt::Write as _;
 use std::io::Write as _;
 use std::path::Path;
 
-/// Write rows as CSV with a header.
+/// RFC-4180 cell escaping: a cell containing a comma, double quote, CR or
+/// LF is wrapped in quotes with embedded quotes doubled; everything else
+/// passes through untouched (so plain numeric output stays byte-stable).
+/// Config dump columns join PE lists with commas, which the old bare
+/// `join(",")` emitted as extra columns.
+pub fn csv_escape(cell: &str) -> String {
+    if cell.contains(['"', ',', '\n', '\r']) {
+        let mut out = String::with_capacity(cell.len() + 2);
+        out.push('"');
+        for c in cell.chars() {
+            if c == '"' {
+                out.push('"');
+            }
+            out.push(c);
+        }
+        out.push('"');
+        out
+    } else {
+        cell.to_string()
+    }
+}
+
+fn csv_line(cells: impl Iterator<Item = String>) -> String {
+    cells.collect::<Vec<_>>().join(",")
+}
+
+/// Write rows as CSV with a header (RFC-4180 quoting per cell).
 pub fn write_csv(
     path: &Path,
     header: &[&str],
@@ -16,11 +42,21 @@ pub fn write_csv(
         std::fs::create_dir_all(dir)?;
     }
     let mut f = std::fs::File::create(path)?;
-    writeln!(f, "{}", header.join(","))?;
+    writeln!(f, "{}", csv_line(header.iter().map(|h| csv_escape(h))))?;
     for r in rows {
-        writeln!(f, "{}", r.join(","))?;
+        writeln!(f, "{}", csv_line(r.iter().map(|c| csv_escape(c))))?;
     }
     Ok(())
+}
+
+/// Emit one NDJSON record: a compact single-line JSON object terminated by
+/// `\n` (the `quidam serve` /v1/sweep framing; `Json`'s `Display` escapes
+/// every control character, so a record can never span lines).
+pub fn ndjson(
+    w: &mut impl std::io::Write,
+    j: &crate::util::json::Json,
+) -> std::io::Result<()> {
+    writeln!(w, "{j}")
 }
 
 /// Fixed-width table with a title (Table 2/3 style).
@@ -207,5 +243,54 @@ mod tests {
         let text = std::fs::read_to_string(&p).unwrap();
         assert_eq!(text, "a,b\n1,2\n");
         let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn csv_escape_is_rfc_4180() {
+        // Plain cells are untouched (numeric output stays byte-stable).
+        assert_eq!(csv_escape("1.5e-3"), "1.5e-3");
+        assert_eq!(csv_escape(""), "");
+        // Commas, quotes and newlines trigger quoting; quotes double.
+        assert_eq!(csv_escape("int16,fp32"), "\"int16,fp32\"");
+        assert_eq!(csv_escape("say \"hi\""), "\"say \"\"hi\"\"\"");
+        assert_eq!(csv_escape("a\nb"), "\"a\nb\"");
+        assert_eq!(csv_escape("a\rb"), "\"a\rb\"");
+    }
+
+    #[test]
+    fn csv_cells_with_commas_stay_one_column() {
+        // Regression: config dumps join PE lists with commas; the old
+        // writer emitted them as extra columns.
+        let dir = std::env::temp_dir().join(format!(
+            "quidam_test_csv_quote_{}", std::process::id()));
+        let p = dir.join("q.csv");
+        write_csv(
+            &p,
+            &["pe_list", "note"],
+            &[vec!["int16,fp32".into(), "he said \"go\"".into()]],
+        )
+        .unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        let mut lines = text.lines();
+        assert_eq!(lines.next(), Some("pe_list,note"));
+        assert_eq!(
+            lines.next(),
+            Some("\"int16,fp32\",\"he said \"\"go\"\"\"")
+        );
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn ndjson_is_one_line_per_record() {
+        let j = crate::util::json::Json::obj(vec![
+            ("s", crate::util::json::Json::Str("a\nb".into())),
+            ("n", crate::util::json::Json::num_or_null(f64::NAN)),
+        ]);
+        let mut buf = Vec::new();
+        ndjson(&mut buf, &j).unwrap();
+        let text = String::from_utf8(buf).unwrap();
+        assert_eq!(text.matches('\n').count(), 1);
+        assert!(text.ends_with('\n'));
+        assert_eq!(text.trim_end(), r#"{"n":null,"s":"a\nb"}"#);
     }
 }

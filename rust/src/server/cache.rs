@@ -1,0 +1,289 @@
+//! Sharded, byte-budgeted LRU memo cache for the serving layer.
+//!
+//! Two instances back `quidam serve` (DESIGN.md §6): one holds
+//! workload-compiled PPA models keyed `(workload, pe_type)` — the
+//! expensive specialization a repeated query must never pay twice — and
+//! one holds small rendered responses keyed by the full request bytes.
+//! Keys are stored and compared **in full** (the shard index and map
+//! hashing are mere accelerators), so a hash collision can never answer
+//! one request with another request's cached response. Sharding bounds
+//! lock contention: concurrent requests for different keys rarely touch
+//! the same mutex. Hit/miss/eviction counters feed `GET /v1/stats` (the
+//! observable contract that repeated traffic skips recomputation).
+
+use std::collections::HashMap;
+use std::hash::{Hash, Hasher};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::util::json::Json;
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+fn fnv1a_continue(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// FNV-1a 64-bit — a tiny, stable, dependency-free hash used for shard
+/// selection (std's `DefaultHasher` is explicitly unstable across
+/// releases; shard assignment should not silently reshuffle on a
+/// toolchain bump — it would cold-start every shard's LRU order).
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    fnv1a_continue(FNV_OFFSET, bytes)
+}
+
+/// [`fnv1a`] over an arbitrary `Hash` key, as a `Hasher` — one copy of
+/// the algorithm for both entry points.
+struct Fnv1a(u64);
+
+impl Hasher for Fnv1a {
+    fn finish(&self) -> u64 {
+        self.0
+    }
+    fn write(&mut self, bytes: &[u8]) {
+        self.0 = fnv1a_continue(self.0, bytes);
+    }
+}
+
+fn shard_hash<K: Hash>(key: &K) -> u64 {
+    let mut h = Fnv1a(FNV_OFFSET);
+    key.hash(&mut h);
+    h.finish()
+}
+
+struct Entry<V> {
+    value: V,
+    weight: usize,
+    /// Last-touch tick (shard-local logical clock) — the LRU order.
+    last: u64,
+}
+
+struct Shard<K, V> {
+    map: HashMap<K, Entry<V>>,
+    bytes: usize,
+    tick: u64,
+}
+
+impl<K, V> Shard<K, V> {
+    fn new() -> Shard<K, V> {
+        Shard { map: HashMap::new(), bytes: 0, tick: 0 }
+    }
+}
+
+/// Counter snapshot for `/v1/stats`.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    pub entries: usize,
+    pub bytes: usize,
+}
+
+impl CacheStats {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("hits", Json::Num(self.hits as f64)),
+            ("misses", Json::Num(self.misses as f64)),
+            ("evictions", Json::Num(self.evictions as f64)),
+            ("entries", Json::Num(self.entries as f64)),
+            ("bytes", Json::Num(self.bytes as f64)),
+        ])
+    }
+}
+
+/// Sharded LRU with full-key equality. Values are cloned out (callers
+/// wrap heavy payloads in `Arc`). Each shard enforces its slice of the
+/// byte budget independently; eviction drops least-recently-used entries
+/// until the inserted value fits.
+pub struct ShardedLru<K, V> {
+    shards: Vec<Mutex<Shard<K, V>>>,
+    capacity_per_shard: usize,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    evictions: AtomicU64,
+}
+
+impl<K: Hash + Eq + Clone, V: Clone> ShardedLru<K, V> {
+    /// `shards` is rounded up to 1; `capacity_bytes` is the total budget
+    /// split evenly across shards.
+    pub fn new(shards: usize, capacity_bytes: usize) -> ShardedLru<K, V> {
+        let shards = shards.max(1);
+        ShardedLru {
+            capacity_per_shard: (capacity_bytes / shards).max(1),
+            shards: (0..shards).map(|_| Mutex::new(Shard::new())).collect(),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+        }
+    }
+
+    fn shard(&self, key: &K) -> &Mutex<Shard<K, V>> {
+        // High bits pick the shard so the choice stays independent of the
+        // map's own bucket indexing.
+        &self.shards[(shard_hash(key) >> 48) as usize % self.shards.len()]
+    }
+
+    /// Look up `key`, bumping its recency. Counts a hit or a miss.
+    pub fn get(&self, key: &K) -> Option<V> {
+        let mut s = self.shard(key).lock().unwrap();
+        s.tick += 1;
+        let tick = s.tick;
+        match s.map.get_mut(key) {
+            Some(e) => {
+                e.last = tick;
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(e.value.clone())
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Insert (or replace) `key`, then evict LRU entries until the shard
+    /// fits its budget again. A value heavier than a whole shard is
+    /// admitted alone — the cache must never refuse the working set's
+    /// single hottest entry just because the budget is small.
+    pub fn insert(&self, key: K, value: V, weight: usize) {
+        let mut s = self.shard(&key).lock().unwrap();
+        s.tick += 1;
+        let tick = s.tick;
+        let fresh = s.tick; // the just-inserted entry's tick, never evicted below
+        if let Some(old) =
+            s.map.insert(key, Entry { value, weight, last: tick })
+        {
+            s.bytes -= old.weight;
+        }
+        s.bytes += weight;
+        while s.bytes > self.capacity_per_shard && s.map.len() > 1 {
+            // O(n) LRU scan — shards stay small (tens of entries for
+            // compiled models; response strings are feather-weight).
+            let victim = s
+                .map
+                .iter()
+                .filter(|(_, e)| e.last != fresh)
+                .min_by_key(|(_, e)| e.last)
+                .map(|(k, _)| k.clone());
+            match victim {
+                Some(k) => {
+                    if let Some(e) = s.map.remove(&k) {
+                        s.bytes -= e.weight;
+                        self.evictions.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+                None => break,
+            }
+        }
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        let mut entries = 0;
+        let mut bytes = 0;
+        for shard in &self.shards {
+            let s = shard.lock().unwrap();
+            entries += s.map.len();
+            bytes += s.bytes;
+        }
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            entries,
+            bytes,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fnv1a_is_stable_and_spreads() {
+        // Known-answer: FNV-1a of "" is the offset basis; of "a" is fixed.
+        assert_eq!(fnv1a(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_ne!(fnv1a(b"ab"), fnv1a(b"ba"));
+    }
+
+    #[test]
+    fn get_after_insert_hits_and_counts() {
+        let c: ShardedLru<u32, u32> = ShardedLru::new(4, 1 << 20);
+        assert_eq!(c.get(&1), None);
+        c.insert(1, 10, 100);
+        assert_eq!(c.get(&1), Some(10));
+        let st = c.stats();
+        assert_eq!((st.hits, st.misses), (1, 1));
+        assert_eq!(st.entries, 1);
+        assert_eq!(st.bytes, 100);
+    }
+
+    #[test]
+    fn distinct_keys_never_alias() {
+        // Full-key equality: two different keys must never serve each
+        // other's values, whatever their hashes do.
+        let c: ShardedLru<Vec<u8>, u8> = ShardedLru::new(1, 1 << 20);
+        c.insert(b"ppa\0reqA".to_vec(), 1, 10);
+        c.insert(b"ppa\0reqB".to_vec(), 2, 10);
+        assert_eq!(c.get(&b"ppa\0reqA".to_vec()), Some(1));
+        assert_eq!(c.get(&b"ppa\0reqB".to_vec()), Some(2));
+        assert_eq!(c.get(&b"ppa\0reqC".to_vec()), None);
+    }
+
+    #[test]
+    fn lru_evicts_least_recently_used_within_budget() {
+        // Single shard so the budget math is exact.
+        let c: ShardedLru<u32, &'static str> = ShardedLru::new(1, 250);
+        c.insert(1, "a", 100);
+        c.insert(2, "b", 100);
+        assert_eq!(c.get(&1), Some("a")); // touch 1 — 2 becomes LRU
+        c.insert(3, "c", 100); // 300 > 250: evict 2
+        assert_eq!(c.get(&1), Some("a"));
+        assert_eq!(c.get(&3), Some("c"));
+        assert_eq!(c.get(&2), None);
+        assert_eq!(c.stats().evictions, 1);
+        assert!(c.stats().bytes <= 250);
+    }
+
+    #[test]
+    fn replacing_a_key_updates_weight_not_duplicates() {
+        let c: ShardedLru<u32, u8> = ShardedLru::new(1, 1000);
+        c.insert(7, 1, 400);
+        c.insert(7, 2, 100);
+        let st = c.stats();
+        assert_eq!(st.entries, 1);
+        assert_eq!(st.bytes, 100);
+        assert_eq!(c.get(&7), Some(2));
+    }
+
+    #[test]
+    fn oversized_entry_is_admitted_alone() {
+        let c: ShardedLru<u32, u8> = ShardedLru::new(1, 100);
+        c.insert(1, 1, 50);
+        c.insert(2, 2, 10_000); // heavier than the whole budget
+        assert_eq!(c.get(&2), Some(2));
+        // The light entry was sacrificed, the heavy one stays.
+        assert_eq!(c.get(&1), None);
+        assert_eq!(c.stats().entries, 1);
+    }
+
+    #[test]
+    fn shards_partition_keys() {
+        let c: ShardedLru<u64, u64> = ShardedLru::new(8, 8 << 20);
+        for k in 0..1000u64 {
+            c.insert(k, k, 10);
+        }
+        let st = c.stats();
+        assert_eq!(st.entries, 1000);
+        for k in 0..1000u64 {
+            assert_eq!(c.get(&k), Some(k));
+        }
+    }
+}

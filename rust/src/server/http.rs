@@ -1,0 +1,282 @@
+//! Minimal HTTP/1.1 over `std::net` for the serving layer — request
+//! parsing with hard limits, plain and streamed (NDJSON) responses.
+//!
+//! Deliberately small: no keep-alive (every response carries
+//! `Connection: close`, and streamed bodies are delimited by the close),
+//! no chunked request bodies, no TLS. The goal is a dependency-free
+//! surface that `curl` and any HTTP client can speak, not a general web
+//! server (DESIGN.md §6).
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+
+use crate::util::json::Json;
+
+/// Upper bound on the request head (request line + headers).
+const MAX_HEAD_BYTES: usize = 16 * 1024;
+/// Upper bound on a request body (sweep specs are small JSON).
+const MAX_BODY_BYTES: usize = 4 * 1024 * 1024;
+
+/// A parsed request: method, path (query string stripped off into
+/// `query`), and the raw body bytes.
+#[derive(Debug)]
+pub struct Request {
+    pub method: String,
+    pub path: String,
+    pub query: String,
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    /// Parse the body as JSON; `400`-shaped error string on failure.
+    pub fn json(&self) -> Result<Json, String> {
+        let text = std::str::from_utf8(&self.body)
+            .map_err(|_| "request body is not UTF-8".to_string())?;
+        if text.trim().is_empty() {
+            return Ok(Json::Obj(Default::default()));
+        }
+        Json::parse(text).map_err(|e| format!("invalid JSON body: {e}"))
+    }
+}
+
+/// Read and parse one request from the stream. Returns `Err` with a
+/// human-readable reason on malformed or over-limit input (the caller
+/// answers 400 and closes).
+pub fn read_request(stream: &mut TcpStream) -> Result<Request, String> {
+    // `Take` bounds how many bytes the head phase may pull off the socket
+    // — `read_line` would otherwise buffer an endless newline-free line
+    // into memory before any length check could run. The limit is raised
+    // to the (already-validated) body length once the headers end.
+    let mut reader =
+        BufReader::new(Read::take(&mut *stream, MAX_HEAD_BYTES as u64));
+    let mut head = String::new();
+    // Request line.
+    let mut line = String::new();
+    reader
+        .read_line(&mut line)
+        .map_err(|e| format!("reading request line: {e}"))?;
+    if line.is_empty() {
+        return Err("empty request".into());
+    }
+    let mut parts = line.split_whitespace();
+    let method = parts.next().unwrap_or("").to_ascii_uppercase();
+    let target = parts.next().unwrap_or("").to_string();
+    let version = parts.next().unwrap_or("");
+    if method.is_empty() || target.is_empty() || !version.starts_with("HTTP/1")
+    {
+        return Err(format!("malformed request line: {}", line.trim_end()));
+    }
+    // Headers (we only act on Content-Length).
+    let mut content_length: usize = 0;
+    loop {
+        let mut h = String::new();
+        let n = reader
+            .read_line(&mut h)
+            .map_err(|e| format!("reading headers: {e}"))?;
+        if n == 0 {
+            // EOF before the blank line: either the 16 KiB head limit
+            // was exhausted mid-headers (must NOT be treated as
+            // end-of-headers — the remnant would be misread as body) or
+            // the client hung up.
+            return Err(if reader.get_ref().limit() == 0 {
+                "request head exceeds 16 KiB".into()
+            } else {
+                "unexpected end of request head".to_string()
+            });
+        }
+        if h == "\r\n" || h == "\n" {
+            break;
+        }
+        head.push_str(&h);
+        if head.len() > MAX_HEAD_BYTES {
+            return Err("request head exceeds 16 KiB".into());
+        }
+        if let Some((name, value)) = h.split_once(':') {
+            if name.trim().eq_ignore_ascii_case("content-length") {
+                content_length = value
+                    .trim()
+                    .parse()
+                    .map_err(|_| "bad Content-Length".to_string())?;
+            }
+        }
+    }
+    if content_length > MAX_BODY_BYTES {
+        return Err("request body exceeds 4 MiB".into());
+    }
+    let mut body = vec![0u8; content_length];
+    if content_length > 0 {
+        // Body bytes already buffered by the reader were counted against
+        // the head limit; raising the limit here only governs what is
+        // still to be read from the socket.
+        reader.get_mut().set_limit(content_length as u64);
+        reader
+            .read_exact(&mut body)
+            .map_err(|e| format!("reading body: {e}"))?;
+    }
+    let (path, query) = match target.split_once('?') {
+        Some((p, q)) => (p.to_string(), q.to_string()),
+        None => (target, String::new()),
+    };
+    Ok(Request { method, path, query, body })
+}
+
+/// Reason phrases for the handful of statuses the router uses.
+fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        202 => "Accepted",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        409 => "Conflict",
+        413 => "Payload Too Large",
+        429 => "Too Many Requests",
+        500 => "Internal Server Error",
+        _ => "",
+    }
+}
+
+fn head(status: u16, content_type: &str, length: Option<usize>) -> String {
+    let mut h = format!(
+        "HTTP/1.1 {status} {}\r\nConnection: close\r\nContent-Type: \
+         {content_type}\r\n",
+        reason(status)
+    );
+    if let Some(n) = length {
+        h.push_str(&format!("Content-Length: {n}\r\n"));
+    }
+    h.push_str("\r\n");
+    h
+}
+
+/// Write a complete JSON response (status + body) and flush.
+pub fn write_json(
+    stream: &mut TcpStream,
+    status: u16,
+    body: &Json,
+) -> std::io::Result<()> {
+    let text = body.to_string();
+    stream.write_all(
+        head(status, "application/json", Some(text.len())).as_bytes(),
+    )?;
+    stream.write_all(text.as_bytes())?;
+    stream.flush()
+}
+
+/// Write a pre-rendered JSON body — the result cache stores rendered
+/// responses, so a cache hit costs zero re-serialization.
+pub fn write_raw_json(
+    stream: &mut TcpStream,
+    status: u16,
+    body: &str,
+) -> std::io::Result<()> {
+    stream.write_all(
+        head(status, "application/json", Some(body.len())).as_bytes(),
+    )?;
+    stream.write_all(body.as_bytes())?;
+    stream.flush()
+}
+
+/// Write a JSON error envelope: `{"error": msg}`.
+pub fn write_error(
+    stream: &mut TcpStream,
+    status: u16,
+    msg: &str,
+) -> std::io::Result<()> {
+    write_json(
+        stream,
+        status,
+        &Json::obj(vec![("error", Json::Str(msg.to_string()))]),
+    )
+}
+
+/// Start an NDJSON streaming response: writes the head and hands the
+/// caller the raw stream to emit records on (`report::ndjson`); the body
+/// is delimited by connection close.
+pub fn start_ndjson(stream: &mut TcpStream) -> std::io::Result<()> {
+    stream.write_all(head(200, "application/x-ndjson", None).as_bytes())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::{TcpListener, TcpStream};
+
+    /// Round-trip helper: spawn a listener, feed it `raw`, parse.
+    fn parse_raw(raw: &[u8]) -> Result<Request, String> {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let raw = raw.to_vec();
+        let client = std::thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            s.write_all(&raw).unwrap();
+            // Keep the stream open until the server side is done parsing.
+            let mut buf = [0u8; 1];
+            let _ = s.read(&mut buf);
+        });
+        let (mut conn, _) = listener.accept().unwrap();
+        let req = read_request(&mut conn);
+        let _ = conn.write_all(b"x");
+        client.join().unwrap();
+        req
+    }
+
+    #[test]
+    fn parses_post_with_body_and_query() {
+        let req = parse_raw(
+            b"POST /v1/ppa?x=1 HTTP/1.1\r\nHost: h\r\nContent-Length: 9\r\n\
+              \r\n{\"a\":1}\r\n",
+        )
+        .unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/v1/ppa");
+        assert_eq!(req.query, "x=1");
+        assert_eq!(req.body.len(), 9);
+        let j = req.json().unwrap();
+        assert_eq!(j.get("a").as_usize(), Some(1));
+    }
+
+    #[test]
+    fn parses_get_without_body() {
+        let req = parse_raw(b"GET /v1/stats HTTP/1.1\r\n\r\n").unwrap();
+        assert_eq!(req.method, "GET");
+        assert_eq!(req.path, "/v1/stats");
+        assert!(req.body.is_empty());
+        // Empty body parses as an empty object (endpoints with all-default
+        // parameters accept bodyless POSTs too).
+        assert!(req.json().unwrap().as_obj().is_some());
+    }
+
+    #[test]
+    fn rejects_malformed_and_oversized() {
+        assert!(parse_raw(b"NOT-HTTP\r\n\r\n").is_err());
+        assert!(parse_raw(b"GET / FTP/9\r\n\r\n").is_err());
+        assert!(
+            parse_raw(b"POST / HTTP/1.1\r\nContent-Length: nope\r\n\r\n")
+                .is_err()
+        );
+        let huge = format!(
+            "POST / HTTP/1.1\r\nContent-Length: {}\r\n\r\n",
+            super::MAX_BODY_BYTES + 1
+        );
+        assert!(parse_raw(huge.as_bytes()).is_err());
+    }
+
+    #[test]
+    fn newline_free_flood_is_bounded_and_rejected() {
+        // A head with no newline must fail at the 16 KiB take-limit, not
+        // buffer the whole stream into memory.
+        let mut raw = vec![b'A'; super::MAX_HEAD_BYTES + 1024];
+        raw.extend_from_slice(b"\r\n\r\n");
+        assert!(parse_raw(&raw).is_err());
+    }
+
+    #[test]
+    fn json_body_errors_are_descriptive() {
+        let req =
+            parse_raw(b"POST / HTTP/1.1\r\nContent-Length: 4\r\n\r\n{oop")
+                .unwrap();
+        let e = req.json().unwrap_err();
+        assert!(e.contains("invalid JSON"), "{e}");
+    }
+}

@@ -1,0 +1,550 @@
+//! Async job manager for the serving layer: long sweeps and co-explore
+//! runs enqueue here, execute on the work-stealing scheduler, publish
+//! live progress, and cancel cooperatively (DESIGN.md §6).
+//!
+//! Lifecycle: `queued -> running -> completed | cancelled | failed`, with
+//! the one shortcut `queued -> cancelled` (a DELETE before the runner
+//! picks the job up). Sweep jobs fold block-local mini-summaries into a
+//! shared [`dse::SweepSummary`] once per block, so a `GET /v1/jobs/:id`
+//! mid-run reads real front size and latency stats without stalling the
+//! sweep — and a cancelled job's partially merged Pareto front stays
+//! retrievable forever.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::config::SweepSpace;
+use crate::coexplore;
+use crate::dse::{self, Objective, SweepSummary};
+use crate::models::{nas, Dataset};
+use crate::pe::PeType;
+use crate::sweep::{self, Reducer, SweepCtl};
+use crate::util::json::Json;
+use crate::util::stats::{FiveNum, StreamingFiveNum};
+
+use super::AppState;
+
+/// Indices a job worker claims per queue hit. Larger than the sweep
+/// engine's default: the block is also the shared-summary merge
+/// granularity, and merging is the only lock traffic.
+const JOB_BLOCK: usize = 256;
+
+/// Submissions beyond this many queued jobs are rejected (429) — an
+/// unauthenticated client looping `POST /v1/jobs` must not grow server
+/// memory without bound.
+const MAX_QUEUED_JOBS: usize = 32;
+
+/// Registry retention: once more jobs than this are held, `submit`
+/// evicts the oldest *terminal* jobs (their results become 404s).
+/// Queued + running jobs are never evicted, so with the queue cap this
+/// bounds the registry.
+const MAX_RETAINED_JOBS: usize = 256;
+
+/// What a job runs.
+pub enum JobKind {
+    Sweep {
+        workload: String,
+        space: SweepSpace,
+        objective: Objective,
+        top_k: usize,
+    },
+    Coexplore {
+        n_archs: usize,
+        hw_per_arch: usize,
+        seed: u64,
+        pe_types: Vec<PeType>,
+    },
+}
+
+impl JobKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            JobKind::Sweep { .. } => "sweep",
+            JobKind::Coexplore { .. } => "coexplore",
+        }
+    }
+}
+
+pub struct JobSpec {
+    pub kind: JobKind,
+    /// Worker threads the job's sweep runs on.
+    pub threads: usize,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobState {
+    Queued,
+    Running,
+    Completed,
+    Cancelled,
+    Failed,
+}
+
+impl JobState {
+    pub fn name(self) -> &'static str {
+        match self {
+            JobState::Queued => "queued",
+            JobState::Running => "running",
+            JobState::Completed => "completed",
+            JobState::Cancelled => "cancelled",
+            JobState::Failed => "failed",
+        }
+    }
+
+    pub fn is_terminal(self) -> bool {
+        matches!(
+            self,
+            JobState::Completed | JobState::Cancelled | JobState::Failed
+        )
+    }
+}
+
+/// Live progress a sweep job's workers publish block by block.
+#[derive(Default)]
+struct JobProgress {
+    summary: Option<SweepSummary>,
+    /// Per-point model evaluation latency (µs), five-number streamed.
+    eval_lat_us: StreamingFiveNum,
+    /// Co-exploration terminal result (pairs + co-design front).
+    co_result: Option<Json>,
+}
+
+pub struct Job {
+    pub id: u64,
+    pub spec: JobSpec,
+    /// Work items the progress counter runs to (grid points; for
+    /// co-exploration, arch preparations + scored pairs).
+    pub total: usize,
+    pub ctl: SweepCtl,
+    state: Mutex<JobState>,
+    progress: Mutex<JobProgress>,
+    error: Mutex<Option<String>>,
+}
+
+fn five_num_json(f: &FiveNum) -> Json {
+    Json::obj(vec![
+        ("min", Json::num_or_null(f.min)),
+        ("q1", Json::num_or_null(f.q1)),
+        ("median", Json::num_or_null(f.median)),
+        ("q3", Json::num_or_null(f.q3)),
+        ("max", Json::num_or_null(f.max)),
+    ])
+}
+
+fn summary_result_json(s: &SweepSummary) -> Json {
+    let front: Vec<Json> = s
+        .front
+        .points()
+        .iter()
+        .map(|(e, ppa, cfg)| {
+            Json::obj(vec![
+                ("energy_j", Json::num_or_null(*e)),
+                ("perf_per_area", Json::num_or_null(*ppa)),
+                ("config", cfg.to_json()),
+            ])
+        })
+        .collect();
+    let mut top = Vec::new();
+    for (pe, t) in &s.top {
+        let list: Vec<Json> = t
+            .sorted()
+            .into_iter()
+            .map(|(_score, p)| p.to_json())
+            .collect();
+        top.push((pe.name(), Json::Arr(list)));
+    }
+    Json::obj(vec![
+        ("count", Json::Num(s.count as f64)),
+        ("objective", Json::Str(s.objective.name().into())),
+        ("front", Json::Arr(front)),
+        ("top", Json::obj(top)),
+    ])
+}
+
+impl Job {
+    pub fn state(&self) -> JobState {
+        *self.state.lock().unwrap()
+    }
+
+    /// The `GET /v1/jobs/:id` body: identity, lifecycle state, streaming
+    /// progress (points evaluated, current front size, five-number eval
+    /// latency), and — once terminal — the (possibly partial) result.
+    pub fn status_json(&self) -> Json {
+        let state = self.state();
+        let prog = self.progress.lock().unwrap();
+        let mut fields = vec![
+            ("id", Json::Num(self.id as f64)),
+            ("kind", Json::Str(self.spec.kind.name().into())),
+            ("state", Json::Str(state.name().into())),
+            ("total", Json::Num(self.total as f64)),
+            ("points_done", Json::Num(self.ctl.done() as f64)),
+        ];
+        if let Some(s) = &prog.summary {
+            fields.push(("front_size", Json::Num(s.front.len() as f64)));
+            fields.push((
+                "eval_latency_us",
+                five_num_json(&prog.eval_lat_us.summary()),
+            ));
+            if state.is_terminal() {
+                fields.push(("result", summary_result_json(s)));
+            }
+        }
+        if let Some(r) = &prog.co_result {
+            if state.is_terminal() {
+                fields.push(("result", r.clone()));
+            }
+        }
+        if let Some(e) = &*self.error.lock().unwrap() {
+            fields.push(("error", Json::Str(e.clone())));
+        }
+        Json::obj(fields)
+    }
+}
+
+/// FIFO queue + registry. One or more runner threads loop via
+/// [`run_loop`]; the HTTP side submits, polls, cancels.
+pub struct JobManager {
+    next_id: AtomicU64,
+    jobs: Mutex<BTreeMap<u64, Arc<Job>>>,
+    queue: Mutex<VecDeque<Arc<Job>>>,
+    available: Condvar,
+    shutdown: AtomicBool,
+}
+
+impl Default for JobManager {
+    fn default() -> Self {
+        JobManager::new()
+    }
+}
+
+impl JobManager {
+    pub fn new() -> JobManager {
+        JobManager {
+            next_id: AtomicU64::new(0),
+            jobs: Mutex::new(BTreeMap::new()),
+            queue: Mutex::new(VecDeque::new()),
+            available: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+        }
+    }
+
+    /// Register + enqueue; returns the job (already visible to GET), or
+    /// an error when the queue is at capacity. Old terminal jobs beyond
+    /// the retention cap are evicted here, oldest first.
+    pub fn submit(
+        &self,
+        spec: JobSpec,
+        total: usize,
+    ) -> Result<Arc<Job>, String> {
+        // The queue lock is held across the capacity check AND the push,
+        // so concurrent submissions cannot overshoot the cap.
+        let mut q = self.queue.lock().unwrap();
+        if q.len() >= MAX_QUEUED_JOBS {
+            return Err(format!(
+                "job queue is full ({MAX_QUEUED_JOBS} queued) — retry \
+                 after some finish"
+            ));
+        }
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed) + 1;
+        let job = Arc::new(Job {
+            id,
+            spec,
+            total,
+            ctl: SweepCtl::new(),
+            state: Mutex::new(JobState::Queued),
+            progress: Mutex::new(JobProgress::default()),
+            error: Mutex::new(None),
+        });
+        {
+            let mut jobs = self.jobs.lock().unwrap();
+            jobs.insert(id, job.clone());
+            while jobs.len() > MAX_RETAINED_JOBS {
+                // BTreeMap iterates in ascending id order: oldest first.
+                let victim = jobs
+                    .iter()
+                    .find(|(_, j)| j.state().is_terminal())
+                    .map(|(vid, _)| *vid);
+                match victim {
+                    Some(vid) => {
+                        jobs.remove(&vid);
+                    }
+                    None => break,
+                }
+            }
+        }
+        q.push_back(job.clone());
+        drop(q);
+        self.available.notify_one();
+        Ok(job)
+    }
+
+    pub fn get(&self, id: u64) -> Option<Arc<Job>> {
+        self.jobs.lock().unwrap().get(&id).cloned()
+    }
+
+    /// Cancel: flips the cooperative flag (a running job stops within one
+    /// block per worker) and short-circuits a still-queued job straight
+    /// to `cancelled`. Idempotent; `None` for unknown ids.
+    pub fn cancel(&self, id: u64) -> Option<Arc<Job>> {
+        let job = self.get(id)?;
+        job.ctl.cancel();
+        let mut st = job.state.lock().unwrap();
+        if *st == JobState::Queued {
+            *st = JobState::Cancelled;
+        }
+        drop(st);
+        Some(job)
+    }
+
+    /// Per-state job counts for `/v1/stats`.
+    pub fn counts_json(&self) -> Json {
+        let jobs = self.jobs.lock().unwrap();
+        let mut by: BTreeMap<&'static str, usize> = BTreeMap::new();
+        for j in jobs.values() {
+            *by.entry(j.state().name()).or_default() += 1;
+        }
+        Json::Obj(
+            by.into_iter()
+                .map(|(k, v)| (k.to_string(), Json::Num(v as f64)))
+                .collect(),
+        )
+    }
+
+    /// Block until a job is available or shutdown is flagged. The timeout
+    /// bounds how long a quiet runner goes between shutdown checks.
+    fn next_runnable(&self) -> Option<Arc<Job>> {
+        let mut q = self.queue.lock().unwrap();
+        loop {
+            if self.shutdown.load(Ordering::Relaxed) {
+                return None;
+            }
+            if let Some(job) = q.pop_front() {
+                return Some(job);
+            }
+            q = self
+                .available
+                .wait_timeout(q, Duration::from_millis(200))
+                .unwrap()
+                .0;
+        }
+    }
+
+    /// Stop every runner after its current job.
+    pub fn shutdown(&self) {
+        self.shutdown.store(true, Ordering::Relaxed);
+        self.available.notify_all();
+    }
+}
+
+/// Runner-thread entry point: execute queued jobs until shutdown.
+pub fn run_loop(state: &AppState) {
+    while let Some(job) = state.jobs.next_runnable() {
+        run_one(state, &job);
+    }
+}
+
+fn run_one(state: &AppState, job: &Job) {
+    {
+        let mut st = job.state.lock().unwrap();
+        if *st != JobState::Queued {
+            return; // cancelled while queued
+        }
+        *st = JobState::Running;
+    }
+    let outcome = match &job.spec.kind {
+        JobKind::Sweep { workload, space, objective, top_k } => {
+            run_sweep(state, job, workload, space, *objective, *top_k)
+        }
+        JobKind::Coexplore { n_archs, hw_per_arch, seed, pe_types } => {
+            run_coexplore(state, job, *n_archs, *hw_per_arch, *seed, pe_types)
+        }
+    };
+    let mut st = job.state.lock().unwrap();
+    *st = match outcome {
+        Err(e) => {
+            *job.error.lock().unwrap() = Some(e);
+            JobState::Failed
+        }
+        // A cancel that lands after the last block already finished
+        // changed nothing — every item was evaluated, so the job
+        // completed (a client must not mistake a full result for a
+        // partial one).
+        Ok(()) if job.ctl.is_cancelled() && job.ctl.done() < job.total => {
+            JobState::Cancelled
+        }
+        Ok(()) => JobState::Completed,
+    };
+}
+
+fn run_sweep(
+    state: &AppState,
+    job: &Job,
+    workload: &str,
+    space: &SweepSpace,
+    objective: Objective,
+    top_k: usize,
+) -> Result<(), String> {
+    let layers = state.workload(workload)?.layers.clone();
+    let compiled = state.compiled_map(workload, &layers, &space.pe_types);
+    sweep::for_each_block_ctl(
+        space.len(),
+        job.spec.threads,
+        JOB_BLOCK,
+        &job.ctl,
+        |range| {
+            let mut mini = SweepSummary::new(objective, top_k);
+            let mut lat = StreamingFiveNum::default();
+            for i in range {
+                let cfg = space.point(i);
+                let t0 = Instant::now();
+                let p = match compiled.get(&cfg.pe_type) {
+                    Some(c) => dse::evaluate_compiled(c, &cfg),
+                    None => dse::evaluate(&state.models, &cfg, &layers),
+                };
+                lat.observe(t0.elapsed().as_secs_f64() * 1e6);
+                mini.observe(&p);
+            }
+            let mut prog = job.progress.lock().unwrap();
+            prog.eval_lat_us.merge(&lat);
+            match &mut prog.summary {
+                Some(s) => s.merge(mini),
+                None => prog.summary = Some(mini),
+            }
+        },
+    );
+    Ok(())
+}
+
+fn run_coexplore(
+    state: &AppState,
+    job: &Job,
+    n_archs: usize,
+    hw_per_arch: usize,
+    seed: u64,
+    pe_types: &[PeType],
+) -> Result<(), String> {
+    let mut space = SweepSpace::default();
+    if !pe_types.is_empty() {
+        space.pe_types = pe_types.to_vec();
+    }
+    let pts = coexplore::explore_ctl(
+        &state.models,
+        &space,
+        Dataset::Cifar10,
+        n_archs,
+        hw_per_arch,
+        seed,
+        job.spec.threads,
+        &job.ctl,
+    );
+    // Raw co-design front: energy and top-1 error both minimized (front
+    // membership is scale-invariant, so skipping the INT16 normalization
+    // keeps LightPE-only jobs serveable).
+    let mut front = sweep::reducers::ParetoFront2D::new(
+        sweep::reducers::YSense::Minimize,
+    );
+    for (i, p) in pts.iter().enumerate() {
+        front.insert(p.energy_j, p.top1_err, i);
+    }
+    let fj: Vec<Json> = front
+        .points()
+        .iter()
+        .map(|&(e, err, i)| {
+            let p = &pts[i];
+            Json::obj(vec![
+                ("arch", Json::Num(nas::encode(&p.arch) as f64)),
+                ("pe_type", Json::Str(p.cfg.pe_type.name().into())),
+                ("energy_j", Json::num_or_null(e)),
+                ("top1_err_pct", Json::num_or_null(err)),
+                ("area_um2", Json::num_or_null(p.area_um2)),
+            ])
+        })
+        .collect();
+    let mut prog = job.progress.lock().unwrap();
+    prog.co_result = Some(Json::obj(vec![
+        ("pairs", Json::Num(pts.len() as f64)),
+        ("front", Json::Arr(fj)),
+    ]));
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_spec() -> JobSpec {
+        JobSpec {
+            kind: JobKind::Coexplore {
+                n_archs: 1,
+                hw_per_arch: 1,
+                seed: 1,
+                pe_types: vec![],
+            },
+            threads: 1,
+        }
+    }
+
+    #[test]
+    fn queued_job_cancels_before_running() {
+        let m = JobManager::new();
+        let job = m.submit(tiny_spec(), 2).unwrap();
+        assert_eq!(job.state(), JobState::Queued);
+        let cancelled = m.cancel(job.id).unwrap();
+        assert_eq!(cancelled.state(), JobState::Cancelled);
+        assert!(cancelled.ctl.is_cancelled());
+        // Unknown ids are None, and cancel is idempotent.
+        assert!(m.cancel(9999).is_none());
+        assert_eq!(m.cancel(job.id).unwrap().state(), JobState::Cancelled);
+        let counts = m.counts_json();
+        assert_eq!(counts.get("cancelled").as_usize(), Some(1));
+    }
+
+    #[test]
+    fn queue_cap_rejects_floods() {
+        let m = JobManager::new();
+        for _ in 0..MAX_QUEUED_JOBS {
+            m.submit(tiny_spec(), 2).unwrap();
+        }
+        let e = m.submit(tiny_spec(), 2).unwrap_err();
+        assert!(e.contains("queue is full"), "{e}");
+    }
+
+    #[test]
+    fn status_json_reports_lifecycle_fields() {
+        let m = JobManager::new();
+        let job = m
+            .submit(
+                JobSpec {
+                    kind: JobKind::Sweep {
+                        workload: "resnet20".into(),
+                        space: crate::config::SweepSpace::default(),
+                        objective: Objective::PerfPerArea,
+                        top_k: 3,
+                    },
+                    threads: 2,
+                },
+                100,
+            )
+            .unwrap();
+        let j = job.status_json();
+        assert_eq!(j.get("id").as_u64(), Some(job.id));
+        assert_eq!(j.get("kind").as_str(), Some("sweep"));
+        assert_eq!(j.get("state").as_str(), Some("queued"));
+        assert_eq!(j.get("total").as_usize(), Some(100));
+        assert_eq!(j.get("points_done").as_usize(), Some(0));
+        // No result until terminal.
+        assert_eq!(j.get("result"), &Json::Null);
+    }
+
+    #[test]
+    fn shutdown_unblocks_runner() {
+        let m = Arc::new(JobManager::new());
+        let m2 = m.clone();
+        let t = std::thread::spawn(move || m2.next_runnable().is_none());
+        std::thread::sleep(Duration::from_millis(10));
+        m.shutdown();
+        assert!(t.join().unwrap(), "runner saw a job after shutdown");
+    }
+}

@@ -1,0 +1,314 @@
+//! `quidam serve` — a persistent PPA query + exploration service
+//! (DESIGN.md §6).
+//!
+//! The paper's pre-characterized models answer a design query in
+//! microseconds, but the CLI pays process startup, model load/fit, and
+//! workload compilation on *every* invocation. This subsystem keeps all
+//! of that resident: a dependency-free HTTP/1.1 JSON service over
+//! `std::net::TcpListener` with a fixed accept-worker pool, a sharded
+//! byte-budgeted LRU holding workload-compiled models (keyed
+//! `(workload, pe_type)`) and rendered responses (keyed by request
+//! hash), and an async job manager running large sweeps / co-explore
+//! runs on the work-stealing scheduler with cooperative cancellation.
+//!
+//! Layering: `http` (wire parsing + response framing) -> `router`
+//! (endpoints) -> `cache` / `jobs` (shared state), all hanging off one
+//! [`AppState`]. The CLI entry point is `main.rs`'s `serve` subcommand;
+//! in-process tests drive [`Server::spawn`] against an ephemeral port.
+
+pub mod cache;
+pub mod http;
+pub mod jobs;
+pub mod router;
+
+use std::collections::BTreeMap;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::models::{zoo, Dataset, DnnModel};
+use crate::pe::PeType;
+use crate::ppa::{CompiledNetModel, PpaModels};
+
+/// Server tunables (`quidam serve --addr/--threads/--cache-mib`).
+#[derive(Debug, Clone)]
+pub struct ServeOptions {
+    /// Bind address; port 0 picks an ephemeral port.
+    pub addr: String,
+    /// HTTP accept-worker pool size (each worker handles one connection
+    /// at a time; synchronous sweeps parallelize internally).
+    pub http_threads: usize,
+    /// Worker threads for each sweep / job execution.
+    pub sweep_threads: usize,
+    /// Total cache budget (MiB), split between the compiled-model cache
+    /// (3/4) and the rendered-result cache (1/4).
+    pub cache_mib: usize,
+    /// Largest grid a synchronous `/v1/sweep` accepts; bigger grids are
+    /// redirected to the job manager.
+    pub max_sync_points: usize,
+    /// Largest grid / item count an async job accepts.
+    pub max_job_points: usize,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        ServeOptions {
+            addr: "127.0.0.1:8787".into(),
+            http_threads: 8,
+            sweep_threads: std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(4),
+            cache_mib: 64,
+            max_sync_points: 1_000_000,
+            max_job_points: 64_000_000,
+        }
+    }
+}
+
+/// Everything a request handler can reach: models, named workloads, the
+/// two memo caches, the job manager, and observability counters.
+pub struct AppState {
+    pub models: PpaModels,
+    pub workloads: BTreeMap<String, DnnModel>,
+    /// Workload-compiled models, keyed `(workload, pe_type)` — the
+    /// specialization a repeated query must never pay twice.
+    pub compiled: cache::ShardedLru<String, Arc<CompiledNetModel>>,
+    /// Rendered responses, keyed by the route-salted raw request bytes
+    /// (full-key equality — a hash collision can never cross-serve).
+    pub results: cache::ShardedLru<Vec<u8>, Arc<String>>,
+    pub jobs: jobs::JobManager,
+    pub opts: ServeOptions,
+    pub started: Instant,
+    pub requests: AtomicU64,
+}
+
+impl AppState {
+    pub fn new(models: PpaModels, opts: ServeOptions) -> AppState {
+        let mut workloads = BTreeMap::new();
+        for net in [
+            zoo::resnet_cifar(20, Dataset::Cifar10),
+            zoo::resnet_cifar(56, Dataset::Cifar10),
+            zoo::vgg16(Dataset::Cifar10),
+        ] {
+            workloads.insert(net.name.clone(), net);
+        }
+        let budget = opts.cache_mib.max(1) * (1 << 20);
+        AppState {
+            models,
+            workloads,
+            compiled: cache::ShardedLru::new(8, budget / 4 * 3),
+            results: cache::ShardedLru::new(8, budget / 4),
+            jobs: jobs::JobManager::new(),
+            opts,
+            started: Instant::now(),
+            requests: AtomicU64::new(0),
+        }
+    }
+
+    /// Look up a named workload; the error lists what the server serves.
+    pub fn workload(&self, name: &str) -> Result<&DnnModel, String> {
+        self.workloads.get(name).ok_or_else(|| {
+            format!(
+                "unknown workload '{name}' (have: {})",
+                self.workloads
+                    .keys()
+                    .cloned()
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            )
+        })
+    }
+
+    /// Cache-aware compiled-model lookup keyed `(workload, pe_type)`.
+    /// `None` when the latency layout refuses to compile (callers fall
+    /// back to generic evaluation — same policy as `dse::try_compile`).
+    pub fn compiled_for(
+        &self,
+        workload: &str,
+        layers: &[crate::models::ConvLayer],
+        pe: PeType,
+    ) -> Option<Arc<CompiledNetModel>> {
+        let key = format!("{workload}\0{}", pe.name());
+        if let Some(m) = self.compiled.get(&key) {
+            return Some(m);
+        }
+        let m = Arc::new(
+            CompiledNetModel::compile_for(&self.models, layers, &[pe]).ok()?,
+        );
+        self.compiled.insert(key, m.clone(), m.approx_bytes().max(1));
+        Some(m)
+    }
+
+    /// Compiled models for every PE type a sweep will evaluate, each via
+    /// the cache. PE types whose latency layout refuses to compile are
+    /// simply absent — per-point evaluation falls back to the generic
+    /// path (same policy as `dse`'s internal compile). Shared by the
+    /// synchronous `/v1/sweep` handler and the job runner.
+    pub fn compiled_map(
+        &self,
+        workload: &str,
+        layers: &[crate::models::ConvLayer],
+        pes: &[PeType],
+    ) -> BTreeMap<PeType, Arc<CompiledNetModel>> {
+        let mut map = BTreeMap::new();
+        for &pe in pes {
+            if let Some(c) = self.compiled_for(workload, layers, pe) {
+                map.insert(pe, c);
+            }
+        }
+        map
+    }
+}
+
+/// A bound-but-not-yet-serving server. Splitting bind from run lets the
+/// CLI print the actual address (port 0 resolves at bind) and lets tests
+/// drive an in-process instance.
+pub struct Server {
+    listener: Arc<TcpListener>,
+    state: Arc<AppState>,
+}
+
+/// Handle to a background server: address, shared state (for tests /
+/// stats), and a clean shutdown path.
+pub struct ServerHandle {
+    pub addr: SocketAddr,
+    listener: Arc<TcpListener>,
+    state: Arc<AppState>,
+    stop: Arc<AtomicBool>,
+    threads: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    pub fn bind(models: PpaModels, opts: ServeOptions) -> Result<Server, String> {
+        let listener = TcpListener::bind(&opts.addr)
+            .map_err(|e| format!("binding {}: {e}", opts.addr))?;
+        Ok(Server {
+            listener: Arc::new(listener),
+            state: Arc::new(AppState::new(models, opts)),
+        })
+    }
+
+    pub fn local_addr(&self) -> SocketAddr {
+        self.listener
+            .local_addr()
+            .expect("bound listener has a local addr")
+    }
+
+    pub fn state(&self) -> Arc<AppState> {
+        self.state.clone()
+    }
+
+    /// Serve forever on the calling thread's pool (the CLI path).
+    pub fn run(self) {
+        let handle = self.spawn();
+        for t in handle.threads {
+            let _ = t.join();
+        }
+    }
+
+    /// Start the worker pool + job runner in the background and return a
+    /// handle (the test / embedding path).
+    pub fn spawn(self) -> ServerHandle {
+        let stop = Arc::new(AtomicBool::new(false));
+        let addr = self.local_addr();
+        let mut threads = Vec::new();
+        {
+            let state = self.state.clone();
+            threads.push(
+                std::thread::Builder::new()
+                    .name("quidam-jobs".into())
+                    .spawn(move || jobs::run_loop(&state))
+                    .expect("spawn job runner"),
+            );
+        }
+        for i in 0..self.state.opts.http_threads.max(1) {
+            let listener = self.listener.clone();
+            let state = self.state.clone();
+            let stop = stop.clone();
+            threads.push(
+                std::thread::Builder::new()
+                    .name(format!("quidam-http-{i}"))
+                    .spawn(move || accept_loop(&listener, &state, &stop))
+                    .expect("spawn http worker"),
+            );
+        }
+        ServerHandle {
+            addr,
+            listener: self.listener,
+            state: self.state,
+            stop,
+            threads,
+        }
+    }
+}
+
+impl ServerHandle {
+    pub fn state(&self) -> &Arc<AppState> {
+        &self.state
+    }
+
+    /// Stop accepting, stop the job runner after its current job, wake
+    /// every blocked acceptor, and join the pool.
+    pub fn shutdown(self) {
+        self.stop.store(true, Ordering::Relaxed);
+        self.state.jobs.shutdown();
+        // Blocked `accept` calls need one wake each; flipping the
+        // listener to non-blocking keeps late finishers from re-blocking.
+        let _ = self.listener.set_nonblocking(true);
+        for _ in &self.threads {
+            let _ = TcpStream::connect(self.addr);
+        }
+        for t in self.threads {
+            let _ = t.join();
+        }
+    }
+}
+
+fn accept_loop(
+    listener: &TcpListener,
+    state: &Arc<AppState>,
+    stop: &AtomicBool,
+) {
+    loop {
+        match listener.accept() {
+            Ok((conn, _peer)) => {
+                if stop.load(Ordering::Relaxed) {
+                    return;
+                }
+                handle_conn(state, conn);
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                // Shutdown flipped the listener to non-blocking.
+                if stop.load(Ordering::Relaxed) {
+                    return;
+                }
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(_) => {
+                if stop.load(Ordering::Relaxed) {
+                    return;
+                }
+                // Transient accept failure (EMFILE etc.) — back off.
+                std::thread::sleep(Duration::from_millis(5));
+            }
+        }
+    }
+}
+
+fn handle_conn(state: &Arc<AppState>, mut conn: TcpStream) {
+    // A stuck client must not pin a pool worker forever — in either
+    // direction: without the write timeout, a client that stops draining
+    // a streamed sweep would block the sink, fill the bounded row
+    // channel, and wedge every sweep worker behind it (the write error
+    // is what triggers the sweep's cooperative cancellation).
+    let _ = conn.set_read_timeout(Some(Duration::from_secs(10)));
+    let _ = conn.set_write_timeout(Some(Duration::from_secs(30)));
+    let _ = conn.set_nodelay(true);
+    state.requests.fetch_add(1, Ordering::Relaxed);
+    match http::read_request(&mut conn) {
+        // A response write error means the client vanished — nothing to do.
+        Ok(req) => drop(router::handle(state, req, &mut conn)),
+        Err(e) => drop(http::write_error(&mut conn, 400, &e)),
+    }
+}

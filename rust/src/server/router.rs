@@ -1,0 +1,538 @@
+//! Route dispatch for `quidam serve` (endpoint table in DESIGN.md §6):
+//!
+//!   GET    /healthz       liveness probe
+//!   GET    /v1/stats      cache hit/miss counters, job counts, uptime
+//!   GET    /v1/workloads  named workloads the PPA endpoints accept
+//!   POST   /v1/ppa        single-config PPA query (result-cached)
+//!   POST   /v1/sweep      bounded synchronous sweep, NDJSON-streamed
+//!   POST   /v1/jobs       enqueue an async sweep / coexplore job
+//!   GET    /v1/jobs/:id   job status + streaming progress (+ result)
+//!   DELETE /v1/jobs/:id   cooperative cancellation
+
+use std::io::Write as _;
+use std::net::TcpStream;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::config::{parse_axis, AcceleratorConfig, SweepSpace};
+use crate::dse::{self, Objective};
+use crate::pe::PeType;
+use crate::report;
+use crate::sweep::SweepCtl;
+use crate::util::json::Json;
+
+use super::http::{self, Request};
+use super::jobs::{JobKind, JobSpec};
+use super::AppState;
+
+/// Result-cache key: the raw body prefixed by its route, so identical
+/// bodies on different endpoints can never collide. The cache compares
+/// full keys — only byte-identical repeats are served from it.
+fn request_key(route: &str, body: &[u8]) -> Vec<u8> {
+    let mut bytes = Vec::with_capacity(route.len() + 1 + body.len());
+    bytes.extend_from_slice(route.as_bytes());
+    bytes.push(0);
+    bytes.extend_from_slice(body);
+    bytes
+}
+
+fn opt_usize(j: &Json, key: &str) -> Result<Option<usize>, String> {
+    match j.get(key) {
+        Json::Null => Ok(None),
+        v => match v.as_usize() {
+            Some(n) => Ok(Some(n)),
+            None => {
+                Err(format!("'{key}' must be a non-negative integer"))
+            }
+        },
+    }
+}
+
+/// Parse a request config: `pe_type` is required, every other field
+/// defaults from the Eyeriss-like baseline, and the result must pass
+/// `AcceleratorConfig::validate`.
+fn parse_config(j: &Json) -> Result<AcceleratorConfig, String> {
+    let pe = PeType::from_name(
+        j.get("pe_type")
+            .as_str()
+            .ok_or("config.pe_type is required (fp32|int16|lightpe2|lightpe1)")?,
+    )?;
+    let mut cfg = AcceleratorConfig::baseline(pe);
+    if let Some(v) = opt_usize(j, "rows")? {
+        cfg.rows = v;
+    }
+    if let Some(v) = opt_usize(j, "cols")? {
+        cfg.cols = v;
+    }
+    if let Some(v) = opt_usize(j, "sp_if")? {
+        cfg.sp_if = v;
+    }
+    if let Some(v) = opt_usize(j, "sp_fw")? {
+        cfg.sp_fw = v;
+    }
+    if let Some(v) = opt_usize(j, "sp_ps")? {
+        cfg.sp_ps = v;
+    }
+    if let Some(v) = opt_usize(j, "gb_kib")? {
+        cfg.gb_kib = v;
+    }
+    if let Some(v) = opt_usize(j, "dram_bw")? {
+        cfg.dram_bw = v;
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+/// Optional `workload` field: absent defaults to resnet20; present but
+/// non-string is a 400 (silently substituting the default would return
+/// plausible-but-wrong metrics for a malformed request).
+fn parse_workload(j: &Json) -> Result<String, String> {
+    match j.get("workload") {
+        Json::Null => Ok("resnet20".to_string()),
+        v => v
+            .as_str()
+            .map(str::to_string)
+            .ok_or_else(|| "'workload' must be a string".to_string()),
+    }
+}
+
+/// Optional `pe_types` field, shared by every endpoint that accepts one:
+/// absent -> `None`; an array of name strings or a `"int16,fp32"` comma
+/// list -> the parsed types.
+fn parse_pe_types(j: &Json) -> Result<Option<Vec<PeType>>, String> {
+    match j.get("pe_types") {
+        Json::Null => Ok(None),
+        Json::Arr(a) => {
+            let mut pes = Vec::with_capacity(a.len());
+            for v in a {
+                pes.push(PeType::from_name(v.as_str().ok_or(
+                    "'pe_types' entries must be PE-type name strings",
+                )?)?);
+            }
+            Ok(Some(pes))
+        }
+        Json::Str(s) => Ok(Some(
+            s.split(',')
+                .map(|p| PeType::from_name(p.trim()))
+                .collect::<Result<Vec<_>, _>>()?,
+        )),
+        _ => Err("'pe_types' must be an array or comma list".into()),
+    }
+}
+
+/// Parse a sweep space: the default (or `"dense": true`) grid with
+/// per-axis overrides, each either an integer array or a CLI-style axis
+/// string (`"8:64:4"` / `"8,12,16"`), plus an optional `pe_types` list.
+fn parse_space(j: &Json) -> Result<SweepSpace, String> {
+    let mut space = if j.get("dense").as_bool() == Some(true) {
+        SweepSpace::dense()
+    } else {
+        SweepSpace::default()
+    };
+    let axes = [
+        ("rows", "rows"),
+        ("cols", "cols"),
+        ("sp_if", "sp-if"),
+        ("sp_fw", "sp-fw"),
+        ("sp_ps", "sp-ps"),
+        ("gb_kib", "gb"),
+        ("dram_bw", "dram-bw"),
+    ];
+    for (key, axis) in axes {
+        match j.get(key) {
+            Json::Null => {}
+            Json::Arr(a) => {
+                let mut vals = Vec::with_capacity(a.len());
+                for v in a {
+                    vals.push(v.as_usize().ok_or_else(|| {
+                        format!(
+                            "'{key}' entries must be non-negative integers"
+                        )
+                    })?);
+                }
+                space.set_axis(axis, vals)?;
+            }
+            Json::Str(s) => space.set_axis(axis, parse_axis(s)?)?,
+            _ => {
+                return Err(format!(
+                    "'{key}' must be an integer array or an axis string \
+                     like \"8:64:4\""
+                ))
+            }
+        }
+    }
+    if let Some(pes) = parse_pe_types(j)? {
+        space.pe_types = pes;
+    }
+    space.validate()?;
+    Ok(space)
+}
+
+fn parse_objective(j: &Json) -> Result<Objective, String> {
+    match j.get("objective").as_str() {
+        None => Ok(Objective::PerfPerArea),
+        Some(s) => Objective::from_name(s),
+    }
+}
+
+fn parse_threads(j: &Json, state: &AppState) -> Result<usize, String> {
+    Ok(opt_usize(j, "threads")?
+        .unwrap_or(state.opts.sweep_threads)
+        .clamp(1, crate::sweep::MAX_THREADS))
+}
+
+fn stats_json(state: &AppState) -> Json {
+    let names: Vec<Json> = state
+        .workloads
+        .keys()
+        .map(|n| Json::Str(n.clone()))
+        .collect();
+    Json::obj(vec![
+        (
+            "uptime_s",
+            Json::Num(state.started.elapsed().as_secs_f64()),
+        ),
+        (
+            "requests",
+            Json::Num(state.requests.load(Ordering::Relaxed) as f64),
+        ),
+        ("workloads", Json::Arr(names)),
+        ("compiled_models", state.compiled.stats().to_json()),
+        ("results", state.results.stats().to_json()),
+        ("jobs", state.jobs.counts_json()),
+    ])
+}
+
+fn workloads_json(state: &AppState) -> Json {
+    let list: Vec<Json> = state
+        .workloads
+        .values()
+        .map(|net| {
+            Json::obj(vec![
+                ("name", Json::Str(net.name.clone())),
+                ("layers", Json::Num(net.layers.len() as f64)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![("workloads", Json::Arr(list))])
+}
+
+/// `POST /v1/ppa` — single-config PPA through the cached compiled models.
+/// A byte-identical repeated request is answered from the result cache
+/// without touching model specialization at all (asserted via /v1/stats).
+fn ppa(
+    state: &AppState,
+    req: &Request,
+    conn: &mut TcpStream,
+) -> std::io::Result<()> {
+    let key = request_key("ppa", &req.body);
+    if let Some(cached) = state.results.get(&key) {
+        return http::write_raw_json(conn, 200, &cached);
+    }
+    let parsed = (|| -> Result<(String, AcceleratorConfig), String> {
+        let j = req.json()?;
+        let workload = parse_workload(&j)?;
+        let cfg = parse_config(j.get("config"))?;
+        Ok((workload, cfg))
+    })();
+    let (workload, cfg) = match parsed {
+        Ok(v) => v,
+        Err(e) => return http::write_error(conn, 400, &e),
+    };
+    let net = match state.workload(&workload) {
+        Ok(n) => n,
+        Err(e) => return http::write_error(conn, 400, &e),
+    };
+    let point = match state.compiled_for(&workload, &net.layers, cfg.pe_type)
+    {
+        Some(c) => dse::evaluate_compiled(&c, &cfg),
+        None => dse::evaluate(&state.models, &cfg, &net.layers),
+    };
+    let body = Json::obj(vec![
+        ("workload", Json::Str(workload)),
+        ("metrics", point.to_json()),
+    ])
+    .to_string();
+    let weight = key.len() + body.len();
+    state.results.insert(key, Arc::new(body.clone()), weight);
+    http::write_raw_json(conn, 200, &body)
+}
+
+/// `POST /v1/sweep` — bounded synchronous grid sweep streamed as NDJSON:
+/// optional per-point records, then the Pareto front, per-PE top-K, and a
+/// terminal summary record.
+fn sweep_sync(
+    state: &AppState,
+    req: &Request,
+    conn: &mut TcpStream,
+) -> std::io::Result<()> {
+    type Parsed = (String, SweepSpace, Objective, usize, bool, usize);
+    let parsed = (|| -> Result<Parsed, String> {
+        let j = req.json()?;
+        let workload = parse_workload(&j)?;
+        let space = parse_space(&j)?;
+        let objective = parse_objective(&j)?;
+        let top_k = opt_usize(&j, "top_k")?.unwrap_or(5).clamp(1, 100);
+        let points = j.get("points").as_bool() == Some(true);
+        let threads = parse_threads(&j, state)?;
+        Ok((workload, space, objective, top_k, points, threads))
+    })();
+    let (workload, space, objective, top_k, points, threads) = match parsed {
+        Ok(v) => v,
+        Err(e) => return http::write_error(conn, 400, &e),
+    };
+    if space.len() > state.opts.max_sync_points {
+        return http::write_error(
+            conn,
+            413,
+            &format!(
+                "grid has {} points, above the synchronous bound {} — \
+                 submit it as an async job via POST /v1/jobs",
+                space.len(),
+                state.opts.max_sync_points
+            ),
+        );
+    }
+    let net = match state.workload(&workload) {
+        Ok(n) => n,
+        Err(e) => return http::write_error(conn, 400, &e),
+    };
+    let compiled = state.compiled_map(&workload, &net.layers, &space.pe_types);
+    http::start_ndjson(conn)?;
+    let ctl = SweepCtl::new();
+    let t0 = Instant::now();
+    let mut write_err: Option<std::io::Error> = None;
+    let summary = dse::stream_space_eval(
+        &space,
+        threads,
+        objective,
+        top_k,
+        |cfg| match compiled.get(&cfg.pe_type) {
+            Some(c) => dse::evaluate_compiled(c, cfg),
+            None => dse::evaluate(&state.models, cfg, &net.layers),
+        },
+        |p| {
+            if !points {
+                return None;
+            }
+            let mut rec = p.to_json();
+            if let Json::Obj(m) = &mut rec {
+                m.insert("type".into(), Json::Str("point".into()));
+            }
+            Some(rec.to_string())
+        },
+        |line| {
+            if write_err.is_none() {
+                if let Err(e) = writeln!(conn, "{line}") {
+                    // Client went away: stop paying for the sweep.
+                    write_err = Some(e);
+                    ctl.cancel();
+                }
+            }
+        },
+        &ctl,
+    );
+    if let Some(e) = write_err {
+        return Err(e);
+    }
+    for (energy, ppa_v, cfg) in summary.front.points() {
+        report::ndjson(
+            conn,
+            &Json::obj(vec![
+                ("type", Json::Str("front".into())),
+                ("energy_j", Json::num_or_null(*energy)),
+                ("perf_per_area", Json::num_or_null(*ppa_v)),
+                ("config", cfg.to_json()),
+            ]),
+        )?;
+    }
+    for (pe, top) in &summary.top {
+        for (rank, (_score, p)) in top.sorted().into_iter().enumerate() {
+            let mut rec = p.to_json();
+            if let Json::Obj(m) = &mut rec {
+                m.insert("type".into(), Json::Str("topk".into()));
+                m.insert("pe".into(), Json::Str(pe.name().into()));
+                m.insert("rank".into(), Json::Num((rank + 1) as f64));
+                m.insert(
+                    "objective_value".into(),
+                    Json::num_or_null(objective.value(p)),
+                );
+            }
+            report::ndjson(conn, &rec)?;
+        }
+    }
+    report::ndjson(
+        conn,
+        &Json::obj(vec![
+            ("type", Json::Str("summary".into())),
+            ("count", Json::Num(summary.count as f64)),
+            ("front_size", Json::Num(summary.front.len() as f64)),
+            ("objective", Json::Str(objective.name().into())),
+            ("elapsed_s", Json::num_or_null(t0.elapsed().as_secs_f64())),
+        ]),
+    )?;
+    conn.flush()
+}
+
+/// `POST /v1/jobs` — enqueue an async sweep or coexplore run.
+fn jobs_create(
+    state: &AppState,
+    req: &Request,
+    conn: &mut TcpStream,
+) -> std::io::Result<()> {
+    let parsed = (|| -> Result<(JobSpec, usize), String> {
+        let j = req.json()?;
+        let threads = parse_threads(&j, state)?;
+        match j.get("kind").as_str().unwrap_or("sweep") {
+            "sweep" => {
+                let workload = parse_workload(&j)?;
+                state.workload(&workload)?;
+                let space = parse_space(&j)?;
+                let objective = parse_objective(&j)?;
+                let top_k =
+                    opt_usize(&j, "top_k")?.unwrap_or(5).clamp(1, 100);
+                let total = space.len();
+                if total > state.opts.max_job_points {
+                    return Err(format!(
+                        "grid has {total} points, above the job bound {}",
+                        state.opts.max_job_points
+                    ));
+                }
+                Ok((
+                    JobSpec {
+                        kind: JobKind::Sweep {
+                            workload,
+                            space,
+                            objective,
+                            top_k,
+                        },
+                        threads,
+                    },
+                    total,
+                ))
+            }
+            "coexplore" => {
+                let n_archs = opt_usize(&j, "archs")?.unwrap_or(100);
+                let hw_per_arch =
+                    opt_usize(&j, "hw_per_arch")?.unwrap_or(2).max(1);
+                let seed = j.get("seed").as_u64().unwrap_or(42);
+                let pe_types = parse_pe_types(&j)?.unwrap_or_default();
+                if n_archs == 0 {
+                    return Err("'archs' must be at least 1".into());
+                }
+                let total = n_archs + n_archs * hw_per_arch;
+                if total > state.opts.max_job_points {
+                    return Err(format!(
+                        "co-exploration scores {total} items, above the \
+                         job bound {}",
+                        state.opts.max_job_points
+                    ));
+                }
+                Ok((
+                    JobSpec {
+                        kind: JobKind::Coexplore {
+                            n_archs,
+                            hw_per_arch,
+                            seed,
+                            pe_types,
+                        },
+                        threads,
+                    },
+                    total,
+                ))
+            }
+            other => Err(format!(
+                "unknown job kind '{other}' (want sweep|coexplore)"
+            )),
+        }
+    })();
+    let (spec, total) = match parsed {
+        Ok(v) => v,
+        Err(e) => return http::write_error(conn, 400, &e),
+    };
+    let job = match state.jobs.submit(spec, total) {
+        Ok(job) => job,
+        Err(e) => return http::write_error(conn, 429, &e),
+    };
+    http::write_json(
+        conn,
+        202,
+        &Json::obj(vec![
+            ("id", Json::Num(job.id as f64)),
+            ("state", Json::Str(job.state().name().into())),
+            ("total", Json::Num(total as f64)),
+        ]),
+    )
+}
+
+/// `GET|DELETE /v1/jobs/:id`.
+fn jobs_item(
+    state: &AppState,
+    method: &str,
+    path: &str,
+    conn: &mut TcpStream,
+) -> std::io::Result<()> {
+    let id = match path
+        .strip_prefix("/v1/jobs/")
+        .and_then(|s| s.parse::<u64>().ok())
+    {
+        Some(id) => id,
+        None => {
+            return http::write_error(
+                conn,
+                400,
+                "job id must be a decimal integer",
+            )
+        }
+    };
+    match method {
+        "GET" => match state.jobs.get(id) {
+            Some(job) => http::write_json(conn, 200, &job.status_json()),
+            None => {
+                http::write_error(conn, 404, &format!("no job {id}"))
+            }
+        },
+        "DELETE" => match state.jobs.cancel(id) {
+            Some(job) => http::write_json(conn, 200, &job.status_json()),
+            None => {
+                http::write_error(conn, 404, &format!("no job {id}"))
+            }
+        },
+        _ => http::write_error(conn, 405, "want GET or DELETE"),
+    }
+}
+
+/// Dispatch one request and write its response. I/O errors are swallowed
+/// by the caller (a vanished client is not a server fault).
+pub fn handle(
+    state: &Arc<AppState>,
+    req: Request,
+    conn: &mut TcpStream,
+) -> std::io::Result<()> {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => http::write_json(
+            conn,
+            200,
+            &Json::obj(vec![("ok", Json::Bool(true))]),
+        ),
+        ("GET", "/v1/stats") => {
+            http::write_json(conn, 200, &stats_json(state))
+        }
+        ("GET", "/v1/workloads") => {
+            http::write_json(conn, 200, &workloads_json(state))
+        }
+        ("POST", "/v1/ppa") => ppa(state, &req, conn),
+        ("POST", "/v1/sweep") => sweep_sync(state, &req, conn),
+        ("POST", "/v1/jobs") => jobs_create(state, &req, conn),
+        (m, p) if p.starts_with("/v1/jobs/") => {
+            jobs_item(state, m, p, conn)
+        }
+        ("GET" | "POST" | "DELETE", _) => http::write_error(
+            conn,
+            404,
+            &format!("no route {} {}", req.method, req.path),
+        ),
+        _ => http::write_error(conn, 405, "unsupported method"),
+    }
+}

@@ -24,7 +24,7 @@
 pub mod reducers;
 
 use std::ops::Range;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc;
 
 /// Hard cap on worker threads (matches the old engine's clamp).
@@ -64,6 +64,42 @@ impl WorkQueue {
     }
 }
 
+/// Cooperative cancellation + progress counter shared between a sweep's
+/// workers and outside observers (the serving layer's job manager).
+/// Workers poll [`SweepCtl::is_cancelled`] between index blocks, so a
+/// cancelled sweep stops within one block per worker and every reducer
+/// stays consistent: a block's points either all fold or none do, and
+/// [`SweepCtl::done`] counts exactly the folded points.
+#[derive(Debug, Default)]
+pub struct SweepCtl {
+    cancelled: AtomicBool,
+    done: AtomicUsize,
+}
+
+impl SweepCtl {
+    pub fn new() -> SweepCtl {
+        SweepCtl::default()
+    }
+
+    /// Request cooperative cancellation (idempotent, thread-safe).
+    pub fn cancel(&self) {
+        self.cancelled.store(true, Ordering::Relaxed);
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        self.cancelled.load(Ordering::Relaxed)
+    }
+
+    /// Indices fully processed so far (updated at block granularity).
+    pub fn done(&self) -> usize {
+        self.done.load(Ordering::Relaxed)
+    }
+
+    fn add_done(&self, n: usize) {
+        self.done.fetch_add(n, Ordering::Relaxed);
+    }
+}
+
 /// Anything that can absorb per-worker results and be folded across
 /// workers at the end of a sweep.
 pub trait Reducer: Send {
@@ -80,12 +116,37 @@ where
     T: Send,
     F: Fn(usize) -> T + Sync,
 {
+    collect_indexed_ctl(n, threads, &SweepCtl::new(), f)
+}
+
+/// [`collect_indexed`] with cooperative cancellation: a cancelled run
+/// returns the contiguous prefix of results whose blocks completed
+/// (the queue hands blocks out in index order and a claimed block always
+/// finishes, so completed blocks form a prefix by construction).
+pub fn collect_indexed_ctl<T, F>(
+    n: usize,
+    threads: usize,
+    ctl: &SweepCtl,
+    f: F,
+) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
     let threads = effective_threads(threads, n);
     if n == 0 {
         return Vec::new();
     }
     if threads == 1 {
-        return (0..n).map(f).collect();
+        let mut out = Vec::with_capacity(n);
+        let mut i = 0;
+        while i < n && !ctl.is_cancelled() {
+            let end = (i + DEFAULT_BLOCK).min(n);
+            out.extend((i..end).map(&f));
+            ctl.add_done(end - i);
+            i = end;
+        }
+        return out;
     }
     let queue = WorkQueue::new(n, DEFAULT_BLOCK);
     let mut blocks: Vec<(usize, Vec<T>)> = std::thread::scope(|s| {
@@ -95,9 +156,15 @@ where
                 let f = &f;
                 s.spawn(move || {
                     let mut local: Vec<(usize, Vec<T>)> = Vec::new();
-                    while let Some(range) = queue.claim() {
+                    while !ctl.is_cancelled() {
+                        let range = match queue.claim() {
+                            Some(r) => r,
+                            None => break,
+                        };
                         let start = range.start;
+                        let len = range.len();
                         local.push((start, range.map(|i| f(i)).collect()));
+                        ctl.add_done(len);
                     }
                     local
                 })
@@ -109,7 +176,8 @@ where
             .collect()
     });
     blocks.sort_by_key(|(start, _)| *start);
-    let mut out = Vec::with_capacity(n);
+    let mut out =
+        Vec::with_capacity(blocks.iter().map(|(_, b)| b.len()).sum());
     for (_, mut b) in blocks {
         out.append(&mut b);
     }
@@ -142,7 +210,28 @@ pub fn map_reduce_stream<R, I, F, W>(
     threads: usize,
     init: I,
     body: F,
+    sink: W,
+) -> R
+where
+    R: Reducer,
+    I: Fn() -> R + Sync,
+    F: Fn(usize, &mut R) -> Option<String> + Sync,
+    W: FnMut(String),
+{
+    map_reduce_stream_ctl(n, threads, init, body, sink, &SweepCtl::new())
+}
+
+/// [`map_reduce_stream`] with cooperative cancellation + progress: workers
+/// poll `ctl` between blocks, so a cancelled sweep returns the merge of
+/// whatever each worker had folded (a consistent partial reduction of
+/// exactly [`SweepCtl::done`] points).
+pub fn map_reduce_stream_ctl<R, I, F, W>(
+    n: usize,
+    threads: usize,
+    init: I,
+    body: F,
     mut sink: W,
+    ctl: &SweepCtl,
 ) -> R
 where
     R: Reducer,
@@ -162,7 +251,12 @@ where
                 let tx = tx.clone();
                 s.spawn(move || {
                     let mut r = init();
-                    while let Some(range) = queue.claim() {
+                    while !ctl.is_cancelled() {
+                        let range = match queue.claim() {
+                            Some(rg) => rg,
+                            None => break,
+                        };
+                        let len = range.len();
                         for i in range {
                             if let Some(row) = body(i, &mut r) {
                                 // Receiver outlives workers inside this
@@ -171,6 +265,7 @@ where
                                 let _ = tx.send(row);
                             }
                         }
+                        ctl.add_done(len);
                     }
                     r
                 })
@@ -191,6 +286,44 @@ where
         }
         acc.unwrap_or_else(&init)
     })
+}
+
+/// Claim and process whole index blocks on the work-stealing queue — the
+/// job manager's entry point: `f` folds one block into shared state
+/// (merging once per block keeps lock traffic at `1/block` of per-point
+/// locking, so mid-run observers can read live progress without stalling
+/// the sweep), while `ctl` carries cancellation + the progress counter.
+pub fn for_each_block_ctl<F>(
+    n: usize,
+    threads: usize,
+    block: usize,
+    ctl: &SweepCtl,
+    f: F,
+) where
+    F: Fn(Range<usize>) + Sync,
+{
+    let threads = effective_threads(threads, n);
+    if n == 0 {
+        return;
+    }
+    let queue = WorkQueue::new(n, block);
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            let queue = &queue;
+            let f = &f;
+            s.spawn(move || {
+                while !ctl.is_cancelled() {
+                    let range = match queue.claim() {
+                        Some(r) => r,
+                        None => break,
+                    };
+                    let len = range.len();
+                    f(range);
+                    ctl.add_done(len);
+                }
+            });
+        }
+    });
 }
 
 #[cfg(test)]
@@ -286,6 +419,89 @@ mod tests {
             r.1 += 1;
         });
         assert_eq!(r.1, 256);
+    }
+
+    #[test]
+    fn pre_cancelled_sweep_does_no_work() {
+        let ctl = SweepCtl::new();
+        ctl.cancel();
+        let r = map_reduce_stream_ctl(
+            1000,
+            4,
+            Sum::default,
+            |_, r| {
+                r.1 += 1;
+                None
+            },
+            |_row| {},
+            &ctl,
+        );
+        assert_eq!(r.1, 0);
+        assert_eq!(ctl.done(), 0);
+        assert!(collect_indexed_ctl(1000, 4, &ctl, |i| i).is_empty());
+        assert!(collect_indexed_ctl(1000, 1, &ctl, |i| i).is_empty());
+    }
+
+    #[test]
+    fn cancelled_sweep_stops_within_blocks_and_counts_match() {
+        let ctl = SweepCtl::new();
+        let r = map_reduce_stream_ctl(
+            1_000_000,
+            4,
+            Sum::default,
+            |i, r| {
+                if i == 0 {
+                    ctl.cancel();
+                }
+                r.1 += 1;
+                None
+            },
+            |_row| {},
+            &ctl,
+        );
+        // Every worker stops at the first block boundary after the flag
+        // flips; allow generous slack for flag-visibility latency, but the
+        // run must end orders of magnitude before the full grid.
+        assert!(r.1 < 100_000, "cancel ignored: {} points evaluated", r.1);
+        // Consistency: the merged reducer folded exactly the points the
+        // progress counter reports (blocks fold completely or not at all).
+        assert_eq!(r.1, ctl.done());
+    }
+
+    #[test]
+    fn cancelled_collect_returns_contiguous_prefix() {
+        for threads in [1usize, 4] {
+            let ctl = SweepCtl::new();
+            let v = collect_indexed_ctl(100_000, threads, &ctl, |i| {
+                if i == 100 {
+                    ctl.cancel();
+                }
+                i
+            });
+            assert!(!v.is_empty(), "threads={threads}");
+            assert!(v.len() < 100_000, "threads={threads}: cancel ignored");
+            for (k, &x) in v.iter().enumerate() {
+                assert_eq!(k, x, "hole in prefix at {k} (threads={threads})");
+            }
+            assert_eq!(v.len(), ctl.done(), "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn for_each_block_covers_all_and_respects_cancel() {
+        let ctl = SweepCtl::new();
+        let count = AtomicUsize::new(0);
+        for_each_block_ctl(1000, 4, 64, &ctl, |r| {
+            count.fetch_add(r.len(), Ordering::Relaxed);
+        });
+        assert_eq!(count.load(Ordering::Relaxed), 1000);
+        assert_eq!(ctl.done(), 1000);
+        let pre = SweepCtl::new();
+        pre.cancel();
+        for_each_block_ctl(1000, 4, 64, &pre, |_r| {
+            panic!("block ran despite pre-cancelled ctl")
+        });
+        assert_eq!(pre.done(), 0);
     }
 
     #[test]

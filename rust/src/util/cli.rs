@@ -83,6 +83,21 @@ impl Args {
         }
     }
 
+    /// Strict *positive* integer lookup: like [`Args::parse_usize`] but
+    /// zero is rejected too — for flags where 0 is a silent foot-gun
+    /// rather than a meaningful value (`quidam serve --threads 0` must
+    /// not bind a server that can never answer).
+    pub fn parse_pos_usize(
+        &self,
+        key: &str,
+        default: usize,
+    ) -> Result<usize, String> {
+        match self.parse_usize(key, default)? {
+            0 => Err(format!("--{key}: must be at least 1")),
+            n => Ok(n),
+        }
+    }
+
     /// Strict float lookup; see [`Args::parse_usize`].
     pub fn parse_f64(&self, key: &str, default: f64) -> Result<f64, String> {
         match self.get(key) {
@@ -179,6 +194,14 @@ mod tests {
         assert!(a.parse_f64("cfgs", 1.0).is_err());
         // The lenient variant keeps its documented fallback behavior.
         assert_eq!(a.usize_or("cfgs", 240), 240);
+    }
+
+    #[test]
+    fn parse_pos_usize_rejects_zero() {
+        let a = parse("serve --threads 0 --cache-mib 64");
+        assert!(a.parse_pos_usize("threads", 8).unwrap_err().contains("--threads"));
+        assert_eq!(a.parse_pos_usize("cache-mib", 1).unwrap(), 64);
+        assert_eq!(a.parse_pos_usize("absent", 8).unwrap(), 8);
     }
 
     #[test]

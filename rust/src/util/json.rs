@@ -36,8 +36,24 @@ impl Json {
             _ => None,
         }
     }
+    /// Exact non-negative integer view. `None` for non-numbers and for
+    /// numbers that are negative, fractional, or not strictly below 2^53
+    /// (every integer below which is exactly representable in f64 —
+    /// 2^53 itself is excluded because 2^53 + 1 parses to the same f64,
+    /// so the value is already ambiguous). The old `as usize` cast
+    /// silently truncated all of these.
+    pub fn as_u64(&self) -> Option<u64> {
+        const MAX_EXACT: f64 = 9_007_199_254_740_992.0; // 2^53
+        match self.as_f64() {
+            Some(n) if n >= 0.0 && n < MAX_EXACT && n.fract() == 0.0 => {
+                Some(n as u64)
+            }
+            _ => None,
+        }
+    }
+    /// [`Json::as_u64`] narrowed to usize (`None` if it does not fit).
     pub fn as_usize(&self) -> Option<usize> {
-        self.as_f64().map(|n| n as usize)
+        self.as_u64().and_then(|v| usize::try_from(v).ok())
     }
     pub fn as_str(&self) -> Option<&str> {
         match self {
@@ -73,6 +89,15 @@ impl Json {
 
     pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
         Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+    }
+    /// Numeric value with the JSON grammar's NaN/inf gap closed: non-finite
+    /// metrics serialize as `null` so every emitted line stays parseable.
+    pub fn num_or_null(v: f64) -> Json {
+        if v.is_finite() {
+            Json::Num(v)
+        } else {
+            Json::Null
+        }
     }
     pub fn arr_f64(v: &[f64]) -> Json {
         Json::Arr(v.iter().map(|x| Json::Num(*x)).collect())
@@ -370,6 +395,37 @@ mod tests {
         assert!(Json::parse("[1,]").is_err());
         assert!(Json::parse("1 2").is_err());
         assert!(Json::parse("\"open").is_err());
+    }
+
+    #[test]
+    fn as_u64_and_as_usize_are_exact() {
+        assert_eq!(Json::Num(42.0).as_u64(), Some(42));
+        assert_eq!(Json::Num(42.0).as_usize(), Some(42));
+        assert_eq!(Json::Num(0.0).as_u64(), Some(0));
+        // 2^53 - 1 is the largest unambiguous integer; 2^53 itself is
+        // rejected (2^53 + 1 parses to the same f64).
+        assert_eq!(
+            Json::Num(9_007_199_254_740_991.0).as_u64(),
+            Some(9_007_199_254_740_991)
+        );
+        assert_eq!(Json::Num(9_007_199_254_740_992.0).as_u64(), None);
+        // Regression: `as usize` used to truncate all of these silently.
+        assert_eq!(Json::Num(-1.0).as_u64(), None);
+        assert_eq!(Json::Num(-1.0).as_usize(), None);
+        assert_eq!(Json::Num(2.5).as_u64(), None);
+        assert_eq!(Json::Num(2.5).as_usize(), None);
+        assert_eq!(Json::Num(1e18).as_u64(), None);
+        assert_eq!(Json::Num(f64::NAN).as_u64(), None);
+        assert_eq!(Json::Num(f64::INFINITY).as_u64(), None);
+        assert_eq!(Json::Str("3".into()).as_u64(), None);
+        assert_eq!(Json::Null.as_usize(), None);
+    }
+
+    #[test]
+    fn num_or_null_guards_non_finite() {
+        assert_eq!(Json::num_or_null(1.5), Json::Num(1.5));
+        assert_eq!(Json::num_or_null(f64::NAN), Json::Null);
+        assert_eq!(Json::num_or_null(f64::NEG_INFINITY), Json::Null);
     }
 
     #[test]

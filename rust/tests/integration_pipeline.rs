@@ -21,7 +21,7 @@ use quidam::util::stats::{mape, median};
 fn pipeline_models(coord: &Coordinator) -> PpaModels {
     let layers = unique_layers(&paper_workloads());
     let data = coord.characterize_all(&layers, 150, 1234);
-    PpaModels::fit(&data, 3)
+    PpaModels::fit(&data, 3).expect("model fit")
 }
 
 #[test]

@@ -1,0 +1,374 @@
+//! `quidam serve` integration: an in-process server on an ephemeral port
+//! driven over real TCP — correctness vs the offline DSE path, result /
+//! compiled-model caching observable through /v1/stats, NDJSON sweep
+//! framing, and the job lifecycle including mid-sweep cancellation with a
+//! retrievable partial Pareto front (ISSUE acceptance criteria).
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::{Mutex, MutexGuard, OnceLock};
+use std::time::{Duration, Instant};
+
+use quidam::config::SweepSpace;
+use quidam::dse;
+use quidam::models::{zoo, Dataset};
+use quidam::pe::PeType;
+use quidam::ppa::{characterize, PpaModels};
+use quidam::server::{AppState, ServeOptions, Server, ServerHandle};
+use quidam::tech::TechLibrary;
+use quidam::util::json::Json;
+
+fn test_models() -> PpaModels {
+    let tech = TechLibrary::freepdk45();
+    let space = SweepSpace::default();
+    let layers = zoo::resnet_cifar(20, Dataset::Cifar10).layers;
+    let mut m = BTreeMap::new();
+    for pe in PeType::ALL {
+        m.insert(pe, characterize(&space, pe, &layers, 40, &tech, 77));
+    }
+    PpaModels::fit(&m, 2).expect("model fit")
+}
+
+/// One shared server for the whole test binary (models are the expensive
+/// part); the handle lives in a static so the pool never joins.
+fn server() -> &'static ServerHandle {
+    static SERVER: OnceLock<ServerHandle> = OnceLock::new();
+    SERVER.get_or_init(|| {
+        let opts = ServeOptions {
+            addr: "127.0.0.1:0".into(),
+            http_threads: 4,
+            sweep_threads: 2,
+            cache_mib: 16,
+            ..Default::default()
+        };
+        Server::bind(test_models(), opts)
+            .expect("bind ephemeral port")
+            .spawn()
+    })
+}
+
+fn state() -> &'static AppState {
+    server().state()
+}
+
+/// The tests share one server and assert on its global cache/job
+/// counters, so they serialize on this lock (a poisoned guard from a
+/// failed sibling is still a valid guard).
+fn lock() -> MutexGuard<'static, ()> {
+    static GUARD: Mutex<()> = Mutex::new(());
+    GUARD.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Minimal HTTP client: one request per connection (the server speaks
+/// `Connection: close`), returns (status, body).
+fn http(method: &str, path: &str, body: &str) -> (u16, String) {
+    let addr: SocketAddr = server().addr;
+    let mut s = TcpStream::connect(addr).expect("connect");
+    s.set_read_timeout(Some(Duration::from_secs(120))).unwrap();
+    let req = format!(
+        "{method} {path} HTTP/1.1\r\nHost: quidam\r\nContent-Length: \
+         {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+    s.write_all(req.as_bytes()).expect("send request");
+    let mut resp = String::new();
+    s.read_to_string(&mut resp).expect("read response");
+    let status: u16 = resp
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or_else(|| panic!("no status line in: {resp:?}"));
+    let body = resp
+        .split_once("\r\n\r\n")
+        .map(|(_, b)| b.to_string())
+        .unwrap_or_default();
+    (status, body)
+}
+
+fn post_json(path: &str, body: &str) -> (u16, Json) {
+    let (status, text) = http("POST", path, body);
+    let j = Json::parse(&text)
+        .unwrap_or_else(|e| panic!("unparseable body {text:?}: {e}"));
+    (status, j)
+}
+
+fn get_json(path: &str) -> (u16, Json) {
+    let (status, text) = http("GET", path, "");
+    let j = Json::parse(&text)
+        .unwrap_or_else(|e| panic!("unparseable body {text:?}: {e}"));
+    (status, j)
+}
+
+/// Poll a job until `pred` holds (panics after `deadline`).
+fn poll_job(id: u64, deadline: Duration, pred: impl Fn(&Json) -> bool) -> Json {
+    let t0 = Instant::now();
+    loop {
+        let (status, j) = get_json(&format!("/v1/jobs/{id}"));
+        assert_eq!(status, 200, "job {id} vanished: {j}");
+        if pred(&j) {
+            return j;
+        }
+        assert!(
+            t0.elapsed() < deadline,
+            "job {id} never satisfied predicate; last: {j}"
+        );
+        std::thread::sleep(Duration::from_millis(5));
+    }
+}
+
+#[test]
+fn ppa_matches_offline_path_and_repeats_hit_the_cache() {
+    let _serialized = lock();
+    let body = r#"{"workload":"resnet20","config":{"pe_type":"lightpe1"}}"#;
+    let (status, first_text) = http("POST", "/v1/ppa", body);
+    assert_eq!(status, 200, "{first_text}");
+    let j = Json::parse(&first_text).unwrap();
+    let metrics = j.get("metrics");
+
+    // Byte-identical metrics vs the offline dse::evaluate_space path on
+    // the same config/workload (both evaluate through compiled models).
+    let baseline = quidam::config::AcceleratorConfig::baseline(PeType::LightPe1);
+    let one = SweepSpace {
+        rows: vec![baseline.rows],
+        cols: vec![baseline.cols],
+        sp_if: vec![baseline.sp_if],
+        sp_fw: vec![baseline.sp_fw],
+        sp_ps: vec![baseline.sp_ps],
+        gb_kib: vec![baseline.gb_kib],
+        dram_bw: vec![baseline.dram_bw],
+        pe_types: vec![PeType::LightPe1],
+    };
+    let net = zoo::resnet_cifar(20, Dataset::Cifar10);
+    let offline = dse::evaluate_space(&state().models, &one, &net.layers, 1);
+    assert_eq!(offline.len(), 1);
+    for (key, want) in [
+        ("latency_s", offline[0].latency_s),
+        ("power_mw", offline[0].power_mw),
+        ("area_um2", offline[0].area_um2),
+        ("energy_j", offline[0].energy_j),
+        ("perf_per_area", offline[0].perf_per_area),
+    ] {
+        assert_eq!(
+            metrics.get(key).as_f64(),
+            Some(want),
+            "{key} differs from the offline path"
+        );
+    }
+
+    // A repeated identical request is served from the result cache —
+    // byte-identical body, hit counter visible at /v1/stats, and no
+    // second compiled-model specialization.
+    let compiled_before = state().compiled.stats();
+    let results_before = state().results.stats();
+    let (status, second_text) = http("POST", "/v1/ppa", body);
+    assert_eq!(status, 200);
+    assert_eq!(first_text, second_text, "cache changed the bytes");
+    let (status, stats) = get_json("/v1/stats");
+    assert_eq!(status, 200);
+    let hits = stats.get("results").get("hits").as_u64().unwrap();
+    assert!(
+        hits > results_before.hits,
+        "repeat did not hit the result cache ({hits} <= {})",
+        results_before.hits
+    );
+    let compiled_after = state().compiled.stats();
+    assert_eq!(
+        compiled_after.misses, compiled_before.misses,
+        "repeat re-ran compiled-model specialization"
+    );
+    assert!(stats.get("uptime_s").as_f64().unwrap() >= 0.0);
+}
+
+#[test]
+fn concurrent_ppa_requests_answer_correctly() {
+    let _serialized = lock();
+    let rows = [6usize, 8, 12, 16, 24, 6, 8, 12];
+    let handles: Vec<_> = rows
+        .iter()
+        .map(|&r| {
+            std::thread::spawn(move || {
+                let body = format!(
+                    r#"{{"workload":"resnet20","config":{{"pe_type":"int16","rows":{r}}}}}"#
+                );
+                let (status, j) = post_json("/v1/ppa", &body);
+                assert_eq!(status, 200, "{j}");
+                (r, j.get("metrics").get("energy_j").as_f64().unwrap())
+            })
+        })
+        .collect();
+    let net = zoo::resnet_cifar(20, Dataset::Cifar10);
+    for h in handles {
+        let (r, got) = h.join().expect("request thread");
+        let mut cfg =
+            quidam::config::AcceleratorConfig::baseline(PeType::Int16);
+        cfg.rows = r;
+        let one = SweepSpace {
+            rows: vec![cfg.rows],
+            cols: vec![cfg.cols],
+            sp_if: vec![cfg.sp_if],
+            sp_fw: vec![cfg.sp_fw],
+            sp_ps: vec![cfg.sp_ps],
+            gb_kib: vec![cfg.gb_kib],
+            dram_bw: vec![cfg.dram_bw],
+            pe_types: vec![PeType::Int16],
+        };
+        let offline =
+            dse::evaluate_space(&state().models, &one, &net.layers, 1);
+        assert_eq!(got, offline[0].energy_j, "rows={r}");
+    }
+}
+
+#[test]
+fn sweep_streams_parseable_ndjson_with_summary() {
+    let _serialized = lock();
+    let body = r#"{"workload":"resnet20","rows":[8,12],"cols":[8,14],
+        "sp_if":[12],"sp_fw":[128,224],"sp_ps":[24],"gb_kib":[108],
+        "dram_bw":[16],"points":true,"top_k":2}"#;
+    let (status, text) = http("POST", "/v1/sweep", body);
+    assert_eq!(status, 200, "{text}");
+    let mut counts: BTreeMap<String, usize> = BTreeMap::new();
+    let mut summary = Json::Null;
+    for line in text.lines().filter(|l| !l.is_empty()) {
+        let j = Json::parse(line)
+            .unwrap_or_else(|e| panic!("bad NDJSON line {line:?}: {e}"));
+        let ty = j.get("type").as_str().expect("typed record").to_string();
+        if ty == "summary" {
+            summary = j.clone();
+        }
+        *counts.entry(ty).or_default() += 1;
+    }
+    // 2*2*2*4 PE types = 32 grid points, each streamed as a point record.
+    assert_eq!(counts.get("point"), Some(&32));
+    assert!(counts.get("front").copied().unwrap_or(0) >= 1);
+    assert!(counts.get("topk").copied().unwrap_or(0) >= 4);
+    assert_eq!(counts.get("summary"), Some(&1));
+    assert_eq!(summary.get("count").as_usize(), Some(32));
+    assert_eq!(
+        summary.get("front_size").as_usize(),
+        counts.get("front").copied()
+    );
+}
+
+#[test]
+fn job_is_cancellable_mid_sweep_with_partial_front() {
+    let _serialized = lock();
+    // ~1.9M-point dense grid: decidedly not done within the poll window.
+    let (status, j) =
+        post_json("/v1/jobs", r#"{"kind":"sweep","dense":true,"threads":2}"#);
+    assert_eq!(status, 202, "{j}");
+    let id = j.get("id").as_u64().expect("job id");
+    let total = j.get("total").as_usize().unwrap();
+    assert!(total > 1_000_000);
+
+    // Wait until it is visibly running with progress, then cancel.
+    poll_job(id, Duration::from_secs(60), |s| {
+        s.get("state").as_str() == Some("running")
+            && s.get("points_done").as_usize().unwrap_or(0) > 0
+    });
+    let (status, _) = http("DELETE", &format!("/v1/jobs/{id}"), "");
+    assert_eq!(status, 200);
+    let fin = poll_job(id, Duration::from_secs(60), |s| {
+        s.get("state").as_str() == Some("cancelled")
+    });
+    let done = fin.get("points_done").as_usize().unwrap();
+    assert!(done > 0 && done < total, "done={done} total={total}");
+    // The partial Pareto front survives cancellation.
+    assert!(fin.get("front_size").as_usize().unwrap() > 0);
+    let front = fin.get("result").get("front").as_arr().expect("front");
+    assert!(!front.is_empty());
+    assert!(front[0].get("config").get("pe_type").as_str().is_some());
+    // Five-number eval latency was streamed while it ran.
+    let med = fin.get("eval_latency_us").get("median").as_f64();
+    assert!(med.is_some(), "no latency stats: {fin}");
+}
+
+#[test]
+fn queued_job_cancels_without_running() {
+    let _serialized = lock();
+    // Two long jobs back-to-back: the single runner holds the first, so
+    // the second is still queued when we cancel it.
+    let (_, a) =
+        post_json("/v1/jobs", r#"{"kind":"sweep","dense":true,"threads":2}"#);
+    let (_, b) =
+        post_json("/v1/jobs", r#"{"kind":"sweep","dense":true,"threads":2}"#);
+    let (ida, idb) =
+        (a.get("id").as_u64().unwrap(), b.get("id").as_u64().unwrap());
+    let (status, cancelled) = {
+        let (s, t) = http("DELETE", &format!("/v1/jobs/{idb}"), "");
+        (s, Json::parse(&t).unwrap())
+    };
+    assert_eq!(status, 200);
+    assert_eq!(cancelled.get("state").as_str(), Some("cancelled"));
+    assert_eq!(cancelled.get("points_done").as_usize(), Some(0));
+    // Clean up the runner-holding job too.
+    let _ = http("DELETE", &format!("/v1/jobs/{ida}"), "");
+    poll_job(ida, Duration::from_secs(60), |s| {
+        s.get("state").as_str() == Some("cancelled")
+    });
+}
+
+#[test]
+fn coexplore_job_completes_with_codesign_front() {
+    let _serialized = lock();
+    let (status, j) = post_json(
+        "/v1/jobs",
+        r#"{"kind":"coexplore","archs":4,"hw_per_arch":2,"seed":9,"threads":2}"#,
+    );
+    assert_eq!(status, 202, "{j}");
+    let id = j.get("id").as_u64().unwrap();
+    assert_eq!(j.get("total").as_usize(), Some(4 + 8));
+    let fin = poll_job(id, Duration::from_secs(120), |s| {
+        s.get("state")
+            .as_str()
+            .map(|st| st == "completed" || st == "failed")
+            .unwrap_or(false)
+    });
+    assert_eq!(fin.get("state").as_str(), Some("completed"), "{fin}");
+    assert_eq!(fin.get("result").get("pairs").as_usize(), Some(8));
+    assert!(!fin.get("result").get("front").as_arr().unwrap().is_empty());
+}
+
+#[test]
+fn error_paths_return_clean_statuses() {
+    let _serialized = lock();
+    // Malformed JSON.
+    let (status, j) = post_json("/v1/ppa", "{not json");
+    assert_eq!(status, 400);
+    assert!(j.get("error").as_str().unwrap().contains("JSON"));
+    // Unknown workload names the known ones.
+    let (status, j) = post_json(
+        "/v1/ppa",
+        r#"{"workload":"alexnet","config":{"pe_type":"int16"}}"#,
+    );
+    assert_eq!(status, 400);
+    assert!(j.get("error").as_str().unwrap().contains("resnet20"));
+    // Missing pe_type.
+    let (status, j) = post_json("/v1/ppa", r#"{"config":{"rows":12}}"#);
+    assert_eq!(status, 400);
+    assert!(j.get("error").as_str().unwrap().contains("pe_type"));
+    // Out-of-range config.
+    let (status, _) = post_json(
+        "/v1/ppa",
+        r#"{"config":{"pe_type":"int16","rows":4096}}"#,
+    );
+    assert_eq!(status, 400);
+    // Oversized synchronous sweep points at the job manager.
+    let (status, j) = post_json("/v1/sweep", r#"{"dense":true}"#);
+    assert_eq!(status, 413);
+    assert!(j.get("error").as_str().unwrap().contains("/v1/jobs"));
+    // Unknown routes / jobs.
+    let (status, _) = get_json("/v1/nope");
+    assert_eq!(status, 404);
+    let (status, _) = get_json("/v1/jobs/999999");
+    assert_eq!(status, 404);
+    let (status, _) = http("DELETE", "/v1/jobs/999999", "");
+    assert_eq!(status, 404);
+    // Health + workloads are alive.
+    let (status, j) = get_json("/healthz");
+    assert_eq!(status, 200);
+    assert_eq!(j.get("ok").as_bool(), Some(true));
+    let (status, j) = get_json("/v1/workloads");
+    assert_eq!(status, 200);
+    assert_eq!(j.get("workloads").as_arr().unwrap().len(), 3);
+}
