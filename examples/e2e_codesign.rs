@@ -43,8 +43,11 @@ fn main() -> anyhow::Result<()> {
     let mut acc = std::collections::BTreeMap::new();
     let mut loss_rows = Vec::new();
     for pe in PeType::ALL {
-        println!("\n--- training {} for {steps} steps (batch {}) ---",
-                 pe, rt.manifest.model.get("batch").as_usize().unwrap_or(64));
+        println!(
+            "\n--- training {} for {steps} steps (batch {}) ---",
+            pe,
+            rt.manifest.model.get("batch").as_usize().unwrap_or(64)
+        );
         let mut tr = Trainer::new(&rt, pe, 42)?;
         println!("  {} params in {} tensors", tr.param_elements(), tr.num_params());
         let t0 = std::time::Instant::now();
@@ -55,8 +58,13 @@ fn main() -> anyhow::Result<()> {
         })?;
         let wall = t0.elapsed().as_secs_f64();
         let a = tr.evaluate(&mut rt, &test_ds)?;
-        println!("  {} done in {:.1}s ({:.1} steps/s)  ->  top-1 {:.2}%",
-                 pe, wall, steps as f64 / wall, a);
+        println!(
+            "  {} done in {:.1}s ({:.1} steps/s)  ->  top-1 {:.2}%",
+            pe,
+            wall,
+            steps as f64 / wall,
+            a
+        );
         acc.insert(pe, a);
         for l in &logs {
             loss_rows.push(vec![
@@ -66,18 +74,26 @@ fn main() -> anyhow::Result<()> {
         }
     }
     std::fs::create_dir_all("results").ok();
-    write_csv(std::path::Path::new("results/e2e_loss_curves.csv"),
-              &["pe_type", "step", "loss", "lr"], &loss_rows)?;
+    write_csv(
+        std::path::Path::new("results/e2e_loss_curves.csv"),
+        &["pe_type", "step", "loss", "lr"],
+        &loss_rows,
+    )?;
     println!("\nloss curves -> results/e2e_loss_curves.csv");
 
     // ---- Stage 3: hardware metrics from the DSE ----------------------
     let coord = Coordinator::default();
-    let models = coord.load_or_build_models(
-        std::path::Path::new("artifacts/ppa_models.json"), 240, 5, 42)
+    let models = coord
+        .load_or_build_models(
+            std::path::Path::new("artifacts/ppa_models.json"),
+            240,
+            5,
+            42,
+        )
         .map_err(anyhow::Error::msg)?;
     let net = zoo::resnet_cifar(20, Dataset::Cifar10);
-    let pts = dse::evaluate_space(&models, &coord.space, &net.layers,
-                                  coord.threads);
+    let pts =
+        dse::evaluate_space(&models, &coord.space, &net.layers, coord.threads);
     let reference = dse::best_int16_reference(&pts).unwrap();
     let best_ppa = dse::best_per_pe(&pts, |p| p.perf_per_area);
     let best_e = dse::best_per_pe(&pts, |p| -p.energy_j);
@@ -95,16 +111,25 @@ fn main() -> anyhow::Result<()> {
             format!("{}x{} fw{}", p.cfg.rows, p.cfg.cols, p.cfg.sp_fw),
         ]);
     }
-    println!("{}", render_table(
-        "E2E co-design summary (measured accuracy + measured hw efficiency)",
-        &["pe", "synth-CIFAR top-1 %", "best perf/area", "best energy",
-          "best cfg"],
-        &rows,
-    ));
-    write_csv(std::path::Path::new("results/e2e_codesign_summary.csv"),
-              &["pe_type", "top1", "best_norm_ppa", "best_norm_energy"],
-              &rows.iter().map(|r| r[..4].to_vec()).collect::<Vec<_>>())?;
-    println!("Expected shape (paper): LightPEs on-par accuracy, multiples \
-              better perf/area, fractions of the energy.");
+    println!(
+        "{}",
+        render_table(
+            "E2E co-design summary (measured accuracy + measured hw efficiency)",
+            &[
+                "pe", "synth-CIFAR top-1 %", "best perf/area", "best energy",
+                "best cfg",
+            ],
+            &rows,
+        )
+    );
+    write_csv(
+        std::path::Path::new("results/e2e_codesign_summary.csv"),
+        &["pe_type", "top1", "best_norm_ppa", "best_norm_energy"],
+        &rows.iter().map(|r| r[..4].to_vec()).collect::<Vec<_>>(),
+    )?;
+    println!(
+        "Expected shape (paper): LightPEs on-par accuracy, multiples \
+         better perf/area, fractions of the energy."
+    );
     Ok(())
 }

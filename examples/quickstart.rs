@@ -27,8 +27,11 @@ fn main() {
     ).expect("failed to load/build PPA models");
 
     let net = zoo::resnet_cifar(20, Dataset::Cifar10);
-    println!("workload: {} ({:.1} MMACs)\n", net.name,
-             net.total_macs() as f64 / 1e6);
+    println!(
+        "workload: {} ({:.1} MMACs)\n",
+        net.name,
+        net.total_macs() as f64 / 1e6
+    );
 
     let mut rows = Vec::new();
     let mut pts = Vec::new();
@@ -65,6 +68,8 @@ fn main() {
         &["pe", "perf/area", "energy"],
         &rows,
     ));
-    println!("LightPEs should show >1x perf/area and <1x energy — the \
-              paper's core observation.");
+    println!(
+        "LightPEs should show >1x perf/area and <1x energy — the \
+         paper's core observation."
+    );
 }

@@ -49,7 +49,9 @@ fn main() -> anyhow::Result<()> {
         worst = worst.max(err);
         assert!(err <= 2.0 * n as f64, "trial {trial}: rtl {rtl} vs {float}");
     }
-    println!("  1000 random 64-MAC dot products: worst |err| = {worst:.1} \
-              (bound: 2 LSB/MAC from truncating shifts) — PASS");
+    println!(
+        "  1000 random 64-MAC dot products: worst |err| = {worst:.1} \
+         (bound: 2 LSB/MAC from truncating shifts) — PASS"
+    );
     Ok(())
 }

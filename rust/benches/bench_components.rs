@@ -192,5 +192,49 @@ fn main() {
             .unwrap_or(f64::NAN),
     );
 
+    // CI regression tracking: QUIDAM_BENCH_JSON=path dumps the sweep
+    // throughput numbers as JSON. Absolute points/s varies with the
+    // runner, so the committed baseline gates on the *normalized* ratios
+    // (work-stealing vs serial on the same machine) with a 25% tolerance
+    // — see .github/workflows/ci.yml and rust/benches/baseline/.
+    if let Ok(path) = std::env::var("QUIDAM_BENCH_JSON") {
+        use quidam::util::json::Json;
+        let serial = per_item("sweep/serial");
+        let fixed = per_item("sweep/fixed_chunk_4t");
+        let stealing = per_item("sweep/work_stealing_4t");
+        let j = Json::obj(vec![
+            ("bench", Json::Str("sweep".into())),
+            (
+                "quick",
+                Json::Bool(std::env::var("QUIDAM_BENCH_QUICK").is_ok()),
+            ),
+            ("points", Json::Num(work.len() as f64)),
+            (
+                "throughput_points_per_s",
+                Json::obj(vec![
+                    ("serial", Json::num_or_null(serial)),
+                    ("fixed_chunk_4t", Json::num_or_null(fixed)),
+                    ("work_stealing_4t", Json::num_or_null(stealing)),
+                ]),
+            ),
+            (
+                "normalized",
+                Json::obj(vec![
+                    (
+                        "work_stealing_per_serial",
+                        Json::num_or_null(stealing / serial.max(1e-12)),
+                    ),
+                    (
+                        "work_stealing_per_fixed",
+                        Json::num_or_null(stealing / fixed.max(1e-12)),
+                    ),
+                ]),
+            ),
+        ]);
+        std::fs::write(&path, format!("{j}\n"))
+            .expect("write QUIDAM_BENCH_JSON");
+        println!("wrote sweep throughput JSON to {path}");
+    }
+
     println!("\n{} benches complete", b.results().len());
 }

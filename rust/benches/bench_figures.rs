@@ -39,6 +39,9 @@ fn main() {
     b.run("table4/search_space", || figures::table4(&out));
     b.run("speedup/section4_1", || figures::speedup(&coord, &models, &out, 50));
 
-    println!("\nall {} paper artifacts regenerated + timed; CSVs in {}",
-             b.results().len(), out.display());
+    println!(
+        "\nall {} paper artifacts regenerated + timed; CSVs in {}",
+        b.results().len(),
+        out.display()
+    );
 }

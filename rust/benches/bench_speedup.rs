@@ -37,9 +37,11 @@ fn main() {
     b.run("fast/fitted_ppa_models", || {
         i = (i + 1) % cfgs.len();
         let c = &cfgs[i];
-        (models.network_latency_s(c, &net.layers),
-         models.power_mw(c),
-         models.area_um2(c))
+        (
+            models.network_latency_s(c, &net.layers),
+            models.power_mw(c),
+            models.area_um2(c),
+        )
     });
     b.run("slow/synthesis_plus_simulation", || {
         j = (j + 1) % cfgs.len();
@@ -49,12 +51,15 @@ fn main() {
         (sim.latency_s, syn.power_mw, syn.area_um2)
     });
 
-    let ratio = b.ratio("slow/synthesis_plus_simulation",
-                        "fast/fitted_ppa_models").unwrap();
+    let ratio = b
+        .ratio("slow/synthesis_plus_simulation", "fast/fitted_ppa_models")
+        .unwrap();
     let fast_ns = b.results()[0].median_ns;
     let dc_ns = 4.0 * 3600.0 * 1e9; // a 4h Synopsys DC run per design
-    println!("\nmodel query vs in-repo oracle: {ratio:.2}x \
-              (the oracle is itself our analytical substitute for DC+VCS)");
+    println!(
+        "\nmodel query vs in-repo oracle: {ratio:.2}x \
+         (the oracle is itself our analytical substitute for DC+VCS)"
+    );
     println!(
         "paper-equivalent (incl. 4h synthesis per design): {:.1e}x  \
          (model query {} vs {} + DC)",

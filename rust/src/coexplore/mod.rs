@@ -194,8 +194,8 @@ mod tests {
     #[test]
     fn explore_scores_all_pairs() {
         let m = models();
-        let pts = explore(&m, &SweepSpace::default(), Dataset::Cifar10,
-                          20, 2, 9, 4);
+        let pts =
+            explore(&m, &SweepSpace::default(), Dataset::Cifar10, 20, 2, 9, 4);
         assert_eq!(pts.len(), 40);
         for p in &pts {
             assert!(p.top1_err > 0.0 && p.top1_err < 100.0);
@@ -206,8 +206,8 @@ mod tests {
     #[test]
     fn normalization_references_are_unity() {
         let m = models();
-        let pts = explore(&m, &SweepSpace::default(), Dataset::Cifar10,
-                          30, 2, 11, 4);
+        let pts =
+            explore(&m, &SweepSpace::default(), Dataset::Cifar10, 30, 2, 11, 4);
         let norm = normalize(&pts).unwrap();
         let min_e = norm
             .iter()
@@ -221,8 +221,8 @@ mod tests {
     fn lightpes_on_pareto_front() {
         // Fig 12's observation: LightPEs populate the co-design front.
         let m = models();
-        let pts = explore(&m, &SweepSpace::default(), Dataset::Cifar10,
-                          60, 2, 13, 4);
+        let pts =
+            explore(&m, &SweepSpace::default(), Dataset::Cifar10, 60, 2, 13, 4);
         let norm = normalize(&pts).unwrap();
         let front = pareto(&norm, false);
         assert!(!front.is_empty());

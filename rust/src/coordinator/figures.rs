@@ -78,16 +78,22 @@ pub fn fig4(coord: &Coordinator, models: &PpaModels, out: &Path, n: usize) -> St
         }
         series.push((pe.name(), s));
     }
-    write_csv(&out.join("fig4_dse_scatter.csv"),
-              &["pe_type", "norm_energy", "norm_perf_per_area"], &rows).ok();
+    write_csv(
+        &out.join("fig4_dse_scatter.csv"),
+        &["pe_type", "norm_energy", "norm_perf_per_area"],
+        &rows,
+    )
+    .ok();
     // Spread claims — the paper's phrasing is *conditional*: energy varies
     // 35x "for almost the same performance per area region" and vice
     // versa, so measure spread within a +/-25% band of the median of the
     // other axis.
     let med_ppa = crate::util::stats::median(
-        &norm.iter().map(|p| p.norm_ppa).collect::<Vec<_>>());
+        &norm.iter().map(|p| p.norm_ppa).collect::<Vec<_>>(),
+    );
     let med_e = crate::util::stats::median(
-        &norm.iter().map(|p| p.norm_energy).collect::<Vec<_>>());
+        &norm.iter().map(|p| p.norm_energy).collect::<Vec<_>>(),
+    );
     let spread = |v: &[f64]| {
         v.iter().cloned().fold(f64::MIN, f64::max)
             / v.iter().cloned().fold(f64::MAX, f64::min).max(1e-30)
@@ -103,20 +109,40 @@ pub fn fig4(coord: &Coordinator, models: &PpaModels, out: &Path, n: usize) -> St
         .map(|p| p.norm_ppa)
         .collect();
     let mut s = render_scatter_loglog(
-        "Fig 4: norm perf/area vs norm energy", "norm energy",
-        "norm perf/area", &series, 72, 20);
+        "Fig 4: norm perf/area vs norm energy",
+        "norm energy",
+        "norm perf/area",
+        &series,
+        72,
+        20,
+    );
     s += &format!(
-        "at ~constant perf/area: energy varies {:.1}x (paper ~35x);          at ~constant energy: perf/area varies {:.1}x (paper ~5x)\n",
-        spread(&e_band), spread(&a_band));
+        "at ~constant perf/area: energy varies {:.1}x (paper ~35x); \
+         at ~constant energy: perf/area varies {:.1}x (paper ~5x)\n",
+        spread(&e_band),
+        spread(&a_band)
+    );
     s
 }
 
 /// Fig 5: MAPE/RMSPE vs polynomial degree (k-fold model selection).
 pub fn fig5(coord: &Coordinator, out: &Path, n_cfgs: usize) -> String {
     let layers = super::unique_layers(&[zoo::resnet_cifar(20, Dataset::Cifar10)]);
-    let d = characterize(&coord.space, PeType::Int16, &layers, n_cfgs,
-                         &coord.tech, 0xF15);
-    let base = FitOptions { max_degree: 0, max_vars: 3, ridge: 1e-8, log_target: false, log_features: false };
+    let d = characterize(
+        &coord.space,
+        PeType::Int16,
+        &layers,
+        n_cfgs,
+        &coord.tech,
+        0xF15,
+    );
+    let base = FitOptions {
+        max_degree: 0,
+        max_vars: 3,
+        ridge: 1e-8,
+        log_target: false,
+        log_features: false,
+    };
     let (scores, best) =
         match select_degree(&d.power_x, &d.power_y, base, 8, 5, 0xF15) {
             Ok(v) => v,
@@ -128,17 +154,28 @@ pub fn fig5(coord: &Coordinator, out: &Path, n_cfgs: usize) -> String {
         rows.push(vec![s.degree.to_string(), f3(s.mape), f3(s.rmspe)]);
         table.push(vec![s.degree.to_string(), f3(s.mape), f3(s.rmspe)]);
     }
-    write_csv(&out.join("fig5_degree_selection.csv"),
-              &["degree", "mape_pct", "rmspe_pct"], &rows).ok();
-    let mut s = render_table("Fig 5: power-model CV error vs degree",
-                             &["degree", "MAPE %", "RMSPE %"], &table);
+    write_csv(
+        &out.join("fig5_degree_selection.csv"),
+        &["degree", "mape_pct", "rmspe_pct"],
+        &rows,
+    )
+    .ok();
+    let mut s = render_table(
+        "Fig 5: power-model CV error vs degree",
+        &["degree", "MAPE %", "RMSPE %"],
+        &table,
+    );
     s += &format!("selected degree: {best} (paper selects 5)\n");
     s
 }
 
 /// Figs 6/7/8: predicted-vs-actual power / performance / area per PE type.
-pub fn fig678(coord: &Coordinator, models: &PpaModels, out: &Path,
-              n_eval: usize) -> String {
+pub fn fig678(
+    coord: &Coordinator,
+    models: &PpaModels,
+    out: &Path,
+    n_eval: usize,
+) -> String {
     let layers = super::unique_layers(&super::paper_workloads());
     let mut text = String::new();
     let mut rows6 = Vec::new();
@@ -147,8 +184,8 @@ pub fn fig678(coord: &Coordinator, models: &PpaModels, out: &Path,
     let mut table = Vec::new();
     for pe in PeType::ALL {
         // Fresh held-out configs (different seed than training).
-        let d = characterize(&coord.space, pe, &layers, n_eval,
-                             &coord.tech, 0xEA17);
+        let d =
+            characterize(&coord.space, pe, &layers, n_eval, &coord.tech, 0xEA17);
         let m = models.models(pe);
         let pow_pred: Vec<f64> =
             d.power_x.iter().map(|x| m.power.predict(x)).collect();
@@ -170,23 +207,46 @@ pub fn fig678(coord: &Coordinator, models: &PpaModels, out: &Path,
         }
         table.push(vec![
             pe.name().into(),
-            format!("{:.2} / {:.3}", mape(&d.power_y, &pow_pred),
-                    pearson_r(&d.power_y, &pow_pred)),
-            format!("{:.2} / {:.3}", mape(&perf_act, &perf_pred),
-                    pearson_r(&perf_act, &perf_pred)),
-            format!("{:.2} / {:.3}", mape(&d.area_y, &area_pred),
-                    pearson_r(&d.area_y, &area_pred)),
+            format!(
+                "{:.2} / {:.3}",
+                mape(&d.power_y, &pow_pred),
+                pearson_r(&d.power_y, &pow_pred)
+            ),
+            format!(
+                "{:.2} / {:.3}",
+                mape(&perf_act, &perf_pred),
+                pearson_r(&perf_act, &perf_pred)
+            ),
+            format!(
+                "{:.2} / {:.3}",
+                mape(&d.area_y, &area_pred),
+                pearson_r(&d.area_y, &area_pred)
+            ),
         ]);
     }
-    write_csv(&out.join("fig6_power_pred_vs_actual.csv"),
-              &["pe_type", "actual_mw", "predicted_mw"], &rows6).ok();
-    write_csv(&out.join("fig7_perf_pred_vs_actual.csv"),
-              &["pe_type", "actual_inv_s", "predicted_inv_s"], &rows7).ok();
-    write_csv(&out.join("fig8_area_pred_vs_actual.csv"),
-              &["pe_type", "actual_um2", "predicted_um2"], &rows8).ok();
+    write_csv(
+        &out.join("fig6_power_pred_vs_actual.csv"),
+        &["pe_type", "actual_mw", "predicted_mw"],
+        &rows6,
+    )
+    .ok();
+    write_csv(
+        &out.join("fig7_perf_pred_vs_actual.csv"),
+        &["pe_type", "actual_inv_s", "predicted_inv_s"],
+        &rows7,
+    )
+    .ok();
+    write_csv(
+        &out.join("fig8_area_pred_vs_actual.csv"),
+        &["pe_type", "actual_um2", "predicted_um2"],
+        &rows8,
+    )
+    .ok();
     text += &render_table(
         "Figs 6-8: held-out model accuracy (MAPE % / pearson r)",
-        &["pe", "power", "performance", "area"], &table);
+        &["pe", "power", "performance", "area"],
+        &table,
+    );
     text += "paper: power/area models correlate more tightly than latency (Fig 7) — \
              latency depends on both hw and DNN features.\n";
     text
@@ -241,19 +301,32 @@ pub fn fig9(coord: &Coordinator, models: &PpaModels, out: &Path, n: usize) -> St
             }
         }
     }
-    write_csv(&out.join("fig9_distributions.csv"),
-              &["workload", "pe_type", "norm_perf_per_area", "norm_energy"],
-              &rows).ok();
+    write_csv(
+        &out.join("fig9_distributions.csv"),
+        &["workload", "pe_type", "norm_perf_per_area", "norm_energy"],
+        &rows,
+    )
+    .ok();
     let mut s = skipped;
-    let groups = |m: &BTreeMap<PeType, StreamingFiveNum>| -> Vec<(String, crate::util::stats::FiveNum)> {
-        PeType::ALL.iter().copied().filter(|pe| m.contains_key(pe)).map(|pe| {
-            (pe.name().to_string(), m[&pe].summary())
-        }).collect()
+    type Groups = Vec<(String, crate::util::stats::FiveNum)>;
+    let groups = |m: &BTreeMap<PeType, StreamingFiveNum>| -> Groups {
+        PeType::ALL
+            .iter()
+            .copied()
+            .filter(|pe| m.contains_key(pe))
+            .map(|pe| (pe.name().to_string(), m[&pe].summary()))
+            .collect()
     };
-    s += &render_violin("Fig 9 (left): norm perf/area per PE type",
-                        &groups(&all_ppa), 60);
-    s += &render_violin("Fig 9 (right): norm energy per PE type",
-                        &groups(&all_energy), 60);
+    s += &render_violin(
+        "Fig 9 (left): norm perf/area per PE type",
+        &groups(&all_ppa),
+        60,
+    );
+    s += &render_violin(
+        "Fig 9 (right): norm energy per PE type",
+        &groups(&all_energy),
+        60,
+    );
     let avg = |m: &BTreeMap<PeType, Vec<f64>>, pe: PeType| mean(&m[&pe]);
     s += &format!(
         "avg best-config gains vs best INT16 —\n  \
@@ -350,28 +423,53 @@ pub fn fig10_11_table2(
             ]);
         }
     }
-    write_csv(&out.join("fig10_11_pareto_points.csv"),
-              &["model", "dataset", "pe_type", "selection",
-                "norm_perf_per_area", "norm_energy", "top1_acc"], &rows).ok();
-    write_csv(&out.join("table2_pareto_optimal.csv"),
-              &["model", "pe_type", "acc_c10", "acc_c100",
-                "energy_meas", "energy_paper", "ppa_meas", "ppa_paper"],
-              &table2).ok();
+    write_csv(
+        &out.join("fig10_11_pareto_points.csv"),
+        &[
+            "model", "dataset", "pe_type", "selection",
+            "norm_perf_per_area", "norm_energy", "top1_acc",
+        ],
+        &rows,
+    )
+    .ok();
+    write_csv(
+        &out.join("table2_pareto_optimal.csv"),
+        &[
+            "model", "pe_type", "acc_c10", "acc_c100", "energy_meas",
+            "energy_paper", "ppa_meas", "ppa_paper",
+        ],
+        &table2,
+    )
+    .ok();
     text += &render_table(
         "Table 2: Pareto-optimal results (accuracy from paper; hw measured vs paper)",
-        &["model", "pe", "C10 %", "C100 %", "E meas", "E paper",
-          "P/A meas", "P/A paper"],
-        &table2);
+        &[
+            "model", "pe", "C10 %", "C100 %", "E meas", "E paper",
+            "P/A meas", "P/A paper",
+        ],
+        &table2,
+    );
     text
 }
 
 /// Fig 12: co-exploration Pareto (1000 archs). Errs when the sampled
 /// space contains no INT16 pair to normalize against (`quidam coexplore
 /// --pe lightpe1,lightpe2` surfaces this instead of panicking).
-pub fn fig12(coord: &Coordinator, models: &PpaModels, out: &Path,
-             n_archs: usize) -> Result<String, String> {
-    let pts = coexplore::explore(models, &coord.space, Dataset::Cifar10,
-                                 n_archs, 2, 0xF12, coord.threads);
+pub fn fig12(
+    coord: &Coordinator,
+    models: &PpaModels,
+    out: &Path,
+    n_archs: usize,
+) -> Result<String, String> {
+    let pts = coexplore::explore(
+        models,
+        &coord.space,
+        Dataset::Cifar10,
+        n_archs,
+        2,
+        0xF12,
+        coord.threads,
+    );
     let norm = coexplore::normalize(&pts)?;
     let front_e = coexplore::pareto(&norm, false);
     let front_a = coexplore::pareto(&norm, true);
@@ -384,14 +482,25 @@ pub fn fig12(coord: &Coordinator, models: &PpaModels, out: &Path,
             (front_a.contains(&i) as u8).to_string(),
         ]);
     }
-    write_csv(&out.join("fig12_coexploration.csv"),
-              &["pe_type", "top1_err", "norm_energy", "norm_area",
-                "on_energy_front", "on_area_front"], &rows).ok();
+    write_csv(
+        &out.join("fig12_coexploration.csv"),
+        &[
+            "pe_type", "top1_err", "norm_energy", "norm_area",
+            "on_energy_front", "on_area_front",
+        ],
+        &rows,
+    )
+    .ok();
     let series: Vec<(&str, Vec<(f64, f64)>)> = PeType::ALL
         .iter()
         .map(|&pe| {
-            (pe.name(), norm.iter().filter(|p| p.pe == pe)
-                .map(|p| (p.norm_energy, p.top1_err)).collect())
+            (
+                pe.name(),
+                norm.iter()
+                    .filter(|p| p.pe == pe)
+                    .map(|p| (p.norm_energy, p.top1_err))
+                    .collect(),
+            )
         })
         .collect();
     let mut s = render_scatter_loglog(
@@ -405,7 +514,10 @@ pub fn fig12(coord: &Coordinator, models: &PpaModels, out: &Path,
     s += &format!(
         "{} pairs scored; energy-front size {}, {:.0}% LightPE (paper: \
          LightPEs consistently on the front)\n",
-        norm.len(), front_e.len(), 100.0 * light_frac);
+        norm.len(),
+        front_e.len(),
+        100.0 * light_frac
+    );
     Ok(s)
 }
 
@@ -420,12 +532,17 @@ pub fn table3(coord: &Coordinator, out: &Path) -> String {
             f1(scaled65),
         ]);
     }
-    write_csv(&out.join("table3_clock_frequencies.csv"),
-              &["pe_type", "fclk_meas_mhz", "fclk_paper_mhz",
-                "scaled_65nm_mhz"], &rows).ok();
+    write_csv(
+        &out.join("table3_clock_frequencies.csv"),
+        &["pe_type", "fclk_meas_mhz", "fclk_paper_mhz", "scaled_65nm_mhz"],
+        &rows,
+    )
+    .ok();
     let mut s = render_table(
         "Table 3: clock frequencies (45 nm) + 65 nm scaling",
-        &["pe", "measured MHz", "paper MHz", "@65nm MHz"], &rows);
+        &["pe", "measured MHz", "paper MHz", "@65nm MHz"],
+        &rows,
+    );
     s += "Eyeriss (65 nm) reports 200 MHz; paper's scaled INT16 = 197 MHz.\n";
     s
 }
@@ -440,18 +557,31 @@ pub fn table4(out: &Path) -> String {
             format!("{:?}", nas::CHANNELS[s]),
         ]);
     }
-    write_csv(&out.join("table4_search_space.csv"),
-              &["stage", "repetitions", "channels"], &rows).ok();
-    let mut s = render_table("Table 4: co-exploration search space",
-                             &["stage", "reps", "channels"], &rows);
-    s += &format!("total candidate architectures: {} (paper: 110,592)\n",
-                  nas::space_size());
+    write_csv(
+        &out.join("table4_search_space.csv"),
+        &["stage", "repetitions", "channels"],
+        &rows,
+    )
+    .ok();
+    let mut s = render_table(
+        "Table 4: co-exploration search space",
+        &["stage", "reps", "channels"],
+        &rows,
+    );
+    s += &format!(
+        "total candidate architectures: {} (paper: 110,592)\n",
+        nas::space_size()
+    );
     s
 }
 
 /// §4.1 speedup: fitted models vs synthesis+simulation, per query.
-pub fn speedup(coord: &Coordinator, models: &PpaModels, out: &Path,
-               n: usize) -> String {
+pub fn speedup(
+    coord: &Coordinator,
+    models: &PpaModels,
+    out: &Path,
+    n: usize,
+) -> String {
     let net = zoo::resnet_cifar(20, Dataset::Cifar10);
     let mut rng = Rng::new(0x5EED);
     let cfgs: Vec<AcceleratorConfig> =
@@ -482,9 +612,15 @@ pub fn speedup(coord: &Coordinator, models: &PpaModels, out: &Path,
         sci(fast), sci(slow), f1(slow / fast),
         sci((dc_seconds_per_design + slow) / fast),
     ]];
-    write_csv(&out.join("speedup_model_vs_groundtruth.csv"),
-              &["model_s_per_query", "sim_s_per_query", "ratio",
-                "ratio_incl_synthesis"], &rows).ok();
+    write_csv(
+        &out.join("speedup_model_vs_groundtruth.csv"),
+        &[
+            "model_s_per_query", "sim_s_per_query", "ratio",
+            "ratio_incl_synthesis",
+        ],
+        &rows,
+    )
+    .ok();
     format!(
         "§4.1 speedup: fitted-model query {:.2e}s; in-repo ground truth \
          (analytical synthesis oracle + simulator — itself our substitution \
@@ -498,8 +634,10 @@ pub fn speedup(coord: &Coordinator, models: &PpaModels, out: &Path,
 
 /// Latency-model feature sanity used by tests and docs.
 pub fn latency_feature_names() -> [&'static str; 15] {
-    ["sp_if", "sp_ps", "sp_fw", "pe_rows", "pe_cols", "gbs",
-     "A", "C", "F", "K", "S", "P", "RS", "DS", "MACS"]
+    [
+        "sp_if", "sp_ps", "sp_fw", "pe_rows", "pe_cols", "gbs", "A", "C",
+        "F", "K", "S", "P", "RS", "DS", "MACS",
+    ]
 }
 
 #[cfg(test)]
@@ -564,7 +702,9 @@ mod tests {
     fn feature_names_match_dimension() {
         let cfg = AcceleratorConfig::baseline(PeType::Int16);
         let l = &zoo::resnet_cifar(20, Dataset::Cifar10).layers[1];
-        assert_eq!(crate::ppa::latency_features(&cfg, l).len(),
-                   latency_feature_names().len());
+        assert_eq!(
+            crate::ppa::latency_features(&cfg, l).len(),
+            latency_feature_names().len()
+        );
     }
 }

@@ -54,6 +54,29 @@ impl DesignPoint {
             ("perf_per_area", Json::num_or_null(self.perf_per_area)),
         ])
     }
+
+    /// Inverse of [`DesignPoint::to_json`], for the distributed wire form.
+    /// Metrics serialized as `null` (non-finite) come back as NaN — the
+    /// reducers reject them on re-insertion exactly as they did locally.
+    pub fn from_json(j: &Json) -> Result<DesignPoint, String> {
+        let cfg = AcceleratorConfig::from_json(j)?;
+        let metric = |k: &str| -> Result<f64, String> {
+            match j.get(k) {
+                Json::Null => Ok(f64::NAN),
+                v => v
+                    .as_f64()
+                    .ok_or_else(|| format!("point: non-numeric '{k}'")),
+            }
+        };
+        Ok(DesignPoint {
+            cfg,
+            latency_s: metric("latency_s")?,
+            power_mw: metric("power_mw")?,
+            area_um2: metric("area_um2")?,
+            energy_j: metric("energy_j")?,
+            perf_per_area: metric("perf_per_area")?,
+        })
+    }
 }
 
 /// Assemble a design point from the three predicted metrics.
@@ -148,7 +171,11 @@ pub enum Objective {
 impl Objective {
     pub fn from_name(s: &str) -> Result<Objective, String> {
         match s {
-            "ppa" | "perf-per-area" => Ok(Objective::PerfPerArea),
+            // `perf_per_area` is what `name()` emits — accepting it keeps
+            // the wire form (`SweepSummary::to_json`) self-describing.
+            "ppa" | "perf-per-area" | "perf_per_area" => {
+                Ok(Objective::PerfPerArea)
+            }
             "energy" => Ok(Objective::Energy),
             "latency" => Ok(Objective::Latency),
             "power" => Ok(Objective::Power),
@@ -223,6 +250,109 @@ impl SweepSummary {
             count: 0,
             k_hint: top_k.max(1),
         }
+    }
+
+    /// Wire form for distributed sweeps (DESIGN.md §7): every reducer's
+    /// full state, so a coordinator can `merge` deserialized shard
+    /// summaries exactly as the engine merges per-worker ones. All f64
+    /// rendering round-trips exactly, so a sweep sharded over the wire
+    /// reconstructs the byte-identical Pareto front.
+    pub fn to_json(&self) -> Json {
+        let topk_map = |m: &BTreeMap<PeType, TopK<DesignPoint>>| -> Json {
+            Json::Obj(
+                m.iter()
+                    .map(|(pe, t)| {
+                        (
+                            pe.name().to_string(),
+                            t.to_json_with(DesignPoint::to_json),
+                        )
+                    })
+                    .collect(),
+            )
+        };
+        let stats_map =
+            |m: &BTreeMap<PeType, StreamingFiveNum>| -> Json {
+                Json::Obj(
+                    m.iter()
+                        .map(|(pe, s)| (pe.name().to_string(), s.to_json()))
+                        .collect(),
+                )
+            };
+        Json::obj(vec![
+            ("objective", Json::Str(self.objective.name().into())),
+            ("top_k", Json::Num(self.k_hint as f64)),
+            ("count", Json::Num(self.count as f64)),
+            ("front", self.front.to_json_with(|cfg| cfg.to_json())),
+            ("top", topk_map(&self.top)),
+            ("top_energy", topk_map(&self.top_energy)),
+            ("obj_stats", stats_map(&self.obj_stats)),
+            ("energy_stats", stats_map(&self.energy_stats)),
+            (
+                "best_int16",
+                self.best_int16
+                    .as_ref()
+                    .map(DesignPoint::to_json)
+                    .unwrap_or(Json::Null),
+            ),
+        ])
+    }
+
+    /// Rebuild a summary from [`SweepSummary::to_json`] output.
+    pub fn from_json(j: &Json) -> Result<SweepSummary, String> {
+        let objective = Objective::from_name(
+            j.get("objective")
+                .as_str()
+                .ok_or("summary: missing 'objective'")?,
+        )?;
+        let top_k = j
+            .get("top_k")
+            .as_usize()
+            .ok_or("summary: missing 'top_k'")?;
+        type TopMap = BTreeMap<PeType, TopK<DesignPoint>>;
+        let topk_map = |j: &Json| -> Result<TopMap, String> {
+            let mut out = BTreeMap::new();
+            for (name, v) in
+                j.as_obj().ok_or("summary: top map is not an object")?
+            {
+                out.insert(
+                    PeType::from_name(name)?,
+                    TopK::from_json_with(v, DesignPoint::from_json)?,
+                );
+            }
+            Ok(out)
+        };
+        type StatsMap = BTreeMap<PeType, StreamingFiveNum>;
+        let stats_map = |j: &Json| -> Result<StatsMap, String> {
+            let mut out = BTreeMap::new();
+            for (name, v) in
+                j.as_obj().ok_or("summary: stats map is not an object")?
+            {
+                out.insert(
+                    PeType::from_name(name)?,
+                    StreamingFiveNum::from_json(v)?,
+                );
+            }
+            Ok(out)
+        };
+        let mut out = SweepSummary::new(objective, top_k);
+        out.count = j
+            .get("count")
+            .as_usize()
+            .ok_or("summary: missing 'count'")?;
+        out.front = ParetoFront2D::from_json_with(
+            YSense::Maximize,
+            j.get("front"),
+            AcceleratorConfig::from_json,
+        )?;
+        out.top = topk_map(j.get("top"))?;
+        out.top_energy = topk_map(j.get("top_energy"))?;
+        out.obj_stats = stats_map(j.get("obj_stats"))?;
+        out.energy_stats = stats_map(j.get("energy_stats"))?;
+        out.best_int16 = match j.get("best_int16") {
+            Json::Null => None,
+            v => Some(DesignPoint::from_json(v)?),
+        };
+        Ok(out)
     }
 
     pub fn observe(&mut self, p: &DesignPoint) {
@@ -384,6 +514,44 @@ where
         || SweepSummary::new(objective, top_k),
         |i, summary| {
             let p = eval(&space.point(i));
+            summary.observe(&p);
+            row(&p)
+        },
+        sink,
+        ctl,
+    )
+}
+
+/// Shard-scoped [`stream_space_eval`]: evaluate only the grid indices in
+/// `range` (a contiguous shard from [`sweep::shard_ranges`]) on the
+/// work-stealing scheduler. `ctl.done()` counts *shard-local* progress.
+/// Because `SweepSummary` merging is order-invariant, the merge of every
+/// shard's summary equals the single-process summary of the whole grid —
+/// the distributed layer's correctness contract (DESIGN.md §7).
+#[allow(clippy::too_many_arguments)]
+pub fn stream_shard_eval<E, F, W>(
+    space: &SweepSpace,
+    range: std::ops::Range<usize>,
+    threads: usize,
+    objective: Objective,
+    top_k: usize,
+    eval: E,
+    row: F,
+    sink: W,
+    ctl: &SweepCtl,
+) -> SweepSummary
+where
+    E: Fn(&AcceleratorConfig) -> DesignPoint + Sync,
+    F: Fn(&DesignPoint) -> Option<String> + Sync,
+    W: FnMut(String),
+{
+    let start = range.start;
+    sweep::map_reduce_stream_ctl(
+        range.len(),
+        threads,
+        || SweepSummary::new(objective, top_k),
+        |i, summary| {
+            let p = eval(&space.point(start + i));
             summary.observe(&p);
             row(&p)
         },
@@ -721,6 +889,112 @@ mod tests {
         let j = crate::util::json::Json::parse(&p.to_json().to_string())
             .unwrap();
         assert_eq!(j.get("perf_per_area"), &crate::util::json::Json::Null);
+    }
+
+    #[test]
+    fn sharded_stream_merge_matches_single_process_byte_for_byte() {
+        let m = models();
+        let layers = &zoo::resnet_cifar(20, Dataset::Cifar10).layers;
+        let space = small_space();
+        let n = space.len();
+        let single = stream_space(
+            &m,
+            &space,
+            layers,
+            2,
+            Objective::PerfPerArea,
+            3,
+            |_p| None,
+            |_row| {},
+        );
+        for shards in [2usize, 3, 5] {
+            let mut merged: Option<SweepSummary> = None;
+            for range in crate::sweep::shard_ranges(n, shards) {
+                let part = stream_shard_eval(
+                    &space,
+                    range,
+                    2,
+                    Objective::PerfPerArea,
+                    3,
+                    |cfg| evaluate(&m, cfg, layers),
+                    |_p| None,
+                    |_row| {},
+                    &SweepCtl::new(),
+                );
+                match &mut merged {
+                    Some(s) => s.merge(part),
+                    None => merged = Some(part),
+                }
+            }
+            let merged = merged.unwrap();
+            assert_eq!(merged.count, single.count, "shards={shards}");
+            // The distributed contract: the merged front serializes to
+            // exactly the bytes of the single-process front.
+            assert_eq!(
+                merged.front.to_json_with(|c| c.to_json()).to_string(),
+                single.front.to_json_with(|c| c.to_json()).to_string(),
+                "shards={shards}"
+            );
+            assert_eq!(
+                merged.best_int16.unwrap().cfg,
+                single.best_int16.unwrap().cfg
+            );
+        }
+    }
+
+    #[test]
+    fn summary_json_roundtrip_is_byte_identical() {
+        let m = models();
+        let layers = &zoo::resnet_cifar(20, Dataset::Cifar10).layers;
+        let s = stream_space(
+            &m,
+            &small_space(),
+            layers,
+            2,
+            Objective::Energy,
+            2,
+            |_p| None,
+            |_row| {},
+        );
+        let wire = s.to_json().to_string();
+        let back = SweepSummary::from_json(&Json::parse(&wire).unwrap())
+            .unwrap();
+        assert_eq!(back.count, s.count);
+        assert_eq!(back.objective, s.objective);
+        assert_eq!(back.to_json().to_string(), wire);
+        // A deserialized summary merges like a local one: merging an
+        // empty summary into it is identity on the front.
+        let mut merged = SweepSummary::from_json(
+            &Json::parse(&wire).unwrap(),
+        )
+        .unwrap();
+        merged.merge(SweepSummary::new(Objective::Energy, 2));
+        assert_eq!(
+            merged.front.to_json_with(|c| c.to_json()).to_string(),
+            s.front.to_json_with(|c| c.to_json()).to_string()
+        );
+        // Malformed wire forms are errors, not panics.
+        assert!(SweepSummary::from_json(&Json::parse("{}").unwrap())
+            .is_err());
+    }
+
+    #[test]
+    fn design_point_json_roundtrip() {
+        let m = models();
+        let layers = &zoo::resnet_cifar(20, Dataset::Cifar10).layers;
+        let cfg = crate::config::AcceleratorConfig::baseline(PeType::Fp32);
+        let p = evaluate(&m, &cfg, layers);
+        let back =
+            DesignPoint::from_json(&p.to_json()).expect("roundtrip");
+        assert_eq!(back.cfg, p.cfg);
+        assert_eq!(back.latency_s, p.latency_s);
+        assert_eq!(back.energy_j, p.energy_j);
+        // null metrics come back as NaN, not errors.
+        let mut q = p;
+        q.power_mw = f64::NAN;
+        let back = DesignPoint::from_json(&q.to_json()).unwrap();
+        assert!(back.power_mw.is_nan());
+        assert!(DesignPoint::from_json(&Json::Null).is_err());
     }
 
     #[test]

@@ -9,6 +9,9 @@
 //!                       [--objective ppa|energy|latency|power]
 //!                       [--points-out FILE] [--format csv|jsonl] (streaming
 //!                       work-stealing sweep; full flag list in README.md)
+//!   quidam coordinate   --workers HOST:PORT,... [--shards N] (shard a grid
+//!                       sweep across remote quidam serve workers and merge
+//!                       the partial fronts; DESIGN.md §7)
 //!   quidam serve        [--addr HOST:PORT] [--http-threads N] [--threads N]
 //!                       [--cache-mib M] [--port-file FILE] (persistent PPA
 //!                       query + exploration service; DESIGN.md §6)
@@ -30,6 +33,7 @@ use quidam::models::{zoo, Dataset};
 use quidam::pe::PeType;
 use quidam::report::render_table;
 use quidam::rtl::verilog;
+use quidam::sweep::Reducer as _;
 use quidam::trainer::{data::SynthDataset, Trainer};
 use quidam::util::cli::Args;
 
@@ -69,17 +73,15 @@ fn parse_pe_list(pes: &str) -> anyhow::Result<Vec<PeType>> {
         .map_err(anyhow::Error::msg)
 }
 
-/// `quidam explore` — stream a (possibly million-point) sweep through the
-/// work-stealing scheduler and the online reducers. Peak memory is bounded
-/// by the reducers (Pareto front + top-K + five-number summaries), never
-/// by the size of the grid; per-point output streams to `--points-out`
-/// through a bounded channel.
-fn run_explore(coord: &Coordinator, args: &Args, out: &std::path::Path) -> anyhow::Result<()> {
-    // --- Sweep space: default grid, --dense scale grid, per-axis overrides.
+/// Build a sweep space from CLI flags: default (or `--dense`) grid,
+/// per-axis overrides, `--pe` restriction — shared by `quidam explore`
+/// and `quidam coordinate`, which must agree on the grid exactly for
+/// their fronts to be comparable.
+fn space_from_args(args: &Args, base: &SweepSpace) -> anyhow::Result<SweepSpace> {
     let mut space = if args.flag("dense") {
         SweepSpace::dense()
     } else {
-        coord.space.clone()
+        base.clone()
     };
     for axis in ["rows", "cols", "sp-if", "sp-fw", "sp-ps", "gb", "dram-bw"] {
         if let Some(v) = args.get(axis) {
@@ -93,6 +95,53 @@ fn run_explore(coord: &Coordinator, args: &Args, out: &std::path::Path) -> anyho
     // Reject grids that leave AcceleratorConfig::validate's legal ranges
     // before spending any sweep time on them.
     space.validate().map_err(anyhow::Error::msg)?;
+    Ok(space)
+}
+
+/// Render the per-PE top-K table shared by `quidam explore` and
+/// `quidam coordinate` (one renderer, so the two reports cannot
+/// silently diverge).
+fn print_topk_table(summary: &dse::SweepSummary, title_suffix: &str, top_k: usize) {
+    let objective = summary.objective;
+    let mut rows = Vec::new();
+    for (pe, top) in &summary.top {
+        for (rank, (_score, p)) in top.sorted().into_iter().enumerate() {
+            let c = p.cfg;
+            rows.push(vec![
+                pe.name().into(),
+                (rank + 1).to_string(),
+                format!("{:.3e}", objective.value(p)),
+                format!("{:.3e}", p.energy_j),
+                format!(
+                    "{}x{} sp {}/{}/{} gb {} bw {}",
+                    c.rows,
+                    c.cols,
+                    c.sp_if,
+                    c.sp_fw,
+                    c.sp_ps,
+                    c.gb_kib,
+                    c.dram_bw
+                ),
+            ]);
+        }
+    }
+    println!("{}", render_table(
+        &format!(
+            "top-{top_k} per PE type by {}{title_suffix}",
+            objective.name()
+        ),
+        &["pe", "#", objective.name(), "energy J", "config"],
+        &rows,
+    ));
+}
+
+/// `quidam explore` — stream a (possibly million-point) sweep through the
+/// work-stealing scheduler and the online reducers. Peak memory is bounded
+/// by the reducers (Pareto front + top-K + five-number summaries), never
+/// by the size of the grid; per-point output streams to `--points-out`
+/// through a bounded channel.
+fn run_explore(coord: &Coordinator, args: &Args, out: &std::path::Path) -> anyhow::Result<()> {
+    let space = space_from_args(args, &coord.space)?;
 
     let threads = num(args, "threads", coord.threads)?;
     let top_k = num(args, "top-k", 5)?;
@@ -156,7 +205,9 @@ fn run_explore(coord: &Coordinator, args: &Args, out: &std::path::Path) -> anyho
     println!(
         "exploring {n} points ({} PE types, workload {}) on {threads} \
          threads, objective {}",
-        space.pe_types.len(), net.name, objective.name(),
+        space.pe_types.len(),
+        net.name,
+        objective.name(),
     );
     let t0 = Instant::now();
     let mut write_err: Option<std::io::Error> = None;
@@ -179,8 +230,11 @@ fn run_explore(coord: &Coordinator, args: &Args, out: &std::path::Path) -> anyho
     }
     if let Some(mut w) = writer.take() {
         w.flush()?;
-        println!("streamed {} per-point rows to {}", summary.count,
-                 args.get_or("points-out", "?"));
+        println!(
+            "streamed {} per-point rows to {}",
+            summary.count,
+            args.get_or("points-out", "?")
+        );
     }
     println!(
         "{} points in {dt:.2}s — {:.0} points/s",
@@ -191,53 +245,14 @@ fn run_explore(coord: &Coordinator, args: &Args, out: &std::path::Path) -> anyho
     // --- Report: Pareto front, per-PE top-K, per-PE distributions.
     std::fs::create_dir_all(out).ok();
     let front_path = out.join("explore_front.csv");
-    let front_rows: Vec<Vec<String>> = summary
-        .front
-        .points()
-        .iter()
-        .map(|(e, ppa, cfg)| {
-            vec![
-                cfg.pe_type.name().to_string(),
-                cfg.rows.to_string(), cfg.cols.to_string(),
-                cfg.sp_if.to_string(), cfg.sp_fw.to_string(),
-                cfg.sp_ps.to_string(), cfg.gb_kib.to_string(),
-                cfg.dram_bw.to_string(),
-                format!("{e:e}"), format!("{ppa:e}"),
-            ]
-        })
-        .collect();
-    quidam::report::write_csv(
-        &front_path,
-        &["pe_type", "rows", "cols", "sp_if", "sp_fw", "sp_ps", "gb_kib",
-          "dram_bw", "energy_j", "perf_per_area"],
-        &front_rows,
-    )?;
+    quidam::report::write_front_csv(&front_path, &summary.front)?;
     println!(
         "energy/perf-per-area Pareto front: {} points -> {}",
         summary.front.len(),
         front_path.display(),
     );
 
-    let mut rows = Vec::new();
-    for (pe, top) in &summary.top {
-        for (rank, (_score, p)) in top.sorted().into_iter().enumerate() {
-            let c = p.cfg;
-            rows.push(vec![
-                pe.name().into(),
-                (rank + 1).to_string(),
-                format!("{:.3e}", objective.value(p)),
-                format!("{:.3e}", p.energy_j),
-                format!("{}x{} sp {}/{}/{} gb {} bw {}",
-                        c.rows, c.cols, c.sp_if, c.sp_fw, c.sp_ps,
-                        c.gb_kib, c.dram_bw),
-            ]);
-        }
-    }
-    println!("{}", render_table(
-        &format!("top-{top_k} per PE type by {}", objective.name()),
-        &["pe", "#", objective.name(), "energy J", "config"],
-        &rows,
-    ));
+    print_topk_table(&summary, "", top_k);
 
     let mut dist = Vec::new();
     for (pe, s) in &summary.obj_stats {
@@ -250,8 +265,10 @@ fn run_explore(coord: &Coordinator, args: &Args, out: &std::path::Path) -> anyho
         ]);
     }
     println!("{}", render_table(
-        &format!("{} distribution per PE type (streaming five-number)",
-                 objective.name()),
+        &format!(
+            "{} distribution per PE type (streaming five-number)",
+            objective.name()
+        ),
         &["pe", "min", "q1", "median", "q3", "max"],
         &dist,
     ));
@@ -276,6 +293,108 @@ fn run_explore(coord: &Coordinator, args: &Args, out: &std::path::Path) -> anyho
             "(no INT16 point in this sweep — normalized columns omitted)"
         ),
     }
+    Ok(())
+}
+
+/// `quidam coordinate` — shard a grid sweep across remote `quidam serve`
+/// workers and merge their partial summaries (DESIGN.md §7). Pure
+/// orchestration: no models are loaded or fitted here — the workers
+/// evaluate, the coordinator partitions, streams progress, retries
+/// failed shards, and merges. The merged front lands in
+/// `coordinate_front.csv`, byte-identical to the `explore_front.csv` a
+/// single-process `quidam explore` of the same grid writes.
+fn run_coordinate(
+    coord: &Coordinator,
+    args: &Args,
+    out: &std::path::Path,
+) -> anyhow::Result<()> {
+    let workers: Vec<String> = args.parse_list("workers").ok_or_else(|| {
+        anyhow::anyhow!("--workers host:port[,host:port...] is required")
+    })?;
+    if workers.is_empty() {
+        anyhow::bail!("--workers: empty worker list");
+    }
+    let space = space_from_args(args, &coord.space)?;
+    let objective = dse::Objective::from_name(&args.get_or("objective", "ppa"))
+        .map_err(anyhow::Error::msg)?;
+    let top_k = num(args, "top-k", 5)?;
+    let workload = args.get_or("net", "resnet20");
+    if !matches!(workload.as_str(), "resnet20" | "resnet56" | "vgg16") {
+        anyhow::bail!(
+            "unknown --net '{workload}' (want resnet20|resnet56|vgg16)"
+        );
+    }
+    let threads = num(args, "threads", coord.threads)?;
+    // Workers reject shards above their synchronous bound; assume the
+    // default bound and raise the shard count so each shard fits.
+    let min_shards = space
+        .len()
+        .div_ceil(quidam::server::ServeOptions::default().max_sync_points)
+        .max(1);
+    let shards = num(args, "shards", 4 * workers.len())?
+        .max(min_shards)
+        .min(space.len().max(1));
+    // Probe every worker up front: a typo'd address should fail now, not
+    // as a re-dispatch storm mid-sweep.
+    for w in &workers {
+        quidam::server::distrib::probe_worker(w)
+            .map_err(anyhow::Error::msg)?;
+    }
+    let n = space.len();
+    println!(
+        "coordinating {n} points across {} workers in {shards} shards \
+         (workload {workload}, objective {}, {threads} worker threads \
+         per shard)",
+        workers.len(),
+        objective.name(),
+    );
+    let ctl = quidam::sweep::SweepCtl::new();
+    let merged: std::sync::Mutex<Option<dse::SweepSummary>> =
+        std::sync::Mutex::new(None);
+    let t0 = Instant::now();
+    let spec = quidam::server::distrib::DistSweep {
+        workload,
+        space,
+        objective,
+        top_k,
+        threads,
+    };
+    let outcome = quidam::server::distrib::run_distributed(
+        &workers,
+        &spec,
+        shards,
+        &ctl,
+        |part| {
+            let mut m = merged.lock().unwrap();
+            match &mut *m {
+                Some(s) => s.merge(part),
+                None => *m = Some(part),
+            }
+        },
+    )
+    .map_err(anyhow::Error::msg)?;
+    let dt = t0.elapsed().as_secs_f64();
+    let summary = merged
+        .into_inner()
+        .unwrap()
+        .ok_or_else(|| anyhow::anyhow!("no shards completed"))?;
+    println!(
+        "{} points in {dt:.2}s — {:.0} points/s over {} shards \
+         ({} re-dispatched)",
+        summary.count,
+        summary.count as f64 / dt.max(1e-9),
+        outcome.shards_done,
+        outcome.redispatches,
+    );
+    std::fs::create_dir_all(out).ok();
+    let front_path = out.join("coordinate_front.csv");
+    quidam::report::write_front_csv(&front_path, &summary.front)?;
+    println!(
+        "merged energy/perf-per-area Pareto front: {} points -> {}",
+        summary.front.len(),
+        front_path.display(),
+    );
+    print_topk_table(&summary, " (merged)", top_k);
     Ok(())
 }
 
@@ -330,6 +449,7 @@ fn run(sub: &str, args: &Args) -> anyhow::Result<()> {
             ));
         }
         "explore" => run_explore(&coord, args, &out)?,
+        "coordinate" => run_coordinate(&coord, args, &out)?,
         "serve" => {
             let addr = args.get_or("addr", "127.0.0.1:8787");
             let http_threads = args
@@ -382,13 +502,19 @@ fn run(sub: &str, args: &Args) -> anyhow::Result<()> {
         "fig4" => print!("{}", figures::fig4(&coord, &models_for(&coord, args)?, &out, samples)),
         "fig5" => print!("{}", figures::fig5(&coord, &out, num(args, "fig5-cfgs", 600)?)),
         "fig678" => print!("{}", figures::fig678(&coord, &models_for(&coord, args)?, &out, 60)),
-        "fig9" => print!("{}", figures::fig9(&coord, &models_for(&coord, args)?, &out, samples / 2)),
-        "fig10" | "fig11" | "table2" => print!("{}",
-            figures::fig10_11_table2(&coord, &models_for(&coord, args)?, &out, samples)),
-        "fig12" | "coexplore" => print!("{}",
-            figures::fig12(&coord, &models_for(&coord, args)?, &out,
-                           num(args, "archs", 1000)?)
-                .map_err(anyhow::Error::msg)?),
+        "fig9" => print!(
+            "{}",
+            figures::fig9(&coord, &models_for(&coord, args)?, &out, samples / 2)
+        ),
+        "fig10" | "fig11" | "table2" => print!(
+            "{}",
+            figures::fig10_11_table2(&coord, &models_for(&coord, args)?, &out, samples)
+        ),
+        "fig12" | "coexplore" => print!(
+            "{}",
+            figures::fig12(&coord, &models_for(&coord, args)?, &out, num(args, "archs", 1000)?)
+                .map_err(anyhow::Error::msg)?
+        ),
         "table3" => print!("{}", figures::table3(&coord, &out)),
         "table4" => print!("{}", figures::table4(&out)),
         "speedup" => print!("{}",
@@ -426,32 +552,51 @@ fn run(sub: &str, args: &Args) -> anyhow::Result<()> {
                 let mut tr = Trainer::new(&rt, pe, 42)?;
                 let logs = tr.train(&mut rt, &train_ds, steps, 0.05, 9, |l| {
                     if l.step % 25 == 0 {
-                        println!("  [{}] step {:4}  loss {:.4}  lr {:.4}",
-                                 pe, l.step, l.loss, l.lr);
+                        println!(
+                            "  [{}] step {:4}  loss {:.4}  lr {:.4}",
+                            pe,
+                            l.step,
+                            l.loss,
+                            l.lr
+                        );
                     }
                 })?;
                 let acc = tr.evaluate(&mut rt, &test_ds)?;
-                println!("{}: final loss {:.4}, synth-CIFAR top-1 {:.2}%",
-                         pe, logs.last().unwrap().loss, acc);
-                rows.push(vec![pe.name().into(),
-                               format!("{:.4}", logs.last().unwrap().loss),
-                               format!("{acc:.2}")]);
+                println!(
+                    "{}: final loss {:.4}, synth-CIFAR top-1 {:.2}%",
+                    pe,
+                    logs.last().unwrap().loss,
+                    acc
+                );
+                rows.push(vec![
+                    pe.name().into(),
+                    format!("{:.4}", logs.last().unwrap().loss),
+                    format!("{acc:.2}"),
+                ]);
             }
             if rows.len() > 1 {
-                println!("{}", render_table("QAT on synth-CIFAR (PJRT)",
-                    &["pe", "final loss", "top-1 %"], &rows));
+                println!(
+                    "{}",
+                    render_table(
+                        "QAT on synth-CIFAR (PJRT)",
+                        &["pe", "final loss", "top-1 %"],
+                        &rows
+                    )
+                );
             }
         }
         _ => {
             println!(
                 "QUIDAM — quantization-aware DNN accelerator + model co-exploration\n\
-                 usage: quidam <characterize|evaluate|explore|serve|figures|fig4|fig5|fig678|fig9|\n\
-                 fig10|fig12|table3|table4|speedup|coexplore|rtl|train|eval-trained>\n\
+                 usage: quidam <characterize|evaluate|explore|coordinate|serve|figures|fig4|fig5|\n\
+                 fig678|fig9|fig10|fig12|table3|table4|speedup|coexplore|rtl|train|eval-trained>\n\
                  common flags: --models PATH --cfgs N --degree D --samples N --out DIR\n\
                  explore flags: --dense --threads N --top-k K --objective ppa|energy|latency|power\n\
                  \x20               --net resnet20|resnet56|vgg16 --points-out FILE --format csv|jsonl\n\
                  \x20               --rows/--cols/--sp-if/--sp-fw/--sp-ps/--gb/--dram-bw LIST|LO:HI:STEP\n\
                  \x20               --pe fp32,int16,lightpe2,lightpe1\n\
+                 coordinate flags: --workers HOST:PORT,... --shards N (+ the explore grid flags;\n\
+                 \x20               shards a sweep across remote quidam serve workers, DESIGN.md §7)\n\
                  serve flags:   --addr HOST:PORT --http-threads N --threads N --cache-mib M\n\
                  \x20               --port-file FILE (endpoint table: DESIGN.md §6)\n\
                  full CLI reference: README.md; design notes: DESIGN.md"

@@ -30,11 +30,23 @@ pub struct ConvLayer {
 }
 
 impl ConvLayer {
-    pub fn new(name: &str, a: usize, c: usize, f: usize, k: usize, s: usize,
-               p: usize) -> ConvLayer {
+    pub fn new(
+        name: &str,
+        a: usize,
+        c: usize,
+        f: usize,
+        k: usize,
+        s: usize,
+        p: usize,
+    ) -> ConvLayer {
         ConvLayer {
             name: name.to_string(),
-            a, c, f, k, s, p,
+            a,
+            c,
+            f,
+            k,
+            s,
+            p,
             rs: false,
             ds: false,
         }

@@ -174,8 +174,20 @@ pub fn default_fit_options(degree: u32) -> (FitOptions, FitOptions) {
     // sums of feature powers, and log-target guarantees positive
     // predictions even when the DSE samples outside the characterized
     // hull (linear-space extrapolation produced negative power).
-    let ppa = FitOptions { max_degree: degree, max_vars: 3, ridge: 1e-8, log_target: true, log_features: true };
-    let lat = FitOptions { max_degree: degree, max_vars: 2, ridge: 1e-8, log_target: true, log_features: true };
+    let ppa = FitOptions {
+        max_degree: degree,
+        max_vars: 3,
+        ridge: 1e-8,
+        log_target: true,
+        log_features: true,
+    };
+    let lat = FitOptions {
+        max_degree: degree,
+        max_vars: 2,
+        ridge: 1e-8,
+        log_target: true,
+        log_features: true,
+    };
     (ppa, lat)
 }
 

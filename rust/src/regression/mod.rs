@@ -294,7 +294,13 @@ mod tests {
     #[test]
     fn underfit_has_higher_cv_error_than_right_degree() {
         let (xs, ys) = cubic_data(400, 0.5, 3);
-        let base = FitOptions { max_vars: 2, log_target: false, ridge: 1e-8, max_degree: 0, log_features: false };
+        let base = FitOptions {
+            max_vars: 2,
+            log_target: false,
+            ridge: 1e-8,
+            max_degree: 0,
+            log_features: false,
+        };
         let s1 = kfold_cv(&xs, &ys, FitOptions { max_degree: 1, ..base }, 5, 7)
             .unwrap();
         let s3 = kfold_cv(&xs, &ys, FitOptions { max_degree: 3, ..base }, 5, 7)
@@ -305,7 +311,13 @@ mod tests {
     #[test]
     fn select_degree_finds_generating_degree() {
         let (xs, ys) = cubic_data(400, 0.5, 4);
-        let base = FitOptions { max_vars: 2, log_target: false, ridge: 1e-8, max_degree: 0, log_features: false };
+        let base = FitOptions {
+            max_vars: 2,
+            log_target: false,
+            ridge: 1e-8,
+            max_degree: 0,
+            log_features: false,
+        };
         let (scores, best) = select_degree(&xs, &ys, base, 6, 5, 11).unwrap();
         assert_eq!(scores.len(), 6);
         assert!((3..=5).contains(&best), "picked degree {best}");
@@ -357,7 +369,13 @@ mod tests {
     #[test]
     fn cv_deterministic_per_seed() {
         let (xs, ys) = cubic_data(120, 0.3, 5);
-        let opt = FitOptions { max_degree: 2, max_vars: 2, ridge: 1e-8, log_target: false, log_features: false };
+        let opt = FitOptions {
+            max_degree: 2,
+            max_vars: 2,
+            ridge: 1e-8,
+            log_target: false,
+            log_features: false,
+        };
         let a = kfold_cv(&xs, &ys, opt, 4, 42).unwrap();
         let b = kfold_cv(&xs, &ys, opt, 4, 42).unwrap();
         assert_eq!(a.mape, b.mape);

@@ -6,6 +6,9 @@ use std::fmt::Write as _;
 use std::io::Write as _;
 use std::path::Path;
 
+use crate::config::AcceleratorConfig;
+use crate::sweep::reducers::ParetoFront2D;
+
 /// RFC-4180 cell escaping: a cell containing a comma, double quote, CR or
 /// LF is wrapped in quotes with embedded quotes doubled; everything else
 /// passes through untouched (so plain numeric output stays byte-stable).
@@ -47,6 +50,48 @@ pub fn write_csv(
         writeln!(f, "{}", csv_line(r.iter().map(|c| csv_escape(c))))?;
     }
     Ok(())
+}
+
+/// Column order of the energy/perf-per-area Pareto-front CSV.
+pub const FRONT_CSV_HEADER: [&str; 10] = [
+    "pe_type", "rows", "cols", "sp_if", "sp_fw", "sp_ps", "gb_kib",
+    "dram_bw", "energy_j", "perf_per_area",
+];
+
+/// Render a running energy/perf-per-area front as CSV rows in ascending
+/// energy order. One renderer shared by `quidam explore` and `quidam
+/// coordinate`, so a distributed run's merged-front file is
+/// byte-comparable against the single-process one (the CI distributed
+/// smoke job diffs the two with `cmp`).
+pub fn front_csv_rows(
+    front: &ParetoFront2D<AcceleratorConfig>,
+) -> Vec<Vec<String>> {
+    front
+        .points()
+        .iter()
+        .map(|(e, ppa, cfg)| {
+            vec![
+                cfg.pe_type.name().to_string(),
+                cfg.rows.to_string(),
+                cfg.cols.to_string(),
+                cfg.sp_if.to_string(),
+                cfg.sp_fw.to_string(),
+                cfg.sp_ps.to_string(),
+                cfg.gb_kib.to_string(),
+                cfg.dram_bw.to_string(),
+                format!("{e:e}"),
+                format!("{ppa:e}"),
+            ]
+        })
+        .collect()
+}
+
+/// Write a front via [`front_csv_rows`] under [`FRONT_CSV_HEADER`].
+pub fn write_front_csv(
+    path: &Path,
+    front: &ParetoFront2D<AcceleratorConfig>,
+) -> std::io::Result<()> {
+    write_csv(path, &FRONT_CSV_HEADER, &front_csv_rows(front))
 }
 
 /// Emit one NDJSON record: a compact single-line JSON object terminated by
@@ -277,6 +322,43 @@ mod tests {
             lines.next(),
             Some("\"int16,fp32\",\"he said \"\"go\"\"\"")
         );
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn front_csv_output_is_deterministic_and_merge_invariant() {
+        use crate::pe::PeType;
+        use crate::sweep::reducers::YSense;
+        use crate::sweep::Reducer as _;
+        let pts = [(3.0, 5.0), (1.0, 1.0), (2.0, 4.0), (0.5, 0.25)];
+        let mut single = ParetoFront2D::new(YSense::Maximize);
+        let mut a = ParetoFront2D::new(YSense::Maximize);
+        let mut b = ParetoFront2D::new(YSense::Maximize);
+        for (i, &(x, y)) in pts.iter().enumerate() {
+            let cfg = AcceleratorConfig::baseline(PeType::Int16);
+            single.insert(x, y, cfg);
+            if i % 2 == 0 {
+                a.insert(x, y, cfg);
+            } else {
+                b.insert(x, y, cfg);
+            }
+        }
+        a.merge(b);
+        let dir = std::env::temp_dir().join(format!(
+            "quidam_test_front_{}",
+            std::process::id()
+        ));
+        let (p1, p2) = (dir.join("single.csv"), dir.join("merged.csv"));
+        write_front_csv(&p1, &single).unwrap();
+        write_front_csv(&p2, &a).unwrap();
+        let (t1, t2) = (
+            std::fs::read_to_string(&p1).unwrap(),
+            std::fs::read_to_string(&p2).unwrap(),
+        );
+        // Merged-shard output is byte-identical to the single-stream one.
+        assert_eq!(t1, t2);
+        assert!(t1.starts_with("pe_type,rows,"));
+        assert_eq!(t1.lines().count(), 1 + single.len());
         let _ = std::fs::remove_dir_all(dir);
     }
 

@@ -97,8 +97,10 @@ mod tests {
     #[test]
     fn int16_mac_exact() {
         assert_eq!(int16_mac(100, -200, 5), 5 - 20_000);
-        assert_eq!(int16_mac(i16::MAX, i16::MAX, 0),
-                   (i16::MAX as i64) * (i16::MAX as i64));
+        assert_eq!(
+            int16_mac(i16::MAX, i16::MAX, 0),
+            (i16::MAX as i64) * (i16::MAX as i64)
+        );
     }
 
     #[test]

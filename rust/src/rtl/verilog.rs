@@ -269,7 +269,12 @@ pub fn generate_design(cfg: &AcceleratorConfig) -> String {
     let _ = writeln!(
         v,
         "// QUIDAM generated design — pe={}, array {}x{}, SP if/fw/ps = {}/{}/{}, GB {} KiB",
-        cfg.pe_type, cfg.rows, cfg.cols, cfg.sp_if, cfg.sp_fw, cfg.sp_ps,
+        cfg.pe_type,
+        cfg.rows,
+        cfg.cols,
+        cfg.sp_if,
+        cfg.sp_fw,
+        cfg.sp_ps,
         cfg.gb_kib
     );
     v.push_str(&generate_common());

@@ -275,6 +275,83 @@ mod tests {
     }
 
     #[test]
+    fn zero_byte_budget_degrades_to_single_entry_not_panic() {
+        // A zero budget clamps to one byte per shard: the cache must
+        // keep working (latest entry wins), never divide by zero or
+        // refuse inserts outright.
+        let c: ShardedLru<u32, u8> = ShardedLru::new(1, 0);
+        c.insert(1, 10, 64);
+        assert_eq!(c.get(&1), Some(10));
+        c.insert(2, 20, 64);
+        assert_eq!(c.get(&2), Some(20));
+        assert_eq!(c.get(&1), None, "budget-0 cache kept two entries");
+        assert_eq!(c.stats().entries, 1);
+        assert_eq!(c.stats().evictions, 1);
+        // Zero shards is also clamped, not a modulo-by-zero.
+        let z: ShardedLru<u32, u8> = ShardedLru::new(0, 0);
+        z.insert(9, 9, 1);
+        assert_eq!(z.get(&9), Some(9));
+    }
+
+    #[test]
+    fn entry_above_whole_budget_replaces_and_is_later_evictable() {
+        let c: ShardedLru<u32, u8> = ShardedLru::new(1, 100);
+        c.insert(1, 1, 40);
+        c.insert(2, 2, 40);
+        // Heavier than the whole budget: admitted alone (the working
+        // set's hottest entry must not be refused)...
+        c.insert(3, 3, 10_000);
+        assert_eq!(c.get(&3), Some(3));
+        assert_eq!(c.stats().entries, 1);
+        assert!(c.stats().bytes >= 10_000);
+        // ...but it is not pinned: normal traffic evicts it again.
+        c.insert(4, 4, 10);
+        assert_eq!(c.get(&4), Some(4));
+        assert_eq!(c.get(&3), None, "oversized entry became immortal");
+        assert!(c.stats().bytes <= 100);
+    }
+
+    #[test]
+    fn eviction_order_tracks_interleaved_hits() {
+        // Budget for three unit-weight entries; hits between inserts
+        // must reorder the LRU queue, entry by entry.
+        let c: ShardedLru<u32, &'static str> = ShardedLru::new(1, 3);
+        c.insert(1, "a", 1);
+        c.insert(2, "b", 1);
+        c.insert(3, "c", 1);
+        // Recency now a < b < c. Touch a, then b: c is the LRU.
+        assert_eq!(c.get(&1), Some("a"));
+        assert_eq!(c.get(&2), Some("b"));
+        c.insert(4, "d", 1);
+        assert_eq!(c.get(&3), None, "hit-refresh ignored: c survived");
+        // Recency a < b < d. Touch a again: b is now the LRU.
+        assert_eq!(c.get(&1), Some("a"));
+        c.insert(5, "e", 1);
+        assert_eq!(c.get(&2), None, "b outlived its recency");
+        assert_eq!(c.get(&1), Some("a"));
+        assert_eq!(c.get(&4), Some("d"));
+        assert_eq!(c.get(&5), Some("e"));
+        assert_eq!(c.stats().evictions, 2);
+    }
+
+    #[test]
+    fn one_insert_can_evict_several_entries() {
+        let c: ShardedLru<u32, &'static str> = ShardedLru::new(1, 100);
+        c.insert(1, "a", 30);
+        c.insert(2, "b", 30);
+        c.insert(3, "c", 30);
+        // 80 bytes displaces both LRU entries, keeps the newest-touched.
+        assert_eq!(c.get(&3), Some("c"));
+        c.insert(4, "d", 70);
+        assert_eq!(c.get(&4), Some("d"));
+        assert_eq!(c.get(&3), Some("c"));
+        assert_eq!(c.get(&1), None);
+        assert_eq!(c.get(&2), None);
+        assert_eq!(c.stats().evictions, 2);
+        assert!(c.stats().bytes <= 100);
+    }
+
+    #[test]
     fn shards_partition_keys() {
         let c: ShardedLru<u64, u64> = ShardedLru::new(8, 8 << 20);
         for k in 0..1000u64 {

@@ -1,0 +1,425 @@
+//! Distributed sweep dispatch (DESIGN.md §7): shard a grid sweep across
+//! a set of `quidam serve` workers and merge their partial summaries.
+//!
+//! The coordinator deterministically partitions the grid into contiguous
+//! index ranges ([`crate::sweep::shard_ranges`]), POSTs each range to a
+//! worker's `/v1/shard` endpoint over the existing HTTP/1.1 JSON
+//! protocol, folds the NDJSON progress stream into a shared
+//! [`SweepCtl`], and merges the returned [`SweepSummary`] wire forms.
+//! Because summary merging is order-invariant and the f64 wire rendering
+//! is round-trip exact, the merged Pareto front is byte-identical to a
+//! single-process sweep of the same grid — the acceptance contract the
+//! integration tests and the CI distributed smoke job both assert.
+//!
+//! Failure model: a shard that errors (dead worker, reset connection,
+//! bad stream) is re-queued and re-dispatched to whichever worker pulls
+//! it next; a worker that fails several shards in a row is retired; a
+//! shard nobody can complete fails the whole run. Cooperative
+//! cancellation drops the worker connections, which aborts the remote
+//! sweeps through the server's client-disconnect watchdog.
+
+use std::collections::VecDeque;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+use std::ops::Range;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use crate::config::SweepSpace;
+use crate::dse::{Objective, SweepSummary};
+use crate::sweep::{self, SweepCtl};
+use crate::util::json::Json;
+
+/// Dial timeout for a worker connection.
+const CONNECT_TIMEOUT: Duration = Duration::from_secs(5);
+/// Per-read timeout on a shard stream — short so cancellation is acted
+/// on within about a second even when a worker goes quiet.
+const STREAM_READ_TIMEOUT: Duration = Duration::from_millis(500);
+/// Consecutive shard failures after which a worker is retired for the
+/// rest of the run.
+const WORKER_STRIKES: usize = 3;
+
+/// What a distributed sweep runs: the same parameters a synchronous
+/// `/v1/sweep` takes, plus the worker-side thread count per shard.
+pub struct DistSweep {
+    pub workload: String,
+    pub space: SweepSpace,
+    pub objective: Objective,
+    pub top_k: usize,
+    /// Worker threads each shard request runs on, at the worker.
+    pub threads: usize,
+}
+
+/// How a distributed run went (the merged summary flows through the
+/// `on_shard` callback instead, so the serving layer can publish partial
+/// fronts while shards are still in flight).
+#[derive(Debug, Clone, Copy)]
+pub struct DistOutcome {
+    pub shards_total: usize,
+    pub shards_done: usize,
+    /// Shards that had to be re-dispatched after a worker failure.
+    pub redispatches: usize,
+}
+
+/// One queued shard. `reported` is the highest shard-local progress
+/// already folded into the shared `SweepCtl` across attempts — a
+/// re-dispatched shard re-runs from its start, and only counts above
+/// this mark fold again, so `ctl.done()` never over-counts.
+struct Shard {
+    range: Range<usize>,
+    reported: usize,
+    attempts: usize,
+}
+
+/// Connect to `addr` ("host:port") with timeouts suited to shard
+/// streaming.
+fn connect(addr: &str) -> Result<TcpStream, String> {
+    let sa = addr
+        .to_socket_addrs()
+        .map_err(|e| format!("resolving {addr}: {e}"))?
+        .next()
+        .ok_or_else(|| format!("{addr}: no usable address"))?;
+    let s = TcpStream::connect_timeout(&sa, CONNECT_TIMEOUT)
+        .map_err(|e| format!("connecting {addr}: {e}"))?;
+    let _ = s.set_read_timeout(Some(STREAM_READ_TIMEOUT));
+    let _ = s.set_write_timeout(Some(Duration::from_secs(30)));
+    let _ = s.set_nodelay(true);
+    Ok(s)
+}
+
+/// Issue one request to a worker and parse the response head; returns
+/// the status and a reader positioned at the start of the body. The
+/// response head must start arriving within `max_idle` read timeouts
+/// ([`STREAM_READ_TIMEOUT`] each).
+fn request_with_deadline(
+    addr: &str,
+    method: &str,
+    path: &str,
+    body: &str,
+    max_idle: usize,
+) -> Result<(u16, BufReader<TcpStream>), String> {
+    let mut s = connect(addr)?;
+    let req = format!(
+        "{method} {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Length: \
+         {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+    s.write_all(req.as_bytes())
+        .map_err(|e| format!("sending to {addr}: {e}"))?;
+    let mut reader = BufReader::new(s);
+    let mut line = String::new();
+    read_line_patiently(&mut reader, &mut line, None, max_idle)
+        .map_err(|e| format!("{addr}: reading status line: {e}"))?;
+    let status: u16 = line
+        .split_whitespace()
+        .nth(1)
+        .and_then(|t| t.parse().ok())
+        .ok_or_else(|| format!("{addr}: malformed status line {line:?}"))?;
+    loop {
+        let mut h = String::new();
+        let n = read_line_patiently(&mut reader, &mut h, None, max_idle)
+            .map_err(|e| format!("{addr}: reading headers: {e}"))?;
+        if n == 0 || h == "\r\n" || h == "\n" {
+            break;
+        }
+    }
+    Ok((status, reader))
+}
+
+/// [`request_with_deadline`] with the long shard-stream idle budget —
+/// the shared client for shard dispatch, registry probing callers, and
+/// the integration tests.
+pub fn request(
+    addr: &str,
+    method: &str,
+    path: &str,
+    body: &str,
+) -> Result<(u16, BufReader<TcpStream>), String> {
+    request_with_deadline(addr, method, path, body, MAX_IDLE_READS)
+}
+
+/// How many consecutive idle read timeouts (at [`STREAM_READ_TIMEOUT`]
+/// each) a shard stream may go without a byte before the worker is
+/// declared hung. Workers emit progress every few thousand points, so
+/// two minutes of silence means the remote sweep is not running.
+const MAX_IDLE_READS: usize = 240;
+
+/// `read_line` that treats read timeouts as "keep waiting" (partial
+/// lines accumulate in `buf` across timeouts), checking `ctl` for
+/// cancellation between waits and giving up on a worker that stays
+/// silent past [`MAX_IDLE_READS`]. Returns the bytes appended to `buf`
+/// (0 only at a clean EOF with nothing buffered).
+fn read_line_patiently(
+    reader: &mut BufReader<TcpStream>,
+    buf: &mut String,
+    ctl: Option<&SweepCtl>,
+    max_idle: usize,
+) -> std::io::Result<usize> {
+    let start_len = buf.len();
+    let mut idle = 0usize;
+    let mut last_len = start_len;
+    loop {
+        match reader.read_line(buf) {
+            Ok(_) => return Ok(buf.len() - start_len),
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock
+                        | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                if let Some(ctl) = ctl {
+                    if ctl.is_cancelled() {
+                        return Err(std::io::Error::new(
+                            std::io::ErrorKind::Interrupted,
+                            "cancelled",
+                        ));
+                    }
+                }
+                if buf.len() > last_len {
+                    last_len = buf.len();
+                    idle = 0;
+                } else {
+                    idle += 1;
+                    if idle >= max_idle {
+                        return Err(std::io::Error::new(
+                            std::io::ErrorKind::TimedOut,
+                            "stream idle too long",
+                        ));
+                    }
+                }
+            }
+            Err(e) => return Err(e),
+        }
+    }
+}
+
+/// How long a `/healthz` probe waits before declaring a worker
+/// unusable: ~3s, so registering a typo'd address fails fast instead of
+/// pinning an HTTP pool thread for the full shard-stream idle budget.
+const PROBE_IDLE_READS: usize = 6;
+
+/// GET a worker's `/healthz`; `Err` describes why it is unusable.
+pub fn probe_worker(addr: &str) -> Result<(), String> {
+    let (status, mut reader) =
+        request_with_deadline(addr, "GET", "/healthz", "", PROBE_IDLE_READS)?;
+    let mut body = String::new();
+    let _ = reader.read_to_string(&mut body);
+    if status == 200 && body.contains("\"ok\":true") {
+        Ok(())
+    } else {
+        Err(format!("{addr}: unhealthy (status {status})"))
+    }
+}
+
+/// The `/v1/shard` request body for one contiguous index range. Every
+/// axis is spelled out explicitly so the worker reconstructs exactly the
+/// coordinator's grid (no reliance on matching defaults).
+fn shard_body(spec: &DistSweep, range: &Range<usize>) -> String {
+    let pes: Vec<Json> = spec
+        .space
+        .pe_types
+        .iter()
+        .map(|p| Json::Str(p.name().into()))
+        .collect();
+    Json::obj(vec![
+        ("workload", Json::Str(spec.workload.clone())),
+        ("rows", Json::arr_usize(&spec.space.rows)),
+        ("cols", Json::arr_usize(&spec.space.cols)),
+        ("sp_if", Json::arr_usize(&spec.space.sp_if)),
+        ("sp_fw", Json::arr_usize(&spec.space.sp_fw)),
+        ("sp_ps", Json::arr_usize(&spec.space.sp_ps)),
+        ("gb_kib", Json::arr_usize(&spec.space.gb_kib)),
+        ("dram_bw", Json::arr_usize(&spec.space.dram_bw)),
+        ("pe_types", Json::Arr(pes)),
+        ("objective", Json::Str(spec.objective.name().into())),
+        ("top_k", Json::Num(spec.top_k as f64)),
+        ("threads", Json::Num(spec.threads as f64)),
+        ("start", Json::Num(range.start as f64)),
+        ("end", Json::Num(range.end as f64)),
+    ])
+    .to_string()
+}
+
+/// Execute one shard on one worker, streaming progress into `ctl`.
+fn run_shard(
+    worker: &str,
+    spec: &DistSweep,
+    shard: &mut Shard,
+    ctl: &SweepCtl,
+) -> Result<SweepSummary, String> {
+    let (status, mut reader) =
+        request(worker, "POST", "/v1/shard", &shard_body(spec, &shard.range))?;
+    if status != 200 {
+        let mut body = String::new();
+        let _ = reader.read_to_string(&mut body);
+        return Err(format!(
+            "{worker}: shard rejected (status {status}): {}",
+            body.trim()
+        ));
+    }
+    let mut line = String::new();
+    loop {
+        let n =
+            read_line_patiently(&mut reader, &mut line, Some(ctl), MAX_IDLE_READS)
+                .map_err(|e| format!("{worker}: reading shard stream: {e}"))?;
+        if n == 0 {
+            return Err(format!(
+                "{worker}: shard stream ended without a result"
+            ));
+        }
+        let text = line.trim();
+        if !text.is_empty() {
+            let j = Json::parse(text)
+                .map_err(|e| format!("{worker}: bad shard record: {e}"))?;
+            match j.get("type").as_str() {
+                Some("progress") => {
+                    if let Some(done) = j.get("done").as_usize() {
+                        let done = done.min(shard.range.len());
+                        if done > shard.reported {
+                            ctl.add_done(done - shard.reported);
+                            shard.reported = done;
+                        }
+                    }
+                }
+                Some("result") => {
+                    let summary = SweepSummary::from_json(j.get("summary"))
+                        .map_err(|e| {
+                            format!("{worker}: bad shard summary: {e}")
+                        })?;
+                    if summary.count != shard.range.len() {
+                        return Err(format!(
+                            "{worker}: shard returned {} of {} points",
+                            summary.count,
+                            shard.range.len()
+                        ));
+                    }
+                    let len = shard.range.len();
+                    ctl.add_done(len - shard.reported);
+                    shard.reported = len;
+                    return Ok(summary);
+                }
+                Some("error") => {
+                    return Err(format!(
+                        "{worker}: {}",
+                        j.get("error").as_str().unwrap_or("shard failed")
+                    ))
+                }
+                // Unknown record types are ignored for forward compat.
+                _ => {}
+            }
+        }
+        line.clear();
+    }
+}
+
+/// Run a sweep sharded across `workers`, calling `on_shard` with each
+/// completed shard's summary (merge order does not affect the front —
+/// see module docs). Returns how the dispatch went; a cancelled run
+/// returns `Ok` with `shards_done < shards_total`, a shard nobody could
+/// complete returns `Err`.
+pub fn run_distributed(
+    workers: &[String],
+    spec: &DistSweep,
+    shards: usize,
+    ctl: &SweepCtl,
+    on_shard: impl Fn(SweepSummary) + Sync,
+) -> Result<DistOutcome, String> {
+    if workers.is_empty() {
+        return Err("distributed sweep needs at least one worker".into());
+    }
+    let n = spec.space.len();
+    let ranges = sweep::shard_ranges(n, shards.max(1));
+    let shards_total = ranges.len();
+    let queue: Mutex<VecDeque<Shard>> = Mutex::new(
+        ranges
+            .into_iter()
+            .map(|range| Shard { range, reported: 0, attempts: 0 })
+            .collect(),
+    );
+    // A shard that every worker has had a chance (and a retry) at is
+    // undeliverable — fail the run instead of looping forever.
+    let max_attempts = 2 * workers.len() + 1;
+    let shards_done = AtomicUsize::new(0);
+    let redispatches = AtomicUsize::new(0);
+    let failed = AtomicBool::new(false);
+    let fatal: Mutex<Option<String>> = Mutex::new(None);
+    std::thread::scope(|s| {
+        for worker in workers {
+            let queue = &queue;
+            let shards_done = &shards_done;
+            let redispatches = &redispatches;
+            let failed = &failed;
+            let fatal = &fatal;
+            let on_shard = &on_shard;
+            s.spawn(move || {
+                let mut strikes = 0usize;
+                loop {
+                    if ctl.is_cancelled() || failed.load(Ordering::Relaxed)
+                    {
+                        return;
+                    }
+                    let next = queue.lock().unwrap().pop_front();
+                    let Some(mut shard) = next else {
+                        if shards_done.load(Ordering::Relaxed)
+                            >= shards_total
+                        {
+                            return;
+                        }
+                        // Another worker may yet fail and re-queue its
+                        // shard; stay available to pick it up.
+                        std::thread::sleep(Duration::from_millis(50));
+                        continue;
+                    };
+                    match run_shard(worker, spec, &mut shard, ctl) {
+                        Ok(summary) => {
+                            on_shard(summary);
+                            shards_done.fetch_add(1, Ordering::Relaxed);
+                            strikes = 0;
+                        }
+                        Err(_) if ctl.is_cancelled() => return,
+                        Err(e) => {
+                            shard.attempts += 1;
+                            if shard.attempts >= max_attempts {
+                                *fatal.lock().unwrap() = Some(format!(
+                                    "shard {}..{} undeliverable after {} \
+                                     attempts: {e}",
+                                    shard.range.start,
+                                    shard.range.end,
+                                    shard.attempts
+                                ));
+                                failed.store(true, Ordering::Relaxed);
+                                return;
+                            }
+                            redispatches.fetch_add(1, Ordering::Relaxed);
+                            queue.lock().unwrap().push_back(shard);
+                            strikes += 1;
+                            if strikes >= WORKER_STRIKES {
+                                // This worker looks dead; retire it and
+                                // let the others drain the queue.
+                                return;
+                            }
+                        }
+                    }
+                }
+            });
+        }
+    });
+    if let Some(e) = fatal.lock().unwrap().take() {
+        return Err(e);
+    }
+    let done = shards_done.load(Ordering::Relaxed);
+    if !ctl.is_cancelled() && done < shards_total {
+        return Err(format!(
+            "no live workers left with {} of {shards_total} shards \
+             unprocessed",
+            shards_total - done
+        ));
+    }
+    Ok(DistOutcome {
+        shards_total,
+        shards_done: done,
+        redispatches: redispatches.load(Ordering::Relaxed),
+    })
+}

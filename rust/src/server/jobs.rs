@@ -56,6 +56,17 @@ pub enum JobKind {
         seed: u64,
         pe_types: Vec<PeType>,
     },
+    /// Coordinate a sweep sharded across remote `quidam serve` workers
+    /// (DESIGN.md §7). The job's own ctl carries cancellation to the
+    /// dispatchers, whose dropped connections abort the remote shards.
+    Distributed {
+        workload: String,
+        space: SweepSpace,
+        objective: Objective,
+        top_k: usize,
+        workers: Vec<String>,
+        shards: usize,
+    },
 }
 
 impl JobKind {
@@ -63,6 +74,7 @@ impl JobKind {
         match self {
             JobKind::Sweep { .. } => "sweep",
             JobKind::Coexplore { .. } => "coexplore",
+            JobKind::Distributed { .. } => "distributed-sweep",
         }
     }
 }
@@ -109,6 +121,9 @@ struct JobProgress {
     eval_lat_us: StreamingFiveNum,
     /// Co-exploration terminal result (pairs + co-design front).
     co_result: Option<Json>,
+    /// Distributed jobs: shards merged so far / re-dispatched so far.
+    shards_done: usize,
+    redispatches: usize,
 }
 
 pub struct Job {
@@ -181,6 +196,17 @@ impl Job {
             ("total", Json::Num(self.total as f64)),
             ("points_done", Json::Num(self.ctl.done() as f64)),
         ];
+        if let JobKind::Distributed { shards, .. } = &self.spec.kind {
+            fields.push(("shards", Json::Num(*shards as f64)));
+            fields.push((
+                "shards_done",
+                Json::Num(prog.shards_done as f64),
+            ));
+            fields.push((
+                "redispatches",
+                Json::Num(prog.redispatches as f64),
+            ));
+        }
         if let Some(s) = &prog.summary {
             fields.push(("front_size", Json::Num(s.front.len() as f64)));
             fields.push((
@@ -360,6 +386,22 @@ fn run_one(state: &AppState, job: &Job) {
         JobKind::Coexplore { n_archs, hw_per_arch, seed, pe_types } => {
             run_coexplore(state, job, *n_archs, *hw_per_arch, *seed, pe_types)
         }
+        JobKind::Distributed {
+            workload,
+            space,
+            objective,
+            top_k,
+            workers,
+            shards,
+        } => run_distributed(
+            job,
+            workload,
+            space,
+            *objective,
+            *top_k,
+            workers,
+            *shards,
+        ),
     };
     let mut st = job.state.lock().unwrap();
     *st = match outcome {
@@ -414,6 +456,44 @@ fn run_sweep(
             }
         },
     );
+    Ok(())
+}
+
+/// Coordinate a distributed sweep: dispatch shards to the workers and
+/// merge each completed shard's summary into the job's shared progress,
+/// so `GET /v1/jobs/:id` serves a live (and, after cancellation, a
+/// partial) merged Pareto front exactly like a local sweep job does.
+fn run_distributed(
+    job: &Job,
+    workload: &str,
+    space: &SweepSpace,
+    objective: Objective,
+    top_k: usize,
+    workers: &[String],
+    shards: usize,
+) -> Result<(), String> {
+    let spec = super::distrib::DistSweep {
+        workload: workload.to_string(),
+        space: space.clone(),
+        objective,
+        top_k,
+        threads: job.spec.threads,
+    };
+    let outcome = super::distrib::run_distributed(
+        workers,
+        &spec,
+        shards,
+        &job.ctl,
+        |part| {
+            let mut prog = job.progress.lock().unwrap();
+            prog.shards_done += 1;
+            match &mut prog.summary {
+                Some(s) => s.merge(part),
+                None => prog.summary = Some(part),
+            }
+        },
+    )?;
+    job.progress.lock().unwrap().redispatches = outcome.redispatches;
     Ok(())
 }
 

@@ -17,14 +17,15 @@
 //! in-process tests drive [`Server::spawn`] against an ephemeral port.
 
 pub mod cache;
+pub mod distrib;
 pub mod http;
 pub mod jobs;
 pub mod router;
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::models::{zoo, Dataset, DnnModel};
@@ -78,6 +79,10 @@ pub struct AppState {
     /// (full-key equality — a hash collision can never cross-serve).
     pub results: cache::ShardedLru<Vec<u8>, Arc<String>>,
     pub jobs: jobs::JobManager,
+    /// Registered `quidam serve` workers ("host:port") a distributed
+    /// sweep shards across when the request names none explicitly
+    /// (POST/DELETE /v1/workers manage it; DESIGN.md §7).
+    pub workers: Mutex<BTreeSet<String>>,
     pub opts: ServeOptions,
     pub started: Instant,
     pub requests: AtomicU64,
@@ -100,6 +105,7 @@ impl AppState {
             compiled: cache::ShardedLru::new(8, budget / 4 * 3),
             results: cache::ShardedLru::new(8, budget / 4),
             jobs: jobs::JobManager::new(),
+            workers: Mutex::new(BTreeSet::new()),
             opts,
             started: Instant::now(),
             requests: AtomicU64::new(0),

@@ -1,19 +1,26 @@
-//! Route dispatch for `quidam serve` (endpoint table in DESIGN.md §6):
+//! Route dispatch for `quidam serve` (endpoint table in DESIGN.md §6-7):
 //!
 //!   GET    /healthz       liveness probe
 //!   GET    /v1/stats      cache hit/miss counters, job counts, uptime
 //!   GET    /v1/workloads  named workloads the PPA endpoints accept
 //!   POST   /v1/ppa        single-config PPA query (result-cached)
 //!   POST   /v1/sweep      bounded synchronous sweep, NDJSON-streamed
+//!   POST   /v1/shard      one contiguous shard of a distributed sweep
+//!                         (NDJSON progress + serialized summary)
+//!   GET    /v1/workers    registered distributed-sweep workers
+//!   POST   /v1/workers    register a worker (probed before admission)
+//!   DELETE /v1/workers    deregister a worker
+//!   POST   /v1/distributed-sweep  enqueue a coordinator job sharding a
+//!                         sweep across the workers
 //!   POST   /v1/jobs       enqueue an async sweep / coexplore job
 //!   GET    /v1/jobs/:id   job status + streaming progress (+ result)
 //!   DELETE /v1/jobs/:id   cooperative cancellation
 
 use std::io::Write as _;
 use std::net::TcpStream;
-use std::sync::atomic::Ordering;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::config::{parse_axis, AcceleratorConfig, SweepSpace};
 use crate::dse::{self, Objective};
@@ -259,6 +266,74 @@ fn ppa(
     http::write_raw_json(conn, 200, &body)
 }
 
+/// Abort a streaming sweep when its client vanishes. Without this, a
+/// request with `points: false` (or a client that hangs up early) would
+/// compute the entire grid into a dead socket: no writes happen during
+/// the sweep, so no write error can surface. A cloned socket handle
+/// polls for EOF/reset with a short read timeout and flips the shared
+/// [`SweepCtl`], stopping the engine within one block per worker. Only
+/// the socket's *read* timeout is touched (it is shared with the
+/// original handle, which never reads again after request parsing).
+struct DisconnectWatch {
+    stop: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl DisconnectWatch {
+    fn spawn(conn: &TcpStream, ctl: Arc<SweepCtl>) -> DisconnectWatch {
+        let stop = Arc::new(AtomicBool::new(false));
+        let handle = conn.try_clone().ok().map(|mut clone| {
+            let stop = stop.clone();
+            std::thread::spawn(move || {
+                use std::io::Read as _;
+                let _ = clone
+                    .set_read_timeout(Some(Duration::from_millis(50)));
+                // Read-and-discard rather than peek: the request was
+                // fully consumed and the protocol is one-shot
+                // (Connection: close), so any bytes still arriving are
+                // stray — draining them lets a later FIN surface as
+                // Ok(0) instead of hiding behind buffered data. A
+                // half-close (client shutdown of its write side while
+                // still reading) is deliberately treated as disconnect,
+                // like most streaming servers do.
+                let mut scratch = [0u8; 256];
+                while !stop.load(Ordering::Relaxed) {
+                    match clone.read(&mut scratch) {
+                        // Orderly close from the client: abort the sweep.
+                        Ok(0) => {
+                            ctl.cancel();
+                            return;
+                        }
+                        // Stray bytes drained — still connected.
+                        Ok(_) => {}
+                        Err(e)
+                            if matches!(
+                                e.kind(),
+                                std::io::ErrorKind::WouldBlock
+                                    | std::io::ErrorKind::TimedOut
+                            ) => {}
+                        // Reset / abort: the client is gone.
+                        Err(_) => {
+                            ctl.cancel();
+                            return;
+                        }
+                    }
+                }
+            })
+        });
+        DisconnectWatch { stop, handle }
+    }
+}
+
+impl Drop for DisconnectWatch {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
 /// `POST /v1/sweep` — bounded synchronous grid sweep streamed as NDJSON:
 /// optional per-point records, then the Pareto front, per-PE top-K, and a
 /// terminal summary record.
@@ -300,7 +375,11 @@ fn sweep_sync(
     };
     let compiled = state.compiled_map(&workload, &net.layers, &space.pe_types);
     http::start_ndjson(conn)?;
-    let ctl = SweepCtl::new();
+    // Two ways a vanished client aborts the sweep: a failed point-row
+    // write (below), and — crucial for `points: false`, where nothing is
+    // written until the sweep finishes — the disconnect watchdog.
+    let ctl = Arc::new(SweepCtl::new());
+    let _watch = DisconnectWatch::spawn(conn, ctl.clone());
     let t0 = Instant::now();
     let mut write_err: Option<std::io::Error> = None;
     let summary = dse::stream_space_eval(
@@ -335,6 +414,11 @@ fn sweep_sync(
     );
     if let Some(e) = write_err {
         return Err(e);
+    }
+    if ctl.is_cancelled() {
+        // The watchdog saw the client disconnect mid-sweep; the partial
+        // summary has no recipient.
+        return Ok(());
     }
     for (energy, ppa_v, cfg) in summary.front.points() {
         report::ndjson(
@@ -373,6 +457,257 @@ fn sweep_sync(
         ]),
     )?;
     conn.flush()
+}
+
+/// `POST /v1/shard` — execute one contiguous index range of a grid sweep
+/// for a distributed coordinator (DESIGN.md §7). Streams NDJSON progress
+/// records (`{"type":"progress","done":n}`, shard-local counts) followed
+/// by a terminal `{"type":"result","summary":...}` carrying the full
+/// serialized [`dse::SweepSummary`] for the coordinator to merge. A
+/// dropped coordinator connection aborts the shard via the disconnect
+/// watchdog, so a cancelled distributed job stops burning worker CPU.
+fn shard_exec(
+    state: &AppState,
+    req: &Request,
+    conn: &mut TcpStream,
+) -> std::io::Result<()> {
+    type Parsed =
+        (String, SweepSpace, Objective, usize, usize, std::ops::Range<usize>);
+    let parsed = (|| -> Result<Parsed, String> {
+        let j = req.json()?;
+        let workload = parse_workload(&j)?;
+        let space = parse_space(&j)?;
+        let objective = parse_objective(&j)?;
+        let top_k = opt_usize(&j, "top_k")?.unwrap_or(5).clamp(1, 100);
+        let threads = parse_threads(&j, state)?;
+        let start = opt_usize(&j, "start")?
+            .ok_or("'start' (shard range) is required")?;
+        let end =
+            opt_usize(&j, "end")?.ok_or("'end' (shard range) is required")?;
+        if start >= end || end > space.len() {
+            return Err(format!(
+                "shard range {start}..{end} does not fit the {}-point grid",
+                space.len()
+            ));
+        }
+        if end - start > state.opts.max_sync_points {
+            return Err(format!(
+                "shard has {} points, above the synchronous bound {} — \
+                 raise the coordinator's shard count",
+                end - start,
+                state.opts.max_sync_points
+            ));
+        }
+        Ok((workload, space, objective, top_k, threads, start..end))
+    })();
+    let (workload, space, objective, top_k, threads, range) = match parsed {
+        Ok(v) => v,
+        Err(e) => return http::write_error(conn, 400, &e),
+    };
+    let net = match state.workload(&workload) {
+        Ok(n) => n,
+        Err(e) => return http::write_error(conn, 400, &e),
+    };
+    let compiled = state.compiled_map(&workload, &net.layers, &space.pe_types);
+    http::start_ndjson(conn)?;
+    let ctl = Arc::new(SweepCtl::new());
+    let _watch = DisconnectWatch::spawn(conn, ctl.clone());
+    // Progress cadence: roughly one record per this many evaluated
+    // points (emitted via the row/sink path so all socket writes stay on
+    // this thread).
+    const PROGRESS_EVERY: usize = 4096;
+    let emitted = AtomicUsize::new(0);
+    let mut write_err: Option<std::io::Error> = None;
+    let summary = dse::stream_shard_eval(
+        &space,
+        range,
+        threads,
+        objective,
+        top_k,
+        |cfg| match compiled.get(&cfg.pe_type) {
+            Some(c) => dse::evaluate_compiled(c, cfg),
+            None => dse::evaluate(&state.models, cfg, &net.layers),
+        },
+        |_p| {
+            // Empty rows are progress ticks; the sink renders them with
+            // the live counter (rows themselves are not streamed — the
+            // coordinator only needs the merged summary).
+            let k = emitted.fetch_add(1, Ordering::Relaxed) + 1;
+            (k % PROGRESS_EVERY == 0).then(String::new)
+        },
+        |_tick| {
+            if write_err.is_none() {
+                let rec = Json::obj(vec![
+                    ("type", Json::Str("progress".into())),
+                    ("done", Json::Num(ctl.done() as f64)),
+                ]);
+                if let Err(e) = writeln!(conn, "{rec}") {
+                    write_err = Some(e);
+                    ctl.cancel();
+                }
+            }
+        },
+        &ctl,
+    );
+    if let Some(e) = write_err {
+        return Err(e);
+    }
+    if ctl.is_cancelled() {
+        // Coordinator hung up (job cancelled / dispatcher died): the
+        // partial shard has no recipient.
+        return Ok(());
+    }
+    report::ndjson(
+        conn,
+        &Json::obj(vec![
+            ("type", Json::Str("result".into())),
+            ("summary", summary.to_json()),
+        ]),
+    )?;
+    conn.flush()
+}
+
+fn registry_json(state: &AppState) -> Json {
+    let list: Vec<Json> = state
+        .workers
+        .lock()
+        .unwrap()
+        .iter()
+        .map(|w| Json::Str(w.clone()))
+        .collect();
+    Json::obj(vec![("workers", Json::Arr(list))])
+}
+
+/// `GET|POST|DELETE /v1/workers` — the distributed-worker registry.
+/// Registration probes the worker's `/healthz` first, so a typo'd
+/// address is a 400 now instead of a re-dispatch storm later.
+fn workers_route(
+    state: &AppState,
+    req: &Request,
+    conn: &mut TcpStream,
+) -> std::io::Result<()> {
+    let addr_field = || -> Result<String, String> {
+        let j = req.json()?;
+        j.get("addr")
+            .as_str()
+            .map(str::to_string)
+            .ok_or_else(|| "'addr' (\"host:port\") is required".to_string())
+    };
+    match req.method.as_str() {
+        "GET" => http::write_json(conn, 200, &registry_json(state)),
+        "POST" => {
+            let addr = match addr_field() {
+                Ok(a) => a,
+                Err(e) => return http::write_error(conn, 400, &e),
+            };
+            if let Err(e) = super::distrib::probe_worker(&addr) {
+                return http::write_error(conn, 400, &e);
+            }
+            state.workers.lock().unwrap().insert(addr);
+            http::write_json(conn, 200, &registry_json(state))
+        }
+        "DELETE" => {
+            let addr = match addr_field() {
+                Ok(a) => a,
+                Err(e) => return http::write_error(conn, 400, &e),
+            };
+            state.workers.lock().unwrap().remove(&addr);
+            http::write_json(conn, 200, &registry_json(state))
+        }
+        _ => http::write_error(conn, 405, "want GET, POST or DELETE"),
+    }
+}
+
+/// `POST /v1/distributed-sweep` — enqueue a coordinator job that shards
+/// a grid sweep across worker `quidam serve` instances. Body: the usual
+/// sweep fields plus optional `workers` (array of "host:port"; defaults
+/// to the registry) and `shards` (defaults to 4 per worker). Responds
+/// 202 with a job id; poll/cancel through `/v1/jobs/:id` as usual.
+fn distributed_sweep(
+    state: &AppState,
+    req: &Request,
+    conn: &mut TcpStream,
+) -> std::io::Result<()> {
+    let parsed = (|| -> Result<(JobSpec, usize, usize), String> {
+        let j = req.json()?;
+        let workload = parse_workload(&j)?;
+        state.workload(&workload)?;
+        let space = parse_space(&j)?;
+        let objective = parse_objective(&j)?;
+        let top_k = opt_usize(&j, "top_k")?.unwrap_or(5).clamp(1, 100);
+        let threads = parse_threads(&j, state)?;
+        let workers: Vec<String> = match j.get("workers") {
+            Json::Null => {
+                state.workers.lock().unwrap().iter().cloned().collect()
+            }
+            Json::Arr(a) => a
+                .iter()
+                .map(|v| {
+                    v.as_str().map(str::to_string).ok_or_else(|| {
+                        "'workers' entries must be \"host:port\" strings"
+                            .to_string()
+                    })
+                })
+                .collect::<Result<_, _>>()?,
+            _ => return Err("'workers' must be an array of strings".into()),
+        };
+        if workers.is_empty() {
+            return Err(
+                "no workers: register some via POST /v1/workers or pass \
+                 a 'workers' array"
+                    .into(),
+            );
+        }
+        let total = space.len();
+        if total > state.opts.max_job_points {
+            return Err(format!(
+                "grid has {total} points, above the job bound {}",
+                state.opts.max_job_points
+            ));
+        }
+        // Every shard must clear the workers' synchronous bound, or the
+        // dispatch would be rejected per-shard at runtime; raising the
+        // shard count here keeps a big-grid/low-shard request valid
+        // instead of accepting a job that can only fail.
+        let min_shards = total.div_ceil(state.opts.max_sync_points).max(1);
+        let shards = opt_usize(&j, "shards")?
+            .unwrap_or(4 * workers.len())
+            .max(min_shards)
+            .clamp(1, total.max(1));
+        Ok((
+            JobSpec {
+                kind: JobKind::Distributed {
+                    workload,
+                    space,
+                    objective,
+                    top_k,
+                    workers,
+                    shards,
+                },
+                threads,
+            },
+            total,
+            shards,
+        ))
+    })();
+    let (spec, total, shards) = match parsed {
+        Ok(v) => v,
+        Err(e) => return http::write_error(conn, 400, &e),
+    };
+    let job = match state.jobs.submit(spec, total) {
+        Ok(job) => job,
+        Err(e) => return http::write_error(conn, 429, &e),
+    };
+    http::write_json(
+        conn,
+        202,
+        &Json::obj(vec![
+            ("id", Json::Num(job.id as f64)),
+            ("state", Json::Str(job.state().name().into())),
+            ("total", Json::Num(total as f64)),
+            ("shards", Json::Num(shards as f64)),
+        ]),
+    )
 }
 
 /// `POST /v1/jobs` — enqueue an async sweep or coexplore run.
@@ -524,6 +859,11 @@ pub fn handle(
         }
         ("POST", "/v1/ppa") => ppa(state, &req, conn),
         ("POST", "/v1/sweep") => sweep_sync(state, &req, conn),
+        ("POST", "/v1/shard") => shard_exec(state, &req, conn),
+        (_, "/v1/workers") => workers_route(state, &req, conn),
+        ("POST", "/v1/distributed-sweep") => {
+            distributed_sweep(state, &req, conn)
+        }
         ("POST", "/v1/jobs") => jobs_create(state, &req, conn),
         (m, p) if p.starts_with("/v1/jobs/") => {
             jobs_item(state, m, p, conn)
@@ -534,5 +874,54 @@ pub fn handle(
             &format!("no route {} {}", req.method, req.path),
         ),
         _ => http::write_error(conn, 405, "unsupported method"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::TcpListener;
+
+    fn wait_for(pred: impl Fn() -> bool, what: &str) {
+        let t0 = Instant::now();
+        while !pred() {
+            assert!(
+                t0.elapsed() < Duration::from_secs(5),
+                "timed out waiting for {what}"
+            );
+            std::thread::sleep(Duration::from_millis(10));
+        }
+    }
+
+    /// Regression (ISSUE 4 satellite): a client that hangs up mid-stream
+    /// must abort the sweep via SweepCtl — previously a `points: false`
+    /// sweep computed the full grid into a dead socket.
+    #[test]
+    fn disconnect_watch_cancels_when_client_closes() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = TcpStream::connect(addr).unwrap();
+        let (server_conn, _) = listener.accept().unwrap();
+        let ctl = Arc::new(SweepCtl::new());
+        let _watch = DisconnectWatch::spawn(&server_conn, ctl.clone());
+        // Alive client: no cancellation.
+        std::thread::sleep(Duration::from_millis(150));
+        assert!(!ctl.is_cancelled(), "watchdog fired on a live client");
+        drop(client);
+        wait_for(|| ctl.is_cancelled(), "cancel after client close");
+    }
+
+    /// Dropping the watch stops its thread without cancelling — the
+    /// normal end-of-response path must not poison the ctl.
+    #[test]
+    fn disconnect_watch_stop_does_not_cancel() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let _client = TcpStream::connect(addr).unwrap();
+        let (server_conn, _) = listener.accept().unwrap();
+        let ctl = Arc::new(SweepCtl::new());
+        let watch = DisconnectWatch::spawn(&server_conn, ctl.clone());
+        drop(watch);
+        assert!(!ctl.is_cancelled());
     }
 }

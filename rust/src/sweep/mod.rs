@@ -39,6 +39,28 @@ pub fn effective_threads(threads: usize, n: usize) -> usize {
     threads.clamp(1, MAX_THREADS).min(n.max(1))
 }
 
+/// Partition `0..n` into at most `shards` contiguous, non-empty,
+/// near-equal ranges — the deterministic shard plan behind distributed
+/// sweeps (DESIGN.md §7). The first `n % shards` ranges carry one extra
+/// index, so any two plans over the same `(n, shards)` are identical and
+/// the concatenation of all ranges is exactly `0..n` in order.
+pub fn shard_ranges(n: usize, shards: usize) -> Vec<Range<usize>> {
+    if n == 0 {
+        return Vec::new();
+    }
+    let shards = shards.clamp(1, n);
+    let base = n / shards;
+    let extra = n % shards;
+    let mut out = Vec::with_capacity(shards);
+    let mut start = 0;
+    for s in 0..shards {
+        let len = base + usize::from(s < extra);
+        out.push(start..start + len);
+        start += len;
+    }
+    out
+}
+
 /// Shared work queue: a single atomic cursor over `0..n`. Workers claim
 /// disjoint blocks with one `fetch_add` — no per-thread deques, no locks,
 /// and natural work stealing (fast threads simply claim more blocks).
@@ -95,7 +117,11 @@ impl SweepCtl {
         self.done.load(Ordering::Relaxed)
     }
 
-    fn add_done(&self, n: usize) {
+    /// Fold externally observed progress into the counter. The engine
+    /// calls this per completed block; the distributed dispatcher calls
+    /// it with remote per-shard progress deltas so a coordinator job's
+    /// `points_done` reflects work done on other machines.
+    pub fn add_done(&self, n: usize) {
         self.done.fetch_add(n, Ordering::Relaxed);
     }
 }
@@ -502,6 +528,44 @@ mod tests {
             panic!("block ran despite pre-cancelled ctl")
         });
         assert_eq!(pre.done(), 0);
+    }
+
+    #[test]
+    fn shard_ranges_tile_the_space_exactly() {
+        for (n, shards) in
+            [(0usize, 4usize), (1, 4), (7, 3), (64, 64), (100, 7), (5, 1)]
+        {
+            let ranges = shard_ranges(n, shards);
+            if n == 0 {
+                assert!(ranges.is_empty());
+                continue;
+            }
+            assert_eq!(ranges.len(), shards.min(n));
+            // Contiguous, in order, covering 0..n with no gaps/overlaps.
+            let mut next = 0;
+            for r in &ranges {
+                assert_eq!(r.start, next, "gap at {next} (n={n})");
+                assert!(!r.is_empty(), "empty shard (n={n} shards={shards})");
+                next = r.end;
+            }
+            assert_eq!(next, n);
+            // Near-equal: lengths differ by at most one.
+            let lens: Vec<usize> = ranges.iter().map(|r| r.len()).collect();
+            let (lo, hi) =
+                (lens.iter().min().unwrap(), lens.iter().max().unwrap());
+            assert!(hi - lo <= 1, "imbalanced plan {lens:?}");
+            // Deterministic: same inputs, same plan.
+            assert_eq!(ranges, shard_ranges(n, shards));
+        }
+        assert_eq!(shard_ranges(10, 0), shard_ranges(10, 1));
+    }
+
+    #[test]
+    fn add_done_folds_external_progress() {
+        let ctl = SweepCtl::new();
+        ctl.add_done(7);
+        ctl.add_done(5);
+        assert_eq!(ctl.done(), 12);
     }
 
     #[test]

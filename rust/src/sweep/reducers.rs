@@ -7,6 +7,7 @@ use std::cmp::Ordering;
 use std::collections::BinaryHeap;
 
 use super::Reducer;
+use crate::util::json::Json;
 
 /// Objective sense for the y axis of [`ParetoFront2D`] (x is always
 /// minimized, matching `dse::pareto_front_min_max` / `_min_min`).
@@ -90,6 +91,54 @@ impl<T> ParetoFront2D<T> {
         }
         self.pts.splice(idx..end, [(x, y, payload)]);
         true
+    }
+
+    /// Wire form for distributed merging (DESIGN.md §7): the front's
+    /// points in ascending-x order plus the `seen` counter. Payloads are
+    /// rendered by `payload` so the reducer stays generic. `Json`'s f64
+    /// rendering is round-trip exact, so serialize -> parse -> merge
+    /// yields the same front a local merge would.
+    pub fn to_json_with(&self, payload: impl Fn(&T) -> Json) -> Json {
+        let pts: Vec<Json> = self
+            .pts
+            .iter()
+            .map(|(x, y, t)| {
+                Json::Arr(vec![Json::Num(*x), Json::Num(*y), payload(t)])
+            })
+            .collect();
+        Json::obj(vec![
+            ("seen", Json::Num(self.seen as f64)),
+            ("points", Json::Arr(pts)),
+        ])
+    }
+
+    /// Rebuild a front from [`ParetoFront2D::to_json_with`] output.
+    /// Points are re-inserted (order-invariant), so a tampered or
+    /// non-sorted wire form still yields a valid front.
+    pub fn from_json_with(
+        sense: YSense,
+        j: &Json,
+        payload: impl Fn(&Json) -> Result<T, String>,
+    ) -> Result<ParetoFront2D<T>, String> {
+        let mut front = ParetoFront2D::new(sense);
+        let pts = j
+            .get("points")
+            .as_arr()
+            .ok_or("front: missing 'points' array")?;
+        for p in pts {
+            let a = p.as_arr().ok_or("front: point is not an array")?;
+            if a.len() != 3 {
+                return Err("front: point is not [x, y, payload]".into());
+            }
+            let x = a[0].as_f64().ok_or("front: non-numeric x")?;
+            let y = a[1].as_f64().ok_or("front: non-numeric y")?;
+            front.insert(x, y, payload(&a[2])?);
+        }
+        front.seen = j
+            .get("seen")
+            .as_usize()
+            .ok_or("front: missing 'seen' count")?;
+        Ok(front)
     }
 }
 
@@ -195,6 +244,43 @@ impl<T> TopK<T> {
             .iter()
             .max_by(|a, b| a.score.total_cmp(&b.score))
             .map(|e| (e.score, &e.item))
+    }
+
+    /// Wire form for distributed merging: `k` plus the kept (score, item)
+    /// pairs, best first (see [`ParetoFront2D::to_json_with`]).
+    pub fn to_json_with(&self, item: impl Fn(&T) -> Json) -> Json {
+        let entries: Vec<Json> = self
+            .sorted()
+            .into_iter()
+            .map(|(score, t)| Json::Arr(vec![Json::Num(score), item(t)]))
+            .collect();
+        Json::obj(vec![
+            ("k", Json::Num(self.k as f64)),
+            ("entries", Json::Arr(entries)),
+        ])
+    }
+
+    /// Rebuild a selector from [`TopK::to_json_with`] output by
+    /// re-offering every kept entry.
+    pub fn from_json_with(
+        j: &Json,
+        item: impl Fn(&Json) -> Result<T, String>,
+    ) -> Result<TopK<T>, String> {
+        let k = j.get("k").as_usize().ok_or("topk: missing 'k'")?;
+        let mut top = TopK::new(k);
+        let entries = j
+            .get("entries")
+            .as_arr()
+            .ok_or("topk: missing 'entries' array")?;
+        for e in entries {
+            let a = e.as_arr().ok_or("topk: entry is not an array")?;
+            if a.len() != 2 {
+                return Err("topk: entry is not [score, item]".into());
+            }
+            let score = a[0].as_f64().ok_or("topk: non-numeric score")?;
+            top.insert(score, item(&a[1])?);
+        }
+        Ok(top)
     }
 }
 
@@ -318,6 +404,103 @@ mod tests {
         }
         a.merge(b);
         assert_eq!(a.into_sorted(), single.into_sorted());
+    }
+
+    #[test]
+    fn front_json_roundtrip_is_byte_identical() {
+        let mut rng = crate::util::rng::Rng::new(41);
+        let mut f = ParetoFront2D::new(YSense::Maximize);
+        for i in 0..300 {
+            f.insert(rng.f64(), rng.f64(), i % 7);
+        }
+        let wire = f.to_json_with(|&i| Json::Num(i as f64)).to_string();
+        let back = ParetoFront2D::from_json_with(
+            YSense::Maximize,
+            &Json::parse(&wire).unwrap(),
+            |j| j.as_usize().ok_or_else(|| "payload".to_string()),
+        )
+        .unwrap();
+        assert_eq!(back.seen(), f.seen());
+        // Round-trip serialization is byte-identical — the distributed
+        // merge contract.
+        assert_eq!(
+            back.to_json_with(|&i| Json::Num(i as f64)).to_string(),
+            wire
+        );
+    }
+
+    #[test]
+    fn front_split_serialize_merge_equals_single_stream() {
+        let mut rng = crate::util::rng::Rng::new(43);
+        let pts: Vec<(f64, f64)> =
+            (0..400).map(|_| (rng.f64(), rng.f64())).collect();
+        let mut single = ParetoFront2D::new(YSense::Maximize);
+        let mut a = ParetoFront2D::new(YSense::Maximize);
+        let mut b = ParetoFront2D::new(YSense::Maximize);
+        for (i, &(x, y)) in pts.iter().enumerate() {
+            single.insert(x, y, ());
+            if i % 2 == 0 {
+                a.insert(x, y, ());
+            } else {
+                b.insert(x, y, ());
+            }
+        }
+        // Ship both halves over the wire, then merge — what a coordinator
+        // does with two shard results.
+        let thaw = |f: &ParetoFront2D<()>| {
+            ParetoFront2D::from_json_with(
+                YSense::Maximize,
+                &Json::parse(&f.to_json_with(|_| Json::Null).to_string())
+                    .unwrap(),
+                |_| Ok(()),
+            )
+            .unwrap()
+        };
+        let mut merged = thaw(&a);
+        merged.merge(thaw(&b));
+        assert_eq!(
+            merged.to_json_with(|_| Json::Null).to_string(),
+            single.to_json_with(|_| Json::Null).to_string()
+        );
+        assert_eq!(merged.seen(), 400);
+    }
+
+    #[test]
+    fn front_from_json_rejects_malformed() {
+        let bad = [
+            "{}",
+            r#"{"points":[[1,2]],"seen":1}"#,
+            r#"{"points":[["x",2,null]],"seen":1}"#,
+        ];
+        for src in bad {
+            let j = Json::parse(src).unwrap();
+            assert!(
+                ParetoFront2D::<()>::from_json_with(YSense::Maximize, &j, |_| Ok(()))
+                    .is_err(),
+                "accepted {src}"
+            );
+        }
+    }
+
+    #[test]
+    fn topk_json_roundtrip_keeps_best() {
+        let mut t = TopK::new(3);
+        for (s, name) in [(1.0, "a"), (5.0, "b"), (2.0, "c"), (4.0, "d")] {
+            t.insert(s, name.to_string());
+        }
+        let wire = t.to_json_with(|s| Json::Str(s.clone())).to_string();
+        let back = TopK::from_json_with(&Json::parse(&wire).unwrap(), |j| {
+            j.as_str().map(str::to_string).ok_or_else(|| "item".to_string())
+        })
+        .unwrap();
+        let names: Vec<String> =
+            back.into_sorted().into_iter().map(|(_, n)| n).collect();
+        assert_eq!(names, vec!["b", "d", "c"]);
+        assert!(TopK::<String>::from_json_with(
+            &Json::parse("{}").unwrap(),
+            |_| Err("item".to_string())
+        )
+        .is_err());
     }
 
     #[test]

@@ -111,6 +111,19 @@ impl Args {
     pub fn flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }
+
+    /// Comma-separated list option (`--workers h1:p1,h2:p2`): absent is
+    /// `None`; present is the trimmed entries with empties dropped, so a
+    /// value of just commas yields `Some(vec![])` for the caller to
+    /// reject with its own message.
+    pub fn parse_list(&self, key: &str) -> Option<Vec<String>> {
+        self.get(key).map(|v| {
+            v.split(',')
+                .map(|s| s.trim().to_string())
+                .filter(|s| !s.is_empty())
+                .collect()
+        })
+    }
 }
 
 #[cfg(test)]
@@ -210,6 +223,21 @@ mod tests {
         assert!((a.parse_f64("ridge", 0.0).unwrap() - 1e-6).abs() < 1e-18);
         assert!((a.parse_f64("absent", 2.5).unwrap() - 2.5).abs() < 1e-12);
         assert!(a.parse_f64("bad", 0.0).unwrap_err().contains("--bad"));
+    }
+
+    #[test]
+    fn parse_list_splits_and_trims() {
+        let a = parse("coordinate --workers a:1, b:2 ,,c:3");
+        // NOTE: the grammar binds only up to the next whitespace; the
+        // canonical form is a single comma-joined token.
+        let b = parse("coordinate --workers a:1,b:2,c:3");
+        assert_eq!(
+            b.parse_list("workers").unwrap(),
+            vec!["a:1", "b:2", "c:3"]
+        );
+        assert_eq!(a.parse_list("workers").unwrap(), vec!["a:1"]);
+        assert!(parse("x").parse_list("workers").is_none());
+        assert_eq!(parse("x --workers ,").parse_list("workers").unwrap(), Vec::<String>::new());
     }
 
     #[test]

@@ -4,6 +4,8 @@
 //! plots (Fig 9); `pearson_r` backs the predicted-vs-actual scatter quality
 //! line (Figs 6-8).
 
+use crate::util::json::Json;
+
 /// Mean absolute percentage error (%): 100/n * Σ |ŷ-y| / |y|.
 pub fn mape(actual: &[f64], pred: &[f64]) -> f64 {
     assert_eq!(actual.len(), pred.len());
@@ -238,6 +240,41 @@ impl P2Quantile {
         self.q[2]
     }
 
+    /// Wire form for distributed merging: the full marker state, so a
+    /// deserialized estimator merges exactly like the original would.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("p", Json::Num(self.p)),
+            ("init", Json::arr_f64(&self.init)),
+            ("count", Json::Num(self.count as f64)),
+            ("q", Json::arr_f64(&self.q)),
+            ("n", Json::arr_f64(&self.n)),
+            ("np", Json::arr_f64(&self.np)),
+            ("dn", Json::arr_f64(&self.dn)),
+            (
+                "merged",
+                self.merged.map(Json::num_or_null).unwrap_or(Json::Null),
+            ),
+        ])
+    }
+
+    /// Rebuild an estimator from [`P2Quantile::to_json`] output.
+    pub fn from_json(j: &Json) -> Result<P2Quantile, String> {
+        let p = j.get("p").as_f64().ok_or("p2: missing 'p'")?;
+        let mut out = P2Quantile::new(p);
+        out.init = parse_f64_vec(j.get("init"), "init")?;
+        if out.init.len() > 5 {
+            return Err("p2: 'init' longer than 5".into());
+        }
+        out.count = j.get("count").as_usize().ok_or("p2: missing 'count'")?;
+        out.q = parse_f64_array5(j.get("q"), "q")?;
+        out.n = parse_f64_array5(j.get("n"), "n")?;
+        out.np = parse_f64_array5(j.get("np"), "np")?;
+        out.dn = parse_f64_array5(j.get("dn"), "dn")?;
+        out.merged = j.get("merged").as_f64();
+        Ok(out)
+    }
+
     /// Terminal-phase merge for parallel reduction: combine two workers'
     /// estimates as a count-weighted average. Approximate (P² markers are
     /// not exactly mergeable); call only after all observations are in.
@@ -253,6 +290,22 @@ impl P2Quantile {
         self.merged = Some((self.value() * a + other.value() * b) / (a + b));
         self.count += other.count;
     }
+}
+
+fn parse_f64_vec(j: &Json, what: &str) -> Result<Vec<f64>, String> {
+    j.as_arr()
+        .ok_or_else(|| format!("p2: missing '{what}' array"))?
+        .iter()
+        .map(|v| {
+            v.as_f64().ok_or_else(|| format!("p2: non-numeric '{what}'"))
+        })
+        .collect()
+}
+
+fn parse_f64_array5(j: &Json, what: &str) -> Result<[f64; 5], String> {
+    let v = parse_f64_vec(j, what)?;
+    <[f64; 5]>::try_from(v)
+        .map_err(|_| format!("p2: '{what}' is not 5 elements"))
 }
 
 /// Streaming five-number summary: exact min/max/count, P² interior
@@ -314,6 +367,35 @@ impl StreamingFiveNum {
             q3: self.q3.value(),
             max: self.max,
         }
+    }
+
+    /// Wire form for distributed merging. `min`/`max` are ±inf on an
+    /// empty stream (not representable in JSON), so they serialize via
+    /// `num_or_null` and deserialize back to the empty-stream defaults.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("count", Json::Num(self.count as f64)),
+            ("min", Json::num_or_null(self.min)),
+            ("max", Json::num_or_null(self.max)),
+            ("q1", self.q1.to_json()),
+            ("med", self.med.to_json()),
+            ("q3", self.q3.to_json()),
+        ])
+    }
+
+    /// Rebuild a summary from [`StreamingFiveNum::to_json`] output.
+    pub fn from_json(j: &Json) -> Result<StreamingFiveNum, String> {
+        Ok(StreamingFiveNum {
+            count: j
+                .get("count")
+                .as_usize()
+                .ok_or("fivenum: missing 'count'")?,
+            min: j.get("min").as_f64().unwrap_or(f64::INFINITY),
+            max: j.get("max").as_f64().unwrap_or(f64::NEG_INFINITY),
+            q1: P2Quantile::from_json(j.get("q1"))?,
+            med: P2Quantile::from_json(j.get("med"))?,
+            q3: P2Quantile::from_json(j.get("q3"))?,
+        })
     }
 }
 
@@ -436,6 +518,52 @@ mod tests {
         // Merged median lands between the two stream medians.
         let m = a.summary().median;
         assert!(m > 0.4 && m < 2.6, "merged median {m}");
+    }
+
+    #[test]
+    fn streaming_five_num_json_roundtrip_preserves_state() {
+        let mut rng = crate::util::rng::Rng::new(29);
+        let mut s = StreamingFiveNum::default();
+        for _ in 0..5000 {
+            s.observe(rng.f64());
+        }
+        let wire = s.to_json().to_string();
+        let back = StreamingFiveNum::from_json(
+            &Json::parse(&wire).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(back.count, s.count);
+        // f64 JSON rendering round-trips exactly, so the full marker
+        // state (not just the summary) survives the wire.
+        assert_eq!(back.to_json().to_string(), wire);
+        let (a, b) = (s.summary(), back.summary());
+        assert_eq!(a.min, b.min);
+        assert_eq!(a.median, b.median);
+        assert_eq!(a.max, b.max);
+        // Deserialized summaries keep merging like local ones.
+        let mut other = StreamingFiveNum::default();
+        other.observe(9.0);
+        let mut merged = back.clone();
+        merged.merge(&other);
+        assert_eq!(merged.count, s.count + 1);
+        assert_eq!(merged.summary().max, 9.0);
+    }
+
+    #[test]
+    fn streaming_five_num_empty_roundtrips_through_null_extremes() {
+        let s = StreamingFiveNum::default();
+        let wire = s.to_json().to_string();
+        assert!(wire.contains("null"), "{wire}");
+        let back =
+            StreamingFiveNum::from_json(&Json::parse(&wire).unwrap())
+                .unwrap();
+        assert_eq!(back.count, 0);
+        assert_eq!(back.min, f64::INFINITY);
+        assert_eq!(back.max, f64::NEG_INFINITY);
+        assert!(
+            StreamingFiveNum::from_json(&Json::parse("{}").unwrap())
+                .is_err()
+        );
     }
 
     #[test]

@@ -1,0 +1,352 @@
+//! Distributed sweep integration (ISSUE 4 acceptance): two in-process
+//! `quidam serve` workers on ephemeral ports, driven over real TCP by
+//! the shard dispatcher. Asserts the merged Pareto front is
+//! byte-identical to a single-process sweep of the same grid, that dead
+//! workers get their shards re-dispatched, that cancellation yields a
+//! usable partial merge, and that the coordinator HTTP surface
+//! (`/v1/workers`, `/v1/distributed-sweep`) drives the same machinery.
+
+use std::io::Read as _;
+use std::net::TcpListener;
+use std::sync::{Mutex, OnceLock};
+use std::time::{Duration, Instant};
+
+use quidam::config::SweepSpace;
+use quidam::dse::{self, Objective, SweepSummary};
+use quidam::models::{zoo, Dataset};
+use quidam::pe::PeType;
+use quidam::ppa::{characterize, PpaModels};
+use quidam::server::distrib::{self, DistSweep};
+use quidam::server::{ServeOptions, Server, ServerHandle};
+use quidam::sweep::{Reducer as _, SweepCtl};
+use quidam::tech::TechLibrary;
+use quidam::util::json::Json;
+
+/// One deterministic model fit shared by both workers and the local
+/// baseline — the byte-identity contract requires every evaluator to
+/// run the exact same polynomials.
+fn models() -> &'static PpaModels {
+    static MODELS: OnceLock<PpaModels> = OnceLock::new();
+    MODELS.get_or_init(|| {
+        let tech = TechLibrary::freepdk45();
+        let space = SweepSpace::default();
+        let layers = zoo::resnet_cifar(20, Dataset::Cifar10).layers;
+        let mut m = std::collections::BTreeMap::new();
+        for pe in PeType::ALL {
+            m.insert(pe, characterize(&space, pe, &layers, 40, &tech, 77));
+        }
+        PpaModels::fit(&m, 2).expect("model fit")
+    })
+}
+
+fn spawn_worker() -> ServerHandle {
+    let opts = ServeOptions {
+        addr: "127.0.0.1:0".into(),
+        http_threads: 4,
+        sweep_threads: 2,
+        cache_mib: 16,
+        ..Default::default()
+    };
+    Server::bind(models().clone(), opts)
+        .expect("bind ephemeral port")
+        .spawn()
+}
+
+/// Two long-lived workers shared by every test in this binary.
+fn workers() -> &'static (ServerHandle, ServerHandle) {
+    static WORKERS: OnceLock<(ServerHandle, ServerHandle)> = OnceLock::new();
+    WORKERS.get_or_init(|| (spawn_worker(), spawn_worker()))
+}
+
+fn worker_addrs() -> Vec<String> {
+    let (a, b) = workers();
+    vec![a.addr.to_string(), b.addr.to_string()]
+}
+
+/// A ~192-point grid: small enough for CI, large enough that a shard
+/// plan is non-trivial and every PE type contributes front candidates.
+fn grid() -> SweepSpace {
+    SweepSpace {
+        rows: vec![6, 8, 12],
+        cols: vec![8, 14],
+        sp_if: vec![8, 12],
+        sp_fw: vec![128, 224],
+        sp_ps: vec![24],
+        gb_kib: vec![108, 256],
+        dram_bw: vec![16],
+        pe_types: PeType::ALL.to_vec(),
+    }
+}
+
+fn spec_for(space: SweepSpace) -> DistSweep {
+    DistSweep {
+        workload: "resnet20".into(),
+        space,
+        objective: Objective::PerfPerArea,
+        top_k: 3,
+        threads: 2,
+    }
+}
+
+/// Single-process reference summary of `space` on the shared models.
+fn local_summary(space: &SweepSpace) -> SweepSummary {
+    let layers = &zoo::resnet_cifar(20, Dataset::Cifar10).layers;
+    dse::stream_space(
+        models(),
+        space,
+        layers,
+        2,
+        Objective::PerfPerArea,
+        3,
+        |_p| None,
+        |_row| {},
+    )
+}
+
+fn front_bytes(s: &SweepSummary) -> String {
+    s.front.to_json_with(|c| c.to_json()).to_string()
+}
+
+/// Dispatch a distributed run and hand back (merged, outcome).
+fn dispatch(
+    addrs: &[String],
+    spec: &DistSweep,
+    shards: usize,
+    ctl: &SweepCtl,
+) -> Result<(Option<SweepSummary>, distrib::DistOutcome), String> {
+    let merged: Mutex<Option<SweepSummary>> = Mutex::new(None);
+    let outcome =
+        distrib::run_distributed(addrs, spec, shards, ctl, |part| {
+            let mut m = merged.lock().unwrap();
+            match &mut *m {
+                Some(s) => s.merge(part),
+                None => *m = Some(part),
+            }
+        })?;
+    Ok((merged.into_inner().unwrap(), outcome))
+}
+
+#[test]
+fn sharded_two_worker_front_is_byte_identical_to_single_process() {
+    let space = grid();
+    let n = space.len();
+    let single = local_summary(&space);
+    let ctl = SweepCtl::new();
+    let (merged, outcome) =
+        dispatch(&worker_addrs(), &spec_for(space), 5, &ctl)
+            .expect("distributed run");
+    let merged = merged.expect("at least one shard merged");
+    assert_eq!(outcome.shards_total, 5);
+    assert_eq!(outcome.shards_done, 5);
+    assert_eq!(merged.count, n);
+    assert_eq!(ctl.done(), n, "progress counter drifted from the grid");
+    // The acceptance criterion: byte-identical merged Pareto front.
+    assert_eq!(front_bytes(&merged), front_bytes(&single));
+    assert_eq!(
+        merged.best_int16.expect("int16 reference").cfg,
+        single.best_int16.unwrap().cfg
+    );
+}
+
+#[test]
+fn dead_worker_shards_redispatch_to_live_workers() {
+    // A port that was just bound and released: connection refused.
+    let dead = {
+        let l = TcpListener::bind("127.0.0.1:0").unwrap();
+        l.local_addr().unwrap().to_string()
+    };
+    let mut addrs = worker_addrs();
+    addrs.truncate(1);
+    addrs.push(dead);
+    let space = grid();
+    let n = space.len();
+    let single = local_summary(&space);
+    let ctl = SweepCtl::new();
+    let (merged, outcome) = dispatch(&addrs, &spec_for(space), 6, &ctl)
+        .expect("run must survive a dead worker");
+    let merged = merged.unwrap();
+    assert_eq!(outcome.shards_done, 6);
+    assert!(
+        outcome.redispatches > 0,
+        "dead worker never failed a shard?"
+    );
+    assert_eq!(merged.count, n);
+    assert_eq!(ctl.done(), n);
+    assert_eq!(front_bytes(&merged), front_bytes(&single));
+}
+
+#[test]
+fn all_workers_dead_is_an_error_not_a_hang() {
+    let dead = {
+        let l = TcpListener::bind("127.0.0.1:0").unwrap();
+        l.local_addr().unwrap().to_string()
+    };
+    let ctl = SweepCtl::new();
+    let err = dispatch(&[dead], &spec_for(grid()), 4, &ctl)
+        .expect_err("no live workers must fail");
+    assert!(err.contains("shard"), "unhelpful error: {err}");
+}
+
+#[test]
+fn cancelled_run_keeps_partial_merge_and_stops_dispatching() {
+    let space = grid();
+    let ctl = SweepCtl::new();
+    // Cancel as soon as the first shard result lands; with many small
+    // shards, most of the queue must be abandoned.
+    let merged: Mutex<Option<SweepSummary>> = Mutex::new(None);
+    let outcome = distrib::run_distributed(
+        &worker_addrs(),
+        &spec_for(space),
+        16,
+        &ctl,
+        |part| {
+            ctl.cancel();
+            let mut m = merged.lock().unwrap();
+            match &mut *m {
+                Some(s) => s.merge(part),
+                None => *m = Some(part),
+            }
+        },
+    )
+    .expect("cancelled run is not an error");
+    let merged = merged.into_inner().unwrap().expect("one shard merged");
+    assert!(outcome.shards_done >= 1);
+    assert!(
+        outcome.shards_done < outcome.shards_total,
+        "cancel ignored: all {} shards ran",
+        outcome.shards_total
+    );
+    assert!(!merged.front.is_empty(), "partial front lost");
+    // Pre-cancelled: nothing dispatches at all.
+    let pre = SweepCtl::new();
+    pre.cancel();
+    let (m, out) = dispatch(&worker_addrs(), &spec_for(grid()), 4, &pre)
+        .expect("pre-cancelled run");
+    assert!(m.is_none());
+    assert_eq!(out.shards_done, 0);
+}
+
+#[test]
+fn shard_endpoint_validates_ranges_and_workload() {
+    let addr = worker_addrs().remove(0);
+    let post = |body: &str| -> (u16, String) {
+        let (status, mut reader) =
+            distrib::request(&addr, "POST", "/v1/shard", body)
+                .expect("request");
+        let mut text = String::new();
+        let _ = reader.read_to_string(&mut text);
+        (status, text)
+    };
+    let axes = r#""rows":[8],"cols":[8],"sp_if":[8],"sp_fw":[128],"sp_ps":[24],"gb_kib":[108],"dram_bw":[16]"#;
+    // start >= end.
+    let (status, body) =
+        post(&format!("{{{axes},\"start\":2,\"end\":2}}"));
+    assert_eq!(status, 400, "{body}");
+    // end beyond the grid.
+    let (status, body) =
+        post(&format!("{{{axes},\"start\":0,\"end\":999}}"));
+    assert_eq!(status, 400, "{body}");
+    // Missing range.
+    let (status, body) = post("{}");
+    assert_eq!(status, 400, "{body}");
+    assert!(body.contains("start"), "{body}");
+    // Unknown workload.
+    let (status, body) = post(r#"{"workload":"alexnet","start":0,"end":1}"#);
+    assert_eq!(status, 400, "{body}");
+}
+
+#[test]
+fn http_worker_registry_and_distributed_sweep_job() {
+    // A third server acts as the coordinator.
+    let coordinator = spawn_worker();
+    let base = coordinator.addr.to_string();
+    let call = |method: &str, path: &str, body: &str| -> (u16, Json) {
+        let (status, mut reader) =
+            distrib::request(&base, method, path, body).expect("request");
+        let mut text = String::new();
+        let _ = reader.read_to_string(&mut text);
+        let j = Json::parse(&text)
+            .unwrap_or_else(|e| panic!("bad body {text:?}: {e}"));
+        (status, j)
+    };
+    // Registering an unreachable worker is a 400 up front.
+    let (status, j) =
+        call("POST", "/v1/workers", r#"{"addr":"127.0.0.1:1"}"#);
+    assert_eq!(status, 400, "{j}");
+    // Register both live workers; the registry lists them.
+    for addr in worker_addrs() {
+        let (status, j) = call(
+            "POST",
+            "/v1/workers",
+            &format!(r#"{{"addr":"{addr}"}}"#),
+        );
+        assert_eq!(status, 200, "{j}");
+    }
+    let (status, j) = call("GET", "/v1/workers", "");
+    assert_eq!(status, 200);
+    assert_eq!(j.get("workers").as_arr().unwrap().len(), 2);
+    // With no explicit worker list, the registry drives the sweep.
+    let (status, j) = call(
+        "POST",
+        "/v1/distributed-sweep",
+        r#"{"rows":[6,8,12],"cols":[8,14],"sp_if":[8,12],"sp_fw":[128,224],
+            "sp_ps":[24],"gb_kib":[108,256],"dram_bw":[16],
+            "top_k":3,"threads":2,"shards":5}"#,
+    );
+    assert_eq!(status, 202, "{j}");
+    let id = j.get("id").as_u64().expect("job id");
+    let total = j.get("total").as_usize().unwrap();
+    assert_eq!(total, grid().len());
+    assert_eq!(j.get("shards").as_usize(), Some(5));
+    // Poll to completion.
+    let t0 = Instant::now();
+    let fin = loop {
+        let (status, s) = call("GET", &format!("/v1/jobs/{id}"), "");
+        assert_eq!(status, 200);
+        if s.get("state")
+            .as_str()
+            .map(|st| st == "completed" || st == "failed")
+            .unwrap_or(false)
+        {
+            break s;
+        }
+        assert!(
+            t0.elapsed() < Duration::from_secs(120),
+            "distributed job stuck: {s}"
+        );
+        std::thread::sleep(Duration::from_millis(20));
+    };
+    assert_eq!(fin.get("state").as_str(), Some("completed"), "{fin}");
+    assert_eq!(fin.get("points_done").as_usize(), Some(total));
+    assert_eq!(fin.get("shards_done").as_usize(), Some(5));
+    // The job's merged front matches the single-process run.
+    let single = local_summary(&grid());
+    let front = fin.get("result").get("front").as_arr().expect("front");
+    assert_eq!(front.len(), single.front.len());
+    for (got, want) in front.iter().zip(single.front.points()) {
+        assert_eq!(got.get("energy_j").as_f64(), Some(want.0));
+        assert_eq!(got.get("perf_per_area").as_f64(), Some(want.1));
+    }
+    // A sweep with no registry and no worker list is a 400.
+    let empty = spawn_worker();
+    let ebase = empty.addr.to_string();
+    let (status, j) = {
+        let (status, mut reader) = distrib::request(
+            &ebase,
+            "POST",
+            "/v1/distributed-sweep",
+            r#"{"rows":[8]}"#,
+        )
+        .expect("request");
+        let mut text = String::new();
+        let _ = reader.read_to_string(&mut text);
+        (status, Json::parse(&text).unwrap())
+    };
+    assert_eq!(status, 400);
+    assert!(
+        j.get("error").as_str().unwrap().contains("/v1/workers"),
+        "{j}"
+    );
+    empty.shutdown();
+    coordinator.shutdown();
+}
