@@ -192,11 +192,79 @@ fn main() {
             .unwrap_or(f64::NAN),
     );
 
+    group("guided search (NSGA-II evals-to-front, small grid)");
+    // The guided-search contract end to end: how many unique model
+    // evaluations NSGA-II spends before its archive front covers 90% of
+    // the final hypervolume (evals-to-front), plus the wall time of a
+    // whole search run. Fixed seed — the numbers are deterministic up to
+    // machine speed.
+    let search_space = SweepSpace {
+        rows: vec![6, 8, 12, 16],
+        cols: vec![8, 12, 14, 16],
+        sp_if: vec![8, 12],
+        sp_fw: vec![64, 128, 224],
+        sp_ps: vec![16, 24],
+        gb_kib: vec![64, 108, 256],
+        dram_bw: vec![16],
+        pe_types: PeType::ALL.to_vec(),
+    };
+    let scfg = quidam::search::SearchConfig {
+        algo: quidam::search::Algo::Nsga2,
+        seed: 7,
+        population: 24,
+        generations: 8,
+        objective: dse::Objective::PerfPerArea,
+        top_k: 3,
+        threads: 1,
+        mutation: 0.15,
+        crossover: 0.9,
+    };
+    let search_eval =
+        |c: &AcceleratorConfig| dse::evaluate(&models, c, &net.layers[..4]);
+    let search_res = quidam::search::run_search(
+        &search_space,
+        &scfg,
+        &search_eval,
+        &quidam::sweep::SweepCtl::new(),
+        |_, _| {},
+    )
+    .expect("search runs");
+    let final_hv = search_res
+        .history
+        .last()
+        .map(|s| s.hypervolume)
+        .unwrap_or(0.0);
+    let evals_to_90 = search_res
+        .history
+        .iter()
+        .find(|s| s.hypervolume >= 0.9 * final_hv)
+        .map(|s| s.evals)
+        .unwrap_or(search_res.evals);
+    b.run("search/nsga2_small_grid", || {
+        quidam::search::run_search(
+            &search_space,
+            &scfg,
+            &search_eval,
+            &quidam::sweep::SweepCtl::new(),
+            |_, _| {},
+        )
+        .expect("search runs")
+    });
+    println!(
+        "\nsearch evals-to-front: {} unique evals to reach 90% of the \
+         final hypervolume ({} unique total, {}-point grid, front {})",
+        evals_to_90,
+        search_res.evals,
+        search_space.len(),
+        search_res.summary.front.len(),
+    );
+
     // CI regression tracking: QUIDAM_BENCH_JSON=path dumps the sweep
     // throughput numbers as JSON. Absolute points/s varies with the
     // runner, so the committed baseline gates on the *normalized* ratios
     // (work-stealing vs serial on the same machine) with a 25% tolerance
-    // — see .github/workflows/ci.yml and rust/benches/baseline/.
+    // — see .github/workflows/ci.yml and rust/benches/baseline/. The
+    // `search` object is informational (printed, not gated).
     if let Ok(path) = std::env::var("QUIDAM_BENCH_JSON") {
         use quidam::util::json::Json;
         let serial = per_item("sweep/serial");
@@ -228,6 +296,28 @@ fn main() {
                         "work_stealing_per_fixed",
                         Json::num_or_null(stealing / fixed.max(1e-12)),
                     ),
+                ]),
+            ),
+            (
+                "search",
+                Json::obj(vec![
+                    (
+                        "unique_evals",
+                        Json::Num(search_res.evals as f64),
+                    ),
+                    (
+                        "evals_to_90pct_hv",
+                        Json::Num(evals_to_90 as f64),
+                    ),
+                    (
+                        "grid_points",
+                        Json::Num(search_space.len() as f64),
+                    ),
+                    (
+                        "final_front",
+                        Json::Num(search_res.summary.front.len() as f64),
+                    ),
+                    ("final_hypervolume", Json::num_or_null(final_hv)),
                 ]),
             ),
         ]);

@@ -386,7 +386,7 @@ mod tests {
         let n = s.len();
         Prop::quick(200).check(n, |rng, _| {
             let c = s.point(rng.below(n));
-            c.validate().map_err(|e| e)
+            c.validate()
         });
     }
 

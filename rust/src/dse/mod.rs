@@ -216,7 +216,10 @@ impl Objective {
 /// Streaming summary of a sweep: running energy-vs-perf/area Pareto front,
 /// per-PE top-K by objective, per-PE five-number metric summaries, and the
 /// running best-INT16 normalization reference. Memory is O(front + K +
-/// constants) — independent of how many points stream through.
+/// constants) — independent of how many points stream through. `Clone`
+/// exists for the job manager's live-progress snapshots (a search job
+/// publishes its archive summary once per generation).
+#[derive(Clone)]
 pub struct SweepSummary {
     pub objective: Objective,
     /// Running front over (energy_j, perf_per_area): min energy, max ppa.

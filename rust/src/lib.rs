@@ -20,6 +20,7 @@ pub mod regression;
 pub mod report;
 pub mod rtl;
 pub mod runtime;
+pub mod search;
 pub mod server;
 pub mod simulator;
 pub mod sweep;

@@ -9,6 +9,11 @@
 //!                       [--objective ppa|energy|latency|power]
 //!                       [--points-out FILE] [--format csv|jsonl] (streaming
 //!                       work-stealing sweep; full flag list in README.md)
+//!   quidam search       [--algo nsga2|random|hillclimb] [--seed N]
+//!                       [--population P] [--generations G] (seeded,
+//!                       deterministic multi-objective search over the
+//!                       grid; --min-hv-ratio/--max-evals-ratio gate it
+//!                       against the exhaustive front; DESIGN.md §8)
 //!   quidam coordinate   --workers HOST:PORT,... [--shards N] (shard a grid
 //!                       sweep across remote quidam serve workers and merge
 //!                       the partial fronts; DESIGN.md §7)
@@ -29,7 +34,7 @@ use std::time::Instant;
 use quidam::config::{parse_axis, AcceleratorConfig, SweepSpace};
 use quidam::coordinator::{figures, Coordinator};
 use quidam::dse;
-use quidam::models::{zoo, Dataset};
+use quidam::models::{zoo, Dataset, DnnModel};
 use quidam::pe::PeType;
 use quidam::report::render_table;
 use quidam::rtl::verilog;
@@ -71,6 +76,20 @@ fn parse_pe_list(pes: &str) -> anyhow::Result<Vec<PeType>> {
         .map(|p| PeType::from_name(p.trim()))
         .collect::<Result<Vec<_>, _>>()
         .map_err(anyhow::Error::msg)
+}
+
+/// Parse `--net` into a workload — shared by `quidam explore` and
+/// `quidam search`, which must agree on the layer set for their fronts
+/// to be comparable.
+fn net_from_args(args: &Args) -> anyhow::Result<DnnModel> {
+    Ok(match args.get_or("net", "resnet20").as_str() {
+        "resnet20" => zoo::resnet_cifar(20, Dataset::Cifar10),
+        "resnet56" => zoo::resnet_cifar(56, Dataset::Cifar10),
+        "vgg16" => zoo::vgg16(Dataset::Cifar10),
+        other => anyhow::bail!(
+            "unknown --net '{other}' (want resnet20|resnet56|vgg16)"
+        ),
+    })
 }
 
 /// Build a sweep space from CLI flags: default (or `--dense`) grid,
@@ -147,12 +166,7 @@ fn run_explore(coord: &Coordinator, args: &Args, out: &std::path::Path) -> anyho
     let top_k = num(args, "top-k", 5)?;
     let objective = dse::Objective::from_name(&args.get_or("objective", "ppa"))
         .map_err(anyhow::Error::msg)?;
-    let net = match args.get_or("net", "resnet20").as_str() {
-        "resnet20" => zoo::resnet_cifar(20, Dataset::Cifar10),
-        "resnet56" => zoo::resnet_cifar(56, Dataset::Cifar10),
-        "vgg16" => zoo::vgg16(Dataset::Cifar10),
-        other => anyhow::bail!("unknown --net '{other}' (want resnet20|resnet56|vgg16)"),
-    };
+    let net = net_from_args(args)?;
 
     // --- Optional per-point streaming output.
     let jsonl = match args.get_or("format", "csv").as_str() {
@@ -292,6 +306,190 @@ fn run_explore(coord: &Coordinator, args: &Args, out: &std::path::Path) -> anyho
         None => println!(
             "(no INT16 point in this sweep — normalized columns omitted)"
         ),
+    }
+    Ok(())
+}
+
+/// `quidam search` — seeded multi-objective search (NSGA-II plus the
+/// random-sampling and hill-climb baselines) over the sweep grid through
+/// the compiled-model hot path (DESIGN.md §8). Writes the archive Pareto
+/// front and the per-generation convergence trace as CSVs whose bytes
+/// are a pure function of (grid, models, flags) — the CI determinism
+/// smoke runs it twice and `cmp`s. `--min-hv-ratio` / `--max-evals-ratio`
+/// (or bare `--vs-grid`) additionally run the exhaustive sweep of the
+/// same grid and gate search quality against its front.
+fn run_search_cmd(
+    coord: &Coordinator,
+    args: &Args,
+    out: &std::path::Path,
+) -> anyhow::Result<()> {
+    let space = space_from_args(args, &coord.space)?;
+    let algo = quidam::search::Algo::from_name(&args.get_or("algo", "nsga2"))
+        .map_err(anyhow::Error::msg)?;
+    let objective = dse::Objective::from_name(&args.get_or("objective", "ppa"))
+        .map_err(anyhow::Error::msg)?;
+    let scfg = quidam::search::SearchConfig {
+        algo,
+        seed: num(args, "seed", 42)? as u64,
+        population: num(args, "population", 48)?,
+        generations: num(args, "generations", 20)?,
+        objective,
+        top_k: num(args, "top-k", 5)?,
+        threads: num(args, "threads", coord.threads)?,
+        mutation: args.parse_f64("mutation", 0.15).map_err(anyhow::Error::msg)?,
+        crossover: args.parse_f64("crossover", 0.9).map_err(anyhow::Error::msg)?,
+    };
+    scfg.validate().map_err(anyhow::Error::msg)?;
+    let net = net_from_args(args)?;
+    let gated = args.get("min-hv-ratio").is_some()
+        || args.get("max-evals-ratio").is_some();
+    let vs_grid = args.flag("vs-grid") || gated;
+    // Gate thresholds parse up front: a typo'd --min-hv-ratio must fail
+    // now, not after the search plus an exhaustive reference sweep.
+    let min_hv = args
+        .parse_f64("min-hv-ratio", 0.0)
+        .map_err(anyhow::Error::msg)?;
+    let max_evals = args
+        .parse_f64("max-evals-ratio", 1.0)
+        .map_err(anyhow::Error::msg)?;
+
+    // Flags are all parsed; only now pay for (or load) the models. The
+    // search --seed must not leak into PPA characterization (on a cold
+    // --models cache it would fit different models per search seed, and
+    // seed-sensitivity comparisons would really be comparing models);
+    // characterization keeps its own seed — override with --char-seed.
+    let mut margs = args.clone();
+    match args.get("char-seed") {
+        Some(v) => {
+            margs.options.insert("seed".into(), v.to_string());
+        }
+        None => {
+            margs.options.remove("seed");
+        }
+    }
+    let models = models_for(coord, &margs)?;
+    let compiled =
+        quidam::ppa::CompiledNetModel::compile(&models, &net.layers).ok();
+    let eval = |cfg: &AcceleratorConfig| match &compiled {
+        Some(c) => dse::evaluate_compiled(c, cfg),
+        None => dse::evaluate(&models, cfg, &net.layers),
+    };
+
+    let n = space.len();
+    println!(
+        "searching the {n}-point grid with {} (seed {}): population {} x \
+         {} generations, budget {} evals ({:.1}% of the grid), \
+         objective {}",
+        scfg.algo.name(),
+        scfg.seed,
+        scfg.population,
+        scfg.generations,
+        scfg.budget(),
+        100.0 * scfg.budget() as f64 / n.max(1) as f64,
+        objective.name(),
+    );
+    let t0 = Instant::now();
+    let result = quidam::search::run_search(
+        &space,
+        &scfg,
+        &eval,
+        &quidam::sweep::SweepCtl::new(),
+        |stat, _summary| {
+            println!(
+                "  gen {:>4}  evals {:>8}  front {:>4}  hypervolume {:.6e}",
+                stat.generation,
+                stat.evals,
+                stat.front_size,
+                stat.hypervolume,
+            );
+        },
+    )
+    .map_err(anyhow::Error::msg)?;
+    let dt = t0.elapsed().as_secs_f64();
+
+    std::fs::create_dir_all(out).ok();
+    let front_path = out.join("search_front.csv");
+    quidam::report::write_front_csv(&front_path, &result.summary.front)?;
+    let conv_path = out.join("search_convergence.csv");
+    let conv_rows: Vec<Vec<String>> = result
+        .history
+        .iter()
+        .map(|s| {
+            vec![
+                s.generation.to_string(),
+                s.evals.to_string(),
+                s.front_size.to_string(),
+                format!("{:e}", s.hypervolume),
+            ]
+        })
+        .collect();
+    quidam::report::write_csv(
+        &conv_path,
+        &["generation", "evals", "front_size", "hypervolume"],
+        &conv_rows,
+    )?;
+    println!(
+        "{} unique evaluations ({:.1}% of the grid) in {dt:.2}s{}; front \
+         {} points -> {}, convergence -> {}",
+        result.evals,
+        100.0 * result.evals as f64 / n.max(1) as f64,
+        if result.cancelled { " (cancelled)" } else { "" },
+        result.summary.front.len(),
+        front_path.display(),
+        conv_path.display(),
+    );
+    print_topk_table(&result.summary, " (search archive)", scfg.top_k);
+
+    if vs_grid {
+        // Exhaustive reference sweep over the same grid and eval path;
+        // one shared reference point makes the hypervolumes comparable.
+        let grid = dse::stream_space_eval(
+            &space,
+            scfg.threads,
+            objective,
+            scfg.top_k,
+            &eval,
+            |_p| None,
+            |_row| {},
+            &quidam::sweep::SweepCtl::new(),
+        );
+        fn front_xy(
+            f: &quidam::sweep::reducers::ParetoFront2D<AcceleratorConfig>,
+        ) -> Vec<(f64, f64)> {
+            f.points().iter().map(|&(x, y, _)| (x, y)).collect()
+        }
+        let search_pts = front_xy(&result.summary.front);
+        let grid_pts = front_xy(&grid.front);
+        let union: Vec<(f64, f64)> =
+            search_pts.iter().chain(grid_pts.iter()).copied().collect();
+        let (rx, ry) = quidam::search::hv::reference_for(&union, 0.05)
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "no finite front points to compare against the grid"
+                )
+            })?;
+        let hs =
+            quidam::search::hv::hypervolume_min_max(&search_pts, rx, ry);
+        let hg = quidam::search::hv::hypervolume_min_max(&grid_pts, rx, ry);
+        let hv_ratio = if hg > 0.0 { hs / hg } else { 0.0 };
+        let evals_ratio = result.evals as f64 / n.max(1) as f64;
+        println!(
+            "search-vs-grid: hypervolume ratio {hv_ratio:.4} ({hs:.6e} / \
+             {hg:.6e}), evals ratio {evals_ratio:.4} ({} / {n})",
+            result.evals,
+        );
+        if hv_ratio < min_hv {
+            anyhow::bail!(
+                "search quality gate failed: hypervolume ratio \
+                 {hv_ratio:.4} < --min-hv-ratio {min_hv}"
+            );
+        }
+        if evals_ratio > max_evals {
+            anyhow::bail!(
+                "search budget gate failed: evals ratio {evals_ratio:.4} \
+                 > --max-evals-ratio {max_evals}"
+            );
+        }
     }
     Ok(())
 }
@@ -449,6 +647,7 @@ fn run(sub: &str, args: &Args) -> anyhow::Result<()> {
             ));
         }
         "explore" => run_explore(&coord, args, &out)?,
+        "search" => run_search_cmd(&coord, args, &out)?,
         "coordinate" => run_coordinate(&coord, args, &out)?,
         "serve" => {
             let addr = args.get_or("addr", "127.0.0.1:8787");
@@ -588,13 +787,17 @@ fn run(sub: &str, args: &Args) -> anyhow::Result<()> {
         _ => {
             println!(
                 "QUIDAM — quantization-aware DNN accelerator + model co-exploration\n\
-                 usage: quidam <characterize|evaluate|explore|coordinate|serve|figures|fig4|fig5|\n\
-                 fig678|fig9|fig10|fig12|table3|table4|speedup|coexplore|rtl|train|eval-trained>\n\
+                 usage: quidam <characterize|evaluate|explore|search|coordinate|serve|figures|fig4|\n\
+                 fig5|fig678|fig9|fig10|fig12|table3|table4|speedup|coexplore|rtl|train|eval-trained>\n\
                  common flags: --models PATH --cfgs N --degree D --samples N --out DIR\n\
                  explore flags: --dense --threads N --top-k K --objective ppa|energy|latency|power\n\
                  \x20               --net resnet20|resnet56|vgg16 --points-out FILE --format csv|jsonl\n\
                  \x20               --rows/--cols/--sp-if/--sp-fw/--sp-ps/--gb/--dram-bw LIST|LO:HI:STEP\n\
                  \x20               --pe fp32,int16,lightpe2,lightpe1\n\
+                 search flags:  --algo nsga2|random|hillclimb --seed N --population P\n\
+                 \x20               --generations G --mutation R --crossover R (+ the explore grid\n\
+                 \x20               flags); quality gate: --min-hv-ratio X --max-evals-ratio Y\n\
+                 \x20               (or --vs-grid to just report; DESIGN.md §8)\n\
                  coordinate flags: --workers HOST:PORT,... --shards N (+ the explore grid flags;\n\
                  \x20               shards a sweep across remote quidam serve workers, DESIGN.md §7)\n\
                  serve flags:   --addr HOST:PORT --http-threads N --threads N --cache-mib M\n\

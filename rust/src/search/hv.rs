@@ -1,0 +1,147 @@
+//! 2-D hypervolume — the search-quality metric (DESIGN.md §8).
+//!
+//! The hypervolume indicator of a min-x / max-y point set w.r.t. a
+//! reference point `(ref_x, ref_y)` is the area of the region weakly
+//! dominated by at least one point, clipped to `x <= ref_x`, `y >= ref_y`.
+//! It is the standard scalar measure of multi-objective front quality:
+//! monotone under adding non-dominated points, and equal for two fronts
+//! only when they cover the same trade-off area. `quidam search` reports
+//! it per generation (convergence curve) and the CI quality gate compares
+//! the searched front's hypervolume against the exhaustive sweep's.
+
+/// Hypervolume of `pts` (minimize x, maximize y — the energy vs
+/// perf-per-area convention of `ParetoFront2D` / `dse::SweepSummary`)
+/// with respect to the reference `(ref_x, ref_y)`. Dominated and
+/// non-finite points contribute nothing; points beyond the reference are
+/// clipped out entirely. `pts` need not be mutually non-dominated or
+/// sorted — the front is extracted internally.
+pub fn hypervolume_min_max(
+    pts: &[(f64, f64)],
+    ref_x: f64,
+    ref_y: f64,
+) -> f64 {
+    let mut v: Vec<(f64, f64)> = pts
+        .iter()
+        .copied()
+        .filter(|(x, y)| {
+            x.is_finite() && y.is_finite() && *x <= ref_x && *y >= ref_y
+        })
+        .collect();
+    if v.is_empty() {
+        return 0.0;
+    }
+    // Ascending x, best y first among equal x; the front then keeps the
+    // strictly-improving-y prefix structure.
+    v.sort_by(|a, b| a.0.total_cmp(&b.0).then(b.1.total_cmp(&a.1)));
+    let mut front: Vec<(f64, f64)> = Vec::new();
+    let mut best_y = f64::NEG_INFINITY;
+    for (x, y) in v {
+        if y > best_y {
+            front.push((x, y));
+            best_y = y;
+        }
+    }
+    // Union of rectangles [x_i, ref_x] x [ref_y, y_i]: between x_i and
+    // x_{i+1} the best covering point is i, so the union telescopes into
+    // disjoint strips.
+    let mut area = 0.0;
+    for (i, &(x, y)) in front.iter().enumerate() {
+        let next_x = front.get(i + 1).map(|p| p.0).unwrap_or(ref_x);
+        area += (next_x - x) * (y - ref_y);
+    }
+    area
+}
+
+/// A reference point enclosing every finite point of `pts` with a
+/// relative `margin` beyond the worst observed corner (larger x, smaller
+/// y). `None` when no point is finite. Using one shared reference for
+/// two fronts makes their hypervolumes directly comparable — the CI gate
+/// derives it from the union of the searched and exhaustive fronts.
+pub fn reference_for(
+    pts: &[(f64, f64)],
+    margin: f64,
+) -> Option<(f64, f64)> {
+    let mut max_x = f64::NEG_INFINITY;
+    let mut min_y = f64::INFINITY;
+    let mut any = false;
+    for &(x, y) in pts {
+        if x.is_finite() && y.is_finite() {
+            max_x = max_x.max(x);
+            min_y = min_y.min(y);
+            any = true;
+        }
+    }
+    if !any {
+        return None;
+    }
+    Some((
+        max_x + margin * max_x.abs().max(1e-300),
+        min_y - margin * min_y.abs().max(1e-300),
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_point_rectangle() {
+        // [1,2] x [0,1] = 1.
+        assert_eq!(hypervolume_min_max(&[(1.0, 1.0)], 2.0, 0.0), 1.0);
+    }
+
+    #[test]
+    fn two_point_front_hand_computed() {
+        // (1,1) strip: (2-1)*(1-0) = 1; (2,3) strip: (4-2)*(3-0) = 6.
+        let pts = [(1.0, 1.0), (2.0, 3.0)];
+        assert_eq!(hypervolume_min_max(&pts, 4.0, 0.0), 7.0);
+        // Insertion order must not matter.
+        let rev = [(2.0, 3.0), (1.0, 1.0)];
+        assert_eq!(hypervolume_min_max(&rev, 4.0, 0.0), 7.0);
+    }
+
+    #[test]
+    fn dominated_points_add_nothing() {
+        let front = [(1.0, 1.0), (2.0, 3.0)];
+        let with_dominated =
+            [(1.0, 1.0), (2.0, 3.0), (1.5, 0.5), (3.0, 2.0)];
+        assert_eq!(
+            hypervolume_min_max(&front, 4.0, 0.0),
+            hypervolume_min_max(&with_dominated, 4.0, 0.0),
+        );
+    }
+
+    #[test]
+    fn reference_clips_and_guards() {
+        // A point past the reference on either axis contributes nothing.
+        assert_eq!(hypervolume_min_max(&[(5.0, 1.0)], 4.0, 0.0), 0.0);
+        assert_eq!(hypervolume_min_max(&[(1.0, -1.0)], 4.0, 0.0), 0.0);
+        // Non-finite coordinates are ignored, never NaN-poison the area.
+        let pts = [(f64::NAN, 1.0), (1.0, f64::INFINITY), (1.0, 1.0)];
+        assert_eq!(hypervolume_min_max(&pts, 2.0, 0.0), 1.0);
+        // Empty and all-clipped sets are exactly zero.
+        assert_eq!(hypervolume_min_max(&[], 1.0, 0.0), 0.0);
+    }
+
+    #[test]
+    fn monotone_under_front_growth() {
+        let small = [(2.0, 1.0)];
+        let grown = [(2.0, 1.0), (1.0, 0.5), (3.0, 4.0)];
+        let (rx, ry) = reference_for(&grown, 0.05).unwrap();
+        assert!(
+            hypervolume_min_max(&grown, rx, ry)
+                > hypervolume_min_max(&small, rx, ry)
+        );
+    }
+
+    #[test]
+    fn reference_for_encloses_with_margin() {
+        let pts = [(1.0, 2.0), (3.0, 0.5), (f64::NAN, 9.0)];
+        let (rx, ry) = reference_for(&pts, 0.05).unwrap();
+        assert!(rx > 3.0 && ry < 0.5);
+        assert!((rx - 3.15).abs() < 1e-12);
+        assert!((ry - 0.475).abs() < 1e-12);
+        assert!(reference_for(&[(f64::NAN, 1.0)], 0.05).is_none());
+        assert!(reference_for(&[], 0.05).is_none());
+    }
+}

@@ -1,0 +1,272 @@
+//! NSGA-II machinery: fast non-dominated sorting and crowding distance
+//! (Deb et al., "A Fast and Elitist Multiobjective Genetic Algorithm:
+//! NSGA-II", 2002), specialized to the framework's two-objective case.
+//!
+//! Convention: every objective vector is **maximizing** — callers negate
+//! minimized metrics (energy) before ranking, exactly as
+//! `dse::Objective::score` does. Non-finite objective values must be
+//! mapped to `f64::NEG_INFINITY` by the caller so comparisons stay total
+//! and a NaN metric can never outrank a real design.
+
+use std::cmp::Ordering;
+
+/// Strict Pareto dominance over maximizing objective pairs: `a` is no
+/// worse on both axes and strictly better on at least one.
+pub fn dominates(a: &[f64; 2], b: &[f64; 2]) -> bool {
+    a[0] >= b[0] && a[1] >= b[1] && (a[0] > b[0] || a[1] > b[1])
+}
+
+/// Fast non-dominated sort: partition `0..objs.len()` into fronts, best
+/// first. Every index appears in exactly one front; indices within a
+/// front are in ascending order, so the output is a pure function of the
+/// objective values (the determinism contract, DESIGN.md §8). O(n²) in
+/// the population size, which NSGA-II keeps small by construction.
+pub fn non_dominated_sort(objs: &[[f64; 2]]) -> Vec<Vec<usize>> {
+    let n = objs.len();
+    // dominated_by[p] = indices p dominates; dom_count[q] = how many
+    // dominate q (the classic S_p / n_q bookkeeping).
+    let mut dominated_by: Vec<Vec<usize>> = vec![Vec::new(); n];
+    let mut dom_count = vec![0usize; n];
+    for p in 0..n {
+        for q in (p + 1)..n {
+            if dominates(&objs[p], &objs[q]) {
+                dominated_by[p].push(q);
+                dom_count[q] += 1;
+            } else if dominates(&objs[q], &objs[p]) {
+                dominated_by[q].push(p);
+                dom_count[p] += 1;
+            }
+        }
+    }
+    let mut fronts = Vec::new();
+    let mut current: Vec<usize> =
+        (0..n).filter(|&i| dom_count[i] == 0).collect();
+    while !current.is_empty() {
+        let mut next = Vec::new();
+        for &p in &current {
+            for &q in &dominated_by[p] {
+                dom_count[q] -= 1;
+                if dom_count[q] == 0 {
+                    next.push(q);
+                }
+            }
+        }
+        next.sort_unstable();
+        fronts.push(std::mem::replace(&mut current, next));
+    }
+    fronts
+}
+
+/// Crowding distance of each member of one front (parallel to `front`).
+/// Boundary points on either objective get +inf; interior points sum the
+/// normalized gap between their neighbors per objective. Degenerate
+/// spans (all-equal values, or infinities from sentinel objectives) add
+/// nothing rather than poisoning the distances with NaN.
+pub fn crowding_distance(objs: &[[f64; 2]], front: &[usize]) -> Vec<f64> {
+    let m = front.len();
+    if m <= 2 {
+        return vec![f64::INFINITY; m];
+    }
+    let mut dist = vec![0.0f64; m];
+    for obj in 0..2 {
+        // Positions into `front`, ordered by this objective (ties broken
+        // by index so the ordering — and thus the distances — are a pure
+        // function of the inputs).
+        let mut order: Vec<usize> = (0..m).collect();
+        order.sort_by(|&a, &b| {
+            objs[front[a]][obj]
+                .total_cmp(&objs[front[b]][obj])
+                .then(front[a].cmp(&front[b]))
+        });
+        dist[order[0]] = f64::INFINITY;
+        dist[order[m - 1]] = f64::INFINITY;
+        let span =
+            objs[front[order[m - 1]]][obj] - objs[front[order[0]]][obj];
+        if span > 0.0 && span.is_finite() {
+            for w in 1..m - 1 {
+                let gap = objs[front[order[w + 1]]][obj]
+                    - objs[front[order[w - 1]]][obj];
+                if gap.is_finite() {
+                    dist[order[w]] += gap / span;
+                }
+            }
+        }
+    }
+    dist
+}
+
+/// Per-index (rank, crowding) arrays for a whole population, from the
+/// fronts of [`non_dominated_sort`] — the comparison key of NSGA-II's
+/// binary tournament.
+pub fn rank_and_crowding(
+    objs: &[[f64; 2]],
+    fronts: &[Vec<usize>],
+) -> (Vec<usize>, Vec<f64>) {
+    let mut rank = vec![0usize; objs.len()];
+    let mut crowd = vec![0.0f64; objs.len()];
+    for (r, front) in fronts.iter().enumerate() {
+        let d = crowding_distance(objs, front);
+        for (k, &i) in front.iter().enumerate() {
+            rank[i] = r;
+            crowd[i] = d[k];
+        }
+    }
+    (rank, crowd)
+}
+
+/// The crowded-comparison operator: lower rank wins; within a rank,
+/// larger crowding distance wins; exact ties resolve by index so the
+/// result is deterministic.
+pub fn crowded_less(
+    a: usize,
+    b: usize,
+    rank: &[usize],
+    crowd: &[f64],
+) -> bool {
+    match rank[a].cmp(&rank[b]) {
+        Ordering::Less => true,
+        Ordering::Greater => false,
+        Ordering::Equal => match crowd[b].total_cmp(&crowd[a]) {
+            Ordering::Less => true,
+            Ordering::Greater => false,
+            Ordering::Equal => a < b,
+        },
+    }
+}
+
+/// Environmental selection: the best `target` indices of a combined
+/// population, filled front by front with the final partial front
+/// truncated by descending crowding distance (ties by index). Returns
+/// fewer than `target` only when the population itself is smaller.
+pub fn select(objs: &[[f64; 2]], target: usize) -> Vec<usize> {
+    let fronts = non_dominated_sort(objs);
+    let mut out = Vec::with_capacity(target.min(objs.len()));
+    for front in fronts {
+        if out.len() >= target {
+            break;
+        }
+        let room = target - out.len();
+        if front.len() <= room {
+            out.extend(front);
+            continue;
+        }
+        let d = crowding_distance(objs, &front);
+        let mut by_crowd: Vec<usize> = (0..front.len()).collect();
+        by_crowd.sort_by(|&a, &b| {
+            d[b].total_cmp(&d[a]).then(front[a].cmp(&front[b]))
+        });
+        out.extend(by_crowd[..room].iter().map(|&k| front[k]));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dominance_is_strict() {
+        assert!(dominates(&[2.0, 3.0], &[1.0, 1.0]));
+        assert!(dominates(&[2.0, 1.0], &[2.0, 0.0]));
+        assert!(!dominates(&[2.0, 3.0], &[3.0, 2.0])); // incomparable
+        assert!(!dominates(&[1.0, 1.0], &[1.0, 1.0])); // equal
+        // A NEG_INFINITY sentinel never dominates anything real.
+        assert!(!dominates(&[f64::NEG_INFINITY; 2], &[0.0, 0.0]));
+        assert!(dominates(&[0.0, 0.0], &[f64::NEG_INFINITY; 2]));
+    }
+
+    #[test]
+    fn non_dominated_sort_hand_fixture() {
+        // Maximizing. (2,3) and (3,2) are the first front; (1,1) is
+        // dominated by both; (0,0) by everything.
+        let objs = [[1.0, 1.0], [2.0, 3.0], [3.0, 2.0], [0.0, 0.0]];
+        let fronts = non_dominated_sort(&objs);
+        assert_eq!(fronts, vec![vec![1, 2], vec![0], vec![3]]);
+    }
+
+    #[test]
+    fn non_dominated_sort_covers_every_index_once() {
+        let objs = [
+            [1.0, 9.0],
+            [2.0, 8.0],
+            [3.0, 7.0],
+            [1.0, 9.0], // duplicate of 0: same front (neither dominates)
+            [0.0, 0.0],
+        ];
+        let fronts = non_dominated_sort(&objs);
+        let mut seen: Vec<usize> =
+            fronts.iter().flatten().copied().collect();
+        seen.sort_unstable();
+        assert_eq!(seen, vec![0, 1, 2, 3, 4]);
+        assert_eq!(fronts[0], vec![0, 1, 2, 3]);
+        assert_eq!(fronts[1], vec![4]);
+    }
+
+    #[test]
+    fn crowding_distance_hand_computed() {
+        // One front of four points; spans are 10 on both objectives.
+        // Interior [5,5]: (5-0)/10 on obj0? No — gap is between its
+        // *neighbors*: obj0 neighbors 4 and 10 -> 0.6; obj1 neighbors 6
+        // and 0 -> 0.6; total 1.2. Interior [4,6]: obj0 (5-0)/10 = 0.5;
+        // obj1 (10-5)/10 = 0.5; total 1.0.
+        let objs = [[0.0, 10.0], [5.0, 5.0], [10.0, 0.0], [4.0, 6.0]];
+        let front = [0usize, 1, 2, 3];
+        let d = crowding_distance(&objs, &front);
+        assert_eq!(d[0], f64::INFINITY);
+        assert_eq!(d[2], f64::INFINITY);
+        assert!((d[1] - 1.2).abs() < 1e-12, "got {}", d[1]);
+        assert!((d[3] - 1.0).abs() < 1e-12, "got {}", d[3]);
+    }
+
+    #[test]
+    fn crowding_distance_degenerate_spans() {
+        // All-equal objective values: no NaN, boundaries still infinite.
+        let objs = [[1.0, 1.0], [1.0, 1.0], [1.0, 1.0]];
+        let d = crowding_distance(&objs, &[0, 1, 2]);
+        assert!(d.iter().all(|v| !v.is_nan()));
+        assert_eq!(d[0], f64::INFINITY);
+        // Two-point fronts are all-boundary.
+        let d = crowding_distance(&objs[..2], &[0, 1]);
+        assert_eq!(d, vec![f64::INFINITY, f64::INFINITY]);
+        // A NEG_INFINITY sentinel makes the span infinite: distances
+        // stay finite-or-inf, never NaN.
+        let objs = [[0.0, 0.0], [f64::NEG_INFINITY, 1.0], [1.0, 0.5]];
+        let d = crowding_distance(&objs, &[0, 1, 2]);
+        assert!(d.iter().all(|v| !v.is_nan()), "{d:?}");
+    }
+
+    #[test]
+    fn select_fills_by_front_then_truncates_by_crowding() {
+        // Front 0: {1,2}; front 1: {0,3,4} (3 and 4 tie with 0).
+        let objs = [
+            [1.0, 1.0],
+            [2.0, 3.0],
+            [3.0, 2.0],
+            [1.0, 1.0],
+            [1.0, 1.0],
+        ];
+        // target inside front 0: crowding truncation of a 2-point front
+        // keeps ascending index order (both are boundary points).
+        assert_eq!(select(&objs, 1), vec![1]);
+        assert_eq!(select(&objs, 2), vec![1, 2]);
+        // target spanning both fronts.
+        let s = select(&objs, 4);
+        assert_eq!(s.len(), 4);
+        assert_eq!(&s[..2], &[1, 2]);
+        // Oversized target returns everything.
+        assert_eq!(select(&objs, 10).len(), 5);
+    }
+
+    #[test]
+    fn crowded_less_orders_rank_then_crowding_then_index() {
+        let rank = [0usize, 0, 1];
+        let crowd = [1.0, f64::INFINITY, 5.0];
+        assert!(crowded_less(1, 0, &rank, &crowd)); // same rank, more crowd
+        assert!(crowded_less(0, 2, &rank, &crowd)); // lower rank wins
+        assert!(!crowded_less(0, 0, &rank, &crowd)); // not less than self
+        let tie_rank = [0usize, 0];
+        let tie_crowd = [2.0, 2.0];
+        assert!(crowded_less(0, 1, &tie_rank, &tie_crowd));
+        assert!(!crowded_less(1, 0, &tie_rank, &tie_crowd));
+    }
+}

@@ -67,6 +67,15 @@ pub enum JobKind {
         workers: Vec<String>,
         shards: usize,
     },
+    /// Guided multi-objective search over the grid (DESIGN.md §8):
+    /// NSGA-II or a baseline, seeded and deterministic, publishing the
+    /// archive front and a hypervolume convergence curve generation by
+    /// generation.
+    Search {
+        workload: String,
+        space: SweepSpace,
+        cfg: crate::search::SearchConfig,
+    },
 }
 
 impl JobKind {
@@ -75,6 +84,7 @@ impl JobKind {
             JobKind::Sweep { .. } => "sweep",
             JobKind::Coexplore { .. } => "coexplore",
             JobKind::Distributed { .. } => "distributed-sweep",
+            JobKind::Search { .. } => "search",
         }
     }
 }
@@ -124,6 +134,13 @@ struct JobProgress {
     /// Distributed jobs: shards merged so far / re-dispatched so far.
     shards_done: usize,
     redispatches: usize,
+    /// Search jobs: per-generation convergence records.
+    gen_stats: Vec<crate::search::GenStat>,
+    /// Search jobs: the run itself reported full completion. Needed to
+    /// classify a post-completion cancel correctly — a search's done
+    /// count (unique evals) legitimately finishes below `total` (the
+    /// budget), so the sweep jobs' `done == total` test cannot apply.
+    search_complete: bool,
 }
 
 pub struct Job {
@@ -206,6 +223,34 @@ impl Job {
                 "redispatches",
                 Json::Num(prog.redispatches as f64),
             ));
+        }
+        if let JobKind::Search { cfg, .. } = &self.spec.kind {
+            fields.push(("algo", Json::Str(cfg.algo.name().into())));
+            fields.push((
+                "generations",
+                Json::Num(cfg.generations as f64),
+            ));
+            if let Some(last) = prog.gen_stats.last() {
+                fields.push((
+                    "generation",
+                    Json::Num(last.generation as f64),
+                ));
+                fields.push((
+                    "hypervolume",
+                    Json::num_or_null(last.hypervolume),
+                ));
+            }
+            if state.is_terminal() && !prog.gen_stats.is_empty() {
+                fields.push((
+                    "convergence",
+                    Json::Arr(
+                        prog.gen_stats
+                            .iter()
+                            .map(|s| s.to_json())
+                            .collect(),
+                    ),
+                ));
+            }
         }
         if let Some(s) = &prog.summary {
             fields.push(("front_size", Json::Num(s.front.len() as f64)));
@@ -402,6 +447,9 @@ fn run_one(state: &AppState, job: &Job) {
             workers,
             *shards,
         ),
+        JobKind::Search { workload, space, cfg } => {
+            run_search_job(state, job, workload, space, cfg)
+        }
     };
     let mut st = job.state.lock().unwrap();
     *st = match outcome {
@@ -409,12 +457,24 @@ fn run_one(state: &AppState, job: &Job) {
             *job.error.lock().unwrap() = Some(e);
             JobState::Failed
         }
-        // A cancel that lands after the last block already finished
-        // changed nothing — every item was evaluated, so the job
-        // completed (a client must not mistake a full result for a
-        // partial one).
-        Ok(()) if job.ctl.is_cancelled() && job.ctl.done() < job.total => {
-            JobState::Cancelled
+        // A cancel that lands after the work already finished changed
+        // nothing — the job completed (a client must not mistake a full
+        // result for a partial one). "Finished" is `done == total` for
+        // item-counting jobs; search jobs report completion themselves,
+        // because their done count (unique evals) legitimately ends
+        // below the budget.
+        Ok(()) if job.ctl.is_cancelled() => {
+            let finished = match &job.spec.kind {
+                JobKind::Search { .. } => {
+                    job.progress.lock().unwrap().search_complete
+                }
+                _ => job.ctl.done() >= job.total,
+            };
+            if finished {
+                JobState::Completed
+            } else {
+                JobState::Cancelled
+            }
         }
         Ok(()) => JobState::Completed,
     };
@@ -494,6 +554,43 @@ fn run_distributed(
         },
     )?;
     job.progress.lock().unwrap().redispatches = outcome.redispatches;
+    Ok(())
+}
+
+/// Run a guided search as a job: after every generation the archive
+/// summary snapshot and convergence record publish into the job's
+/// progress, so `GET /v1/jobs/:id` serves a live front size and
+/// hypervolume curve mid-run — and a cancelled search keeps its partial
+/// archive retrievable, exactly like a cancelled sweep job. Progress
+/// counts *unique* model evaluations, so `points_done` may legitimately
+/// finish below `total` (the budget) when proposals revisit cached
+/// points.
+fn run_search_job(
+    state: &AppState,
+    job: &Job,
+    workload: &str,
+    space: &SweepSpace,
+    cfg: &crate::search::SearchConfig,
+) -> Result<(), String> {
+    let layers = state.workload(workload)?.layers.clone();
+    let compiled = state.compiled_map(workload, &layers, &space.pe_types);
+    let result = crate::search::run_search(
+        space,
+        cfg,
+        |c| match compiled.get(&c.pe_type) {
+            Some(m) => dse::evaluate_compiled(m, c),
+            None => dse::evaluate(&state.models, c, &layers),
+        },
+        &job.ctl,
+        |stat, summary| {
+            let mut prog = job.progress.lock().unwrap();
+            prog.gen_stats.push(*stat);
+            prog.summary = Some(summary.clone());
+        },
+    )?;
+    let mut prog = job.progress.lock().unwrap();
+    prog.search_complete = !result.cancelled;
+    prog.summary = Some(result.summary);
     Ok(())
 }
 

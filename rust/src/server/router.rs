@@ -12,6 +12,8 @@
 //!   DELETE /v1/workers    deregister a worker
 //!   POST   /v1/distributed-sweep  enqueue a coordinator job sharding a
 //!                         sweep across the workers
+//!   POST   /v1/search     enqueue a guided multi-objective search job
+//!                         (NSGA-II / baselines, seeded; DESIGN.md §8)
 //!   POST   /v1/jobs       enqueue an async sweep / coexplore job
 //!   GET    /v1/jobs/:id   job status + streaming progress (+ result)
 //!   DELETE /v1/jobs/:id   cooperative cancellation
@@ -710,6 +712,95 @@ fn distributed_sweep(
     )
 }
 
+/// `POST /v1/search` — enqueue a guided multi-objective search job
+/// (DESIGN.md §8). Body: the usual sweep-space fields plus `algo`
+/// (`nsga2|random|hillclimb`), `seed`, `population`, `generations`,
+/// `mutation`, `crossover`, `objective`, `top_k`, `threads`. Responds
+/// 202 with a job id; per-generation progress (front size, hypervolume)
+/// and — once terminal — the archive front and full convergence curve
+/// poll through `/v1/jobs/:id`.
+fn search_create(
+    state: &AppState,
+    req: &Request,
+    conn: &mut TcpStream,
+) -> std::io::Result<()> {
+    type Parsed = (JobSpec, usize, &'static str);
+    let parsed = (|| -> Result<Parsed, String> {
+        let j = req.json()?;
+        let workload = parse_workload(&j)?;
+        state.workload(&workload)?;
+        let space = parse_space(&j)?;
+        let objective = parse_objective(&j)?;
+        let top_k = opt_usize(&j, "top_k")?.unwrap_or(5).clamp(1, 100);
+        let threads = parse_threads(&j, state)?;
+        let algo = match j.get("algo").as_str() {
+            None => crate::search::Algo::Nsga2,
+            Some(s) => crate::search::Algo::from_name(s)?,
+        };
+        let seed = match j.get("seed") {
+            Json::Null => 42,
+            v => v
+                .as_u64()
+                .ok_or("'seed' must be a non-negative integer")?,
+        };
+        let prob = |key: &str, default: f64| -> Result<f64, String> {
+            match j.get(key) {
+                Json::Null => Ok(default),
+                v => v
+                    .as_f64()
+                    .ok_or_else(|| format!("'{key}' must be a number")),
+            }
+        };
+        let cfg = crate::search::SearchConfig {
+            algo,
+            seed,
+            population: opt_usize(&j, "population")?.unwrap_or(48),
+            generations: opt_usize(&j, "generations")?.unwrap_or(20),
+            objective,
+            top_k,
+            threads,
+            mutation: prob("mutation", 0.15)?,
+            crossover: prob("crossover", 0.9)?,
+        };
+        cfg.validate()?;
+        let total = cfg.budget();
+        if total > state.opts.max_job_points {
+            return Err(format!(
+                "search budget is {total} evaluations, above the job \
+                 bound {}",
+                state.opts.max_job_points
+            ));
+        }
+        let algo_name = cfg.algo.name();
+        Ok((
+            JobSpec {
+                kind: JobKind::Search { workload, space, cfg },
+                threads,
+            },
+            total,
+            algo_name,
+        ))
+    })();
+    let (spec, total, algo_name) = match parsed {
+        Ok(v) => v,
+        Err(e) => return http::write_error(conn, 400, &e),
+    };
+    let job = match state.jobs.submit(spec, total) {
+        Ok(job) => job,
+        Err(e) => return http::write_error(conn, 429, &e),
+    };
+    http::write_json(
+        conn,
+        202,
+        &Json::obj(vec![
+            ("id", Json::Num(job.id as f64)),
+            ("state", Json::Str(job.state().name().into())),
+            ("total", Json::Num(total as f64)),
+            ("algo", Json::Str(algo_name.into())),
+        ]),
+    )
+}
+
 /// `POST /v1/jobs` — enqueue an async sweep or coexplore run.
 fn jobs_create(
     state: &AppState,
@@ -864,6 +955,7 @@ pub fn handle(
         ("POST", "/v1/distributed-sweep") => {
             distributed_sweep(state, &req, conn)
         }
+        ("POST", "/v1/search") => search_create(state, &req, conn),
         ("POST", "/v1/jobs") => jobs_create(state, &req, conn),
         (m, p) if p.starts_with("/v1/jobs/") => {
             jobs_item(state, m, p, conn)

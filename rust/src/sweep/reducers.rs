@@ -156,6 +156,7 @@ impl<T: Send> Reducer for ParetoFront2D<T> {
 /// Heap entry ordered by score only (total order via `f64::total_cmp`,
 /// so NaN payload scores can never panic a comparison — they are filtered
 /// before insertion anyway).
+#[derive(Clone)]
 struct Entry<T> {
     score: f64,
     item: T,
@@ -182,6 +183,7 @@ impl<T> Ord for Entry<T> {
 
 /// Bounded best-K selector by a maximizing score. O(log k) insert,
 /// O(k) memory.
+#[derive(Clone)]
 pub struct TopK<T> {
     k: usize,
     heap: BinaryHeap<Entry<T>>,

@@ -330,6 +330,83 @@ fn coexplore_job_completes_with_codesign_front() {
 }
 
 #[test]
+fn search_job_completes_with_convergence_and_is_deterministic() {
+    let _serialized = lock();
+    // 2*2*1*2*1*1*1 x 4 PE types = 32 grid points; the 16 x (4+1) = 80
+    // eval budget exceeds the grid, so the job finishes quickly and the
+    // archive front is exact.
+    let body = r#"{"workload":"resnet20","algo":"nsga2","seed":7,
+        "population":16,"generations":4,"rows":[8,12],"cols":[8,14],
+        "sp_if":[12],"sp_fw":[128,224],"sp_ps":[24],"gb_kib":[108],
+        "dram_bw":[16],"threads":2}"#;
+    let run = |body: &str| -> Json {
+        let (status, j) = post_json("/v1/search", body);
+        assert_eq!(status, 202, "{j}");
+        assert_eq!(j.get("algo").as_str(), Some("nsga2"));
+        assert_eq!(j.get("total").as_usize(), Some(80));
+        let id = j.get("id").as_u64().expect("job id");
+        poll_job(id, Duration::from_secs(120), |s| {
+            s.get("state")
+                .as_str()
+                .map(|st| st == "completed" || st == "failed")
+                .unwrap_or(false)
+        })
+    };
+    let fin = run(body);
+    assert_eq!(fin.get("state").as_str(), Some("completed"), "{fin}");
+    assert_eq!(fin.get("kind").as_str(), Some("search"));
+    // Unique evaluations: bounded by the grid, counted as progress.
+    let done = fin.get("points_done").as_usize().unwrap();
+    assert!(done > 0 && done <= 32, "points_done={done}");
+    // Live-progress fields reached the final generation.
+    assert_eq!(fin.get("generations").as_usize(), Some(4));
+    assert_eq!(fin.get("generation").as_usize(), Some(4));
+    assert!(fin.get("hypervolume").as_f64().unwrap() > 0.0);
+    // Convergence: one record per generation, monotone hypervolume.
+    let conv = fin.get("convergence").as_arr().expect("convergence");
+    assert_eq!(conv.len(), 5);
+    let hv: Vec<f64> = conv
+        .iter()
+        .map(|s| s.get("hypervolume").as_f64().unwrap())
+        .collect();
+    for w in hv.windows(2) {
+        assert!(w[1] >= w[0], "hypervolume regressed: {hv:?}");
+    }
+    // The archive front is served like any sweep job's result, and every
+    // member is a grid point.
+    let front = fin.get("result").get("front").as_arr().expect("front");
+    assert!(!front.is_empty());
+    for p in front {
+        let rows = p.get("config").get("rows").as_usize().unwrap();
+        assert!(rows == 8 || rows == 12, "off-grid front point: {p}");
+    }
+    // Same seed, same grid, same models: byte-identical front (the
+    // determinism contract over the HTTP surface).
+    let again = run(body);
+    assert_eq!(
+        fin.get("result").get("front").to_string(),
+        again.get("result").get("front").to_string(),
+        "repeated seeded search produced a different front"
+    );
+
+    // Error paths: unknown algorithm, malformed probability, oversized
+    // budget — all clean 400s.
+    let (status, j) =
+        post_json("/v1/search", r#"{"algo":"annealing"}"#);
+    assert_eq!(status, 400);
+    assert!(j.get("error").as_str().unwrap().contains("nsga2"));
+    let (status, _) =
+        post_json("/v1/search", r#"{"mutation":"lots"}"#);
+    assert_eq!(status, 400);
+    let (status, j) = post_json(
+        "/v1/search",
+        r#"{"population":65536,"generations":1000000}"#,
+    );
+    assert_eq!(status, 400);
+    assert!(j.get("error").as_str().unwrap().contains("job bound"));
+}
+
+#[test]
 fn error_paths_return_clean_statuses() {
     let _serialized = lock();
     // Malformed JSON.
