@@ -225,6 +225,7 @@ fn main() {
         &search_space,
         &scfg,
         &search_eval,
+        None,
         &quidam::sweep::SweepCtl::new(),
         |_, _| {},
     )
@@ -245,6 +246,7 @@ fn main() {
             &search_space,
             &scfg,
             &search_eval,
+            None,
             &quidam::sweep::SweepCtl::new(),
             |_, _| {},
         )

@@ -17,9 +17,9 @@
 
 use super::AccuracyProvider;
 use crate::models::nas::ArchId;
-use crate::models::Dataset;
+use crate::models::{Dataset, DnnModel};
 use crate::pe::PeType;
-use crate::quant::{rms_rel_error, QuantMode};
+use crate::quant::{rms_rel_error, rms_rel_error_bits, QuantMode};
 
 /// Calibrated proxy constants.
 #[derive(Debug, Clone, Copy)]
@@ -107,6 +107,138 @@ pub fn predict_accuracy(arch: &ArchId, dataset: Dataset, pe: PeType) -> f64 {
     100.0 - predict_error(arch, dataset, pe)
 }
 
+/// Bit-width palette for per-layer mixed-precision genes (DESIGN.md §9).
+/// One genome gene per layer indexes into this list; the last entry
+/// (16 bits) is the "native" storage precision whose noise is negligible,
+/// so a candidate with every layer at the top of the palette prices
+/// quantization exactly like the PE-only proxy.
+pub const BIT_CHOICES: [u32; 4] = [4, 6, 8, 16];
+
+/// Position of `pe` in `PeType::ALL` (the proxy's noise-table index).
+fn pe_index(pe: PeType) -> usize {
+    PeType::ALL
+        .iter()
+        .position(|&p| p == pe)
+        .expect("PeType::ALL covers every variant")
+}
+
+/// Quantization-aware accuracy objective for one workload — the hot-path
+/// form of the §4.5 proxy (DESIGN.md §9).
+///
+/// [`predict_error`] prices quantization purely by PE type; 3-objective
+/// search needs accuracy per *candidate*, where a candidate now carries
+/// one storage bit width per layer. This struct precomputes everything
+/// constant across a search run — the workload's relative capacity, the
+/// per-layer weight fractions, the per-PE arithmetic noise, and the
+/// per-palette storage noise — so one evaluation is O(layers) arithmetic
+/// with no RNG or codec work, cheap enough to sit next to the compiled
+/// PPA models in the sweep hot path.
+///
+/// ```text
+/// err(pe, bits) = err_floor
+///               + A · cap^(-p)
+///               + B · [noise_pe + Σ_l frac_l · noise_bits(b_l)] · cap^(-q)
+/// ```
+///
+/// Arithmetic (PE) and storage (bit-width) noise are independent sources
+/// and add, so the §4.4/§4.5 invariants carry over per layer: reducing
+/// any layer's bit width can never decrease predicted error, and the
+/// LightPE-vs-conventional gap still shrinks as capacity grows. There is
+/// no jitter term: the workload is fixed for a whole search, so jitter
+/// would be a constant offset that cannot change any comparison — and it
+/// would break the per-layer monotonicity the tests pin.
+#[derive(Debug, Clone)]
+pub struct QuantProxy {
+    params: ProxyParams,
+    /// Relative capacity vs the VGG-16 anchor, clamped away from zero.
+    cap: f64,
+    /// Per-layer weight fraction (sums to 1).
+    frac: Vec<f64>,
+    /// Arithmetic noise per PE, indexed in `PeType::ALL` order.
+    pe_noise: [f64; 4],
+    /// Storage noise per palette entry of [`BIT_CHOICES`].
+    bit_noise: [f64; BIT_CHOICES.len()],
+}
+
+impl QuantProxy {
+    /// Build from raw parts: the dataset's calibration, the workload's
+    /// capacity relative to the VGG-16 anchor, and per-layer weight
+    /// counts (the mixing weights of the storage-noise term).
+    pub fn new(
+        dataset: Dataset,
+        relative_capacity: f64,
+        layer_weights: &[u64],
+    ) -> QuantProxy {
+        assert!(!layer_weights.is_empty(), "workload has no layers");
+        let total: f64 =
+            layer_weights.iter().map(|&w| w as f64).sum::<f64>().max(1.0);
+        let frac: Vec<f64> =
+            layer_weights.iter().map(|&w| w as f64 / total).collect();
+        // The same deterministic reference population `quant_noise` uses,
+        // drawn once for both noise tables.
+        let mut rng = crate::util::rng::Rng::new(0xACC0);
+        let ws: Vec<f64> = (0..2000).map(|_| rng.normal()).collect();
+        let mut pe_noise = [0.0; 4];
+        for (i, &pe) in PeType::ALL.iter().enumerate() {
+            pe_noise[i] = rms_rel_error(&ws, QuantMode::from(pe));
+        }
+        let mut bit_noise = [0.0; BIT_CHOICES.len()];
+        for (i, &b) in BIT_CHOICES.iter().enumerate() {
+            bit_noise[i] = rms_rel_error_bits(&ws, b);
+        }
+        QuantProxy {
+            params: ProxyParams::for_dataset(dataset),
+            cap: relative_capacity.max(1e-4),
+            frac,
+            pe_noise,
+            bit_noise,
+        }
+    }
+
+    /// Build for a concrete workload, anchoring capacity on the VGG-16
+    /// model of the same dataset (capacity 1.0 by construction).
+    pub fn for_model(model: &DnnModel) -> QuantProxy {
+        let anchor = crate::models::zoo::vgg16(model.dataset).total_weights();
+        let cap = model.total_weights() as f64 / (anchor as f64).max(1.0);
+        let weights: Vec<u64> =
+            model.layers.iter().map(|l| l.weights()).collect();
+        QuantProxy::new(model.dataset, cap, &weights)
+    }
+
+    pub fn num_layers(&self) -> usize {
+        self.frac.len()
+    }
+
+    pub fn capacity(&self) -> f64 {
+        self.cap
+    }
+
+    /// Top-1 error (%) for a PE type and per-layer palette indices into
+    /// [`BIT_CHOICES`] (`bit_idx.len()` must equal [`Self::num_layers`]).
+    pub fn predict_error(&self, pe: PeType, bit_idx: &[usize]) -> f64 {
+        assert_eq!(
+            bit_idx.len(),
+            self.frac.len(),
+            "one bit-width gene per layer"
+        );
+        let mut storage = 0.0;
+        for (f, &bi) in self.frac.iter().zip(bit_idx) {
+            storage += f * self.bit_noise[bi];
+        }
+        let noise = self.pe_noise[pe_index(pe)] + storage;
+        let p = self.params;
+        let err = p.err_floor
+            + p.cap_a * self.cap.powf(-p.cap_p)
+            + p.quant_b * noise * self.cap.powf(-p.quant_q);
+        err.clamp(0.5, 99.0)
+    }
+
+    /// Top-1 accuracy (%) = 100 - error.
+    pub fn predict_accuracy(&self, pe: PeType, bit_idx: &[usize]) -> f64 {
+        100.0 - self.predict_error(pe, bit_idx)
+    }
+}
+
 /// Provider over named zoo models, mapping them onto capacity anchors so
 /// Figs 10/11 can be generated in "proxy" mode too.
 pub struct ProxyAccuracy;
@@ -192,5 +324,117 @@ mod tests {
             assert_eq!(e1, e2);
             assert!((0.5..=99.0).contains(&e1));
         }
+    }
+
+    // --- QuantProxy (§4.4/§4.5 invariants under mixed precision) ---------
+
+    use crate::util::prop::Prop;
+
+    const NATIVE: usize = BIT_CHOICES.len() - 1;
+
+    fn proxy_at(cap: f64) -> QuantProxy {
+        QuantProxy::new(Dataset::Cifar10, cap, &[1000, 4000, 2000])
+    }
+
+    #[test]
+    fn quant_proxy_error_monotone_in_capacity() {
+        // §4.4: error is monotone non-increasing in capacity, for every
+        // PE type and for mixed per-layer precision alike.
+        let caps = [0.01, 0.05, 0.2, 1.0];
+        for pe in PeType::ALL {
+            for bits in [[NATIVE; 3].to_vec(), vec![0, 1, 2]] {
+                let errs: Vec<f64> = caps
+                    .iter()
+                    .map(|&c| proxy_at(c).predict_error(pe, &bits))
+                    .collect();
+                for w in errs.windows(2) {
+                    assert!(
+                        w[0] >= w[1],
+                        "{pe}: error grew with capacity: {errs:?}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn quant_proxy_gap_shrinks_with_capacity() {
+        // §4.4: the LightPE-vs-INT16 gap shrinks as capacity grows.
+        let gap = |cap: f64| {
+            let p = proxy_at(cap);
+            p.predict_error(PeType::LightPe1, &[NATIVE; 3])
+                - p.predict_error(PeType::Int16, &[NATIVE; 3])
+        };
+        let g_small = gap(0.02);
+        let g_big = gap(1.0);
+        assert!(g_big > 0.0, "LightPE-1 must still trail INT16: {g_big}");
+        assert!(g_big < g_small, "{g_big} !< {g_small}");
+    }
+
+    #[test]
+    fn quant_proxy_anchors_near_table2() {
+        // At native storage precision the mixed-precision proxy reduces
+        // to the PE-only pricing: VGG-16 CIFAR-10 FP32 lands near the
+        // paper's 93.96, and LightPE-2 stays on-par.
+        let vgg = crate::models::zoo::vgg16(Dataset::Cifar10);
+        let p = QuantProxy::for_model(&vgg);
+        assert!((p.capacity() - 1.0).abs() < 1e-9, "{}", p.capacity());
+        assert_eq!(p.num_layers(), vgg.layers.len());
+        let native = vec![NATIVE; p.num_layers()];
+        let fp32 = p.predict_accuracy(PeType::Fp32, &native);
+        assert!((fp32 - 93.96).abs() < 1.5, "quant proxy vgg16 fp32 {fp32}");
+        let l2 = p.predict_accuracy(PeType::LightPe2, &native);
+        assert!((fp32 - l2).abs() < 1.0, "{fp32} vs {l2}");
+    }
+
+    #[test]
+    fn bit_reduction_never_decreases_error() {
+        // The per-layer monotonicity invariant: lowering any single
+        // layer's bit width can never *decrease* predicted error.
+        Prop::quick(200).check(12, |rng, size| {
+            let layers = 1 + size.min(20);
+            let weights: Vec<u64> =
+                (0..layers).map(|_| 1 + rng.below(10_000) as u64).collect();
+            let cap = rng.range_f64(0.01, 1.0);
+            let p = QuantProxy::new(Dataset::Cifar10, cap, &weights);
+            let pe = *rng.choose(&PeType::ALL);
+            let mut bits: Vec<usize> =
+                (0..layers).map(|_| rng.below(BIT_CHOICES.len())).collect();
+            let base = p.predict_error(pe, &bits);
+            let l = rng.below(layers);
+            if bits[l] == 0 {
+                return Ok(()); // already at the coarsest palette entry
+            }
+            bits[l] -= 1;
+            let coarser = p.predict_error(pe, &bits);
+            if coarser < base {
+                return Err(format!(
+                    "layer {l} bit reduction decreased error: \
+                     {coarser} < {base} (bits {bits:?}, cap {cap})"
+                ));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn quant_proxy_deterministic_and_pe_ordered() {
+        // Byte-identical across constructions (the search determinism
+        // contract leans on this), and the §3.2 precision ladder holds
+        // at native storage bits.
+        let a = proxy_at(0.3);
+        let b = proxy_at(0.3);
+        let bits = vec![1, 2, 0];
+        for pe in PeType::ALL {
+            let ea = a.predict_error(pe, &bits);
+            assert_eq!(ea, b.predict_error(pe, &bits));
+            assert!((0.5..=99.0).contains(&ea));
+        }
+        let native = [NATIVE; 3];
+        let e_fp = a.predict_error(PeType::Fp32, &native);
+        let e_i16 = a.predict_error(PeType::Int16, &native);
+        let e_k2 = a.predict_error(PeType::LightPe2, &native);
+        let e_k1 = a.predict_error(PeType::LightPe1, &native);
+        assert!(e_fp <= e_i16 && e_i16 < e_k2 && e_k2 < e_k1);
     }
 }

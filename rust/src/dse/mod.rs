@@ -13,7 +13,7 @@ use crate::config::{AcceleratorConfig, SweepSpace};
 use crate::models::ConvLayer;
 use crate::pe::PeType;
 use crate::ppa::{CompiledNetModel, PpaModels};
-use crate::sweep::reducers::{ParetoFront2D, TopK, YSense};
+use crate::sweep::reducers::{ParetoFront2D, ParetoFrontN, TopK, YSense};
 use crate::sweep::{self, Reducer, SweepCtl};
 use crate::util::json::Json;
 use crate::util::stats::{FiveNum, StreamingFiveNum};
@@ -213,6 +213,52 @@ impl Objective {
     }
 }
 
+/// Axis senses of the 3-objective co-exploration front: minimize energy,
+/// maximize perf/area, maximize predicted accuracy (DESIGN.md §9).
+pub const FRONT3_SENSES: [YSense; 3] =
+    [YSense::Minimize, YSense::Maximize, YSense::Maximize];
+
+/// Payload of a 3-objective front member: the hardware config plus the
+/// per-layer storage bit widths the accuracy proxy priced it at. Two
+/// members may share a config and differ only in bits — mixed precision
+/// makes (config, bits) the design point, not the config alone.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MixedPoint {
+    pub cfg: AcceleratorConfig,
+    pub bits: Vec<u32>,
+}
+
+impl MixedPoint {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            (
+                "bits",
+                Json::Arr(
+                    self.bits.iter().map(|&b| Json::Num(b as f64)).collect(),
+                ),
+            ),
+            ("cfg", self.cfg.to_json()),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<MixedPoint, String> {
+        let cfg = AcceleratorConfig::from_json(j.get("cfg"))?;
+        let arr = match j.get("bits") {
+            Json::Arr(a) => a,
+            _ => return Err("mixed point: missing 'bits' array".into()),
+        };
+        let mut bits = Vec::with_capacity(arr.len());
+        for v in arr {
+            bits.push(
+                v.as_usize()
+                    .ok_or("mixed point: non-integer bit width")?
+                    as u32,
+            );
+        }
+        Ok(MixedPoint { cfg, bits })
+    }
+}
+
 /// Streaming summary of a sweep: running energy-vs-perf/area Pareto front,
 /// per-PE top-K by objective, per-PE five-number metric summaries, and the
 /// running best-INT16 normalization reference. Memory is O(front + K +
@@ -235,6 +281,10 @@ pub struct SweepSummary {
     pub energy_stats: BTreeMap<PeType, StreamingFiveNum>,
     /// Running best-perf/area INT16 point (the paper's normalization ref).
     pub best_int16: Option<DesignPoint>,
+    /// 3-objective (energy, perf/area, accuracy) front over mixed-precision
+    /// candidates — populated only by accuracy-aware searches, `None` on
+    /// every 2-objective path so the legacy wire form stays byte-identical.
+    pub front3: Option<ParetoFrontN<MixedPoint>>,
     pub count: usize,
     /// Top-K size used when a PE type is first observed.
     k_hint: usize,
@@ -250,8 +300,18 @@ impl SweepSummary {
             obj_stats: BTreeMap::new(),
             energy_stats: BTreeMap::new(),
             best_int16: None,
+            front3: None,
             count: 0,
             k_hint: top_k.max(1),
+        }
+    }
+
+    /// Switch on the 3-objective co-exploration front. Idempotent; until
+    /// called, the summary serializes exactly as the 2-objective form.
+    pub fn enable_front3(&mut self) {
+        if self.front3.is_none() {
+            self.front3 =
+                Some(ParetoFrontN::new(FRONT3_SENSES.to_vec()));
         }
     }
 
@@ -281,7 +341,7 @@ impl SweepSummary {
                         .collect(),
                 )
             };
-        Json::obj(vec![
+        let mut fields = vec![
             ("objective", Json::Str(self.objective.name().into())),
             ("top_k", Json::Num(self.k_hint as f64)),
             ("count", Json::Num(self.count as f64)),
@@ -297,7 +357,13 @@ impl SweepSummary {
                     .map(DesignPoint::to_json)
                     .unwrap_or(Json::Null),
             ),
-        ])
+        ];
+        // Emitted only when the 3-objective front is enabled, so every
+        // 2-objective summary keeps its exact legacy bytes.
+        if let Some(f3) = &self.front3 {
+            fields.push(("front3", f3.to_json_with(MixedPoint::to_json)));
+        }
+        Json::obj(fields)
     }
 
     /// Rebuild a summary from [`SweepSummary::to_json`] output.
@@ -355,6 +421,14 @@ impl SweepSummary {
             Json::Null => None,
             v => Some(DesignPoint::from_json(v)?),
         };
+        out.front3 = match j.get("front3") {
+            Json::Null => None,
+            v => Some(ParetoFrontN::from_json_with(
+                FRONT3_SENSES.to_vec(),
+                v,
+                MixedPoint::from_json,
+            )?),
+        };
         Ok(out)
     }
 
@@ -387,6 +461,19 @@ impl SweepSummary {
         {
             self.best_int16 = Some(*p);
         }
+    }
+
+    /// Fold one mixed-precision candidate into the 3-objective front
+    /// (enabling it on first use). Unlike [`SweepSummary::observe`] this
+    /// does not bump `count`: the hardware point was already observed
+    /// once, and several bit-width assignments may share it.
+    pub fn observe3(&mut self, p: &DesignPoint, accuracy: f64, bits: Vec<u32>) {
+        self.enable_front3();
+        let coords = [p.energy_j, p.perf_per_area, accuracy];
+        self.front3
+            .as_mut()
+            .expect("front3 enabled above")
+            .insert(&coords, MixedPoint { cfg: p.cfg, bits });
     }
 }
 
@@ -425,6 +512,12 @@ impl Reducer for SweepSummary {
                 .unwrap_or(true)
             {
                 self.best_int16 = Some(o);
+            }
+        }
+        if let Some(b) = other.front3 {
+            match &mut self.front3 {
+                Some(a) => a.merge(b),
+                slot => *slot = Some(b),
             }
         }
     }
@@ -979,6 +1072,160 @@ mod tests {
         // Malformed wire forms are errors, not panics.
         assert!(SweepSummary::from_json(&Json::parse("{}").unwrap())
             .is_err());
+    }
+
+    /// Deterministic mixed-precision candidates over the small space: a
+    /// few bit assignments per config with a synthetic accuracy that
+    /// rewards wider bits (so the 3-D front is a genuine trade-off).
+    fn mixed_candidates(
+        m: &PpaModels,
+        layers: &[ConvLayer],
+    ) -> Vec<(DesignPoint, f64, Vec<u32>)> {
+        let space = small_space();
+        let mut out = Vec::new();
+        for i in 0..space.len() {
+            let p = evaluate(m, &space.point(i), layers);
+            for (k, bits) in
+                [[4u32, 4, 8], [8, 8, 8], [16, 16, 16]].iter().enumerate()
+            {
+                let acc = 90.0 + k as f64 - 1e-4 * (i % 17) as f64;
+                out.push((p, acc, bits.to_vec()));
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn front3_is_absent_until_observed_and_preserves_legacy_bytes() {
+        let m = models();
+        let layers = &zoo::resnet_cifar(20, Dataset::Cifar10).layers;
+        let mut s = stream_space(
+            &m,
+            &small_space(),
+            layers,
+            2,
+            Objective::Energy,
+            2,
+            |_p| None,
+            |_row| {},
+        );
+        let wire = s.to_json().to_string();
+        assert!(
+            !wire.contains("front3"),
+            "2-objective summary must not grow a front3 key"
+        );
+        // Enabling and folding one candidate adds exactly the new key.
+        let p = evaluate(
+            &m,
+            &crate::config::AcceleratorConfig::baseline(PeType::Int16),
+            layers,
+        );
+        s.observe3(&p, 91.25, vec![8, 8, 16]);
+        let wire3 = s.to_json().to_string();
+        assert!(wire3.contains("\"front3\":"));
+        let back =
+            SweepSummary::from_json(&Json::parse(&wire3).unwrap()).unwrap();
+        assert_eq!(back.to_json().to_string(), wire3);
+        let f3 = back.front3.as_ref().unwrap();
+        assert_eq!(f3.len(), 1);
+        assert_eq!(f3.points()[0].1.bits, vec![8, 8, 16]);
+    }
+
+    #[test]
+    fn front3_split_serialize_merge_is_byte_identical() {
+        // The distributed 3-D contract: stream the mixed candidates into
+        // one summary, or shard them across workers, serialize each shard
+        // to the wire, deserialize, and merge — identical bytes.
+        let m = models();
+        let layers = &zoo::resnet_cifar(20, Dataset::Cifar10).layers;
+        let cands = mixed_candidates(&m, layers);
+        let front3_wire = |s: &SweepSummary| {
+            s.front3
+                .as_ref()
+                .unwrap()
+                .to_json_with(MixedPoint::to_json)
+                .to_string()
+        };
+        let mut single = SweepSummary::new(Objective::PerfPerArea, 3);
+        for (p, acc, bits) in &cands {
+            single.observe(p);
+            single.observe3(p, *acc, bits.clone());
+        }
+        for shards in [2usize, 3, 5] {
+            let mut parts: Vec<SweepSummary> = (0..shards)
+                .map(|_| SweepSummary::new(Objective::PerfPerArea, 3))
+                .collect();
+            for (i, (p, acc, bits)) in cands.iter().enumerate() {
+                parts[i % shards].observe(p);
+                parts[i % shards].observe3(p, *acc, bits.clone());
+            }
+            let mut merged: Option<SweepSummary> = None;
+            for part in parts {
+                // Round-trip each shard through the wire first, exactly
+                // as the coordinator receives worker summaries.
+                let thawed = SweepSummary::from_json(
+                    &Json::parse(&part.to_json().to_string()).unwrap(),
+                )
+                .unwrap();
+                match &mut merged {
+                    Some(s) => s.merge(thawed),
+                    None => merged = Some(thawed),
+                }
+            }
+            let merged = merged.unwrap();
+            assert_eq!(merged.count, single.count, "shards={shards}");
+            assert_eq!(
+                front3_wire(&merged),
+                front3_wire(&single),
+                "shards={shards}"
+            );
+        }
+        let f3 = single.front3.as_ref().unwrap();
+        assert!(f3.len() >= 2, "degenerate 3-D front: {}", f3.len());
+        assert_eq!(f3.seen(), cands.len());
+    }
+
+    #[test]
+    fn front3_members_are_mutually_non_dominated_in_three_axes() {
+        let m = models();
+        let layers = &zoo::resnet_cifar(20, Dataset::Cifar10).layers;
+        let mut s = SweepSummary::new(Objective::PerfPerArea, 3);
+        for (p, acc, bits) in mixed_candidates(&m, layers) {
+            s.observe3(&p, acc, bits);
+        }
+        let pts = s.front3.as_ref().unwrap().points();
+        for (i, (a, _)) in pts.iter().enumerate() {
+            for (b, _) in &pts[i + 1..] {
+                let dom = |u: &[f64], v: &[f64]| {
+                    u[0] <= v[0] && u[1] >= v[1] && u[2] >= v[2]
+                };
+                assert!(
+                    !dom(a, b) && !dom(b, a),
+                    "front3 members dominate each other: {a:?} vs {b:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn mixed_point_json_roundtrip_and_malformed_errors() {
+        let cfg = crate::config::AcceleratorConfig::baseline(PeType::Fp32);
+        let mp = MixedPoint { cfg, bits: vec![4, 6, 8, 16] };
+        let back = MixedPoint::from_json(&mp.to_json()).unwrap();
+        assert_eq!(back, mp);
+        assert!(MixedPoint::from_json(&Json::Null).is_err());
+        assert!(MixedPoint::from_json(
+            &Json::parse("{\"bits\":[8],\"cfg\":{}}").unwrap()
+        )
+        .is_err());
+        assert!(MixedPoint::from_json(
+            &Json::parse(&format!(
+                "{{\"bits\":\"wide\",\"cfg\":{}}}",
+                cfg.to_json()
+            ))
+            .unwrap()
+        )
+        .is_err());
     }
 
     #[test]

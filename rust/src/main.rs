@@ -10,10 +10,14 @@
 //!                       [--points-out FILE] [--format csv|jsonl] (streaming
 //!                       work-stealing sweep; full flag list in README.md)
 //!   quidam search       [--algo nsga2|random|hillclimb] [--seed N]
-//!                       [--population P] [--generations G] (seeded,
+//!                       [--population P] [--generations G]
+//!                       [--objectives energy,perf_area[,accuracy]] (seeded,
 //!                       deterministic multi-objective search over the
-//!                       grid; --min-hv-ratio/--max-evals-ratio gate it
-//!                       against the exhaustive front; DESIGN.md §8)
+//!                       grid; adding `accuracy` grows the genome with one
+//!                       bit-width gene per layer and co-explores the 3-D
+//!                       front, DESIGN.md §9; --min-hv-ratio/
+//!                       --max-evals-ratio gate it against the exhaustive
+//!                       front; DESIGN.md §8)
 //!   quidam coordinate   --workers HOST:PORT,... [--shards N] (shard a grid
 //!                       sweep across remote quidam serve workers and merge
 //!                       the partial fronts; DESIGN.md §7)
@@ -31,6 +35,7 @@ use std::io::Write as _;
 use std::path::PathBuf;
 use std::time::Instant;
 
+use quidam::accuracy::proxy::{QuantProxy, BIT_CHOICES};
 use quidam::config::{parse_axis, AcceleratorConfig, SweepSpace};
 use quidam::coordinator::{figures, Coordinator};
 use quidam::dse;
@@ -90,6 +95,32 @@ fn net_from_args(args: &Args) -> anyhow::Result<DnnModel> {
             "unknown --net '{other}' (want resnet20|resnet56|vgg16)"
         ),
     })
+}
+
+/// Parse `--objectives`: either the legacy energy/perf-per-area pair or
+/// the co-exploration triple that promotes `accuracy` to a third axis
+/// (DESIGN.md §9). Returns true when accuracy joins the front. Order is
+/// fixed — the front coordinates, CSV columns, and wire forms all assume
+/// `[energy, perf_per_area, accuracy]`.
+fn parse_objectives(spec: &str) -> anyhow::Result<bool> {
+    let names: Vec<String> = spec
+        .split(',')
+        .map(|s| s.trim().to_ascii_lowercase())
+        .collect();
+    let is_energy = |s: &str| s == "energy";
+    let is_ppa = |s: &str| {
+        matches!(s, "perf_area" | "perf-per-area" | "perf_per_area" | "ppa")
+    };
+    match names.as_slice() {
+        [a, b] if is_energy(a) && is_ppa(b) => Ok(false),
+        [a, b, c] if is_energy(a) && is_ppa(b) && c.as_str() == "accuracy" => {
+            Ok(true)
+        }
+        _ => anyhow::bail!(
+            "--objectives must be 'energy,perf_area' or \
+             'energy,perf_area,accuracy' (got '{spec}')"
+        ),
+    }
 }
 
 /// Build a sweep space from CLI flags: default (or `--dense`) grid,
@@ -341,6 +372,16 @@ fn run_search_cmd(
     };
     scfg.validate().map_err(anyhow::Error::msg)?;
     let net = net_from_args(args)?;
+    let with_accuracy =
+        parse_objectives(&args.get_or("objectives", "energy,perf_area"))?;
+    // The proxy is built from the workload, never from PPA models: the
+    // accuracy axis must stay a pure function of (net, bit genes, PE type)
+    // so fronts from different model caches remain comparable.
+    let proxy = if with_accuracy {
+        Some(QuantProxy::for_model(&net))
+    } else {
+        None
+    };
     let gated = args.get("min-hv-ratio").is_some()
         || args.get("max-evals-ratio").is_some();
     let vs_grid = args.flag("vs-grid") || gated;
@@ -388,11 +429,22 @@ fn run_search_cmd(
         100.0 * scfg.budget() as f64 / n.max(1) as f64,
         objective.name(),
     );
+    if let Some(p) = &proxy {
+        println!(
+            "  accuracy joins the front: {} per-layer bit genes over \
+             {:?} bits ({} proxy capacity {:.3})",
+            p.num_layers(),
+            BIT_CHOICES,
+            net.name,
+            p.capacity(),
+        );
+    }
     let t0 = Instant::now();
     let result = quidam::search::run_search(
         &space,
         &scfg,
         &eval,
+        proxy.as_ref(),
         &quidam::sweep::SweepCtl::new(),
         |stat, _summary| {
             println!(
@@ -438,39 +490,134 @@ fn run_search_cmd(
         front_path.display(),
         conv_path.display(),
     );
+    if let Some(f3) = &result.summary.front3 {
+        let front3_path = out.join("search_front3.csv");
+        quidam::report::write_front3_csv(&front3_path, f3)?;
+        println!(
+            "3-objective energy/perf-per-area/accuracy front: {} points \
+             -> {}",
+            f3.len(),
+            front3_path.display(),
+        );
+    }
     print_topk_table(&result.summary, " (search archive)", scfg.top_k);
 
     if vs_grid {
         // Exhaustive reference sweep over the same grid and eval path;
         // one shared reference point makes the hypervolumes comparable.
-        let grid = dse::stream_space_eval(
-            &space,
-            scfg.threads,
-            objective,
-            scfg.top_k,
-            &eval,
-            |_p| None,
-            |_row| {},
-            &quidam::sweep::SweepCtl::new(),
-        );
-        fn front_xy(
-            f: &quidam::sweep::reducers::ParetoFront2D<AcceleratorConfig>,
-        ) -> Vec<(f64, f64)> {
-            f.points().iter().map(|&(x, y, _)| (x, y)).collect()
-        }
-        let search_pts = front_xy(&result.summary.front);
-        let grid_pts = front_xy(&grid.front);
-        let union: Vec<(f64, f64)> =
-            search_pts.iter().chain(grid_pts.iter()).copied().collect();
-        let (rx, ry) = quidam::search::hv::reference_for(&union, 0.05)
+        let three = match (&proxy, &result.summary.front3) {
+            (Some(p), Some(f3)) => Some((p, f3)),
+            _ => None,
+        };
+        let (hs, hg) = if let Some((proxy, f3)) = three {
+            // Bit genes never re-price PPA, so for any hardware config the
+            // native-precision assignment dominates its lower-bit siblings
+            // (same energy and perf/area, strictly less quantization
+            // noise): the exhaustive front of the whole mixed space is
+            // exactly the hardware grid held at native bits.
+            let native = vec![BIT_CHOICES.len() - 1; proxy.num_layers()];
+            let grid3 = std::sync::Mutex::new(
+                quidam::sweep::reducers::ParetoFrontN::new(
+                    dse::FRONT3_SENSES.to_vec(),
+                ),
+            );
+            dse::stream_space_eval(
+                &space,
+                scfg.threads,
+                objective,
+                scfg.top_k,
+                &eval,
+                |p| {
+                    let acc =
+                        proxy.predict_accuracy(p.cfg.pe_type, &native);
+                    grid3
+                        .lock()
+                        .unwrap()
+                        .insert(&[p.energy_j, p.perf_per_area, acc], ());
+                    None
+                },
+                |_row| {},
+                &quidam::sweep::SweepCtl::new(),
+            );
+            let grid3 = grid3.into_inner().unwrap();
+            fn coords<T>(f: &[(Vec<f64>, T)]) -> Vec<Vec<f64>> {
+                let mut v: Vec<Vec<f64>> =
+                    f.iter().map(|(c, _)| c.clone()).collect();
+                // Thread scheduling must not wobble the reported volumes:
+                // fix a deterministic point order before slicing.
+                v.sort_by(|a, b| {
+                    a.iter()
+                        .zip(b)
+                        .map(|(x, y)| x.total_cmp(y))
+                        .find(|o| !o.is_eq())
+                        .unwrap_or(std::cmp::Ordering::Equal)
+                });
+                v
+            }
+            let search_pts = coords(f3.points());
+            let grid_pts = coords(grid3.points());
+            let union: Vec<Vec<f64>> = search_pts
+                .iter()
+                .chain(grid_pts.iter())
+                .cloned()
+                .collect();
+            let r = quidam::search::hv::reference_for_n(
+                &union,
+                0.05,
+                &dse::FRONT3_SENSES,
+            )
             .ok_or_else(|| {
                 anyhow::anyhow!(
                     "no finite front points to compare against the grid"
                 )
             })?;
-        let hs =
-            quidam::search::hv::hypervolume_min_max(&search_pts, rx, ry);
-        let hg = quidam::search::hv::hypervolume_min_max(&grid_pts, rx, ry);
+            (
+                quidam::search::hv::hypervolume_n(
+                    &search_pts,
+                    &r,
+                    &dse::FRONT3_SENSES,
+                ),
+                quidam::search::hv::hypervolume_n(
+                    &grid_pts,
+                    &r,
+                    &dse::FRONT3_SENSES,
+                ),
+            )
+        } else {
+            let grid = dse::stream_space_eval(
+                &space,
+                scfg.threads,
+                objective,
+                scfg.top_k,
+                &eval,
+                |_p| None,
+                |_row| {},
+                &quidam::sweep::SweepCtl::new(),
+            );
+            fn front_xy(
+                f: &quidam::sweep::reducers::ParetoFront2D<AcceleratorConfig>,
+            ) -> Vec<(f64, f64)> {
+                f.points().iter().map(|&(x, y, _)| (x, y)).collect()
+            }
+            let search_pts = front_xy(&result.summary.front);
+            let grid_pts = front_xy(&grid.front);
+            let union: Vec<(f64, f64)> =
+                search_pts.iter().chain(grid_pts.iter()).copied().collect();
+            let (rx, ry) = quidam::search::hv::reference_for(&union, 0.05)
+                .ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "no finite front points to compare against the grid"
+                    )
+                })?;
+            (
+                quidam::search::hv::hypervolume_min_max(
+                    &search_pts,
+                    rx,
+                    ry,
+                ),
+                quidam::search::hv::hypervolume_min_max(&grid_pts, rx, ry),
+            )
+        };
         let hv_ratio = if hg > 0.0 { hs / hg } else { 0.0 };
         let evals_ratio = result.evals as f64 / n.max(1) as f64;
         println!(
@@ -796,7 +943,9 @@ fn run(sub: &str, args: &Args) -> anyhow::Result<()> {
                  \x20               --pe fp32,int16,lightpe2,lightpe1\n\
                  search flags:  --algo nsga2|random|hillclimb --seed N --population P\n\
                  \x20               --generations G --mutation R --crossover R (+ the explore grid\n\
-                 \x20               flags); quality gate: --min-hv-ratio X --max-evals-ratio Y\n\
+                 \x20               flags); --objectives energy,perf_area[,accuracy] (accuracy adds\n\
+                 \x20               per-layer bit-width genes + a 3-D front, DESIGN.md §9);\n\
+                 \x20               quality gate: --min-hv-ratio X --max-evals-ratio Y\n\
                  \x20               (or --vs-grid to just report; DESIGN.md §8)\n\
                  coordinate flags: --workers HOST:PORT,... --shards N (+ the explore grid flags;\n\
                  \x20               shards a sweep across remote quidam serve workers, DESIGN.md §7)\n\

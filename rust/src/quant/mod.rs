@@ -60,6 +60,27 @@ pub fn fake_quant(x: &[f64], bits: u32) -> Vec<f64> {
         .collect()
 }
 
+/// RMS relative error (normalized by the tensor's max-abs scale, like
+/// [`rms_rel_error`]) of symmetric `bits`-bit integer fake quantization
+/// applied to the whole tensor at once — the per-layer storage-precision
+/// signal of the mixed-precision accuracy proxy (`accuracy::QuantProxy`).
+/// Monotone non-increasing in `bits`: a finer grid can only shrink the
+/// rounding residual.
+pub fn rms_rel_error_bits(ws: &[f64], bits: u32) -> f64 {
+    assert!(!ws.is_empty());
+    let scale = ws.iter().fold(0.0_f64, |a, v| a.max(v.abs())).max(1e-12);
+    let q = fake_quant(ws, bits);
+    let se: f64 = ws
+        .iter()
+        .zip(&q)
+        .map(|(w, d)| {
+            let e = (d - w) / scale;
+            e * e
+        })
+        .sum();
+    (se / ws.len() as f64).sqrt()
+}
+
 /// RMS relative quantization error of a weight tensor under each PE type —
 /// the signal the accuracy proxy converts into an accuracy penalty.
 pub fn rms_rel_error(ws: &[f64], mode: QuantMode) -> f64 {
@@ -171,5 +192,20 @@ mod tests {
             let n = v / scale;
             assert!((n - n.round()).abs() < 1e-9);
         }
+    }
+
+    #[test]
+    fn rms_rel_error_bits_monotone_in_bits() {
+        let mut rng = crate::util::rng::Rng::new(9);
+        let ws: Vec<f64> = (0..4000).map(|_| rng.normal()).collect();
+        let errs: Vec<f64> = [4u32, 6, 8, 16]
+            .iter()
+            .map(|&b| rms_rel_error_bits(&ws, b))
+            .collect();
+        for w in errs.windows(2) {
+            assert!(w[0] >= w[1], "coarser bits must not beat finer: {errs:?}");
+        }
+        assert!(errs[0] > 1e-3, "4-bit error should be visible: {errs:?}");
+        assert!(errs[3] < 1e-4, "16-bit error should be tiny: {errs:?}");
     }
 }

@@ -7,7 +7,8 @@ use std::io::Write as _;
 use std::path::Path;
 
 use crate::config::AcceleratorConfig;
-use crate::sweep::reducers::ParetoFront2D;
+use crate::dse::MixedPoint;
+use crate::sweep::reducers::{ParetoFront2D, ParetoFrontN};
 
 /// RFC-4180 cell escaping: a cell containing a comma, double quote, CR or
 /// LF is wrapped in quotes with embedded quotes doubled; everything else
@@ -92,6 +93,58 @@ pub fn write_front_csv(
     front: &ParetoFront2D<AcceleratorConfig>,
 ) -> std::io::Result<()> {
     write_csv(path, &FRONT_CSV_HEADER, &front_csv_rows(front))
+}
+
+/// Column order of the 3-objective (energy, perf/area, accuracy)
+/// co-exploration front CSV. `bits` joins the per-layer storage widths
+/// with `/` so the row stays one cell wide.
+pub const FRONT3_CSV_HEADER: [&str; 12] = [
+    "pe_type", "rows", "cols", "sp_if", "sp_fw", "sp_ps", "gb_kib",
+    "dram_bw", "bits", "energy_j", "perf_per_area", "accuracy",
+];
+
+/// Render a 3-objective front as CSV rows. The front's serialization
+/// order is a pure function of its point set (ascending lexicographic
+/// in minimized coordinates), so distributed merges render
+/// byte-identically to single-process runs, exactly like
+/// [`front_csv_rows`].
+pub fn front3_csv_rows(
+    front: &ParetoFrontN<MixedPoint>,
+) -> Vec<Vec<String>> {
+    front
+        .points()
+        .iter()
+        .map(|(coords, mp)| {
+            let cfg = &mp.cfg;
+            vec![
+                cfg.pe_type.name().to_string(),
+                cfg.rows.to_string(),
+                cfg.cols.to_string(),
+                cfg.sp_if.to_string(),
+                cfg.sp_fw.to_string(),
+                cfg.sp_ps.to_string(),
+                cfg.gb_kib.to_string(),
+                cfg.dram_bw.to_string(),
+                mp.bits
+                    .iter()
+                    .map(|b| b.to_string())
+                    .collect::<Vec<_>>()
+                    .join("/"),
+                format!("{:e}", coords[0]),
+                format!("{:e}", coords[1]),
+                format!("{:e}", coords[2]),
+            ]
+        })
+        .collect()
+}
+
+/// Write a 3-objective front via [`front3_csv_rows`] under
+/// [`FRONT3_CSV_HEADER`].
+pub fn write_front3_csv(
+    path: &Path,
+    front: &ParetoFrontN<MixedPoint>,
+) -> std::io::Result<()> {
+    write_csv(path, &FRONT3_CSV_HEADER, &front3_csv_rows(front))
 }
 
 /// Emit one NDJSON record: a compact single-line JSON object terminated by
@@ -358,6 +411,53 @@ mod tests {
         // Merged-shard output is byte-identical to the single-stream one.
         assert_eq!(t1, t2);
         assert!(t1.starts_with("pe_type,rows,"));
+        assert_eq!(t1.lines().count(), 1 + single.len());
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn front3_csv_output_is_deterministic_and_merge_invariant() {
+        use crate::dse::FRONT3_SENSES;
+        use crate::pe::PeType;
+        use crate::sweep::Reducer as _;
+        let pts = [
+            ([3.0, 5.0, 90.0], vec![16u32, 16]),
+            ([1.0, 1.0, 92.0], vec![4, 8]),
+            ([2.0, 4.0, 91.5], vec![8, 8]),
+            ([0.5, 0.25, 93.0], vec![4, 4]),
+        ];
+        let mut single = ParetoFrontN::new(FRONT3_SENSES.to_vec());
+        let mut a = ParetoFrontN::new(FRONT3_SENSES.to_vec());
+        let mut b = ParetoFrontN::new(FRONT3_SENSES.to_vec());
+        for (i, (coords, bits)) in pts.iter().enumerate() {
+            let mp = MixedPoint {
+                cfg: AcceleratorConfig::baseline(PeType::Int16),
+                bits: bits.clone(),
+            };
+            single.insert(coords, mp.clone());
+            if i % 2 == 0 {
+                a.insert(coords, mp);
+            } else {
+                b.insert(coords, mp);
+            }
+        }
+        a.merge(b);
+        let dir = std::env::temp_dir().join(format!(
+            "quidam_test_front3_{}",
+            std::process::id()
+        ));
+        let (p1, p2) = (dir.join("single.csv"), dir.join("merged.csv"));
+        write_front3_csv(&p1, &single).unwrap();
+        write_front3_csv(&p2, &a).unwrap();
+        let (t1, t2) = (
+            std::fs::read_to_string(&p1).unwrap(),
+            std::fs::read_to_string(&p2).unwrap(),
+        );
+        assert_eq!(t1, t2);
+        assert!(t1.starts_with("pe_type,rows,"));
+        assert!(t1.contains("accuracy"));
+        // Per-layer widths render as one slash-joined cell.
+        assert!(t1.contains(",4/8,"));
         assert_eq!(t1.lines().count(), 1 + single.len());
         let _ = std::fs::remove_dir_all(dir);
     }

@@ -1,13 +1,19 @@
-//! 2-D hypervolume — the search-quality metric (DESIGN.md §8).
+//! 2-D and N-dimensional hypervolume — the search-quality metric
+//! (DESIGN.md §8, §9).
 //!
-//! The hypervolume indicator of a min-x / max-y point set w.r.t. a
-//! reference point `(ref_x, ref_y)` is the area of the region weakly
-//! dominated by at least one point, clipped to `x <= ref_x`, `y >= ref_y`.
-//! It is the standard scalar measure of multi-objective front quality:
-//! monotone under adding non-dominated points, and equal for two fronts
-//! only when they cover the same trade-off area. `quidam search` reports
-//! it per generation (convergence curve) and the CI quality gate compares
-//! the searched front's hypervolume against the exhaustive sweep's.
+//! The hypervolume indicator of a point set w.r.t. a reference point is
+//! the volume of the region weakly dominated by at least one point,
+//! clipped at the reference. It is the standard scalar measure of
+//! multi-objective front quality: monotone under adding non-dominated
+//! points, and equal for two fronts only when they cover the same
+//! trade-off region. `quidam search` reports it per generation
+//! (convergence curve) and the CI quality gates compare the searched
+//! front's hypervolume against the exhaustive sweep's — 2-objective runs
+//! use the specialized [`hypervolume_min_max`], 3-objective runs the
+//! general [`hypervolume_n`] (HSO-style recursive slicing, exact at the
+//! N<=4 sizes we use).
+
+use crate::sweep::reducers::YSense;
 
 /// Hypervolume of `pts` (minimize x, maximize y — the energy vs
 /// perf-per-area convention of `ParetoFront2D` / `dse::SweepSummary`)
@@ -80,6 +86,132 @@ pub fn reference_for(
     ))
 }
 
+/// Minimized-space key (maximized axes negate) — mirrors the keying of
+/// `sweep::reducers::ParetoFrontN`.
+fn mkey(sense: YSense, v: f64) -> f64 {
+    match sense {
+        YSense::Maximize => -v,
+        YSense::Minimize => v,
+    }
+}
+
+/// Hypervolume of `pts` under per-axis `senses` w.r.t. `reference`
+/// (DESIGN.md §9). Dominated and non-finite points contribute nothing;
+/// points beyond the reference on any axis are clipped out entirely.
+/// `pts` need not be mutually non-dominated or sorted. Exact (not Monte
+/// Carlo): the recursion slices along the last axis and charges each slab
+/// the (N-1)-dim hypervolume of the points that cover it (HSO, Knowles'
+/// "hypervolume by slicing objectives") — O(f^2 log f) at N=3, fine for
+/// the archive-front sizes search produces. At N=2 it agrees with
+/// [`hypervolume_min_max`] (property-tested below).
+pub fn hypervolume_n(
+    pts: &[Vec<f64>],
+    reference: &[f64],
+    senses: &[YSense],
+) -> f64 {
+    assert_eq!(reference.len(), senses.len(), "reference arity");
+    let n = senses.len();
+    let mut v: Vec<Vec<f64>> = Vec::new();
+    'point: for p in pts {
+        assert_eq!(p.len(), n, "point arity");
+        let mut m = Vec::with_capacity(n);
+        for k in 0..n {
+            let c = mkey(senses[k], p[k]);
+            if !c.is_finite() || c > mkey(senses[k], reference[k]) {
+                continue 'point;
+            }
+            m.push(c);
+        }
+        v.push(m);
+    }
+    // Prune dominated points (harmless for correctness — a dominated
+    // point's box is inside its dominator's — but it keeps the recursion
+    // small).
+    let keep: Vec<bool> = (0..v.len())
+        .map(|i| {
+            !v.iter().enumerate().any(|(j, q)| {
+                j != i
+                    && (0..n).all(|k| q[k] <= v[i][k])
+                    && (j < i || (0..n).any(|k| q[k] < v[i][k]))
+            })
+        })
+        .collect();
+    let mut front: Vec<Vec<f64>> = v
+        .into_iter()
+        .zip(keep)
+        .filter_map(|(p, k)| k.then_some(p))
+        .collect();
+    let r: Vec<f64> = (0..n).map(|k| mkey(senses[k], reference[k])).collect();
+    hv_minimized(&mut front, &r)
+}
+
+/// Recursive slicing on all-minimized coordinates with reference `r`
+/// (every point is <= r on every axis).
+fn hv_minimized(pts: &mut [Vec<f64>], r: &[f64]) -> f64 {
+    if pts.is_empty() {
+        return 0.0;
+    }
+    let n = r.len();
+    if n == 1 {
+        let best = pts.iter().map(|p| p[0]).fold(f64::INFINITY, f64::min);
+        return (r[0] - best).max(0.0);
+    }
+    // Slice along the last axis: between consecutive distinct values the
+    // covering set is the prefix, whose projection pays the (N-1)-dim
+    // hypervolume for the slab.
+    pts.sort_by(|a, b| a[n - 1].total_cmp(&b[n - 1]));
+    let mut vol = 0.0;
+    for i in 0..pts.len() {
+        let z = pts[i][n - 1];
+        let z_next = if i + 1 < pts.len() {
+            pts[i + 1][n - 1]
+        } else {
+            r[n - 1]
+        };
+        let depth = z_next - z;
+        if depth > 0.0 {
+            let mut proj: Vec<Vec<f64>> =
+                pts[..=i].iter().map(|p| p[..n - 1].to_vec()).collect();
+            vol += depth * hv_minimized(&mut proj, &r[..n - 1]);
+        }
+    }
+    vol
+}
+
+/// N-dimensional [`reference_for`]: a reference point enclosing every
+/// finite point with a relative `margin` past the worst observed corner
+/// per axis. At N=2 with senses `[Minimize, Maximize]` it computes
+/// exactly `reference_for`'s `(ref_x, ref_y)`.
+pub fn reference_for_n(
+    pts: &[Vec<f64>],
+    margin: f64,
+    senses: &[YSense],
+) -> Option<Vec<f64>> {
+    let n = senses.len();
+    let mut worst = vec![f64::NEG_INFINITY; n];
+    let mut any = false;
+    for p in pts {
+        assert_eq!(p.len(), n, "point arity");
+        if p.iter().all(|c| c.is_finite()) {
+            any = true;
+            for k in 0..n {
+                worst[k] = worst[k].max(mkey(senses[k], p[k]));
+            }
+        }
+    }
+    if !any {
+        return None;
+    }
+    Some(
+        (0..n)
+            .map(|k| {
+                let w = worst[k] + margin * worst[k].abs().max(1e-300);
+                mkey(senses[k], w) // mkey is its own inverse
+            })
+            .collect(),
+    )
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -143,5 +275,132 @@ mod tests {
         assert!((ry - 0.475).abs() < 1e-12);
         assert!(reference_for(&[(f64::NAN, 1.0)], 0.05).is_none());
         assert!(reference_for(&[], 0.05).is_none());
+    }
+
+    // --- N-dimensional ----------------------------------------------------
+
+    const MIN3: [YSense; 3] =
+        [YSense::Minimize, YSense::Minimize, YSense::Minimize];
+    /// The 3-objective search convention: minimize energy, maximize
+    /// perf/area, maximize accuracy.
+    const SEARCH3: [YSense; 3] =
+        [YSense::Minimize, YSense::Maximize, YSense::Maximize];
+
+    fn pts3(raw: &[[f64; 3]]) -> Vec<Vec<f64>> {
+        raw.iter().map(|p| p.to_vec()).collect()
+    }
+
+    #[test]
+    fn hv3_single_point_box() {
+        // Mixed senses: box [1,2] x [0,1] x [0,1] = 1.
+        let pts = pts3(&[[1.0, 1.0, 1.0]]);
+        assert_eq!(hypervolume_n(&pts, &[2.0, 0.0, 0.0], &SEARCH3), 1.0);
+        // All-minimize: box (1,1,2)..(4,4,4) = 3*3*2 = 18.
+        let pts = pts3(&[[1.0, 1.0, 2.0]]);
+        assert_eq!(hypervolume_n(&pts, &[4.0, 4.0, 4.0], &MIN3), 18.0);
+    }
+
+    #[test]
+    fn hv3_two_point_union_hand_computed() {
+        // a=(1,1,2): 3*3*2=18. b=(2,2,1): 2*2*3=12.
+        // Intersection (2,2,2)..(4,4,4): 2*2*2=8. Union = 18+12-8 = 22.
+        let pts = pts3(&[[1.0, 1.0, 2.0], [2.0, 2.0, 1.0]]);
+        assert_eq!(hypervolume_n(&pts, &[4.0, 4.0, 4.0], &MIN3), 22.0);
+        // Insertion order must not matter.
+        let rev = pts3(&[[2.0, 2.0, 1.0], [1.0, 1.0, 2.0]]);
+        assert_eq!(hypervolume_n(&rev, &[4.0, 4.0, 4.0], &MIN3), 22.0);
+    }
+
+    #[test]
+    fn hv3_tied_axis_hand_computed() {
+        // Degenerate tie on the first axis: a=(1,2,3) vol 3*2*1=6,
+        // b=(1,3,2) vol 3*1*2=6, intersection (1,3,3)..(4,4,4) = 3.
+        // Union = 6+6-3 = 9.
+        let pts = pts3(&[[1.0, 2.0, 3.0], [1.0, 3.0, 2.0]]);
+        assert_eq!(hypervolume_n(&pts, &[4.0, 4.0, 4.0], &MIN3), 9.0);
+    }
+
+    #[test]
+    fn hv3_duplicates_and_dominated_add_nothing() {
+        let base = pts3(&[[1.0, 1.0, 2.0], [2.0, 2.0, 1.0]]);
+        let noisy = pts3(&[
+            [1.0, 1.0, 2.0],
+            [2.0, 2.0, 1.0],
+            [1.0, 1.0, 2.0], // exact duplicate
+            [3.0, 3.0, 3.0], // strictly dominated
+            [2.0, 2.0, 1.5], // dominated with a tie
+            [f64::NAN, 1.0, 1.0],
+            [5.0, 0.0, 0.0], // beyond the reference on axis 0
+        ]);
+        let r = [4.0, 4.0, 4.0];
+        assert_eq!(
+            hypervolume_n(&base, &r, &MIN3),
+            hypervolume_n(&noisy, &r, &MIN3)
+        );
+        // Empty and fully-clipped sets are exactly zero.
+        assert_eq!(hypervolume_n(&[], &r, &MIN3), 0.0);
+        let clipped = pts3(&[[5.0, 5.0, 5.0]]);
+        assert_eq!(hypervolume_n(&clipped, &r, &MIN3), 0.0);
+    }
+
+    #[test]
+    fn hv_n_at_2d_matches_hypervolume_min_max() {
+        let mut rng = crate::util::rng::Rng::new(79);
+        let senses = [YSense::Minimize, YSense::Maximize];
+        for _ in 0..50 {
+            let pts2: Vec<(f64, f64)> =
+                (0..40).map(|_| (rng.f64(), rng.f64())).collect();
+            let ptsn: Vec<Vec<f64>> =
+                pts2.iter().map(|&(x, y)| vec![x, y]).collect();
+            let (rx, ry) = reference_for(&pts2, 0.05).unwrap();
+            let a = hypervolume_min_max(&pts2, rx, ry);
+            let b = hypervolume_n(&ptsn, &[rx, ry], &senses);
+            assert!(
+                (a - b).abs() <= 1e-12 * a.abs().max(1.0),
+                "2-D {a} vs N-dim {b}"
+            );
+        }
+    }
+
+    #[test]
+    fn hv3_monotone_under_front_growth() {
+        let small = pts3(&[[2.0, 1.0, 1.0]]);
+        let grown = pts3(&[
+            [2.0, 1.0, 1.0],
+            [1.0, 0.5, 0.5],
+            [3.0, 4.0, 2.0],
+        ]);
+        let r = reference_for_n(&grown, 0.05, &SEARCH3).unwrap();
+        assert!(
+            hypervolume_n(&grown, &r, &SEARCH3)
+                > hypervolume_n(&small, &r, &SEARCH3)
+        );
+    }
+
+    #[test]
+    fn reference_for_n_matches_2d_and_encloses() {
+        // N=2 equivalence with reference_for — exact, not approximate.
+        let pts2 = [(1.0, 2.0), (3.0, 0.5), (f64::NAN, 9.0)];
+        let ptsn: Vec<Vec<f64>> =
+            pts2.iter().map(|&(x, y)| vec![x, y]).collect();
+        let (rx, ry) = reference_for(&pts2, 0.05).unwrap();
+        let r = reference_for_n(
+            &ptsn,
+            0.05,
+            &[YSense::Minimize, YSense::Maximize],
+        )
+        .unwrap();
+        assert_eq!(r, vec![rx, ry]);
+        // N=3: worse than the worst corner on every axis, per sense.
+        let pts = pts3(&[[1.0, 2.0, 3.0], [3.0, 0.5, 1.0]]);
+        let r = reference_for_n(&pts, 0.05, &SEARCH3).unwrap();
+        assert!(r[0] > 3.0 && r[1] < 0.5 && r[2] < 1.0);
+        assert!(reference_for_n(&[], 0.05, &SEARCH3).is_none());
+        assert!(reference_for_n(
+            &pts3(&[[f64::NAN, 1.0, 1.0]]),
+            0.05,
+            &SEARCH3
+        )
+        .is_none());
     }
 }

@@ -13,6 +13,19 @@
 //! hill-climbing baselines, all over the same genome: one index per
 //! sweep axis, so every candidate is a grid point by construction.
 //!
+//! Accuracy-aware mode (DESIGN.md §9): pass a
+//! [`QuantProxy`](crate::accuracy::proxy::QuantProxy) to [`run_search`]
+//! and predicted accuracy joins as a third maximizing objective. The
+//! genome grows one bit-width gene per workload layer (palette indices
+//! into [`BIT_CHOICES`](crate::accuracy::proxy::BIT_CHOICES)), still a
+//! mixed-radix decomposition, so every mutation/crossover product stays
+//! grid- and palette-feasible with no repair step. Hardware metrics are
+//! cached per grid index (bit genes never re-price the PPA models), and
+//! every novel (config, bits) candidate folds into the archive's 3-D
+//! [`front3`](crate::dse::SweepSummary::front3) reducer. Without a
+//! proxy the genome, RNG stream, and outputs are unchanged byte for
+//! byte.
+//!
 //! Reuse contract: evaluation goes through a caller-supplied
 //! `Fn(&AcceleratorConfig) -> DesignPoint` (the compiled-model hot path
 //! at every call site), every evaluated point folds into the same
@@ -36,14 +49,17 @@ pub mod nsga;
 use std::cmp::Ordering;
 use std::collections::{BTreeMap, BTreeSet};
 
+use crate::accuracy::proxy::{QuantProxy, BIT_CHOICES};
 use crate::config::{AcceleratorConfig, SweepSpace};
-use crate::dse::{DesignPoint, Objective, SweepSummary};
+use crate::dse::{DesignPoint, Objective, SweepSummary, FRONT3_SENSES};
 use crate::sweep::{self, SweepCtl};
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 
-/// Number of genome axes: the seven hardware axes of [`SweepSpace`] plus
-/// the PE type (which carries the quantization bit widths).
+/// Number of hardware genome axes: the seven hardware axes of
+/// [`SweepSpace`] plus the PE type (which carries the compute precision).
+/// Accuracy-aware genomes append one storage bit-width gene per workload
+/// layer after these.
 pub const GENOME_AXES: usize = 8;
 
 /// Per-axis cardinalities of a sweep space, in the mixed-radix order of
@@ -61,19 +77,32 @@ pub fn grid_radices(space: &SweepSpace) -> [usize; GENOME_AXES] {
     ]
 }
 
-/// One candidate design: an index into each sweep axis. A genome is
-/// exactly the mixed-radix decomposition of a grid index, so the
-/// genome↔grid bijection is trivial and *every* crossover or mutation
-/// product is grid-feasible by construction — there is no repair step.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+/// Radices of the full search genome: the hardware grid axes plus, in
+/// accuracy-aware mode, one bit-width gene per workload layer over the
+/// [`BIT_CHOICES`] palette. With `layers == 0` this is exactly the grid
+/// alphabet (the 2-objective genome).
+pub fn search_radices(space: &SweepSpace, layers: usize) -> Vec<usize> {
+    let mut rad = grid_radices(space).to_vec();
+    rad.extend(std::iter::repeat(BIT_CHOICES.len()).take(layers));
+    rad
+}
+
+/// One candidate design: an index into each sweep axis, optionally
+/// followed by one bit-width palette index per workload layer. A genome
+/// is exactly the mixed-radix decomposition of an index over its
+/// radices, so the genome↔index bijection is trivial and *every*
+/// crossover or mutation product is grid- (and palette-) feasible by
+/// construction — there is no repair step.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
 pub struct Genome {
-    axes: [usize; GENOME_AXES],
+    axes: Vec<usize>,
 }
 
 impl Genome {
-    /// Decompose a grid index (`SweepSpace::point` order).
-    pub fn from_index(rad: &[usize; GENOME_AXES], mut i: usize) -> Genome {
-        let mut axes = [0usize; GENOME_AXES];
+    /// Decompose an index over `rad` (`SweepSpace::point` order for the
+    /// hardware prefix, bit genes fastest-varying last).
+    pub fn from_index(rad: &[usize], mut i: usize) -> Genome {
+        let mut axes = vec![0usize; rad.len()];
         for (k, &r) in rad.iter().enumerate() {
             axes[k] = i % r;
             i /= r;
@@ -81,13 +110,33 @@ impl Genome {
         Genome { axes }
     }
 
-    /// Recompose the grid index.
-    pub fn to_index(&self, rad: &[usize; GENOME_AXES]) -> usize {
+    /// Recompose the full mixed-radix index. Callers with long genomes
+    /// (many layers) should prefer [`Genome::grid_index`] — the combined
+    /// index space can exceed `usize` even though every genome is valid.
+    pub fn to_index(&self, rad: &[usize]) -> usize {
+        debug_assert_eq!(self.axes.len(), rad.len());
+        let mut i = 0usize;
+        for k in (0..self.axes.len()).rev() {
+            i = i * rad[k] + self.axes[k];
+        }
+        i
+    }
+
+    /// Grid index of the hardware prefix — the index
+    /// `SweepSpace::point` evaluates, shared by every bit-width
+    /// assignment of the same config (the evaluation-cache key).
+    pub fn grid_index(&self, rad: &[usize]) -> usize {
         let mut i = 0usize;
         for k in (0..GENOME_AXES).rev() {
             i = i * rad[k] + self.axes[k];
         }
         i
+    }
+
+    /// Bit-width genes (palette indices into [`BIT_CHOICES`]); empty on
+    /// 2-objective genomes.
+    pub fn bit_genes(&self) -> &[usize] {
+        &self.axes[GENOME_AXES..]
     }
 }
 
@@ -230,6 +279,9 @@ pub struct SearchResult {
     /// Hypervolume reference point (energy upper bound, perf/area lower
     /// bound) fixed after the initial population.
     pub hv_ref: (f64, f64),
+    /// 3-objective reference point (energy, perf/area, accuracy), fixed
+    /// after the initial population; `None` on 2-objective runs.
+    pub hv_ref3: Option<Vec<f64>>,
 }
 
 fn guard(v: f64) -> f64 {
@@ -241,19 +293,28 @@ fn guard(v: f64) -> f64 {
 }
 
 /// Shared run state: evaluation cache (grid index → point), archive
-/// reducers, convergence history, and the hypervolume reference.
+/// reducers, convergence history, and the hypervolume reference(s).
 struct Driver<'a, E> {
     space: &'a SweepSpace,
     cfg: &'a SearchConfig,
-    rad: [usize; GENOME_AXES],
+    /// Genome radices: hardware axes, then one palette-sized radix per
+    /// layer in accuracy-aware mode.
+    rad: Vec<usize>,
     eval: E,
+    /// Accuracy objective; `Some` switches on 3-objective mode.
+    acc: Option<&'a QuantProxy>,
     ctl: &'a SweepCtl,
     cache: BTreeMap<usize, DesignPoint>,
+    /// Candidates already folded into `front3` (full genomes — distinct
+    /// bit assignments of one config are distinct candidates).
+    offered: BTreeSet<Vec<usize>>,
     summary: SweepSummary,
     history: Vec<GenStat>,
     max_energy: f64,
     min_ppa: f64,
+    min_acc: f64,
     hv_ref: Option<(f64, f64)>,
+    hv_ref3: Option<Vec<f64>>,
     cancelled: bool,
 }
 
@@ -269,7 +330,7 @@ where
         let mut fresh: Vec<usize> = Vec::new();
         let mut seen = BTreeSet::new();
         for g in pop {
-            let idx = g.to_index(&self.rad);
+            let idx = g.grid_index(&self.rad);
             if !self.cache.contains_key(&idx) && seen.insert(idx) {
                 fresh.push(idx);
             }
@@ -303,20 +364,64 @@ where
     }
 
     fn point_of(&self, g: &Genome) -> Option<&DesignPoint> {
-        self.cache.get(&g.to_index(&self.rad))
+        self.cache.get(&g.grid_index(&self.rad))
     }
 
-    /// Maximizing objective pair (−energy, objective score); unevaluated
-    /// or non-finite entries become −∞ sentinels so they can never
-    /// outrank a real design.
-    fn objectives(&self, pop: &[Genome]) -> Vec<[f64; 2]> {
+    /// Proxy-predicted accuracy of one mixed-precision candidate: the PE
+    /// type comes from the hardware genes, the per-layer storage bit
+    /// widths from the bit genes. 3-objective mode only.
+    fn accuracy_of(&self, g: &Genome) -> f64 {
+        let proxy = self.acc.expect("accuracy_of needs 3-objective mode");
+        let pe = self.space.pe_types[g.axes[GENOME_AXES - 1]];
+        proxy.predict_accuracy(pe, g.bit_genes())
+    }
+
+    /// Fold every *novel* candidate of `pop` into the archive's 3-D
+    /// front and track the accuracy floor for the reference point. No-op
+    /// in 2-objective mode; candidates whose hardware point is not in
+    /// the cache (a cancelled batch) are skipped, keeping the front
+    /// consistent with the evaluations that completed.
+    fn observe_candidates(&mut self, pop: &[Genome]) {
+        if self.acc.is_none() {
+            return;
+        }
+        for g in pop {
+            let p = match self.cache.get(&g.grid_index(&self.rad)) {
+                Some(p) => *p,
+                None => continue,
+            };
+            if !self.offered.insert(g.axes.clone()) {
+                continue;
+            }
+            let a = self.accuracy_of(g);
+            if a.is_finite() {
+                self.min_acc = self.min_acc.min(a);
+            }
+            let bits: Vec<u32> =
+                g.bit_genes().iter().map(|&i| BIT_CHOICES[i]).collect();
+            self.summary.observe3(&p, a, bits);
+        }
+    }
+
+    /// Maximizing objective vector (−energy, objective score, and in
+    /// 3-objective mode the predicted accuracy); unevaluated or
+    /// non-finite entries become −∞ sentinels so they can never outrank
+    /// a real design.
+    fn objectives(&self, pop: &[Genome]) -> Vec<Vec<f64>> {
+        let nobj = if self.acc.is_some() { 3 } else { 2 };
         pop.iter()
             .map(|g| match self.point_of(g) {
-                Some(p) => [
-                    guard(-p.energy_j),
-                    guard(self.cfg.objective.score(p)),
-                ],
-                None => [f64::NEG_INFINITY; 2],
+                Some(p) => {
+                    let mut o = vec![
+                        guard(-p.energy_j),
+                        guard(self.cfg.objective.score(p)),
+                    ];
+                    if self.acc.is_some() {
+                        o.push(guard(self.accuracy_of(g)));
+                    }
+                    o
+                }
+                None => vec![f64::NEG_INFINITY; nobj],
             })
             .collect()
     }
@@ -331,7 +436,9 @@ where
 
     /// Fix the hypervolume reference just past the worst corner of the
     /// initial population, once — every generation then measures against
-    /// the same point, making the convergence curve monotone.
+    /// the same point, making the convergence curve monotone. In
+    /// 3-objective mode a 3-D reference is fixed the same way, with the
+    /// accuracy floor of the initial candidates as the third corner.
     fn set_ref(&mut self) {
         if self.hv_ref.is_none() {
             self.hv_ref = Some(
@@ -348,25 +455,64 @@ where
                 },
             );
         }
+        if self.acc.is_some() && self.hv_ref3.is_none() {
+            let (rx, ry) = self.hv_ref.expect("set above");
+            let ra = if self.min_acc.is_finite() {
+                self.min_acc - 0.05 * self.min_acc.abs().max(1e-300)
+            } else {
+                0.0
+            };
+            self.hv_ref3 = Some(vec![rx, ry, ra]);
+        }
     }
 
     fn record_gen<F>(&mut self, generation: usize, on_gen: &mut F)
     where
         F: FnMut(&GenStat, &SweepSummary),
     {
-        let (rx, ry) = self.hv_ref.unwrap_or((1.0, 0.0));
-        let pts: Vec<(f64, f64)> = self
-            .summary
-            .front
-            .points()
-            .iter()
-            .map(|&(x, y, _)| (x, y))
-            .collect();
-        let stat = GenStat {
-            generation,
-            evals: self.cache.len(),
-            front_size: self.summary.front.len(),
-            hypervolume: hv::hypervolume_min_max(&pts, rx, ry),
+        let stat = if self.acc.is_some() {
+            // 3-objective convergence: hypervolume of the archive's 3-D
+            // front against the fixed 3-D reference.
+            let r3 = self
+                .hv_ref3
+                .clone()
+                .unwrap_or_else(|| vec![1.0, 0.0, 0.0]);
+            let (coords, len): (Vec<Vec<f64>>, usize) =
+                match self.summary.front3.as_ref() {
+                    Some(f3) => (
+                        f3.points()
+                            .iter()
+                            .map(|(c, _)| c.clone())
+                            .collect(),
+                        f3.len(),
+                    ),
+                    None => (Vec::new(), 0),
+                };
+            GenStat {
+                generation,
+                evals: self.cache.len(),
+                front_size: len,
+                hypervolume: hv::hypervolume_n(
+                    &coords,
+                    &r3,
+                    &FRONT3_SENSES,
+                ),
+            }
+        } else {
+            let (rx, ry) = self.hv_ref.unwrap_or((1.0, 0.0));
+            let pts: Vec<(f64, f64)> = self
+                .summary
+                .front
+                .points()
+                .iter()
+                .map(|&(x, y, _)| (x, y))
+                .collect();
+            GenStat {
+                generation,
+                evals: self.cache.len(),
+                front_size: self.summary.front.len(),
+                hypervolume: hv::hypervolume_min_max(&pts, rx, ry),
+            }
         };
         self.history.push(stat);
         on_gen(&stat, &self.summary);
@@ -378,18 +524,22 @@ where
             budget: self.cfg.budget(),
             cancelled: self.cancelled || self.ctl.is_cancelled(),
             hv_ref: self.hv_ref.unwrap_or((1.0, 0.0)),
+            hv_ref3: self.hv_ref3,
             summary: self.summary,
             history: self.history,
         }
     }
 }
 
-fn sample_genome(
-    rng: &mut Rng,
-    rad: &[usize; GENOME_AXES],
-    n: usize,
-) -> Genome {
-    Genome::from_index(rad, rng.below(n))
+/// Sample a uniform genome: one draw over the hardware grid, then (in
+/// accuracy-aware mode) one palette draw per bit gene. With no bit genes
+/// this is a single `below(n)` call — the legacy RNG consumption.
+fn sample_genome(rng: &mut Rng, rad: &[usize], n: usize) -> Genome {
+    let mut g = Genome::from_index(&rad[..GENOME_AXES], rng.below(n));
+    for &r in &rad[GENOME_AXES..] {
+        g.axes.push(rng.below(r));
+    }
+    g
 }
 
 /// Binary tournament under the crowded-comparison operator.
@@ -408,10 +558,12 @@ fn tournament(
     }
 }
 
-/// Uniform crossover: each axis independently from either parent.
+/// Uniform crossover: each axis (hardware and bit genes alike)
+/// independently from either parent.
 fn crossover(rng: &mut Rng, a: &Genome, b: &Genome) -> Genome {
-    let mut child = *a;
-    for k in 0..GENOME_AXES {
+    debug_assert_eq!(a.axes.len(), b.axes.len());
+    let mut child = a.clone();
+    for k in 0..child.axes.len() {
         if rng.f64() < 0.5 {
             child.axes[k] = b.axes[k];
         }
@@ -421,13 +573,8 @@ fn crossover(rng: &mut Rng, a: &Genome, b: &Genome) -> Genome {
 
 /// Per-axis mutation: with probability `rate`, replace the axis index by
 /// a uniformly chosen *different* value (axes with one value are fixed).
-fn mutate(
-    rng: &mut Rng,
-    g: &mut Genome,
-    rad: &[usize; GENOME_AXES],
-    rate: f64,
-) {
-    for k in 0..GENOME_AXES {
+fn mutate(rng: &mut Rng, g: &mut Genome, rad: &[usize], rate: f64) {
+    for k in 0..g.axes.len() {
         if rad[k] > 1 && rng.f64() < rate {
             let step = 1 + rng.below(rad[k] - 1);
             g.axes[k] = (g.axes[k] + step) % rad[k];
@@ -437,13 +584,9 @@ fn mutate(
 
 /// Move exactly one (movable) axis to a different value — the hill
 /// climber's neighborhood step.
-fn mutate_one_axis(
-    rng: &mut Rng,
-    g: &mut Genome,
-    rad: &[usize; GENOME_AXES],
-) {
+fn mutate_one_axis(rng: &mut Rng, g: &mut Genome, rad: &[usize]) {
     let movable: Vec<usize> =
-        (0..GENOME_AXES).filter(|&k| rad[k] > 1).collect();
+        (0..g.axes.len()).filter(|&k| rad[k] > 1).collect();
     if movable.is_empty() {
         return;
     }
@@ -462,6 +605,7 @@ where
         .map(|_| sample_genome(rng, &d.rad, n))
         .collect();
     let ok = d.eval_population(&pop);
+    d.observe_candidates(&pop);
     d.set_ref();
     d.record_gen(0, on_gen);
     if !ok {
@@ -478,28 +622,28 @@ where
             let mut child = if rng.f64() < d.cfg.crossover {
                 crossover(rng, &pop[a], &pop[b])
             } else {
-                pop[a]
+                pop[a].clone()
             };
             mutate(rng, &mut child, &d.rad, d.cfg.mutation);
             offspring.push(child);
         }
         let ok = d.eval_population(&offspring);
+        d.observe_candidates(&offspring);
         // Elitist environmental selection over parents ∪ offspring,
-        // deduplicated by grid index (keep-first) so clones cannot crowd
-        // the next generation.
+        // deduplicated by genome (keep-first) so clones cannot crowd the
+        // next generation — with bit genes, two bit assignments of one
+        // config are distinct individuals.
         let mut union: Vec<Genome> =
             Vec::with_capacity(pop.len() + offspring.len());
         let mut seen = BTreeSet::new();
         for g in pop.iter().chain(offspring.iter()) {
-            if seen.insert(g.to_index(&d.rad)) {
-                union.push(*g);
+            if seen.insert(g.axes.clone()) {
+                union.push(g.clone());
             }
         }
         let uobjs = d.objectives(&union);
-        pop = nsga::select(&uobjs, d.cfg.population)
-            .into_iter()
-            .map(|i| union[i])
-            .collect();
+        let keep = nsga::select(&uobjs, d.cfg.population);
+        pop = keep.into_iter().map(|i| union[i].clone()).collect();
         d.record_gen(gen, on_gen);
         if !ok {
             return;
@@ -518,6 +662,7 @@ where
             .map(|_| sample_genome(rng, &d.rad, n))
             .collect();
         let ok = d.eval_population(&pop);
+        d.observe_candidates(&pop);
         if gen == 0 {
             d.set_ref();
         }
@@ -540,17 +685,18 @@ where
         .map(|_| sample_genome(rng, &d.rad, n))
         .collect();
     let ok = d.eval_population(&pool);
+    d.observe_candidates(&pool);
     d.set_ref();
     d.record_gen(0, on_gen);
     if !ok {
         return;
     }
-    let mut current = pool[0];
+    let mut current = pool[0].clone();
     let mut best = d.score(&pool[0]);
     for g in &pool[1..] {
         let s = d.score(g);
         if s.total_cmp(&best) == Ordering::Greater {
-            current = *g;
+            current = g.clone();
             best = s;
         }
     }
@@ -564,11 +710,13 @@ where
             let cand = if fresh_start {
                 sample_genome(rng, &d.rad, n)
             } else {
-                let mut c = current;
+                let mut c = current.clone();
                 mutate_one_axis(rng, &mut c, &d.rad);
                 c
             };
-            if !d.eval_population(std::slice::from_ref(&cand)) {
+            let ok = d.eval_population(std::slice::from_ref(&cand));
+            d.observe_candidates(std::slice::from_ref(&cand));
+            if !ok {
                 d.record_gen(gen, on_gen);
                 break 'generations;
             }
@@ -586,18 +734,23 @@ where
 }
 
 /// Run a seeded multi-objective search over `space`, evaluating through
-/// `eval` (callers pass the compiled-model hot path). `ctl` carries
-/// cooperative cancellation and the unique-evaluation progress counter;
-/// `on_generation` fires after every generation with the convergence
-/// record and the live archive summary (the serving layer publishes both
-/// as job progress).
+/// `eval` (callers pass the compiled-model hot path). Passing a
+/// [`QuantProxy`] as `acc` promotes predicted accuracy to a third
+/// maximizing objective and extends the genome with one bit-width gene
+/// per workload layer; `None` reproduces the 2-objective search byte for
+/// byte. `ctl` carries cooperative cancellation and the
+/// unique-evaluation progress counter; `on_generation` fires after every
+/// generation with the convergence record and the live archive summary
+/// (the serving layer publishes both as job progress).
 ///
-/// Identical `(space, cfg, eval)` inputs produce byte-identical results
-/// at any thread count — the determinism contract of DESIGN.md §8.
+/// Identical `(space, cfg, eval, acc)` inputs produce byte-identical
+/// results at any thread count — the determinism contract of DESIGN.md
+/// §8/§9.
 pub fn run_search<E, F>(
     space: &SweepSpace,
     cfg: &SearchConfig,
     eval: E,
+    acc: Option<&QuantProxy>,
     ctl: &SweepCtl,
     mut on_generation: F,
 ) -> Result<SearchResult, String>
@@ -607,19 +760,30 @@ where
 {
     space.validate()?;
     cfg.validate()?;
+    let layers = acc.map(|p| p.num_layers()).unwrap_or(0);
+    let mut summary = SweepSummary::new(cfg.objective, cfg.top_k);
+    if acc.is_some() {
+        // Enabled up front so even a pre-cancelled 3-objective run
+        // reports an (empty) front3 rather than a missing one.
+        summary.enable_front3();
+    }
     let mut rng = Rng::new(cfg.seed);
     let mut d = Driver {
         space,
         cfg,
-        rad: grid_radices(space),
+        rad: search_radices(space, layers),
         eval,
+        acc,
         ctl,
         cache: BTreeMap::new(),
-        summary: SweepSummary::new(cfg.objective, cfg.top_k),
+        offered: BTreeSet::new(),
+        summary,
         history: Vec::with_capacity(cfg.generations + 1),
         max_energy: f64::NEG_INFINITY,
         min_ppa: f64::INFINITY,
+        min_acc: f64::INFINITY,
         hv_ref: None,
+        hv_ref3: None,
         cancelled: false,
     };
     match cfg.algo {
@@ -738,6 +902,7 @@ mod tests {
                 &space,
                 &cfg(algo, 7),
                 synth_eval,
+                None,
                 &SweepCtl::new(),
                 |_, _| {},
             )
@@ -750,6 +915,7 @@ mod tests {
                 &space,
                 &c2,
                 synth_eval,
+                None,
                 &SweepCtl::new(),
                 |_, _| {},
             )
@@ -778,6 +944,7 @@ mod tests {
             &space,
             &c,
             synth_eval,
+            None,
             &SweepCtl::new(),
             |_, _| {},
         )
@@ -787,6 +954,7 @@ mod tests {
             &space,
             &c,
             synth_eval,
+            None,
             &SweepCtl::new(),
             |_, _| {},
         )
@@ -816,6 +984,7 @@ mod tests {
                 &space,
                 &c,
                 synth_eval,
+                None,
                 &SweepCtl::new(),
                 |_, _| {},
             )?;
@@ -872,6 +1041,7 @@ mod tests {
                 &space,
                 &c,
                 synth_eval,
+                None,
                 &SweepCtl::new(),
                 |_, _| {},
             )
@@ -913,6 +1083,7 @@ mod tests {
             &space,
             &c,
             synth_eval,
+            None,
             &SweepCtl::new(),
             |_, _| {},
         )
@@ -966,7 +1137,7 @@ mod tests {
         let ctl = SweepCtl::new();
         let mut c = cfg(Algo::Nsga2, 3);
         c.generations = 50;
-        let r = run_search(&space, &c, synth_eval, &ctl, |stat, _| {
+        let r = run_search(&space, &c, synth_eval, None, &ctl, |stat, _| {
             if stat.generation == 2 {
                 ctl.cancel();
             }
@@ -985,7 +1156,7 @@ mod tests {
         // (empty) result.
         let pre = SweepCtl::new();
         pre.cancel();
-        let r = run_search(&space, &c, synth_eval, &pre, |_, _| {})
+        let r = run_search(&space, &c, synth_eval, None, &pre, |_, _| {})
             .unwrap();
         assert!(r.cancelled);
         assert_eq!(r.evals, 0);
@@ -1010,6 +1181,216 @@ mod tests {
         assert!(Algo::from_name("annealing").is_err());
         for a in [Algo::Nsga2, Algo::Random, Algo::HillClimb] {
             assert_eq!(Algo::from_name(a.name()).unwrap(), a);
+        }
+    }
+
+    // --- Mixed precision / 3-objective mode -----------------------------
+
+    fn proxy3() -> QuantProxy {
+        QuantProxy::new(
+            crate::models::Dataset::Cifar10,
+            0.3,
+            &[1000, 4000, 2000],
+        )
+    }
+
+    fn front3_bytes(s: &SweepSummary) -> String {
+        s.front3
+            .as_ref()
+            .expect("3-objective run carries front3")
+            .to_json_with(crate::dse::MixedPoint::to_json)
+            .to_string()
+    }
+
+    #[test]
+    fn mixed_genome_roundtrip_and_operators_stay_feasible() {
+        let space = small_space();
+        let layers = 3usize;
+        let rad = search_radices(&space, layers);
+        assert_eq!(rad.len(), GENOME_AXES + layers);
+        let n = space.len();
+        let total: usize = rad.iter().product();
+        assert_eq!(total, n * BIT_CHOICES.len().pow(layers as u32));
+        let mut rng = Rng::new(13);
+        for _ in 0..500 {
+            // Mixed-radix bijection over the full grid × palette space.
+            let i = rng.below(total);
+            let g = Genome::from_index(&rad, i);
+            assert_eq!(g.to_index(&rad), i);
+            assert!(g.grid_index(&rad) < n);
+            assert_eq!(g.bit_genes().len(), layers);
+            assert!(g
+                .bit_genes()
+                .iter()
+                .all(|&b| b < BIT_CHOICES.len()));
+            // The hardware prefix round-trips through the grid index.
+            let hw = Genome::from_index(
+                &rad[..GENOME_AXES],
+                g.grid_index(&rad),
+            );
+            assert_eq!(&g.axes[..GENOME_AXES], &hw.axes[..]);
+        }
+        // Sampling, mutation, and crossover stay in-bounds on every
+        // axis — bit genes included.
+        let in_bounds = |g: &Genome| {
+            g.axes.iter().zip(&rad).all(|(&a, &r)| a < r)
+        };
+        for _ in 0..200 {
+            let mut g = sample_genome(&mut rng, &rad, n);
+            assert!(in_bounds(&g));
+            mutate(&mut rng, &mut g, &rad, 1.0);
+            assert!(in_bounds(&g) && g.grid_index(&rad) < n);
+            let h = crossover(
+                &mut rng,
+                &g,
+                &sample_genome(&mut rng, &rad, n),
+            );
+            assert!(in_bounds(&h));
+            let mut m = h.clone();
+            mutate_one_axis(&mut rng, &mut m, &rad);
+            assert!(in_bounds(&m));
+            assert_eq!(m.bit_genes().len(), layers);
+        }
+    }
+
+    #[test]
+    fn three_objective_search_is_deterministic_across_threads() {
+        let space = small_space();
+        let proxy = proxy3();
+        for algo in [Algo::Nsga2, Algo::Random, Algo::HillClimb] {
+            let mut c1 = cfg(algo, 7);
+            c1.threads = 1;
+            let a = run_search(
+                &space,
+                &c1,
+                synth_eval,
+                Some(&proxy),
+                &SweepCtl::new(),
+                |_, _| {},
+            )
+            .unwrap();
+            let mut c8 = cfg(algo, 7);
+            c8.threads = 8;
+            let b = run_search(
+                &space,
+                &c8,
+                synth_eval,
+                Some(&proxy),
+                &SweepCtl::new(),
+                |_, _| {},
+            )
+            .unwrap();
+            assert_eq!(a.evals, b.evals, "{algo:?}");
+            assert_eq!(
+                front3_bytes(&a.summary),
+                front3_bytes(&b.summary),
+                "{algo:?} 3-D front not reproducible"
+            );
+            assert_eq!(
+                front_bytes(&a.summary),
+                front_bytes(&b.summary),
+                "{algo:?}"
+            );
+            assert_eq!(
+                history_bytes(&a.history),
+                history_bytes(&b.history),
+                "{algo:?} history not reproducible"
+            );
+            assert_eq!(a.hv_ref3, b.hv_ref3, "{algo:?}");
+            assert!(
+                !a.summary.front3.as_ref().unwrap().is_empty(),
+                "{algo:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn three_objective_front_is_feasible_and_non_dominated() {
+        let space = small_space();
+        let proxy = proxy3();
+        let c = cfg(Algo::Nsga2, 11);
+        let r = run_search(
+            &space,
+            &c,
+            synth_eval,
+            Some(&proxy),
+            &SweepCtl::new(),
+            |_, _| {},
+        )
+        .unwrap();
+        let f3 = r.summary.front3.as_ref().unwrap();
+        assert!(f3.len() >= 2, "degenerate 3-D front: {}", f3.len());
+        for (coords, mp) in f3.points() {
+            assert_eq!(coords.len(), 3);
+            assert!(coords.iter().all(|v| v.is_finite()));
+            // The accuracy coordinate is a proxy percentage.
+            assert!(coords[2] > 0.0 && coords[2] < 100.0);
+            assert!(space.pe_types.contains(&mp.cfg.pe_type));
+            assert!(space.rows.contains(&mp.cfg.rows));
+            assert!(space.cols.contains(&mp.cfg.cols));
+            assert_eq!(mp.bits.len(), proxy.num_layers());
+            assert!(mp.bits.iter().all(|b| BIT_CHOICES.contains(b)));
+        }
+        let pts = f3.points();
+        for (i, (a, _)) in pts.iter().enumerate() {
+            for (b, _) in &pts[i + 1..] {
+                let dom = |u: &[f64], v: &[f64]| {
+                    u[0] <= v[0] && u[1] >= v[1] && u[2] >= v[2]
+                };
+                assert!(
+                    !dom(a, b) && !dom(b, a),
+                    "front3 members dominate each other"
+                );
+            }
+        }
+        // A 2-objective run of the same config never grows a front3.
+        let r2 = run_search(
+            &space,
+            &c,
+            synth_eval,
+            None,
+            &SweepCtl::new(),
+            |_, _| {},
+        )
+        .unwrap();
+        assert!(r2.summary.front3.is_none());
+        assert!(r2.hv_ref3.is_none());
+    }
+
+    #[test]
+    fn three_objective_hypervolume_history_is_monotone() {
+        let space = small_space();
+        let proxy = proxy3();
+        for algo in [Algo::Nsga2, Algo::Random, Algo::HillClimb] {
+            let c = cfg(algo, 5);
+            let r = run_search(
+                &space,
+                &c,
+                synth_eval,
+                Some(&proxy),
+                &SweepCtl::new(),
+                |_, _| {},
+            )
+            .unwrap();
+            assert!(r.evals <= c.budget(), "{algo:?}");
+            let f3 = r.summary.front3.as_ref().unwrap();
+            let last = r.history.last().unwrap();
+            assert_eq!(last.front_size, f3.len(), "{algo:?}");
+            assert!(last.hypervolume > 0.0, "{algo:?}");
+            for w in r.history.windows(2) {
+                assert!(
+                    w[1].hypervolume >= w[0].hypervolume,
+                    "{algo:?}: 3-D hypervolume regressed {} -> {}",
+                    w[0].hypervolume,
+                    w[1].hypervolume
+                );
+                assert!(w[1].evals >= w[0].evals);
+            }
+            assert_eq!(
+                r.hv_ref3.as_ref().map(|v| v.len()),
+                Some(3),
+                "{algo:?}"
+            );
         }
     }
 }

@@ -1,27 +1,41 @@
 //! NSGA-II machinery: fast non-dominated sorting and crowding distance
 //! (Deb et al., "A Fast and Elitist Multiobjective Genetic Algorithm:
-//! NSGA-II", 2002), specialized to the framework's two-objective case.
+//! NSGA-II", 2002), over an arbitrary number of objectives (the framework
+//! uses 2 for energy/score search and 3 once accuracy joins, DESIGN.md
+//! §9).
 //!
 //! Convention: every objective vector is **maximizing** — callers negate
 //! minimized metrics (energy) before ranking, exactly as
 //! `dse::Objective::score` does. Non-finite objective values must be
 //! mapped to `f64::NEG_INFINITY` by the caller so comparisons stay total
-//! and a NaN metric can never outrank a real design.
+//! and a NaN metric can never outrank a real design. All functions accept
+//! any `AsRef<[f64]>` objective rows (`[f64; 2]`, `Vec<f64>`, ...); rows
+//! must share one arity.
 
 use std::cmp::Ordering;
 
-/// Strict Pareto dominance over maximizing objective pairs: `a` is no
-/// worse on both axes and strictly better on at least one.
-pub fn dominates(a: &[f64; 2], b: &[f64; 2]) -> bool {
-    a[0] >= b[0] && a[1] >= b[1] && (a[0] > b[0] || a[1] > b[1])
+/// Strict Pareto dominance over maximizing objective vectors: `a` is no
+/// worse on every axis and strictly better on at least one.
+pub fn dominates(a: &[f64], b: &[f64]) -> bool {
+    debug_assert_eq!(a.len(), b.len(), "objective arity");
+    let mut strict = false;
+    for (av, bv) in a.iter().zip(b) {
+        if av < bv {
+            return false;
+        }
+        if av > bv {
+            strict = true;
+        }
+    }
+    strict
 }
 
 /// Fast non-dominated sort: partition `0..objs.len()` into fronts, best
 /// first. Every index appears in exactly one front; indices within a
 /// front are in ascending order, so the output is a pure function of the
-/// objective values (the determinism contract, DESIGN.md §8). O(n²) in
+/// objective values (the determinism contract, DESIGN.md §8). O(m·n²) in
 /// the population size, which NSGA-II keeps small by construction.
-pub fn non_dominated_sort(objs: &[[f64; 2]]) -> Vec<Vec<usize>> {
+pub fn non_dominated_sort<O: AsRef<[f64]>>(objs: &[O]) -> Vec<Vec<usize>> {
     let n = objs.len();
     // dominated_by[p] = indices p dominates; dom_count[q] = how many
     // dominate q (the classic S_p / n_q bookkeeping).
@@ -29,10 +43,10 @@ pub fn non_dominated_sort(objs: &[[f64; 2]]) -> Vec<Vec<usize>> {
     let mut dom_count = vec![0usize; n];
     for p in 0..n {
         for q in (p + 1)..n {
-            if dominates(&objs[p], &objs[q]) {
+            if dominates(objs[p].as_ref(), objs[q].as_ref()) {
                 dominated_by[p].push(q);
                 dom_count[q] += 1;
-            } else if dominates(&objs[q], &objs[p]) {
+            } else if dominates(objs[q].as_ref(), objs[p].as_ref()) {
                 dominated_by[q].push(p);
                 dom_count[p] += 1;
             }
@@ -58,34 +72,38 @@ pub fn non_dominated_sort(objs: &[[f64; 2]]) -> Vec<Vec<usize>> {
 }
 
 /// Crowding distance of each member of one front (parallel to `front`).
-/// Boundary points on either objective get +inf; interior points sum the
+/// Boundary points on any objective get +inf; interior points sum the
 /// normalized gap between their neighbors per objective. Degenerate
 /// spans (all-equal values, or infinities from sentinel objectives) add
 /// nothing rather than poisoning the distances with NaN.
-pub fn crowding_distance(objs: &[[f64; 2]], front: &[usize]) -> Vec<f64> {
+pub fn crowding_distance<O: AsRef<[f64]>>(
+    objs: &[O],
+    front: &[usize],
+) -> Vec<f64> {
     let m = front.len();
     if m <= 2 {
         return vec![f64::INFINITY; m];
     }
+    let nobj = objs[front[0]].as_ref().len();
     let mut dist = vec![0.0f64; m];
-    for obj in 0..2 {
+    for obj in 0..nobj {
         // Positions into `front`, ordered by this objective (ties broken
         // by index so the ordering — and thus the distances — are a pure
         // function of the inputs).
         let mut order: Vec<usize> = (0..m).collect();
         order.sort_by(|&a, &b| {
-            objs[front[a]][obj]
-                .total_cmp(&objs[front[b]][obj])
+            objs[front[a]].as_ref()[obj]
+                .total_cmp(&objs[front[b]].as_ref()[obj])
                 .then(front[a].cmp(&front[b]))
         });
         dist[order[0]] = f64::INFINITY;
         dist[order[m - 1]] = f64::INFINITY;
-        let span =
-            objs[front[order[m - 1]]][obj] - objs[front[order[0]]][obj];
+        let span = objs[front[order[m - 1]]].as_ref()[obj]
+            - objs[front[order[0]]].as_ref()[obj];
         if span > 0.0 && span.is_finite() {
             for w in 1..m - 1 {
-                let gap = objs[front[order[w + 1]]][obj]
-                    - objs[front[order[w - 1]]][obj];
+                let gap = objs[front[order[w + 1]]].as_ref()[obj]
+                    - objs[front[order[w - 1]]].as_ref()[obj];
                 if gap.is_finite() {
                     dist[order[w]] += gap / span;
                 }
@@ -98,8 +116,8 @@ pub fn crowding_distance(objs: &[[f64; 2]], front: &[usize]) -> Vec<f64> {
 /// Per-index (rank, crowding) arrays for a whole population, from the
 /// fronts of [`non_dominated_sort`] — the comparison key of NSGA-II's
 /// binary tournament.
-pub fn rank_and_crowding(
-    objs: &[[f64; 2]],
+pub fn rank_and_crowding<O: AsRef<[f64]>>(
+    objs: &[O],
     fronts: &[Vec<usize>],
 ) -> (Vec<usize>, Vec<f64>) {
     let mut rank = vec![0usize; objs.len()];
@@ -138,7 +156,7 @@ pub fn crowded_less(
 /// population, filled front by front with the final partial front
 /// truncated by descending crowding distance (ties by index). Returns
 /// fewer than `target` only when the population itself is smaller.
-pub fn select(objs: &[[f64; 2]], target: usize) -> Vec<usize> {
+pub fn select<O: AsRef<[f64]>>(objs: &[O], target: usize) -> Vec<usize> {
     let fronts = non_dominated_sort(objs);
     let mut out = Vec::with_capacity(target.min(objs.len()));
     for front in fronts {
@@ -176,12 +194,36 @@ mod tests {
     }
 
     #[test]
+    fn dominance_three_objectives() {
+        assert!(dominates(&[2.0, 3.0, 1.0], &[1.0, 3.0, 0.0]));
+        assert!(!dominates(&[2.0, 3.0, 1.0], &[1.0, 3.0, 2.0])); // incomparable
+        assert!(!dominates(&[1.0, 1.0, 1.0], &[1.0, 1.0, 1.0])); // equal
+        assert!(dominates(&[0.0, 0.0, 0.0], &[f64::NEG_INFINITY; 3]));
+    }
+
+    #[test]
     fn non_dominated_sort_hand_fixture() {
         // Maximizing. (2,3) and (3,2) are the first front; (1,1) is
         // dominated by both; (0,0) by everything.
         let objs = [[1.0, 1.0], [2.0, 3.0], [3.0, 2.0], [0.0, 0.0]];
         let fronts = non_dominated_sort(&objs);
         assert_eq!(fronts, vec![vec![1, 2], vec![0], vec![3]]);
+    }
+
+    #[test]
+    fn non_dominated_sort_hand_fixture_3d() {
+        // (2,3,1) and (3,2,1) incomparable; (1,1,2) incomparable to both
+        // via the third axis; (1,1,1) dominated by (1,1,2) only; (0,0,0)
+        // by everything.
+        let objs = [
+            [1.0, 1.0, 1.0],
+            [2.0, 3.0, 1.0],
+            [3.0, 2.0, 1.0],
+            [1.0, 1.0, 2.0],
+            [0.0, 0.0, 0.0],
+        ];
+        let fronts = non_dominated_sort(&objs);
+        assert_eq!(fronts, vec![vec![1, 2, 3], vec![0], vec![4]]);
     }
 
     #[test]
@@ -216,6 +258,27 @@ mod tests {
         assert_eq!(d[2], f64::INFINITY);
         assert!((d[1] - 1.2).abs() < 1e-12, "got {}", d[1]);
         assert!((d[3] - 1.0).abs() < 1e-12, "got {}", d[3]);
+    }
+
+    #[test]
+    fn crowding_distance_hand_computed_3d() {
+        // Third objective identical across the front: its span is 0, so
+        // it adds nothing and the 2-D hand values carry over unchanged —
+        // except every point is now also a (tied) boundary on obj2, so
+        // only the obj0/obj1 interior points keep finite distances.
+        let objs = [
+            [0.0, 10.0, 7.0],
+            [5.0, 5.0, 7.0],
+            [10.0, 0.0, 7.0],
+            [4.0, 6.0, 7.0],
+        ];
+        let d = crowding_distance(&objs, &[0, 1, 2, 3]);
+        assert_eq!(d[0], f64::INFINITY);
+        assert_eq!(d[2], f64::INFINITY);
+        // obj2's degenerate span marks its index-tied boundaries (0 and
+        // 3) infinite; interior point 1 keeps its 2-D value.
+        assert!((d[1] - 1.2).abs() < 1e-12, "got {}", d[1]);
+        assert_eq!(d[3], f64::INFINITY);
     }
 
     #[test]
@@ -255,6 +318,19 @@ mod tests {
         assert_eq!(&s[..2], &[1, 2]);
         // Oversized target returns everything.
         assert_eq!(select(&objs, 10).len(), 5);
+    }
+
+    #[test]
+    fn select_three_objectives_prefers_first_front() {
+        let objs = [
+            [0.0, 0.0, 0.0],
+            [2.0, 3.0, 1.0],
+            [3.0, 2.0, 1.0],
+            [1.0, 1.0, 2.0],
+        ];
+        let s = select(&objs, 3);
+        assert_eq!(s, vec![1, 2, 3]);
+        assert_eq!(select(&objs, 4), vec![0, 1, 2, 3]);
     }
 
     #[test]

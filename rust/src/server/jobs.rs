@@ -70,11 +70,14 @@ pub enum JobKind {
     /// Guided multi-objective search over the grid (DESIGN.md §8):
     /// NSGA-II or a baseline, seeded and deterministic, publishing the
     /// archive front and a hypervolume convergence curve generation by
-    /// generation.
+    /// generation. With `with_accuracy` the genome grows one bit-width
+    /// gene per workload layer and the job co-explores the 3-D
+    /// energy/perf-per-area/accuracy front (DESIGN.md §9).
     Search {
         workload: String,
         space: SweepSpace,
         cfg: crate::search::SearchConfig,
+        with_accuracy: bool,
     },
 }
 
@@ -187,12 +190,40 @@ fn summary_result_json(s: &SweepSummary) -> Json {
             .collect();
         top.push((pe.name(), Json::Arr(list)));
     }
-    Json::obj(vec![
+    let mut fields = vec![
         ("count", Json::Num(s.count as f64)),
         ("objective", Json::Str(s.objective.name().into())),
         ("front", Json::Arr(front)),
         ("top", Json::obj(top)),
-    ])
+    ];
+    // 3-objective search jobs additionally carry the mixed-precision
+    // co-exploration front; absent for every other job kind, so legacy
+    // response bodies keep their exact shape.
+    if let Some(f3) = &s.front3 {
+        let front3: Vec<Json> = f3
+            .points()
+            .iter()
+            .map(|(c, m)| {
+                Json::obj(vec![
+                    ("energy_j", Json::num_or_null(c[0])),
+                    ("perf_per_area", Json::num_or_null(c[1])),
+                    ("accuracy", Json::num_or_null(c[2])),
+                    (
+                        "bits",
+                        Json::Arr(
+                            m.bits
+                                .iter()
+                                .map(|&b| Json::Num(b as f64))
+                                .collect(),
+                        ),
+                    ),
+                    ("config", m.cfg.to_json()),
+                ])
+            })
+            .collect();
+        fields.push(("front3", Json::Arr(front3)));
+    }
+    Json::obj(fields)
 }
 
 impl Job {
@@ -224,8 +255,13 @@ impl Job {
                 Json::Num(prog.redispatches as f64),
             ));
         }
-        if let JobKind::Search { cfg, .. } = &self.spec.kind {
+        if let JobKind::Search { cfg, with_accuracy, .. } = &self.spec.kind
+        {
             fields.push(("algo", Json::Str(cfg.algo.name().into())));
+            fields.push((
+                "objectives",
+                Json::Num(if *with_accuracy { 3.0 } else { 2.0 }),
+            ));
             fields.push((
                 "generations",
                 Json::Num(cfg.generations as f64),
@@ -447,8 +483,8 @@ fn run_one(state: &AppState, job: &Job) {
             workers,
             *shards,
         ),
-        JobKind::Search { workload, space, cfg } => {
-            run_search_job(state, job, workload, space, cfg)
+        JobKind::Search { workload, space, cfg, with_accuracy } => {
+            run_search_job(state, job, workload, space, cfg, *with_accuracy)
         }
     };
     let mut st = job.state.lock().unwrap();
@@ -571,8 +607,17 @@ fn run_search_job(
     workload: &str,
     space: &SweepSpace,
     cfg: &crate::search::SearchConfig,
+    with_accuracy: bool,
 ) -> Result<(), String> {
-    let layers = state.workload(workload)?.layers.clone();
+    let net = state.workload(workload)?;
+    let layers = net.layers.clone();
+    // The accuracy axis is a pure function of (workload, bit genes, PE
+    // type) — built here per job, never cached with the PPA models.
+    let proxy = if with_accuracy {
+        Some(crate::accuracy::proxy::QuantProxy::for_model(net))
+    } else {
+        None
+    };
     let compiled = state.compiled_map(workload, &layers, &space.pe_types);
     let result = crate::search::run_search(
         space,
@@ -581,6 +626,7 @@ fn run_search_job(
             Some(m) => dse::evaluate_compiled(m, c),
             None => dse::evaluate(&state.models, c, &layers),
         },
+        proxy.as_ref(),
         &job.ctl,
         |stat, summary| {
             let mut prog = job.progress.lock().unwrap();

@@ -715,10 +715,15 @@ fn distributed_sweep(
 /// `POST /v1/search` — enqueue a guided multi-objective search job
 /// (DESIGN.md §8). Body: the usual sweep-space fields plus `algo`
 /// (`nsga2|random|hillclimb`), `seed`, `population`, `generations`,
-/// `mutation`, `crossover`, `objective`, `top_k`, `threads`. Responds
-/// 202 with a job id; per-generation progress (front size, hypervolume)
-/// and — once terminal — the archive front and full convergence curve
-/// poll through `/v1/jobs/:id`.
+/// `mutation`, `crossover`, `objective`, `top_k`, `threads`, and
+/// optionally `objectives` — the legacy `["energy","perf_area"]` pair
+/// (default) or `["energy","perf_area","accuracy"]`, which grows the
+/// genome with one bit-width gene per workload layer and co-explores
+/// the 3-D front (DESIGN.md §9); the terminal result then carries a
+/// `front3` array alongside the 2-D `front`. Responds 202 with a job
+/// id; per-generation progress (front size, hypervolume) and — once
+/// terminal — the archive front and full convergence curve poll
+/// through `/v1/jobs/:id`.
 fn search_create(
     state: &AppState,
     req: &Request,
@@ -763,6 +768,64 @@ fn search_create(
             crossover: prob("crossover", 0.9)?,
         };
         cfg.validate()?;
+        // `objectives`: the legacy energy/perf-per-area pair (default)
+        // or the co-exploration triple that adds accuracy and per-layer
+        // bit-width genes (DESIGN.md §9). A comma-joined string or an
+        // array of names; order is fixed.
+        let with_accuracy = match j.get("objectives") {
+            Json::Null => false,
+            v => {
+                let names: Vec<String> = match v {
+                    Json::Str(s) => s
+                        .split(',')
+                        .map(|p| p.trim().to_ascii_lowercase())
+                        .collect(),
+                    Json::Arr(a) => a
+                        .iter()
+                        .map(|x| {
+                            x.as_str()
+                                .map(|s| s.trim().to_ascii_lowercase())
+                                .ok_or_else(|| {
+                                    "'objectives' entries must be strings"
+                                        .to_string()
+                                })
+                        })
+                        .collect::<Result<_, _>>()?,
+                    _ => {
+                        return Err("'objectives' must be a string or an \
+                                    array of strings"
+                            .into())
+                    }
+                };
+                let ppa = |s: &str| {
+                    matches!(
+                        s,
+                        "perf_area"
+                            | "perf-per-area"
+                            | "perf_per_area"
+                            | "ppa"
+                    )
+                };
+                match names.as_slice() {
+                    [a, b] if a.as_str() == "energy" && ppa(b) => false,
+                    [a, b, c]
+                        if a.as_str() == "energy"
+                            && ppa(b)
+                            && c.as_str() == "accuracy" =>
+                    {
+                        true
+                    }
+                    _ => {
+                        return Err(
+                            "'objectives' must be \
+                             [\"energy\",\"perf_area\"] or \
+                             [\"energy\",\"perf_area\",\"accuracy\"]"
+                                .into(),
+                        )
+                    }
+                }
+            }
+        };
         let total = cfg.budget();
         if total > state.opts.max_job_points {
             return Err(format!(
@@ -774,7 +837,12 @@ fn search_create(
         let algo_name = cfg.algo.name();
         Ok((
             JobSpec {
-                kind: JobKind::Search { workload, space, cfg },
+                kind: JobKind::Search {
+                    workload,
+                    space,
+                    cfg,
+                    with_accuracy,
+                },
                 threads,
             },
             total,

@@ -1,7 +1,7 @@
-//! Online reducers for streaming sweeps: a running 2-D Pareto front and a
-//! bounded top-K selector. Both hold O(result) memory — the whole point of
-//! the streaming engine is that a million-point sweep only ever retains
-//! what it will report (DESIGN.md §4).
+//! Online reducers for streaming sweeps: running 2-D and N-dimensional
+//! Pareto fronts and a bounded top-K selector. All hold O(result) memory —
+//! the whole point of the streaming engine is that a million-point sweep
+//! only ever retains what it will report (DESIGN.md §4, §9).
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
@@ -10,11 +10,45 @@ use super::Reducer;
 use crate::util::json::Json;
 
 /// Objective sense for the y axis of [`ParetoFront2D`] (x is always
-/// minimized, matching `dse::pareto_front_min_max` / `_min_min`).
+/// minimized, matching `dse::pareto_front_min_max` / `_min_min`), and the
+/// per-axis sense of [`ParetoFrontN`].
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum YSense {
     Maximize,
     Minimize,
+}
+
+/// Minimized-space key: maximized axes negate, so "smaller is better"
+/// uniformly across axes of either sense.
+fn mkey(sense: YSense, v: f64) -> f64 {
+    match sense {
+        YSense::Maximize => -v,
+        YSense::Minimize => v,
+    }
+}
+
+/// `a` weakly dominates `b` under `senses`: no axis of `a` is worse.
+/// Equality on every axis counts as domination, so duplicates never
+/// co-exist on a front.
+fn weakly_dominates(senses: &[YSense], a: &[f64], b: &[f64]) -> bool {
+    senses
+        .iter()
+        .zip(a.iter().zip(b))
+        .all(|(&s, (&av, &bv))| mkey(s, av) <= mkey(s, bv))
+}
+
+/// Lexicographic "strictly before" in minimized space (`total_cmp` per
+/// axis). Front points are kept in this order, which at N=2 is exactly
+/// [`ParetoFront2D`]'s ascending-x order.
+fn lex_before(senses: &[YSense], a: &[f64], b: &[f64]) -> bool {
+    for (k, &s) in senses.iter().enumerate() {
+        match mkey(s, a[k]).total_cmp(&mkey(s, b[k])) {
+            Ordering::Less => return true,
+            Ordering::Greater => return false,
+            Ordering::Equal => {}
+        }
+    }
+    false
 }
 
 /// Running 2-D Pareto front: minimize `x`, maximize or minimize `y`.
@@ -147,6 +181,150 @@ impl<T: Send> Reducer for ParetoFront2D<T> {
         let seen = other.seen;
         for (x, y, payload) in other.pts {
             self.insert(x, y, payload);
+            self.seen -= 1; // insert() counted it; it was already seen once
+        }
+        self.seen += seen;
+    }
+}
+
+/// Running N-dimensional Pareto front with a per-axis objective sense
+/// (DESIGN.md §9).
+///
+/// Generalizes [`ParetoFront2D`]: a point joins the front iff no kept
+/// point weakly dominates it, and evicts every kept point it weakly
+/// dominates. Points are held in ascending lexicographic order of their
+/// minimized coordinates, which is a pure function of the front *set* —
+/// so serialization is insertion-order invariant, and at N=2 with senses
+/// `[Minimize, y]` both the membership rule and the wire form are
+/// identical to `ParetoFront2D` (property-tested below, byte for byte).
+/// Insertion is O(f·N); memory O(f·N).
+#[derive(Debug, Clone)]
+pub struct ParetoFrontN<T> {
+    /// (coords, payload), in ascending minimized-lexicographic order.
+    pts: Vec<(Vec<f64>, T)>,
+    senses: Vec<YSense>,
+    seen: usize,
+}
+
+impl<T> ParetoFrontN<T> {
+    pub fn new(senses: Vec<YSense>) -> ParetoFrontN<T> {
+        assert!(!senses.is_empty(), "ParetoFrontN needs at least one axis");
+        ParetoFrontN { pts: Vec::new(), senses, seen: 0 }
+    }
+
+    pub fn dims(&self) -> usize {
+        self.senses.len()
+    }
+
+    pub fn senses(&self) -> &[YSense] {
+        &self.senses
+    }
+
+    /// Total points offered (including dominated and non-finite ones).
+    pub fn seen(&self) -> usize {
+        self.seen
+    }
+
+    pub fn len(&self) -> usize {
+        self.pts.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pts.is_empty()
+    }
+
+    /// Front points in ascending minimized-lexicographic order.
+    pub fn points(&self) -> &[(Vec<f64>, T)] {
+        &self.pts
+    }
+
+    /// Offer a point; returns true if it joined the front. Non-finite
+    /// coordinates are rejected. `coords.len()` must equal `dims()`.
+    pub fn insert(&mut self, coords: &[f64], payload: T) -> bool {
+        assert_eq!(coords.len(), self.senses.len(), "coordinate arity");
+        self.seen += 1;
+        if coords.iter().any(|c| !c.is_finite()) {
+            return false;
+        }
+        let senses = &self.senses;
+        if self
+            .pts
+            .iter()
+            .any(|(p, _)| weakly_dominates(senses, p, coords))
+        {
+            return false;
+        }
+        self.pts
+            .retain(|(p, _)| !weakly_dominates(senses, coords, p));
+        let pos = self
+            .pts
+            .partition_point(|(p, _)| lex_before(senses, p, coords));
+        self.pts.insert(pos, (coords.to_vec(), payload));
+        true
+    }
+
+    /// Wire form for distributed merging (DESIGN.md §7, §9): each point
+    /// is its coordinates flattened followed by the payload, so at N=2
+    /// the bytes are exactly [`ParetoFront2D::to_json_with`]'s.
+    pub fn to_json_with(&self, payload: impl Fn(&T) -> Json) -> Json {
+        let pts: Vec<Json> = self
+            .pts
+            .iter()
+            .map(|(c, t)| {
+                let mut row: Vec<Json> =
+                    c.iter().map(|&v| Json::Num(v)).collect();
+                row.push(payload(t));
+                Json::Arr(row)
+            })
+            .collect();
+        Json::obj(vec![
+            ("seen", Json::Num(self.seen as f64)),
+            ("points", Json::Arr(pts)),
+        ])
+    }
+
+    /// Rebuild a front from [`ParetoFrontN::to_json_with`] output.
+    /// Points are re-inserted (order-invariant), so a tampered or
+    /// non-sorted wire form still yields a valid front.
+    pub fn from_json_with(
+        senses: Vec<YSense>,
+        j: &Json,
+        payload: impl Fn(&Json) -> Result<T, String>,
+    ) -> Result<ParetoFrontN<T>, String> {
+        let mut front = ParetoFrontN::new(senses);
+        let n = front.dims();
+        let pts = j
+            .get("points")
+            .as_arr()
+            .ok_or("front: missing 'points' array")?;
+        for p in pts {
+            let a = p.as_arr().ok_or("front: point is not an array")?;
+            if a.len() != n + 1 {
+                return Err(format!(
+                    "front: point is not [{n} coords, payload]"
+                ));
+            }
+            let mut coords = Vec::with_capacity(n);
+            for c in &a[..n] {
+                coords
+                    .push(c.as_f64().ok_or("front: non-numeric coordinate")?);
+            }
+            front.insert(&coords, payload(&a[n])?);
+        }
+        front.seen = j
+            .get("seen")
+            .as_usize()
+            .ok_or("front: missing 'seen' count")?;
+        Ok(front)
+    }
+}
+
+impl<T: Send> Reducer for ParetoFrontN<T> {
+    fn merge(&mut self, other: Self) {
+        assert_eq!(self.senses, other.senses, "merging mismatched senses");
+        let seen = other.seen;
+        for (coords, payload) in other.pts {
+            self.insert(&coords, payload);
             self.seen -= 1; // insert() counted it; it was already seen once
         }
         self.seen += seen;
@@ -514,5 +692,208 @@ mod tests {
         t.insert(5.0, "z");
         assert_eq!(t.best().unwrap().0, 9.0);
         assert_eq!(*t.best().unwrap().1, "y");
+    }
+
+    // --- ParetoFrontN -----------------------------------------------------
+
+    /// Senses used by the 3-objective search front: minimize energy,
+    /// maximize perf/area, maximize accuracy.
+    fn senses3() -> Vec<YSense> {
+        vec![YSense::Minimize, YSense::Maximize, YSense::Maximize]
+    }
+
+    #[test]
+    fn front_n_hand_computed_3d_fixture() {
+        // Minimize c0, maximize c1 and c2.
+        let mut f = ParetoFrontN::new(senses3());
+        assert!(f.insert(&[2.0, 2.0, 2.0], "a"));
+        // Incomparable: worse c0, better c1.
+        assert!(f.insert(&[3.0, 5.0, 1.0], "b"));
+        // Degenerate tie: equal c0/c1 but better c2 weakly dominates,
+        // so "c" joins AND evicts "a".
+        assert!(f.insert(&[2.0, 2.0, 3.0], "c"));
+        assert!(f.insert(&[1.0, 1.0, 1.0], "d")); // incomparable corner
+        assert!(!f.insert(&[2.5, 2.0, 2.0], "dom")); // dominated by c
+        assert!(!f.insert(&[2.0, 2.0, 3.0], "dup")); // exact duplicate
+        let names: Vec<&str> = f.points().iter().map(|p| p.1).collect();
+        assert_eq!(names, vec!["d", "c", "b"]);
+        assert_eq!(f.seen(), 6);
+    }
+
+    #[test]
+    fn front_n_duplicate_and_tie_handling() {
+        let mut f = ParetoFrontN::new(senses3());
+        assert!(f.insert(&[1.0, 1.0, 1.0], 0));
+        // Equal on every axis: weak domination — rejected.
+        assert!(!f.insert(&[1.0, 1.0, 1.0], 1));
+        // Better on one axis, equal elsewhere: evicts the original.
+        assert!(f.insert(&[1.0, 1.0, 2.0], 2));
+        assert_eq!(f.len(), 1);
+        assert_eq!(f.points()[0].1, 2);
+        // NaN / infinity never join.
+        assert!(!f.insert(&[f64::NAN, 1.0, 1.0], 3));
+        assert!(!f.insert(&[1.0, f64::INFINITY, 1.0], 4));
+        assert_eq!(f.seen(), 5);
+    }
+
+    #[test]
+    fn front_n_insertion_order_invariant() {
+        let mut rng = crate::util::rng::Rng::new(47);
+        let pts: Vec<[f64; 3]> = (0..300)
+            .map(|_| [rng.f64(), rng.f64(), rng.f64()])
+            .collect();
+        let mut forward = ParetoFrontN::new(senses3());
+        let mut backward = ParetoFrontN::new(senses3());
+        for p in &pts {
+            forward.insert(p, ());
+        }
+        for p in pts.iter().rev() {
+            backward.insert(p, ());
+        }
+        assert_eq!(
+            forward.to_json_with(|_| Json::Null).to_string(),
+            backward.to_json_with(|_| Json::Null).to_string()
+        );
+    }
+
+    #[test]
+    fn front_n_members_are_mutually_non_dominated() {
+        let mut rng = crate::util::rng::Rng::new(53);
+        let mut f = ParetoFrontN::new(senses3());
+        for _ in 0..500 {
+            f.insert(&[rng.f64(), rng.f64(), rng.f64()], ());
+        }
+        let pts = f.points();
+        for (i, (a, _)) in pts.iter().enumerate() {
+            for (j, (b, _)) in pts.iter().enumerate() {
+                if i != j {
+                    assert!(
+                        !weakly_dominates(f.senses(), a, b),
+                        "{a:?} dominates {b:?}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn front_n_at_2d_matches_pareto_front_2d_byte_for_byte() {
+        // The N=2 compatibility contract (DESIGN.md §9): point-for-point
+        // AND byte-for-byte identical wire forms on random streams, for
+        // both y senses.
+        for (seed, ysense) in
+            [(61u64, YSense::Maximize), (67u64, YSense::Minimize)]
+        {
+            let mut rng = crate::util::rng::Rng::new(seed);
+            let mut f2 = ParetoFront2D::new(ysense);
+            let mut fnd =
+                ParetoFrontN::new(vec![YSense::Minimize, ysense]);
+            for i in 0..800 {
+                // Coarse grid so equal-x and equal-y ties actually occur.
+                let x = (rng.f64() * 16.0).floor() / 16.0;
+                let y = (rng.f64() * 16.0).floor() / 16.0;
+                assert_eq!(
+                    f2.insert(x, y, i % 9),
+                    fnd.insert(&[x, y], i % 9),
+                    "insert verdict diverged at point {i}"
+                );
+            }
+            let p2: Vec<(f64, f64, i32)> =
+                f2.points().iter().map(|p| (p.0, p.1, p.2)).collect();
+            let pn: Vec<(f64, f64, i32)> = fnd
+                .points()
+                .iter()
+                .map(|(c, t)| (c[0], c[1], *t))
+                .collect();
+            assert_eq!(p2, pn);
+            assert_eq!(f2.seen(), fnd.seen());
+            let wire = |j: Json| j.to_string();
+            assert_eq!(
+                wire(f2.to_json_with(|&i| Json::Num(i as f64))),
+                wire(fnd.to_json_with(|&i| Json::Num(i as f64)))
+            );
+        }
+    }
+
+    #[test]
+    fn front_n_merge_equals_single_stream() {
+        let mut rng = crate::util::rng::Rng::new(71);
+        let pts: Vec<[f64; 3]> = (0..600)
+            .map(|_| [rng.f64(), rng.f64(), rng.f64()])
+            .collect();
+        let mut single = ParetoFrontN::new(senses3());
+        let mut a = ParetoFrontN::new(senses3());
+        let mut b = ParetoFrontN::new(senses3());
+        for (i, p) in pts.iter().enumerate() {
+            single.insert(p, ());
+            if i % 2 == 0 {
+                a.insert(p, ());
+            } else {
+                b.insert(p, ());
+            }
+        }
+        a.merge(b);
+        assert_eq!(
+            a.to_json_with(|_| Json::Null).to_string(),
+            single.to_json_with(|_| Json::Null).to_string()
+        );
+        assert_eq!(a.seen(), 600);
+    }
+
+    #[test]
+    fn front_n_split_serialize_merge_is_byte_identical() {
+        // The distributed contract at N=3: ship both halves over the
+        // wire, merge, compare bytes with the single-stream front.
+        let mut rng = crate::util::rng::Rng::new(73);
+        let pts: Vec<[f64; 3]> = (0..400)
+            .map(|_| [rng.f64(), rng.f64(), rng.f64()])
+            .collect();
+        let mut single = ParetoFrontN::new(senses3());
+        let mut a = ParetoFrontN::new(senses3());
+        let mut b = ParetoFrontN::new(senses3());
+        for (i, p) in pts.iter().enumerate() {
+            single.insert(p, i);
+            if i % 3 == 0 {
+                a.insert(p, i);
+            } else {
+                b.insert(p, i);
+            }
+        }
+        let thaw = |f: &ParetoFrontN<usize>| {
+            ParetoFrontN::from_json_with(
+                senses3(),
+                &Json::parse(
+                    &f.to_json_with(|&i| Json::Num(i as f64)).to_string(),
+                )
+                .unwrap(),
+                |j| j.as_usize().ok_or_else(|| "payload".to_string()),
+            )
+            .unwrap()
+        };
+        let mut merged = thaw(&a);
+        merged.merge(thaw(&b));
+        assert_eq!(
+            merged.to_json_with(|&i| Json::Num(i as f64)).to_string(),
+            single.to_json_with(|&i| Json::Num(i as f64)).to_string()
+        );
+        assert_eq!(merged.seen(), 400);
+    }
+
+    #[test]
+    fn front_n_from_json_rejects_malformed() {
+        let bad = [
+            "{}",
+            r#"{"points":[[1,2,3]],"seen":1}"#,
+            r#"{"points":[[1,2,"x",null]],"seen":1}"#,
+            r#"{"points":[[1,2,3,null]]}"#,
+        ];
+        for src in bad {
+            let j = Json::parse(src).unwrap();
+            assert!(
+                ParetoFrontN::<()>::from_json_with(senses3(), &j, |_| Ok(()))
+                    .is_err(),
+                "accepted {src}"
+            );
+        }
     }
 }

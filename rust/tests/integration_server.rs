@@ -407,6 +407,60 @@ fn search_job_completes_with_convergence_and_is_deterministic() {
 }
 
 #[test]
+fn three_objective_search_job_serves_front3_and_is_deterministic() {
+    let _serialized = lock();
+    // Same small grid as the 2-objective search test, with accuracy
+    // promoted to a third objective: the genome grows one bit gene per
+    // resnet20 layer and the terminal result carries `front3`.
+    let body = r#"{"workload":"resnet20","algo":"nsga2","seed":7,
+        "population":16,"generations":4,"rows":[8,12],"cols":[8,14],
+        "sp_if":[12],"sp_fw":[128,224],"sp_ps":[24],"gb_kib":[108],
+        "dram_bw":[16],"threads":2,
+        "objectives":["energy","perf_area","accuracy"]}"#;
+    let run = |body: &str| -> Json {
+        let (status, j) = post_json("/v1/search", body);
+        assert_eq!(status, 202, "{j}");
+        let id = j.get("id").as_u64().expect("job id");
+        poll_job(id, Duration::from_secs(120), |s| {
+            s.get("state")
+                .as_str()
+                .map(|st| st == "completed" || st == "failed")
+                .unwrap_or(false)
+        })
+    };
+    let fin = run(body);
+    assert_eq!(fin.get("state").as_str(), Some("completed"), "{fin}");
+    assert_eq!(fin.get("objectives").as_usize(), Some(3));
+    // The legacy 2-D front is still served alongside the 3-D one.
+    assert!(!fin.get("result").get("front").as_arr().unwrap().is_empty());
+    let front3 = fin.get("result").get("front3").as_arr().expect("front3");
+    assert!(!front3.is_empty());
+    let n_bits = front3[0].get("bits").as_arr().unwrap().len();
+    assert!(n_bits > 0, "per-layer bit genes missing");
+    for p in front3 {
+        let acc = p.get("accuracy").as_f64().unwrap();
+        assert!(acc > 0.0 && acc < 100.0, "accuracy out of range: {p}");
+        assert_eq!(p.get("bits").as_arr().unwrap().len(), n_bits);
+        let rows = p.get("config").get("rows").as_usize().unwrap();
+        assert!(rows == 8 || rows == 12, "off-grid front3 point: {p}");
+    }
+    // Same seed, same grid, same models: byte-identical 3-D front.
+    let again = run(body);
+    assert_eq!(
+        fin.get("result").get("front3").to_string(),
+        again.get("result").get("front3").to_string(),
+        "repeated seeded 3-objective search produced a different front3"
+    );
+    // A malformed objective list is a clean 400.
+    let (status, j) = post_json(
+        "/v1/search",
+        r#"{"objectives":["energy","accuracy"]}"#,
+    );
+    assert_eq!(status, 400);
+    assert!(j.get("error").as_str().unwrap().contains("objectives"));
+}
+
+#[test]
 fn error_paths_return_clean_statuses() {
     let _serialized = lock();
     // Malformed JSON.
