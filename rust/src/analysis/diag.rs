@@ -1,0 +1,68 @@
+//! Lint diagnostics: `file:line:col: [RULE] message` for humans, JSON
+//! for the CI artifact. Ordering is fully deterministic (path, then
+//! position, then rule id) so two runs over the same tree produce
+//! byte-identical reports — the linter holds itself to the contract it
+//! enforces.
+
+use std::fmt;
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct Diagnostic {
+    /// Path as given on the command line (not canonicalized).
+    pub file: String,
+    /// 1-based line of the offending token.
+    pub line: u32,
+    /// 1-based byte column of the offending token.
+    pub col: u32,
+    /// Rule id (`D1`…`S1`, `SUP`, or `LEX` for unlexable files).
+    pub rule: &'static str,
+    /// One-line explanation of why this pattern breaks the contract.
+    pub msg: String,
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{}:{}:{}: [{}] {}",
+            self.file, self.line, self.col, self.rule, self.msg
+        )
+    }
+}
+
+impl Diagnostic {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("file", Json::Str(self.file.clone())),
+            ("line", Json::Num(self.line as f64)),
+            ("col", Json::Num(self.col as f64)),
+            ("rule", Json::Str(self.rule.to_string())),
+            ("message", Json::Str(self.msg.clone())),
+        ])
+    }
+}
+
+/// Deterministic report order: path, position, rule.
+pub fn sort(diags: &mut [Diagnostic]) {
+    diags.sort_by(|a, b| {
+        a.file
+            .cmp(&b.file)
+            .then(a.line.cmp(&b.line))
+            .then(a.col.cmp(&b.col))
+            .then(a.rule.cmp(b.rule))
+    });
+}
+
+/// The `quidam lint --json` document.
+pub fn report_json(files: usize, diags: &[Diagnostic]) -> Json {
+    Json::obj(vec![
+        ("files_scanned", Json::Num(files as f64)),
+        ("count", Json::Num(diags.len() as f64)),
+        (
+            "findings",
+            Json::Arr(diags.iter().map(Diagnostic::to_json).collect()),
+        ),
+    ])
+}

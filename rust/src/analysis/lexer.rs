@@ -1,0 +1,532 @@
+//! Token-level Rust lexer for `quidam lint` (DESIGN.md §10).
+//!
+//! Deliberately *lexical*: the rule engine needs token identity, exact
+//! source position, and comment text — not a syntax tree. The parts a
+//! naive scanner gets wrong are handled precisely: nested block
+//! comments, raw strings with arbitrary `#` fences, byte/C string
+//! prefixes, raw identifiers, char literals vs lifetimes, and float
+//! literals vs range expressions (`1..2`). Everything else — keywords
+//! vs identifiers, expression structure — is left to the rules, which
+//! work on token windows.
+//!
+//! Comments are *retained* as tokens: rule S1 needs the comment
+//! directly above an `unsafe` block, and the suppression scanner needs
+//! every comment's text and position.
+
+/// Token classification. `text` always carries the exact source slice,
+/// so a raw identifier keeps its `r#` and a comment keeps its slashes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Kind {
+    /// Identifier or keyword (`fn`, `HashMap`, `unsafe`, ...).
+    Ident,
+    /// Raw identifier (`r#type`).
+    RawIdent,
+    /// Lifetime (`'a`, `'static`).
+    Lifetime,
+    /// Char literal (`'x'`, `'\n'`, `'\u{1F600}'`).
+    Char,
+    /// String literal of any flavor: `"…"`, `r"…"`, `r#"…"#`, `b"…"`,
+    /// `br#"…"#`, `c"…"`.
+    Str,
+    /// Numeric literal; see [`is_float_literal`].
+    Num,
+    /// Operator or delimiter; multi-char operators (`==`, `::`, `..=`)
+    /// arrive pre-clustered as one token.
+    Punct,
+    /// `// …` comment (text excludes the newline).
+    LineComment,
+    /// `/* … */` comment, nesting folded into one token.
+    BlockComment,
+}
+
+#[derive(Debug, Clone)]
+pub struct Token {
+    pub kind: Kind,
+    /// Exact source slice of the token.
+    pub text: String,
+    /// 1-based source line.
+    pub line: u32,
+    /// 1-based byte column within the line.
+    pub col: u32,
+}
+
+impl Token {
+    pub fn is_comment(&self) -> bool {
+        matches!(self.kind, Kind::LineComment | Kind::BlockComment)
+    }
+}
+
+/// Float-literal test for rule D2. Catches `1.0`, `1.`, `1e9`,
+/// `2.5e-3`, and suffixed forms (`1f64`); integer literals and
+/// hex/octal/binary literals (where `e` is a digit) are not floats.
+pub fn is_float_literal(t: &Token) -> bool {
+    if t.kind != Kind::Num {
+        return false;
+    }
+    let s = t.text.as_str();
+    if s.starts_with("0x")
+        || s.starts_with("0X")
+        || s.starts_with("0o")
+        || s.starts_with("0b")
+    {
+        return false;
+    }
+    s.contains('.')
+        || s.bytes().any(|b| b == b'e' || b == b'E')
+        || s.ends_with("f32")
+        || s.ends_with("f64")
+}
+
+/// A lexing failure (unterminated string/comment/char). The linter
+/// surfaces this as a finding at the given position rather than
+/// guessing at the rest of the file.
+#[derive(Debug)]
+pub struct LexError {
+    pub line: u32,
+    pub col: u32,
+    pub msg: String,
+}
+
+/// Lex a whole source file into tokens (comments included).
+pub fn lex(src: &str) -> Result<Vec<Token>, LexError> {
+    let mut lx = Lexer { src, b: src.as_bytes(), i: 0, line: 1, col: 1 };
+    let mut out = Vec::new();
+    while let Some(tok) = lx.next_token()? {
+        out.push(tok);
+    }
+    Ok(out)
+}
+
+struct Lexer<'a> {
+    src: &'a str,
+    b: &'a [u8],
+    i: usize,
+    line: u32,
+    col: u32,
+}
+
+fn is_ident_start(c: u8) -> bool {
+    c.is_ascii_alphabetic() || c == b'_' || c >= 0x80
+}
+
+fn is_ident_continue(c: u8) -> bool {
+    c.is_ascii_alphanumeric() || c == b'_' || c >= 0x80
+}
+
+impl<'a> Lexer<'a> {
+    fn peek(&self, k: usize) -> Option<u8> {
+        self.b.get(self.i + k).copied()
+    }
+
+    /// Advance one byte, tracking line/col.
+    fn bump(&mut self) -> Option<u8> {
+        let c = self.peek(0)?;
+        self.i += 1;
+        if c == b'\n' {
+            self.line += 1;
+            self.col = 1;
+        } else {
+            self.col += 1;
+        }
+        Some(c)
+    }
+
+    fn err(&self, line: u32, col: u32, msg: &str) -> LexError {
+        LexError { line, col, msg: msg.to_string() }
+    }
+
+    fn next_token(&mut self) -> Result<Option<Token>, LexError> {
+        while self.peek(0).map_or(false, |c| c.is_ascii_whitespace()) {
+            self.bump();
+        }
+        let Some(c) = self.peek(0) else { return Ok(None) };
+        let (line, col, start) = (self.line, self.col, self.i);
+        let kind = match c {
+            b'/' if self.peek(1) == Some(b'/') => self.line_comment(),
+            b'/' if self.peek(1) == Some(b'*') => self.block_comment()?,
+            b'"' => self.plain_string()?,
+            b'\'' => self.char_or_lifetime()?,
+            c if c.is_ascii_digit() => self.number(),
+            c if is_ident_start(c) => self.ident_or_prefixed()?,
+            _ => self.punct(),
+        };
+        let text = self.src[start..self.i].to_string();
+        Ok(Some(Token { kind, text, line, col }))
+    }
+
+    fn line_comment(&mut self) -> Kind {
+        while self.peek(0).map_or(false, |c| c != b'\n') {
+            self.bump();
+        }
+        Kind::LineComment
+    }
+
+    fn block_comment(&mut self) -> Result<Kind, LexError> {
+        let (line, col) = (self.line, self.col);
+        self.bump();
+        self.bump();
+        let mut depth = 1usize;
+        while depth > 0 {
+            match (self.peek(0), self.peek(1)) {
+                (Some(b'/'), Some(b'*')) => {
+                    depth += 1;
+                    self.bump();
+                    self.bump();
+                }
+                (Some(b'*'), Some(b'/')) => {
+                    depth -= 1;
+                    self.bump();
+                    self.bump();
+                }
+                (Some(_), _) => {
+                    self.bump();
+                }
+                (None, _) => {
+                    return Err(self.err(line, col, "unterminated block comment"))
+                }
+            }
+        }
+        Ok(Kind::BlockComment)
+    }
+
+    /// A `"…"` string with escape processing (the opening quote is the
+    /// current byte). Also used for `b"…"` / `c"…"` bodies.
+    fn plain_string(&mut self) -> Result<Kind, LexError> {
+        let (line, col) = (self.line, self.col);
+        self.bump();
+        loop {
+            match self.peek(0) {
+                Some(b'\\') => {
+                    self.bump();
+                    self.bump();
+                }
+                Some(b'"') => {
+                    self.bump();
+                    return Ok(Kind::Str);
+                }
+                Some(_) => {
+                    self.bump();
+                }
+                None => return Err(self.err(line, col, "unterminated string")),
+            }
+        }
+    }
+
+    /// A raw string body: the current byte is the first `#` of the
+    /// fence (or the opening quote when `hashes == 0`).
+    fn raw_string(&mut self, hashes: usize) -> Result<Kind, LexError> {
+        let (line, col) = (self.line, self.col);
+        for _ in 0..hashes {
+            self.bump();
+        }
+        self.bump(); // opening quote
+        loop {
+            match self.peek(0) {
+                Some(b'"') => {
+                    let closed = (1..=hashes)
+                        .all(|k| self.peek(k) == Some(b'#'));
+                    self.bump();
+                    if closed {
+                        for _ in 0..hashes {
+                            self.bump();
+                        }
+                        return Ok(Kind::Str);
+                    }
+                }
+                Some(_) => {
+                    self.bump();
+                }
+                None => {
+                    return Err(self.err(line, col, "unterminated raw string"))
+                }
+            }
+        }
+    }
+
+    fn char_or_lifetime(&mut self) -> Result<Kind, LexError> {
+        let (line, col) = (self.line, self.col);
+        self.bump(); // opening quote
+        // Lifetime iff the next char starts an identifier and the char
+        // after that identifier-char is not a closing quote ('a' is a
+        // char literal, 'a in `&'a T` is a lifetime).
+        let next = self.peek(0);
+        let lifetime = match next {
+            Some(c) if is_ident_start(c) => self.peek(1) != Some(b'\''),
+            _ => false,
+        };
+        if lifetime {
+            while self.peek(0).map_or(false, is_ident_continue) {
+                self.bump();
+            }
+            return Ok(Kind::Lifetime);
+        }
+        loop {
+            match self.peek(0) {
+                Some(b'\\') => {
+                    self.bump();
+                    self.bump();
+                }
+                Some(b'\'') => {
+                    self.bump();
+                    return Ok(Kind::Char);
+                }
+                Some(b'\n') | None => {
+                    return Err(self.err(line, col, "unterminated char literal"))
+                }
+                Some(_) => {
+                    self.bump();
+                }
+            }
+        }
+    }
+
+    fn number(&mut self) -> Kind {
+        if self.peek(0) == Some(b'0')
+            && matches!(
+                self.peek(1),
+                Some(b'x' | b'X' | b'o' | b'O' | b'b' | b'B')
+            )
+        {
+            self.bump();
+            self.bump();
+            while self
+                .peek(0)
+                .map_or(false, |c| c.is_ascii_alphanumeric() || c == b'_')
+            {
+                self.bump();
+            }
+            return Kind::Num;
+        }
+        while self
+            .peek(0)
+            .map_or(false, |c| c.is_ascii_digit() || c == b'_')
+        {
+            self.bump();
+        }
+        // A fractional part — but `1..2` is a range and `1.max(…)` a
+        // method call, so only consume `.` when what follows is not a
+        // second dot or an identifier start.
+        if self.peek(0) == Some(b'.')
+            && !matches!(self.peek(1), Some(b'.'))
+            && !self.peek(1).map_or(false, is_ident_start)
+        {
+            self.bump();
+            while self
+                .peek(0)
+                .map_or(false, |c| c.is_ascii_digit() || c == b'_')
+            {
+                self.bump();
+            }
+        }
+        // Exponent: `1e9`, `2.5E-3`.
+        if matches!(self.peek(0), Some(b'e' | b'E')) {
+            let k = if matches!(self.peek(1), Some(b'+' | b'-')) { 2 } else { 1 };
+            if self.peek(k).map_or(false, |c| c.is_ascii_digit()) {
+                for _ in 0..k {
+                    self.bump();
+                }
+                while self
+                    .peek(0)
+                    .map_or(false, |c| c.is_ascii_digit() || c == b'_')
+                {
+                    self.bump();
+                }
+            }
+        }
+        // Type suffix (`u64`, `f32`, `usize`).
+        while self.peek(0).map_or(false, is_ident_continue) {
+            self.bump();
+        }
+        Kind::Num
+    }
+
+    /// An identifier — or a string prefix (`r`, `b`, `c`, `br`, `cr`)
+    /// glued to a string, or a raw identifier `r#name`.
+    fn ident_or_prefixed(&mut self) -> Result<Kind, LexError> {
+        let mut j = self.i;
+        while j < self.b.len() && is_ident_continue(self.b[j]) {
+            j += 1;
+        }
+        let id = &self.src[self.i..j];
+        let after = self.b.get(j).copied();
+        if matches!(id, "r" | "br" | "cr") && matches!(after, Some(b'#' | b'"'))
+        {
+            let mut hashes = 0usize;
+            while self.b.get(j + hashes) == Some(&b'#') {
+                hashes += 1;
+            }
+            if self.b.get(j + hashes) == Some(&b'"') {
+                // Raw string: consume the prefix ident, then the body.
+                while self.i < j {
+                    self.bump();
+                }
+                return self.raw_string(hashes);
+            }
+            if id == "r"
+                && hashes == 1
+                && self.b.get(j + 1).map_or(false, |&c| is_ident_start(c))
+            {
+                // Raw identifier r#name.
+                self.bump(); // r
+                self.bump(); // #
+                while self.peek(0).map_or(false, is_ident_continue) {
+                    self.bump();
+                }
+                return Ok(Kind::RawIdent);
+            }
+        }
+        if matches!(id, "b" | "c") && after == Some(b'"') {
+            while self.i < j {
+                self.bump();
+            }
+            return self.plain_string();
+        }
+        if id == "b" && after == Some(b'\'') {
+            // Byte char literal b'x'.
+            self.bump(); // b
+            return self.char_or_lifetime();
+        }
+        while self.i < j {
+            self.bump();
+        }
+        Ok(Kind::Ident)
+    }
+
+    fn punct(&mut self) -> Kind {
+        const THREE: [&str; 4] = ["..=", "...", "<<=", ">>="];
+        const TWO: [&str; 19] = [
+            "::", "==", "!=", "<=", ">=", "&&", "||", "->", "=>", "..",
+            "+=", "-=", "*=", "/=", "%=", "^=", "&=", "|=", "<<",
+        ];
+        let rest = &self.src[self.i..];
+        for op in THREE {
+            if rest.starts_with(op) {
+                for _ in 0..3 {
+                    self.bump();
+                }
+                return Kind::Punct;
+            }
+        }
+        for op in TWO {
+            if rest.starts_with(op) {
+                for _ in 0..2 {
+                    self.bump();
+                }
+                return Kind::Punct;
+            }
+        }
+        self.bump();
+        Kind::Punct
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds(src: &str) -> Vec<(Kind, String)> {
+        lex(src)
+            .unwrap()
+            .into_iter()
+            .map(|t| (t.kind, t.text))
+            .collect()
+    }
+
+    #[test]
+    fn idents_and_puncts_cluster() {
+        let ts = kinds("a == b && c::d != e..=f");
+        let texts: Vec<&str> = ts.iter().map(|(_, s)| s.as_str()).collect();
+        assert_eq!(
+            texts,
+            ["a", "==", "b", "&&", "c", "::", "d", "!=", "e", "..=", "f"]
+        );
+    }
+
+    #[test]
+    fn raw_strings_hide_contents() {
+        let ts = kinds(r##"let s = r#"HashMap::new() // not code"#;"##);
+        assert_eq!(ts[3].0, Kind::Str);
+        assert!(ts[3].1.contains("HashMap"));
+        assert_eq!(ts.len(), 5); // let s = <str> ;
+    }
+
+    #[test]
+    fn byte_and_c_strings() {
+        let ts = kinds(r###"(b"ab\"c", br##"x"#y"##, c"z")"###);
+        let strs: Vec<_> =
+            ts.iter().filter(|(k, _)| *k == Kind::Str).collect();
+        assert_eq!(strs.len(), 3);
+        assert_eq!(strs[1].1, r###"br##"x"#y"##"###);
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let ts = kinds("a /* outer /* inner */ still */ b");
+        assert_eq!(ts.len(), 3);
+        assert_eq!(ts[1].0, Kind::BlockComment);
+        assert!(ts[1].1.contains("inner"));
+    }
+
+    #[test]
+    fn char_vs_lifetime() {
+        let ts = kinds(r"&'a str; 'x'; '\n'; b'q'; 'static");
+        let got: Vec<Kind> = ts.iter().map(|(k, _)| *k).collect();
+        assert_eq!(ts[1].0, Kind::Lifetime);
+        assert_eq!(ts[4].0, Kind::Char); // 'x'
+        assert!(got.contains(&Kind::Lifetime));
+        let chars = got.iter().filter(|k| **k == Kind::Char).count();
+        assert_eq!(chars, 3); // 'x', '\n', b'q'
+        assert_eq!(ts.last().unwrap().0, Kind::Lifetime); // 'static
+    }
+
+    #[test]
+    fn raw_identifier() {
+        let ts = kinds("let r#type = 1;");
+        assert_eq!(ts[1].0, Kind::RawIdent);
+        assert_eq!(ts[1].1, "r#type");
+    }
+
+    #[test]
+    fn numbers_floats_and_ranges() {
+        let ts = kinds("1..2; 1.5; 1e9; 0x1f; 3.0f64; 7u32; 1.max(2)");
+        let nums: Vec<&(Kind, String)> =
+            ts.iter().filter(|(k, _)| *k == Kind::Num).collect();
+        let texts: Vec<&str> = nums.iter().map(|(_, s)| s.as_str()).collect();
+        assert_eq!(texts, ["1", "2", "1.5", "1e9", "0x1f", "3.0f64", "7u32", "1", "2"]);
+        let tok = |s: &str| Token {
+            kind: Kind::Num,
+            text: s.to_string(),
+            line: 1,
+            col: 1,
+        };
+        assert!(is_float_literal(&tok("1.5")));
+        assert!(is_float_literal(&tok("1e9")));
+        assert!(is_float_literal(&tok("3.0f64")));
+        assert!(!is_float_literal(&tok("0x1f")));
+        assert!(!is_float_literal(&tok("7u32")));
+    }
+
+    #[test]
+    fn positions_track_lines_and_cols() {
+        let ts = lex("ab\n  cd /* x\ny */ ef").unwrap();
+        assert_eq!((ts[0].line, ts[0].col), (1, 1));
+        assert_eq!((ts[1].line, ts[1].col), (2, 3));
+        assert_eq!((ts[2].line, ts[2].col), (2, 6)); // block comment
+        assert_eq!((ts[3].line, ts[3].col), (3, 6)); // ef after comment
+    }
+
+    #[test]
+    fn unterminated_forms_error() {
+        assert!(lex("\"abc").is_err());
+        assert!(lex("/* abc").is_err());
+        assert!(lex("r#\"abc\"").is_err());
+    }
+
+    #[test]
+    fn comments_are_tokens() {
+        let ts = lex("x // trailing\n/* block */ y").unwrap();
+        assert_eq!(ts[1].kind, Kind::LineComment);
+        assert_eq!(ts[1].text, "// trailing");
+        assert_eq!(ts[2].kind, Kind::BlockComment);
+    }
+}

@@ -1,0 +1,152 @@
+//! `quidam lint` — an in-repo static-analysis pass enforcing the
+//! determinism & robustness contract (DESIGN.md §10).
+//!
+//! The whole reproduction leans on one promise: with the same inputs,
+//! every sweep/search/merge path produces byte-identical output at any
+//! thread or shard count. CI's runtime `cmp` smokes catch a violation
+//! only after it corrupts a front; this pass catches the *patterns*
+//! that cause them (hash-order iteration, `partial_cmp` on floats,
+//! clock/env reads, panicking server handlers) at the diff, token by
+//! token, with zero dependencies: a hand-written lexer
+//! ([`lexer`]), a file scanner for module identity / `#[cfg(test)]`
+//! spans / suppressions ([`scan`]), the rule engine ([`rules`]), and
+//! deterministic diagnostics ([`diag`]).
+//!
+//! Rules (all skip `#[cfg(test)]` modules):
+//!
+//! | id  | scope                               | pattern |
+//! |-----|-------------------------------------|---------|
+//! | D1  | sweep, report, server::distrib      | `HashMap`/`HashSet` |
+//! | D2  | + dse, search, accuracy, util::stats| `.partial_cmp`, float-literal `==`/`!=` |
+//! | D3  | dse, search, sweep, accuracy        | `Instant::now`, `SystemTime::now`, env reads, unseeded RNG |
+//! | R1  | server::{router,http,jobs}          | `.unwrap()`, `.expect()`, `panic!`-family, slice indexing |
+//! | S1  | everywhere                          | `unsafe` without a preceding SAFETY comment |
+//! | SUP | everywhere                          | malformed / unknown-rule / unused suppressions |
+//!
+//! A finding is silenced in-source with a trailing or preceding
+//! comment of the form `// quidam-lint: allow(D1) -- <reason>`; the
+//! reason is mandatory, and a suppression that matches nothing is
+//! itself a finding, so stale exceptions can't accumulate.
+
+pub mod diag;
+pub mod lexer;
+pub mod rules;
+pub mod scan;
+
+use std::path::{Component, Path, PathBuf};
+
+pub use diag::{report_json, Diagnostic};
+
+/// Derive the crate-relative module path from a file path: components
+/// after the last `src` directory, `::`-joined, with `mod.rs` /
+/// `lib.rs` / `main.rs` naming their parent. Files outside any `src`
+/// tree (e.g. fixtures) get their bare stem; fixtures override it via
+/// a directive anyway.
+pub fn module_path_of(path: &Path) -> String {
+    let comps: Vec<String> = path
+        .components()
+        .filter_map(|c| match c {
+            Component::Normal(s) => s.to_str().map(str::to_string),
+            _ => None,
+        })
+        .collect();
+    let start = comps
+        .iter()
+        .rposition(|c| c == "src")
+        .map(|i| i + 1)
+        .unwrap_or(comps.len().saturating_sub(1));
+    let mut parts: Vec<String> = comps[start..].to_vec();
+    if let Some(last) = parts.last_mut() {
+        if let Some(stem) = last.strip_suffix(".rs") {
+            *last = stem.to_string();
+        }
+    }
+    if matches!(
+        parts.last().map(String::as_str),
+        Some("mod" | "lib" | "main")
+    ) {
+        parts.pop();
+    }
+    parts.join("::")
+}
+
+/// Lint one in-memory source file under an explicit module path. A
+/// file the lexer cannot finish yields a single `LEX` finding at the
+/// failure position (so a truncated file fails CI rather than passing
+/// unscanned).
+pub fn lint_source(file: &str, module: &str, src: &str) -> Vec<Diagnostic> {
+    match scan::FileScan::new(file, module, src) {
+        Ok(s) => rules::check(&s),
+        Err(e) => vec![Diagnostic {
+            file: file.to_string(),
+            line: e.line,
+            col: e.col,
+            rule: "LEX",
+            msg: format!("cannot lex file: {}", e.msg),
+        }],
+    }
+}
+
+/// Lint files and directory trees (recursing into `.rs` files, sorted
+/// by name so the walk order — and therefore the report — is
+/// deterministic). Returns `(files_scanned, findings)`.
+pub fn lint_paths(paths: &[PathBuf]) -> Result<(usize, Vec<Diagnostic>), String> {
+    let mut files: Vec<PathBuf> = Vec::new();
+    for p in paths {
+        if !p.exists() {
+            return Err(format!("{}: no such file or directory", p.display()));
+        }
+        collect_rs(p, &mut files)?;
+    }
+    files.sort();
+    files.dedup();
+    let mut out = Vec::new();
+    for f in &files {
+        let src = std::fs::read_to_string(f)
+            .map_err(|e| format!("{}: {e}", f.display()))?;
+        let module = module_path_of(f);
+        out.extend(lint_source(&f.display().to_string(), &module, &src));
+    }
+    diag::sort(&mut out);
+    Ok((files.len(), out))
+}
+
+fn collect_rs(p: &Path, out: &mut Vec<PathBuf>) -> Result<(), String> {
+    if p.is_dir() {
+        let mut entries: Vec<PathBuf> = std::fs::read_dir(p)
+            .map_err(|e| format!("{}: {e}", p.display()))?
+            .filter_map(|e| e.ok().map(|e| e.path()))
+            .collect();
+        entries.sort();
+        for e in entries {
+            collect_rs(&e, out)?;
+        }
+    } else if p.extension().and_then(|e| e.to_str()) == Some("rs") {
+        out.push(p.to_path_buf());
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn module_paths_from_file_layout() {
+        let m = |s: &str| module_path_of(Path::new(s));
+        assert_eq!(m("rust/src/sweep/reducers.rs"), "sweep::reducers");
+        assert_eq!(m("rust/src/sweep/mod.rs"), "sweep");
+        assert_eq!(m("rust/src/lib.rs"), "");
+        assert_eq!(m("rust/src/main.rs"), "");
+        assert_eq!(m("rust/src/server/distrib.rs"), "server::distrib");
+        assert_eq!(m("fixtures/d1_bad.rs"), "d1_bad");
+    }
+
+    #[test]
+    fn lex_failure_becomes_a_finding() {
+        let d = lint_source("x.rs", "sweep", "fn a() { /* never closed");
+        assert_eq!(d.len(), 1);
+        assert_eq!(d[0].rule, "LEX");
+        assert_eq!(d[0].line, 1);
+    }
+}

@@ -1,0 +1,389 @@
+//! The determinism & robustness contract as executable rules
+//! (DESIGN.md §10). Each rule works on the code-token stream of one
+//! file; module scoping decides which rules apply, `#[cfg(test)]`
+//! spans are always exempt, and suppression comments (see
+//! [`super::scan`]) silence individual findings visibly and with a
+//! written justification.
+
+use super::diag::Diagnostic;
+use super::lexer::{is_float_literal, Kind, Token};
+use super::scan::FileScan;
+
+pub struct Rule {
+    pub id: &'static str,
+    pub summary: &'static str,
+    /// Module-path prefixes the rule applies to; empty = every module.
+    pub scopes: &'static [&'static str],
+}
+
+pub const RULES: &[Rule] = &[
+    Rule {
+        id: "D1",
+        summary: "no HashMap/HashSet in serialization, reducer, or \
+                  wire-form modules (nondeterministic iteration order)",
+        scopes: &["sweep", "report", "server::distrib"],
+    },
+    Rule {
+        id: "D2",
+        summary: "float ordering goes through total_cmp; no \
+                  partial_cmp calls or float-literal ==/!= in merge paths",
+        scopes: &[
+            "sweep",
+            "dse",
+            "search",
+            "report",
+            "accuracy",
+            "server::distrib",
+            "util::stats",
+        ],
+    },
+    Rule {
+        id: "D3",
+        summary: "no clocks, environment reads, or unseeded RNG in \
+                  deterministic modules",
+        scopes: &["dse", "search", "sweep", "accuracy"],
+    },
+    Rule {
+        id: "R1",
+        summary: "no unwrap/expect/panicking macros/slice-indexing in \
+                  server request paths (bad input maps to 4xx)",
+        scopes: &["server::router", "server::http", "server::jobs"],
+    },
+    Rule {
+        id: "S1",
+        summary: "every unsafe block carries an immediately preceding \
+                  SAFETY comment",
+        scopes: &[],
+    },
+    Rule {
+        id: "SUP",
+        summary: "suppressions name a known rule, match a real finding, \
+                  and carry a reason",
+        scopes: &[],
+    },
+];
+
+pub fn known_rule(id: &str) -> bool {
+    RULES.iter().any(|r| r.id == id)
+}
+
+fn in_scope(module: &str, rule: &Rule) -> bool {
+    rule.scopes.is_empty()
+        || rule.scopes.iter().any(|s| {
+            module
+                .strip_prefix(s)
+                .map_or(false, |rest| rest.is_empty() || rest.starts_with("::"))
+        })
+}
+
+/// Run every applicable rule over one scanned file, apply test-span
+/// exemptions and suppressions, and emit SUP findings for suppression
+/// misuse. Output is unsorted; the caller sorts across files.
+pub fn check(scan: &FileScan) -> Vec<Diagnostic> {
+    let mut raw: Vec<Diagnostic> = Vec::new();
+    for rule in RULES {
+        if !in_scope(&scan.module, rule) {
+            continue;
+        }
+        match rule.id {
+            "D1" => d1(scan, &mut raw),
+            "D2" => d2(scan, &mut raw),
+            "D3" => d3(scan, &mut raw),
+            "R1" => r1(scan, &mut raw),
+            "S1" => s1(scan, &mut raw),
+            _ => {} // SUP is engine-level, below.
+        }
+    }
+    raw.retain(|d| !scan.in_test_span(d.line));
+
+    let mut used = vec![false; scan.suppressions.len()];
+    raw.retain(|d| {
+        let hit = scan.suppressions.iter().position(|s| {
+            s.malformed.is_none()
+                && s.rules.iter().any(|r| r == d.rule)
+                && s.covers.contains(&d.line)
+        });
+        match hit {
+            Some(i) => {
+                used[i] = true;
+                false
+            }
+            None => true,
+        }
+    });
+
+    for (i, s) in scan.suppressions.iter().enumerate() {
+        if scan.in_test_span(s.line) {
+            continue;
+        }
+        let mut sup = |msg: String| {
+            raw.push(Diagnostic {
+                file: scan.file.clone(),
+                line: s.line,
+                col: s.col,
+                rule: "SUP",
+                msg,
+            });
+        };
+        if let Some(m) = &s.malformed {
+            sup(format!("malformed suppression: {m}"));
+            continue;
+        }
+        let unknown: Vec<&String> =
+            s.rules.iter().filter(|r| !known_rule(r)).collect();
+        if !unknown.is_empty() {
+            for r in unknown {
+                sup(format!("suppression names unknown rule `{r}`"));
+            }
+        } else if !used[i] {
+            sup(
+                "suppression does not match any finding on its line; \
+                 remove it"
+                    .to_string(),
+            );
+        }
+    }
+    raw
+}
+
+fn diag(scan: &FileScan, t: &Token, rule: &'static str, msg: String) -> Diagnostic {
+    Diagnostic {
+        file: scan.file.clone(),
+        line: t.line,
+        col: t.col,
+        rule,
+        msg,
+    }
+}
+
+fn ident(t: &Token, want: &str) -> bool {
+    t.kind == Kind::Ident && t.text == want
+}
+
+/// D1: `HashMap`/`HashSet` tokens anywhere in the file — iteration
+/// order varies run-to-run, which breaks byte-identical CSV/wire
+/// output the moment one is iterated for serialization or merging.
+fn d1(scan: &FileScan, out: &mut Vec<Diagnostic>) {
+    for k in 0..scan.code.len() {
+        let t = scan.ct(k);
+        if t.kind == Kind::Ident && (t.text == "HashMap" || t.text == "HashSet")
+        {
+            out.push(diag(
+                scan,
+                t,
+                "D1",
+                format!(
+                    "`{}` iterates in nondeterministic order; use \
+                     BTreeMap/BTreeSet or sort before emitting",
+                    t.text
+                ),
+            ));
+        }
+    }
+}
+
+/// D2: `.partial_cmp(` / `::partial_cmp` call sites (not `fn
+/// partial_cmp` trait impls) and float-literal `==`/`!=`.
+fn d2(scan: &FileScan, out: &mut Vec<Diagnostic>) {
+    for k in 0..scan.code.len() {
+        let t = scan.ct(k);
+        if ident(t, "partial_cmp") && k > 0 {
+            let prev = scan.ct(k - 1);
+            if prev.text == "." || prev.text == "::" {
+                out.push(diag(
+                    scan,
+                    t,
+                    "D2",
+                    "`partial_cmp` is not a total order on floats (NaN); \
+                     use `f64::total_cmp`"
+                        .to_string(),
+                ));
+            }
+        }
+        if t.kind == Kind::Punct && (t.text == "==" || t.text == "!=") {
+            let lhs_float = k > 0 && is_float_literal(scan.ct(k - 1));
+            let rhs_float = k + 1 < scan.code.len()
+                && is_float_literal(scan.ct(k + 1));
+            if lhs_float || rhs_float {
+                out.push(diag(
+                    scan,
+                    t,
+                    "D2",
+                    format!(
+                        "float-literal `{}` comparison in a merge/wire \
+                         path; use total_cmp or integer keys",
+                        t.text
+                    ),
+                ));
+            }
+        }
+    }
+}
+
+/// D3: wall/monotonic clocks, environment reads, and unseeded RNG
+/// constructors — anything that makes two runs with the same inputs
+/// diverge.
+fn d3(scan: &FileScan, out: &mut Vec<Diagnostic>) {
+    let n = scan.code.len();
+    let txt = |k: usize| -> &str {
+        if k < n {
+            scan.ct(k).text.as_str()
+        } else {
+            ""
+        }
+    };
+    for k in 0..n {
+        let t = scan.ct(k);
+        if t.kind != Kind::Ident {
+            continue;
+        }
+        let path_now = (t.text == "Instant" || t.text == "SystemTime")
+            && txt(k + 1) == "::"
+            && txt(k + 2) == "now";
+        if path_now {
+            out.push(diag(
+                scan,
+                t,
+                "D3",
+                format!(
+                    "`{}::now` reads a clock; deterministic modules must \
+                     not branch on time",
+                    t.text
+                ),
+            ));
+            continue;
+        }
+        let env_read = t.text == "env"
+            && txt(k + 1) == "::"
+            && matches!(txt(k + 2), "var" | "var_os" | "vars" | "vars_os");
+        let env_macro =
+            (t.text == "env" || t.text == "option_env") && txt(k + 1) == "!";
+        if env_read || env_macro {
+            out.push(diag(
+                scan,
+                t,
+                "D3",
+                "environment-derived value in a deterministic module; \
+                 thread configuration in explicitly"
+                    .to_string(),
+            ));
+            continue;
+        }
+        if t.text == "thread_rng" || t.text == "from_entropy" {
+            out.push(diag(
+                scan,
+                t,
+                "D3",
+                format!(
+                    "`{}` is an unseeded RNG; construct RNG via \
+                     `util::rng` with an explicit seed",
+                    t.text
+                ),
+            ));
+        }
+    }
+}
+
+/// Identifiers that legally precede `[` without it being an index
+/// expression (slice patterns, array types after keywords, …).
+const NON_INDEX_KEYWORDS: &[&str] = &[
+    "return", "break", "continue", "in", "else", "match", "if", "while",
+    "loop", "move", "mut", "ref", "as", "where", "await", "yield", "dyn",
+    "impl", "unsafe", "union", "static", "const", "let", "pub", "fn",
+    "use", "mod", "enum", "struct", "trait", "type", "extern", "crate",
+    "super", "box", "do", "macro",
+];
+
+/// R1: panics in server request paths. A panicking handler kills its
+/// worker thread mid-response; malformed input must surface as a 4xx.
+fn r1(scan: &FileScan, out: &mut Vec<Diagnostic>) {
+    let n = scan.code.len();
+    for k in 0..n {
+        let t = scan.ct(k);
+        if (ident(t, "unwrap") || ident(t, "expect"))
+            && k > 0
+            && scan.ct(k - 1).text == "."
+            && k + 1 < n
+            && scan.ct(k + 1).text == "("
+        {
+            out.push(diag(
+                scan,
+                t,
+                "R1",
+                format!(
+                    "`.{}()` can panic a worker thread; map bad input to \
+                     a 4xx error instead",
+                    t.text
+                ),
+            ));
+            continue;
+        }
+        if t.kind == Kind::Ident
+            && matches!(
+                t.text.as_str(),
+                "panic" | "unreachable" | "todo" | "unimplemented"
+            )
+            && k + 1 < n
+            && scan.ct(k + 1).text == "!"
+        {
+            out.push(diag(
+                scan,
+                t,
+                "R1",
+                format!(
+                    "`{}!` kills the worker thread; return an error \
+                     response instead",
+                    t.text
+                ),
+            ));
+            continue;
+        }
+        if t.kind == Kind::Punct && t.text == "[" && k > 0 {
+            let prev = scan.ct(k - 1);
+            let indexes = match prev.kind {
+                Kind::Ident => {
+                    !NON_INDEX_KEYWORDS.contains(&prev.text.as_str())
+                }
+                Kind::Punct => prev.text == "]" || prev.text == ")",
+                _ => false,
+            };
+            if indexes {
+                out.push(diag(
+                    scan,
+                    t,
+                    "R1",
+                    "slice/array indexing can panic on malformed input; \
+                     use `.get(…)`"
+                        .to_string(),
+                ));
+            }
+        }
+    }
+}
+
+/// S1: every `unsafe` token must be preceded (possibly through a run
+/// of comments) by a comment containing `SAFETY:`.
+fn s1(scan: &FileScan, out: &mut Vec<Diagnostic>) {
+    for k in 0..scan.code.len() {
+        let t = scan.ct(k);
+        if !ident(t, "unsafe") {
+            continue;
+        }
+        let full_idx = scan.code[k];
+        let justified = scan.tokens[..full_idx]
+            .iter()
+            .rev()
+            .take_while(|p| p.is_comment())
+            .any(|p| p.text.contains("SAFETY:"));
+        if !justified {
+            out.push(diag(
+                scan,
+                t,
+                "S1",
+                "`unsafe` without an immediately preceding SAFETY comment \
+                 explaining the invariant"
+                    .to_string(),
+            ));
+        }
+    }
+}

@@ -1,0 +1,333 @@
+//! File-level scanning on top of the lexer: code-token stream,
+//! `#[cfg(test)]` module spans (every rule skips test code), and
+//! in-source suppression comments.
+
+use super::lexer::{self, Kind, Token};
+
+/// The comment marker that introduces a suppression. A comment whose
+/// body *starts* with this marker (after the comment delimiters) is
+/// parsed as `allow(<RULE>[, <RULE>…]) -- <reason>`; mentions of the
+/// marker mid-sentence in prose are ignored.
+const MARKER: &str = "quidam-lint:";
+
+/// A parsed suppression comment.
+#[derive(Debug)]
+pub struct Suppression {
+    /// Line/col of the comment itself.
+    pub line: u32,
+    pub col: u32,
+    /// Rule ids named in `allow(…)`, upper-cased.
+    pub rules: Vec<String>,
+    /// Lines a matching finding may sit on: the comment's own line for
+    /// a trailing comment, the next code line for a standalone one.
+    pub covers: Vec<u32>,
+    /// Why the parse failed (missing `allow(…)`, empty rule list, or a
+    /// missing `-- reason`); reported as a SUP finding by the engine.
+    pub malformed: Option<String>,
+}
+
+/// Everything the rule engine needs to know about one source file.
+pub struct FileScan {
+    pub file: String,
+    /// Module path, e.g. `sweep::reducers` (empty for the crate root).
+    pub module: String,
+    /// Full token stream, comments included.
+    pub tokens: Vec<Token>,
+    /// Indices into `tokens` of the non-comment tokens.
+    pub code: Vec<usize>,
+    /// Inclusive line spans of `#[cfg(test)] mod … { … }` bodies.
+    pub test_spans: Vec<(u32, u32)>,
+    pub suppressions: Vec<Suppression>,
+}
+
+impl FileScan {
+    pub fn new(
+        file: &str,
+        module: &str,
+        src: &str,
+    ) -> Result<FileScan, lexer::LexError> {
+        let tokens = lexer::lex(src)?;
+        let code: Vec<usize> = tokens
+            .iter()
+            .enumerate()
+            .filter(|(_, t)| !t.is_comment())
+            .map(|(i, _)| i)
+            .collect();
+        let test_spans = test_spans(&tokens, &code);
+        let suppressions = suppressions(&tokens);
+        Ok(FileScan {
+            file: file.to_string(),
+            module: module.to_string(),
+            tokens,
+            code,
+            test_spans,
+            suppressions,
+        })
+    }
+
+    pub fn in_test_span(&self, line: u32) -> bool {
+        self.test_spans.iter().any(|&(a, b)| a <= line && line <= b)
+    }
+
+    /// The k-th *code* token.
+    pub fn ct(&self, k: usize) -> &Token {
+        &self.tokens[self.code[k]]
+    }
+}
+
+fn text_of<'a>(tokens: &'a [Token], code: &[usize], k: usize) -> &'a str {
+    code.get(k).map_or("", |&i| tokens[i].text.as_str())
+}
+
+fn is_ident(tokens: &[Token], code: &[usize], k: usize, want: &str) -> bool {
+    code.get(k).map_or(false, |&i| {
+        tokens[i].kind == Kind::Ident && tokens[i].text == want
+    })
+}
+
+/// Index (into `code`) of the token matching the opener at `open_k`,
+/// counting `open`/`close` nesting. `open_k` must point at an `open`.
+fn match_forward(
+    tokens: &[Token],
+    code: &[usize],
+    open_k: usize,
+    open: &str,
+    close: &str,
+) -> Option<usize> {
+    let mut depth = 0usize;
+    for k in open_k..code.len() {
+        let t = text_of(tokens, code, k);
+        if t == open {
+            depth += 1;
+        } else if t == close {
+            depth -= 1;
+            if depth == 0 {
+                return Some(k);
+            }
+        }
+    }
+    None
+}
+
+/// Find `#[cfg(test)] mod name { … }` items (attributes in any order,
+/// optional `pub`) and return the inclusive line spans of their bodies.
+fn test_spans(tokens: &[Token], code: &[usize]) -> Vec<(u32, u32)> {
+    let mut spans = Vec::new();
+    let mut k = 0usize;
+    while k < code.len() {
+        if text_of(tokens, code, k) != "#"
+            || text_of(tokens, code, k + 1) != "["
+        {
+            k += 1;
+            continue;
+        }
+        // Walk the full run of attributes, remembering whether any of
+        // them is cfg(test).
+        let mut j = k;
+        let mut saw_cfg_test = false;
+        while text_of(tokens, code, j) == "#"
+            && text_of(tokens, code, j + 1) == "["
+        {
+            let Some(end) = match_forward(tokens, code, j + 1, "[", "]")
+            else {
+                return spans;
+            };
+            let inner = &code[j + 2..end];
+            for (w, &i) in inner.iter().enumerate() {
+                if tokens[i].text == "cfg"
+                    && inner.get(w + 1).map_or(false, |&p| tokens[p].text == "(")
+                    && inner
+                        .get(w + 2)
+                        .map_or(false, |&p| tokens[p].text == "test")
+                {
+                    saw_cfg_test = true;
+                }
+            }
+            j = end + 1;
+        }
+        if !saw_cfg_test {
+            k = j;
+            continue;
+        }
+        if is_ident(tokens, code, j, "pub") {
+            j += 1;
+            if text_of(tokens, code, j) == "(" {
+                match match_forward(tokens, code, j, "(", ")") {
+                    Some(end) => j = end + 1,
+                    None => return spans,
+                }
+            }
+        }
+        if is_ident(tokens, code, j, "mod")
+            && code.get(j + 1).map_or(false, |&i| tokens[i].kind == Kind::Ident)
+            && text_of(tokens, code, j + 2) == "{"
+        {
+            if let Some(end) = match_forward(tokens, code, j + 2, "{", "}") {
+                spans.push((
+                    tokens[code[j + 2]].line,
+                    tokens[code[end]].line,
+                ));
+                k = end + 1;
+                continue;
+            }
+        }
+        k = j + 1;
+    }
+    spans
+}
+
+/// Strip comment delimiters: `//`, `///`, `//!`, `/* … */`, `/** … */`.
+fn comment_body(t: &Token) -> &str {
+    let s = t.text.as_str();
+    let s = if t.kind == Kind::BlockComment {
+        s.strip_prefix("/*")
+            .map(|b| b.strip_suffix("*/").unwrap_or(b))
+            .unwrap_or(s)
+    } else {
+        s.trim_start_matches('/')
+    };
+    s.trim_start_matches(['!', '*']).trim()
+}
+
+fn suppressions(tokens: &[Token]) -> Vec<Suppression> {
+    let mut out = Vec::new();
+    for (i, t) in tokens.iter().enumerate() {
+        if !t.is_comment() {
+            continue;
+        }
+        let body = comment_body(t);
+        let Some(rest) = body.strip_prefix(MARKER) else { continue };
+        let mut sup = Suppression {
+            line: t.line,
+            col: t.col,
+            rules: Vec::new(),
+            covers: Vec::new(),
+            malformed: None,
+        };
+        parse_allow(rest.trim(), &mut sup);
+        // Trailing comment (code earlier on the same line) covers its
+        // own line; a standalone comment covers the next code line.
+        let trailing = tokens[..i]
+            .iter()
+            .rev()
+            .find(|p| !p.is_comment())
+            .map_or(false, |p| p.line == t.line);
+        if trailing {
+            sup.covers.push(t.line);
+        } else if let Some(next) =
+            tokens[i + 1..].iter().find(|n| !n.is_comment())
+        {
+            sup.covers.push(next.line);
+        }
+        out.push(sup);
+    }
+    out
+}
+
+fn parse_allow(rest: &str, sup: &mut Suppression) {
+    let Some(args) = rest.strip_prefix("allow").map(str::trim_start) else {
+        sup.malformed = Some(format!(
+            "expected `allow(<rule>) -- <reason>` after `{MARKER}`"
+        ));
+        return;
+    };
+    let Some(args) = args.strip_prefix('(') else {
+        sup.malformed = Some("missing `(` after `allow`".to_string());
+        return;
+    };
+    let Some(close) = args.find(')') else {
+        sup.malformed = Some("unclosed `allow(`".to_string());
+        return;
+    };
+    let names: Vec<String> = args[..close]
+        .split(',')
+        .map(|s| s.trim().to_ascii_uppercase())
+        .filter(|s| !s.is_empty())
+        .collect();
+    if names.is_empty() {
+        sup.malformed = Some("empty rule list in `allow()`".to_string());
+        return;
+    }
+    sup.rules = names;
+    let tail = args[close + 1..].trim();
+    match tail.strip_prefix("--").map(str::trim) {
+        Some(reason) if !reason.is_empty() => {}
+        _ => {
+            sup.malformed = Some(
+                "suppression needs a justification: `-- <reason>`".to_string(),
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scan(src: &str) -> FileScan {
+        FileScan::new("t.rs", "sweep::reducers", src).unwrap()
+    }
+
+    #[test]
+    fn cfg_test_span_covers_mod_body() {
+        let s = scan(
+            "fn a() {}\n#[cfg(test)]\nmod tests {\n    fn b() {}\n}\nfn c() {}\n",
+        );
+        assert_eq!(s.test_spans, vec![(3, 5)]);
+        assert!(!s.in_test_span(1));
+        assert!(s.in_test_span(4));
+        assert!(!s.in_test_span(6));
+    }
+
+    #[test]
+    fn cfg_test_with_extra_attrs_and_pub() {
+        let s = scan(
+            "#[cfg(test)]\n#[allow(dead_code)]\npub mod tests { fn b() {} }\n",
+        );
+        assert_eq!(s.test_spans.len(), 1);
+        let s2 = scan("#[allow(dead_code)]\n#[cfg(test)]\nmod t { }\n");
+        assert_eq!(s2.test_spans.len(), 1);
+    }
+
+    #[test]
+    fn cfg_test_on_non_mod_is_ignored() {
+        let s = scan("#[cfg(test)]\nuse std::fmt;\nfn x() {}\n");
+        assert!(s.test_spans.is_empty());
+    }
+
+    #[test]
+    fn suppression_trailing_covers_own_line() {
+        let src = "let x = 1; // quidam-lint: allow(D1) -- fixed-key map\n";
+        let s = scan(src);
+        assert_eq!(s.suppressions.len(), 1);
+        let sup = &s.suppressions[0];
+        assert_eq!(sup.rules, vec!["D1".to_string()]);
+        assert!(sup.malformed.is_none());
+        assert_eq!(sup.covers, vec![1]);
+    }
+
+    #[test]
+    fn suppression_standalone_covers_next_code_line() {
+        let src = "// quidam-lint: allow(R1, S1) -- startup only\n\nlet y = 2;\n";
+        let s = scan(src);
+        let sup = &s.suppressions[0];
+        assert_eq!(sup.rules, vec!["R1".to_string(), "S1".to_string()]);
+        assert_eq!(sup.covers, vec![3]);
+    }
+
+    #[test]
+    fn suppression_missing_reason_is_malformed() {
+        let s = scan("// quidam-lint: allow(D2)\nlet z = 3;\n");
+        assert!(s.suppressions[0].malformed.is_some());
+        let s2 = scan("// quidam-lint: allow() -- why\nlet z = 3;\n");
+        assert!(s2.suppressions[0].malformed.is_some());
+        let s3 = scan("// quidam-lint: disallow(D2) -- why\nlet z = 3;\n");
+        assert!(s3.suppressions[0].malformed.is_some());
+    }
+
+    #[test]
+    fn marker_mid_sentence_is_not_a_suppression() {
+        let s = scan("// the quidam-lint: allow(D1) syntax is documented\n");
+        assert!(s.suppressions.is_empty());
+    }
+}

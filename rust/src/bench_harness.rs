@@ -78,7 +78,7 @@ impl Bench {
             std::hint::black_box(f());
             samples.push(t0.elapsed().as_nanos() as f64);
         }
-        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        samples.sort_by(f64::total_cmp);
         let n = samples.len();
         let result = BenchResult {
             name: name.to_string(),

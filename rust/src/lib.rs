@@ -6,6 +6,7 @@
 //! and the PJRT runtime that executes the JAX/Pallas AOT artifacts.
 
 pub mod accuracy;
+pub mod analysis;
 pub mod bench_harness;
 pub mod coexplore;
 pub mod config;

@@ -24,6 +24,9 @@
 //!   quidam serve        [--addr HOST:PORT] [--http-threads N] [--threads N]
 //!                       [--cache-mib M] [--port-file FILE] (persistent PPA
 //!                       query + exploration service; DESIGN.md §6)
+//!   quidam lint         [PATHS...] [--json] (token-level static analysis
+//!                       enforcing the determinism & robustness contract,
+//!                       DESIGN.md §10; exits non-zero on any finding)
 //!   quidam figures      [--out DIR] [--samples N] (all figures + tables)
 //!   quidam fig4|fig5|fig678|fig9|fig10|fig12|table3|table4|speedup
 //!   quidam coexplore    [--archs N] [--pe LIST] (errors without int16)
@@ -793,6 +796,36 @@ fn run(sub: &str, args: &Args) -> anyhow::Result<()> {
                 ],
             ));
         }
+        "lint" => {
+            // Positional paths, defaulting to the library tree. Grammar
+            // note: `--json` binds a following bare word as its value,
+            // so the flag goes last (`quidam lint rust/src --json`).
+            let paths: Vec<PathBuf> = if args.positional.is_empty() {
+                vec![PathBuf::from("rust/src")]
+            } else {
+                args.positional.iter().map(PathBuf::from).collect()
+            };
+            let (files, findings) = quidam::analysis::lint_paths(&paths)
+                .map_err(anyhow::Error::msg)?;
+            if args.flag("json") {
+                println!("{}", quidam::analysis::report_json(files, &findings));
+            } else {
+                for d in &findings {
+                    println!("{d}");
+                }
+                println!(
+                    "quidam lint: {} finding(s) in {files} file(s)",
+                    findings.len()
+                );
+            }
+            if !findings.is_empty() {
+                anyhow::bail!(
+                    "{} finding(s) violate the determinism & robustness \
+                     contract (DESIGN.md §10)",
+                    findings.len()
+                );
+            }
+        }
         "explore" => run_explore(&coord, args, &out)?,
         "search" => run_search_cmd(&coord, args, &out)?,
         "coordinate" => run_coordinate(&coord, args, &out)?,
@@ -934,8 +967,8 @@ fn run(sub: &str, args: &Args) -> anyhow::Result<()> {
         _ => {
             println!(
                 "QUIDAM — quantization-aware DNN accelerator + model co-exploration\n\
-                 usage: quidam <characterize|evaluate|explore|search|coordinate|serve|figures|fig4|\n\
-                 fig5|fig678|fig9|fig10|fig12|table3|table4|speedup|coexplore|rtl|train|eval-trained>\n\
+                 usage: quidam <characterize|evaluate|explore|search|coordinate|serve|lint|figures|\n\
+                 fig4|fig5|fig678|fig9|fig10|fig12|table3|table4|speedup|coexplore|rtl|train|eval-trained>\n\
                  common flags: --models PATH --cfgs N --degree D --samples N --out DIR\n\
                  explore flags: --dense --threads N --top-k K --objective ppa|energy|latency|power\n\
                  \x20               --net resnet20|resnet56|vgg16 --points-out FILE --format csv|jsonl\n\
@@ -951,6 +984,8 @@ fn run(sub: &str, args: &Args) -> anyhow::Result<()> {
                  \x20               shards a sweep across remote quidam serve workers, DESIGN.md §7)\n\
                  serve flags:   --addr HOST:PORT --http-threads N --threads N --cache-mib M\n\
                  \x20               --port-file FILE (endpoint table: DESIGN.md §6)\n\
+                 lint:          quidam lint [PATHS...] [--json] (static analysis of the\n\
+                 \x20               determinism & robustness contract, DESIGN.md §10)\n\
                  full CLI reference: README.md; design notes: DESIGN.md"
             );
         }

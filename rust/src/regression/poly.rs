@@ -332,9 +332,9 @@ mod tests {
         let b = PolyBasis::new(2, 2, 2);
         let row = b.expand(&[2.0, 3.0]);
         let mut got = row.clone();
-        got.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        got.sort_by(f64::total_cmp);
         let mut want = vec![1.0, 2.0, 3.0, 4.0, 6.0, 9.0];
-        want.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        want.sort_by(f64::total_cmp);
         assert_eq!(got, want);
     }
 

@@ -360,7 +360,7 @@ pub fn run_distributed(
                     {
                         return;
                     }
-                    let next = queue.lock().unwrap().pop_front();
+                    let next = super::lock(queue).pop_front();
                     let Some(mut shard) = next else {
                         if shards_done.load(Ordering::Relaxed)
                             >= shards_total
@@ -382,7 +382,7 @@ pub fn run_distributed(
                         Err(e) => {
                             shard.attempts += 1;
                             if shard.attempts >= max_attempts {
-                                *fatal.lock().unwrap() = Some(format!(
+                                *super::lock(fatal) = Some(format!(
                                     "shard {}..{} undeliverable after {} \
                                      attempts: {e}",
                                     shard.range.start,
@@ -393,7 +393,7 @@ pub fn run_distributed(
                                 return;
                             }
                             redispatches.fetch_add(1, Ordering::Relaxed);
-                            queue.lock().unwrap().push_back(shard);
+                            super::lock(queue).push_back(shard);
                             strikes += 1;
                             if strikes >= WORKER_STRIKES {
                                 // This worker looks dead; retire it and
@@ -406,7 +406,7 @@ pub fn run_distributed(
             });
         }
     });
-    if let Some(e) = fatal.lock().unwrap().take() {
+    if let Some(e) = super::lock(&fatal).take() {
         return Err(e);
     }
     let done = shards_done.load(Ordering::Relaxed);

@@ -204,10 +204,17 @@ fn summary_result_json(s: &SweepSummary) -> Json {
             .points()
             .iter()
             .map(|(c, m)| {
+                // Front3 coordinates are always 3-wide; a mismatched
+                // point serializes as nulls instead of panicking the
+                // status handler.
+                let (e, p, a) = match c.as_slice() {
+                    [e, p, a] => (*e, *p, *a),
+                    _ => (f64::NAN, f64::NAN, f64::NAN),
+                };
                 Json::obj(vec![
-                    ("energy_j", Json::num_or_null(c[0])),
-                    ("perf_per_area", Json::num_or_null(c[1])),
-                    ("accuracy", Json::num_or_null(c[2])),
+                    ("energy_j", Json::num_or_null(e)),
+                    ("perf_per_area", Json::num_or_null(p)),
+                    ("accuracy", Json::num_or_null(a)),
                     (
                         "bits",
                         Json::Arr(
@@ -228,7 +235,7 @@ fn summary_result_json(s: &SweepSummary) -> Json {
 
 impl Job {
     pub fn state(&self) -> JobState {
-        *self.state.lock().unwrap()
+        *super::lock(&self.state)
     }
 
     /// The `GET /v1/jobs/:id` body: identity, lifecycle state, streaming
@@ -236,7 +243,7 @@ impl Job {
     /// latency), and — once terminal — the (possibly partial) result.
     pub fn status_json(&self) -> Json {
         let state = self.state();
-        let prog = self.progress.lock().unwrap();
+        let prog = super::lock(&self.progress);
         let mut fields = vec![
             ("id", Json::Num(self.id as f64)),
             ("kind", Json::Str(self.spec.kind.name().into())),
@@ -303,7 +310,7 @@ impl Job {
                 fields.push(("result", r.clone()));
             }
         }
-        if let Some(e) = &*self.error.lock().unwrap() {
+        if let Some(e) = &*super::lock(&self.error) {
             fields.push(("error", Json::Str(e.clone())));
         }
         Json::obj(fields)
@@ -347,7 +354,7 @@ impl JobManager {
     ) -> Result<Arc<Job>, String> {
         // The queue lock is held across the capacity check AND the push,
         // so concurrent submissions cannot overshoot the cap.
-        let mut q = self.queue.lock().unwrap();
+        let mut q = super::lock(&self.queue);
         if q.len() >= MAX_QUEUED_JOBS {
             return Err(format!(
                 "job queue is full ({MAX_QUEUED_JOBS} queued) — retry \
@@ -365,7 +372,7 @@ impl JobManager {
             error: Mutex::new(None),
         });
         {
-            let mut jobs = self.jobs.lock().unwrap();
+            let mut jobs = super::lock(&self.jobs);
             jobs.insert(id, job.clone());
             while jobs.len() > MAX_RETAINED_JOBS {
                 // BTreeMap iterates in ascending id order: oldest first.
@@ -388,7 +395,7 @@ impl JobManager {
     }
 
     pub fn get(&self, id: u64) -> Option<Arc<Job>> {
-        self.jobs.lock().unwrap().get(&id).cloned()
+        super::lock(&self.jobs).get(&id).cloned()
     }
 
     /// Cancel: flips the cooperative flag (a running job stops within one
@@ -397,7 +404,7 @@ impl JobManager {
     pub fn cancel(&self, id: u64) -> Option<Arc<Job>> {
         let job = self.get(id)?;
         job.ctl.cancel();
-        let mut st = job.state.lock().unwrap();
+        let mut st = super::lock(&job.state);
         if *st == JobState::Queued {
             *st = JobState::Cancelled;
         }
@@ -407,7 +414,7 @@ impl JobManager {
 
     /// Per-state job counts for `/v1/stats`.
     pub fn counts_json(&self) -> Json {
-        let jobs = self.jobs.lock().unwrap();
+        let jobs = super::lock(&self.jobs);
         let mut by: BTreeMap<&'static str, usize> = BTreeMap::new();
         for j in jobs.values() {
             *by.entry(j.state().name()).or_default() += 1;
@@ -422,7 +429,7 @@ impl JobManager {
     /// Block until a job is available or shutdown is flagged. The timeout
     /// bounds how long a quiet runner goes between shutdown checks.
     fn next_runnable(&self) -> Option<Arc<Job>> {
-        let mut q = self.queue.lock().unwrap();
+        let mut q = super::lock(&self.queue);
         loop {
             if self.shutdown.load(Ordering::Relaxed) {
                 return None;
@@ -433,7 +440,7 @@ impl JobManager {
             q = self
                 .available
                 .wait_timeout(q, Duration::from_millis(200))
-                .unwrap()
+                .unwrap_or_else(std::sync::PoisonError::into_inner)
                 .0;
         }
     }
@@ -454,7 +461,7 @@ pub fn run_loop(state: &AppState) {
 
 fn run_one(state: &AppState, job: &Job) {
     {
-        let mut st = job.state.lock().unwrap();
+        let mut st = super::lock(&job.state);
         if *st != JobState::Queued {
             return; // cancelled while queued
         }
@@ -487,10 +494,10 @@ fn run_one(state: &AppState, job: &Job) {
             run_search_job(state, job, workload, space, cfg, *with_accuracy)
         }
     };
-    let mut st = job.state.lock().unwrap();
+    let mut st = super::lock(&job.state);
     *st = match outcome {
         Err(e) => {
-            *job.error.lock().unwrap() = Some(e);
+            *super::lock(&job.error) = Some(e);
             JobState::Failed
         }
         // A cancel that lands after the work already finished changed
@@ -502,7 +509,7 @@ fn run_one(state: &AppState, job: &Job) {
         Ok(()) if job.ctl.is_cancelled() => {
             let finished = match &job.spec.kind {
                 JobKind::Search { .. } => {
-                    job.progress.lock().unwrap().search_complete
+                    super::lock(&job.progress).search_complete
                 }
                 _ => job.ctl.done() >= job.total,
             };
@@ -544,7 +551,7 @@ fn run_sweep(
                 lat.observe(t0.elapsed().as_secs_f64() * 1e6);
                 mini.observe(&p);
             }
-            let mut prog = job.progress.lock().unwrap();
+            let mut prog = super::lock(&job.progress);
             prog.eval_lat_us.merge(&lat);
             match &mut prog.summary {
                 Some(s) => s.merge(mini),
@@ -581,7 +588,7 @@ fn run_distributed(
         shards,
         &job.ctl,
         |part| {
-            let mut prog = job.progress.lock().unwrap();
+            let mut prog = super::lock(&job.progress);
             prog.shards_done += 1;
             match &mut prog.summary {
                 Some(s) => s.merge(part),
@@ -589,7 +596,7 @@ fn run_distributed(
             }
         },
     )?;
-    job.progress.lock().unwrap().redispatches = outcome.redispatches;
+    super::lock(&job.progress).redispatches = outcome.redispatches;
     Ok(())
 }
 
@@ -629,12 +636,12 @@ fn run_search_job(
         proxy.as_ref(),
         &job.ctl,
         |stat, summary| {
-            let mut prog = job.progress.lock().unwrap();
+            let mut prog = super::lock(&job.progress);
             prog.gen_stats.push(*stat);
             prog.summary = Some(summary.clone());
         },
     )?;
-    let mut prog = job.progress.lock().unwrap();
+    let mut prog = super::lock(&job.progress);
     prog.search_complete = !result.cancelled;
     prog.summary = Some(result.summary);
     Ok(())
@@ -674,18 +681,21 @@ fn run_coexplore(
     let fj: Vec<Json> = front
         .points()
         .iter()
-        .map(|&(e, err, i)| {
-            let p = &pts[i];
-            Json::obj(vec![
+        .filter_map(|&(e, err, i)| {
+            // Front payloads index into `pts` by construction; `.get`
+            // keeps a (impossible) stale index from panicking the
+            // runner thread.
+            let p = pts.get(i)?;
+            Some(Json::obj(vec![
                 ("arch", Json::Num(nas::encode(&p.arch) as f64)),
                 ("pe_type", Json::Str(p.cfg.pe_type.name().into())),
                 ("energy_j", Json::num_or_null(e)),
                 ("top1_err_pct", Json::num_or_null(err)),
                 ("area_um2", Json::num_or_null(p.area_um2)),
-            ])
+            ]))
         })
         .collect();
-    let mut prog = job.progress.lock().unwrap();
+    let mut prog = super::lock(&job.progress);
     prog.co_result = Some(Json::obj(vec![
         ("pairs", Json::Num(pts.len() as f64)),
         ("front", Json::Arr(fj)),

@@ -32,6 +32,17 @@ use crate::models::{zoo, Dataset, DnnModel};
 use crate::pe::PeType;
 use crate::ppa::{CompiledNetModel, PpaModels};
 
+/// Poison-tolerant mutex lock for the serving layer. A panic on one
+/// worker thread poisons every mutex it held; `Mutex::lock().unwrap()`
+/// then turns that single dead request into a cascade that kills every
+/// later handler touching the same state. The guarded data here
+/// (registries, job tables, progress counters) stays valid across a
+/// mid-update panic for our access patterns, so serving degraded beats
+/// serving nothing (rule R1, DESIGN.md §10).
+pub(crate) fn lock<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
 /// Server tunables (`quidam serve --addr/--threads/--cache-mib`).
 #[derive(Debug, Clone)]
 pub struct ServeOptions {

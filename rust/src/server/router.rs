@@ -570,10 +570,7 @@ fn shard_exec(
 }
 
 fn registry_json(state: &AppState) -> Json {
-    let list: Vec<Json> = state
-        .workers
-        .lock()
-        .unwrap()
+    let list: Vec<Json> = super::lock(&state.workers)
         .iter()
         .map(|w| Json::Str(w.clone()))
         .collect();
@@ -605,7 +602,7 @@ fn workers_route(
             if let Err(e) = super::distrib::probe_worker(&addr) {
                 return http::write_error(conn, 400, &e);
             }
-            state.workers.lock().unwrap().insert(addr);
+            super::lock(&state.workers).insert(addr);
             http::write_json(conn, 200, &registry_json(state))
         }
         "DELETE" => {
@@ -613,7 +610,7 @@ fn workers_route(
                 Ok(a) => a,
                 Err(e) => return http::write_error(conn, 400, &e),
             };
-            state.workers.lock().unwrap().remove(&addr);
+            super::lock(&state.workers).remove(&addr);
             http::write_json(conn, 200, &registry_json(state))
         }
         _ => http::write_error(conn, 405, "want GET, POST or DELETE"),
@@ -640,7 +637,7 @@ fn distributed_sweep(
         let threads = parse_threads(&j, state)?;
         let workers: Vec<String> = match j.get("workers") {
             Json::Null => {
-                state.workers.lock().unwrap().iter().cloned().collect()
+                super::lock(&state.workers).iter().cloned().collect()
             }
             Json::Arr(a) => a
                 .iter()
@@ -910,7 +907,12 @@ fn jobs_create(
                 let n_archs = opt_usize(&j, "archs")?.unwrap_or(100);
                 let hw_per_arch =
                     opt_usize(&j, "hw_per_arch")?.unwrap_or(2).max(1);
-                let seed = j.get("seed").as_u64().unwrap_or(42);
+                let seed = match j.get("seed") {
+                    Json::Null => 42,
+                    v => v.as_u64().ok_or_else(|| {
+                        "'seed' must be a non-negative integer".to_string()
+                    })?,
+                };
                 let pe_types = parse_pe_types(&j)?.unwrap_or_default();
                 if n_archs == 0 {
                     return Err("'archs' must be at least 1".into());

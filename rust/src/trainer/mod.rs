@@ -174,7 +174,7 @@ impl Trainer {
                 let pred = row
                     .iter()
                     .enumerate()
-                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .max_by(|a, b| a.1.total_cmp(b.1))
                     .map(|(i, _)| i)
                     .unwrap();
                 let (_, label) = ds.example(i + b);

@@ -1,0 +1,14 @@
+// quidam-lint-fixture: module=sweep::reducers
+// expect-clean
+
+use std::collections::BTreeMap;
+
+// A HashMap would be faster here, but iteration order feeds the CSV.
+pub fn tally(xs: &[(String, f64)]) -> Vec<(String, f64)> {
+    let mut m = BTreeMap::new();
+    for (k, v) in xs {
+        *m.entry(k.clone()).or_insert(0.0) += v;
+    }
+    let _doc = "HashMap is only mentioned inside this string";
+    m.into_iter().collect()
+}

@@ -1,0 +1,13 @@
+// quidam-lint-fixture: module=sweep::reducers
+// expect: D1 @ 5
+// expect: D1 @ 8
+
+use std::collections::HashMap;
+
+pub fn tally(xs: &[(String, f64)]) -> Vec<(String, f64)> {
+    let mut m = HashMap::new();
+    for (k, v) in xs {
+        *m.entry(k.clone()).or_insert(0.0) += v;
+    }
+    m.into_iter().collect()
+}

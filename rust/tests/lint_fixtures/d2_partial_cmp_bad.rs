@@ -1,0 +1,16 @@
+// quidam-lint-fixture: module=dse
+// expect: D2 @ 7
+// expect: D2 @ 11
+// expect: D2 @ 15
+
+pub fn sort_scores(v: &mut [f64]) {
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+}
+
+pub fn is_sentinel(a: f64) -> bool {
+    a == 0.25
+}
+
+pub fn best(v: &[f64]) -> Option<&f64> {
+    v.iter().max_by(|a, b| f64::partial_cmp(a, b).unwrap())
+}

@@ -1,0 +1,26 @@
+// quidam-lint-fixture: module=dse
+// expect-clean
+
+use std::cmp::Ordering;
+
+pub fn sort_scores(v: &mut [f64]) {
+    v.sort_by(f64::total_cmp);
+}
+
+pub struct Score(pub f64);
+
+impl PartialEq for Score {
+    fn eq(&self, other: &Self) -> bool {
+        self.0.total_cmp(&other.0) == Ordering::Equal
+    }
+}
+// `fn partial_cmp` trait impls are definitions, not call sites.
+impl PartialOrd for Score {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.0.total_cmp(&other.0))
+    }
+}
+
+pub fn int_eq(n: usize) -> bool {
+    n == 3 // integer-literal equality is fine
+}

@@ -1,0 +1,21 @@
+// quidam-lint-fixture: module=search::nsga
+// expect: D3 @ 9
+// expect: D3 @ 12
+// expect: D3 @ 13
+// expect: D3 @ 20
+
+use std::time::{Instant, SystemTime};
+
+pub fn now_ns() -> u128 { Instant::now().elapsed().as_nanos() }
+
+pub fn seed_from_env() -> u64 {
+    let _t = SystemTime::now();
+    match std::env::var("QUIDAM_SEED") {
+        Ok(s) => s.len() as u64,
+        Err(_) => 42,
+    }
+}
+
+pub fn unseeded() -> u64 {
+    thread_rng()
+}

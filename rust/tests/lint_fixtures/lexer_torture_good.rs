@@ -1,0 +1,16 @@
+// quidam-lint-fixture: module=report
+// expect-clean
+
+/* block comment mentioning HashMap and partial_cmp
+   /* nested: Instant::now() and a stray unwrap() */
+   still inside the outer comment */
+
+pub fn render() -> String {
+    let a = "HashMap::new() in a plain string";
+    let b = r#"partial_cmp "quoted" in a raw string"#;
+    let c = b"Instant::now() in a byte string";
+    let d = 'h'; // a char, not a lifetime
+    let lt: &'static str = "SystemTime::now() mentioned here";
+    let e = 1..2; // a range, not a float literal
+    format!("{a} {b} {c:?} {d} {lt} {e:?}")
+}

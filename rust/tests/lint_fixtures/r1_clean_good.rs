@@ -1,0 +1,20 @@
+// quidam-lint-fixture: module=server::router
+// expect-clean
+
+pub fn parse_id(parts: &[&str]) -> Result<u64, String> {
+    let raw = parts.get(1).ok_or("missing id segment")?;
+    raw.parse().map_err(|_| "id must be an integer".to_string())
+}
+
+pub fn body_prefix(buf: &[u8], n: usize) -> Vec<u8> {
+    let v = vec![0u8; 4]; // vec! macro brackets are not indexing
+    buf.iter().take(n).chain(v.iter()).copied().collect()
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn unwrap_inside_tests_is_exempt() {
+        super::parse_id(&["jobs", "7"]).unwrap();
+    }
+}

@@ -1,0 +1,18 @@
+// quidam-lint-fixture: module=server::router
+// expect: R1 @ 8
+// expect: R1 @ 9
+// expect: R1 @ 13
+// expect: R1 @ 17
+
+pub fn parse_id(parts: &[&str]) -> u64 {
+    let raw = parts[1];
+    raw.parse().unwrap()
+}
+
+pub fn must_be_post(method: &str) {
+    if method != "POST" { panic!("bad method: {method}") }
+}
+
+pub fn first_byte(buf: &[u8]) -> u8 {
+    buf.iter().next().copied().expect("nonempty request")
+}

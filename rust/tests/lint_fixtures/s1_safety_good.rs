@@ -1,0 +1,7 @@
+// quidam-lint-fixture: module=simulator
+// expect-clean
+
+pub fn peek(p: *const u64) -> u64 {
+    // SAFETY: caller guarantees `p` points to a live, aligned u64.
+    unsafe { *p }
+}

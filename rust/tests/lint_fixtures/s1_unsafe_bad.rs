@@ -1,0 +1,6 @@
+// quidam-lint-fixture: module=simulator
+// expect: S1 @ 5
+
+pub fn peek(p: *const u64) -> u64 {
+    unsafe { *p }
+}

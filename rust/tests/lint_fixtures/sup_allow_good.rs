@@ -1,0 +1,11 @@
+// quidam-lint-fixture: module=dse
+// expect-clean
+
+pub fn legacy_sort(v: &mut [f64]) {
+    // quidam-lint: allow(D2) -- upstream fixture order is NaN-free by construction
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+}
+
+pub fn legacy_eq(a: f64) -> bool {
+    a == 0.5 // quidam-lint: allow(D2) -- exact sentinel value round-trips
+}

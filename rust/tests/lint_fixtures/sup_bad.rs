@@ -1,0 +1,13 @@
+// quidam-lint-fixture: module=dse
+// expect: SUP @ 6
+// expect: SUP @ 9
+// expect: SUP @ 12
+
+// quidam-lint: allow(D2)
+pub fn a() -> usize { 1 }
+
+// quidam-lint: allow(Q9) -- no such rule exists
+pub fn b() -> usize { 2 }
+
+// quidam-lint: allow(D1) -- nothing here builds a hash map
+pub fn c() -> usize { 3 }

@@ -1,0 +1,218 @@
+//! Integration tests for `quidam::analysis` — the in-repo lint pass.
+//!
+//! Two layers:
+//!
+//! 1. A fixture corpus under `rust/tests/lint_fixtures/`. Each fixture is a
+//!    standalone `.rs` file (never compiled — it is read as text) that
+//!    declares its own expectations in leading comments:
+//!
+//!    ```text
+//!    // quidam-lint-fixture: module=<module path the file pretends to be>
+//!    // expect: <RULE> @ <line>        (one per expected finding)
+//!    // expect-clean                   (exactly zero findings expected)
+//!    ```
+//!
+//!    The harness runs the analyzer over the fixture text and compares the
+//!    (rule, line) multiset exactly — extra findings fail just as loudly as
+//!    missing ones.
+//!
+//! 2. `self_lint_clean`: the shipped `rust/src` tree must produce zero
+//!    findings. This is the same gate CI's lint-contract job enforces, kept
+//!    inside `cargo test` so it cannot be skipped locally.
+
+use std::path::{Path, PathBuf};
+
+use quidam::analysis;
+
+fn fixtures_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("rust/tests/lint_fixtures")
+}
+
+/// Parsed `quidam-lint-fixture` header: declared module path plus the
+/// expected (rule, line) pairs. `expect-clean` yields an empty expectation
+/// list with `explicit_clean` set, so a fixture with no directives at all is
+/// rejected as malformed rather than treated as "expects nothing".
+struct Fixture {
+    name: String,
+    module: String,
+    expects: Vec<(String, u32)>,
+    explicit_clean: bool,
+}
+
+fn parse_fixture(path: &Path, src: &str) -> Fixture {
+    let name = path
+        .file_name()
+        .map(|n| n.to_string_lossy().into_owned())
+        .unwrap_or_default();
+    let mut module = None;
+    let mut expects = Vec::new();
+    let mut explicit_clean = false;
+    for line in src.lines() {
+        let line = line.trim();
+        if let Some(rest) = line.strip_prefix("// quidam-lint-fixture:") {
+            let rest = rest.trim();
+            if let Some(m) = rest.strip_prefix("module=") {
+                module = Some(m.trim().to_string());
+            }
+        } else if let Some(rest) = line.strip_prefix("// expect:") {
+            let rest = rest.trim();
+            let (rule, at) = rest
+                .split_once('@')
+                .unwrap_or_else(|| panic!("{name}: malformed expect line: {line:?}"));
+            let ln: u32 = at
+                .trim()
+                .parse()
+                .unwrap_or_else(|_| panic!("{name}: bad line number in {line:?}"));
+            expects.push((rule.trim().to_string(), ln));
+        } else if line == "// expect-clean" {
+            explicit_clean = true;
+        }
+    }
+    let module =
+        module.unwrap_or_else(|| panic!("{name}: missing `quidam-lint-fixture: module=` header"));
+    assert!(
+        explicit_clean || !expects.is_empty(),
+        "{name}: declare either `expect:` lines or `expect-clean`",
+    );
+    assert!(
+        !(explicit_clean && !expects.is_empty()),
+        "{name}: `expect-clean` contradicts `expect:` lines",
+    );
+    Fixture { name, module, expects, explicit_clean }
+}
+
+fn load_fixtures() -> Vec<(Fixture, String)> {
+    let dir = fixtures_dir();
+    let mut entries: Vec<PathBuf> = std::fs::read_dir(&dir)
+        .unwrap_or_else(|e| panic!("cannot read {}: {e}", dir.display()))
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .filter(|p| p.extension().is_some_and(|x| x == "rs"))
+        .collect();
+    entries.sort();
+    entries
+        .into_iter()
+        .map(|p| {
+            let src = std::fs::read_to_string(&p)
+                .unwrap_or_else(|e| panic!("cannot read {}: {e}", p.display()));
+            (parse_fixture(&p, &src), src)
+        })
+        .collect()
+}
+
+#[test]
+fn fixtures_match_expected_findings() {
+    let fixtures = load_fixtures();
+    assert!(
+        fixtures.len() >= 13,
+        "fixture corpus shrank: {} files (expected >= 13)",
+        fixtures.len()
+    );
+    for (fx, src) in &fixtures {
+        let diags = analysis::lint_source(&fx.name, &fx.module, src);
+        let mut got: Vec<(String, u32)> =
+            diags.iter().map(|d| (d.rule.to_string(), d.line)).collect();
+        let mut want = fx.expects.clone();
+        got.sort();
+        want.sort();
+        assert_eq!(
+            got,
+            want,
+            "{} (module {}): findings diverge from expectations.\nanalyzer said:\n{}",
+            fx.name,
+            fx.module,
+            diags
+                .iter()
+                .map(|d| format!("  {d}"))
+                .collect::<Vec<_>>()
+                .join("\n"),
+        );
+        if fx.explicit_clean {
+            assert!(got.is_empty(), "{}: expect-clean fixture produced findings", fx.name);
+        }
+    }
+}
+
+/// Every rule id must have at least one firing fixture (an `expect:` naming
+/// it) and at least one passing fixture (an `expect-clean` file exercising
+/// the same construct family). The passing half is enforced structurally:
+/// each rule's bad fixture is paired with a `*_good.rs` sibling.
+#[test]
+fn every_rule_has_firing_and_passing_coverage() {
+    let fixtures = load_fixtures();
+    let rules = ["D1", "D2", "D3", "R1", "S1", "SUP"];
+    for rule in rules {
+        let fires = fixtures
+            .iter()
+            .any(|(fx, _)| fx.expects.iter().any(|(r, _)| r == rule));
+        assert!(fires, "no fixture expects rule {rule} to fire");
+    }
+    let clean = fixtures.iter().filter(|(fx, _)| fx.explicit_clean).count();
+    assert!(
+        clean >= rules.len(),
+        "only {clean} expect-clean fixtures for {} rules",
+        rules.len()
+    );
+}
+
+/// Suppression mechanics, end to end on fixture text: a well-formed
+/// `allow` comment silences exactly its target, and the three failure modes
+/// (missing reason, unknown rule, unused allow) each surface as SUP.
+#[test]
+fn suppressions_silence_and_misfire_as_documented() {
+    let good = std::fs::read_to_string(fixtures_dir().join("sup_allow_good.rs")).unwrap();
+    let diags = analysis::lint_source("sup_allow_good.rs", "dse", &good);
+    assert!(
+        diags.is_empty(),
+        "well-formed suppressions should silence D2: {diags:?}"
+    );
+
+    let bad = std::fs::read_to_string(fixtures_dir().join("sup_bad.rs")).unwrap();
+    let diags = analysis::lint_source("sup_bad.rs", "dse", &bad);
+    let rules: Vec<&str> = diags.iter().map(|d| d.rule).collect();
+    assert_eq!(rules, ["SUP", "SUP", "SUP"], "got: {diags:?}");
+}
+
+/// Diagnostic rendering is part of the contract: CI log lines and the JSON
+/// artifact both key off `file:line:col: [RULE]`.
+#[test]
+fn diagnostic_format_is_stable() {
+    let diags =
+        analysis::lint_source("x.rs", "sweep", "use std::collections::HashMap;\n");
+    assert_eq!(diags.len(), 1, "got: {diags:?}");
+    let line = diags[0].to_string();
+    assert!(
+        line.starts_with("x.rs:1:23: [D1]"),
+        "unexpected rendering: {line}"
+    );
+    let json = analysis::report_json(1, &diags).to_string();
+    assert!(json.contains("\"rule\":\"D1\""), "json artifact: {json}");
+    assert!(json.contains("\"count\":1"), "json artifact: {json}");
+}
+
+/// A file the lexer cannot tokenize must fail loudly (one LEX finding),
+/// never pass silently unscanned.
+#[test]
+fn unlexable_input_is_a_finding() {
+    let diags = analysis::lint_source("t.rs", "sweep", "let s = \"unterminated;\n");
+    assert_eq!(diags.len(), 1, "got: {diags:?}");
+    assert_eq!(diags[0].rule, "LEX");
+}
+
+/// The shipped tree holds itself to the contract: zero findings over
+/// `rust/src`, with zero unused suppressions. This mirrors CI's
+/// lint-contract job.
+#[test]
+fn self_lint_clean() {
+    let src = Path::new(env!("CARGO_MANIFEST_DIR")).join("rust/src");
+    let (files, diags) = analysis::lint_paths(&[src]).expect("lint walk failed");
+    assert!(files > 30, "suspiciously few files scanned: {files}");
+    assert!(
+        diags.is_empty(),
+        "rust/src must self-lint clean; findings:\n{}",
+        diags
+            .iter()
+            .map(|d| format!("  {d}"))
+            .collect::<Vec<_>>()
+            .join("\n"),
+    );
+}
