@@ -19,6 +19,7 @@
 //! | D1  | sweep, report, server::distrib      | `HashMap`/`HashSet` |
 //! | D2  | + dse, search, accuracy, util::stats| `.partial_cmp`, float-literal `==`/`!=` |
 //! | D3  | dse, search, sweep, accuracy        | `Instant::now`, `SystemTime::now`, env reads, unseeded RNG |
+//! | D4  | everywhere except obs::clock, main, and the D3 scopes | any `Instant`/`SystemTime` token — timing is injected via `obs::clock::Clock` (DESIGN.md §11) |
 //! | R1  | server::{router,http,jobs}          | `.unwrap()`, `.expect()`, `panic!`-family, slice indexing |
 //! | S1  | everywhere                          | `unsafe` without a preceding SAFETY comment |
 //! | SUP | everywhere                          | malformed / unknown-rule / unused suppressions |

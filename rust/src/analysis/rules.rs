@@ -44,6 +44,12 @@ pub const RULES: &[Rule] = &[
         scopes: &["dse", "search", "sweep", "accuracy"],
     },
     Rule {
+        id: "D4",
+        summary: "no raw Instant/SystemTime outside obs::clock and the \
+                  binary root; timing is injected via obs::clock::Clock",
+        scopes: &[],
+    },
+    Rule {
         id: "R1",
         summary: "no unwrap/expect/panicking macros/slice-indexing in \
                   server request paths (bad input maps to 4xx)",
@@ -89,6 +95,7 @@ pub fn check(scan: &FileScan) -> Vec<Diagnostic> {
             "D1" => d1(scan, &mut raw),
             "D2" => d2(scan, &mut raw),
             "D3" => d3(scan, &mut raw),
+            "D4" => d4(scan, &mut raw),
             "R1" => r1(scan, &mut raw),
             "S1" => s1(scan, &mut raw),
             _ => {} // SUP is engine-level, below.
@@ -277,6 +284,45 @@ fn d3(scan: &FileScan, out: &mut Vec<Diagnostic>) {
                 format!(
                     "`{}` is an unseeded RNG; construct RNG via \
                      `util::rng` with an explicit seed",
+                    t.text
+                ),
+            ));
+        }
+    }
+}
+
+/// D4: raw `Instant`/`SystemTime` identifiers outside the clock
+/// boundary. All timing is injected through [`crate::obs::clock::Clock`]
+/// so that telemetry-off runs (NullClock) execute byte-identically to
+/// telemetry-on runs. Exempt: `obs::clock` itself (it wraps `Instant`),
+/// the binary crate root (module `""`, i.e. `main.rs`, whose CLI
+/// progress timing never feeds results), and the D3-scoped deterministic
+/// modules — there the stricter D3 already owns every clock finding, and
+/// double-reporting the same token would force double suppressions.
+fn d4(scan: &FileScan, out: &mut Vec<Diagnostic>) {
+    if scan.module == "obs::clock" || scan.module.is_empty() {
+        return;
+    }
+    if RULES
+        .iter()
+        .find(|r| r.id == "D3")
+        .is_some_and(|r| in_scope(&scan.module, r))
+    {
+        return;
+    }
+    for k in 0..scan.code.len() {
+        let t = scan.ct(k);
+        if t.kind == Kind::Ident
+            && (t.text == "Instant" || t.text == "SystemTime")
+        {
+            out.push(diag(
+                scan,
+                t,
+                "D4",
+                format!(
+                    "raw `{}` outside obs::clock; take timestamps from an \
+                     injected `obs::clock::Clock` so telemetry-off runs \
+                     stay byte-identical",
                     t.text
                 ),
             ));

@@ -7,7 +7,9 @@
 //! iteration. Deterministic workloads come from util::rng seeds, so runs
 //! are comparable across the perf pass (EXPERIMENTS.md §Perf).
 
-use std::time::{Duration, Instant};
+use std::time::Duration;
+
+use crate::obs::clock::{Clock, MonotonicClock};
 
 #[derive(Debug, Clone)]
 pub struct BenchResult {
@@ -72,11 +74,15 @@ impl Bench {
             std::hint::black_box(f());
         }
         let mut samples: Vec<f64> = Vec::new();
-        let start = Instant::now();
-        while samples.len() < self.max_iters && start.elapsed() < self.budget {
-            let t0 = Instant::now();
+        let clk = MonotonicClock::new();
+        let budget_ns = self.budget.as_nanos() as u64;
+        let start = clk.now_ns();
+        while samples.len() < self.max_iters
+            && clk.now_ns().saturating_sub(start) < budget_ns
+        {
+            let t0 = clk.now_ns();
             std::hint::black_box(f());
-            samples.push(t0.elapsed().as_nanos() as f64);
+            samples.push(clk.now_ns().saturating_sub(t0) as f64);
         }
         samples.sort_by(f64::total_cmp);
         let n = samples.len();

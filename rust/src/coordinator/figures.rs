@@ -5,7 +5,7 @@
 
 use std::collections::BTreeMap;
 use std::path::Path;
-use std::time::Instant;
+use crate::obs::clock::{elapsed_s, Clock, MonotonicClock};
 
 use crate::accuracy::paper::{PaperAccuracy, TABLE2_HW, TABLE3_FCLK};
 use crate::accuracy::AccuracyProvider;
@@ -587,23 +587,24 @@ pub fn speedup(
     let cfgs: Vec<AcceleratorConfig> =
         (0..n).map(|_| coord.space.sample(&mut rng)).collect();
 
-    let t0 = Instant::now();
+    let clk = MonotonicClock::new();
+    let t0 = clk.now_ns();
     let mut acc_fast = 0.0;
     for cfg in &cfgs {
         acc_fast += models.network_latency_s(cfg, &net.layers)
             + models.power_mw(cfg)
             + models.area_um2(cfg);
     }
-    let fast = t0.elapsed().as_secs_f64() / n as f64;
+    let fast = elapsed_s(&clk, t0) / n as f64;
 
-    let t0 = Instant::now();
+    let t0 = clk.now_ns();
     let mut acc_slow = 0.0;
     for cfg in &cfgs {
         let syn = synthesize(cfg, &coord.tech);
         let sim = simulate_network(cfg, &net.layers, syn.fclk_mhz, &coord.tech);
         acc_slow += sim.latency_s + syn.power_mw + syn.area_um2;
     }
-    let slow = t0.elapsed().as_secs_f64() / n as f64;
+    let slow = elapsed_s(&clk, t0) / n as f64;
     // The paper's flow additionally pays RTL synthesis wall-time (hours-days
     // per design vs our analytical oracle); we report both the measured
     // in-repo ratio and the paper-equivalent including a DC-run constant.

@@ -6,6 +6,12 @@
 //! million-point sweeps should use [`stream_space`], which folds every
 //! point into O(front)-memory online reducers instead of materializing a
 //! `Vec<DesignPoint>` (DESIGN.md §4).
+//!
+//! Telemetry boundary (DESIGN.md §11): this module is clock-free by
+//! contract (lint rules D3/D4). Throughput and latency are measured by
+//! the callers that own a [`crate::obs::clock::Clock`] — the CLI and the
+//! server — around these calls; progress counts flow out through the
+//! [`SweepCtl`] observer, never through timestamps taken here.
 
 use std::collections::BTreeMap;
 

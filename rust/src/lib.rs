@@ -14,6 +14,7 @@ pub mod coordinator;
 pub mod dataflow;
 pub mod dse;
 pub mod models;
+pub mod obs;
 pub mod pe;
 pub mod ppa;
 pub mod quant;

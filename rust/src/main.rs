@@ -7,8 +7,10 @@
 //!   quidam evaluate     --pe TYPE [--rows R --cols C ...]
 //!   quidam explore      [--dense] [--threads N] [--top-k K]
 //!                       [--objective ppa|energy|latency|power]
-//!                       [--points-out FILE] [--format csv|jsonl] (streaming
-//!                       work-stealing sweep; full flag list in README.md)
+//!                       [--points-out FILE] [--format csv|jsonl]
+//!                       [--trace-out FILE] (streaming work-stealing sweep;
+//!                       full flag list in README.md; --trace-out also on
+//!                       search + coordinate, DESIGN.md §11)
 //!   quidam search       [--algo nsga2|random|hillclimb] [--seed N]
 //!                       [--population P] [--generations G]
 //!                       [--objectives energy,perf_area[,accuracy]] (seeded,
@@ -76,6 +78,21 @@ fn models_for(coord: &Coordinator, args: &Args) -> anyhow::Result<quidam::ppa::P
     coord
         .load_or_build_models(&cache, cfgs, degree, seed)
         .map_err(anyhow::Error::msg)
+}
+
+/// `--trace-out FILE` — open a JSONL span-trace sink (DESIGN.md §11).
+/// Absent flag means no sink; spans become no-ops via `maybe_span`, so
+/// the traced and untraced runs execute the same work in the same order
+/// (the CI determinism smoke diffs their result bytes).
+fn trace_sink_from_args(
+    args: &Args,
+) -> anyhow::Result<Option<std::sync::Arc<quidam::obs::trace::TraceSink>>> {
+    match args.get("trace-out") {
+        None => Ok(None),
+        Some(path) => quidam::obs::trace::TraceSink::to_file(path)
+            .map(Some)
+            .map_err(|e| anyhow::anyhow!("--trace-out {path}: {e}")),
+    }
 }
 
 /// Parse a `--pe fp32,int16,...` list into PE types.
@@ -257,6 +274,8 @@ fn run_explore(coord: &Coordinator, args: &Args, out: &std::path::Path) -> anyho
         net.name,
         objective.name(),
     );
+    let trace = trace_sink_from_args(args)?;
+    let mut span = quidam::obs::trace::maybe_span(&trace, "explore.sweep");
     let t0 = Instant::now();
     let mut write_err: Option<std::io::Error> = None;
     let summary = dse::stream_space(
@@ -272,6 +291,12 @@ fn run_explore(coord: &Coordinator, args: &Args, out: &std::path::Path) -> anyho
         },
     );
     let dt = t0.elapsed().as_secs_f64();
+    if let Some(sp) = &mut span {
+        sp.attr_num("points", summary.count as f64);
+        sp.attr_num("threads", threads as f64);
+        sp.attr_str("objective", objective.name());
+    }
+    drop(span);
     if let Some(e) = write_err {
         return Err(anyhow::Error::from(e)
             .context(format!("writing {}", args.get_or("points-out", "?"))));
@@ -442,6 +467,8 @@ fn run_search_cmd(
             p.capacity(),
         );
     }
+    let trace = trace_sink_from_args(args)?;
+    let span = quidam::obs::trace::maybe_span(&trace, "search.run");
     let t0 = Instant::now();
     let result = quidam::search::run_search(
         &space,
@@ -457,10 +484,24 @@ fn run_search_cmd(
                 stat.front_size,
                 stat.hypervolume,
             );
+            // Zero-duration marker spans: one trace event per generation,
+            // parented under the run span.
+            if let (Some(t), Some(parent)) = (&trace, &span) {
+                let mut g = t.child("search.generation", parent);
+                g.attr_num("generation", stat.generation as f64);
+                g.attr_num("evals", stat.evals as f64);
+                g.attr_num("front_size", stat.front_size as f64);
+                g.attr_num("hypervolume", stat.hypervolume);
+            }
         },
     )
     .map_err(anyhow::Error::msg)?;
     let dt = t0.elapsed().as_secs_f64();
+    if let Some(mut sp) = span {
+        sp.attr_str("algo", scfg.algo.name());
+        sp.attr_num("seed", scfg.seed as f64);
+        sp.attr_num("evals", result.evals as f64);
+    }
 
     std::fs::create_dir_all(out).ok();
     let front_path = out.join("search_front.csv");
@@ -699,6 +740,8 @@ fn run_coordinate(
     let ctl = quidam::sweep::SweepCtl::new();
     let merged: std::sync::Mutex<Option<dse::SweepSummary>> =
         std::sync::Mutex::new(None);
+    let trace = trace_sink_from_args(args)?;
+    let mut span = quidam::obs::trace::maybe_span(&trace, "coordinate.run");
     let t0 = Instant::now();
     let spec = quidam::server::distrib::DistSweep {
         workload,
@@ -712,6 +755,7 @@ fn run_coordinate(
         &spec,
         shards,
         &ctl,
+        None,
         |part| {
             let mut m = merged.lock().unwrap();
             match &mut *m {
@@ -722,6 +766,12 @@ fn run_coordinate(
     )
     .map_err(anyhow::Error::msg)?;
     let dt = t0.elapsed().as_secs_f64();
+    if let Some(sp) = &mut span {
+        sp.attr_num("shards", outcome.shards_done as f64);
+        sp.attr_num("redispatches", outcome.redispatches as f64);
+        sp.attr_num("workers", workers.len() as f64);
+    }
+    drop(span);
     let summary = merged
         .into_inner()
         .unwrap()
@@ -973,7 +1023,8 @@ fn run(sub: &str, args: &Args) -> anyhow::Result<()> {
                  explore flags: --dense --threads N --top-k K --objective ppa|energy|latency|power\n\
                  \x20               --net resnet20|resnet56|vgg16 --points-out FILE --format csv|jsonl\n\
                  \x20               --rows/--cols/--sp-if/--sp-fw/--sp-ps/--gb/--dram-bw LIST|LO:HI:STEP\n\
-                 \x20               --pe fp32,int16,lightpe2,lightpe1\n\
+                 \x20               --pe fp32,int16,lightpe2,lightpe1 --trace-out FILE (JSONL spans;\n\
+                 \x20               also on search + coordinate, DESIGN.md §11)\n\
                  search flags:  --algo nsga2|random|hillclimb --seed N --population P\n\
                  \x20               --generations G --mutation R --crossover R (+ the explore grid\n\
                  \x20               flags); --objectives energy,perf_area[,accuracy] (accuracy adds\n\
@@ -983,7 +1034,8 @@ fn run(sub: &str, args: &Args) -> anyhow::Result<()> {
                  coordinate flags: --workers HOST:PORT,... --shards N (+ the explore grid flags;\n\
                  \x20               shards a sweep across remote quidam serve workers, DESIGN.md §7)\n\
                  serve flags:   --addr HOST:PORT --http-threads N --threads N --cache-mib M\n\
-                 \x20               --port-file FILE (endpoint table: DESIGN.md §6)\n\
+                 \x20               --port-file FILE (endpoint table: DESIGN.md §6; GET /metrics\n\
+                 \x20               Prometheus scrape + QUIDAM_TRACE=FILE spans: DESIGN.md §11)\n\
                  lint:          quidam lint [PATHS...] [--json] (static analysis of the\n\
                  \x20               determinism & robustness contract, DESIGN.md §10)\n\
                  full CLI reference: README.md; design notes: DESIGN.md"

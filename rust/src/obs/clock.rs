@@ -1,0 +1,100 @@
+//! The repo-wide timing boundary (DESIGN.md §11).
+//!
+//! Deterministic modules (`dse`, `search`, `sweep`, `accuracy`) are
+//! clock-free by contract (lint rule D3), and rule D4 extends the ban on
+//! direct `Instant`/`SystemTime` to the whole tree minus this module and
+//! `main.rs`: a component that wants wall time receives a [`Clock`] from
+//! its caller instead of reading the OS clock itself. Two implementations
+//! exist — the real monotonic clock and a no-op frozen at zero — and
+//! swapping one for the other must never change any output byte except
+//! the telemetry itself: time is *recorded at* boundaries, never
+//! *branched on*.
+
+use std::time::Instant;
+
+/// Monotonic time source injected at telemetry boundaries. `now_ns` is
+/// nanoseconds since an arbitrary per-clock epoch — only differences
+/// between two readings of the *same* clock are meaningful.
+pub trait Clock: Send + Sync {
+    fn now_ns(&self) -> u64;
+}
+
+/// The deterministic no-op: time stands still at zero. Every duration
+/// measured through it is exactly `0`, so telemetry wired through a
+/// `NullClock` adds no run-to-run variance anywhere (unit tests, the
+/// byte-identical determinism checks).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct NullClock;
+
+impl Clock for NullClock {
+    fn now_ns(&self) -> u64 {
+        0
+    }
+}
+
+/// The real monotonic clock, anchored at construction. The only
+/// non-test `Instant` in the tree outside `main.rs` (rule D4).
+#[derive(Debug)]
+pub struct MonotonicClock {
+    epoch: Instant,
+}
+
+impl MonotonicClock {
+    pub fn new() -> MonotonicClock {
+        MonotonicClock { epoch: Instant::now() }
+    }
+}
+
+impl Default for MonotonicClock {
+    fn default() -> Self {
+        MonotonicClock::new()
+    }
+}
+
+impl Clock for MonotonicClock {
+    fn now_ns(&self) -> u64 {
+        // Saturating u128 -> u64: overflows after ~584 years of uptime.
+        u64::try_from(self.epoch.elapsed().as_nanos()).unwrap_or(u64::MAX)
+    }
+}
+
+/// Seconds elapsed since a `now_ns` reading taken from the same clock.
+pub fn elapsed_s(clock: &dyn Clock, t0_ns: u64) -> f64 {
+    clock.now_ns().saturating_sub(t0_ns) as f64 / 1e9
+}
+
+/// Microseconds elapsed since a `now_ns` reading from the same clock.
+pub fn elapsed_us(clock: &dyn Clock, t0_ns: u64) -> f64 {
+    clock.now_ns().saturating_sub(t0_ns) as f64 / 1e3
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn null_clock_is_frozen_at_zero() {
+        let c = NullClock;
+        assert_eq!(c.now_ns(), 0);
+        assert_eq!(c.now_ns(), 0);
+        assert_eq!(elapsed_s(&c, 0), 0.0);
+        assert_eq!(elapsed_us(&c, 0), 0.0);
+    }
+
+    #[test]
+    fn monotonic_clock_never_goes_backwards() {
+        let c = MonotonicClock::new();
+        let a = c.now_ns();
+        let b = c.now_ns();
+        assert!(b >= a, "monotonic clock went backwards: {a} -> {b}");
+        assert!(elapsed_s(&c, a) >= 0.0);
+    }
+
+    #[test]
+    fn elapsed_saturates_on_cross_clock_misuse() {
+        // A t0 from a different (later-epoch) clock must clamp to zero,
+        // not underflow into a ~584-year latency.
+        let c = NullClock;
+        assert_eq!(elapsed_s(&c, u64::MAX), 0.0);
+    }
+}

@@ -1,0 +1,333 @@
+//! Prometheus text exposition, format version 0.0.4 (DESIGN.md §11).
+//!
+//! Renders a [`registry::MetricsRegistry`] snapshot as the plain-text
+//! form every Prometheus-compatible scraper speaks: a `# HELP` and
+//! `# TYPE` line per family followed by its samples, histogram children
+//! expanded to cumulative `_bucket{le=…}` series (terminated by `+Inf`)
+//! plus `_sum`/`_count`, and each histogram additionally contributing a
+//! `<name>_quantile` gauge family carrying the P² p50/p90/p99 estimates
+//! (a plain histogram cannot express precomputed quantiles). Families
+//! and children arrive in `BTreeMap` order, so the whole document is
+//! byte-deterministic for a given set of metric values.
+//!
+//! [`registry::MetricsRegistry`]: super::registry::MetricsRegistry
+
+use super::registry::{HistSnapshot, MetricKind};
+
+/// One family ready to render: name, help, kind, and `(label-block,
+/// sample)` children in stable order.
+pub struct FamilySnapshot {
+    pub name: String,
+    pub help: String,
+    pub kind: MetricKind,
+    pub children: Vec<(String, Sample)>,
+}
+
+pub enum Sample {
+    Counter(u64),
+    Gauge(f64),
+    Histogram(HistSnapshot),
+}
+
+/// Escape a label value: backslash, double quote, and newline.
+pub fn escape_label(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Escape HELP text: backslash and newline (quotes are legal there).
+pub fn escape_help(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Render a label block from sorted `(name, value)` pairs: `""` when
+/// empty, otherwise `{a="1",b="2"}` with escaped values.
+pub fn label_block(pairs: &[(String, String)]) -> String {
+    if pairs.is_empty() {
+        return String::new();
+    }
+    let body: Vec<String> = pairs
+        .iter()
+        .map(|(k, v)| format!("{k}=\"{}\"", escape_label(v)))
+        .collect();
+    format!("{{{}}}", body.join(","))
+}
+
+/// Insert one extra label into an already-rendered block (used for the
+/// histogram `le` and quantile `quantile` labels).
+fn with_label(block: &str, key: &str, val: &str) -> String {
+    let pair = format!("{key}=\"{}\"", escape_label(val));
+    match block.strip_prefix('{').and_then(|b| b.strip_suffix('}')) {
+        Some(inner) if !inner.is_empty() => format!("{{{inner},{pair}}}"),
+        _ => format!("{{{pair}}}"),
+    }
+}
+
+/// A float in exposition form: Rust's shortest round-trip `Display`,
+/// which Prometheus parsers accept (including `NaN` and `inf`).
+fn num(v: f64) -> String {
+    if v.is_nan() {
+        "NaN".to_string()
+    } else if v == f64::INFINITY {
+        "+Inf".to_string()
+    } else if v == f64::NEG_INFINITY {
+        "-Inf".to_string()
+    } else {
+        format!("{v}")
+    }
+}
+
+fn kind_name(k: MetricKind) -> &'static str {
+    match k {
+        MetricKind::Counter => "counter",
+        MetricKind::Gauge => "gauge",
+        MetricKind::Histogram => "histogram",
+    }
+}
+
+fn header(out: &mut String, name: &str, help: &str, kind: &str) {
+    out.push_str(&format!("# HELP {name} {}\n", escape_help(help)));
+    out.push_str(&format!("# TYPE {name} {kind}\n"));
+}
+
+/// Render families (already in stable order) as one exposition document.
+pub fn render(families: &[FamilySnapshot]) -> String {
+    let mut out = String::new();
+    for fam in families {
+        header(&mut out, &fam.name, &fam.help, kind_name(fam.kind));
+        for (block, sample) in &fam.children {
+            match sample {
+                Sample::Counter(v) => {
+                    out.push_str(&format!("{}{block} {v}\n", fam.name));
+                }
+                Sample::Gauge(v) => {
+                    out.push_str(&format!("{}{block} {}\n", fam.name, num(*v)));
+                }
+                Sample::Histogram(h) => {
+                    for (bound, cum) in h.bounds.iter().zip(&h.cumulative) {
+                        out.push_str(&format!(
+                            "{}_bucket{} {cum}\n",
+                            fam.name,
+                            with_label(block, "le", &num(*bound)),
+                        ));
+                    }
+                    out.push_str(&format!(
+                        "{}_bucket{} {}\n",
+                        fam.name,
+                        with_label(block, "le", "+Inf"),
+                        h.count,
+                    ));
+                    out.push_str(&format!(
+                        "{}_sum{block} {}\n",
+                        fam.name,
+                        num(h.sum)
+                    ));
+                    out.push_str(&format!(
+                        "{}_count{block} {}\n",
+                        fam.name, h.count
+                    ));
+                }
+            }
+        }
+        // Companion quantile gauges for histogram families: the P²
+        // p50/p90/p99 estimates, omitted while a child is empty (the
+        // estimator has no value yet).
+        if fam.kind == MetricKind::Histogram {
+            let has_data = fam.children.iter().any(|(_, s)| {
+                matches!(s, Sample::Histogram(h) if h.count > 0)
+            });
+            if has_data {
+                let qname = format!("{}_quantile", fam.name);
+                header(
+                    &mut out,
+                    &qname,
+                    &format!("P2 streaming quantile estimates for {}", fam.name),
+                    "gauge",
+                );
+                for (block, sample) in &fam.children {
+                    if let Sample::Histogram(h) = sample {
+                        if h.count == 0 {
+                            continue;
+                        }
+                        for (q, v) in h.quantiles {
+                            out.push_str(&format!(
+                                "{qname}{} {}\n",
+                                with_label(block, "quantile", &num(q)),
+                                num(v),
+                            ));
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::registry::{MetricsRegistry, LATENCY_BUCKETS_S};
+
+    fn parse_families(text: &str) -> Vec<(String, String)> {
+        // (name, type) pairs in order of appearance.
+        text.lines()
+            .filter_map(|l| l.strip_prefix("# TYPE "))
+            .filter_map(|l| {
+                let mut it = l.split_whitespace();
+                Some((it.next()?.to_string(), it.next()?.to_string()))
+            })
+            .collect()
+    }
+
+    /// Satellite: every family has a HELP line immediately followed by a
+    /// TYPE line, and every sample line belongs to the family declared
+    /// above it.
+    #[test]
+    fn help_and_type_lines_pair_up() {
+        let r = MetricsRegistry::new();
+        r.counter("quidam_a_total", "a things", &[]).inc();
+        r.gauge("quidam_b", "b level", &[("x", "1")]).set(3.0);
+        r.histogram("quidam_c_seconds", "c latency", &[], LATENCY_BUCKETS_S)
+            .observe(0.001);
+        let text = r.render();
+        let mut lines = text.lines().peekable();
+        let mut families = 0;
+        while let Some(line) = lines.next() {
+            if let Some(rest) = line.strip_prefix("# HELP ") {
+                let name = rest.split_whitespace().next().unwrap_or("");
+                let next = lines.next().unwrap_or("");
+                assert!(
+                    next.starts_with(&format!("# TYPE {name} ")),
+                    "HELP for {name} not followed by its TYPE: {next}"
+                );
+                families += 1;
+            }
+        }
+        // a, b, c, and c's companion quantile family.
+        assert_eq!(families, 4, "families in:\n{text}");
+        let types = parse_families(&text);
+        assert_eq!(
+            types,
+            vec![
+                ("quidam_a_total".to_string(), "counter".to_string()),
+                ("quidam_b".to_string(), "gauge".to_string()),
+                ("quidam_c_seconds".to_string(), "histogram".to_string()),
+                ("quidam_c_seconds_quantile".to_string(), "gauge".to_string()),
+            ]
+        );
+    }
+
+    /// Satellite: histogram buckets are monotone non-decreasing in both
+    /// `le` and count, and terminate with `+Inf` == `_count`.
+    #[test]
+    fn histogram_buckets_are_monotone_with_inf() {
+        let r = MetricsRegistry::new();
+        let h = r.histogram(
+            "quidam_lat_seconds",
+            "latency",
+            &[("endpoint", "/v1/ppa")],
+            LATENCY_BUCKETS_S,
+        );
+        for i in 0..1000 {
+            h.observe((i % 50) as f64 * 1e-4);
+        }
+        let text = r.render();
+        let mut last_le = f64::NEG_INFINITY;
+        let mut last_count = 0u64;
+        let mut saw_inf = false;
+        for line in text.lines() {
+            if !line.starts_with("quidam_lat_seconds_bucket") {
+                continue;
+            }
+            let le_raw = line
+                .split("le=\"")
+                .nth(1)
+                .and_then(|s| s.split('"').next())
+                .unwrap_or("");
+            let count: u64 = line
+                .rsplit(' ')
+                .next()
+                .and_then(|s| s.parse().ok())
+                .unwrap_or(u64::MAX);
+            assert!(count >= last_count, "bucket counts regressed: {line}");
+            last_count = count;
+            if le_raw == "+Inf" {
+                saw_inf = true;
+                assert_eq!(count, 1000, "+Inf bucket must equal count");
+            } else {
+                let le: f64 = le_raw.parse().unwrap_or(f64::NAN);
+                assert!(le > last_le, "le bounds not ascending: {line}");
+                last_le = le;
+            }
+        }
+        assert!(saw_inf, "no +Inf bucket in:\n{text}");
+        assert!(
+            text.contains("quidam_lat_seconds_count{endpoint=\"/v1/ppa\"} 1000"),
+            "missing _count:\n{text}"
+        );
+        assert!(
+            text.contains("quantile=\"0.99\""),
+            "missing p99 quantile line:\n{text}"
+        );
+    }
+
+    /// Satellite: label values escape backslash, quote, and newline.
+    #[test]
+    fn label_values_are_escaped() {
+        let r = MetricsRegistry::new();
+        r.counter(
+            "quidam_esc_total",
+            "escaping",
+            &[("path", "a\\b\"c\nd")],
+        )
+        .inc();
+        let text = r.render();
+        assert!(
+            text.contains("path=\"a\\\\b\\\"c\\nd\""),
+            "unescaped label in:\n{text}"
+        );
+        assert!(!text.contains("c\nd"), "raw newline leaked into a label");
+    }
+
+    #[test]
+    fn empty_registry_renders_empty_document() {
+        assert_eq!(MetricsRegistry::new().render(), "");
+    }
+
+    #[test]
+    fn with_label_composes_blocks() {
+        assert_eq!(with_label("", "le", "+Inf"), "{le=\"+Inf\"}");
+        assert_eq!(
+            with_label("{a=\"1\"}", "le", "0.5"),
+            "{a=\"1\",le=\"0.5\"}"
+        );
+    }
+
+    #[test]
+    fn deterministic_render_for_same_values() {
+        let build = || {
+            let r = MetricsRegistry::new();
+            r.counter("m_total", "h", &[("b", "2"), ("a", "1")]).add(7);
+            r.histogram("m_seconds", "h", &[], &[0.1, 1.0]).observe(0.05);
+            r.render()
+        };
+        assert_eq!(build(), build(), "render is not byte-deterministic");
+    }
+}

@@ -1,0 +1,30 @@
+//! Dependency-free telemetry: metrics, Prometheus exposition, tracing
+//! (DESIGN.md §11).
+//!
+//! Three layers, all built on the standard library alone:
+//!
+//! * [`registry`] — a [`MetricsRegistry`] of atomic counters, gauges,
+//!   and latency histograms. Histograms carry both fixed exponential
+//!   buckets (for scrapers) and P² streaming quantile estimators from
+//!   `util::stats` (for p50/p90/p99 without storing samples).
+//! * [`expo`] — renders a registry snapshot as Prometheus text
+//!   exposition 0.0.4, served by `GET /metrics` on `quidam serve`.
+//! * [`trace`] — span scopes emitting JSONL trace events, enabled by
+//!   `--trace-out <path>` on explore/search/coordinate and the
+//!   `QUIDAM_TRACE` env var in serve.
+//!
+//! The load-bearing invariant is the determinism contract: the engines
+//! (`dse`, `search`, `sweep`, `accuracy`) never read a clock (lint rule
+//! D3), and nothing outside [`clock`] and `main.rs` touches
+//! `Instant`/`SystemTime` directly (rule D4). Time enters through the
+//! [`Clock`] trait at boundaries only, and its [`NullClock`] no-op keeps
+//! every output byte identical whether telemetry is off or on.
+
+pub mod clock;
+pub mod expo;
+pub mod registry;
+pub mod trace;
+
+pub use clock::{Clock, MonotonicClock, NullClock};
+pub use registry::{Counter, Gauge, Histogram, MetricsRegistry};
+pub use trace::{Span, TraceSink};

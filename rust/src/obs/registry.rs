@@ -1,0 +1,438 @@
+//! Atomic metric primitives and the process-wide registry behind
+//! `GET /metrics` (DESIGN.md §11).
+//!
+//! Dependency-free and cheap on the hot path: counters and gauges are
+//! single atomics handed out as `Arc` handles (instrumented code never
+//! touches the registry map after registration), and histograms take one
+//! short mutex per observation, combining fixed exponential buckets (the
+//! Prometheus exposition form) with P² streaming quantile estimators
+//! (`util::stats::P2Quantile`) for p50/p90/p99 without retaining
+//! samples. Snapshots iterate `BTreeMap`s, so the rendered exposition is
+//! byte-deterministic for a given set of metric values.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::util::stats::P2Quantile;
+
+use super::expo::{self, FamilySnapshot, Sample};
+
+/// Poison-tolerant lock (same rationale as `server::lock`): a panicking
+/// observer thread must not take every later scrape down with it.
+fn lock<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+/// Default latency buckets (seconds): 1 µs to ~42 s, factor 4 — wide
+/// enough for a cached PPA lookup (microseconds) and a synchronous
+/// million-point sweep (tens of seconds) on one scale.
+pub const LATENCY_BUCKETS_S: &[f64] = &[
+    1e-6, 4e-6, 1.6e-5, 6.4e-5, 2.56e-4, 1.024e-3, 4.096e-3, 1.6384e-2,
+    6.5536e-2, 0.262144, 1.048576, 4.194304,
+];
+
+/// Monotone event count.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn new() -> Counter {
+        Counter::default()
+    }
+
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-write-wins instantaneous value (stored as `f64` bits).
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    pub fn new() -> Gauge {
+        Gauge::default()
+    }
+
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+struct HistInner {
+    /// Per-bucket (non-cumulative) counts, parallel to `bounds`.
+    counts: Vec<u64>,
+    count: u64,
+    sum: f64,
+    q50: P2Quantile,
+    q90: P2Quantile,
+    q99: P2Quantile,
+}
+
+/// Latency distribution: exponential `le` buckets for exposition plus
+/// three P² quantile estimators. One mutex per observation — the
+/// instrumented paths (per HTTP request, per sweep block) are far
+/// coarser than the lock.
+pub struct Histogram {
+    bounds: Vec<f64>,
+    inner: Mutex<HistInner>,
+}
+
+/// Point-in-time copy of a histogram, with bucket counts already
+/// cumulated the way the exposition format wants them.
+#[derive(Debug, Clone)]
+pub struct HistSnapshot {
+    pub bounds: Vec<f64>,
+    /// Cumulative counts, parallel to `bounds` (the implicit `+Inf`
+    /// bucket equals `count`).
+    pub cumulative: Vec<u64>,
+    pub count: u64,
+    pub sum: f64,
+    /// `(quantile, estimate)` pairs — p50/p90/p99.
+    pub quantiles: [(f64, f64); 3],
+}
+
+impl Histogram {
+    /// `bounds` are upper bucket edges in strictly ascending order;
+    /// unsorted or duplicated input is normalized rather than rejected.
+    pub fn new(bounds: &[f64]) -> Histogram {
+        let mut b: Vec<f64> = bounds.iter().copied().filter(|v| v.is_finite()).collect();
+        b.sort_by(f64::total_cmp);
+        b.dedup_by(|a, x| a.total_cmp(x).is_eq());
+        Histogram {
+            inner: Mutex::new(HistInner {
+                counts: vec![0; b.len()],
+                count: 0,
+                sum: 0.0,
+                q50: P2Quantile::new(0.5),
+                q90: P2Quantile::new(0.9),
+                q99: P2Quantile::new(0.99),
+            }),
+            bounds: b,
+        }
+    }
+
+    pub fn observe(&self, v: f64) {
+        if !v.is_finite() {
+            return;
+        }
+        let mut g = lock(&self.inner);
+        if let Some(i) = self.bounds.iter().position(|b| v <= *b) {
+            if let Some(c) = g.counts.get_mut(i) {
+                *c += 1;
+            }
+        }
+        g.count += 1;
+        g.sum += v;
+        g.q50.observe(v);
+        g.q90.observe(v);
+        g.q99.observe(v);
+    }
+
+    pub fn count(&self) -> u64 {
+        lock(&self.inner).count
+    }
+
+    pub fn snapshot(&self) -> HistSnapshot {
+        let g = lock(&self.inner);
+        let mut cumulative = Vec::with_capacity(g.counts.len());
+        let mut acc = 0u64;
+        for c in &g.counts {
+            acc += c;
+            cumulative.push(acc);
+        }
+        HistSnapshot {
+            bounds: self.bounds.clone(),
+            cumulative,
+            count: g.count,
+            sum: g.sum,
+            quantiles: [
+                (0.5, g.q50.value()),
+                (0.9, g.q90.value()),
+                (0.99, g.q99.value()),
+            ],
+        }
+    }
+}
+
+enum Child {
+    Counter(Arc<Counter>),
+    Gauge(Arc<Gauge>),
+    Histogram(Arc<Histogram>),
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MetricKind {
+    Counter,
+    Gauge,
+    Histogram,
+}
+
+struct Family {
+    help: String,
+    kind: MetricKind,
+    /// Children keyed by their rendered label block (`{k="v",…}` or
+    /// `""`) — BTreeMap order gives the stable exposition label order.
+    children: BTreeMap<String, Child>,
+}
+
+/// Name -> family map. Registration is get-or-create: the first call
+/// fixes the family's help text and kind; later calls with the same
+/// `(name, labels)` return the same handle, so any number of call sites
+/// can share one counter.
+#[derive(Default)]
+pub struct MetricsRegistry {
+    families: Mutex<BTreeMap<String, Family>>,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> MetricsRegistry {
+        MetricsRegistry::default()
+    }
+
+    /// Canonical child key: labels sorted by name, escaped, rendered.
+    fn label_key(labels: &[(&str, &str)]) -> String {
+        let mut pairs: Vec<(String, String)> = labels
+            .iter()
+            .map(|(k, v)| (k.to_string(), v.to_string()))
+            .collect();
+        pairs.sort();
+        expo::label_block(&pairs)
+    }
+
+    fn child(
+        &self,
+        name: &str,
+        help: &str,
+        kind: MetricKind,
+        labels: &[(&str, &str)],
+        make: impl FnOnce() -> Child,
+    ) -> Option<Child> {
+        let mut fams = lock(&self.families);
+        let fam = fams.entry(name.to_string()).or_insert_with(|| Family {
+            help: help.to_string(),
+            kind,
+            children: BTreeMap::new(),
+        });
+        if fam.kind != kind {
+            // Same name registered under two kinds is a programming
+            // error; hand back nothing rather than panic a handler —
+            // the caller falls back to a detached metric.
+            return None;
+        }
+        Some(match fam.children.entry(Self::label_key(labels)) {
+            std::collections::btree_map::Entry::Occupied(e) => match e.get() {
+                Child::Counter(c) => Child::Counter(c.clone()),
+                Child::Gauge(g) => Child::Gauge(g.clone()),
+                Child::Histogram(h) => Child::Histogram(h.clone()),
+            },
+            std::collections::btree_map::Entry::Vacant(e) => {
+                let c = make();
+                let out = match &c {
+                    Child::Counter(c) => Child::Counter(c.clone()),
+                    Child::Gauge(g) => Child::Gauge(g.clone()),
+                    Child::Histogram(h) => Child::Histogram(h.clone()),
+                };
+                e.insert(c);
+                out
+            }
+        })
+    }
+
+    pub fn counter(
+        &self,
+        name: &str,
+        help: &str,
+        labels: &[(&str, &str)],
+    ) -> Arc<Counter> {
+        match self.child(name, help, MetricKind::Counter, labels, || {
+            Child::Counter(Arc::new(Counter::new()))
+        }) {
+            Some(Child::Counter(c)) => c,
+            _ => Arc::new(Counter::new()), // detached on kind clash
+        }
+    }
+
+    pub fn gauge(
+        &self,
+        name: &str,
+        help: &str,
+        labels: &[(&str, &str)],
+    ) -> Arc<Gauge> {
+        match self.child(name, help, MetricKind::Gauge, labels, || {
+            Child::Gauge(Arc::new(Gauge::new()))
+        }) {
+            Some(Child::Gauge(g)) => g,
+            _ => Arc::new(Gauge::new()),
+        }
+    }
+
+    pub fn histogram(
+        &self,
+        name: &str,
+        help: &str,
+        labels: &[(&str, &str)],
+        bounds: &[f64],
+    ) -> Arc<Histogram> {
+        match self.child(name, help, MetricKind::Histogram, labels, || {
+            Child::Histogram(Arc::new(Histogram::new(bounds)))
+        }) {
+            Some(Child::Histogram(h)) => h,
+            _ => Arc::new(Histogram::new(bounds)),
+        }
+    }
+
+    /// Point-in-time copy of every family, in name order, for rendering.
+    pub fn snapshot(&self) -> Vec<FamilySnapshot> {
+        let fams = lock(&self.families);
+        fams.iter()
+            .map(|(name, fam)| FamilySnapshot {
+                name: name.clone(),
+                help: fam.help.clone(),
+                kind: fam.kind,
+                children: fam
+                    .children
+                    .iter()
+                    .map(|(block, child)| {
+                        let sample = match child {
+                            Child::Counter(c) => Sample::Counter(c.get()),
+                            Child::Gauge(g) => Sample::Gauge(g.get()),
+                            Child::Histogram(h) => {
+                                Sample::Histogram(h.snapshot())
+                            }
+                        };
+                        (block.clone(), sample)
+                    })
+                    .collect(),
+            })
+            .collect()
+    }
+
+    /// Render the whole registry as Prometheus text (version 0.0.4).
+    pub fn render(&self) -> String {
+        expo::render(&self.snapshot())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_and_gauge_roundtrip() {
+        let r = MetricsRegistry::new();
+        let c = r.counter("quidam_test_total", "help", &[]);
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+        // Same (name, labels) -> same handle.
+        let c2 = r.counter("quidam_test_total", "help", &[]);
+        c2.inc();
+        assert_eq!(c.get(), 6);
+        let g = r.gauge("quidam_test_gauge", "help", &[("k", "v")]);
+        g.set(2.5);
+        assert_eq!(g.get(), 2.5);
+    }
+
+    #[test]
+    fn label_order_is_canonical() {
+        let r = MetricsRegistry::new();
+        let a = r.counter("m_total", "h", &[("b", "2"), ("a", "1")]);
+        let b = r.counter("m_total", "h", &[("a", "1"), ("b", "2")]);
+        a.inc();
+        b.inc();
+        assert_eq!(a.get(), 2, "label order created two children");
+    }
+
+    #[test]
+    fn kind_clash_hands_back_detached_metric() {
+        let r = MetricsRegistry::new();
+        let c = r.counter("m_total", "h", &[]);
+        c.inc();
+        // Same name as a gauge: detached handle, registered counter
+        // untouched, nothing panics.
+        let g = r.gauge("m_total", "h", &[]);
+        g.set(99.0);
+        assert_eq!(c.get(), 1);
+        assert!(!r.render().contains("99"));
+    }
+
+    #[test]
+    fn histogram_buckets_cumulate_and_quantiles_estimate() {
+        let h = Histogram::new(&[0.001, 0.01, 0.1]);
+        for i in 1..=100 {
+            h.observe(i as f64 * 0.001); // 0.001 ..= 0.100
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count, 100);
+        assert!((s.sum - 5.05).abs() < 1e-9);
+        assert_eq!(s.cumulative, vec![1, 10, 100]);
+        let (q, p50) = s.quantiles[0];
+        assert_eq!(q, 0.5);
+        assert!((0.03..=0.07).contains(&p50), "p50 estimate {p50}");
+        let (_, p99) = s.quantiles[2];
+        assert!((0.09..=0.101).contains(&p99), "p99 estimate {p99}");
+    }
+
+    #[test]
+    fn histogram_ignores_non_finite() {
+        let h = Histogram::new(LATENCY_BUCKETS_S);
+        h.observe(f64::NAN);
+        h.observe(f64::INFINITY);
+        assert_eq!(h.count(), 0);
+    }
+
+    /// Satellite: N threads hammering one counter and one histogram —
+    /// totals must be exact, not approximately right.
+    #[test]
+    fn concurrent_hammering_keeps_exact_totals() {
+        let r = Arc::new(MetricsRegistry::new());
+        let threads = 8;
+        let per_thread = 10_000u64;
+        std::thread::scope(|s| {
+            for t in 0..threads {
+                let r = r.clone();
+                s.spawn(move || {
+                    let c = r.counter(
+                        "quidam_hammer_total",
+                        "hammered",
+                        &[("class", "2xx")],
+                    );
+                    let h = r.histogram(
+                        "quidam_hammer_seconds",
+                        "hammered",
+                        &[],
+                        LATENCY_BUCKETS_S,
+                    );
+                    for i in 0..per_thread {
+                        c.inc();
+                        h.observe((t as f64 + 1.0) * 1e-6 * (i % 7 + 1) as f64);
+                    }
+                });
+            }
+        });
+        let c = r.counter("quidam_hammer_total", "hammered", &[("class", "2xx")]);
+        assert_eq!(c.get(), threads as u64 * per_thread);
+        let h = r.histogram("quidam_hammer_seconds", "hammered", &[], &[]);
+        let s = h.snapshot();
+        assert_eq!(s.count, threads as u64 * per_thread);
+        assert_eq!(
+            s.cumulative.last().copied(),
+            Some(threads as u64 * per_thread),
+            "every observation fits under the top bucket"
+        );
+    }
+}

@@ -1,0 +1,250 @@
+//! Structured span tracing: JSONL events behind `--trace-out <path>`
+//! (explore/search/coordinate) and the `QUIDAM_TRACE` env hook in
+//! `quidam serve` (DESIGN.md §11).
+//!
+//! A [`Span`] is a scope: it records its start on construction and emits
+//! one JSON line on drop — `name`, `id`, optional `parent`, `start_us`,
+//! `dur_us`, and free-form `attrs`. Spans are created only at telemetry
+//! boundaries (`main.rs`, the job runner, the HTTP router), never inside
+//! the deterministic engines, so tracing on vs off cannot change a
+//! single output byte (see the determinism tests and lint rules D3/D4).
+//! Writes are best-effort: a full disk or closed pipe drops trace lines,
+//! it never fails the traced run.
+
+use std::io::Write;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::util::json::Json;
+
+use super::clock::{Clock, MonotonicClock};
+
+/// Shared sink all spans of one run write to. Construct once, clone the
+/// `Arc` to every boundary that may open spans.
+pub struct TraceSink {
+    out: Mutex<Box<dyn Write + Send>>,
+    clock: Arc<dyn Clock>,
+    next_id: AtomicU64,
+}
+
+impl TraceSink {
+    /// Sink writing JSONL to `path` (truncating), timed by the real
+    /// monotonic clock — the `--trace-out` path.
+    pub fn to_file(path: &str) -> Result<Arc<TraceSink>, String> {
+        let f = std::fs::File::create(path)
+            .map_err(|e| format!("creating trace file {path}: {e}"))?;
+        Ok(TraceSink::new(
+            Box::new(std::io::BufWriter::new(f)),
+            Arc::new(MonotonicClock::new()),
+        ))
+    }
+
+    /// Sink over an arbitrary writer and clock (tests inject a buffer
+    /// and a `NullClock`).
+    pub fn new(
+        out: Box<dyn Write + Send>,
+        clock: Arc<dyn Clock>,
+    ) -> Arc<TraceSink> {
+        Arc::new(TraceSink {
+            out: Mutex::new(out),
+            clock,
+            next_id: AtomicU64::new(0),
+        })
+    }
+
+    /// Open a root span.
+    pub fn span(self: &Arc<Self>, name: &str) -> Span {
+        self.open(name, None)
+    }
+
+    /// Open a child span of `parent`.
+    pub fn child(self: &Arc<Self>, name: &str, parent: &Span) -> Span {
+        self.open(name, Some(parent.id))
+    }
+
+    fn open(self: &Arc<Self>, name: &str, parent: Option<u64>) -> Span {
+        Span {
+            sink: self.clone(),
+            id: self.next_id.fetch_add(1, Ordering::Relaxed) + 1,
+            parent,
+            name: name.to_string(),
+            start_ns: self.clock.now_ns(),
+            attrs: Vec::new(),
+        }
+    }
+
+    /// One line per span, flushed immediately: spans open at telemetry
+    /// boundaries (a request, a generation), so a syscall per emit is
+    /// noise — and it keeps `QUIDAM_TRACE` output complete even when a
+    /// `quidam serve` process is killed rather than shut down cleanly.
+    fn emit(&self, line: &str) {
+        let mut out = self
+            .out
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner);
+        let _ = writeln!(out, "{line}");
+        let _ = out.flush();
+    }
+
+    pub fn flush(&self) {
+        let mut out = self
+            .out
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner);
+        let _ = out.flush();
+    }
+}
+
+impl Drop for TraceSink {
+    fn drop(&mut self) {
+        if let Ok(mut out) = self.out.lock() {
+            let _ = out.flush();
+        }
+    }
+}
+
+/// Open a span only when a sink is configured — the usual call shape at
+/// boundaries where tracing is optional.
+pub fn maybe_span(sink: &Option<Arc<TraceSink>>, name: &str) -> Option<Span> {
+    sink.as_ref().map(|s| s.span(name))
+}
+
+/// A timed scope. Emits its JSONL record when dropped.
+pub struct Span {
+    sink: Arc<TraceSink>,
+    pub id: u64,
+    parent: Option<u64>,
+    name: String,
+    start_ns: u64,
+    attrs: Vec<(String, Json)>,
+}
+
+impl Span {
+    /// Attach an attribute (last write wins at render time is not
+    /// needed — duplicates are collapsed by the JSON object form).
+    pub fn attr(&mut self, key: &str, value: Json) {
+        self.attrs.push((key.to_string(), value));
+    }
+
+    pub fn attr_num(&mut self, key: &str, value: f64) {
+        self.attr(key, Json::num_or_null(value));
+    }
+
+    pub fn attr_str(&mut self, key: &str, value: &str) {
+        self.attr(key, Json::Str(value.to_string()));
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        let end_ns = self.sink.clock.now_ns();
+        let dur_us = end_ns.saturating_sub(self.start_ns) as f64 / 1e3;
+        let mut fields = vec![
+            ("name", Json::Str(std::mem::take(&mut self.name))),
+            ("id", Json::Num(self.id as f64)),
+            ("start_us", Json::Num(self.start_ns as f64 / 1e3)),
+            ("dur_us", Json::Num(dur_us)),
+        ];
+        if let Some(p) = self.parent {
+            fields.push(("parent", Json::Num(p as f64)));
+        }
+        if !self.attrs.is_empty() {
+            fields.push((
+                "attrs",
+                Json::Obj(std::mem::take(&mut self.attrs).into_iter().collect()),
+            ));
+        }
+        self.sink.emit(&Json::obj(fields).to_string());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::clock::NullClock;
+
+    /// A writer handing its bytes back through shared state.
+    #[derive(Clone, Default)]
+    struct Buf(Arc<Mutex<Vec<u8>>>);
+
+    impl Write for Buf {
+        fn write(&mut self, b: &[u8]) -> std::io::Result<usize> {
+            self.0.lock().unwrap().extend_from_slice(b);
+            Ok(b.len())
+        }
+        fn flush(&mut self) -> std::io::Result<()> {
+            Ok(())
+        }
+    }
+
+    fn lines(buf: &Buf) -> Vec<Json> {
+        let bytes = buf.0.lock().unwrap().clone();
+        String::from_utf8(bytes)
+            .expect("trace output is UTF-8")
+            .lines()
+            .map(|l| Json::parse(l).expect("every trace line parses"))
+            .collect()
+    }
+
+    #[test]
+    fn spans_emit_jsonl_with_parent_links() {
+        let buf = Buf::default();
+        let sink = TraceSink::new(Box::new(buf.clone()), Arc::new(NullClock));
+        {
+            let mut root = sink.span("explore");
+            root.attr_num("points", 6912.0);
+            root.attr_str("workload", "resnet20");
+            {
+                let _inner = sink.child("sweep", &root);
+            } // inner drops (and is emitted) first
+        }
+        let recs = lines(&buf);
+        assert_eq!(recs.len(), 2);
+        assert_eq!(recs[0].get("name").as_str(), Some("sweep"));
+        assert_eq!(recs[0].get("parent").as_u64(), recs[1].get("id").as_u64());
+        assert_eq!(recs[1].get("name").as_str(), Some("explore"));
+        assert_eq!(recs[1].get("parent"), &Json::Null);
+        assert_eq!(
+            recs[1].get("attrs").get("workload").as_str(),
+            Some("resnet20")
+        );
+        assert_eq!(recs[1].get("attrs").get("points").as_f64(), Some(6912.0));
+        // NullClock: all timing fields are exactly zero.
+        assert_eq!(recs[0].get("dur_us").as_f64(), Some(0.0));
+        assert_eq!(recs[1].get("start_us").as_f64(), Some(0.0));
+    }
+
+    #[test]
+    fn span_ids_are_unique_across_threads() {
+        let buf = Buf::default();
+        let sink = TraceSink::new(Box::new(buf.clone()), Arc::new(NullClock));
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let sink = sink.clone();
+                s.spawn(move || {
+                    for _ in 0..50 {
+                        let _sp = sink.span("tick");
+                    }
+                });
+            }
+        });
+        let recs = lines(&buf);
+        assert_eq!(recs.len(), 200);
+        let mut ids: Vec<u64> =
+            recs.iter().filter_map(|r| r.get("id").as_u64()).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), 200, "span ids collided");
+    }
+
+    #[test]
+    fn maybe_span_is_noop_without_sink() {
+        assert!(maybe_span(&None, "x").is_none());
+        let buf = Buf::default();
+        let sink = TraceSink::new(Box::new(buf.clone()), Arc::new(NullClock));
+        let some = maybe_span(&Some(sink), "x");
+        assert!(some.is_some());
+        drop(some);
+        assert_eq!(lines(&buf).len(), 1);
+    }
+}

@@ -26,6 +26,12 @@
 //! proxy the genome, RNG stream, and outputs are unchanged byte for
 //! byte.
 //!
+//! Telemetry boundary (DESIGN.md §11): clock-free by contract (lint
+//! rules D3/D4). Per-generation [`GenStat`]s flow to the caller through
+//! `on_generation`; the CLI turns them into trace marker spans and the
+//! server into `quidam_search_*` metrics — both outside this module, so
+//! search output bytes cannot depend on whether telemetry is on.
+//!
 //! Reuse contract: evaluation goes through a caller-supplied
 //! `Fn(&AcceleratorConfig) -> DesignPoint` (the compiled-model hot path
 //! at every call site), every evaluated point folds into the same

@@ -8,14 +8,16 @@
 //! hashing are mere accelerators), so a hash collision can never answer
 //! one request with another request's cached response. Sharding bounds
 //! lock contention: concurrent requests for different keys rarely touch
-//! the same mutex. Hit/miss/eviction counters feed `GET /v1/stats` (the
-//! observable contract that repeated traffic skips recomputation).
+//! the same mutex. Hit/miss/eviction counters feed both `GET /v1/stats`
+//! and the Prometheus families on `GET /metrics` from the same cells —
+//! one source of truth for the observable contract that repeated
+//! traffic skips recomputation (DESIGN.md §11).
 
 use std::collections::HashMap;
 use std::hash::{Hash, Hasher};
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
+use crate::obs::registry::Counter;
 use crate::util::json::Json;
 
 const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
@@ -104,22 +106,42 @@ impl CacheStats {
 pub struct ShardedLru<K, V> {
     shards: Vec<Mutex<Shard<K, V>>>,
     capacity_per_shard: usize,
-    hits: AtomicU64,
-    misses: AtomicU64,
-    evictions: AtomicU64,
+    hits: Arc<Counter>,
+    misses: Arc<Counter>,
+    evictions: Arc<Counter>,
 }
 
 impl<K: Hash + Eq + Clone, V: Clone> ShardedLru<K, V> {
     /// `shards` is rounded up to 1; `capacity_bytes` is the total budget
-    /// split evenly across shards.
+    /// split evenly across shards. Counters are private to this cache;
+    /// the serving layer uses [`ShardedLru::with_counters`] so the same
+    /// cells back both `/v1/stats` and `GET /metrics`.
     pub fn new(shards: usize, capacity_bytes: usize) -> ShardedLru<K, V> {
+        ShardedLru::with_counters(
+            shards,
+            capacity_bytes,
+            Arc::new(Counter::new()),
+            Arc::new(Counter::new()),
+            Arc::new(Counter::new()),
+        )
+    }
+
+    /// Cache whose hit/miss/eviction counts live in caller-owned cells —
+    /// one source of truth shared with the metrics registry.
+    pub fn with_counters(
+        shards: usize,
+        capacity_bytes: usize,
+        hits: Arc<Counter>,
+        misses: Arc<Counter>,
+        evictions: Arc<Counter>,
+    ) -> ShardedLru<K, V> {
         let shards = shards.max(1);
         ShardedLru {
             capacity_per_shard: (capacity_bytes / shards).max(1),
             shards: (0..shards).map(|_| Mutex::new(Shard::new())).collect(),
-            hits: AtomicU64::new(0),
-            misses: AtomicU64::new(0),
-            evictions: AtomicU64::new(0),
+            hits,
+            misses,
+            evictions,
         }
     }
 
@@ -137,11 +159,11 @@ impl<K: Hash + Eq + Clone, V: Clone> ShardedLru<K, V> {
         match s.map.get_mut(key) {
             Some(e) => {
                 e.last = tick;
-                self.hits.fetch_add(1, Ordering::Relaxed);
+                self.hits.inc();
                 Some(e.value.clone())
             }
             None => {
-                self.misses.fetch_add(1, Ordering::Relaxed);
+                self.misses.inc();
                 None
             }
         }
@@ -175,7 +197,7 @@ impl<K: Hash + Eq + Clone, V: Clone> ShardedLru<K, V> {
                 Some(k) => {
                     if let Some(e) = s.map.remove(&k) {
                         s.bytes -= e.weight;
-                        self.evictions.fetch_add(1, Ordering::Relaxed);
+                        self.evictions.inc();
                     }
                 }
                 None => break,
@@ -192,9 +214,9 @@ impl<K: Hash + Eq + Clone, V: Clone> ShardedLru<K, V> {
             bytes += s.bytes;
         }
         CacheStats {
-            hits: self.hits.load(Ordering::Relaxed),
-            misses: self.misses.load(Ordering::Relaxed),
-            evictions: self.evictions.load(Ordering::Relaxed),
+            hits: self.hits.get(),
+            misses: self.misses.get(),
+            evictions: self.evictions.get(),
             entries,
             bytes,
         }

@@ -23,11 +23,12 @@ use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{TcpStream, ToSocketAddrs};
 use std::ops::Range;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 use crate::config::SweepSpace;
 use crate::dse::{Objective, SweepSummary};
+use crate::obs::registry::Counter;
 use crate::sweep::{self, SweepCtl};
 use crate::util::json::Json;
 
@@ -49,6 +50,20 @@ pub struct DistSweep {
     pub top_k: usize,
     /// Worker threads each shard request runs on, at the worker.
     pub threads: usize,
+}
+
+/// Dispatch counters a caller may hand in to watch a run live (the
+/// serving layer binds these to its `quidam_distrib_*` Prometheus
+/// families; the CLI coordinator passes `None`). Plain cells — the
+/// dispatcher increments them as events happen, nothing reads them back.
+#[derive(Clone)]
+pub struct DistCounters {
+    /// Shard dispatches to workers, including re-dispatches.
+    pub dispatched: Arc<Counter>,
+    /// Shards re-queued after a worker failure.
+    pub retries: Arc<Counter>,
+    /// Workers retired after consecutive shard failures.
+    pub dead_workers: Arc<Counter>,
 }
 
 /// How a distributed run went (the merged summary flows through the
@@ -324,6 +339,7 @@ pub fn run_distributed(
     spec: &DistSweep,
     shards: usize,
     ctl: &SweepCtl,
+    counters: Option<&DistCounters>,
     on_shard: impl Fn(SweepSummary) + Sync,
 ) -> Result<DistOutcome, String> {
     if workers.is_empty() {
@@ -361,6 +377,11 @@ pub fn run_distributed(
                         return;
                     }
                     let next = super::lock(queue).pop_front();
+                    if next.is_some() {
+                        if let Some(c) = counters {
+                            c.dispatched.inc();
+                        }
+                    }
                     let Some(mut shard) = next else {
                         if shards_done.load(Ordering::Relaxed)
                             >= shards_total
@@ -393,11 +414,17 @@ pub fn run_distributed(
                                 return;
                             }
                             redispatches.fetch_add(1, Ordering::Relaxed);
+                            if let Some(c) = counters {
+                                c.retries.inc();
+                            }
                             super::lock(queue).push_back(shard);
                             strikes += 1;
                             if strikes >= WORKER_STRIKES {
                                 // This worker looks dead; retire it and
                                 // let the others drain the queue.
+                                if let Some(c) = counters {
+                                    c.dead_workers.inc();
+                                }
                                 return;
                             }
                         }

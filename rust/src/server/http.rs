@@ -149,18 +149,14 @@ fn head(status: u16, content_type: &str, length: Option<usize>) -> String {
     h
 }
 
-/// Write a complete JSON response (status + body) and flush.
+/// Write a complete JSON response (status + body) and flush. Returns the
+/// status written so handlers can report it for the request metrics.
 pub fn write_json(
     stream: &mut TcpStream,
     status: u16,
     body: &Json,
-) -> std::io::Result<()> {
-    let text = body.to_string();
-    stream.write_all(
-        head(status, "application/json", Some(text.len())).as_bytes(),
-    )?;
-    stream.write_all(text.as_bytes())?;
-    stream.flush()
+) -> std::io::Result<u16> {
+    write_body(stream, status, "application/json", body.to_string().as_bytes())
 }
 
 /// Write a pre-rendered JSON body — the result cache stores rendered
@@ -169,12 +165,33 @@ pub fn write_raw_json(
     stream: &mut TcpStream,
     status: u16,
     body: &str,
-) -> std::io::Result<()> {
-    stream.write_all(
-        head(status, "application/json", Some(body.len())).as_bytes(),
-    )?;
-    stream.write_all(body.as_bytes())?;
-    stream.flush()
+) -> std::io::Result<u16> {
+    write_body(stream, status, "application/json", body.as_bytes())
+}
+
+/// Write a Prometheus text-exposition body (`GET /metrics`).
+pub fn write_metrics_text(
+    stream: &mut TcpStream,
+    body: &str,
+) -> std::io::Result<u16> {
+    write_body(
+        stream,
+        200,
+        "text/plain; version=0.0.4; charset=utf-8",
+        body.as_bytes(),
+    )
+}
+
+fn write_body(
+    stream: &mut TcpStream,
+    status: u16,
+    content_type: &str,
+    body: &[u8],
+) -> std::io::Result<u16> {
+    stream.write_all(head(status, content_type, Some(body.len())).as_bytes())?;
+    stream.write_all(body)?;
+    stream.flush()?;
+    Ok(status)
 }
 
 /// Write a JSON error envelope: `{"error": msg}`.
@@ -182,7 +199,7 @@ pub fn write_error(
     stream: &mut TcpStream,
     status: u16,
     msg: &str,
-) -> std::io::Result<()> {
+) -> std::io::Result<u16> {
     write_json(
         stream,
         status,

@@ -13,12 +13,13 @@
 use std::collections::{BTreeMap, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use crate::config::SweepSpace;
 use crate::coexplore;
 use crate::dse::{self, Objective, SweepSummary};
 use crate::models::{nas, Dataset};
+use crate::obs::clock::elapsed_us;
 use crate::pe::PeType;
 use crate::sweep::{self, Reducer, SweepCtl};
 use crate::util::json::Json;
@@ -104,6 +105,10 @@ pub enum JobState {
     Running,
     Completed,
     Cancelled,
+    /// Cancelled before the runner ever picked the job up — a distinct
+    /// terminal status (ISSUE 8 satellite): a `cancelled` job may carry
+    /// a partial result, a `cancelled_queued` job never ran at all.
+    CancelledQueued,
     Failed,
 }
 
@@ -114,6 +119,7 @@ impl JobState {
             JobState::Running => "running",
             JobState::Completed => "completed",
             JobState::Cancelled => "cancelled",
+            JobState::CancelledQueued => "cancelled_queued",
             JobState::Failed => "failed",
         }
     }
@@ -121,7 +127,10 @@ impl JobState {
     pub fn is_terminal(self) -> bool {
         matches!(
             self,
-            JobState::Completed | JobState::Cancelled | JobState::Failed
+            JobState::Completed
+                | JobState::Cancelled
+                | JobState::CancelledQueued
+                | JobState::Failed
         )
     }
 }
@@ -325,6 +334,10 @@ pub struct JobManager {
     queue: Mutex<VecDeque<Arc<Job>>>,
     available: Condvar,
     shutdown: AtomicBool,
+    /// When set, every job's [`SweepCtl`] forwards its progress deltas
+    /// here — the serving layer binds the sweep-throughput counter
+    /// (`quidam_sweep_points_total`) without the engine knowing.
+    progress_observer: Option<Arc<dyn Fn(usize) + Send + Sync>>,
 }
 
 impl Default for JobManager {
@@ -341,6 +354,17 @@ impl JobManager {
             queue: Mutex::new(VecDeque::new()),
             available: Condvar::new(),
             shutdown: AtomicBool::new(false),
+            progress_observer: None,
+        }
+    }
+
+    /// A manager whose jobs report progress deltas to `observer`.
+    pub fn with_progress_observer(
+        observer: impl Fn(usize) + Send + Sync + 'static,
+    ) -> JobManager {
+        JobManager {
+            progress_observer: Some(Arc::new(observer)),
+            ..JobManager::new()
         }
     }
 
@@ -362,11 +386,18 @@ impl JobManager {
             ));
         }
         let id = self.next_id.fetch_add(1, Ordering::Relaxed) + 1;
+        let ctl = match &self.progress_observer {
+            Some(obs) => {
+                let obs = obs.clone();
+                SweepCtl::with_observer(move |n| obs(n))
+            }
+            None => SweepCtl::new(),
+        };
         let job = Arc::new(Job {
             id,
             spec,
             total,
-            ctl: SweepCtl::new(),
+            ctl,
             state: Mutex::new(JobState::Queued),
             progress: Mutex::new(JobProgress::default()),
             error: Mutex::new(None),
@@ -400,16 +431,28 @@ impl JobManager {
 
     /// Cancel: flips the cooperative flag (a running job stops within one
     /// block per worker) and short-circuits a still-queued job straight
-    /// to `cancelled`. Idempotent; `None` for unknown ids.
-    pub fn cancel(&self, id: u64) -> Option<Arc<Job>> {
+    /// to the distinct `cancelled_queued` terminal state. Idempotent;
+    /// `None` for unknown ids. The returned flag is `true` only on the
+    /// call that performed the queued-cancel transition, so the caller
+    /// counts each such job exactly once.
+    pub fn cancel(&self, id: u64) -> Option<(Arc<Job>, bool)> {
         let job = self.get(id)?;
         job.ctl.cancel();
         let mut st = super::lock(&job.state);
-        if *st == JobState::Queued {
-            *st = JobState::Cancelled;
+        let was_queued = *st == JobState::Queued;
+        if was_queued {
+            *st = JobState::CancelledQueued;
         }
         drop(st);
-        Some(job)
+        Some((job, was_queued))
+    }
+
+    /// Jobs not yet terminal (queued + running) — the queue-depth gauge.
+    pub fn active_count(&self) -> usize {
+        super::lock(&self.jobs)
+            .values()
+            .filter(|j| !j.state().is_terminal())
+            .count()
     }
 
     /// Per-state job counts for `/v1/stats`.
@@ -463,10 +506,13 @@ fn run_one(state: &AppState, job: &Job) {
     {
         let mut st = super::lock(&job.state);
         if *st != JobState::Queued {
-            return; // cancelled while queued
+            // Cancelled while queued: already terminal (and counted) as
+            // `cancelled_queued` by the cancel path — nothing to run.
+            return;
         }
         *st = JobState::Running;
     }
+    state.metrics.job_transition(JobState::Running.name());
     let outcome = match &job.spec.kind {
         JobKind::Sweep { workload, space, objective, top_k } => {
             run_sweep(state, job, workload, space, *objective, *top_k)
@@ -482,6 +528,7 @@ fn run_one(state: &AppState, job: &Job) {
             workers,
             shards,
         } => run_distributed(
+            state,
             job,
             workload,
             space,
@@ -521,6 +568,12 @@ fn run_one(state: &AppState, job: &Job) {
         }
         Ok(()) => JobState::Completed,
     };
+    let terminal = *st;
+    drop(st);
+    state.metrics.job_transition(terminal.name());
+    if terminal == JobState::Cancelled {
+        state.metrics.jobs_cancelled_running.inc();
+    }
 }
 
 fn run_sweep(
@@ -543,12 +596,12 @@ fn run_sweep(
             let mut lat = StreamingFiveNum::default();
             for i in range {
                 let cfg = space.point(i);
-                let t0 = Instant::now();
+                let t0 = state.clock.now_ns();
                 let p = match compiled.get(&cfg.pe_type) {
                     Some(c) => dse::evaluate_compiled(c, &cfg),
                     None => dse::evaluate(&state.models, &cfg, &layers),
                 };
-                lat.observe(t0.elapsed().as_secs_f64() * 1e6);
+                lat.observe(elapsed_us(&*state.clock, t0));
                 mini.observe(&p);
             }
             let mut prog = super::lock(&job.progress);
@@ -566,7 +619,9 @@ fn run_sweep(
 /// merge each completed shard's summary into the job's shared progress,
 /// so `GET /v1/jobs/:id` serves a live (and, after cancellation, a
 /// partial) merged Pareto front exactly like a local sweep job does.
+#[allow(clippy::too_many_arguments)]
 fn run_distributed(
+    state: &AppState,
     job: &Job,
     workload: &str,
     space: &SweepSpace,
@@ -587,6 +642,7 @@ fn run_distributed(
         &spec,
         shards,
         &job.ctl,
+        Some(&state.metrics.distrib),
         |part| {
             let mut prog = super::lock(&job.progress);
             prog.shards_done += 1;
@@ -637,6 +693,15 @@ fn run_search_job(
         &job.ctl,
         |stat, summary| {
             let mut prog = super::lock(&job.progress);
+            // `stat.evals` is cumulative unique evals; feed the counter
+            // the per-generation delta so it sums correctly across jobs.
+            let prev = prog.gen_stats.last().map_or(0, |s| s.evals);
+            state.metrics.search_generations.inc();
+            state
+                .metrics
+                .search_evals
+                .add(stat.evals.saturating_sub(prev) as u64);
+            state.metrics.search_hypervolume.set(stat.hypervolume);
             prog.gen_stats.push(*stat);
             prog.summary = Some(summary.clone());
         },
@@ -724,14 +789,47 @@ mod tests {
         let m = JobManager::new();
         let job = m.submit(tiny_spec(), 2).unwrap();
         assert_eq!(job.state(), JobState::Queued);
-        let cancelled = m.cancel(job.id).unwrap();
-        assert_eq!(cancelled.state(), JobState::Cancelled);
+        let (cancelled, was_queued) = m.cancel(job.id).unwrap();
+        // Distinct terminal status for the never-ran case (ISSUE 8
+        // satellite): not aliased onto the running-cancel path.
+        assert_eq!(cancelled.state(), JobState::CancelledQueued);
+        assert_eq!(cancelled.state().name(), "cancelled_queued");
+        assert!(cancelled.state().is_terminal());
+        assert!(was_queued, "first cancel must report the transition");
         assert!(cancelled.ctl.is_cancelled());
-        // Unknown ids are None, and cancel is idempotent.
+        // Unknown ids are None, and cancel is idempotent — but only the
+        // first call reports the queued-cancel (the counter increments
+        // once per job, not once per DELETE).
         assert!(m.cancel(9999).is_none());
-        assert_eq!(m.cancel(job.id).unwrap().state(), JobState::Cancelled);
+        let (again, repeated) = m.cancel(job.id).unwrap();
+        assert_eq!(again.state(), JobState::CancelledQueued);
+        assert!(!repeated, "repeat cancel double-counted");
         let counts = m.counts_json();
-        assert_eq!(counts.get("cancelled").as_usize(), Some(1));
+        assert_eq!(counts.get("cancelled_queued").as_usize(), Some(1));
+        assert_eq!(counts.get("cancelled"), &Json::Null);
+    }
+
+    #[test]
+    fn active_count_tracks_nonterminal_jobs() {
+        let m = JobManager::new();
+        assert_eq!(m.active_count(), 0);
+        let a = m.submit(tiny_spec(), 2).unwrap();
+        let _b = m.submit(tiny_spec(), 2).unwrap();
+        assert_eq!(m.active_count(), 2);
+        m.cancel(a.id);
+        assert_eq!(m.active_count(), 1);
+    }
+
+    #[test]
+    fn progress_observer_sees_job_progress() {
+        let seen = Arc::new(std::sync::atomic::AtomicUsize::new(0));
+        let seen2 = seen.clone();
+        let m = JobManager::with_progress_observer(move |n| {
+            seen2.fetch_add(n, Ordering::Relaxed);
+        });
+        let job = m.submit(tiny_spec(), 2).unwrap();
+        job.ctl.add_done(5);
+        assert_eq!(seen.load(Ordering::Relaxed), 5);
     }
 
     #[test]

@@ -1,0 +1,346 @@
+//! The serving layer's metric catalog (DESIGN.md §11) — one
+//! [`MetricsRegistry`] plus pre-bound handles for every hot-path family,
+//! so instrumented code paths touch an atomic, never the registry lock.
+//!
+//! Families (all `quidam_`-prefixed; labels in canonical sorted order):
+//!
+//! | family                                    | kind      | labels |
+//! |-------------------------------------------|-----------|--------|
+//! | `quidam_http_requests_total`              | counter   | `endpoint`, `status` (2xx/4xx/5xx/disconnect) |
+//! | `quidam_http_request_duration_seconds`    | histogram | `endpoint` |
+//! | `quidam_cache_{hits,misses,evictions}_total` | counter | `cache` (compiled/results) |
+//! | `quidam_cache_entries`, `quidam_cache_resident_bytes` | gauge | `cache` |
+//! | `quidam_jobs_transitions_total`           | counter   | `to` (queued/running/completed/cancelled/cancelled_queued/failed) |
+//! | `quidam_jobs_cancelled_total`             | counter   | `phase` (queued/running) |
+//! | `quidam_jobs_queue_depth`                 | gauge     | — |
+//! | `quidam_sweep_points_total`               | counter   | — |
+//! | `quidam_sweep_points_per_second`          | gauge     | — |
+//! | `quidam_search_generations_total`, `quidam_search_evals_total` | counter | — |
+//! | `quidam_search_hypervolume`               | gauge     | — |
+//! | `quidam_distrib_shards_dispatched_total`, `quidam_distrib_shard_retries_total`, `quidam_distrib_dead_workers_total` | counter | — |
+//! | `quidam_uptime_seconds`                   | gauge     | — |
+//!
+//! The cache counters are the *same cells* `/v1/stats` reports (handed
+//! to [`super::cache::ShardedLru::with_counters`]) — one source of
+//! truth. Point-in-time gauges (cache residency, queue depth, uptime)
+//! are sampled at scrape time by [`super::AppState::metrics_text`].
+
+use std::sync::Arc;
+
+use crate::obs::registry::{
+    Counter, Gauge, Histogram, MetricsRegistry, LATENCY_BUCKETS_S,
+};
+
+use super::distrib::DistCounters;
+
+/// Status-class label for `quidam_http_requests_total`.
+pub fn status_class(status: u16) -> &'static str {
+    match status {
+        200..=299 => "2xx",
+        400..=499 => "4xx",
+        500..=599 => "5xx",
+        // The handler could not finish writing (client vanished) — the
+        // chosen status never reached the wire.
+        _ => "disconnect",
+    }
+}
+
+pub struct ServerMetrics {
+    pub registry: MetricsRegistry,
+    // Cache counters shared with the two ShardedLru instances.
+    pub compiled_hits: Arc<Counter>,
+    pub compiled_misses: Arc<Counter>,
+    pub compiled_evictions: Arc<Counter>,
+    pub results_hits: Arc<Counter>,
+    pub results_misses: Arc<Counter>,
+    pub results_evictions: Arc<Counter>,
+    // Scrape-time gauges.
+    pub compiled_entries: Arc<Gauge>,
+    pub compiled_bytes: Arc<Gauge>,
+    pub results_entries: Arc<Gauge>,
+    pub results_bytes: Arc<Gauge>,
+    pub queue_depth: Arc<Gauge>,
+    pub uptime_s: Arc<Gauge>,
+    // Job lifecycle.
+    pub jobs_cancelled_queued: Arc<Counter>,
+    pub jobs_cancelled_running: Arc<Counter>,
+    // Sweep throughput.
+    pub sweep_points: Arc<Counter>,
+    pub sweep_rate: Arc<Gauge>,
+    // Guided search.
+    pub search_generations: Arc<Counter>,
+    pub search_evals: Arc<Counter>,
+    pub search_hypervolume: Arc<Gauge>,
+    // Distributed dispatch.
+    pub distrib: DistCounters,
+}
+
+impl Default for ServerMetrics {
+    fn default() -> Self {
+        ServerMetrics::new()
+    }
+}
+
+impl ServerMetrics {
+    pub fn new() -> ServerMetrics {
+        let r = MetricsRegistry::new();
+        let cache_counter = |name: &str, help: &str, which: &str| {
+            r.counter(name, help, &[("cache", which)])
+        };
+        let cache_gauge = |name: &str, help: &str, which: &str| {
+            r.gauge(name, help, &[("cache", which)])
+        };
+        ServerMetrics {
+            compiled_hits: cache_counter(
+                "quidam_cache_hits_total",
+                "Cache lookups answered from the cache",
+                "compiled",
+            ),
+            compiled_misses: cache_counter(
+                "quidam_cache_misses_total",
+                "Cache lookups that had to recompute",
+                "compiled",
+            ),
+            compiled_evictions: cache_counter(
+                "quidam_cache_evictions_total",
+                "Entries evicted to stay within the byte budget",
+                "compiled",
+            ),
+            results_hits: cache_counter(
+                "quidam_cache_hits_total",
+                "Cache lookups answered from the cache",
+                "results",
+            ),
+            results_misses: cache_counter(
+                "quidam_cache_misses_total",
+                "Cache lookups that had to recompute",
+                "results",
+            ),
+            results_evictions: cache_counter(
+                "quidam_cache_evictions_total",
+                "Entries evicted to stay within the byte budget",
+                "results",
+            ),
+            compiled_entries: cache_gauge(
+                "quidam_cache_entries",
+                "Entries currently resident",
+                "compiled",
+            ),
+            compiled_bytes: cache_gauge(
+                "quidam_cache_resident_bytes",
+                "Bytes currently resident",
+                "compiled",
+            ),
+            results_entries: cache_gauge(
+                "quidam_cache_entries",
+                "Entries currently resident",
+                "results",
+            ),
+            results_bytes: cache_gauge(
+                "quidam_cache_resident_bytes",
+                "Bytes currently resident",
+                "results",
+            ),
+            queue_depth: r.gauge(
+                "quidam_jobs_queue_depth",
+                "Jobs currently queued or running",
+                &[],
+            ),
+            uptime_s: r.gauge(
+                "quidam_uptime_seconds",
+                "Seconds since the server started",
+                &[],
+            ),
+            jobs_cancelled_queued: r.counter(
+                "quidam_jobs_cancelled_total",
+                "Jobs cancelled, by the phase the cancel landed in",
+                &[("phase", "queued")],
+            ),
+            jobs_cancelled_running: r.counter(
+                "quidam_jobs_cancelled_total",
+                "Jobs cancelled, by the phase the cancel landed in",
+                &[("phase", "running")],
+            ),
+            sweep_points: r.counter(
+                "quidam_sweep_points_total",
+                "Design points evaluated by sweeps (sync, job, remote)",
+                &[],
+            ),
+            sweep_rate: r.gauge(
+                "quidam_sweep_points_per_second",
+                "Throughput of the most recently completed sweep",
+                &[],
+            ),
+            search_generations: r.counter(
+                "quidam_search_generations_total",
+                "Search generations completed across all search jobs",
+                &[],
+            ),
+            search_evals: r.counter(
+                "quidam_search_evals_total",
+                "Unique model evaluations performed by search jobs",
+                &[],
+            ),
+            search_hypervolume: r.gauge(
+                "quidam_search_hypervolume",
+                "Archive hypervolume after the most recent generation",
+                &[],
+            ),
+            distrib: DistCounters {
+                dispatched: r.counter(
+                    "quidam_distrib_shards_dispatched_total",
+                    "Shard dispatches to workers (including re-dispatches)",
+                    &[],
+                ),
+                retries: r.counter(
+                    "quidam_distrib_shard_retries_total",
+                    "Shards re-queued after a worker failure",
+                    &[],
+                ),
+                dead_workers: r.counter(
+                    "quidam_distrib_dead_workers_total",
+                    "Workers retired after consecutive shard failures",
+                    &[],
+                ),
+            },
+            registry: r,
+        }
+    }
+
+    /// Record one finished HTTP exchange. Looks the labeled children up
+    /// in the registry (a `BTreeMap` probe under one short lock) — fine
+    /// at HTTP rates; the per-point hot paths use pre-bound handles.
+    pub fn http_observe(&self, endpoint: &str, status: u16, dur_s: f64) {
+        self.registry
+            .counter(
+                "quidam_http_requests_total",
+                "HTTP requests by endpoint and status class",
+                &[("endpoint", endpoint), ("status", status_class(status))],
+            )
+            .inc();
+        self.http_latency(endpoint).observe(dur_s);
+    }
+
+    /// The per-endpoint latency histogram (P2 p50/p90/p99 + buckets).
+    pub fn http_latency(&self, endpoint: &str) -> Arc<Histogram> {
+        self.registry.histogram(
+            "quidam_http_request_duration_seconds",
+            "Request handling latency by endpoint",
+            &[("endpoint", endpoint)],
+            LATENCY_BUCKETS_S,
+        )
+    }
+
+    /// Count one job lifecycle transition (`to` is the new state name).
+    pub fn job_transition(&self, to: &str) {
+        self.registry
+            .counter(
+                "quidam_jobs_transitions_total",
+                "Job lifecycle transitions by destination state",
+                &[("to", to)],
+            )
+            .inc();
+    }
+
+    /// A cancel landed on a still-queued job: distinct terminal status
+    /// (ISSUE 8 satellite — previously aliased the running-cancel path).
+    pub fn job_cancelled_queued(&self) {
+        self.jobs_cancelled_queued.inc();
+        self.job_transition("cancelled_queued");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn http_observe_advances_count_and_latency() {
+        let m = ServerMetrics::new();
+        m.http_observe("/v1/ppa", 200, 0.002);
+        m.http_observe("/v1/ppa", 200, 0.004);
+        m.http_observe("/v1/ppa", 400, 0.001);
+        let text = m.registry.render();
+        assert!(
+            text.contains(
+                "quidam_http_requests_total{endpoint=\"/v1/ppa\",\
+                 status=\"2xx\"} 2"
+            ),
+            "{text}"
+        );
+        assert!(
+            text.contains(
+                "quidam_http_requests_total{endpoint=\"/v1/ppa\",\
+                 status=\"4xx\"} 1"
+            ),
+            "{text}"
+        );
+        assert!(
+            text.contains(
+                "quidam_http_request_duration_seconds_count\
+                 {endpoint=\"/v1/ppa\"} 3"
+            ),
+            "{text}"
+        );
+        assert!(text.contains("quantile=\"0.99\""), "{text}");
+    }
+
+    #[test]
+    fn status_classes_cover_the_router_statuses() {
+        for (s, c) in [
+            (200, "2xx"),
+            (202, "2xx"),
+            (400, "4xx"),
+            (404, "4xx"),
+            (429, "4xx"),
+            (500, "5xx"),
+            (0, "disconnect"),
+        ] {
+            assert_eq!(status_class(s), c, "status {s}");
+        }
+    }
+
+    #[test]
+    fn cache_counters_share_one_family() {
+        let m = ServerMetrics::new();
+        m.compiled_hits.inc();
+        m.results_hits.add(3);
+        let text = m.registry.render();
+        assert!(
+            text.contains("quidam_cache_hits_total{cache=\"compiled\"} 1"),
+            "{text}"
+        );
+        assert!(
+            text.contains("quidam_cache_hits_total{cache=\"results\"} 3"),
+            "{text}"
+        );
+        // One HELP/TYPE header for the family, not one per child.
+        assert_eq!(text.matches("# TYPE quidam_cache_hits_total ").count(), 1);
+    }
+
+    #[test]
+    fn job_lifecycle_families_advance() {
+        let m = ServerMetrics::new();
+        m.job_transition("queued");
+        m.job_transition("running");
+        m.job_transition("completed");
+        m.job_cancelled_queued();
+        let text = m.registry.render();
+        assert!(
+            text.contains(
+                "quidam_jobs_transitions_total{to=\"cancelled_queued\"} 1"
+            ),
+            "{text}"
+        );
+        assert!(
+            text.contains(
+                "quidam_jobs_cancelled_total{phase=\"queued\"} 1"
+            ),
+            "{text}"
+        );
+        assert!(
+            text.contains("quidam_jobs_cancelled_total{phase=\"running\"} 0"),
+            "{text}"
+        );
+    }
+}

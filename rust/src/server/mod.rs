@@ -20,17 +20,22 @@ pub mod cache;
 pub mod distrib;
 pub mod http;
 pub mod jobs;
+pub mod metrics;
 pub mod router;
 
 use std::collections::{BTreeMap, BTreeSet};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use crate::models::{zoo, Dataset, DnnModel};
+use crate::obs::clock::{elapsed_s, Clock, MonotonicClock};
+use crate::obs::trace::TraceSink;
 use crate::pe::PeType;
 use crate::ppa::{CompiledNetModel, PpaModels};
+
+use metrics::ServerMetrics;
 
 /// Poison-tolerant mutex lock for the serving layer. A panic on one
 /// worker thread poisons every mutex it held; `Mutex::lock().unwrap()`
@@ -95,12 +100,30 @@ pub struct AppState {
     /// (POST/DELETE /v1/workers manage it; DESIGN.md §7).
     pub workers: Mutex<BTreeSet<String>>,
     pub opts: ServeOptions,
-    pub started: Instant,
+    /// All server timing flows through this clock (DESIGN.md §11) — the
+    /// real monotonic clock in production, `NullClock` in determinism
+    /// tests, where every recorded duration is exactly zero.
+    pub clock: Arc<dyn Clock>,
+    /// `clock.now_ns()` at construction — uptime is measured against it.
+    pub started_ns: u64,
     pub requests: AtomicU64,
+    pub metrics: Arc<ServerMetrics>,
+    /// Span sink when `QUIDAM_TRACE=<path>` was set at startup.
+    pub trace: Option<Arc<TraceSink>>,
 }
 
 impl AppState {
     pub fn new(models: PpaModels, opts: ServeOptions) -> AppState {
+        AppState::with_clock(models, opts, Arc::new(MonotonicClock::new()))
+    }
+
+    /// [`AppState::new`] with an injected clock — the determinism tests
+    /// freeze time with `NullClock` and assert byte-identical responses.
+    pub fn with_clock(
+        models: PpaModels,
+        opts: ServeOptions,
+        clock: Arc<dyn Clock>,
+    ) -> AppState {
         let mut workloads = BTreeMap::new();
         for net in [
             zoo::resnet_cifar(20, Dataset::Cifar10),
@@ -109,18 +132,64 @@ impl AppState {
         ] {
             workloads.insert(net.name.clone(), net);
         }
+        let metrics = Arc::new(ServerMetrics::new());
         let budget = opts.cache_mib.max(1) * (1 << 20);
+        let compiled = cache::ShardedLru::with_counters(
+            8,
+            budget / 4 * 3,
+            metrics.compiled_hits.clone(),
+            metrics.compiled_misses.clone(),
+            metrics.compiled_evictions.clone(),
+        );
+        let results = cache::ShardedLru::with_counters(
+            8,
+            budget / 4,
+            metrics.results_hits.clone(),
+            metrics.results_misses.clone(),
+            metrics.results_evictions.clone(),
+        );
+        // Every job's SweepCtl feeds the sweep-throughput counter, so
+        // `quidam_sweep_points_total` advances while jobs run, not only
+        // when they finish.
+        let points = metrics.sweep_points.clone();
+        let jobs = jobs::JobManager::with_progress_observer(move |n| {
+            points.add(n as u64);
+        });
+        let started_ns = clock.now_ns();
+        let trace = std::env::var("QUIDAM_TRACE")
+            .ok()
+            .filter(|p| !p.is_empty())
+            .and_then(|p| TraceSink::to_file(&p).ok());
         AppState {
             models,
             workloads,
-            compiled: cache::ShardedLru::new(8, budget / 4 * 3),
-            results: cache::ShardedLru::new(8, budget / 4),
-            jobs: jobs::JobManager::new(),
+            compiled,
+            results,
+            jobs,
             workers: Mutex::new(BTreeSet::new()),
             opts,
-            started: Instant::now(),
+            clock,
+            started_ns,
             requests: AtomicU64::new(0),
+            metrics,
+            trace,
         }
+    }
+
+    /// Render the Prometheus document for `GET /metrics`: sample the
+    /// point-in-time gauges (cache residency, queue depth, uptime), then
+    /// let the registry render every family in stable order.
+    pub fn metrics_text(&self) -> String {
+        let m = &self.metrics;
+        let cs = self.compiled.stats();
+        m.compiled_entries.set(cs.entries as f64);
+        m.compiled_bytes.set(cs.bytes as f64);
+        let rs = self.results.stats();
+        m.results_entries.set(rs.entries as f64);
+        m.results_bytes.set(rs.bytes as f64);
+        m.queue_depth.set(self.jobs.active_count() as f64);
+        m.uptime_s.set(elapsed_s(&*self.clock, self.started_ns));
+        m.registry.render()
     }
 
     /// Look up a named workload; the error lists what the server serves.
@@ -323,9 +392,24 @@ fn handle_conn(state: &Arc<AppState>, mut conn: TcpStream) {
     let _ = conn.set_write_timeout(Some(Duration::from_secs(30)));
     let _ = conn.set_nodelay(true);
     state.requests.fetch_add(1, Ordering::Relaxed);
-    match http::read_request(&mut conn) {
-        // A response write error means the client vanished — nothing to do.
-        Ok(req) => drop(router::handle(state, req, &mut conn)),
-        Err(e) => drop(http::write_error(&mut conn, 400, &e)),
+    let t0 = state.clock.now_ns();
+    let mut span = crate::obs::trace::maybe_span(&state.trace, "http");
+    // A response write error means the client vanished — nothing to do
+    // beyond recording the exchange as a disconnect (status 0).
+    let (endpoint, status) = match http::read_request(&mut conn) {
+        Ok(req) => {
+            let ep = router::endpoint_label(&req.method, &req.path);
+            let status = router::handle(state, req, &mut conn).unwrap_or(0);
+            (ep, status)
+        }
+        Err(e) => {
+            let status = http::write_error(&mut conn, 400, &e).unwrap_or(0);
+            ("bad_request", status)
+        }
+    };
+    state.metrics.http_observe(endpoint, status, elapsed_s(&*state.clock, t0));
+    if let Some(sp) = &mut span {
+        sp.attr_str("endpoint", endpoint);
+        sp.attr_num("status", status as f64);
     }
 }

@@ -1,6 +1,7 @@
 //! Route dispatch for `quidam serve` (endpoint table in DESIGN.md §6-7):
 //!
 //!   GET    /healthz       liveness probe
+//!   GET    /metrics       Prometheus text exposition (DESIGN.md §11)
 //!   GET    /v1/stats      cache hit/miss counters, job counts, uptime
 //!   GET    /v1/workloads  named workloads the PPA endpoints accept
 //!   POST   /v1/ppa        single-config PPA query (result-cached)
@@ -22,18 +23,32 @@ use std::io::Write as _;
 use std::net::TcpStream;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Arc;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use crate::config::{parse_axis, AcceleratorConfig, SweepSpace};
 use crate::dse::{self, Objective};
+use crate::obs::clock::elapsed_s;
 use crate::pe::PeType;
 use crate::report;
 use crate::sweep::SweepCtl;
 use crate::util::json::Json;
 
 use super::http::{self, Request};
-use super::jobs::{JobKind, JobSpec};
+use super::jobs::{Job, JobKind, JobSpec};
 use super::AppState;
+
+/// Submit a job and count its `queued` transition. The job manager
+/// itself stays metrics-free — all lifecycle counting happens at the
+/// serving boundary (DESIGN.md §11), keeping `jobs.rs` clock-free too.
+fn submit_job(
+    state: &AppState,
+    spec: JobSpec,
+    total: usize,
+) -> Result<Arc<Job>, String> {
+    let job = state.jobs.submit(spec, total)?;
+    state.metrics.job_transition("queued");
+    Ok(job)
+}
 
 /// Result-cache key: the raw body prefixed by its route, so identical
 /// bodies on different endpoints can never collide. The cache compares
@@ -200,7 +215,7 @@ fn stats_json(state: &AppState) -> Json {
     Json::obj(vec![
         (
             "uptime_s",
-            Json::Num(state.started.elapsed().as_secs_f64()),
+            Json::Num(elapsed_s(&*state.clock, state.started_ns)),
         ),
         (
             "requests",
@@ -234,7 +249,7 @@ fn ppa(
     state: &AppState,
     req: &Request,
     conn: &mut TcpStream,
-) -> std::io::Result<()> {
+) -> std::io::Result<u16> {
     let key = request_key("ppa", &req.body);
     if let Some(cached) = state.results.get(&key) {
         return http::write_raw_json(conn, 200, &cached);
@@ -343,7 +358,7 @@ fn sweep_sync(
     state: &AppState,
     req: &Request,
     conn: &mut TcpStream,
-) -> std::io::Result<()> {
+) -> std::io::Result<u16> {
     type Parsed = (String, SweepSpace, Objective, usize, bool, usize);
     let parsed = (|| -> Result<Parsed, String> {
         let j = req.json()?;
@@ -380,9 +395,12 @@ fn sweep_sync(
     // Two ways a vanished client aborts the sweep: a failed point-row
     // write (below), and — crucial for `points: false`, where nothing is
     // written until the sweep finishes — the disconnect watchdog.
-    let ctl = Arc::new(SweepCtl::new());
+    let points_ctr = state.metrics.sweep_points.clone();
+    let ctl = Arc::new(SweepCtl::with_observer(move |n| {
+        points_ctr.add(n as u64);
+    }));
     let _watch = DisconnectWatch::spawn(conn, ctl.clone());
-    let t0 = Instant::now();
+    let t0 = state.clock.now_ns();
     let mut write_err: Option<std::io::Error> = None;
     let summary = dse::stream_space_eval(
         &space,
@@ -414,13 +432,20 @@ fn sweep_sync(
         },
         &ctl,
     );
+    let elapsed = elapsed_s(&*state.clock, t0);
+    if elapsed > 0.0 {
+        state
+            .metrics
+            .sweep_rate
+            .set(summary.count as f64 / elapsed);
+    }
     if let Some(e) = write_err {
         return Err(e);
     }
     if ctl.is_cancelled() {
         // The watchdog saw the client disconnect mid-sweep; the partial
         // summary has no recipient.
-        return Ok(());
+        return Ok(200);
     }
     for (energy, ppa_v, cfg) in summary.front.points() {
         report::ndjson(
@@ -455,10 +480,11 @@ fn sweep_sync(
             ("count", Json::Num(summary.count as f64)),
             ("front_size", Json::Num(summary.front.len() as f64)),
             ("objective", Json::Str(objective.name().into())),
-            ("elapsed_s", Json::num_or_null(t0.elapsed().as_secs_f64())),
+            ("elapsed_s", Json::num_or_null(elapsed)),
         ]),
     )?;
-    conn.flush()
+    conn.flush()?;
+    Ok(200)
 }
 
 /// `POST /v1/shard` — execute one contiguous index range of a grid sweep
@@ -472,7 +498,7 @@ fn shard_exec(
     state: &AppState,
     req: &Request,
     conn: &mut TcpStream,
-) -> std::io::Result<()> {
+) -> std::io::Result<u16> {
     type Parsed =
         (String, SweepSpace, Objective, usize, usize, std::ops::Range<usize>);
     let parsed = (|| -> Result<Parsed, String> {
@@ -512,7 +538,11 @@ fn shard_exec(
     };
     let compiled = state.compiled_map(&workload, &net.layers, &space.pe_types);
     http::start_ndjson(conn)?;
-    let ctl = Arc::new(SweepCtl::new());
+    // Shard points count toward this worker's sweep throughput too.
+    let points_ctr = state.metrics.sweep_points.clone();
+    let ctl = Arc::new(SweepCtl::with_observer(move |n| {
+        points_ctr.add(n as u64);
+    }));
     let _watch = DisconnectWatch::spawn(conn, ctl.clone());
     // Progress cadence: roughly one record per this many evaluated
     // points (emitted via the row/sink path so all socket writes stay on
@@ -557,7 +587,7 @@ fn shard_exec(
     if ctl.is_cancelled() {
         // Coordinator hung up (job cancelled / dispatcher died): the
         // partial shard has no recipient.
-        return Ok(());
+        return Ok(200);
     }
     report::ndjson(
         conn,
@@ -566,7 +596,8 @@ fn shard_exec(
             ("summary", summary.to_json()),
         ]),
     )?;
-    conn.flush()
+    conn.flush()?;
+    Ok(200)
 }
 
 fn registry_json(state: &AppState) -> Json {
@@ -584,7 +615,7 @@ fn workers_route(
     state: &AppState,
     req: &Request,
     conn: &mut TcpStream,
-) -> std::io::Result<()> {
+) -> std::io::Result<u16> {
     let addr_field = || -> Result<String, String> {
         let j = req.json()?;
         j.get("addr")
@@ -626,7 +657,7 @@ fn distributed_sweep(
     state: &AppState,
     req: &Request,
     conn: &mut TcpStream,
-) -> std::io::Result<()> {
+) -> std::io::Result<u16> {
     let parsed = (|| -> Result<(JobSpec, usize, usize), String> {
         let j = req.json()?;
         let workload = parse_workload(&j)?;
@@ -693,7 +724,7 @@ fn distributed_sweep(
         Ok(v) => v,
         Err(e) => return http::write_error(conn, 400, &e),
     };
-    let job = match state.jobs.submit(spec, total) {
+    let job = match submit_job(state, spec, total) {
         Ok(job) => job,
         Err(e) => return http::write_error(conn, 429, &e),
     };
@@ -725,7 +756,7 @@ fn search_create(
     state: &AppState,
     req: &Request,
     conn: &mut TcpStream,
-) -> std::io::Result<()> {
+) -> std::io::Result<u16> {
     type Parsed = (JobSpec, usize, &'static str);
     let parsed = (|| -> Result<Parsed, String> {
         let j = req.json()?;
@@ -850,7 +881,7 @@ fn search_create(
         Ok(v) => v,
         Err(e) => return http::write_error(conn, 400, &e),
     };
-    let job = match state.jobs.submit(spec, total) {
+    let job = match submit_job(state, spec, total) {
         Ok(job) => job,
         Err(e) => return http::write_error(conn, 429, &e),
     };
@@ -871,7 +902,7 @@ fn jobs_create(
     state: &AppState,
     req: &Request,
     conn: &mut TcpStream,
-) -> std::io::Result<()> {
+) -> std::io::Result<u16> {
     let parsed = (|| -> Result<(JobSpec, usize), String> {
         let j = req.json()?;
         let threads = parse_threads(&j, state)?;
@@ -947,7 +978,7 @@ fn jobs_create(
         Ok(v) => v,
         Err(e) => return http::write_error(conn, 400, &e),
     };
-    let job = match state.jobs.submit(spec, total) {
+    let job = match submit_job(state, spec, total) {
         Ok(job) => job,
         Err(e) => return http::write_error(conn, 429, &e),
     };
@@ -968,7 +999,7 @@ fn jobs_item(
     method: &str,
     path: &str,
     conn: &mut TcpStream,
-) -> std::io::Result<()> {
+) -> std::io::Result<u16> {
     let id = match path
         .strip_prefix("/v1/jobs/")
         .and_then(|s| s.parse::<u64>().ok())
@@ -990,7 +1021,14 @@ fn jobs_item(
             }
         },
         "DELETE" => match state.jobs.cancel(id) {
-            Some(job) => http::write_json(conn, 200, &job.status_json()),
+            Some((job, was_queued)) => {
+                if was_queued {
+                    // Satellite fix: a cancel landing on a still-queued
+                    // job is counted exactly once, under its own phase.
+                    state.metrics.job_cancelled_queued();
+                }
+                http::write_json(conn, 200, &job.status_json())
+            }
             None => {
                 http::write_error(conn, 404, &format!("no job {id}"))
             }
@@ -999,19 +1037,53 @@ fn jobs_item(
     }
 }
 
-/// Dispatch one request and write its response. I/O errors are swallowed
-/// by the caller (a vanished client is not a server fault).
+/// Canonical endpoint label for `quidam_http_requests_total` — known
+/// routes verbatim, everything else folded into `other` so an attacker
+/// probing random paths cannot grow the label set without bound.
+pub fn endpoint_label(method: &str, path: &str) -> &'static str {
+    match path {
+        "/healthz" => "/healthz",
+        "/metrics" => "/metrics",
+        "/v1/stats" => "/v1/stats",
+        "/v1/workloads" => "/v1/workloads",
+        "/v1/ppa" => "/v1/ppa",
+        "/v1/sweep" => "/v1/sweep",
+        "/v1/shard" => "/v1/shard",
+        "/v1/workers" => "/v1/workers",
+        "/v1/distributed-sweep" => "/v1/distributed-sweep",
+        "/v1/search" => "/v1/search",
+        "/v1/jobs" => "/v1/jobs",
+        p if p.starts_with("/v1/jobs/") => {
+            // GET polls vs DELETE cancels behave very differently;
+            // keep them distinguishable without a per-id label blowup.
+            if method == "DELETE" {
+                "/v1/jobs/:id cancel"
+            } else {
+                "/v1/jobs/:id"
+            }
+        }
+        _ => "other",
+    }
+}
+
+/// Dispatch one request and write its response, returning the status
+/// code that was (attempted to be) written. I/O errors are swallowed by
+/// the caller (a vanished client is not a server fault) and recorded as
+/// status class `disconnect`.
 pub fn handle(
     state: &Arc<AppState>,
     req: Request,
     conn: &mut TcpStream,
-) -> std::io::Result<()> {
+) -> std::io::Result<u16> {
     match (req.method.as_str(), req.path.as_str()) {
         ("GET", "/healthz") => http::write_json(
             conn,
             200,
             &Json::obj(vec![("ok", Json::Bool(true))]),
         ),
+        ("GET", "/metrics") => {
+            http::write_metrics_text(conn, &state.metrics_text())
+        }
         ("GET", "/v1/stats") => {
             http::write_json(conn, 200, &stats_json(state))
         }
@@ -1043,6 +1115,7 @@ pub fn handle(
 mod tests {
     use super::*;
     use std::net::TcpListener;
+    use std::time::Instant;
 
     fn wait_for(pred: impl Fn() -> bool, what: &str) {
         let t0 = Instant::now();
@@ -1071,6 +1144,21 @@ mod tests {
         assert!(!ctl.is_cancelled(), "watchdog fired on a live client");
         drop(client);
         wait_for(|| ctl.is_cancelled(), "cancel after client close");
+    }
+
+    /// The metrics endpoint label set is closed: unknown paths fold into
+    /// `other`, job-item paths into `:id` templates.
+    #[test]
+    fn endpoint_labels_are_a_closed_set() {
+        assert_eq!(endpoint_label("GET", "/metrics"), "/metrics");
+        assert_eq!(endpoint_label("POST", "/v1/sweep"), "/v1/sweep");
+        assert_eq!(endpoint_label("GET", "/v1/jobs/17"), "/v1/jobs/:id");
+        assert_eq!(
+            endpoint_label("DELETE", "/v1/jobs/17"),
+            "/v1/jobs/:id cancel"
+        );
+        assert_eq!(endpoint_label("GET", "/v1/does-not-exist"), "other");
+        assert_eq!(endpoint_label("PATCH", "/../../etc"), "other");
     }
 
     /// Dropping the watch stops its thread without cancelling — the

@@ -92,15 +92,43 @@ impl WorkQueue {
 /// cancelled sweep stops within one block per worker and every reducer
 /// stays consistent: a block's points either all fold or none do, and
 /// [`SweepCtl::done`] counts exactly the folded points.
-#[derive(Debug, Default)]
+///
+/// An optional progress observer receives each `add_done` delta — the
+/// telemetry boundary (DESIGN.md §11): the serving layer hooks a
+/// throughput counter here, while the engine itself stays clock-free
+/// (lint rules D3/D4). Observers must be cheap and must not panic.
+#[derive(Default)]
 pub struct SweepCtl {
     cancelled: AtomicBool,
     done: AtomicUsize,
+    observer: Option<Box<dyn Fn(usize) + Send + Sync>>,
+}
+
+impl std::fmt::Debug for SweepCtl {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("SweepCtl")
+            .field("cancelled", &self.cancelled)
+            .field("done", &self.done)
+            .field("observer", &self.observer.is_some())
+            .finish()
+    }
 }
 
 impl SweepCtl {
     pub fn new() -> SweepCtl {
         SweepCtl::default()
+    }
+
+    /// A ctl whose progress deltas also flow to `observer` (block
+    /// granularity — one call per engine block or remote progress fold).
+    pub fn with_observer(
+        observer: impl Fn(usize) + Send + Sync + 'static,
+    ) -> SweepCtl {
+        SweepCtl {
+            cancelled: AtomicBool::new(false),
+            done: AtomicUsize::new(0),
+            observer: Some(Box::new(observer)),
+        }
     }
 
     /// Request cooperative cancellation (idempotent, thread-safe).
@@ -123,6 +151,9 @@ impl SweepCtl {
     /// `points_done` reflects work done on other machines.
     pub fn add_done(&self, n: usize) {
         self.done.fetch_add(n, Ordering::Relaxed);
+        if let Some(obs) = &self.observer {
+            obs(n);
+        }
     }
 }
 
@@ -356,6 +387,7 @@ pub fn for_each_block_ctl<F>(
 mod tests {
     use super::*;
     use std::sync::atomic::AtomicU64;
+    use std::sync::Arc;
 
     #[derive(Default)]
     struct Sum(u64, usize);
@@ -566,6 +598,22 @@ mod tests {
         ctl.add_done(7);
         ctl.add_done(5);
         assert_eq!(ctl.done(), 12);
+    }
+
+    #[test]
+    fn observer_sees_every_progress_delta() {
+        let seen = Arc::new(AtomicUsize::new(0));
+        let seen2 = seen.clone();
+        let ctl = SweepCtl::with_observer(move |n| {
+            seen2.fetch_add(n, Ordering::Relaxed);
+        });
+        for_each_block_ctl(1000, 4, 64, &ctl, |_r| {});
+        assert_eq!(ctl.done(), 1000);
+        assert_eq!(
+            seen.load(Ordering::Relaxed),
+            1000,
+            "observer missed progress deltas"
+        );
     }
 
     #[test]

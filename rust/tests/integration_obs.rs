@@ -1,0 +1,381 @@
+//! Telemetry integration (DESIGN.md §11): the Prometheus document served
+//! by `GET /metrics` is valid and advances with traffic, `/v1/stats`
+//! keeps its exact legacy JSON shape byte for byte, and turning
+//! telemetry on (progress observers, trace sinks) leaves sweep and
+//! search outputs byte-identical — the determinism contract that lint
+//! rules D3/D4 enforce statically is verified dynamically here.
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, OnceLock};
+use std::time::Duration;
+
+use quidam::config::SweepSpace;
+use quidam::dse;
+use quidam::models::{zoo, Dataset};
+use quidam::obs::clock::NullClock;
+use quidam::obs::trace::TraceSink;
+use quidam::pe::PeType;
+use quidam::ppa::{characterize, PpaModels};
+use quidam::server::{http, router, AppState, ServeOptions, Server, ServerHandle};
+use quidam::sweep::SweepCtl;
+use quidam::tech::TechLibrary;
+use quidam::util::json::Json;
+
+fn test_models() -> PpaModels {
+    let tech = TechLibrary::freepdk45();
+    let space = SweepSpace::default();
+    let layers = zoo::resnet_cifar(20, Dataset::Cifar10).layers;
+    let mut m = BTreeMap::new();
+    for pe in PeType::ALL {
+        m.insert(pe, characterize(&space, pe, &layers, 40, &tech, 77));
+    }
+    PpaModels::fit(&m, 2).expect("model fit")
+}
+
+fn models() -> &'static PpaModels {
+    static MODELS: OnceLock<PpaModels> = OnceLock::new();
+    MODELS.get_or_init(test_models)
+}
+
+/// One live server (real monotonic clock) for the traffic tests.
+fn server() -> &'static ServerHandle {
+    static SERVER: OnceLock<ServerHandle> = OnceLock::new();
+    SERVER.get_or_init(|| {
+        let opts = ServeOptions {
+            addr: "127.0.0.1:0".into(),
+            http_threads: 2,
+            sweep_threads: 2,
+            cache_mib: 16,
+            ..Default::default()
+        };
+        Server::bind(models().clone(), opts)
+            .expect("bind ephemeral port")
+            .spawn()
+    })
+}
+
+/// Minimal one-shot HTTP client against the shared server.
+fn http_call(method: &str, path: &str, body: &str) -> (u16, String) {
+    let addr: SocketAddr = server().addr;
+    let mut s = TcpStream::connect(addr).expect("connect");
+    s.set_read_timeout(Some(Duration::from_secs(120))).unwrap();
+    let req = format!(
+        "{method} {path} HTTP/1.1\r\nHost: quidam\r\nContent-Length: \
+         {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+    s.write_all(req.as_bytes()).expect("send request");
+    let mut resp = String::new();
+    s.read_to_string(&mut resp).expect("read response");
+    let status: u16 = resp
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or_else(|| panic!("no status line in: {resp:?}"));
+    let body = resp
+        .split_once("\r\n\r\n")
+        .map(|(_, b)| b.to_string())
+        .unwrap_or_default();
+    (status, body)
+}
+
+/// Drive one raw request through `router::handle` against an arbitrary
+/// (e.g. `NullClock`-frozen) state, bypassing the accept loop.
+fn drive(state: &Arc<AppState>, method: &str, path: &str) -> (u16, String) {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let raw = format!(
+        "{method} {path} HTTP/1.1\r\nHost: quidam\r\nContent-Length: \
+         0\r\nConnection: close\r\n\r\n"
+    );
+    let client = std::thread::spawn(move || {
+        let mut c = TcpStream::connect(addr).unwrap();
+        c.write_all(raw.as_bytes()).unwrap();
+        c.shutdown(std::net::Shutdown::Write).unwrap();
+        let mut resp = String::new();
+        c.read_to_string(&mut resp).unwrap();
+        resp
+    });
+    let (mut conn, _) = listener.accept().unwrap();
+    let req = http::read_request(&mut conn).expect("parse request");
+    let status = router::handle(state, req, &mut conn).expect("handle");
+    drop(conn);
+    let resp = client.join().unwrap();
+    let body = resp
+        .split_once("\r\n\r\n")
+        .map(|(_, b)| b.to_string())
+        .unwrap_or_default();
+    (status, body)
+}
+
+/// Satellite regression: folding the cache counters into the metrics
+/// registry must not move a single byte of the legacy `/v1/stats`
+/// response. Frozen clock, fresh state, no prior traffic -> the whole
+/// document is a constant.
+#[test]
+fn stats_keeps_its_legacy_shape_byte_for_byte() {
+    let state = Arc::new(AppState::with_clock(
+        models().clone(),
+        ServeOptions::default(),
+        Arc::new(NullClock),
+    ));
+    let (status, body) = drive(&state, "GET", "/v1/stats");
+    assert_eq!(status, 200);
+    assert_eq!(
+        body,
+        "{\"compiled_models\":{\"bytes\":0,\"entries\":0,\"evictions\":0,\
+         \"hits\":0,\"misses\":0},\"jobs\":{},\"requests\":0,\"results\":\
+         {\"bytes\":0,\"entries\":0,\"evictions\":0,\"hits\":0,\
+         \"misses\":0},\"uptime_s\":0,\"workloads\":[\"resnet20\",\
+         \"resnet56\",\"vgg16\"]}"
+    );
+}
+
+/// Light structural validation of one Prometheus text document: every
+/// sample line belongs to a family announced by a HELP/TYPE pair above
+/// it, and every value parses as a float (`+Inf` included).
+fn assert_prometheus_parses(text: &str) {
+    let mut announced: Vec<String> = Vec::new();
+    let mut pending_help: Option<String> = None;
+    for line in text.lines() {
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# HELP ") {
+            let name = rest.split(' ').next().unwrap_or("").to_string();
+            pending_help = Some(name);
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let mut it = rest.split(' ');
+            let name = it.next().unwrap_or("").to_string();
+            let kind = it.next().unwrap_or("");
+            assert_eq!(
+                pending_help.take().as_deref(),
+                Some(name.as_str()),
+                "TYPE without immediately preceding HELP: {line}"
+            );
+            assert!(
+                matches!(kind, "counter" | "gauge" | "histogram"),
+                "unknown TYPE {kind} in {line}"
+            );
+            announced.push(name);
+            continue;
+        }
+        assert!(!line.starts_with('#'), "unknown comment form: {line}");
+        let name_end = line
+            .find(|c| c == '{' || c == ' ')
+            .unwrap_or_else(|| panic!("unparseable sample line: {line}"));
+        let name = &line[..name_end];
+        let family_ok = announced.iter().any(|f| {
+            name == f
+                || ["_bucket", "_sum", "_count", "_quantile"]
+                    .iter()
+                    .any(|sfx| name == format!("{f}{sfx}"))
+        });
+        assert!(family_ok, "sample {name} has no HELP/TYPE family: {line}");
+        let value = line.rsplit(' ').next().unwrap_or("");
+        assert!(
+            value.parse::<f64>().is_ok() || value == "+Inf",
+            "unparseable value {value:?} in {line}"
+        );
+    }
+    assert!(!announced.is_empty(), "empty metrics document");
+}
+
+/// End-to-end scrape: drive real traffic through the live server and
+/// assert the families the ISSUE names all exist and advance.
+#[test]
+fn metrics_scrape_is_valid_and_advances_with_traffic() {
+    let (status, before) = http_call("GET", "/metrics", "");
+    assert_eq!(status, 200);
+    assert_prometheus_parses(&before);
+
+    let ppa = r#"{"workload":"resnet20","config":{"pe_type":"int16"}}"#;
+    let (s1, _) = http_call("POST", "/v1/ppa", ppa);
+    assert_eq!(s1, 200);
+    let (s2, _) = http_call("POST", "/v1/ppa", ppa); // result-cache hit
+    assert_eq!(s2, 200);
+    let (s3, _) = http_call("POST", "/v1/ppa", "{not json");
+    assert_eq!(s3, 400);
+
+    let (status, text) = http_call("GET", "/metrics", "");
+    assert_eq!(status, 200);
+    assert_prometheus_parses(&text);
+
+    let sample = |needle: &str| -> f64 {
+        text.lines()
+            .find(|l| l.starts_with(needle))
+            .and_then(|l| l.rsplit(' ').next())
+            .and_then(|v| v.parse().ok())
+            .unwrap_or_else(|| panic!("no sample {needle} in:\n{text}"))
+    };
+    assert!(
+        sample(
+            "quidam_http_requests_total{endpoint=\"/v1/ppa\",\
+             status=\"2xx\"} "
+        ) >= 2.0
+    );
+    assert!(
+        sample(
+            "quidam_http_requests_total{endpoint=\"/v1/ppa\",\
+             status=\"4xx\"} "
+        ) >= 1.0
+    );
+    assert!(
+        sample(
+            "quidam_http_request_duration_seconds_count\
+             {endpoint=\"/v1/ppa\"} "
+        ) >= 3.0
+    );
+    assert!(sample("quidam_cache_hits_total{cache=\"results\"} ") >= 1.0);
+    assert!(sample("quidam_cache_misses_total{cache=\"results\"} ") >= 1.0);
+    assert!(sample("quidam_uptime_seconds ") >= 0.0);
+    // Latency quantile companions (P2 estimators) are exposed.
+    assert!(text.contains(
+        "quidam_http_request_duration_seconds_quantile{endpoint=\
+         \"/v1/ppa\",quantile=\"0.99\"}"
+    ));
+    // The +Inf bucket closes every histogram.
+    assert!(text.contains("le=\"+Inf\""));
+    // Idle families render at zero rather than disappearing.
+    assert!(text.contains("quidam_distrib_shards_dispatched_total"));
+    assert!(text.contains("quidam_sweep_points_total"));
+    assert!(text.contains("quidam_jobs_queue_depth"));
+}
+
+/// Determinism satellite, sweep half: a SweepCtl progress observer (the
+/// hook `quidam_sweep_points_total` hangs off) must not change a single
+/// byte of the summary, and must see every point exactly once.
+#[test]
+fn sweep_observer_leaves_summary_bytes_identical() {
+    let m = models();
+    let net = zoo::resnet_cifar(20, Dataset::Cifar10);
+    let mut space = SweepSpace::default();
+    space.set_axis("rows", vec![8, 12]).unwrap();
+    space.set_axis("cols", vec![8, 14]).unwrap();
+    let eval =
+        |cfg: &quidam::config::AcceleratorConfig| dse::evaluate(m, cfg, &net.layers);
+
+    let plain = dse::stream_space_eval(
+        &space,
+        2,
+        dse::Objective::PerfPerArea,
+        5,
+        &eval,
+        |_p| None,
+        |_row| {},
+        &SweepCtl::new(),
+    );
+
+    let seen = Arc::new(AtomicUsize::new(0));
+    let seen2 = seen.clone();
+    let observed = dse::stream_space_eval(
+        &space,
+        2,
+        dse::Objective::PerfPerArea,
+        5,
+        &eval,
+        |_p| None,
+        |_row| {},
+        &SweepCtl::with_observer(move |n| {
+            seen2.fetch_add(n, Ordering::Relaxed);
+        }),
+    );
+
+    assert_eq!(plain.count, observed.count);
+    assert_eq!(seen.load(Ordering::Relaxed), plain.count);
+    assert_eq!(
+        plain.to_json().to_string(),
+        observed.to_json().to_string(),
+        "observer changed summary bytes"
+    );
+}
+
+/// Determinism satellite, search half: running the same seeded search
+/// with an active JSONL trace sink produces byte-identical fronts and
+/// convergence history, and the trace file itself is parseable JSONL
+/// with parented generation spans.
+#[test]
+fn search_trace_sink_leaves_outputs_byte_identical() {
+    let m = models();
+    let net = zoo::resnet_cifar(20, Dataset::Cifar10);
+    let mut space = SweepSpace::default();
+    space.set_axis("rows", vec![8, 12]).unwrap();
+    space.set_axis("cols", vec![8, 14]).unwrap();
+    let cfg = quidam::search::SearchConfig {
+        algo: quidam::search::Algo::Nsga2,
+        seed: 7,
+        population: 8,
+        generations: 3,
+        objective: dse::Objective::PerfPerArea,
+        top_k: 5,
+        threads: 2,
+        mutation: 0.15,
+        crossover: 0.9,
+    };
+    let eval =
+        |c: &quidam::config::AcceleratorConfig| dse::evaluate(m, c, &net.layers);
+
+    let run = |trace: Option<&Arc<TraceSink>>| {
+        let span = trace.map(|t| t.span("search.run"));
+        quidam::search::run_search(
+            &space,
+            &cfg,
+            &eval,
+            None,
+            &SweepCtl::new(),
+            |stat, _summary| {
+                if let (Some(t), Some(parent)) = (trace, &span) {
+                    let mut g = t.child("search.generation", parent);
+                    g.attr_num("generation", stat.generation as f64);
+                    g.attr_num("evals", stat.evals as f64);
+                }
+            },
+        )
+        .expect("search")
+    };
+
+    let plain = run(None);
+    let path = std::env::temp_dir().join(format!(
+        "quidam_obs_trace_{}.jsonl",
+        std::process::id()
+    ));
+    let sink = TraceSink::to_file(path.to_str().unwrap()).expect("sink");
+    let traced = run(Some(&sink));
+    drop(sink); // flush
+
+    assert_eq!(plain.evals, traced.evals);
+    assert_eq!(plain.history.len(), traced.history.len());
+    for (a, b) in plain.history.iter().zip(&traced.history) {
+        assert_eq!(a.generation, b.generation);
+        assert_eq!(a.evals, b.evals);
+        assert_eq!(a.front_size, b.front_size);
+        assert_eq!(a.hypervolume.to_bits(), b.hypervolume.to_bits());
+    }
+    assert_eq!(
+        plain.summary.to_json().to_string(),
+        traced.summary.to_json().to_string(),
+        "trace sink changed search output bytes"
+    );
+
+    let jsonl = std::fs::read_to_string(&path).expect("trace file");
+    std::fs::remove_file(&path).ok();
+    let mut spans = 0;
+    let mut parented = 0;
+    for line in jsonl.lines() {
+        let j = Json::parse(line).expect("trace line parses");
+        assert!(j.get("name").as_str().is_some(), "span without name: {line}");
+        assert!(j.get("id").as_u64().is_some(), "span without id: {line}");
+        spans += 1;
+        if j.get("parent").as_u64().is_some() {
+            parented += 1;
+        }
+    }
+    // 1 run span + one marker per generation history entry.
+    assert_eq!(spans, 1 + plain.history.len());
+    assert_eq!(parented, plain.history.len());
+}

@@ -299,7 +299,10 @@ fn queued_job_cancels_without_running() {
         (s, Json::parse(&t).unwrap())
     };
     assert_eq!(status, 200);
-    assert_eq!(cancelled.get("state").as_str(), Some("cancelled"));
+    // A cancel landing on a still-queued job gets its own terminal
+    // status (it was previously folded into "cancelled", hiding the
+    // fact that the job never ran).
+    assert_eq!(cancelled.get("state").as_str(), Some("cancelled_queued"));
     assert_eq!(cancelled.get("points_done").as_usize(), Some(0));
     // Clean up the runner-holding job too.
     let _ = http("DELETE", &format!("/v1/jobs/{ida}"), "");

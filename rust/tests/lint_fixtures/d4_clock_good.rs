@@ -1,0 +1,18 @@
+// quidam-lint-fixture: module=obs::clock
+// expect-clean
+
+// The clock boundary itself is the one non-test module allowed to wrap
+// `Instant`; everything else receives time through the `Clock` trait.
+pub struct Mono {
+    epoch: std::time::Instant,
+}
+
+impl Mono {
+    pub fn start() -> Mono {
+        Mono { epoch: std::time::Instant::now() }
+    }
+
+    pub fn now_ns(&self) -> u64 {
+        u64::try_from(self.epoch.elapsed().as_nanos()).unwrap_or(u64::MAX)
+    }
+}

@@ -1,0 +1,19 @@
+// quidam-lint-fixture: module=server::metrics
+// expect: D4 @ 8
+// expect: D4 @ 13
+
+// A module outside the clock boundary grabbing timestamps directly
+// instead of taking them from an injected `obs::clock::Clock`.
+pub fn elapsed_guess() -> u64 {
+    let t0 = std::time::Instant::now();
+    t0.elapsed().as_nanos() as u64
+}
+
+pub fn wall_stamp() -> u64 {
+    match std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+    {
+        Ok(d) => d.as_nanos() as u64,
+        Err(_) => 0,
+    }
+}

@@ -103,8 +103,8 @@ fn load_fixtures() -> Vec<(Fixture, String)> {
 fn fixtures_match_expected_findings() {
     let fixtures = load_fixtures();
     assert!(
-        fixtures.len() >= 13,
-        "fixture corpus shrank: {} files (expected >= 13)",
+        fixtures.len() >= 15,
+        "fixture corpus shrank: {} files (expected >= 15)",
         fixtures.len()
     );
     for (fx, src) in &fixtures {
@@ -139,7 +139,7 @@ fn fixtures_match_expected_findings() {
 #[test]
 fn every_rule_has_firing_and_passing_coverage() {
     let fixtures = load_fixtures();
-    let rules = ["D1", "D2", "D3", "R1", "S1", "SUP"];
+    let rules = ["D1", "D2", "D3", "D4", "R1", "S1", "SUP"];
     for rule in rules {
         let fires = fixtures
             .iter()
