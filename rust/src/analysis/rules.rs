@@ -53,7 +53,20 @@ pub const RULES: &[Rule] = &[
         id: "R1",
         summary: "no unwrap/expect/panicking macros/slice-indexing in \
                   server request paths (bad input maps to 4xx)",
-        scopes: &["server::router", "server::http", "server::jobs"],
+        scopes: &[
+            "server::router",
+            "server::http",
+            "server::jobs",
+            "server::transport",
+        ],
+    },
+    Rule {
+        id: "R2",
+        summary: "handlers and the job manager stay socket-free: they \
+                  take a parsed Request and return Result<Response, \
+                  ApiError>; only the transport touches bytes \
+                  (DESIGN.md §12)",
+        scopes: &["server::router", "server::jobs"],
     },
     Rule {
         id: "S1",
@@ -97,6 +110,7 @@ pub fn check(scan: &FileScan) -> Vec<Diagnostic> {
             "D3" => d3(scan, &mut raw),
             "D4" => d4(scan, &mut raw),
             "R1" => r1(scan, &mut raw),
+            "R2" => r2(scan, &mut raw),
             "S1" => s1(scan, &mut raw),
             _ => {} // SUP is engine-level, below.
         }
@@ -403,6 +417,47 @@ fn r1(scan: &FileScan, out: &mut Vec<Diagnostic>) {
                         .to_string(),
                 ));
             }
+        }
+    }
+}
+
+/// Identifiers R2 bans from handler-layer modules: socket types and the
+/// legacy direct-write helpers the typed Response API replaced. Any of
+/// these appearing in `server::router` or `server::jobs` means a handler
+/// is reaching below the transport boundary again.
+const R2_SOCKET_IDENTS: &[&str] = &[
+    "TcpStream",
+    "TcpListener",
+    "UdpSocket",
+    "write_error",
+    "write_json",
+    "write_raw_json",
+    "write_metrics_text",
+    "start_ndjson",
+];
+
+/// R2: the handler/transport boundary (DESIGN.md §12). Handlers take a
+/// parsed `Request` and return `Result<Response, ApiError>`; only
+/// `server::transport` and `server::http` may hold sockets or render
+/// bytes. Catching the identifiers (rather than just the import) also
+/// flags fully-qualified `std::net::TcpStream` uses.
+fn r2(scan: &FileScan, out: &mut Vec<Diagnostic>) {
+    for k in 0..scan.code.len() {
+        let t = scan.ct(k);
+        if t.kind == Kind::Ident
+            && R2_SOCKET_IDENTS.contains(&t.text.as_str())
+        {
+            out.push(diag(
+                scan,
+                t,
+                "R2",
+                format!(
+                    "`{}` below the transport boundary; handlers return \
+                     `Result<Response, ApiError>` and never touch \
+                     sockets or response bytes",
+                    t.text
+                ),
+            ));
         }
     }
 }

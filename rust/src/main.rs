@@ -24,8 +24,13 @@
 //!                       sweep across remote quidam serve workers and merge
 //!                       the partial fronts; DESIGN.md §7)
 //!   quidam serve        [--addr HOST:PORT] [--http-threads N] [--threads N]
-//!                       [--cache-mib M] [--port-file FILE] (persistent PPA
-//!                       query + exploration service; DESIGN.md §6)
+//!                       [--cache-mib M] [--max-pending N] [--port-file FILE]
+//!                       (persistent PPA query + exploration service;
+//!                       DESIGN.md §6; event-driven transport, keep-alive +
+//!                       admission control: DESIGN.md §12)
+//!   quidam loadgen      [--addr HOST:PORT] [--conns N] [--duration-s S]
+//!                       [--seed N] [--no-keep-alive] [--json] (seeded
+//!                       closed-loop load generator; DESIGN.md §12)
 //!   quidam lint         [PATHS...] [--json] (token-level static analysis
 //!                       enforcing the determinism & robustness contract,
 //!                       DESIGN.md §10; exits non-zero on any finding)
@@ -796,6 +801,260 @@ fn run_coordinate(
     Ok(())
 }
 
+/// Per-worker tallies from one `quidam loadgen` connection loop.
+#[derive(Default)]
+struct LoadTally {
+    /// Wall-clock seconds per completed request, in issue order.
+    latencies_s: Vec<f64>,
+    ok: u64,
+    non2xx: u64,
+    /// Connect/read/write failures (the server or network dropped us).
+    dropped: u64,
+    /// Responses that did not parse as HTTP + JSON.
+    malformed: u64,
+    /// Connections opened (1 per run under keep-alive; ~1 per request
+    /// under `--no-keep-alive`).
+    connects: u64,
+}
+
+enum LoadReadError {
+    Io,
+    Malformed,
+}
+
+/// Read one HTTP/1.1 response (status line, headers, Content-Length
+/// body) off a loadgen connection. Returns the status and whether the
+/// server will keep the connection open.
+fn loadgen_read_response(
+    r: &mut std::io::BufReader<std::net::TcpStream>,
+) -> Result<(u16, bool), LoadReadError> {
+    use std::io::{BufRead, Read};
+    let mut line = String::new();
+    if r.read_line(&mut line).map_err(|_| LoadReadError::Io)? == 0 {
+        return Err(LoadReadError::Io);
+    }
+    let status: u16 = line
+        .split_whitespace()
+        .nth(1)
+        .and_then(|t| t.parse().ok())
+        .ok_or(LoadReadError::Malformed)?;
+    let mut content_length = 0usize;
+    let mut keep = true;
+    loop {
+        let mut h = String::new();
+        if r.read_line(&mut h).map_err(|_| LoadReadError::Io)? == 0 {
+            return Err(LoadReadError::Io);
+        }
+        let t = h.trim();
+        if t.is_empty() {
+            break;
+        }
+        if let Some((name, value)) = t.split_once(':') {
+            if name.eq_ignore_ascii_case("content-length") {
+                content_length = value
+                    .trim()
+                    .parse()
+                    .map_err(|_| LoadReadError::Malformed)?;
+            } else if name.eq_ignore_ascii_case("connection") {
+                keep = !value.trim().eq_ignore_ascii_case("close");
+            }
+        }
+    }
+    let mut body = vec![0u8; content_length];
+    r.read_exact(&mut body).map_err(|_| LoadReadError::Io)?;
+    // Every loadgen target answers JSON; anything else is a framing bug.
+    if content_length > 0 && body.first() != Some(&b'{') {
+        return Err(LoadReadError::Malformed);
+    }
+    Ok((status, keep))
+}
+
+/// One closed-loop loadgen worker: drive a single connection as fast as
+/// the server answers, reconnecting when it closes (or per request under
+/// `--no-keep-alive`).
+fn loadgen_worker(
+    addr: &str,
+    path: &str,
+    keep_alive: bool,
+    rng: &mut quidam::util::rng::Rng,
+    stop: &std::sync::atomic::AtomicBool,
+) -> LoadTally {
+    use std::io::Write as _;
+    use std::sync::atomic::Ordering;
+    use std::time::{Duration, Instant};
+    let mut out = LoadTally::default();
+    let mut conn: Option<std::io::BufReader<std::net::TcpStream>> = None;
+    // A seeded palette of valid configs, wide enough that the server's
+    // result cache cannot absorb the whole run.
+    let pe_types = ["fp32", "int16", "lightpe2", "lightpe1"];
+    let dims = [8usize, 10, 12, 14, 16, 20, 24, 28, 32];
+    while !stop.load(Ordering::Relaxed) {
+        if conn.is_none() {
+            match std::net::TcpStream::connect(addr) {
+                Ok(s) => {
+                    let _ = s.set_nodelay(true);
+                    let _ = s.set_read_timeout(Some(Duration::from_secs(10)));
+                    let _ = s.set_write_timeout(Some(Duration::from_secs(10)));
+                    out.connects += 1;
+                    conn = Some(std::io::BufReader::new(s));
+                }
+                Err(_) => {
+                    out.dropped += 1;
+                    std::thread::sleep(Duration::from_millis(20));
+                    continue;
+                }
+            }
+        }
+        let body = format!(
+            "{{\"workload\":\"resnet20\",\"config\":{{\"pe_type\":\"{}\",\
+             \"rows\":{},\"cols\":{}}}}}",
+            rng.choose(&pe_types),
+            rng.choose(&dims),
+            rng.choose(&dims),
+        );
+        let req = format!(
+            "POST {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Length: {}\r\n\
+             Connection: {}\r\n\r\n{body}",
+            body.len(),
+            if keep_alive { "keep-alive" } else { "close" },
+        );
+        let Some(mut r) = conn.take() else { continue };
+        let t0 = Instant::now();
+        if r.get_mut().write_all(req.as_bytes()).is_err() {
+            out.dropped += 1;
+            continue; // reconnect on the next iteration
+        }
+        match loadgen_read_response(&mut r) {
+            Ok((status, server_keep)) => {
+                out.latencies_s.push(t0.elapsed().as_secs_f64());
+                if (200..300).contains(&status) {
+                    out.ok += 1;
+                } else {
+                    out.non2xx += 1;
+                }
+                if keep_alive && server_keep {
+                    conn = Some(r);
+                }
+            }
+            Err(LoadReadError::Malformed) => out.malformed += 1,
+            Err(LoadReadError::Io) => out.dropped += 1,
+        }
+    }
+    out
+}
+
+/// `quidam loadgen` — seeded closed-loop load generator against a
+/// running `quidam serve` (DESIGN.md §12). Each of `--conns` workers
+/// drives one connection as fast as the server answers, POSTing
+/// randomized-but-reproducible single-config PPA queries. Keep-alive by
+/// default; `--no-keep-alive` reconnects per request, which is the
+/// baseline the transport's reuse win is measured against. Latency
+/// quantiles come from the same P² estimators the server's histograms
+/// use; `--json` emits one machine-readable summary object for CI gates.
+fn run_loadgen(args: &Args) -> anyhow::Result<()> {
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::Arc;
+    use std::time::{Duration, Instant};
+    let addr = args.get_or("addr", "127.0.0.1:8787");
+    let conns = args.parse_pos_usize("conns", 8).map_err(anyhow::Error::msg)?;
+    let duration_s =
+        args.parse_f64("duration-s", 5.0).map_err(anyhow::Error::msg)?;
+    anyhow::ensure!(duration_s > 0.0, "--duration-s must be positive");
+    let seed = num(args, "seed", 42)? as u64;
+    let keep_alive = !args.flag("no-keep-alive");
+    let path = args.get_or("path", "/v1/ppa");
+    let stop = Arc::new(AtomicBool::new(false));
+    let t_start = Instant::now();
+    let mut handles = Vec::new();
+    for w in 0..conns {
+        let stop = stop.clone();
+        let addr = addr.clone();
+        let path = path.clone();
+        // Independent per-worker streams from one seed: same CLI, same
+        // request sequence, run to run.
+        let mut rng = quidam::util::rng::Rng::new(seed).split(w as u64 + 1);
+        handles.push(std::thread::spawn(move || {
+            loadgen_worker(&addr, &path, keep_alive, &mut rng, &stop)
+        }));
+    }
+    std::thread::sleep(Duration::from_secs_f64(duration_s));
+    stop.store(true, Ordering::Relaxed);
+    let mut tallies = Vec::new();
+    for h in handles {
+        tallies.push(
+            h.join().map_err(|_| anyhow::anyhow!("loadgen worker panicked"))?,
+        );
+    }
+    let elapsed = t_start.elapsed().as_secs_f64();
+    let mut p50 = quidam::util::stats::P2Quantile::new(0.50);
+    let mut p90 = quidam::util::stats::P2Quantile::new(0.90);
+    let mut p99 = quidam::util::stats::P2Quantile::new(0.99);
+    let (mut ok, mut non2xx, mut dropped, mut malformed, mut connects) =
+        (0u64, 0u64, 0u64, 0u64, 0u64);
+    for t in &tallies {
+        for &s in &t.latencies_s {
+            p50.observe(s);
+            p90.observe(s);
+            p99.observe(s);
+        }
+        ok += t.ok;
+        non2xx += t.non2xx;
+        dropped += t.dropped;
+        malformed += t.malformed;
+        connects += t.connects;
+    }
+    let requests = ok + non2xx;
+    let rps = if elapsed > 0.0 { requests as f64 / elapsed } else { 0.0 };
+    let ms = |v: f64| if v.is_finite() { v * 1e3 } else { 0.0 };
+    if args.flag("json") {
+        println!(
+            "{}",
+            quidam::util::json::Json::obj(vec![
+                ("addr", quidam::util::json::Json::Str(addr)),
+                ("path", quidam::util::json::Json::Str(path)),
+                ("keep_alive", quidam::util::json::Json::Bool(keep_alive)),
+                ("conns", quidam::util::json::Json::Num(conns as f64)),
+                ("elapsed_s", quidam::util::json::Json::Num(elapsed)),
+                ("requests", quidam::util::json::Json::Num(requests as f64)),
+                ("ok", quidam::util::json::Json::Num(ok as f64)),
+                ("non2xx", quidam::util::json::Json::Num(non2xx as f64)),
+                ("dropped", quidam::util::json::Json::Num(dropped as f64)),
+                (
+                    "malformed",
+                    quidam::util::json::Json::Num(malformed as f64)
+                ),
+                ("connects", quidam::util::json::Json::Num(connects as f64)),
+                ("rps", quidam::util::json::Json::Num(rps)),
+                ("p50_ms", quidam::util::json::Json::Num(ms(p50.value()))),
+                ("p90_ms", quidam::util::json::Json::Num(ms(p90.value()))),
+                ("p99_ms", quidam::util::json::Json::Num(ms(p99.value()))),
+            ])
+        );
+    } else {
+        println!(
+            "quidam loadgen: {requests} requests in {elapsed:.2}s \
+             ({rps:.0} req/s) over {conns} conns to {addr}{path} \
+             [keep-alive: {keep_alive}]"
+        );
+        println!(
+            "  ok {ok}  non-2xx {non2xx}  dropped {dropped}  malformed \
+             {malformed}  connects {connects}"
+        );
+        println!(
+            "  latency p50 {:.2} ms  p90 {:.2} ms  p99 {:.2} ms",
+            ms(p50.value()),
+            ms(p90.value()),
+            ms(p99.value()),
+        );
+    }
+    anyhow::ensure!(
+        requests > 0,
+        "no requests completed — is quidam serve running at {}?",
+        args.get_or("addr", "127.0.0.1:8787")
+    );
+    Ok(())
+}
+
 fn run(sub: &str, args: &Args) -> anyhow::Result<()> {
     let mut coord = Coordinator::default();
     // Restrict the coordinator's sampled space for the co-exploration
@@ -890,6 +1149,12 @@ fn run(sub: &str, args: &Args) -> anyhow::Result<()> {
             let cache_mib = args
                 .parse_pos_usize("cache-mib", 64)
                 .map_err(anyhow::Error::msg)?;
+            let max_pending = args
+                .parse_pos_usize(
+                    "max-pending",
+                    quidam::server::ServeOptions::default().max_pending,
+                )
+                .map_err(anyhow::Error::msg)?;
             // Models load/fit once, before the socket opens: a request
             // must never pay characterization.
             let models = models_for(&coord, args)?;
@@ -898,6 +1163,7 @@ fn run(sub: &str, args: &Args) -> anyhow::Result<()> {
                 http_threads,
                 sweep_threads,
                 cache_mib,
+                max_pending,
                 ..Default::default()
             };
             let server = quidam::server::Server::bind(models, opts)
@@ -914,6 +1180,7 @@ fn run(sub: &str, args: &Args) -> anyhow::Result<()> {
             }
             server.run();
         }
+        "loadgen" => run_loadgen(args)?,
         "figures" => {
             let m = models_for(&coord, args)?;
             print!("{}", figures::fig4(&coord, &m, &out, samples));
@@ -1017,7 +1284,7 @@ fn run(sub: &str, args: &Args) -> anyhow::Result<()> {
         _ => {
             println!(
                 "QUIDAM — quantization-aware DNN accelerator + model co-exploration\n\
-                 usage: quidam <characterize|evaluate|explore|search|coordinate|serve|lint|figures|\n\
+                 usage: quidam <characterize|evaluate|explore|search|coordinate|serve|loadgen|lint|figures|\n\
                  fig4|fig5|fig678|fig9|fig10|fig12|table3|table4|speedup|coexplore|rtl|train|eval-trained>\n\
                  common flags: --models PATH --cfgs N --degree D --samples N --out DIR\n\
                  explore flags: --dense --threads N --top-k K --objective ppa|energy|latency|power\n\
@@ -1034,8 +1301,13 @@ fn run(sub: &str, args: &Args) -> anyhow::Result<()> {
                  coordinate flags: --workers HOST:PORT,... --shards N (+ the explore grid flags;\n\
                  \x20               shards a sweep across remote quidam serve workers, DESIGN.md §7)\n\
                  serve flags:   --addr HOST:PORT --http-threads N --threads N --cache-mib M\n\
-                 \x20               --port-file FILE (endpoint table: DESIGN.md §6; GET /metrics\n\
-                 \x20               Prometheus scrape + QUIDAM_TRACE=FILE spans: DESIGN.md §11)\n\
+                 \x20               --max-pending N --port-file FILE (endpoint table: DESIGN.md §6;\n\
+                 \x20               event-driven keep-alive transport + admission control:\n\
+                 \x20               DESIGN.md §12; GET /metrics Prometheus scrape +\n\
+                 \x20               QUIDAM_TRACE=FILE spans: DESIGN.md §11)\n\
+                 loadgen flags: --addr HOST:PORT --conns N --duration-s S --seed N --path P\n\
+                 \x20               --no-keep-alive --json (closed-loop load generator for the\n\
+                 \x20               serve transport; CI load-smoke gate, DESIGN.md §12)\n\
                  lint:          quidam lint [PATHS...] [--json] (static analysis of the\n\
                  \x20               determinism & robustness contract, DESIGN.md §10)\n\
                  full CLI reference: README.md; design notes: DESIGN.md"

@@ -228,6 +228,19 @@ pub fn probe_worker(addr: &str) -> Result<(), String> {
     }
 }
 
+/// Pull the human-readable `error.message` out of an API error envelope
+/// (`{"error":{"code","kind","message","request_id"}}`); anything that
+/// does not parse as one is passed through untouched, so errors from
+/// older workers or intermediaries stay legible.
+fn error_message(body: &str) -> String {
+    Json::parse(body)
+        .ok()
+        .and_then(|j| {
+            j.get("error").get("message").as_str().map(str::to_string)
+        })
+        .unwrap_or_else(|| body.to_string())
+}
+
 /// The `/v1/shard` request body for one contiguous index range. Every
 /// axis is spelled out explicitly so the worker reconstructs exactly the
 /// coordinator's grid (no reliance on matching defaults).
@@ -271,7 +284,7 @@ fn run_shard(
         let _ = reader.read_to_string(&mut body);
         return Err(format!(
             "{worker}: shard rejected (status {status}): {}",
-            body.trim()
+            error_message(body.trim())
         ));
     }
     let mut line = String::new();

@@ -1,30 +1,41 @@
-//! Minimal HTTP/1.1 over `std::net` for the serving layer — request
-//! parsing with hard limits, plain and streamed (NDJSON) responses.
+//! HTTP/1.1 wire layer for the serving stack — incremental request
+//! parsing with hard limits, the typed [`Response`]/[`ApiError`] surface
+//! handlers speak, and the response writers only the transport calls.
 //!
-//! Deliberately small: no keep-alive (every response carries
-//! `Connection: close`, and streamed bodies are delimited by the close),
-//! no chunked request bodies, no TLS. The goal is a dependency-free
-//! surface that `curl` and any HTTP client can speak, not a general web
-//! server (DESIGN.md §6).
+//! This module is the single place where handler results become bytes
+//! (DESIGN.md §12). Handlers never see a socket: they take a parsed
+//! [`Request`] and return `Result<Response, ApiError>`; lint rule R2
+//! keeps it that way. The parser is a pure function over a connection's
+//! receive buffer so the event loop can feed it incrementally —
+//! keep-alive and pipelining fall out of `Parse::Complete` reporting how
+//! many bytes it consumed. Still deliberately small: no chunked request
+//! bodies, no TLS, no HTTP/2.
 
-use std::io::{BufRead, BufReader, Read, Write};
+use std::io::Write;
 use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
 
+use crate::sweep::SweepCtl;
 use crate::util::json::Json;
 
 /// Upper bound on the request head (request line + headers).
-const MAX_HEAD_BYTES: usize = 16 * 1024;
+pub(crate) const MAX_HEAD_BYTES: usize = 16 * 1024;
 /// Upper bound on a request body (sweep specs are small JSON).
-const MAX_BODY_BYTES: usize = 4 * 1024 * 1024;
+pub(crate) const MAX_BODY_BYTES: usize = 4 * 1024 * 1024;
 
 /// A parsed request: method, path (query string stripped off into
-/// `query`), and the raw body bytes.
+/// `query`), the raw body bytes, and whether the connection should be
+/// kept open after the response (HTTP/1.1 default, overridable with a
+/// `Connection` header either way).
 #[derive(Debug)]
 pub struct Request {
     pub method: String,
     pub path: String,
     pub query: String,
     pub body: Vec<u8>,
+    pub keep_alive: bool,
 }
 
 impl Request {
@@ -39,88 +50,206 @@ impl Request {
     }
 }
 
-/// Read and parse one request from the stream. Returns `Err` with a
-/// human-readable reason on malformed or over-limit input (the caller
-/// answers 400 and closes).
-pub fn read_request(stream: &mut TcpStream) -> Result<Request, String> {
-    // `Take` bounds how many bytes the head phase may pull off the socket
-    // — `read_line` would otherwise buffer an endless newline-free line
-    // into memory before any length check could run. The limit is raised
-    // to the (already-validated) body length once the headers end.
-    let mut reader =
-        BufReader::new(Read::take(&mut *stream, MAX_HEAD_BYTES as u64));
-    let mut head = String::new();
-    // Request line.
-    let mut line = String::new();
-    reader
-        .read_line(&mut line)
-        .map_err(|e| format!("reading request line: {e}"))?;
-    if line.is_empty() {
-        return Err("empty request".into());
+/// A typed handler error, rendered by the transport as the uniform
+/// envelope `{"error":{"code","kind","message","request_id"}}`. The
+/// `kind` is a closed machine-readable vocabulary; `message` stays
+/// human-readable (and carries the same texts the plain bodies used to).
+#[derive(Debug, Clone)]
+pub struct ApiError {
+    pub code: u16,
+    pub kind: &'static str,
+    pub message: String,
+}
+
+impl ApiError {
+    fn new(code: u16, kind: &'static str, message: impl Into<String>) -> ApiError {
+        ApiError { code, kind, message: message.into() }
     }
+
+    /// 400 — malformed request line, body, or parameters.
+    pub fn bad_request(message: impl Into<String>) -> ApiError {
+        ApiError::new(400, "bad_request", message)
+    }
+
+    /// 404 — no such route or resource.
+    pub fn not_found(message: impl Into<String>) -> ApiError {
+        ApiError::new(404, "not_found", message)
+    }
+
+    /// 405 — the route exists but not for this method.
+    pub fn method_not_allowed(message: impl Into<String>) -> ApiError {
+        ApiError::new(405, "method_not_allowed", message)
+    }
+
+    /// 408 — the client held a connection without completing a request
+    /// within the read deadline (slowloris guard).
+    pub fn timeout(message: impl Into<String>) -> ApiError {
+        ApiError::new(408, "timeout", message)
+    }
+
+    /// 413 — head or body over the hard size limits, or a sync sweep
+    /// above the synchronous point bound.
+    pub fn too_large(message: impl Into<String>) -> ApiError {
+        ApiError::new(413, "too_large", message)
+    }
+
+    /// 429 — admission control shed the request (pending budget full or
+    /// job queue full).
+    pub fn overloaded(message: impl Into<String>) -> ApiError {
+        ApiError::new(429, "overloaded", message)
+    }
+
+    /// 500 — handler invariant violation.
+    pub fn internal(message: impl Into<String>) -> ApiError {
+        ApiError::new(500, "internal", message)
+    }
+
+    /// Render the uniform error envelope for this error.
+    pub fn envelope(&self, request_id: u64) -> Json {
+        Json::obj(vec![(
+            "error",
+            Json::obj(vec![
+                ("code", Json::Num(f64::from(self.code))),
+                ("kind", Json::Str(self.kind.to_string())),
+                ("message", Json::Str(self.message.clone())),
+                ("request_id", Json::Num(request_id as f64)),
+            ]),
+        )])
+    }
+}
+
+/// Outcome of [`parse_request`] over a connection's receive buffer.
+pub enum Parse {
+    /// Not enough bytes yet; keep the buffer and wait for more.
+    Partial,
+    /// One full request, consuming the given prefix of the buffer. Any
+    /// remainder is the start of a pipelined follow-up request.
+    Complete(Request, usize),
+    /// The prefix can never become a valid in-limit request; answer with
+    /// the error and close.
+    Error(ApiError),
+}
+
+/// Locate the end of the head: the byte index just past the first blank
+/// line (`\r\n\r\n`, tolerating bare `\n` line endings).
+fn find_head_end(buf: &[u8]) -> Option<usize> {
+    let mut i = 0;
+    while let Some(j) = buf.get(i..).and_then(|s| s.iter().position(|&b| b == b'\n')) {
+        let at = i + j;
+        match (buf.get(at + 1), buf.get(at + 2)) {
+            (Some(b'\n'), _) => return Some(at + 2),
+            (Some(b'\r'), Some(b'\n')) => return Some(at + 3),
+            _ => {}
+        }
+        i = at + 1;
+    }
+    None
+}
+
+/// Incrementally parse one request from the front of `buf`. Pure: the
+/// transport owns the buffer and drains the consumed prefix itself on
+/// [`Parse::Complete`], which is what makes pipelining work.
+pub fn parse_request(buf: &[u8]) -> Parse {
+    let Some(head_len) = find_head_end(buf) else {
+        // No blank line yet. A head that exceeds the limit without
+        // terminating can never become valid — reject the flood now
+        // instead of buffering it indefinitely.
+        if buf.len() > MAX_HEAD_BYTES {
+            return Parse::Error(ApiError::too_large("request head exceeds 16 KiB"));
+        }
+        return Parse::Partial;
+    };
+    if head_len > MAX_HEAD_BYTES {
+        return Parse::Error(ApiError::too_large("request head exceeds 16 KiB"));
+    }
+    let head = match buf.get(..head_len).map(std::str::from_utf8) {
+        Some(Ok(h)) => h,
+        _ => return Parse::Error(ApiError::bad_request("request head is not valid UTF-8")),
+    };
+    let mut lines = head.lines();
+    let line = lines.next().unwrap_or("");
     let mut parts = line.split_whitespace();
     let method = parts.next().unwrap_or("").to_ascii_uppercase();
     let target = parts.next().unwrap_or("").to_string();
     let version = parts.next().unwrap_or("");
-    if method.is_empty() || target.is_empty() || !version.starts_with("HTTP/1")
-    {
-        return Err(format!("malformed request line: {}", line.trim_end()));
+    if method.is_empty() || target.is_empty() || !version.starts_with("HTTP/1") {
+        return Parse::Error(ApiError::bad_request(format!(
+            "malformed request line: {}",
+            line.trim_end()
+        )));
     }
-    // Headers (we only act on Content-Length).
+    // Headers: we act on Content-Length and Connection only.
     let mut content_length: usize = 0;
-    loop {
-        let mut h = String::new();
-        let n = reader
-            .read_line(&mut h)
-            .map_err(|e| format!("reading headers: {e}"))?;
-        if n == 0 {
-            // EOF before the blank line: either the 16 KiB head limit
-            // was exhausted mid-headers (must NOT be treated as
-            // end-of-headers — the remnant would be misread as body) or
-            // the client hung up.
-            return Err(if reader.get_ref().limit() == 0 {
-                "request head exceeds 16 KiB".into()
-            } else {
-                "unexpected end of request head".to_string()
-            });
-        }
-        if h == "\r\n" || h == "\n" {
-            break;
-        }
-        head.push_str(&h);
-        if head.len() > MAX_HEAD_BYTES {
-            return Err("request head exceeds 16 KiB".into());
-        }
-        if let Some((name, value)) = h.split_once(':') {
-            if name.trim().eq_ignore_ascii_case("content-length") {
-                content_length = value
-                    .trim()
-                    .parse()
-                    .map_err(|_| "bad Content-Length".to_string())?;
-            }
+    let mut connection: Option<String> = None;
+    for h in lines {
+        let Some((name, value)) = h.split_once(':') else { continue };
+        let name = name.trim();
+        if name.eq_ignore_ascii_case("content-length") {
+            content_length = match value.trim().parse() {
+                Ok(n) => n,
+                Err(_) => return Parse::Error(ApiError::bad_request("bad Content-Length")),
+            };
+        } else if name.eq_ignore_ascii_case("connection") {
+            connection = Some(value.trim().to_ascii_lowercase());
         }
     }
     if content_length > MAX_BODY_BYTES {
-        return Err("request body exceeds 4 MiB".into());
+        return Parse::Error(ApiError::too_large("request body exceeds 4 MiB"));
     }
-    let mut body = vec![0u8; content_length];
-    if content_length > 0 {
-        // Body bytes already buffered by the reader were counted against
-        // the head limit; raising the limit here only governs what is
-        // still to be read from the socket.
-        reader.get_mut().set_limit(content_length as u64);
-        reader
-            .read_exact(&mut body)
-            .map_err(|e| format!("reading body: {e}"))?;
+    let total = head_len + content_length;
+    if buf.len() < total {
+        return Parse::Partial;
     }
+    let body = buf.get(head_len..total).map(<[u8]>::to_vec).unwrap_or_default();
+    let keep_alive = match connection.as_deref() {
+        Some(v) if v.contains("close") => false,
+        Some(v) if v.contains("keep-alive") => true,
+        _ => version.trim_end() == "HTTP/1.1",
+    };
     let (path, query) = match target.split_once('?') {
         Some((p, q)) => (p.to_string(), q.to_string()),
         None => (target, String::new()),
     };
-    Ok(Request { method, path, query, body })
+    Parse::Complete(Request { method, path, query, body, keep_alive }, total)
 }
 
-/// Reason phrases for the handful of statuses the router uses.
+/// What a handler returns on success. Only the transport turns these
+/// into bytes; success bodies are byte-identical to the pre-redesign
+/// server (headers differ only in `Connection`).
+pub enum Response {
+    /// JSON document, serialized at write time.
+    Json { status: u16, body: Json },
+    /// Pre-rendered JSON (the result cache stores rendered responses, so
+    /// a cache hit costs zero re-serialization).
+    RawJson { status: u16, body: Arc<String> },
+    /// Prometheus text exposition (`GET /metrics`).
+    MetricsText(String),
+    /// NDJSON stream: the closure emits records on the sink; the body is
+    /// delimited by connection close (streams never keep-alive).
+    Ndjson(StreamBody),
+}
+
+/// Deferred NDJSON body — runs on the transport's worker thread with the
+/// socket behind the sink.
+pub type StreamBody = Box<dyn FnOnce(&mut NdjsonSink<'_>) -> std::io::Result<()> + Send>;
+
+impl Response {
+    pub fn json(status: u16, body: Json) -> Response {
+        Response::Json { status, body }
+    }
+
+    pub fn raw_json(status: u16, body: Arc<String>) -> Response {
+        Response::RawJson { status, body }
+    }
+
+    pub fn stream(
+        f: impl FnOnce(&mut NdjsonSink<'_>) -> std::io::Result<()> + Send + 'static,
+    ) -> Response {
+        Response::Ndjson(Box::new(f))
+    }
+}
+
+/// Reason phrases for the handful of statuses the API uses.
 fn reason(status: u16) -> &'static str {
     match status {
         200 => "OK",
@@ -128,6 +257,7 @@ fn reason(status: u16) -> &'static str {
         400 => "Bad Request",
         404 => "Not Found",
         405 => "Method Not Allowed",
+        408 => "Request Timeout",
         409 => "Conflict",
         413 => "Payload Too Large",
         429 => "Too Many Requests",
@@ -136,9 +266,10 @@ fn reason(status: u16) -> &'static str {
     }
 }
 
-fn head(status: u16, content_type: &str, length: Option<usize>) -> String {
+fn head(status: u16, content_type: &str, length: Option<usize>, keep_alive: bool) -> String {
+    let conn = if keep_alive { "keep-alive" } else { "close" };
     let mut h = format!(
-        "HTTP/1.1 {status} {}\r\nConnection: close\r\nContent-Type: \
+        "HTTP/1.1 {status} {}\r\nConnection: {conn}\r\nContent-Type: \
          {content_type}\r\n",
         reason(status)
     );
@@ -149,113 +280,215 @@ fn head(status: u16, content_type: &str, length: Option<usize>) -> String {
     h
 }
 
-/// Write a complete JSON response (status + body) and flush. Returns the
-/// status written so handlers can report it for the request metrics.
-pub fn write_json(
-    stream: &mut TcpStream,
-    status: u16,
-    body: &Json,
-) -> std::io::Result<u16> {
-    write_body(stream, status, "application/json", body.to_string().as_bytes())
-}
-
-/// Write a pre-rendered JSON body — the result cache stores rendered
-/// responses, so a cache hit costs zero re-serialization.
-pub fn write_raw_json(
-    stream: &mut TcpStream,
-    status: u16,
-    body: &str,
-) -> std::io::Result<u16> {
-    write_body(stream, status, "application/json", body.as_bytes())
-}
-
-/// Write a Prometheus text-exposition body (`GET /metrics`).
-pub fn write_metrics_text(
-    stream: &mut TcpStream,
-    body: &str,
-) -> std::io::Result<u16> {
-    write_body(
-        stream,
-        200,
-        "text/plain; version=0.0.4; charset=utf-8",
-        body.as_bytes(),
-    )
-}
-
 fn write_body(
     stream: &mut TcpStream,
     status: u16,
     content_type: &str,
     body: &[u8],
+    keep_alive: bool,
 ) -> std::io::Result<u16> {
-    stream.write_all(head(status, content_type, Some(body.len())).as_bytes())?;
+    stream.write_all(head(status, content_type, Some(body.len()), keep_alive).as_bytes())?;
     stream.write_all(body)?;
     stream.flush()?;
     Ok(status)
 }
 
-/// Write a JSON error envelope: `{"error": msg}`.
-pub fn write_error(
+/// Write a handler's [`Response`]. Returns `(status, kept_alive)`:
+/// NDJSON streams are delimited by close so they never keep the
+/// connection, everything else honors `keep_alive`.
+pub fn write_response(
     stream: &mut TcpStream,
-    status: u16,
-    msg: &str,
+    resp: Response,
+    keep_alive: bool,
+) -> std::io::Result<(u16, bool)> {
+    match resp {
+        Response::Json { status, body } => {
+            let s = write_body(
+                stream,
+                status,
+                "application/json",
+                body.to_string().as_bytes(),
+                keep_alive,
+            )?;
+            Ok((s, keep_alive))
+        }
+        Response::RawJson { status, body } => {
+            let s = write_body(stream, status, "application/json", body.as_bytes(), keep_alive)?;
+            Ok((s, keep_alive))
+        }
+        Response::MetricsText(text) => {
+            let s = write_body(
+                stream,
+                200,
+                "text/plain; version=0.0.4; charset=utf-8",
+                text.as_bytes(),
+                keep_alive,
+            )?;
+            Ok((s, keep_alive))
+        }
+        Response::Ndjson(f) => {
+            stream.write_all(head(200, "application/x-ndjson", None, false).as_bytes())?;
+            let mut sink = NdjsonSink { stream };
+            f(&mut sink)?;
+            stream.flush()?;
+            Ok((200, false))
+        }
+    }
+}
+
+/// Write an [`ApiError`] as the uniform envelope. Returns the status for
+/// the request metrics.
+pub fn write_api_error(
+    stream: &mut TcpStream,
+    err: &ApiError,
+    request_id: u64,
+    keep_alive: bool,
 ) -> std::io::Result<u16> {
-    write_json(
+    write_body(
         stream,
-        status,
-        &Json::obj(vec![("error", Json::Str(msg.to_string()))]),
+        err.code,
+        "application/json",
+        err.envelope(request_id).to_string().as_bytes(),
+        keep_alive,
     )
 }
 
-/// Start an NDJSON streaming response: writes the head and hands the
-/// caller the raw stream to emit records on (`report::ndjson`); the body
-/// is delimited by connection close.
-pub fn start_ndjson(stream: &mut TcpStream) -> std::io::Result<()> {
-    stream.write_all(head(200, "application/x-ndjson", None).as_bytes())
+/// The handle an NDJSON-streaming handler writes records through. Wraps
+/// the socket so handlers stay byte-free (R2): the only operations are
+/// emitting records and hooking up disconnect detection.
+pub struct NdjsonSink<'a> {
+    stream: &'a mut TcpStream,
+}
+
+impl NdjsonSink<'_> {
+    /// Emit one NDJSON record.
+    pub fn emit(&mut self, j: &Json) -> std::io::Result<()> {
+        crate::report::ndjson(self.stream, j)
+    }
+
+    /// Emit one pre-rendered line (no added serialization).
+    pub fn line(&mut self, line: &str) -> std::io::Result<()> {
+        self.stream.write_all(line.as_bytes())?;
+        self.stream.write_all(b"\n")
+    }
+
+    pub fn flush(&mut self) -> std::io::Result<()> {
+        self.stream.flush()
+    }
+
+    /// Abort the given sweep when the client vanishes mid-stream.
+    pub fn watch_disconnect(&mut self, ctl: Arc<SweepCtl>) -> DisconnectWatch {
+        DisconnectWatch::spawn(self.stream, ctl)
+    }
+}
+
+/// Abort a streaming sweep when its client vanishes. Without this, a
+/// request with `points: false` (or a client that hangs up early) would
+/// compute the entire grid into a dead socket: no writes happen during
+/// the sweep, so no write error can surface. A cloned socket handle
+/// polls for EOF/reset with a short read timeout and flips the shared
+/// [`SweepCtl`], stopping the engine within one block per worker. Only
+/// the socket's *read* timeout is touched (it is shared with the
+/// original handle, which never reads again after request parsing —
+/// NDJSON streams are `Connection: close`, so no pipelined follow-up
+/// can arrive on this socket either).
+pub struct DisconnectWatch {
+    stop: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl DisconnectWatch {
+    pub(crate) fn spawn(conn: &TcpStream, ctl: Arc<SweepCtl>) -> DisconnectWatch {
+        let stop = Arc::new(AtomicBool::new(false));
+        let handle = conn.try_clone().ok().map(|mut clone| {
+            let stop = stop.clone();
+            std::thread::spawn(move || {
+                use std::io::Read as _;
+                let _ = clone.set_read_timeout(Some(Duration::from_millis(50)));
+                // Read-and-discard rather than peek: the request was
+                // fully consumed and streamed responses are one-shot
+                // (Connection: close), so any bytes still arriving are
+                // stray — draining them lets a later FIN surface as
+                // Ok(0) instead of hiding behind buffered data. A
+                // half-close (client shutdown of its write side while
+                // still reading) is deliberately treated as disconnect,
+                // like most streaming servers do.
+                let mut scratch = [0u8; 256];
+                while !stop.load(Ordering::Relaxed) {
+                    match clone.read(&mut scratch) {
+                        // Orderly close from the client: abort the sweep.
+                        Ok(0) => {
+                            ctl.cancel();
+                            return;
+                        }
+                        // Stray bytes drained — still connected.
+                        Ok(_) => {}
+                        Err(e)
+                            if matches!(
+                                e.kind(),
+                                std::io::ErrorKind::WouldBlock
+                                    | std::io::ErrorKind::TimedOut
+                            ) => {}
+                        // Reset / abort: the client is gone.
+                        Err(_) => {
+                            ctl.cancel();
+                            return;
+                        }
+                    }
+                }
+            })
+        });
+        DisconnectWatch { stop, handle }
+    }
+}
+
+impl Drop for DisconnectWatch {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::net::{TcpListener, TcpStream};
 
-    /// Round-trip helper: spawn a listener, feed it `raw`, parse.
-    fn parse_raw(raw: &[u8]) -> Result<Request, String> {
-        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
-        let addr = listener.local_addr().unwrap();
-        let raw = raw.to_vec();
-        let client = std::thread::spawn(move || {
-            let mut s = TcpStream::connect(addr).unwrap();
-            s.write_all(&raw).unwrap();
-            // Keep the stream open until the server side is done parsing.
-            let mut buf = [0u8; 1];
-            let _ = s.read(&mut buf);
-        });
-        let (mut conn, _) = listener.accept().unwrap();
-        let req = read_request(&mut conn);
-        let _ = conn.write_all(b"x");
-        client.join().unwrap();
-        req
+    fn complete(raw: &[u8]) -> (Request, usize) {
+        match parse_request(raw) {
+            Parse::Complete(req, n) => (req, n),
+            Parse::Partial => panic!("unexpected Partial"),
+            Parse::Error(e) => panic!("unexpected error: {} {}", e.code, e.message),
+        }
+    }
+
+    fn error(raw: &[u8]) -> ApiError {
+        match parse_request(raw) {
+            Parse::Error(e) => e,
+            _ => panic!("expected parse error"),
+        }
     }
 
     #[test]
     fn parses_post_with_body_and_query() {
-        let req = parse_raw(
-            b"POST /v1/ppa?x=1 HTTP/1.1\r\nHost: h\r\nContent-Length: 9\r\n\
-              \r\n{\"a\":1}\r\n",
-        )
-        .unwrap();
+        let raw =
+            b"POST /v1/ppa?x=1 HTTP/1.1\r\nHost: h\r\nContent-Length: 9\r\n\r\n{\"a\":1}\r\n";
+        let (req, consumed) = complete(raw);
+        assert_eq!(consumed, raw.len());
         assert_eq!(req.method, "POST");
         assert_eq!(req.path, "/v1/ppa");
         assert_eq!(req.query, "x=1");
         assert_eq!(req.body.len(), 9);
+        assert!(req.keep_alive, "HTTP/1.1 defaults to keep-alive");
         let j = req.json().unwrap();
         assert_eq!(j.get("a").as_usize(), Some(1));
     }
 
     #[test]
     fn parses_get_without_body() {
-        let req = parse_raw(b"GET /v1/stats HTTP/1.1\r\n\r\n").unwrap();
+        let (req, consumed) = complete(b"GET /v1/stats HTTP/1.1\r\n\r\n");
+        assert_eq!(consumed, 26);
         assert_eq!(req.method, "GET");
         assert_eq!(req.path, "/v1/stats");
         assert!(req.body.is_empty());
@@ -265,35 +498,127 @@ mod tests {
     }
 
     #[test]
+    fn keep_alive_follows_version_and_connection_header() {
+        let (req, _) = complete(b"GET / HTTP/1.0\r\n\r\n");
+        assert!(!req.keep_alive, "HTTP/1.0 defaults to close");
+        let (req, _) = complete(b"GET / HTTP/1.0\r\nConnection: keep-alive\r\n\r\n");
+        assert!(req.keep_alive);
+        let (req, _) = complete(b"GET / HTTP/1.1\r\nConnection: close\r\n\r\n");
+        assert!(!req.keep_alive);
+    }
+
+    #[test]
+    fn partial_requests_wait_for_more_bytes() {
+        assert!(matches!(parse_request(b""), Parse::Partial));
+        assert!(matches!(parse_request(b"POST /v1/ppa HT"), Parse::Partial));
+        assert!(matches!(
+            parse_request(b"POST / HTTP/1.1\r\nContent-Length: 5\r\n\r\n{a"),
+            Parse::Partial
+        ));
+    }
+
+    #[test]
+    fn pipelined_requests_consume_only_their_prefix() {
+        let raw = b"GET /healthz HTTP/1.1\r\n\r\nGET /v1/stats HTTP/1.1\r\n\r\n";
+        let (req, consumed) = complete(raw);
+        assert_eq!(req.path, "/healthz");
+        let (req2, consumed2) = complete(&raw[consumed..]);
+        assert_eq!(req2.path, "/v1/stats");
+        assert_eq!(consumed + consumed2, raw.len());
+    }
+
+    #[test]
     fn rejects_malformed_and_oversized() {
-        assert!(parse_raw(b"NOT-HTTP\r\n\r\n").is_err());
-        assert!(parse_raw(b"GET / FTP/9\r\n\r\n").is_err());
-        assert!(
-            parse_raw(b"POST / HTTP/1.1\r\nContent-Length: nope\r\n\r\n")
-                .is_err()
+        assert_eq!(error(b"NOT-HTTP\r\n\r\n").code, 400);
+        assert_eq!(error(b"GET / FTP/9\r\n\r\n").code, 400);
+        assert_eq!(
+            error(b"POST / HTTP/1.1\r\nContent-Length: nope\r\n\r\n").code,
+            400
         );
         let huge = format!(
             "POST / HTTP/1.1\r\nContent-Length: {}\r\n\r\n",
             super::MAX_BODY_BYTES + 1
         );
-        assert!(parse_raw(huge.as_bytes()).is_err());
+        let e = error(huge.as_bytes());
+        assert_eq!(e.code, 413);
+        assert!(e.message.contains("4 MiB"), "{}", e.message);
     }
 
     #[test]
     fn newline_free_flood_is_bounded_and_rejected() {
-        // A head with no newline must fail at the 16 KiB take-limit, not
-        // buffer the whole stream into memory.
+        // A head with no newline must fail once past the 16 KiB limit —
+        // never buffer the stream hoping for a terminator.
+        let raw = vec![b'A'; super::MAX_HEAD_BYTES + 1024];
+        let e = error(&raw);
+        assert_eq!(e.code, 413);
+        // Below the limit it is merely incomplete.
+        assert!(matches!(parse_request(&raw[..1024]), Parse::Partial));
+        // A terminated-but-oversized head is rejected too.
         let mut raw = vec![b'A'; super::MAX_HEAD_BYTES + 1024];
         raw.extend_from_slice(b"\r\n\r\n");
-        assert!(parse_raw(&raw).is_err());
+        assert_eq!(error(&raw).code, 413);
     }
 
     #[test]
     fn json_body_errors_are_descriptive() {
-        let req =
-            parse_raw(b"POST / HTTP/1.1\r\nContent-Length: 4\r\n\r\n{oop")
-                .unwrap();
+        let (req, _) = complete(b"POST / HTTP/1.1\r\nContent-Length: 4\r\n\r\n{oop");
         let e = req.json().unwrap_err();
         assert!(e.contains("invalid JSON"), "{e}");
+    }
+
+    fn wait_for(pred: impl Fn() -> bool, what: &str) {
+        let t0 = std::time::Instant::now();
+        while !pred() {
+            assert!(
+                t0.elapsed() < Duration::from_secs(5),
+                "timed out waiting for {what}"
+            );
+            std::thread::sleep(Duration::from_millis(10));
+        }
+    }
+
+    /// Regression (ISSUE 4 satellite): a client that hangs up mid-stream
+    /// must abort the sweep via SweepCtl — previously a `points: false`
+    /// sweep computed the full grid into a dead socket.
+    #[test]
+    fn disconnect_watch_cancels_when_client_closes() {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = TcpStream::connect(addr).unwrap();
+        let (server_conn, _) = listener.accept().unwrap();
+        let ctl = Arc::new(SweepCtl::new());
+        let _watch = DisconnectWatch::spawn(&server_conn, ctl.clone());
+        // Alive client: no cancellation.
+        std::thread::sleep(Duration::from_millis(150));
+        assert!(!ctl.is_cancelled(), "watchdog fired on a live client");
+        drop(client);
+        wait_for(|| ctl.is_cancelled(), "cancel after client close");
+    }
+
+    /// Dropping the watch stops its thread without cancelling — the
+    /// normal end-of-response path must not poison the ctl.
+    #[test]
+    fn disconnect_watch_stop_does_not_cancel() {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let _client = TcpStream::connect(addr).unwrap();
+        let (server_conn, _) = listener.accept().unwrap();
+        let ctl = Arc::new(SweepCtl::new());
+        let watch = DisconnectWatch::spawn(&server_conn, ctl.clone());
+        drop(watch);
+        assert!(!ctl.is_cancelled());
+    }
+
+    #[test]
+    fn error_envelope_has_the_contract_shape() {
+        let env = ApiError::bad_request("nope").envelope(7);
+        assert_eq!(
+            env.to_string(),
+            r#"{"error":{"code":400,"kind":"bad_request","message":"nope","request_id":7}}"#
+        );
+        let e = ApiError::overloaded("busy");
+        assert_eq!((e.code, e.kind), (429, "overloaded"));
+        let e = ApiError::timeout("slow");
+        assert_eq!((e.code, e.kind), (408, "timeout"));
     }
 }

@@ -447,6 +447,31 @@ impl JobManager {
         Some((job, was_queued))
     }
 
+    /// Graceful-drain support (DESIGN.md §12): flush every still-queued
+    /// job to `cancelled_queued` and cooperatively cancel running ones so
+    /// the runner can exit promptly. Returns how many queued jobs were
+    /// flushed (the caller counts them into the drain metrics).
+    pub fn drain(&self) -> usize {
+        let mut flushed = 0;
+        {
+            let mut q = super::lock(&self.queue);
+            while let Some(job) = q.pop_front() {
+                job.ctl.cancel();
+                let mut st = super::lock(&job.state);
+                if *st == JobState::Queued {
+                    *st = JobState::CancelledQueued;
+                    flushed += 1;
+                }
+            }
+        }
+        for job in super::lock(&self.jobs).values() {
+            if job.state() == JobState::Running {
+                job.ctl.cancel();
+            }
+        }
+        flushed
+    }
+
     /// Jobs not yet terminal (queued + running) — the queue-depth gauge.
     pub fn active_count(&self) -> usize {
         super::lock(&self.jobs)

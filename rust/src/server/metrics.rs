@@ -18,6 +18,11 @@
 //! | `quidam_search_generations_total`, `quidam_search_evals_total` | counter | — |
 //! | `quidam_search_hypervolume`               | gauge     | — |
 //! | `quidam_distrib_shards_dispatched_total`, `quidam_distrib_shard_retries_total`, `quidam_distrib_dead_workers_total` | counter | — |
+//! | `quidam_http_sheds_total`                 | counter   | — |
+//! | `quidam_http_keepalive_reuses_total`      | counter   | — |
+//! | `quidam_http_read_timeouts_total`         | counter   | — |
+//! | `quidam_http_open_connections`            | gauge     | — |
+//! | `quidam_server_drains_total`              | counter   | — |
 //! | `quidam_uptime_seconds`                   | gauge     | — |
 //!
 //! The cache counters are the *same cells* `/v1/stats` reports (handed
@@ -73,6 +78,12 @@ pub struct ServerMetrics {
     pub search_hypervolume: Arc<Gauge>,
     // Distributed dispatch.
     pub distrib: DistCounters,
+    // Transport (event loop + admission control, DESIGN.md §12).
+    pub http_sheds: Arc<Counter>,
+    pub http_keepalive_reuses: Arc<Counter>,
+    pub http_read_timeouts: Arc<Counter>,
+    pub http_open_connections: Arc<Gauge>,
+    pub server_drains: Arc<Counter>,
 }
 
 impl Default for ServerMetrics {
@@ -203,6 +214,31 @@ impl ServerMetrics {
                     &[],
                 ),
             },
+            http_sheds: r.counter(
+                "quidam_http_sheds_total",
+                "Requests shed with 429 by admission control",
+                &[],
+            ),
+            http_keepalive_reuses: r.counter(
+                "quidam_http_keepalive_reuses_total",
+                "Requests served on an already-used keep-alive connection",
+                &[],
+            ),
+            http_read_timeouts: r.counter(
+                "quidam_http_read_timeouts_total",
+                "Connections expired with 408 before completing a request",
+                &[],
+            ),
+            http_open_connections: r.gauge(
+                "quidam_http_open_connections",
+                "Currently open client connections",
+                &[],
+            ),
+            server_drains: r.counter(
+                "quidam_server_drains_total",
+                "Graceful drains begun (SIGTERM or drain request)",
+                &[],
+            ),
             registry: r,
         }
     }
@@ -316,6 +352,26 @@ mod tests {
         );
         // One HELP/TYPE header for the family, not one per child.
         assert_eq!(text.matches("# TYPE quidam_cache_hits_total ").count(), 1);
+    }
+
+    #[test]
+    fn transport_families_render() {
+        let m = ServerMetrics::new();
+        m.http_sheds.inc();
+        m.http_keepalive_reuses.add(2);
+        m.http_read_timeouts.inc();
+        m.http_open_connections.set(3.0);
+        m.server_drains.inc();
+        let text = m.registry.render();
+        for want in [
+            "quidam_http_sheds_total 1",
+            "quidam_http_keepalive_reuses_total 2",
+            "quidam_http_read_timeouts_total 1",
+            "quidam_http_open_connections 3",
+            "quidam_server_drains_total 1",
+        ] {
+            assert!(text.contains(want), "missing {want}: {text}");
+        }
     }
 
     #[test]

@@ -4,17 +4,20 @@
 //! The paper's pre-characterized models answer a design query in
 //! microseconds, but the CLI pays process startup, model load/fit, and
 //! workload compilation on *every* invocation. This subsystem keeps all
-//! of that resident: a dependency-free HTTP/1.1 JSON service over
-//! `std::net::TcpListener` with a fixed accept-worker pool, a sharded
-//! byte-budgeted LRU holding workload-compiled models (keyed
-//! `(workload, pe_type)`) and rendered responses (keyed by request
-//! hash), and an async job manager running large sweeps / co-explore
-//! runs on the work-stealing scheduler with cooperative cancellation.
+//! of that resident: a dependency-free HTTP/1.1 keep-alive JSON service
+//! over an event-driven readiness loop (`transport`, epoll-backed via
+//! the vendored `netpoll` shim), a sharded byte-budgeted LRU holding
+//! workload-compiled models (keyed `(workload, pe_type)`) and rendered
+//! responses (keyed by request hash), and an async job manager running
+//! large sweeps / co-explore runs on the work-stealing scheduler with
+//! cooperative cancellation.
 //!
-//! Layering: `http` (wire parsing + response framing) -> `router`
-//! (endpoints) -> `cache` / `jobs` (shared state), all hanging off one
-//! [`AppState`]. The CLI entry point is `main.rs`'s `serve` subcommand;
-//! in-process tests drive [`Server::spawn`] against an ephemeral port.
+//! Layering: `transport` (sockets, readiness, admission, drain) ->
+//! `http` (wire parsing + response framing, typed `Response`/`ApiError`)
+//! -> `router` (endpoints, socket-free) -> `cache` / `jobs` (shared
+//! state), all hanging off one [`AppState`]. The CLI entry point is
+//! `main.rs`'s `serve` subcommand; in-process tests drive
+//! [`Server::spawn`] against an ephemeral port.
 
 pub mod cache;
 pub mod distrib;
@@ -22,12 +25,12 @@ pub mod http;
 pub mod jobs;
 pub mod metrics;
 pub mod router;
+pub mod transport;
 
 use std::collections::{BTreeMap, BTreeSet};
-use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::net::{SocketAddr, TcpListener};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
-use std::time::Duration;
 
 use crate::models::{zoo, Dataset, DnnModel};
 use crate::obs::clock::{elapsed_s, Clock, MonotonicClock};
@@ -53,8 +56,9 @@ pub(crate) fn lock<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
 pub struct ServeOptions {
     /// Bind address; port 0 picks an ephemeral port.
     pub addr: String,
-    /// HTTP accept-worker pool size (each worker handles one connection
-    /// at a time; synchronous sweeps parallelize internally).
+    /// HTTP worker pool size — each worker serves one admitted request
+    /// at a time (synchronous sweeps parallelize internally); idle
+    /// connections are multiplexed on the transport's event loop.
     pub http_threads: usize,
     /// Worker threads for each sweep / job execution.
     pub sweep_threads: usize,
@@ -66,6 +70,14 @@ pub struct ServeOptions {
     pub max_sync_points: usize,
     /// Largest grid / item count an async job accepts.
     pub max_job_points: usize,
+    /// Admission budget: requests in flight beyond this are shed with a
+    /// 429 envelope instead of queuing without bound.
+    pub max_pending: usize,
+    /// A connection holding an incomplete request longer than this gets
+    /// a 408 (slowloris guard).
+    pub read_deadline_ms: u64,
+    /// Idle keep-alive connections are closed silently after this.
+    pub idle_keepalive_ms: u64,
 }
 
 impl Default for ServeOptions {
@@ -79,6 +91,9 @@ impl Default for ServeOptions {
             cache_mib: 64,
             max_sync_points: 1_000_000,
             max_job_points: 64_000_000,
+            max_pending: 64,
+            read_deadline_ms: 10_000,
+            idle_keepalive_ms: 5_000,
         }
     }
 }
@@ -107,6 +122,9 @@ pub struct AppState {
     /// `clock.now_ns()` at construction — uptime is measured against it.
     pub started_ns: u64,
     pub requests: AtomicU64,
+    /// Monotonic id stamped into every error envelope (`request_id`) so
+    /// a client-reported failure can be matched to server logs/traces.
+    request_ids: AtomicU64,
     pub metrics: Arc<ServerMetrics>,
     /// Span sink when `QUIDAM_TRACE=<path>` was set at startup.
     pub trace: Option<Arc<TraceSink>>,
@@ -171,9 +189,15 @@ impl AppState {
             clock,
             started_ns,
             requests: AtomicU64::new(0),
+            request_ids: AtomicU64::new(0),
             metrics,
             trace,
         }
+    }
+
+    /// Next request id (1-based) for error-envelope correlation.
+    pub fn next_request_id(&self) -> u64 {
+        self.request_ids.fetch_add(1, Ordering::Relaxed) + 1
     }
 
     /// Render the Prometheus document for `GET /metrics`: sample the
@@ -251,17 +275,16 @@ impl AppState {
 /// CLI print the actual address (port 0 resolves at bind) and lets tests
 /// drive an in-process instance.
 pub struct Server {
-    listener: Arc<TcpListener>,
+    listener: TcpListener,
     state: Arc<AppState>,
 }
 
 /// Handle to a background server: address, shared state (for tests /
-/// stats), and a clean shutdown path.
+/// stats), a graceful-drain trigger, and a clean shutdown path.
 pub struct ServerHandle {
     pub addr: SocketAddr,
-    listener: Arc<TcpListener>,
     state: Arc<AppState>,
-    stop: Arc<AtomicBool>,
+    ctl: Arc<transport::TransportCtl>,
     threads: Vec<std::thread::JoinHandle<()>>,
 }
 
@@ -270,7 +293,7 @@ impl Server {
         let listener = TcpListener::bind(&opts.addr)
             .map_err(|e| format!("binding {}: {e}", opts.addr))?;
         Ok(Server {
-            listener: Arc::new(listener),
+            listener,
             state: Arc::new(AppState::new(models, opts)),
         })
     }
@@ -285,19 +308,18 @@ impl Server {
         self.state.clone()
     }
 
-    /// Serve forever on the calling thread's pool (the CLI path).
+    /// Serve until SIGTERM requests a graceful drain (the CLI path).
     pub fn run(self) {
         let handle = self.spawn();
-        for t in handle.threads {
-            let _ = t.join();
-        }
+        handle.ctl.install_term_handler();
+        handle.wait();
     }
 
-    /// Start the worker pool + job runner in the background and return a
+    /// Start the transport + job runner in the background and return a
     /// handle (the test / embedding path).
     pub fn spawn(self) -> ServerHandle {
-        let stop = Arc::new(AtomicBool::new(false));
         let addr = self.local_addr();
+        let ctl = Arc::new(transport::TransportCtl::new());
         let mut threads = Vec::new();
         {
             let state = self.state.clone();
@@ -308,24 +330,18 @@ impl Server {
                     .expect("spawn job runner"),
             );
         }
-        for i in 0..self.state.opts.http_threads.max(1) {
-            let listener = self.listener.clone();
+        {
             let state = self.state.clone();
-            let stop = stop.clone();
+            let ctl = ctl.clone();
+            let listener = self.listener;
             threads.push(
                 std::thread::Builder::new()
-                    .name(format!("quidam-http-{i}"))
-                    .spawn(move || accept_loop(&listener, &state, &stop))
-                    .expect("spawn http worker"),
+                    .name("quidam-transport".into())
+                    .spawn(move || transport::run(listener, state, ctl))
+                    .expect("spawn transport"),
             );
         }
-        ServerHandle {
-            addr,
-            listener: self.listener,
-            state: self.state,
-            stop,
-            threads,
-        }
+        ServerHandle { addr, state: self.state, ctl, threads }
     }
 }
 
@@ -334,82 +350,31 @@ impl ServerHandle {
         &self.state
     }
 
-    /// Stop accepting, stop the job runner after its current job, wake
-    /// every blocked acceptor, and join the pool.
+    /// Graceful drain, same as SIGTERM: refuse new connects, flush
+    /// still-queued jobs to `cancelled_queued`, finish in-flight
+    /// requests. Non-consuming — follow with [`ServerHandle::shutdown`]
+    /// (or [`ServerHandle::wait`]) to join the threads.
+    pub fn drain(&self) {
+        self.ctl.request_drain();
+    }
+
+    /// Stop the transport (finishing in-flight requests), stop the job
+    /// runner, and join every thread.
     pub fn shutdown(self) {
-        self.stop.store(true, Ordering::Relaxed);
+        self.ctl.request_stop();
+        // The transport's teardown stops the job manager too; calling it
+        // here as well covers the case where the transport never started
+        // (poller unavailable).
         self.state.jobs.shutdown();
-        // Blocked `accept` calls need one wake each; flipping the
-        // listener to non-blocking keeps late finishers from re-blocking.
-        let _ = self.listener.set_nonblocking(true);
-        for _ in &self.threads {
-            let _ = TcpStream::connect(self.addr);
-        }
         for t in self.threads {
             let _ = t.join();
         }
     }
-}
 
-fn accept_loop(
-    listener: &TcpListener,
-    state: &Arc<AppState>,
-    stop: &AtomicBool,
-) {
-    loop {
-        match listener.accept() {
-            Ok((conn, _peer)) => {
-                if stop.load(Ordering::Relaxed) {
-                    return;
-                }
-                handle_conn(state, conn);
-            }
-            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                // Shutdown flipped the listener to non-blocking.
-                if stop.load(Ordering::Relaxed) {
-                    return;
-                }
-                std::thread::sleep(Duration::from_millis(5));
-            }
-            Err(_) => {
-                if stop.load(Ordering::Relaxed) {
-                    return;
-                }
-                // Transient accept failure (EMFILE etc.) — back off.
-                std::thread::sleep(Duration::from_millis(5));
-            }
+    /// Block until the server exits on its own (stop, drain, or SIGTERM).
+    pub fn wait(self) {
+        for t in self.threads {
+            let _ = t.join();
         }
-    }
-}
-
-fn handle_conn(state: &Arc<AppState>, mut conn: TcpStream) {
-    // A stuck client must not pin a pool worker forever — in either
-    // direction: without the write timeout, a client that stops draining
-    // a streamed sweep would block the sink, fill the bounded row
-    // channel, and wedge every sweep worker behind it (the write error
-    // is what triggers the sweep's cooperative cancellation).
-    let _ = conn.set_read_timeout(Some(Duration::from_secs(10)));
-    let _ = conn.set_write_timeout(Some(Duration::from_secs(30)));
-    let _ = conn.set_nodelay(true);
-    state.requests.fetch_add(1, Ordering::Relaxed);
-    let t0 = state.clock.now_ns();
-    let mut span = crate::obs::trace::maybe_span(&state.trace, "http");
-    // A response write error means the client vanished — nothing to do
-    // beyond recording the exchange as a disconnect (status 0).
-    let (endpoint, status) = match http::read_request(&mut conn) {
-        Ok(req) => {
-            let ep = router::endpoint_label(&req.method, &req.path);
-            let status = router::handle(state, req, &mut conn).unwrap_or(0);
-            (ep, status)
-        }
-        Err(e) => {
-            let status = http::write_error(&mut conn, 400, &e).unwrap_or(0);
-            ("bad_request", status)
-        }
-    };
-    state.metrics.http_observe(endpoint, status, elapsed_s(&*state.clock, t0));
-    if let Some(sp) = &mut span {
-        sp.attr_str("endpoint", endpoint);
-        sp.attr_num("status", status as f64);
     }
 }

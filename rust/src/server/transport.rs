@@ -1,0 +1,569 @@
+//! Event-driven connection transport for `quidam serve` (DESIGN.md §12).
+//!
+//! One event-loop thread owns the listener and every idle connection,
+//! multiplexed through a level-triggered readiness poller (`netpoll`:
+//! epoll on Linux, poll(2) elsewhere on unix). Reads are non-blocking
+//! and accumulate into a per-connection buffer; once `http::parse_request`
+//! yields a complete request the connection is handed to a worker from
+//! the `http_threads` pool, which serves it (and any fully-buffered
+//! pipelined follow-ups) in blocking mode, then returns the connection
+//! for keep-alive or closes it.
+//!
+//! Admission control: at most `opts.max_pending` requests may be in
+//! flight; beyond that the request is shed with a 429 envelope through a
+//! priority lane so shedding stays fast exactly when the server is
+//! saturated. Slowloris connections (bytes trickling in past
+//! `read_deadline_ms`) get a 408; idle keep-alive connections are closed
+//! silently after `idle_keepalive_ms`.
+//!
+//! Drain (SIGTERM via `netpoll`'s latch, or [`TransportCtl::request_drain`]):
+//! drop the listener so new connects are refused, flush still-queued jobs
+//! to `cancelled_queued`, cooperatively cancel running jobs, finish every
+//! in-flight request, then exit. Plain stop ([`TransportCtl::request_stop`],
+//! the test path) follows the same sequence without counting a drain.
+//!
+//! Handlers never see this module's sockets: the only code touching
+//! bytes is here and in `http` (lint rule R2 enforces the boundary).
+
+use std::collections::{BTreeMap, VecDeque};
+use std::io::Read;
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use super::{http, lock, router, AppState};
+use crate::obs::clock::elapsed_s;
+
+/// Poller token for the listener.
+const TOKEN_LISTENER: u64 = 0;
+/// Poller token for the cross-thread waker.
+const TOKEN_WAKER: u64 = 1;
+/// First token handed to an accepted connection.
+const TOKEN_FIRST_CONN: u64 = 2;
+/// Poll timeout — bounds how stale the deadline scan can be.
+const TICK_MS: i32 = 100;
+/// Blocking-mode write timeout while a worker owns the connection. A
+/// client that stops draining a streamed sweep must not wedge the sink
+/// forever — the write error triggers cooperative sweep cancellation.
+const WRITE_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Shared control surface for the transport: stop/drain latches plus the
+/// waker that interrupts a blocked poll.
+pub struct TransportCtl {
+    stop: AtomicBool,
+    drain: AtomicBool,
+    waker: Option<netpoll::Waker>,
+}
+
+impl TransportCtl {
+    pub fn new() -> TransportCtl {
+        TransportCtl {
+            stop: AtomicBool::new(false),
+            drain: AtomicBool::new(false),
+            waker: netpoll::Waker::new().ok(),
+        }
+    }
+
+    /// Stop serving: refuse new connects, finish in-flight work, exit.
+    pub fn request_stop(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+        self.wake();
+    }
+
+    /// Graceful drain — same sequence as stop, counted as a drain.
+    pub fn request_drain(&self) {
+        self.drain.store(true, Ordering::SeqCst);
+        self.wake();
+    }
+
+    pub fn wake(&self) {
+        if let Some(w) = &self.waker {
+            w.wake();
+        }
+    }
+
+    /// Route SIGTERM into this transport's drain path (CLI only — tests
+    /// drive [`TransportCtl::request_drain`] directly).
+    pub fn install_term_handler(&self) -> bool {
+        match &self.waker {
+            Some(w) => netpoll::install_term_handler(w),
+            None => false,
+        }
+    }
+
+    fn stop_requested(&self) -> bool {
+        self.stop.load(Ordering::SeqCst)
+    }
+
+    fn drain_requested(&self) -> bool {
+        self.drain.load(Ordering::SeqCst)
+    }
+}
+
+impl Default for TransportCtl {
+    fn default() -> Self {
+        TransportCtl::new()
+    }
+}
+
+/// One accepted connection and its receive state.
+struct Conn {
+    stream: TcpStream,
+    token: u64,
+    /// Bytes received but not yet consumed by the parser.
+    buf: Vec<u8>,
+    /// `clock.now_ns()` at the last receive/response — deadline anchor.
+    last_ns: u64,
+    /// Requests already served on this connection (keep-alive reuse).
+    served: u64,
+    /// Open-connection count shared with the gauge; decremented on drop.
+    open: Arc<AtomicUsize>,
+}
+
+impl Drop for Conn {
+    fn drop(&mut self) {
+        self.open.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// Work items flowing from the event loop to the worker pool. The error
+/// lane is served first so load-shedding stays cheap under saturation.
+enum Work {
+    /// A complete request admitted for handling.
+    Handle(Conn, http::Request),
+    /// Answer with an error envelope and close (shed / parse / timeout).
+    Fail(Conn, http::ApiError, &'static str),
+}
+
+#[derive(Default)]
+struct Queues {
+    urgent: VecDeque<(Conn, http::ApiError, &'static str)>,
+    requests: VecDeque<(Conn, http::Request)>,
+}
+
+/// State shared between the event loop and the worker pool.
+struct Shared {
+    state: Arc<AppState>,
+    ctl: Arc<TransportCtl>,
+    queues: Mutex<Queues>,
+    ready: Condvar,
+    /// Keep-alive connections coming back from workers for re-registration.
+    done: Mutex<Vec<Conn>>,
+    /// Admitted requests currently queued or being served.
+    inflight: AtomicUsize,
+    /// Open sockets (map + worker-owned) for the gauge.
+    open: Arc<AtomicUsize>,
+    workers_stop: AtomicBool,
+    /// Once set, workers close connections instead of keeping them alive.
+    draining: AtomicBool,
+}
+
+impl Shared {
+    fn take_done(&self) -> Vec<Conn> {
+        std::mem::take(&mut *lock(&self.done))
+    }
+
+    fn push_work(&self, work: Work) {
+        {
+            let mut q = lock(&self.queues);
+            match work {
+                Work::Handle(c, r) => q.requests.push_back((c, r)),
+                Work::Fail(c, e, label) => q.urgent.push_back((c, e, label)),
+            }
+        }
+        self.ready.notify_one();
+    }
+}
+
+/// Run the transport until stop/drain: event loop on the calling thread,
+/// `opts.http_threads` workers spawned and joined internally.
+pub fn run(listener: TcpListener, state: Arc<AppState>, ctl: Arc<TransportCtl>) {
+    let poller = match netpoll::Poller::new() {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("quidam serve: readiness poller unavailable: {e}");
+            return;
+        }
+    };
+    if listener.set_nonblocking(true).is_err() {
+        eprintln!("quidam serve: cannot make the listener non-blocking");
+        return;
+    }
+    if poller.add(netpoll::raw_fd(&listener), TOKEN_LISTENER).is_err() {
+        eprintln!("quidam serve: cannot register the listener");
+        return;
+    }
+    if let Some(w) = &ctl.waker {
+        let _ = poller.add(w.fd(), TOKEN_WAKER);
+    }
+    let shared = Arc::new(Shared {
+        state: state.clone(),
+        ctl: ctl.clone(),
+        queues: Mutex::new(Queues::default()),
+        ready: Condvar::new(),
+        done: Mutex::new(Vec::new()),
+        inflight: AtomicUsize::new(0),
+        open: Arc::new(AtomicUsize::new(0)),
+        workers_stop: AtomicBool::new(false),
+        draining: AtomicBool::new(false),
+    });
+    let mut workers = Vec::new();
+    for i in 0..state.opts.http_threads.max(1) {
+        let sh = shared.clone();
+        let spawned = std::thread::Builder::new()
+            .name(format!("quidam-http-{i}"))
+            .spawn(move || worker_loop(&sh));
+        if let Ok(h) = spawned {
+            workers.push(h);
+        }
+    }
+
+    let mut listener = Some(listener);
+    let mut conns: BTreeMap<u64, Conn> = BTreeMap::new();
+    let mut next_token = TOKEN_FIRST_CONN;
+    let mut events: Vec<netpoll::Event> = Vec::new();
+    loop {
+        let _ = poller.wait(&mut events, TICK_MS);
+        if let Some(w) = &ctl.waker {
+            w.drain();
+        }
+        if ctl.stop_requested() || ctl.drain_requested() || netpoll::term_requested() {
+            break;
+        }
+        for ev in std::mem::take(&mut events) {
+            match ev.token {
+                TOKEN_LISTENER => {
+                    if let Some(l) = &listener {
+                        accept_ready(&shared, &poller, l, &mut conns, &mut next_token);
+                    }
+                }
+                TOKEN_WAKER => {}
+                token => on_conn_ready(&shared, &poller, &mut conns, token),
+            }
+        }
+        // Keep-alive connections handed back by workers re-enter the poll
+        // set; a level-triggered poller re-fires if bytes already wait.
+        let now = state.clock.now_ns();
+        for mut conn in shared.take_done() {
+            conn.last_ns = now;
+            if poller.add(netpoll::raw_fd(&conn.stream), conn.token).is_ok() {
+                conns.insert(conn.token, conn);
+            }
+        }
+        scan_deadlines(&shared, &poller, &mut conns);
+        shared
+            .state
+            .metrics
+            .http_open_connections
+            .set(shared.open.load(Ordering::SeqCst) as f64);
+    }
+
+    // Shutdown / drain: refuse new connects, abandon idle connections,
+    // flush queued jobs, then let workers finish everything in flight.
+    let drain_mode = ctl.drain_requested() || netpoll::term_requested();
+    shared.draining.store(true, Ordering::SeqCst);
+    if drain_mode {
+        state.metrics.server_drains.inc();
+    }
+    if let Some(l) = listener.take() {
+        let _ = poller.delete(netpoll::raw_fd(&l));
+        // Dropped here: the OS refuses connections from now on.
+    }
+    for (_token, conn) in std::mem::take(&mut conns) {
+        let _ = poller.delete(netpoll::raw_fd(&conn.stream));
+    }
+    let flushed = state.jobs.drain();
+    for _ in 0..flushed {
+        state.metrics.job_cancelled_queued();
+    }
+    state.jobs.shutdown();
+    shared.workers_stop.store(true, Ordering::SeqCst);
+    shared.ready.notify_all();
+    for w in workers {
+        let _ = w.join();
+    }
+    // Workers saw the draining flag, so nothing returns for keep-alive
+    // after this; drop any connection that slipped in before it was set.
+    for conn in shared.take_done() {
+        drop(conn);
+    }
+    state
+        .metrics
+        .http_open_connections
+        .set(shared.open.load(Ordering::SeqCst) as f64);
+}
+
+/// Accept until the listener would block; register each connection.
+fn accept_ready(
+    shared: &Arc<Shared>,
+    poller: &netpoll::Poller,
+    listener: &TcpListener,
+    conns: &mut BTreeMap<u64, Conn>,
+    next_token: &mut u64,
+) {
+    loop {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                let _ = stream.set_nonblocking(true);
+                let _ = stream.set_nodelay(true);
+                shared.open.fetch_add(1, Ordering::SeqCst);
+                let token = *next_token;
+                *next_token += 1;
+                let conn = Conn {
+                    stream,
+                    token,
+                    buf: Vec::new(),
+                    last_ns: shared.state.clock.now_ns(),
+                    served: 0,
+                    open: shared.open.clone(),
+                };
+                if poller.add(netpoll::raw_fd(&conn.stream), token).is_ok() {
+                    conns.insert(token, conn);
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            // Transient accept failure (EMFILE etc.): give up this round,
+            // the level-triggered poller re-reports pending connects.
+            Err(_) => return,
+        }
+    }
+}
+
+enum Fill {
+    /// Some progress (or none) — the connection stays healthy.
+    Alive,
+    /// Orderly EOF or a hard error: discard the connection.
+    Gone,
+}
+
+/// Drain the socket into the connection buffer without blocking.
+fn fill(conn: &mut Conn) -> Fill {
+    let mut chunk = [0u8; 8 * 1024];
+    loop {
+        match conn.stream.read(&mut chunk) {
+            Ok(0) => return Fill::Gone,
+            Ok(n) => {
+                if let Some(got) = chunk.get(..n) {
+                    conn.buf.extend_from_slice(got);
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return Fill::Alive,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(_) => return Fill::Gone,
+        }
+    }
+}
+
+/// A registered connection became readable: pull bytes, try to parse,
+/// dispatch or shed.
+fn on_conn_ready(
+    shared: &Arc<Shared>,
+    poller: &netpoll::Poller,
+    conns: &mut BTreeMap<u64, Conn>,
+    token: u64,
+) {
+    let gone = match conns.get_mut(&token) {
+        Some(conn) => {
+            let gone = matches!(fill(conn), Fill::Gone);
+            conn.last_ns = shared.state.clock.now_ns();
+            gone
+        }
+        None => return,
+    };
+    let parsed = match conns.get(&token) {
+        Some(conn) => http::parse_request(&conn.buf),
+        None => return,
+    };
+    match parsed {
+        http::Parse::Partial => {
+            // EOF with an incomplete (or empty) request: nothing to answer.
+            if gone {
+                if let Some(conn) = conns.remove(&token) {
+                    let _ = poller.delete(netpoll::raw_fd(&conn.stream));
+                }
+            }
+        }
+        http::Parse::Complete(req, consumed) => {
+            let Some(mut conn) = conns.remove(&token) else { return };
+            let _ = poller.delete(netpoll::raw_fd(&conn.stream));
+            conn.buf.drain(..consumed);
+            dispatch(shared, conn, req);
+        }
+        http::Parse::Error(err) => {
+            let Some(conn) = conns.remove(&token) else { return };
+            let _ = poller.delete(netpoll::raw_fd(&conn.stream));
+            shared.push_work(Work::Fail(conn, err, "bad_request"));
+        }
+    }
+}
+
+/// Admission control: shed with 429 once the pending budget is full,
+/// otherwise hand the request to the worker pool.
+fn dispatch(shared: &Arc<Shared>, conn: Conn, req: http::Request) {
+    let pending = shared.inflight.load(Ordering::SeqCst);
+    let budget = shared.state.opts.max_pending.max(1);
+    if pending >= budget {
+        shared.state.metrics.http_sheds.inc();
+        let label = router::endpoint_label(&req.method, &req.path);
+        let err = http::ApiError::overloaded(format!(
+            "pending-request budget exhausted ({pending} in flight) — retry shortly"
+        ));
+        shared.push_work(Work::Fail(conn, err, label));
+        return;
+    }
+    shared.inflight.fetch_add(1, Ordering::SeqCst);
+    shared.push_work(Work::Handle(conn, req));
+}
+
+/// Expire connections: a partial request past the read deadline gets a
+/// 408 (slowloris guard); an idle keep-alive connection is closed
+/// silently.
+fn scan_deadlines(
+    shared: &Arc<Shared>,
+    poller: &netpoll::Poller,
+    conns: &mut BTreeMap<u64, Conn>,
+) {
+    let now = shared.state.clock.now_ns();
+    let read_deadline_ns = shared.state.opts.read_deadline_ms.saturating_mul(1_000_000);
+    let idle_ns = shared.state.opts.idle_keepalive_ms.saturating_mul(1_000_000);
+    let mut timeouts = Vec::new();
+    let mut idle = Vec::new();
+    for (token, conn) in conns.iter() {
+        let age = now.saturating_sub(conn.last_ns);
+        if !conn.buf.is_empty() && age > read_deadline_ns {
+            timeouts.push(*token);
+        } else if conn.buf.is_empty() && age > idle_ns {
+            idle.push(*token);
+        }
+    }
+    for token in timeouts {
+        let Some(conn) = conns.remove(&token) else { continue };
+        let _ = poller.delete(netpoll::raw_fd(&conn.stream));
+        shared.state.metrics.http_read_timeouts.inc();
+        let err = http::ApiError::timeout(format!(
+            "request not completed within {} ms",
+            shared.state.opts.read_deadline_ms
+        ));
+        shared.push_work(Work::Fail(conn, err, "bad_request"));
+    }
+    for token in idle {
+        if let Some(conn) = conns.remove(&token) {
+            let _ = poller.delete(netpoll::raw_fd(&conn.stream));
+        }
+    }
+}
+
+fn worker_loop(shared: &Arc<Shared>) {
+    while let Some(work) = next_work(shared) {
+        match work {
+            Work::Fail(conn, err, label) => fail_conn(shared, conn, &err, label),
+            Work::Handle(conn, req) => serve_conn(shared, conn, req),
+        }
+    }
+}
+
+fn next_work(shared: &Arc<Shared>) -> Option<Work> {
+    let mut q = lock(&shared.queues);
+    loop {
+        if let Some((c, e, label)) = q.urgent.pop_front() {
+            return Some(Work::Fail(c, e, label));
+        }
+        if let Some((c, r)) = q.requests.pop_front() {
+            return Some(Work::Handle(c, r));
+        }
+        if shared.workers_stop.load(Ordering::SeqCst) {
+            return None;
+        }
+        q = match shared.ready.wait_timeout(q, Duration::from_millis(200)) {
+            Ok((guard, _)) => guard,
+            Err(poisoned) => poisoned.into_inner().0,
+        };
+    }
+}
+
+/// Answer a transport-level error (shed, parse failure, read timeout)
+/// with the envelope and close.
+fn fail_conn(shared: &Arc<Shared>, mut conn: Conn, err: &http::ApiError, label: &'static str) {
+    let state = &shared.state;
+    let _ = conn.stream.set_nonblocking(false);
+    let _ = conn.stream.set_write_timeout(Some(WRITE_TIMEOUT));
+    state.requests.fetch_add(1, Ordering::Relaxed);
+    let t0 = state.clock.now_ns();
+    let rid = state.next_request_id();
+    let status = http::write_api_error(&mut conn.stream, err, rid, false).unwrap_or(0);
+    state
+        .metrics
+        .http_observe(label, status, elapsed_s(&*state.clock, t0));
+}
+
+/// Serve an admitted request — and, under keep-alive, every follow-up
+/// request that is already fully buffered (pipelining) — on one worker,
+/// then return the connection to the event loop or close it.
+fn serve_conn(shared: &Arc<Shared>, mut conn: Conn, mut req: http::Request) {
+    let state = shared.state.clone();
+    let _ = conn.stream.set_nonblocking(false);
+    let _ = conn.stream.set_write_timeout(Some(WRITE_TIMEOUT));
+    loop {
+        state.requests.fetch_add(1, Ordering::Relaxed);
+        if conn.served > 0 {
+            state.metrics.http_keepalive_reuses.inc();
+        }
+        conn.served += 1;
+        let rid = state.next_request_id();
+        let t0 = state.clock.now_ns();
+        let mut span = crate::obs::trace::maybe_span(&state.trace, "http");
+        let endpoint = router::endpoint_label(&req.method, &req.path);
+        let keep_wanted = req.keep_alive && !shared.draining.load(Ordering::SeqCst);
+        // A write error means the client vanished — record the exchange
+        // as a disconnect (status 0) and close.
+        let (status, keep) = match router::handle(&state, &req) {
+            Ok(resp) => http::write_response(&mut conn.stream, resp, keep_wanted)
+                .unwrap_or((0, false)),
+            Err(err) => {
+                // Plain request errors leave the connection usable;
+                // over-limit and overload errors close it.
+                let keep_err = keep_wanted && matches!(err.code, 400 | 404 | 405 | 409);
+                let status =
+                    http::write_api_error(&mut conn.stream, &err, rid, keep_err).unwrap_or(0);
+                (status, keep_err)
+            }
+        };
+        state
+            .metrics
+            .http_observe(endpoint, status, elapsed_s(&*state.clock, t0));
+        if let Some(sp) = &mut span {
+            sp.attr_str("endpoint", endpoint);
+            sp.attr_num("status", f64::from(status));
+        }
+        if status == 0 || !keep {
+            break;
+        }
+        // Pipelining: serve a fully buffered follow-up under this slot.
+        match http::parse_request(&conn.buf) {
+            http::Parse::Complete(next, consumed) => {
+                conn.buf.drain(..consumed);
+                req = next;
+            }
+            http::Parse::Partial => {
+                if !shared.draining.load(Ordering::SeqCst) {
+                    let _ = conn.stream.set_nonblocking(true);
+                    lock(&shared.done).push(conn);
+                    shared.ctl.wake();
+                }
+                break;
+            }
+            http::Parse::Error(err) => {
+                let rid = state.next_request_id();
+                let _ = http::write_api_error(&mut conn.stream, &err, rid, false);
+                state
+                    .metrics
+                    .http_observe("bad_request", err.code, 0.0);
+                break;
+            }
+        }
+    }
+    shared.inflight.fetch_sub(1, Ordering::SeqCst);
+    shared.ctl.wake();
+}

@@ -344,7 +344,7 @@ fn http_worker_registry_and_distributed_sweep_job() {
     };
     assert_eq!(status, 400);
     assert!(
-        j.get("error").as_str().unwrap().contains("/v1/workers"),
+        j.get("error").get("message").as_str().unwrap().contains("/v1/workers"),
         "{j}"
     );
     empty.shutdown();

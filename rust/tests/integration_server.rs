@@ -1,11 +1,14 @@
 //! `quidam serve` integration: an in-process server on an ephemeral port
 //! driven over real TCP — correctness vs the offline DSE path, result /
 //! compiled-model caching observable through /v1/stats, NDJSON sweep
-//! framing, and the job lifecycle including mid-sweep cancellation with a
-//! retrievable partial Pareto front (ISSUE acceptance criteria).
+//! framing, the job lifecycle including mid-sweep cancellation with a
+//! retrievable partial Pareto front, and the event-driven transport
+//! contract (DESIGN.md §12): keep-alive reuse, pipelining, 429 load
+//! shedding, 408 read deadlines, mid-stream disconnects, graceful drain,
+//! and the uniform `{"error":{...}}` envelope on every failure path.
 
 use std::collections::BTreeMap;
-use std::io::{Read, Write};
+use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{SocketAddr, TcpStream};
 use std::sync::{Mutex, MutexGuard, OnceLock};
 use std::time::{Duration, Instant};
@@ -15,23 +18,31 @@ use quidam::dse;
 use quidam::models::{zoo, Dataset};
 use quidam::pe::PeType;
 use quidam::ppa::{characterize, PpaModels};
+use quidam::server::jobs::JobState;
 use quidam::server::{AppState, ServeOptions, Server, ServerHandle};
 use quidam::tech::TechLibrary;
 use quidam::util::json::Json;
 
+/// Fitted PPA models are the expensive part of server startup; build
+/// them once and clone for every server this binary spawns.
 fn test_models() -> PpaModels {
-    let tech = TechLibrary::freepdk45();
-    let space = SweepSpace::default();
-    let layers = zoo::resnet_cifar(20, Dataset::Cifar10).layers;
-    let mut m = BTreeMap::new();
-    for pe in PeType::ALL {
-        m.insert(pe, characterize(&space, pe, &layers, 40, &tech, 77));
-    }
-    PpaModels::fit(&m, 2).expect("model fit")
+    static MODELS: OnceLock<PpaModels> = OnceLock::new();
+    MODELS
+        .get_or_init(|| {
+            let tech = TechLibrary::freepdk45();
+            let space = SweepSpace::default();
+            let layers = zoo::resnet_cifar(20, Dataset::Cifar10).layers;
+            let mut m = BTreeMap::new();
+            for pe in PeType::ALL {
+                m.insert(pe, characterize(&space, pe, &layers, 40, &tech, 77));
+            }
+            PpaModels::fit(&m, 2).expect("model fit")
+        })
+        .clone()
 }
 
-/// One shared server for the whole test binary (models are the expensive
-/// part); the handle lives in a static so the pool never joins.
+/// One shared server for the whole test binary; the handle lives in a
+/// static so the pool never joins.
 fn server() -> &'static ServerHandle {
     static SERVER: OnceLock<ServerHandle> = OnceLock::new();
     SERVER.get_or_init(|| {
@@ -48,6 +59,15 @@ fn server() -> &'static ServerHandle {
     })
 }
 
+/// A private server for tests that need non-default transport tunables
+/// (shed budgets, read deadlines) or that kill the server (drain) — the
+/// shared one must stay up for everyone else.
+fn aux_server(opts: ServeOptions) -> ServerHandle {
+    Server::bind(test_models(), opts)
+        .expect("bind aux server")
+        .spawn()
+}
+
 fn state() -> &'static AppState {
     server().state()
 }
@@ -60,10 +80,10 @@ fn lock() -> MutexGuard<'static, ()> {
     GUARD.lock().unwrap_or_else(|e| e.into_inner())
 }
 
-/// Minimal HTTP client: one request per connection (the server speaks
-/// `Connection: close`), returns (status, body).
-fn http(method: &str, path: &str, body: &str) -> (u16, String) {
-    let addr: SocketAddr = server().addr;
+/// Minimal HTTP client: one request per connection (`Connection: close`
+/// requested, so the server closes after answering), returns
+/// (status, body).
+fn http_at(addr: SocketAddr, method: &str, path: &str, body: &str) -> (u16, String) {
     let mut s = TcpStream::connect(addr).expect("connect");
     s.set_read_timeout(Some(Duration::from_secs(120))).unwrap();
     let req = format!(
@@ -86,11 +106,19 @@ fn http(method: &str, path: &str, body: &str) -> (u16, String) {
     (status, body)
 }
 
-fn post_json(path: &str, body: &str) -> (u16, Json) {
-    let (status, text) = http("POST", path, body);
+fn http(method: &str, path: &str, body: &str) -> (u16, String) {
+    http_at(server().addr, method, path, body)
+}
+
+fn post_json_at(addr: SocketAddr, path: &str, body: &str) -> (u16, Json) {
+    let (status, text) = http_at(addr, "POST", path, body);
     let j = Json::parse(&text)
         .unwrap_or_else(|e| panic!("unparseable body {text:?}: {e}"));
     (status, j)
+}
+
+fn post_json(path: &str, body: &str) -> (u16, Json) {
+    post_json_at(server().addr, path, body)
 }
 
 fn get_json(path: &str) -> (u16, Json) {
@@ -98,6 +126,49 @@ fn get_json(path: &str) -> (u16, Json) {
     let j = Json::parse(&text)
         .unwrap_or_else(|e| panic!("unparseable body {text:?}: {e}"));
     (status, j)
+}
+
+/// Read one HTTP/1.1 response off a keep-alive connection: status line,
+/// headers (Content-Length framing), then exactly the declared body.
+fn read_response(r: &mut BufReader<TcpStream>) -> (u16, String) {
+    let mut line = String::new();
+    r.read_line(&mut line).expect("status line");
+    let status: u16 = line
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or_else(|| panic!("no status line in: {line:?}"));
+    let mut len = 0usize;
+    loop {
+        let mut h = String::new();
+        r.read_line(&mut h).expect("header line");
+        let h = h.trim_end().to_ascii_lowercase();
+        if h.is_empty() {
+            break;
+        }
+        if let Some(v) = h.strip_prefix("content-length:") {
+            len = v.trim().parse().expect("Content-Length value");
+        }
+    }
+    let mut body = vec![0u8; len];
+    r.read_exact(&mut body).expect("body");
+    (status, String::from_utf8_lossy(&body).into_owned())
+}
+
+/// Assert the uniform error envelope (DESIGN.md §12) and return the
+/// human message for content checks.
+fn assert_envelope(j: &Json, code: u64, kind: &str) -> String {
+    let e = j.get("error");
+    assert_eq!(e.get("code").as_u64(), Some(code), "envelope code: {j}");
+    assert_eq!(e.get("kind").as_str(), Some(kind), "envelope kind: {j}");
+    assert!(
+        e.get("request_id").as_u64().unwrap_or(0) >= 1,
+        "envelope request_id: {j}"
+    );
+    e.get("message")
+        .as_str()
+        .unwrap_or_else(|| panic!("envelope has no message: {j}"))
+        .to_string()
 }
 
 /// Poll a job until `pred` holds (panics after `deadline`).
@@ -397,7 +468,7 @@ fn search_job_completes_with_convergence_and_is_deterministic() {
     let (status, j) =
         post_json("/v1/search", r#"{"algo":"annealing"}"#);
     assert_eq!(status, 400);
-    assert!(j.get("error").as_str().unwrap().contains("nsga2"));
+    assert!(assert_envelope(&j, 400, "bad_request").contains("nsga2"));
     let (status, _) =
         post_json("/v1/search", r#"{"mutation":"lots"}"#);
     assert_eq!(status, 400);
@@ -406,7 +477,7 @@ fn search_job_completes_with_convergence_and_is_deterministic() {
         r#"{"population":65536,"generations":1000000}"#,
     );
     assert_eq!(status, 400);
-    assert!(j.get("error").as_str().unwrap().contains("job bound"));
+    assert!(assert_envelope(&j, 400, "bad_request").contains("job bound"));
 }
 
 #[test]
@@ -460,27 +531,27 @@ fn three_objective_search_job_serves_front3_and_is_deterministic() {
         r#"{"objectives":["energy","accuracy"]}"#,
     );
     assert_eq!(status, 400);
-    assert!(j.get("error").as_str().unwrap().contains("objectives"));
+    assert!(assert_envelope(&j, 400, "bad_request").contains("objectives"));
 }
 
 #[test]
-fn error_paths_return_clean_statuses() {
+fn error_paths_return_typed_envelopes() {
     let _serialized = lock();
     // Malformed JSON.
     let (status, j) = post_json("/v1/ppa", "{not json");
     assert_eq!(status, 400);
-    assert!(j.get("error").as_str().unwrap().contains("JSON"));
+    assert!(assert_envelope(&j, 400, "bad_request").contains("JSON"));
     // Unknown workload names the known ones.
     let (status, j) = post_json(
         "/v1/ppa",
         r#"{"workload":"alexnet","config":{"pe_type":"int16"}}"#,
     );
     assert_eq!(status, 400);
-    assert!(j.get("error").as_str().unwrap().contains("resnet20"));
+    assert!(assert_envelope(&j, 400, "bad_request").contains("resnet20"));
     // Missing pe_type.
     let (status, j) = post_json("/v1/ppa", r#"{"config":{"rows":12}}"#);
     assert_eq!(status, 400);
-    assert!(j.get("error").as_str().unwrap().contains("pe_type"));
+    assert!(assert_envelope(&j, 400, "bad_request").contains("pe_type"));
     // Out-of-range config.
     let (status, _) = post_json(
         "/v1/ppa",
@@ -490,14 +561,28 @@ fn error_paths_return_clean_statuses() {
     // Oversized synchronous sweep points at the job manager.
     let (status, j) = post_json("/v1/sweep", r#"{"dense":true}"#);
     assert_eq!(status, 413);
-    assert!(j.get("error").as_str().unwrap().contains("/v1/jobs"));
+    assert!(assert_envelope(&j, 413, "too_large").contains("/v1/jobs"));
     // Unknown routes / jobs.
-    let (status, _) = get_json("/v1/nope");
+    let (status, j) = get_json("/v1/nope");
     assert_eq!(status, 404);
+    assert!(assert_envelope(&j, 404, "not_found").contains("/v1/nope"));
     let (status, _) = get_json("/v1/jobs/999999");
     assert_eq!(status, 404);
-    let (status, _) = http("DELETE", "/v1/jobs/999999", "");
+    let (status, text) = http("DELETE", "/v1/jobs/999999", "");
     assert_eq!(status, 404);
+    assert_envelope(&Json::parse(&text).unwrap(), 404, "not_found");
+    // Unsupported method on a known route.
+    let (status, text) = http("PATCH", "/v1/ppa", "");
+    assert_eq!(status, 405);
+    assert_envelope(&Json::parse(&text).unwrap(), 405, "method_not_allowed");
+    // Monotone request ids: two consecutive failures are distinguishable.
+    let (_, a) = post_json("/v1/ppa", "{bad");
+    let (_, b) = post_json("/v1/ppa", "{bad");
+    let (ra, rb) = (
+        a.get("error").get("request_id").as_u64().unwrap(),
+        b.get("error").get("request_id").as_u64().unwrap(),
+    );
+    assert!(rb > ra, "request ids did not advance: {ra} then {rb}");
     // Health + workloads are alive.
     let (status, j) = get_json("/healthz");
     assert_eq!(status, 200);
@@ -505,4 +590,198 @@ fn error_paths_return_clean_statuses() {
     let (status, j) = get_json("/v1/workloads");
     assert_eq!(status, 200);
     assert_eq!(j.get("workloads").as_arr().unwrap().len(), 3);
+}
+
+#[test]
+fn keep_alive_reuses_and_pipelines_on_one_connection() {
+    let _serialized = lock();
+    let reuses_before = state().metrics.http_keepalive_reuses.get();
+    let mut s = TcpStream::connect(server().addr).expect("connect");
+    s.set_read_timeout(Some(Duration::from_secs(120))).unwrap();
+    s.set_nodelay(true).unwrap();
+    let mut r = BufReader::new(s.try_clone().expect("clone stream"));
+    // HTTP/1.1 default is keep-alive: three requests, one socket.
+    let req = "GET /healthz HTTP/1.1\r\nHost: quidam\r\n\r\n";
+    for i in 0..3 {
+        s.write_all(req.as_bytes()).expect("send");
+        let (status, body) = read_response(&mut r);
+        assert_eq!(status, 200, "request {i}: {body}");
+        assert_eq!(
+            Json::parse(&body).unwrap().get("ok").as_bool(),
+            Some(true)
+        );
+    }
+    // A plain request error (404) leaves the connection usable.
+    s.write_all(b"GET /v1/nope HTTP/1.1\r\nHost: quidam\r\n\r\n")
+        .expect("send 404 probe");
+    let (status, body) = read_response(&mut r);
+    assert_eq!(status, 404, "{body}");
+    assert_envelope(&Json::parse(&body).unwrap(), 404, "not_found");
+    // Pipelining: two requests written back-to-back, answered in order.
+    s.write_all(format!("{req}{req}").as_bytes()).expect("pipeline");
+    for i in 0..2 {
+        let (status, _) = read_response(&mut r);
+        assert_eq!(status, 200, "pipelined request {i}");
+    }
+    // Six requests on one connection = at least five keep-alive reuses.
+    let reuses = state().metrics.http_keepalive_reuses.get();
+    assert!(
+        reuses >= reuses_before + 5,
+        "keep-alive reuse counter barely moved: {reuses_before} -> {reuses}"
+    );
+}
+
+#[test]
+fn mid_stream_disconnect_leaves_the_server_healthy() {
+    let _serialized = lock();
+    // A ~51k-point streamed sweep (well beyond the socket buffers), then
+    // hang up after the first bytes arrive: the write error must cancel
+    // the sweep and free the worker instead of wedging it.
+    let body = r#"{"workload":"resnet20",
+        "rows":[4,6,8,10,12,14,16,20,24,28],
+        "cols":[4,6,8,10,12,14,16,20,24,28],
+        "sp_if":[8,10,12,14],"sp_fw":[128,224],"sp_ps":[24,28,32,40],
+        "gb_kib":[54,108],"dram_bw":[8,16],"points":true}"#;
+    let mut s = TcpStream::connect(server().addr).expect("connect");
+    s.set_read_timeout(Some(Duration::from_secs(120))).unwrap();
+    let req = format!(
+        "POST /v1/sweep HTTP/1.1\r\nHost: quidam\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    );
+    s.write_all(req.as_bytes()).expect("send sweep");
+    let mut first = [0u8; 512];
+    let n = s.read(&mut first).expect("first streamed bytes");
+    assert!(n > 0, "stream never started");
+    drop(s); // unread kernel buffers -> RST -> prompt write error server-side
+    // The server answers requests immediately and on every worker.
+    for _ in 0..4 {
+        let (status, j) = get_json("/healthz");
+        assert_eq!(status, 200);
+        assert_eq!(j.get("ok").as_bool(), Some(true));
+    }
+}
+
+#[test]
+fn saturated_server_sheds_with_429_envelope() {
+    // Private server: one-request admission budget. Two workers so the
+    // shed lane always has a free thread (the busy one is wedged in a
+    // stream the client refuses to drain).
+    let h = aux_server(ServeOptions {
+        addr: "127.0.0.1:0".into(),
+        http_threads: 2,
+        sweep_threads: 1,
+        cache_mib: 16,
+        max_pending: 1,
+        ..Default::default()
+    });
+    // Occupy the only slot: a ~51k-point streamed sweep whose client
+    // reads one chunk and then stops draining.
+    let body = r#"{"workload":"resnet20",
+        "rows":[4,6,8,10,12,14,16,20,24,28],
+        "cols":[4,6,8,10,12,14,16,20,24,28],
+        "sp_if":[8,10,12,14],"sp_fw":[128,224],"sp_ps":[24,28,32,40],
+        "gb_kib":[54,108],"dram_bw":[8,16],"points":true}"#;
+    let mut busy = TcpStream::connect(h.addr).expect("connect busy");
+    busy.set_read_timeout(Some(Duration::from_secs(120))).unwrap();
+    let req = format!(
+        "POST /v1/sweep HTTP/1.1\r\nHost: quidam\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    );
+    busy.write_all(req.as_bytes()).expect("send busy sweep");
+    let mut first = [0u8; 512];
+    assert!(busy.read(&mut first).expect("busy stream head") > 0);
+    // The next request finds the pending budget exhausted: 429 envelope.
+    let (status, text) = http_at(h.addr, "GET", "/healthz", "");
+    assert_eq!(status, 429, "{text}");
+    let msg = assert_envelope(&Json::parse(&text).unwrap(), 429, "overloaded");
+    assert!(msg.contains("retry"), "unhelpful shed message: {msg}");
+    assert!(h.state().metrics.http_sheds.get() >= 1);
+    drop(busy);
+    h.shutdown();
+}
+
+#[test]
+fn read_deadline_408_and_graceful_drain() {
+    let h = aux_server(ServeOptions {
+        addr: "127.0.0.1:0".into(),
+        http_threads: 2,
+        sweep_threads: 1,
+        cache_mib: 16,
+        read_deadline_ms: 200,
+        ..Default::default()
+    });
+    // Slowloris half-request: the transport answers 408 at the deadline.
+    let mut s = TcpStream::connect(h.addr).expect("connect");
+    s.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    s.write_all(b"POST /v1/ppa HTTP/1.1\r\nContent-Le").expect("partial");
+    let mut text = String::new();
+    s.read_to_string(&mut text).expect("408 response");
+    assert!(text.starts_with("HTTP/1.1 408"), "{text}");
+    let body = text.split_once("\r\n\r\n").expect("envelope body").1;
+    let msg = assert_envelope(&Json::parse(body).unwrap(), 408, "timeout");
+    assert!(msg.contains("200 ms"), "deadline missing from: {msg}");
+    assert!(h.state().metrics.http_read_timeouts.get() >= 1);
+
+    // Drain: one running + one queued dense job; the queued one must be
+    // flushed to `cancelled_queued`, the running one cancelled, and new
+    // connections refused once the listener is gone.
+    let (status, a) = post_json_at(
+        h.addr,
+        "/v1/jobs",
+        r#"{"kind":"sweep","dense":true,"threads":1}"#,
+    );
+    assert_eq!(status, 202, "{a}");
+    let (status, b) = post_json_at(
+        h.addr,
+        "/v1/jobs",
+        r#"{"kind":"sweep","dense":true,"threads":1}"#,
+    );
+    assert_eq!(status, 202, "{b}");
+    let (ida, idb) =
+        (a.get("id").as_u64().unwrap(), b.get("id").as_u64().unwrap());
+    let state = h.state().clone();
+    // Wait until the runner owns job A so B is verifiably still queued.
+    let t0 = Instant::now();
+    while state.jobs.get(ida).expect("job a").state() != JobState::Running {
+        assert!(t0.elapsed() < Duration::from_secs(60), "job never started");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    h.drain();
+    h.wait(); // transport + job runner exit on their own under drain
+    assert_eq!(
+        state.jobs.get(idb).expect("job b").state(),
+        JobState::CancelledQueued,
+        "queued job was not flushed by the drain"
+    );
+    assert_eq!(
+        state.jobs.get(ida).expect("job a").state(),
+        JobState::Cancelled,
+        "running job was not cooperatively cancelled"
+    );
+    assert_eq!(state.metrics.server_drains.get(), 1);
+    let metrics = state.metrics_text();
+    assert!(
+        metrics.contains("quidam_server_drains_total 1"),
+        "drain counter missing from /metrics"
+    );
+    assert!(
+        metrics
+            .contains("quidam_jobs_transitions_total{to=\"cancelled_queued\"}"),
+        "cancelled_queued transition missing from /metrics"
+    );
+    // The listener is gone: a fresh connect cannot complete a request.
+    let refused = match TcpStream::connect(h.addr) {
+        Err(_) => true,
+        Ok(mut s) => {
+            let _ = s.set_read_timeout(Some(Duration::from_secs(5)));
+            let _ = s.write_all(b"GET /healthz HTTP/1.1\r\n\r\n");
+            let mut out = String::new();
+            match s.read_to_string(&mut out) {
+                Ok(0) => true,
+                Ok(_) => false,
+                Err(_) => true,
+            }
+        }
+    };
+    assert!(refused, "drained server still answered a new connection");
 }

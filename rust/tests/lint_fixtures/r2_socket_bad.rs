@@ -1,0 +1,17 @@
+// quidam-lint-fixture: module=server::router
+// expect: R2 @ 7
+// expect: R2 @ 10
+// expect: R2 @ 11
+// expect: R2 @ 15
+
+use std::net::TcpStream;
+
+/// A handler reaching below the transport boundary (DESIGN.md §12).
+pub fn sneaky(conn: &mut TcpStream) -> std::io::Result<u16> {
+    write_error(conn, 400, "handlers must not render bytes")
+}
+
+pub fn listen_here(addr: &str) -> std::io::Result<()> {
+    let _l = std::net::TcpListener::bind(addr)?;
+    Ok(())
+}

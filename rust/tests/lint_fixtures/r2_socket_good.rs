@@ -1,0 +1,17 @@
+// quidam-lint-fixture: module=server::router
+// expect-clean
+
+/// The typed handler shape R2 enforces: parsed request in, typed
+/// response out — no socket anywhere in the signature or body.
+pub fn healthz() -> Result<&'static str, (u16, &'static str)> {
+    Ok("{\"ok\":true}")
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn sockets_inside_tests_are_exempt() {
+        let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        drop(l);
+    }
+}

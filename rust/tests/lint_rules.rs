@@ -139,7 +139,7 @@ fn fixtures_match_expected_findings() {
 #[test]
 fn every_rule_has_firing_and_passing_coverage() {
     let fixtures = load_fixtures();
-    let rules = ["D1", "D2", "D3", "D4", "R1", "S1", "SUP"];
+    let rules = ["D1", "D2", "D3", "D4", "R1", "R2", "S1", "SUP"];
     for rule in rules {
         let fires = fixtures
             .iter()

@@ -1,0 +1,539 @@
+//! netpoll — a thin, dependency-free readiness-polling shim for quidam's
+//! event-driven HTTP transport.
+//!
+//! Linux gets level-triggered epoll plus an eventfd waker; other unix
+//! platforms fall back to poll(2) and a self-pipe. Non-unix platforms are
+//! unsupported: [`Poller::new`] returns an error and the serve transport
+//! fails loudly at startup instead of silently degrading.
+//!
+//! The crate also owns the process-wide SIGTERM latch used for graceful
+//! drain: the signal handler only touches an `AtomicBool` and a raw
+//! `write(2)` to a pre-registered waker fd — both async-signal-safe — and
+//! the event loop observes the latch via [`term_requested`].
+
+use std::io;
+use std::sync::atomic::{AtomicBool, AtomicI32, Ordering};
+
+/// Raw file descriptor. Mirrors `std::os::unix::io::RawFd` on unix; defined
+/// unconditionally so callers stay platform-agnostic at the type level.
+pub type RawFd = i32;
+
+/// A readiness event delivered by [`Poller::wait`].
+#[derive(Debug, Clone, Copy)]
+pub struct Event {
+    /// Caller-chosen token passed to [`Poller::add`].
+    pub token: u64,
+    /// The fd has data to read.
+    pub readable: bool,
+    /// The peer hung up or the fd errored; the connection should be dropped.
+    pub closed: bool,
+}
+
+/// Extract the raw fd of a socket-like object for [`Poller::add`].
+#[cfg(unix)]
+pub fn raw_fd<T: std::os::unix::io::AsRawFd>(t: &T) -> RawFd {
+    t.as_raw_fd()
+}
+
+/// Non-unix stub; never reached because [`Poller::new`] fails first.
+#[cfg(not(unix))]
+pub fn raw_fd<T>(_t: &T) -> RawFd {
+    -1
+}
+
+#[cfg(unix)]
+mod unix_ffi {
+    use std::os::raw::{c_int, c_void};
+
+    pub const SIGTERM: c_int = 15;
+    /// `signal(2)` returns `SIG_ERR` (all bits set) on failure.
+    pub const SIG_ERR: usize = usize::MAX;
+
+    extern "C" {
+        pub fn close(fd: c_int) -> c_int;
+        pub fn read(fd: c_int, buf: *mut c_void, count: usize) -> isize;
+        pub fn write(fd: c_int, buf: *const c_void, count: usize) -> isize;
+        pub fn signal(signum: c_int, handler: usize) -> usize;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Linux: epoll + eventfd
+// ---------------------------------------------------------------------------
+
+#[cfg(target_os = "linux")]
+mod ffi {
+    use std::os::raw::{c_int, c_uint};
+
+    pub const EPOLL_CLOEXEC: c_int = 0x8_0000;
+    pub const EPOLL_CTL_ADD: c_int = 1;
+    pub const EPOLL_CTL_DEL: c_int = 2;
+    pub const EPOLLIN: u32 = 0x1;
+    pub const EPOLLERR: u32 = 0x8;
+    pub const EPOLLHUP: u32 = 0x10;
+    pub const EPOLLRDHUP: u32 = 0x2000;
+    pub const EFD_NONBLOCK: c_int = 0x800;
+    pub const EFD_CLOEXEC: c_int = 0x8_0000;
+
+    /// Mirror of the kernel's `struct epoll_event`; packed on x86_64 per the
+    /// syscall ABI (other architectures use natural alignment).
+    #[repr(C)]
+    #[cfg_attr(target_arch = "x86_64", repr(packed))]
+    #[derive(Clone, Copy)]
+    pub struct EpollEvent {
+        pub events: u32,
+        pub data: u64,
+    }
+
+    extern "C" {
+        pub fn epoll_create1(flags: c_int) -> c_int;
+        pub fn epoll_ctl(epfd: c_int, op: c_int, fd: c_int, event: *mut EpollEvent) -> c_int;
+        pub fn epoll_wait(
+            epfd: c_int,
+            events: *mut EpollEvent,
+            maxevents: c_int,
+            timeout: c_int,
+        ) -> c_int;
+        pub fn eventfd(initval: c_uint, flags: c_int) -> c_int;
+    }
+}
+
+/// Level-triggered read-readiness poller (epoll-backed on Linux).
+#[cfg(target_os = "linux")]
+pub struct Poller {
+    epfd: RawFd,
+}
+
+#[cfg(target_os = "linux")]
+impl Poller {
+    pub fn new() -> io::Result<Poller> {
+        // SAFETY: plain syscall, no pointers involved.
+        let epfd = unsafe { ffi::epoll_create1(ffi::EPOLL_CLOEXEC) };
+        if epfd < 0 {
+            return Err(io::Error::last_os_error());
+        }
+        Ok(Poller { epfd })
+    }
+
+    /// Register `fd` for level-triggered read readiness under `token`.
+    pub fn add(&self, fd: RawFd, token: u64) -> io::Result<()> {
+        let mut ev = ffi::EpollEvent {
+            events: ffi::EPOLLIN | ffi::EPOLLRDHUP,
+            data: token,
+        };
+        // SAFETY: `ev` is a valid epoll_event for the duration of the call.
+        let rc = unsafe { ffi::epoll_ctl(self.epfd, ffi::EPOLL_CTL_ADD, fd, &mut ev) };
+        if rc < 0 {
+            return Err(io::Error::last_os_error());
+        }
+        Ok(())
+    }
+
+    /// Remove `fd` from the interest set. The fd must still be open.
+    pub fn delete(&self, fd: RawFd) -> io::Result<()> {
+        let mut ev = ffi::EpollEvent { events: 0, data: 0 };
+        // SAFETY: DEL ignores the event but pre-2.6.9 kernels require it non-null.
+        let rc = unsafe { ffi::epoll_ctl(self.epfd, ffi::EPOLL_CTL_DEL, fd, &mut ev) };
+        if rc < 0 {
+            return Err(io::Error::last_os_error());
+        }
+        Ok(())
+    }
+
+    /// Wait up to `timeout_ms` for readiness; fills `out` and returns the
+    /// event count. A signal interruption reports zero events rather than an
+    /// error so callers can re-check their shutdown latches.
+    pub fn wait(&self, out: &mut Vec<Event>, timeout_ms: i32) -> io::Result<usize> {
+        out.clear();
+        let mut buf = [ffi::EpollEvent { events: 0, data: 0 }; 64];
+        // SAFETY: `buf` is valid for 64 entries and the kernel writes at most that.
+        let n = unsafe { ffi::epoll_wait(self.epfd, buf.as_mut_ptr(), 64, timeout_ms) };
+        if n < 0 {
+            let e = io::Error::last_os_error();
+            if e.kind() == io::ErrorKind::Interrupted {
+                return Ok(0);
+            }
+            return Err(e);
+        }
+        for ev in buf.iter().take(n as usize) {
+            // Copy fields out by value: the struct may be packed on x86_64.
+            let events = ev.events;
+            let data = ev.data;
+            out.push(Event {
+                token: data,
+                readable: events & ffi::EPOLLIN != 0,
+                closed: events & (ffi::EPOLLERR | ffi::EPOLLHUP | ffi::EPOLLRDHUP) != 0,
+            });
+        }
+        Ok(out.len())
+    }
+}
+
+#[cfg(target_os = "linux")]
+impl Drop for Poller {
+    fn drop(&mut self) {
+        // SAFETY: we own the epoll fd.
+        unsafe { unix_ffi::close(self.epfd) };
+    }
+}
+
+/// Cross-thread (and signal-handler) wakeup for a blocked [`Poller::wait`].
+/// eventfd-backed on Linux; register [`Waker::fd`] with the poller.
+#[cfg(target_os = "linux")]
+pub struct Waker {
+    fd: RawFd,
+}
+
+#[cfg(target_os = "linux")]
+impl Waker {
+    pub fn new() -> io::Result<Waker> {
+        // SAFETY: plain syscall.
+        let fd = unsafe { ffi::eventfd(0, ffi::EFD_CLOEXEC | ffi::EFD_NONBLOCK) };
+        if fd < 0 {
+            return Err(io::Error::last_os_error());
+        }
+        Ok(Waker { fd })
+    }
+
+    /// The fd to register with the poller for read readiness.
+    pub fn fd(&self) -> RawFd {
+        self.fd
+    }
+
+    fn write_fd(&self) -> RawFd {
+        self.fd
+    }
+
+    /// Make the next (or current) `Poller::wait` return immediately.
+    pub fn wake(&self) {
+        let one: u64 = 1;
+        // SAFETY: write(2) on an owned fd; the 8-byte buffer outlives the call.
+        unsafe { unix_ffi::write(self.fd, &one as *const u64 as *const _, 8) };
+    }
+
+    /// Consume pending wakeups so level-triggered polling goes quiet again.
+    pub fn drain(&self) {
+        let mut buf: u64 = 0;
+        loop {
+            // SAFETY: read(2) into an 8-byte buffer we own; fd is non-blocking.
+            let n = unsafe { unix_ffi::read(self.fd, &mut buf as *mut u64 as *mut _, 8) };
+            if n <= 0 {
+                break;
+            }
+        }
+    }
+}
+
+#[cfg(target_os = "linux")]
+impl Drop for Waker {
+    fn drop(&mut self) {
+        // SAFETY: we own the eventfd.
+        unsafe { unix_ffi::close(self.fd) };
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Other unix: poll(2) + self-pipe
+// ---------------------------------------------------------------------------
+
+#[cfg(all(unix, not(target_os = "linux")))]
+mod ffi {
+    use std::os::raw::{c_int, c_short, c_ulong};
+
+    pub const POLLIN: c_short = 0x1;
+    pub const POLLERR: c_short = 0x8;
+    pub const POLLHUP: c_short = 0x10;
+    pub const F_SETFL: c_int = 4;
+    #[cfg(any(target_os = "macos", target_os = "freebsd", target_os = "openbsd"))]
+    pub const O_NONBLOCK: c_int = 0x4;
+    #[cfg(not(any(target_os = "macos", target_os = "freebsd", target_os = "openbsd")))]
+    pub const O_NONBLOCK: c_int = 0x800;
+
+    #[repr(C)]
+    #[derive(Clone, Copy)]
+    pub struct PollFd {
+        pub fd: c_int,
+        pub events: c_short,
+        pub revents: c_short,
+    }
+
+    extern "C" {
+        pub fn poll(fds: *mut PollFd, nfds: c_ulong, timeout: c_int) -> c_int;
+        pub fn pipe(fds: *mut c_int) -> c_int;
+        pub fn fcntl(fd: c_int, cmd: c_int, arg: c_int) -> c_int;
+    }
+}
+
+/// poll(2)-backed fallback; interest set lives in user space.
+#[cfg(all(unix, not(target_os = "linux")))]
+pub struct Poller {
+    interests: std::sync::Mutex<std::collections::BTreeMap<RawFd, u64>>,
+}
+
+#[cfg(all(unix, not(target_os = "linux")))]
+impl Poller {
+    pub fn new() -> io::Result<Poller> {
+        Ok(Poller {
+            interests: std::sync::Mutex::new(std::collections::BTreeMap::new()),
+        })
+    }
+
+    pub fn add(&self, fd: RawFd, token: u64) -> io::Result<()> {
+        let mut m = self.interests.lock().unwrap_or_else(|e| e.into_inner());
+        m.insert(fd, token);
+        Ok(())
+    }
+
+    pub fn delete(&self, fd: RawFd) -> io::Result<()> {
+        let mut m = self.interests.lock().unwrap_or_else(|e| e.into_inner());
+        m.remove(&fd);
+        Ok(())
+    }
+
+    pub fn wait(&self, out: &mut Vec<Event>, timeout_ms: i32) -> io::Result<usize> {
+        out.clear();
+        let snapshot: Vec<(RawFd, u64)> = {
+            let m = self.interests.lock().unwrap_or_else(|e| e.into_inner());
+            m.iter().map(|(&fd, &tok)| (fd, tok)).collect()
+        };
+        let mut fds: Vec<ffi::PollFd> = snapshot
+            .iter()
+            .map(|&(fd, _)| ffi::PollFd {
+                fd,
+                events: ffi::POLLIN,
+                revents: 0,
+            })
+            .collect();
+        // SAFETY: `fds` is a valid array of `nfds` pollfd structs.
+        let n = unsafe { ffi::poll(fds.as_mut_ptr(), fds.len() as _, timeout_ms) };
+        if n < 0 {
+            let e = io::Error::last_os_error();
+            if e.kind() == io::ErrorKind::Interrupted {
+                return Ok(0);
+            }
+            return Err(e);
+        }
+        for (pfd, &(_, token)) in fds.iter().zip(snapshot.iter()) {
+            if pfd.revents == 0 {
+                continue;
+            }
+            out.push(Event {
+                token,
+                readable: pfd.revents & ffi::POLLIN != 0,
+                closed: pfd.revents & (ffi::POLLERR | ffi::POLLHUP) != 0,
+            });
+        }
+        Ok(out.len())
+    }
+}
+
+/// Self-pipe waker for the poll(2) fallback.
+#[cfg(all(unix, not(target_os = "linux")))]
+pub struct Waker {
+    read_fd: RawFd,
+    write_fd: RawFd,
+}
+
+#[cfg(all(unix, not(target_os = "linux")))]
+impl Waker {
+    pub fn new() -> io::Result<Waker> {
+        let mut fds: [std::os::raw::c_int; 2] = [-1, -1];
+        // SAFETY: `fds` is a valid 2-element array for pipe(2) to fill.
+        let rc = unsafe { ffi::pipe(fds.as_mut_ptr()) };
+        if rc < 0 {
+            return Err(io::Error::last_os_error());
+        }
+        for &fd in &fds {
+            // SAFETY: fcntl(2) on a freshly created, owned fd.
+            unsafe { ffi::fcntl(fd, ffi::F_SETFL, ffi::O_NONBLOCK) };
+        }
+        Ok(Waker {
+            read_fd: fds[0],
+            write_fd: fds[1],
+        })
+    }
+
+    pub fn fd(&self) -> RawFd {
+        self.read_fd
+    }
+
+    fn write_fd(&self) -> RawFd {
+        self.write_fd
+    }
+
+    pub fn wake(&self) {
+        let one: u8 = 1;
+        // SAFETY: write(2) on an owned fd; the 1-byte buffer outlives the call.
+        unsafe { unix_ffi::write(self.write_fd, &one as *const u8 as *const _, 1) };
+    }
+
+    pub fn drain(&self) {
+        let mut buf = [0u8; 64];
+        loop {
+            // SAFETY: read(2) into a buffer we own; fd is non-blocking.
+            let n = unsafe { unix_ffi::read(self.read_fd, buf.as_mut_ptr() as *mut _, 64) };
+            if n <= 0 {
+                break;
+            }
+        }
+    }
+}
+
+#[cfg(all(unix, not(target_os = "linux")))]
+impl Drop for Waker {
+    fn drop(&mut self) {
+        // SAFETY: we own both pipe ends.
+        unsafe {
+            unix_ffi::close(self.read_fd);
+            unix_ffi::close(self.write_fd);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Non-unix: unsupported
+// ---------------------------------------------------------------------------
+
+/// Stub poller: construction always fails on non-unix platforms.
+#[cfg(not(unix))]
+pub struct Poller;
+
+#[cfg(not(unix))]
+impl Poller {
+    pub fn new() -> io::Result<Poller> {
+        Err(io::Error::new(
+            io::ErrorKind::Unsupported,
+            "netpoll requires a unix platform (epoll or poll(2))",
+        ))
+    }
+
+    pub fn add(&self, _fd: RawFd, _token: u64) -> io::Result<()> {
+        Err(io::Error::from(io::ErrorKind::Unsupported))
+    }
+
+    pub fn delete(&self, _fd: RawFd) -> io::Result<()> {
+        Err(io::Error::from(io::ErrorKind::Unsupported))
+    }
+
+    pub fn wait(&self, _out: &mut Vec<Event>, _timeout_ms: i32) -> io::Result<usize> {
+        Err(io::Error::from(io::ErrorKind::Unsupported))
+    }
+}
+
+/// Stub waker: construction always fails on non-unix platforms.
+#[cfg(not(unix))]
+pub struct Waker;
+
+#[cfg(not(unix))]
+impl Waker {
+    pub fn new() -> io::Result<Waker> {
+        Err(io::Error::from(io::ErrorKind::Unsupported))
+    }
+
+    pub fn fd(&self) -> RawFd {
+        -1
+    }
+
+    pub fn wake(&self) {}
+
+    pub fn drain(&self) {}
+}
+
+// ---------------------------------------------------------------------------
+// SIGTERM latch
+// ---------------------------------------------------------------------------
+
+static TERM_FLAG: AtomicBool = AtomicBool::new(false);
+static TERM_FD: AtomicI32 = AtomicI32::new(-1);
+
+#[cfg(unix)]
+extern "C" fn term_handler(_sig: std::os::raw::c_int) {
+    TERM_FLAG.store(true, Ordering::SeqCst);
+    let fd = TERM_FD.load(Ordering::SeqCst);
+    if fd >= 0 {
+        let one: u64 = 1;
+        // SAFETY: write(2) is async-signal-safe; the buffer outlives the call.
+        // An eventfd wants exactly 8 bytes; a pipe accepts any prefix of them.
+        unsafe { unix_ffi::write(fd, &one as *const u64 as *const _, 8) };
+    }
+}
+
+/// Route SIGTERM to a latched graceful-drain request: sets the flag read by
+/// [`term_requested`] and tickles `waker` so a blocked poller notices.
+/// Returns false if the handler could not be installed.
+#[cfg(unix)]
+pub fn install_term_handler(waker: &Waker) -> bool {
+    TERM_FD.store(waker.write_fd(), Ordering::SeqCst);
+    let handler = term_handler as extern "C" fn(std::os::raw::c_int) as usize;
+    // SAFETY: installs a handler that performs only async-signal-safe work.
+    let prev = unsafe { unix_ffi::signal(unix_ffi::SIGTERM, handler) };
+    prev != unix_ffi::SIG_ERR
+}
+
+#[cfg(not(unix))]
+pub fn install_term_handler(_waker: &Waker) -> bool {
+    false
+}
+
+/// True once SIGTERM has been delivered (after [`install_term_handler`]).
+pub fn term_requested() -> bool {
+    TERM_FLAG.load(Ordering::SeqCst)
+}
+
+#[cfg(all(test, unix))]
+mod tests {
+    use super::*;
+    use std::io::Write as _;
+    use std::net::{TcpListener, TcpStream};
+
+    #[test]
+    fn waker_wakes_poller_and_drains_quiet() {
+        let poller = Poller::new().expect("poller");
+        let waker = Waker::new().expect("waker");
+        poller.add(waker.fd(), 7).expect("add waker");
+        let mut events = Vec::new();
+
+        // No wake yet: times out empty.
+        let n = poller.wait(&mut events, 10).expect("wait");
+        assert_eq!(n, 0, "unexpected events: {}", events.len());
+
+        waker.wake();
+        let n = poller.wait(&mut events, 1000).expect("wait");
+        assert_eq!(n, 1);
+        assert_eq!(events[0].token, 7);
+        assert!(events[0].readable);
+
+        // Draining consumes the pending wake; polling goes quiet again.
+        waker.drain();
+        let n = poller.wait(&mut events, 10).expect("wait");
+        assert_eq!(n, 0);
+    }
+
+    #[test]
+    fn listener_becomes_readable_on_connect() {
+        let listener = TcpListener::bind("127.0.0.1:0").expect("bind");
+        let addr = listener.local_addr().expect("addr");
+        let poller = Poller::new().expect("poller");
+        poller.add(raw_fd(&listener), 1).expect("add");
+
+        let mut events = Vec::new();
+        let n = poller.wait(&mut events, 10).expect("wait");
+        assert_eq!(n, 0);
+
+        let mut client = TcpStream::connect(addr).expect("connect");
+        let _ = client.write_all(b"x");
+        let n = poller.wait(&mut events, 2000).expect("wait");
+        assert_eq!(n, 1);
+        assert_eq!(events[0].token, 1);
+        assert!(events[0].readable);
+
+        poller.delete(raw_fd(&listener)).expect("delete");
+        let n = poller.wait(&mut events, 10).expect("wait");
+        assert_eq!(n, 0);
+    }
+
+    #[test]
+    fn term_latch_defaults_to_false() {
+        assert!(!term_requested());
+    }
+}
