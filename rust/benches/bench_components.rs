@@ -7,6 +7,7 @@ use quidam::bench_harness::{group, Bench};
 use quidam::config::{AcceleratorConfig, SweepSpace};
 use quidam::dataflow::analyze_layer;
 use quidam::dse;
+use quidam::dse::EvalSource;
 use quidam::models::nas::ArchId;
 use quidam::models::{zoo, Dataset};
 use quidam::pe::PeType;
@@ -150,6 +151,63 @@ fn main() {
             .unwrap_or(f64::NAN),
     );
 
+    group("batched SoA evaluation (dense grid, resnet20)");
+    // The PR 10 tentpole comparison: scalar compiled evaluation rebuilds
+    // all three power tables per point; the batch path fills feature
+    // columns per-axis over 64-lane blocks of grid-adjacent configs, so
+    // an axis value that repeats across a run of lanes is transformed
+    // (log1p + power ladder) once and broadcast. Grid order maximizes
+    // adjacency — the same order `dse::sweep` hands blocks out in.
+    let batch_space = SweepSpace {
+        rows: vec![4, 6, 8, 12, 16],
+        cols: vec![4, 8, 12, 16],
+        sp_if: vec![8, 12, 16],
+        sp_fw: vec![64, 128, 224],
+        sp_ps: vec![16, 24],
+        gb_kib: vec![64, 108],
+        dram_bw: vec![16],
+        pe_types: PeType::ALL.to_vec(),
+    };
+    let grid_cfgs: Vec<AcceleratorConfig> =
+        (0..batch_space.len()).map(|i| batch_space.point(i)).collect();
+    let batch_source = dse::ModelEval::new(
+        &models5,
+        &net.layers,
+        dse::CompiledView::Whole(&compiled),
+    );
+    // Byte-identity spot check before timing — the batch path's
+    // determinism contract is exact, not approximate.
+    let mut batch_pts = Vec::with_capacity(grid_cfgs.len());
+    batch_source.eval_block(&grid_cfgs, &mut batch_pts);
+    for (c, bp) in grid_cfgs.iter().zip(&batch_pts) {
+        let sp = dse::evaluate_compiled(&compiled, c);
+        assert!(
+            sp.latency_s.to_bits() == bp.latency_s.to_bits()
+                && sp.power_mw.to_bits() == bp.power_mw.to_bits()
+                && sp.area_um2.to_bits() == bp.area_um2.to_bits(),
+            "batch-vs-scalar parity broke at {c:?}",
+        );
+    }
+    b.run("ppa/scalar_grid_eval", || {
+        grid_cfgs
+            .iter()
+            .map(|c| dse::evaluate_compiled(&compiled, c))
+            .collect::<Vec<_>>()
+    });
+    b.run("ppa/batch_grid_eval", || {
+        let mut out = Vec::with_capacity(grid_cfgs.len());
+        batch_source.eval_block(&grid_cfgs, &mut out);
+        out
+    });
+    let batch_per_scalar = b
+        .ratio("ppa/scalar_grid_eval", "ppa/batch_grid_eval")
+        .unwrap_or(f64::NAN);
+    println!(
+        "\nbatched-vs-scalar grid evaluation: {batch_per_scalar:.2}x on \
+         {} grid-ordered points (EXPERIMENTS.md §Perf)",
+        grid_cfgs.len(),
+    );
+
     group("sweep engine (points/s, imbalanced coexplore workload)");
     // Co-exploration items are imbalanced by construction: each sampled
     // architecture has a different layer count. Sorting them by cost puts
@@ -173,7 +231,11 @@ fn main() {
         fixed_chunk_eval(work.len(), threads, eval_item)
     });
     b.run("sweep/work_stealing_4t", || {
-        sweep::collect_indexed(work.len(), threads, eval_item)
+        sweep::collect_indexed(
+            &sweep::Plan::new(work.len(), threads),
+            &sweep::SweepCtl::new(),
+            eval_item,
+        )
     });
     let per_item = |name: &str| {
         b.results()
@@ -224,7 +286,7 @@ fn main() {
     let search_res = quidam::search::run_search(
         &search_space,
         &scfg,
-        &search_eval,
+        dse::FnEval(&search_eval),
         None,
         &quidam::sweep::SweepCtl::new(),
         |_, _| {},
@@ -245,7 +307,7 @@ fn main() {
         quidam::search::run_search(
             &search_space,
             &scfg,
-            &search_eval,
+            dse::FnEval(&search_eval),
             None,
             &quidam::sweep::SweepCtl::new(),
             |_, _| {},
@@ -264,9 +326,11 @@ fn main() {
     // CI regression tracking: QUIDAM_BENCH_JSON=path dumps the sweep
     // throughput numbers as JSON. Absolute points/s varies with the
     // runner, so the committed baseline gates on the *normalized* ratios
-    // (work-stealing vs serial on the same machine) with a 25% tolerance
-    // — see .github/workflows/ci.yml and rust/benches/baseline/. The
-    // `search` object is informational (printed, not gated).
+    // (work-stealing vs serial, batch vs scalar — same machine both
+    // sides) with a 25% tolerance — see .github/workflows/ci.yml and
+    // rust/benches/baseline/. `batch_per_scalar` is gated only once the
+    // committed baseline carries a measured value for it. The `search`
+    // object is informational (printed, not gated).
     if let Ok(path) = std::env::var("QUIDAM_BENCH_JSON") {
         use quidam::util::json::Json;
         let serial = per_item("sweep/serial");
@@ -297,6 +361,10 @@ fn main() {
                     (
                         "work_stealing_per_fixed",
                         Json::num_or_null(stealing / fixed.max(1e-12)),
+                    ),
+                    (
+                        "batch_per_scalar",
+                        Json::num_or_null(batch_per_scalar),
                     ),
                 ]),
             ),

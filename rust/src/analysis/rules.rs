@@ -21,7 +21,7 @@ pub const RULES: &[Rule] = &[
         id: "D1",
         summary: "no HashMap/HashSet in serialization, reducer, or \
                   wire-form modules (nondeterministic iteration order)",
-        scopes: &["sweep", "report", "server::distrib"],
+        scopes: &["sweep", "report", "server::distrib", "ppa::batch"],
     },
     Rule {
         id: "D2",
@@ -35,6 +35,7 @@ pub const RULES: &[Rule] = &[
             "accuracy",
             "server::distrib",
             "util::stats",
+            "ppa::batch",
         ],
     },
     Rule {

@@ -97,7 +97,7 @@ pub fn explore_ctl(
     // Compilation itself fans out on the scheduler.
     let compile_worthwhile = hw_per_arch >= 8 * space.pe_types.len().max(1);
     let prepared: Vec<(Vec<crate::models::ConvLayer>, Option<crate::ppa::CompiledNetModel>)> =
-        sweep::collect_indexed_ctl(archs.len(), threads, ctl, |a| {
+        sweep::collect_indexed(&sweep::Plan::new(archs.len(), threads), ctl, |a| {
             let layers = archs[a].to_model(dataset).layers;
             let compiled = if compile_worthwhile {
                 crate::ppa::CompiledNetModel::compile_for(
@@ -112,7 +112,7 @@ pub fn explore_ctl(
         // prepared prefix, so there are no scored pairs to return.
         return Vec::new();
     }
-    sweep::collect_indexed_ctl(work.len(), threads, ctl, |i| {
+    sweep::collect_indexed(&sweep::Plan::new(work.len(), threads), ctl, |i| {
         let (a, cfg) = &work[i];
         let (layers, compiled) = &prepared[*a];
         let pt = match compiled {

@@ -11,7 +11,7 @@ use crate::accuracy::paper::{PaperAccuracy, TABLE2_HW, TABLE3_FCLK};
 use crate::accuracy::AccuracyProvider;
 use crate::coexplore;
 use crate::config::AcceleratorConfig;
-use crate::dse::{self, DesignPoint};
+use crate::dse::{self, DesignPoint, EvalSource};
 use crate::models::{nas, zoo, Dataset};
 use crate::pe::PeType;
 use crate::ppa::{characterize, CompiledNetModel, PpaModels};
@@ -39,10 +39,20 @@ fn sample_points(
     // config then evaluates through the specialized bases.
     let cfgs = sampled_configs(coord, n, seed);
     let compiled = CompiledNetModel::compile(models, layers).ok();
-    sweep::collect_indexed(cfgs.len(), coord.threads, |i| match &compiled {
-        Some(c) => dse::evaluate_compiled(c, &cfgs[i]),
-        None => dse::evaluate(models, &cfgs[i], layers),
-    })
+    let source = dse::ModelEval::new(
+        models,
+        layers,
+        dse::CompiledView::from_option(compiled.as_ref()),
+    );
+    sweep::collect_blocks(
+        &sweep::Plan::new(cfgs.len(), coord.threads),
+        &sweep::SweepCtl::new(),
+        |r| {
+            let mut out = Vec::with_capacity(r.len());
+            source.eval_block(&cfgs[r], &mut out);
+            out
+        },
+    )
 }
 
 /// The four baselines plus `n` uniform samples of the coordinator's space.
@@ -365,8 +375,14 @@ pub fn fig10_11_table2(
         // best-INT16 reference, per-PE top-1 by perf/area AND by energy,
         // and exact per-PE energy minima — no materialized point vector.
         let cfgs = sampled_configs(coord, n, 0xF10);
-        let summary = dse::stream_configs(
-            models, &cfgs, &net.layers, coord.threads,
+        let compiled = CompiledNetModel::compile(models, &net.layers).ok();
+        let source = dse::ModelEval::new(
+            models,
+            &net.layers,
+            dse::CompiledView::from_option(compiled.as_ref()),
+        );
+        let summary = dse::sweep_configs(
+            &source, &cfgs, coord.threads,
             dse::Objective::PerfPerArea, 1);
         let Some(ref_pt) = summary.best_int16 else {
             text += &format!("(skipped {name}: no INT16 point sampled)\n");

@@ -2,8 +2,11 @@
 //! pre-characterized PPA models, normalize against the best-INT16 reference
 //! (the paper's convention in Figs 4/9/10/11), and extract Pareto fronts.
 //!
-//! Evaluation runs on the work-stealing scheduler in [`crate::sweep`];
-//! million-point sweeps should use [`stream_space`], which folds every
+//! Evaluation runs on the work-stealing scheduler in [`crate::sweep`],
+//! in whole blocks: an [`EvalSource`] prices each block of grid-adjacent
+//! configs through the SoA batch engine (`ppa::batch`, DESIGN.md §13),
+//! bit-identical to the scalar accessors. Million-point sweeps should
+//! use [`sweep`], the single ctl-aware entry point that folds every
 //! point into O(front)-memory online reducers instead of materializing a
 //! `Vec<DesignPoint>` (DESIGN.md §4).
 //!
@@ -14,13 +17,16 @@
 //! [`SweepCtl`] observer, never through timestamps taken here.
 
 use std::collections::BTreeMap;
+use std::ops::Range;
+use std::sync::Arc;
 
 use crate::config::{AcceleratorConfig, SweepSpace};
 use crate::models::ConvLayer;
 use crate::pe::PeType;
+use crate::ppa::batch::{MetricsBlock, LANES};
 use crate::ppa::{CompiledNetModel, PpaModels};
 use crate::sweep::reducers::{ParetoFront2D, ParetoFrontN, TopK, YSense};
-use crate::sweep::{self, Reducer, SweepCtl};
+use crate::sweep::{Plan, Reducer, SweepCtl};
 use crate::util::json::Json;
 use crate::util::stats::{FiveNum, StreamingFiveNum};
 
@@ -142,11 +148,156 @@ fn try_compile(
     CompiledNetModel::compile(models, layers).ok()
 }
 
+/// Batch-aware evaluation source: the one abstraction every consumer —
+/// `quidam explore`, the serving layer's sweeps/shards/jobs, the
+/// coordinator's figure harnesses, and the search driver — prices
+/// configs through. The engine hands whole blocks of (usually
+/// grid-adjacent) configs to `eval_block`, so implementations can use
+/// the SoA batch path (`ppa::batch`); per-point closures plug in via
+/// [`FnEval`].
+pub trait EvalSource: Sync {
+    /// Append exactly one evaluated point per config to `out`, in order.
+    fn eval_block(&self, cfgs: &[AcceleratorConfig], out: &mut Vec<DesignPoint>);
+
+    /// Price a single config through the same prepared state the block
+    /// path uses (a 1-lane block) — single-point queries (`POST
+    /// /v1/ppa`) share the compiled models and SoA scratch instead of
+    /// rebuilding per-point tables.
+    fn eval_one(&self, cfg: &AcceleratorConfig) -> DesignPoint {
+        let mut out = Vec::with_capacity(1);
+        self.eval_block(std::slice::from_ref(cfg), &mut out);
+        out.pop().expect("eval_block yields one point per config")
+    }
+}
+
+/// Adapt a per-point closure to [`EvalSource`] — the escape hatch for
+/// evaluators with no batch form (the search tests' synthetic pricer,
+/// bench harness closures).
+pub struct FnEval<E>(pub E);
+
+impl<E> EvalSource for FnEval<E>
+where
+    E: Fn(&AcceleratorConfig) -> DesignPoint + Sync,
+{
+    fn eval_block(&self, cfgs: &[AcceleratorConfig], out: &mut Vec<DesignPoint>) {
+        out.extend(cfgs.iter().map(&self.0));
+    }
+}
+
+/// How a [`ModelEval`] sees its compiled models — covering every caller
+/// shape without copying: one store compiled for the whole sweep (CLI),
+/// the serving layer's per-PE `Arc` cache entries, or none at all
+/// (generic-path fallback when compilation failed).
+pub enum CompiledView<'a> {
+    /// One compiled store covering (at least) the PE types swept.
+    Whole(&'a CompiledNetModel),
+    /// Per-PE cached compiled stores (each `Arc` holds one PE's models).
+    PerPe(&'a BTreeMap<PeType, Arc<CompiledNetModel>>),
+    /// No compiled models: every config prices through the generic path.
+    None,
+}
+
+impl<'a> CompiledView<'a> {
+    pub fn from_option(c: Option<&'a CompiledNetModel>) -> CompiledView<'a> {
+        match c {
+            Some(c) => CompiledView::Whole(c),
+            Option::None => CompiledView::None,
+        }
+    }
+}
+
+/// The standard evaluation source: fitted models plus a workload and an
+/// optional compiled view. This is the shared prepared-state object —
+/// grid sweeps, the search evaluator, and single-point queries all go
+/// through the same compiled models and per-thread SoA batch scratch.
+/// PE types without a compiled store fall back to [`evaluate`].
+pub struct ModelEval<'a> {
+    models: &'a PpaModels,
+    layers: &'a [ConvLayer],
+    compiled: CompiledView<'a>,
+}
+
+impl<'a> ModelEval<'a> {
+    pub fn new(
+        models: &'a PpaModels,
+        layers: &'a [ConvLayer],
+        compiled: CompiledView<'a>,
+    ) -> ModelEval<'a> {
+        ModelEval { models, layers, compiled }
+    }
+
+    fn compiled_for(&self, pe: PeType) -> Option<&CompiledNetModel> {
+        match &self.compiled {
+            CompiledView::Whole(c) => c.has_pe(pe).then_some(*c),
+            CompiledView::PerPe(m) => m.get(&pe).map(|a| a.as_ref()),
+            CompiledView::None => Option::None,
+        }
+    }
+}
+
+impl EvalSource for ModelEval<'_> {
+    fn eval_block(&self, cfgs: &[AcceleratorConfig], out: &mut Vec<DesignPoint>) {
+        let mut mb = MetricsBlock::new();
+        for chunk in cfgs.chunks(LANES) {
+            // Split into contiguous single-PE runs (the PE axis is the
+            // slowest grid axis, so almost every chunk is one run) and
+            // batch-evaluate each through its compiled store.
+            let mut start = 0;
+            while start < chunk.len() {
+                let pe = chunk[start].pe_type;
+                let mut end = start + 1;
+                while end < chunk.len() && chunk[end].pe_type == pe {
+                    end += 1;
+                }
+                let run = &chunk[start..end];
+                match self.compiled_for(pe) {
+                    Some(c) => {
+                        c.eval_block(run, &mut mb);
+                        for (k, cfg) in run.iter().enumerate() {
+                            out.push(design_point(
+                                cfg,
+                                mb.latency_s[k],
+                                mb.power_mw[k],
+                                mb.area_um2[k],
+                            ));
+                        }
+                    }
+                    Option::None => out.extend(
+                        run.iter().map(|cfg| evaluate(self.models, cfg, self.layers)),
+                    ),
+                }
+                start = end;
+            }
+        }
+    }
+}
+
+/// Materialize the grid points of `range` in index order through a batch
+/// source — the engine behind [`evaluate_space`] and the search driver's
+/// population evaluator. A cancelled run returns the contiguous prefix
+/// of completed blocks.
+pub fn collect_points<S: EvalSource>(
+    source: &S,
+    space: &SweepSpace,
+    range: Range<usize>,
+    threads: usize,
+    ctl: &SweepCtl,
+) -> Vec<DesignPoint> {
+    let start = range.start;
+    crate::sweep::collect_blocks(&Plan::new(range.len(), threads), ctl, |r| {
+        let cfgs: Vec<AcceleratorConfig> =
+            r.map(|i| space.point(start + i)).collect();
+        let mut out = Vec::with_capacity(cfgs.len());
+        source.eval_block(&cfgs, &mut out);
+        out
+    })
+}
+
 /// Evaluate every point of a sweep on the work-stealing scheduler,
 /// materializing the results in grid order. The PPA models are compiled
-/// against the workload once; each point then evaluates through the small
-/// specialized bases. For spaces too large to hold in memory use
-/// [`stream_space`] instead.
+/// against the workload once; blocks of points then evaluate through the
+/// SoA batch path. For spaces too large to hold in memory use [`sweep`]
+/// instead.
 pub fn evaluate_space(
     models: &PpaModels,
     space: &SweepSpace,
@@ -154,13 +305,9 @@ pub fn evaluate_space(
     threads: usize,
 ) -> Vec<DesignPoint> {
     let compiled = try_compile(models, layers);
-    sweep::collect_indexed(space.len(), threads, |i| {
-        let cfg = space.point(i);
-        match &compiled {
-            Some(c) => evaluate_compiled(c, &cfg),
-            None => evaluate(models, &cfg, layers),
-        }
-    })
+    let source =
+        ModelEval::new(models, layers, CompiledView::from_option(compiled.as_ref()));
+    collect_points(&source, space, 0..space.len(), threads, &SweepCtl::new())
 }
 
 /// Maximizing objectives a sweep can rank designs by (`quidam explore
@@ -529,163 +676,140 @@ impl Reducer for SweepSummary {
     }
 }
 
-/// Stream an entire sweep through the work-stealing scheduler without
-/// materializing it. Each evaluated point is folded into a
-/// [`SweepSummary`]; `row` may render it into an output line which is
-/// forwarded (bounded, with backpressure) to `sink` on the calling
-/// thread. Peak memory: O(threads x summary), not O(space).
-pub fn stream_space<F, W>(
-    models: &PpaModels,
-    space: &SweepSpace,
-    layers: &[ConvLayer],
-    threads: usize,
-    objective: Objective,
-    top_k: usize,
-    row: F,
-    sink: W,
-) -> SweepSummary
-where
-    F: Fn(&DesignPoint) -> Option<String> + Sync,
-    W: FnMut(String),
-{
-    stream_space_ctl(
-        models, space, layers, threads, objective, top_k, row, sink,
-        &SweepCtl::new(),
-    )
+/// Execution plan of a grid sweep (or a contiguous shard of one).
+#[derive(Debug, Clone)]
+pub struct SweepPlan<'s> {
+    pub space: &'s SweepSpace,
+    /// Grid index range to evaluate; the full grid is `0..space.len()`.
+    pub range: Range<usize>,
+    pub threads: usize,
+    pub objective: Objective,
+    pub top_k: usize,
 }
 
-/// [`stream_space`] with cooperative cancellation + progress. A cancelled
-/// run merges whatever every worker had folded — a consistent partial
-/// summary of exactly `ctl.done()` grid points (blocks fold completely or
-/// not at all), which is how the job manager serves a partial Pareto
-/// front for a cancelled job.
-#[allow(clippy::too_many_arguments)]
-pub fn stream_space_ctl<F, W>(
-    models: &PpaModels,
-    space: &SweepSpace,
-    layers: &[ConvLayer],
-    threads: usize,
-    objective: Objective,
-    top_k: usize,
-    row: F,
-    sink: W,
-    ctl: &SweepCtl,
-) -> SweepSummary
-where
-    F: Fn(&DesignPoint) -> Option<String> + Sync,
-    W: FnMut(String),
-{
-    let compiled = try_compile(models, layers);
-    stream_space_eval(
-        space,
-        threads,
-        objective,
-        top_k,
-        |cfg| match &compiled {
-            Some(c) => evaluate_compiled(c, cfg),
-            None => evaluate(models, cfg, layers),
-        },
-        row,
-        sink,
-        ctl,
-    )
+impl<'s> SweepPlan<'s> {
+    /// Plan covering the whole grid.
+    pub fn full(
+        space: &'s SweepSpace,
+        threads: usize,
+        objective: Objective,
+        top_k: usize,
+    ) -> SweepPlan<'s> {
+        SweepPlan { space, range: 0..space.len(), threads, objective, top_k }
+    }
+
+    /// Plan covering one contiguous shard (from [`crate::sweep::
+    /// shard_ranges`]). `ctl.done()` then counts *shard-local* progress.
+    pub fn shard(
+        space: &'s SweepSpace,
+        range: Range<usize>,
+        threads: usize,
+        objective: Objective,
+        top_k: usize,
+    ) -> SweepPlan<'s> {
+        SweepPlan { space, range, threads, objective, top_k }
+    }
 }
 
-/// [`stream_space_ctl`] with a caller-supplied per-config evaluator — the
-/// serving layer evaluates through *cached* workload-compiled models, so
-/// the engine must not insist on compiling its own copy per request.
-#[allow(clippy::too_many_arguments)]
-pub fn stream_space_eval<E, F, W>(
-    space: &SweepSpace,
-    threads: usize,
-    objective: Objective,
-    top_k: usize,
-    eval: E,
+/// Per-worker fold state of a streaming sweep: the summary plus reusable
+/// config/point block buffers (batch scratch lives in thread-locals
+/// inside `ppa::batch`).
+struct Fold {
+    summary: SweepSummary,
+    cfgs: Vec<AcceleratorConfig>,
+    pts: Vec<DesignPoint>,
+}
+
+impl Reducer for Fold {
+    fn merge(&mut self, other: Self) {
+        self.summary.merge(other.summary);
+    }
+}
+
+/// Stream a grid sweep (or shard) through the work-stealing scheduler
+/// without materializing it — the single ctl-aware, batch-aware entry
+/// point behind `quidam explore`, `/v1/sweep`, distributed shards, and
+/// sweep jobs. Each block of grid-adjacent configs is priced through
+/// `source` in one SoA batch; every point folds into a [`SweepSummary`],
+/// and `row` may render it into an output line forwarded (bounded, with
+/// backpressure) to `sink` on the calling thread. Peak memory:
+/// O(threads × summary), not O(space).
+///
+/// A cancelled run merges whatever every worker had folded — a
+/// consistent partial summary of exactly `ctl.done()` points (blocks
+/// fold completely or not at all), which is how the job manager serves a
+/// partial Pareto front for a cancelled job. Because `SweepSummary`
+/// merging is order-invariant, the merge of every shard's summary equals
+/// the single-process summary of the whole grid — the distributed
+/// layer's correctness contract (DESIGN.md §7).
+pub fn sweep<S, F, W>(
+    plan: &SweepPlan<'_>,
+    source: &S,
     row: F,
     sink: W,
     ctl: &SweepCtl,
 ) -> SweepSummary
 where
-    E: Fn(&AcceleratorConfig) -> DesignPoint + Sync,
+    S: EvalSource,
     F: Fn(&DesignPoint) -> Option<String> + Sync,
     W: FnMut(String),
 {
-    sweep::map_reduce_stream_ctl(
-        space.len(),
-        threads,
-        || SweepSummary::new(objective, top_k),
-        |i, summary| {
-            let p = eval(&space.point(i));
-            summary.observe(&p);
-            row(&p)
+    let space = plan.space;
+    let start = plan.range.start;
+    let fold = crate::sweep::run_blocks(
+        &Plan::new(plan.range.len(), plan.threads),
+        || Fold {
+            summary: SweepSummary::new(plan.objective, plan.top_k),
+            cfgs: Vec::new(),
+            pts: Vec::new(),
+        },
+        |r, w, emit| {
+            w.cfgs.clear();
+            w.cfgs.extend(r.map(|i| space.point(start + i)));
+            w.pts.clear();
+            source.eval_block(&w.cfgs, &mut w.pts);
+            for p in &w.pts {
+                w.summary.observe(p);
+                if let Some(line) = row(p) {
+                    emit(line);
+                }
+            }
         },
         sink,
         ctl,
-    )
+    );
+    fold.summary
 }
 
-/// Shard-scoped [`stream_space_eval`]: evaluate only the grid indices in
-/// `range` (a contiguous shard from [`sweep::shard_ranges`]) on the
-/// work-stealing scheduler. `ctl.done()` counts *shard-local* progress.
-/// Because `SweepSummary` merging is order-invariant, the merge of every
-/// shard's summary equals the single-process summary of the whole grid —
-/// the distributed layer's correctness contract (DESIGN.md §7).
-#[allow(clippy::too_many_arguments)]
-pub fn stream_shard_eval<E, F, W>(
-    space: &SweepSpace,
-    range: std::ops::Range<usize>,
-    threads: usize,
-    objective: Objective,
-    top_k: usize,
-    eval: E,
-    row: F,
-    sink: W,
-    ctl: &SweepCtl,
-) -> SweepSummary
-where
-    E: Fn(&AcceleratorConfig) -> DesignPoint + Sync,
-    F: Fn(&DesignPoint) -> Option<String> + Sync,
-    W: FnMut(String),
-{
-    let start = range.start;
-    sweep::map_reduce_stream_ctl(
-        range.len(),
-        threads,
-        || SweepSummary::new(objective, top_k),
-        |i, summary| {
-            let p = eval(&space.point(start + i));
-            summary.observe(&p);
-            row(&p)
-        },
-        sink,
-        ctl,
-    )
-}
-
-/// Stream an explicit config list (rather than a grid) into a
-/// [`SweepSummary`] on the work-stealing scheduler. Used by the figure
-/// harnesses, whose sampled sweeps include hand-picked baselines.
-pub fn stream_configs(
-    models: &PpaModels,
+/// Fold an explicit config list (rather than a grid) into a
+/// [`SweepSummary`] on the work-stealing scheduler, block-batched like
+/// [`sweep`]. Used by the figure harnesses, whose sampled sweeps include
+/// hand-picked baselines.
+pub fn sweep_configs<S: EvalSource>(
+    source: &S,
     cfgs: &[AcceleratorConfig],
-    layers: &[ConvLayer],
     threads: usize,
     objective: Objective,
     top_k: usize,
 ) -> SweepSummary {
-    let compiled = try_compile(models, layers);
-    sweep::map_reduce(
-        cfgs.len(),
-        threads,
-        || SweepSummary::new(objective, top_k),
-        |i, summary| {
-            let p = match &compiled {
-                Some(c) => evaluate_compiled(c, &cfgs[i]),
-                None => evaluate(models, &cfgs[i], layers),
-            };
-            summary.observe(&p);
+    let fold = crate::sweep::run_blocks(
+        &Plan::new(cfgs.len(), threads),
+        || Fold {
+            summary: SweepSummary::new(objective, top_k),
+            cfgs: Vec::new(),
+            pts: Vec::new(),
         },
-    )
+        |r, w, _emit| {
+            w.pts.clear();
+            source.eval_block(&cfgs[r], &mut w.pts);
+            for p in &w.pts {
+                w.summary.observe(p);
+            }
+        },
+        |_row| {},
+        &SweepCtl::new(),
+    );
+    fold.summary
 }
 
 /// The paper's normalization reference: the INT16 config with the highest
@@ -822,6 +946,15 @@ mod tests {
         }
     }
 
+    /// The standard test source: compiled when possible, like production.
+    fn source<'a>(
+        m: &'a PpaModels,
+        layers: &'a [ConvLayer],
+        compiled: &'a Option<CompiledNetModel>,
+    ) -> ModelEval<'a> {
+        ModelEval::new(m, layers, CompiledView::from_option(compiled.as_ref()))
+    }
+
     #[test]
     fn evaluate_space_covers_grid_and_parallel_matches_serial() {
         let m = models();
@@ -938,21 +1071,19 @@ mod tests {
     }
 
     #[test]
-    fn cancelled_stream_space_stops_quickly_with_consistent_reducers() {
+    fn cancelled_sweep_stops_quickly_with_consistent_reducers() {
         let m = models();
         let layers = &zoo::resnet_cifar(20, Dataset::Cifar10).layers;
         let space = SweepSpace::default();
         let n = space.len();
         let ctl = SweepCtl::new();
+        let compiled = try_compile(&m, layers);
+        let src = source(&m, layers, &compiled);
         // Cancel from the row callback after the very first evaluated
         // point; workers stop at their next block boundary.
-        let summary = stream_space_ctl(
-            &m,
-            &space,
-            layers,
-            4,
-            Objective::PerfPerArea,
-            3,
+        let summary = sweep(
+            &SweepPlan::full(&space, 4, Objective::PerfPerArea, 3),
+            &src,
             |_p| {
                 ctl.cancel();
                 None
@@ -999,26 +1130,27 @@ mod tests {
         let layers = &zoo::resnet_cifar(20, Dataset::Cifar10).layers;
         let space = small_space();
         let n = space.len();
-        let single = stream_space(
-            &m,
-            &space,
-            layers,
-            2,
-            Objective::PerfPerArea,
-            3,
+        let compiled = try_compile(&m, layers);
+        let src = source(&m, layers, &compiled);
+        let single = sweep(
+            &SweepPlan::full(&space, 2, Objective::PerfPerArea, 3),
+            &src,
             |_p| None,
             |_row| {},
+            &SweepCtl::new(),
         );
         for shards in [2usize, 3, 5] {
             let mut merged: Option<SweepSummary> = None;
             for range in crate::sweep::shard_ranges(n, shards) {
-                let part = stream_shard_eval(
-                    &space,
-                    range,
-                    2,
-                    Objective::PerfPerArea,
-                    3,
-                    |cfg| evaluate(&m, cfg, layers),
+                let part = sweep(
+                    &SweepPlan::shard(
+                        &space,
+                        range,
+                        2,
+                        Objective::PerfPerArea,
+                        3,
+                    ),
+                    &src,
                     |_p| None,
                     |_row| {},
                     &SweepCtl::new(),
@@ -1048,15 +1180,15 @@ mod tests {
     fn summary_json_roundtrip_is_byte_identical() {
         let m = models();
         let layers = &zoo::resnet_cifar(20, Dataset::Cifar10).layers;
-        let s = stream_space(
-            &m,
-            &small_space(),
-            layers,
-            2,
-            Objective::Energy,
-            2,
+        let space = small_space();
+        let compiled = try_compile(&m, layers);
+        let src = source(&m, layers, &compiled);
+        let s = sweep(
+            &SweepPlan::full(&space, 2, Objective::Energy, 2),
+            &src,
             |_p| None,
             |_row| {},
+            &SweepCtl::new(),
         );
         let wire = s.to_json().to_string();
         let back = SweepSummary::from_json(&Json::parse(&wire).unwrap())
@@ -1105,15 +1237,15 @@ mod tests {
     fn front3_is_absent_until_observed_and_preserves_legacy_bytes() {
         let m = models();
         let layers = &zoo::resnet_cifar(20, Dataset::Cifar10).layers;
-        let mut s = stream_space(
-            &m,
-            &small_space(),
-            layers,
-            2,
-            Objective::Energy,
-            2,
+        let space = small_space();
+        let compiled = try_compile(&m, layers);
+        let src = source(&m, layers, &compiled);
+        let mut s = sweep(
+            &SweepPlan::full(&space, 2, Objective::Energy, 2),
+            &src,
             |_p| None,
             |_row| {},
+            &SweepCtl::new(),
         );
         let wire = s.to_json().to_string();
         assert!(
@@ -1254,20 +1386,19 @@ mod tests {
     }
 
     #[test]
-    fn stream_space_summary_matches_batch() {
+    fn streaming_sweep_summary_matches_materialized_points() {
         let m = models();
         let layers = &zoo::resnet_cifar(20, Dataset::Cifar10).layers;
         let space = small_space();
+        let compiled = try_compile(&m, layers);
+        let src = source(&m, layers, &compiled);
         let mut rows = 0usize;
-        let summary = stream_space(
-            &m,
-            &space,
-            layers,
-            4,
-            Objective::PerfPerArea,
-            3,
+        let summary = sweep(
+            &SweepPlan::full(&space, 4, Objective::PerfPerArea, 3),
+            &src,
             |_p| Some(String::new()),
             |_row| rows += 1,
+            &SweepCtl::new(),
         );
         assert_eq!(summary.count, space.len());
         assert_eq!(rows, space.len());
@@ -1305,5 +1436,117 @@ mod tests {
             assert_eq!(summary.obj_stats[&pe].count, per_pe);
             assert_eq!(summary.energy_stats[&pe].count, per_pe);
         }
+    }
+
+    #[test]
+    fn batch_path_is_byte_identical_to_scalar_across_threads() {
+        // The batch determinism contract: the SoA block path serializes
+        // every DesignPoint to exactly the bytes of the scalar compiled
+        // path, across the full dense grid, all PE types, and every
+        // thread count (block boundaries shift with scheduling, so this
+        // also exercises mid-grid block starts).
+        let m = models();
+        let layers = &zoo::resnet_cifar(20, Dataset::Cifar10).layers;
+        let space = small_space();
+        let compiled = try_compile(&m, layers).expect("compile");
+        let scalar: Vec<String> = (0..space.len())
+            .map(|i| {
+                evaluate_compiled(&compiled, &space.point(i))
+                    .to_json()
+                    .to_string()
+            })
+            .collect();
+        for threads in [1usize, 4, 8] {
+            let pts = evaluate_space(&m, &space, layers, threads);
+            assert_eq!(pts.len(), scalar.len());
+            for (i, p) in pts.iter().enumerate() {
+                assert_eq!(
+                    p.to_json().to_string(),
+                    scalar[i],
+                    "threads={threads} grid index {i}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn eval_one_reuses_block_state_and_matches_scalar_bytes() {
+        // Single-point queries go through the same prepared state as
+        // blocks (a 1-lane block) and stay byte-identical to the scalar
+        // path — including when the shared thread-local scratch was just
+        // used by a full-width block.
+        let m = models();
+        let layers = &zoo::resnet_cifar(20, Dataset::Cifar10).layers;
+        let space = small_space();
+        let compiled = try_compile(&m, layers);
+        let src = source(&m, layers, &compiled);
+        // Dirty the scratch with a full block first.
+        let mut out = Vec::new();
+        let cfgs: Vec<AcceleratorConfig> =
+            (0..space.len()).map(|i| space.point(i)).collect();
+        src.eval_block(&cfgs, &mut out);
+        let c = compiled.as_ref().unwrap();
+        for i in [0usize, 1, space.len() / 2, space.len() - 1] {
+            let cfg = space.point(i);
+            assert_eq!(
+                src.eval_one(&cfg).to_json().to_string(),
+                evaluate_compiled(c, &cfg).to_json().to_string(),
+                "grid index {i}"
+            );
+        }
+    }
+
+    #[test]
+    fn unified_sweep_matches_serial_fold_byte_for_byte() {
+        // threads=1 folds in grid order, so the whole summary — P2
+        // quantile state included — must serialize to exactly the bytes
+        // of a hand-rolled serial fold over the scalar path.
+        let m = models();
+        let layers = &zoo::resnet_cifar(20, Dataset::Cifar10).layers;
+        let space = small_space();
+        let compiled = try_compile(&m, layers);
+        let src = source(&m, layers, &compiled);
+        let s = sweep(
+            &SweepPlan::full(&space, 1, Objective::PerfPerArea, 3),
+            &src,
+            |_p| None,
+            |_row| {},
+            &SweepCtl::new(),
+        );
+        let c = compiled.as_ref().unwrap();
+        let mut manual = SweepSummary::new(Objective::PerfPerArea, 3);
+        for i in 0..space.len() {
+            manual.observe(&evaluate_compiled(c, &space.point(i)));
+        }
+        assert_eq!(s.to_json().to_string(), manual.to_json().to_string());
+    }
+
+    #[test]
+    fn sweep_configs_matches_manual_fold() {
+        let m = models();
+        let layers = &zoo::resnet_cifar(20, Dataset::Cifar10).layers;
+        let space = small_space();
+        let compiled = try_compile(&m, layers);
+        let src = source(&m, layers, &compiled);
+        let cfgs: Vec<AcceleratorConfig> =
+            (0..space.len()).step_by(3).map(|i| space.point(i)).collect();
+        let serial = sweep_configs(&src, &cfgs, 1, Objective::Energy, 2);
+        let c = compiled.as_ref().unwrap();
+        let mut manual = SweepSummary::new(Objective::Energy, 2);
+        for cfg in &cfgs {
+            manual.observe(&evaluate_compiled(c, cfg));
+        }
+        assert_eq!(
+            serial.to_json().to_string(),
+            manual.to_json().to_string()
+        );
+        // Threaded: fold order shifts, so compare the order-invariant
+        // pieces (front bytes + count), like the sharded contract.
+        let par = sweep_configs(&src, &cfgs, 4, Objective::Energy, 2);
+        assert_eq!(par.count, serial.count);
+        assert_eq!(
+            par.front.to_json_with(|c| c.to_json()).to_string(),
+            serial.front.to_json_with(|c| c.to_json()).to_string()
+        );
     }
 }

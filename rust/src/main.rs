@@ -283,8 +283,16 @@ fn run_explore(coord: &Coordinator, args: &Args, out: &std::path::Path) -> anyho
     let mut span = quidam::obs::trace::maybe_span(&trace, "explore.sweep");
     let t0 = Instant::now();
     let mut write_err: Option<std::io::Error> = None;
-    let summary = dse::stream_space(
-        &models, &space, &net.layers, threads, objective, top_k, row,
+    let compiled = quidam::ppa::CompiledNetModel::compile(&models, &net.layers).ok();
+    let source = dse::ModelEval::new(
+        &models,
+        &net.layers,
+        dse::CompiledView::from_option(compiled.as_ref()),
+    );
+    let summary = dse::sweep(
+        &dse::SweepPlan::full(&space, threads, objective, top_k),
+        &source,
+        row,
         |line| {
             if write_err.is_none() {
                 if let Some(w) = writer.as_mut() {
@@ -294,6 +302,7 @@ fn run_explore(coord: &Coordinator, args: &Args, out: &std::path::Path) -> anyho
                 }
             }
         },
+        &quidam::sweep::SweepCtl::new(),
     );
     let dt = t0.elapsed().as_secs_f64();
     if let Some(sp) = &mut span {
@@ -444,10 +453,11 @@ fn run_search_cmd(
     let models = models_for(coord, &margs)?;
     let compiled =
         quidam::ppa::CompiledNetModel::compile(&models, &net.layers).ok();
-    let eval = |cfg: &AcceleratorConfig| match &compiled {
-        Some(c) => dse::evaluate_compiled(c, cfg),
-        None => dse::evaluate(&models, cfg, &net.layers),
-    };
+    let source = dse::ModelEval::new(
+        &models,
+        &net.layers,
+        dse::CompiledView::from_option(compiled.as_ref()),
+    );
 
     let n = space.len();
     println!(
@@ -478,7 +488,7 @@ fn run_search_cmd(
     let result = quidam::search::run_search(
         &space,
         &scfg,
-        &eval,
+        source,
         proxy.as_ref(),
         &quidam::sweep::SweepCtl::new(),
         |stat, _summary| {
@@ -554,6 +564,11 @@ fn run_search_cmd(
     if vs_grid {
         // Exhaustive reference sweep over the same grid and eval path;
         // one shared reference point makes the hypervolumes comparable.
+        let grid_source = dse::ModelEval::new(
+            &models,
+            &net.layers,
+            dse::CompiledView::from_option(compiled.as_ref()),
+        );
         let three = match (&proxy, &result.summary.front3) {
             (Some(p), Some(f3)) => Some((p, f3)),
             _ => None,
@@ -570,12 +585,14 @@ fn run_search_cmd(
                     dse::FRONT3_SENSES.to_vec(),
                 ),
             );
-            dse::stream_space_eval(
-                &space,
-                scfg.threads,
-                objective,
-                scfg.top_k,
-                &eval,
+            dse::sweep(
+                &dse::SweepPlan::full(
+                    &space,
+                    scfg.threads,
+                    objective,
+                    scfg.top_k,
+                ),
+                &grid_source,
                 |p| {
                     let acc =
                         proxy.predict_accuracy(p.cfg.pe_type, &native);
@@ -633,12 +650,14 @@ fn run_search_cmd(
                 ),
             )
         } else {
-            let grid = dse::stream_space_eval(
-                &space,
-                scfg.threads,
-                objective,
-                scfg.top_k,
-                &eval,
+            let grid = dse::sweep(
+                &dse::SweepPlan::full(
+                    &space,
+                    scfg.threads,
+                    objective,
+                    scfg.top_k,
+                ),
+                &grid_source,
                 |_p| None,
                 |_row| {},
                 &quidam::sweep::SweepCtl::new(),

@@ -1,0 +1,545 @@
+//! Batched structure-of-arrays (SoA) evaluation of compiled PPA models
+//! (DESIGN.md §13).
+//!
+//! The scalar hot path ([`CompiledNetModel::network_latency_s`] and
+//! friends) prices one config at a time: one power table fill and one
+//! dot product per model per point. This module evaluates a block of up
+//! to [`LANES`] configs at once against the same compiled models:
+//!
+//! * **SoA power tables.** The per-feature exponent table is transposed
+//!   so each `(feature, exponent)` entry holds a contiguous column of
+//!   lane values (`powers[(i * stride + e) * LANES + b]`). Coefficient
+//!   folds become column-wise multiply-accumulate loops over contiguous
+//!   `f64` slices — fixed-bound chunks the autovectorizer can digest.
+//! * **Adjacency-incremental fills.** Sweep blocks decode grid-adjacent
+//!   indices, so along a block most features are constant: only the
+//!   fastest-varying axis (`rows`) changes per lane. The fill detects
+//!   runs of bit-identical raw values and computes the exponent ladder
+//!   once per run, broadcasting it across the lane range instead of
+//!   rebuilding the table per point.
+//!
+//! **Byte-identity contract:** for every lane, the sequence of f64
+//! operations is exactly the scalar path's — same transform (`ln(1+x)`,
+//! scale divide), same sequential exponent ladder, same per-term factor
+//! multiply order, same accumulation order across terms and layers, same
+//! exp/clamp tail. Broadcasting a run's ladder is bit-exact because the
+//! ladder is a pure function of the raw value. The parity tests below
+//! compare bits, not approximate values, and every determinism gate
+//! (1-vs-N-thread smokes, shard merges) rides on this.
+
+use std::cell::RefCell;
+
+use crate::config::AcceleratorConfig;
+use crate::regression::poly::FlatBasis;
+use crate::regression::{log1p_val, PolyModel};
+
+use super::compiled::{CompiledNetModel, CompiledPeModels};
+use super::cfg_latency_features;
+
+/// Block width: one cache line of lanes per `(feature, exponent)` column
+/// at 8 B/f64 keeps a 6-feature cubic table (~24 hot columns) around
+/// 12 KiB — resident in L1 — while matching the sweep engine's default
+/// work block so a claimed block is one batch.
+pub const LANES: usize = 64;
+
+/// SoA outputs of one evaluated block: lane `b` holds the metrics of
+/// `cfgs[b]`, bit-identical to the scalar accessors on the same config.
+pub struct MetricsBlock {
+    pub latency_s: [f64; LANES],
+    pub power_mw: [f64; LANES],
+    pub area_um2: [f64; LANES],
+}
+
+impl MetricsBlock {
+    pub fn new() -> MetricsBlock {
+        MetricsBlock {
+            latency_s: [0.0; LANES],
+            power_mw: [0.0; LANES],
+            area_um2: [0.0; LANES],
+        }
+    }
+}
+
+impl Default for MetricsBlock {
+    fn default() -> MetricsBlock {
+        MetricsBlock::new()
+    }
+}
+
+/// One model basis' SoA state: raw feature columns and the transposed
+/// power table. Buffers are grown once and reused across blocks.
+struct SoaTable {
+    dim: usize,
+    stride: usize,
+    /// Raw (untransformed) feature columns: `raw[i * LANES + b]`.
+    raw: Vec<f64>,
+    /// Transposed exponent table: `powers[(i * stride + e) * LANES + b]`.
+    /// Exponent-0 rows are initialized to 1.0 and never rewritten (no
+    /// compiled term carries a zero exponent; the scalar table keeps the
+    /// same convention).
+    powers: Vec<f64>,
+    /// Per-run exponent ladder scratch (`stride` slots).
+    ladder: Vec<f64>,
+}
+
+impl SoaTable {
+    fn new() -> SoaTable {
+        SoaTable {
+            dim: 0,
+            stride: 0,
+            raw: Vec::new(),
+            powers: Vec::new(),
+            ladder: Vec::new(),
+        }
+    }
+
+    fn ensure(&mut self, dim: usize, stride: usize) {
+        if self.dim != dim || self.stride != stride {
+            self.dim = dim;
+            self.stride = stride;
+            self.raw.clear();
+            self.raw.resize(dim * LANES, 0.0);
+            self.powers.clear();
+            self.powers.resize(dim * stride * LANES, 1.0);
+            self.ladder.clear();
+            self.ladder.resize(stride.max(1), 1.0);
+        }
+    }
+
+    /// Fill the power table for lanes `0..n` from the raw columns,
+    /// replicating `FlatBasis::fill_powers`' per-value op order:
+    /// `xs = transform(x) / scale`, then a sequential multiply ladder.
+    /// Runs of bit-identical raw values compute the ladder once and
+    /// broadcast it — the adjacency-incremental update (bit-exact: the
+    /// ladder depends only on the value).
+    fn fill(&mut self, flat: &FlatBasis, log_features: bool, n: usize) {
+        debug_assert!(n <= LANES);
+        debug_assert_eq!(self.dim, flat.dim());
+        debug_assert_eq!(self.stride, flat.stride());
+        let stride = self.stride;
+        let scale = flat.scale();
+        for i in 0..self.dim {
+            let col = &self.raw[i * LANES..i * LANES + n];
+            let mut b = 0;
+            while b < n {
+                let v = col[b];
+                let bits = v.to_bits();
+                let mut end = b + 1;
+                while end < n && col[end].to_bits() == bits {
+                    end += 1;
+                }
+                let tv = if log_features { log1p_val(v) } else { v };
+                let xs = tv / scale[i];
+                let mut p = 1.0;
+                for e in 1..stride {
+                    p *= xs;
+                    self.ladder[e] = p;
+                }
+                for e in 1..stride {
+                    let row = (i * stride + e) * LANES;
+                    let seg = &mut self.powers[row + b..row + end];
+                    seg.fill(self.ladder[e]);
+                }
+                b = end;
+            }
+        }
+    }
+}
+
+/// Column-wise multiply-accumulate of one folded coefficient vector over
+/// a prepared SoA table. Per lane this is exactly
+/// `FlatBasis::dot_prepared`: `v = coef[t]`, multiply the term's factors
+/// in storage order, accumulate across terms in order. Every inner loop
+/// runs over a contiguous `&[f64]` of at most [`LANES`] elements.
+fn dot_columns(
+    flat: &FlatBasis,
+    coef: &[f64],
+    powers: &[f64],
+    n: usize,
+    acc: &mut [f64; LANES],
+    v: &mut [f64; LANES],
+) {
+    let stride = flat.stride();
+    for a in acc[..n].iter_mut() {
+        *a = 0.0;
+    }
+    for t in 0..flat.num_terms() {
+        let c = coef[t];
+        for vb in v[..n].iter_mut() {
+            *vb = c;
+        }
+        for &(i, e) in flat.factors_of(t) {
+            let row = (i as usize * stride + e as usize) * LANES;
+            let col = &powers[row..row + n];
+            for (vb, rb) in v[..n].iter_mut().zip(col) {
+                *vb *= rb;
+            }
+        }
+        for (ab, vb) in acc[..n].iter_mut().zip(v[..n].iter()) {
+            *ab += vb;
+        }
+    }
+}
+
+/// Reusable batch scratch: one SoA table per model basis (latency, power,
+/// area — power and area own their scales, so each keeps its own table).
+/// One per thread; allocation-free after the first block.
+pub struct BatchCtx {
+    lat: SoaTable,
+    pow: SoaTable,
+    area: SoaTable,
+}
+
+impl BatchCtx {
+    pub fn new() -> BatchCtx {
+        BatchCtx {
+            lat: SoaTable::new(),
+            pow: SoaTable::new(),
+            area: SoaTable::new(),
+        }
+    }
+}
+
+impl Default for BatchCtx {
+    fn default() -> BatchCtx {
+        BatchCtx::new()
+    }
+}
+
+thread_local! {
+    /// Per-thread batch scratch for callers without their own context —
+    /// the batched analogue of the scalar path's `POWERS` buffer.
+    static CTX: RefCell<BatchCtx> = RefCell::new(BatchCtx::new());
+}
+
+/// Fill power/area-style feature columns (`AcceleratorConfig::
+/// ppa_features`: sp_if, sp_ps, sp_fw, num_pes, gb_kib) per axis.
+fn fill_ppa_columns(raw: &mut [f64], cfgs: &[AcceleratorConfig]) {
+    for (b, c) in cfgs.iter().enumerate() {
+        raw[b] = c.sp_if as f64;
+    }
+    for (b, c) in cfgs.iter().enumerate() {
+        raw[LANES + b] = c.sp_ps as f64;
+    }
+    for (b, c) in cfgs.iter().enumerate() {
+        raw[2 * LANES + b] = c.sp_fw as f64;
+    }
+    for (b, c) in cfgs.iter().enumerate() {
+        raw[3 * LANES + b] = c.num_pes() as f64;
+    }
+    for (b, c) in cfgs.iter().enumerate() {
+        raw[4 * LANES + b] = c.gb_kib as f64;
+    }
+}
+
+/// Fill latency feature columns (`ppa::cfg_latency_features`: sp_if,
+/// sp_ps, sp_fw, rows, cols, gb_kib) per axis. In grid order only `rows`
+/// (feature 3) varies lane-to-lane, so the other columns collapse to
+/// single runs in [`SoaTable::fill`].
+fn fill_latency_columns(raw: &mut [f64], cfgs: &[AcceleratorConfig]) {
+    for (b, c) in cfgs.iter().enumerate() {
+        raw[b] = c.sp_if as f64;
+    }
+    for (b, c) in cfgs.iter().enumerate() {
+        raw[LANES + b] = c.sp_ps as f64;
+    }
+    for (b, c) in cfgs.iter().enumerate() {
+        raw[2 * LANES + b] = c.sp_fw as f64;
+    }
+    for (b, c) in cfgs.iter().enumerate() {
+        raw[3 * LANES + b] = c.rows as f64;
+    }
+    for (b, c) in cfgs.iter().enumerate() {
+        raw[4 * LANES + b] = c.cols as f64;
+    }
+    for (b, c) in cfgs.iter().enumerate() {
+        raw[5 * LANES + b] = c.gb_kib as f64;
+    }
+}
+
+/// Batch `PolyModel::predict` over prepared columns: fill, one MAC pass,
+/// per-lane exp tail. Same per-lane op order as the scalar `predict`.
+fn predict_columns(
+    model: &PolyModel,
+    table: &mut SoaTable,
+    cfgs: &[AcceleratorConfig],
+    out: &mut [f64],
+) {
+    let n = cfgs.len();
+    table.ensure(model.flat.dim(), model.flat.stride());
+    fill_ppa_columns(&mut table.raw, cfgs);
+    table.fill(&model.flat, model.log_features, n);
+    let mut acc = [0.0; LANES];
+    let mut v = [0.0; LANES];
+    dot_columns(&model.flat, &model.coef, &table.powers, n, &mut acc, &mut v);
+    for (ob, ab) in out[..n].iter_mut().zip(acc[..n].iter()) {
+        let y = *ab;
+        *ob = if model.log_target { y.exp() } else { y };
+    }
+}
+
+impl CompiledPeModels {
+    /// Evaluate one single-PE run of configs into `out[off..off + n]`.
+    fn eval_run(
+        &self,
+        cfgs: &[AcceleratorConfig],
+        ctx: &mut BatchCtx,
+        out: &mut MetricsBlock,
+        off: usize,
+    ) {
+        let n = cfgs.len();
+        // Latency: one table fill per block, one MAC pass per unique
+        // layer, exp/clamp/weighted-sum tail per lane — the scalar
+        // `network_latency_s` loop, column-wise.
+        if self.lat_layers.is_empty() {
+            for lb in out.latency_s[off..off + n].iter_mut() {
+                *lb = 0.0;
+            }
+        } else {
+            let flat = &self.lat_flat;
+            ctx.lat.ensure(flat.dim(), flat.stride());
+            fill_latency_columns(&mut ctx.lat.raw, cfgs);
+            ctx.lat.fill(flat, self.lat_log_features, n);
+            let mut total = [0.0; LANES];
+            let mut acc = [0.0; LANES];
+            let mut v = [0.0; LANES];
+            for (coef, mult) in &self.lat_layers {
+                dot_columns(flat, coef, &ctx.lat.powers, n, &mut acc, &mut v);
+                for (tb, ab) in total[..n].iter_mut().zip(acc[..n].iter()) {
+                    let mut y = *ab;
+                    if self.lat_log_target {
+                        y = y.exp();
+                    }
+                    *tb += mult * if y.is_finite() { y.clamp(1e-9, 1e4) } else { 1e4 };
+                }
+            }
+            out.latency_s[off..off + n].copy_from_slice(&total[..n]);
+        }
+        predict_columns(
+            &self.power,
+            &mut ctx.pow,
+            cfgs,
+            &mut out.power_mw[off..off + n],
+        );
+        predict_columns(
+            &self.area,
+            &mut ctx.area,
+            cfgs,
+            &mut out.area_um2[off..off + n],
+        );
+    }
+}
+
+impl CompiledNetModel {
+    /// Evaluate a block of configs (`cfgs.len() <= LANES`) into `out`,
+    /// using the per-thread batch scratch. Lane `b` of `out` is
+    /// bit-identical to the scalar accessors on `cfgs[b]`. Mixed-PE
+    /// blocks are split into contiguous single-PE runs (the PE axis is
+    /// the slowest-varying grid axis, so at most a handful per sweep);
+    /// every PE type present must have been compiled (see
+    /// [`CompiledNetModel::has_pe`]).
+    pub fn eval_block(&self, cfgs: &[AcceleratorConfig], out: &mut MetricsBlock) {
+        CTX.with(|c| self.eval_block_with(cfgs, &mut c.borrow_mut(), out))
+    }
+
+    /// [`eval_block`] with an explicit scratch context (benches and tests
+    /// that want deterministic reuse across calls).
+    ///
+    /// [`eval_block`]: CompiledNetModel::eval_block
+    pub fn eval_block_with(
+        &self,
+        cfgs: &[AcceleratorConfig],
+        ctx: &mut BatchCtx,
+        out: &mut MetricsBlock,
+    ) {
+        assert!(
+            cfgs.len() <= LANES,
+            "batch of {} exceeds LANES={LANES}",
+            cfgs.len()
+        );
+        let mut start = 0;
+        while start < cfgs.len() {
+            let pe = cfgs[start].pe_type;
+            let mut end = start + 1;
+            while end < cfgs.len() && cfgs[end].pe_type == pe {
+                end += 1;
+            }
+            self.pe(pe).eval_run(&cfgs[start..end], ctx, out, start);
+            start = end;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SweepSpace;
+    use crate::models::{zoo, Dataset};
+    use crate::pe::PeType;
+    use crate::ppa::{characterize, CompiledNetModel, PpaModels};
+    use crate::tech::TechLibrary;
+    use std::collections::BTreeMap;
+
+    fn fitted() -> PpaModels {
+        let tech = TechLibrary::freepdk45();
+        let space = SweepSpace::default();
+        let layers = zoo::resnet_cifar(20, Dataset::Cifar10).layers;
+        let mut m = BTreeMap::new();
+        for pe in PeType::ALL {
+            m.insert(pe, characterize(&space, pe, &layers, 40, &tech, 17));
+        }
+        PpaModels::fit(&m, 2).unwrap()
+    }
+
+    fn small_space() -> SweepSpace {
+        SweepSpace {
+            rows: vec![4, 8, 16],
+            cols: vec![4, 8],
+            sp_if: vec![32, 64],
+            sp_fw: vec![32],
+            sp_ps: vec![16, 32],
+            gb_kib: vec![128],
+            dram_bw: vec![16],
+            pe_types: PeType::ALL.to_vec(),
+        }
+    }
+
+    /// Batch lanes are bit-identical to the scalar accessors across a
+    /// dense grid slice covering every PE type and block-boundary
+    /// wraparound of the fastest axes.
+    #[test]
+    fn batch_matches_scalar_bit_for_bit_on_dense_grid() {
+        let models = fitted();
+        let net = zoo::resnet_cifar(20, Dataset::Cifar10);
+        let compiled =
+            CompiledNetModel::compile(&models, &net.layers).expect("compile");
+        let space = small_space();
+        let n = space.len();
+        let cfgs: Vec<_> = (0..n).map(|i| space.point(i)).collect();
+        let mut out = MetricsBlock::new();
+        for chunk in cfgs.chunks(LANES) {
+            compiled.eval_block(chunk, &mut out);
+            for (b, cfg) in chunk.iter().enumerate() {
+                let lat = compiled.network_latency_s(cfg);
+                let pow = compiled.power_mw(cfg);
+                let area = compiled.area_um2(cfg);
+                assert_eq!(
+                    out.latency_s[b].to_bits(),
+                    lat.to_bits(),
+                    "latency lane {b} for {cfg:?}"
+                );
+                assert_eq!(
+                    out.power_mw[b].to_bits(),
+                    pow.to_bits(),
+                    "power lane {b} for {cfg:?}"
+                );
+                assert_eq!(
+                    out.area_um2[b].to_bits(),
+                    area.to_bits(),
+                    "area lane {b} for {cfg:?}"
+                );
+            }
+        }
+    }
+
+    /// The run-broadcast incremental fill equals a per-lane rebuilt table
+    /// bit-for-bit on blocks that straddle axis boundaries (runs of
+    /// length 1 on the fastest axis, longer runs above it).
+    #[test]
+    fn incremental_fill_matches_rebuilt_table_at_axis_boundaries() {
+        let models = fitted();
+        let net = zoo::resnet_cifar(20, Dataset::Cifar10);
+        let compiled =
+            CompiledNetModel::compile(&models, &net.layers).expect("compile");
+        let space = small_space();
+        // A block starting mid-axis so rows/cols wrap inside the block.
+        let start = space.rows.len() - 1;
+        let cfgs: Vec<_> = (start..start + 16.min(space.len() - start))
+            .map(|i| space.point(i))
+            .collect();
+        let pe = cfgs[0].pe_type;
+        assert!(cfgs.iter().all(|c| c.pe_type == pe), "single-PE slice");
+        let pm = compiled.pe(pe);
+        let flat = &pm.lat_flat;
+        let mut table = SoaTable::new();
+        table.ensure(flat.dim(), flat.stride());
+        fill_latency_columns(&mut table.raw, &cfgs);
+        table.fill(flat, pm.lat_log_features, cfgs.len());
+        // Reference: scalar fill_powers per lane, no run sharing.
+        let mut scratch = Vec::new();
+        for (b, cfg) in cfgs.iter().enumerate() {
+            let x = crate::ppa::cfg_latency_features(cfg);
+            let tx = if pm.lat_log_features {
+                crate::regression::log1p_row(&x)
+            } else {
+                x
+            };
+            flat.fill_powers(&tx, &mut scratch);
+            let stride = flat.stride();
+            for i in 0..flat.dim() {
+                for e in 0..stride {
+                    let batch = table.powers[(i * stride + e) * LANES + b];
+                    let scalar = scratch[i * stride + e];
+                    assert_eq!(
+                        batch.to_bits(),
+                        scalar.to_bits(),
+                        "feature {i} exp {e} lane {b}"
+                    );
+                }
+            }
+        }
+    }
+
+    /// Mixed-PE blocks split into per-PE runs and stay bit-identical —
+    /// exercised with a hand-built block alternating across a PE
+    /// boundary, the slowest grid axis.
+    #[test]
+    fn mixed_pe_block_splits_into_runs() {
+        let models = fitted();
+        let net = zoo::resnet_cifar(20, Dataset::Cifar10);
+        let compiled =
+            CompiledNetModel::compile(&models, &net.layers).expect("compile");
+        let space = small_space();
+        let per_pe = space.len() / space.pe_types.len();
+        // Straddle the pe_type boundary: last 3 of PE 0, first 3 of PE 1.
+        let cfgs: Vec<_> = (per_pe - 3..per_pe + 3).map(|i| space.point(i)).collect();
+        assert!(cfgs[0].pe_type != cfgs[5].pe_type, "block crosses PE types");
+        let mut out = MetricsBlock::new();
+        compiled.eval_block(&cfgs, &mut out);
+        for (b, cfg) in cfgs.iter().enumerate() {
+            assert_eq!(
+                out.latency_s[b].to_bits(),
+                compiled.network_latency_s(cfg).to_bits()
+            );
+            assert_eq!(out.power_mw[b].to_bits(), compiled.power_mw(cfg).to_bits());
+            assert_eq!(out.area_um2[b].to_bits(), compiled.area_um2(cfg).to_bits());
+        }
+    }
+
+    /// Scratch reuse across blocks of different sizes and PE types never
+    /// leaks stale lanes.
+    #[test]
+    fn scratch_reuse_across_blocks_is_clean() {
+        let models = fitted();
+        let net = zoo::resnet_cifar(20, Dataset::Cifar10);
+        let compiled =
+            CompiledNetModel::compile(&models, &net.layers).expect("compile");
+        let space = small_space();
+        let mut ctx = BatchCtx::new();
+        let mut out = MetricsBlock::new();
+        // Big block first, then a 1-lane block: lane 0 must not see lanes
+        // 1.. of the previous fill.
+        let big: Vec<_> = (0..24).map(|i| space.point(i)).collect();
+        compiled.eval_block_with(&big, &mut ctx, &mut out);
+        let one = [space.point(40)];
+        compiled.eval_block_with(&one, &mut ctx, &mut out);
+        assert_eq!(
+            out.latency_s[0].to_bits(),
+            compiled.network_latency_s(&one[0]).to_bits()
+        );
+        assert_eq!(
+            out.power_mw[0].to_bits(),
+            compiled.power_mw(&one[0]).to_bits()
+        );
+    }
+}

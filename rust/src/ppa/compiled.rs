@@ -37,18 +37,18 @@ thread_local! {
 /// plus the workload-specialized latency models — a single residual basis
 /// over the hardware features shared by one folded coefficient vector per
 /// unique layer shape.
-struct CompiledPeModels {
-    power: crate::regression::PolyModel,
-    area: crate::regression::PolyModel,
+pub(crate) struct CompiledPeModels {
+    pub(crate) power: crate::regression::PolyModel,
+    pub(crate) area: crate::regression::PolyModel,
     /// Residual hardware-only basis; identical structure for every layer
     /// (specialization structure depends on *which* features are bound,
     /// never on their values).
-    lat_flat: FlatBasis,
-    lat_log_features: bool,
-    lat_log_target: bool,
+    pub(crate) lat_flat: FlatBasis,
+    pub(crate) lat_log_features: bool,
+    pub(crate) lat_log_target: bool,
     /// (folded coefficients, multiplicity) per unique layer shape, in
     /// first-seen order — the same order the generic path sums in.
-    lat_layers: Vec<(Vec<f64>, f64)>,
+    pub(crate) lat_layers: Vec<(Vec<f64>, f64)>,
 }
 
 impl CompiledPeModels {
@@ -169,10 +169,19 @@ impl CompiledNetModel {
         Ok(CompiledNetModel { per_pe })
     }
 
-    fn pe(&self, pe: PeType) -> &CompiledPeModels {
+    pub(crate) fn pe(&self, pe: PeType) -> &CompiledPeModels {
         self.per_pe
             .get(&pe)
             .unwrap_or_else(|| panic!("no compiled models for {pe}"))
+    }
+
+    /// Whether this store was compiled for `pe` — callers holding a
+    /// [`compile_for`]-restricted store check before evaluating and fall
+    /// back to the generic path for uncompiled PE types.
+    ///
+    /// [`compile_for`]: CompiledNetModel::compile_for
+    pub fn has_pe(&self, pe: PeType) -> bool {
+        self.per_pe.contains_key(&pe)
     }
 
     /// Predicted power (mW) — identical to `PpaModels::power_mw`.

@@ -13,8 +13,10 @@
 //! ~ms-s — the paper's "3-4 orders of magnitude" DSE speedup (§4.1),
 //! measured in benches/bench_speedup.rs.
 
+pub mod batch;
 pub mod compiled;
 
+pub use batch::{BatchCtx, MetricsBlock, LANES};
 pub use compiled::CompiledNetModel;
 
 use std::collections::BTreeMap;

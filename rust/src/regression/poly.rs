@@ -76,6 +76,30 @@ impl FlatBasis {
         self.offsets.len() - 1
     }
 
+    /// Number of free features.
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Power-table row stride: `max_degree + 1` exponent slots per feature.
+    pub fn stride(&self) -> usize {
+        self.max_degree + 1
+    }
+
+    /// Per-feature scale divisors applied before exponentiation.
+    pub fn scale(&self) -> &[f64] {
+        &self.scale
+    }
+
+    /// The `(feature, exponent)` factors of term `t`, in storage order —
+    /// the order [`dot_prepared`] multiplies them in, which the batched
+    /// SoA path (`ppa::batch`) must replicate exactly per lane.
+    ///
+    /// [`dot_prepared`]: FlatBasis::dot_prepared
+    pub fn factors_of(&self, t: usize) -> &[(u8, u8)] {
+        &self.factors[self.offsets[t] as usize..self.offsets[t + 1] as usize]
+    }
+
     /// Rough heap footprint in bytes (serving-layer cache accounting).
     pub fn approx_bytes(&self) -> usize {
         self.scale.len() * 8 + self.offsets.len() * 4 + self.factors.len() * 2

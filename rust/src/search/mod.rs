@@ -33,8 +33,10 @@
 //! search output bytes cannot depend on whether telemetry is on.
 //!
 //! Reuse contract: evaluation goes through a caller-supplied
-//! `Fn(&AcceleratorConfig) -> DesignPoint` (the compiled-model hot path
-//! at every call site), every evaluated point folds into the same
+//! [`dse::EvalSource`](crate::dse::EvalSource) (the SoA batch path over
+//! compiled models at every call site; per-point closures adapt via
+//! [`dse::FnEval`](crate::dse::FnEval)), every evaluated point folds
+//! into the same
 //! [`dse::SweepSummary`](crate::dse::SweepSummary) reducers a grid sweep
 //! uses (the reported front is the **archive** front over all
 //! evaluations, not just the final population), and cancellation +
@@ -43,7 +45,7 @@
 //!
 //! Determinism contract: one [`Rng`] stream seeded from
 //! `SearchConfig::seed` drives every stochastic choice in a fixed order;
-//! parallel evaluation uses `sweep::collect_indexed_ctl` (order-stable);
+//! parallel evaluation uses `sweep::collect_blocks` (order-stable);
 //! all float comparisons are `total_cmp` with index tie-breaks. Two runs
 //! with the same seed, grid, and models therefore produce byte-identical
 //! fronts and convergence histories at any thread count — enforced by a
@@ -57,7 +59,9 @@ use std::collections::{BTreeMap, BTreeSet};
 
 use crate::accuracy::proxy::{QuantProxy, BIT_CHOICES};
 use crate::config::{AcceleratorConfig, SweepSpace};
-use crate::dse::{DesignPoint, Objective, SweepSummary, FRONT3_SENSES};
+use crate::dse::{
+    DesignPoint, EvalSource, Objective, SweepSummary, FRONT3_SENSES,
+};
 use crate::sweep::{self, SweepCtl};
 use crate::util::json::Json;
 use crate::util::rng::Rng;
@@ -326,7 +330,7 @@ struct Driver<'a, E> {
 
 impl<E> Driver<'_, E>
 where
-    E: Fn(&AcceleratorConfig) -> DesignPoint + Sync,
+    E: EvalSource,
 {
     /// Evaluate every not-yet-cached genome of `pop` on the
     /// work-stealing scheduler (order-stable, so folds are
@@ -346,11 +350,16 @@ where
         }
         let eval = &self.eval;
         let space = self.space;
-        let pts = sweep::collect_indexed_ctl(
-            fresh.len(),
-            self.cfg.threads,
+        let pts = sweep::collect_blocks(
+            &sweep::Plan::new(fresh.len(), self.cfg.threads),
             self.ctl,
-            |k| eval(&space.point(fresh[k])),
+            |r| {
+                let cfgs: Vec<AcceleratorConfig> =
+                    r.map(|k| space.point(fresh[k])).collect();
+                let mut out = Vec::with_capacity(cfgs.len());
+                eval.eval_block(&cfgs, &mut out);
+                out
+            },
         );
         let complete = pts.len() == fresh.len();
         for (k, p) in pts.into_iter().enumerate() {
@@ -603,7 +612,7 @@ fn mutate_one_axis(rng: &mut Rng, g: &mut Genome, rad: &[usize]) {
 
 fn run_nsga2<E, F>(d: &mut Driver<'_, E>, rng: &mut Rng, on_gen: &mut F)
 where
-    E: Fn(&AcceleratorConfig) -> DesignPoint + Sync,
+    E: EvalSource,
     F: FnMut(&GenStat, &SweepSummary),
 {
     let n = d.space.len();
@@ -659,7 +668,7 @@ where
 
 fn run_random<E, F>(d: &mut Driver<'_, E>, rng: &mut Rng, on_gen: &mut F)
 where
-    E: Fn(&AcceleratorConfig) -> DesignPoint + Sync,
+    E: EvalSource,
     F: FnMut(&GenStat, &SweepSummary),
 {
     let n = d.space.len();
@@ -681,7 +690,7 @@ where
 
 fn run_hillclimb<E, F>(d: &mut Driver<'_, E>, rng: &mut Rng, on_gen: &mut F)
 where
-    E: Fn(&AcceleratorConfig) -> DesignPoint + Sync,
+    E: EvalSource,
     F: FnMut(&GenStat, &SweepSummary),
 {
     // Non-improving proposals before a random restart.
@@ -740,7 +749,9 @@ where
 }
 
 /// Run a seeded multi-objective search over `space`, evaluating through
-/// `eval` (callers pass the compiled-model hot path). Passing a
+/// `eval` (callers pass a [`dse::ModelEval`](crate::dse::ModelEval) over
+/// compiled models, so populations price through the SoA batch path;
+/// closures adapt via [`dse::FnEval`](crate::dse::FnEval)). Passing a
 /// [`QuantProxy`] as `acc` promotes predicted accuracy to a third
 /// maximizing objective and extends the genome with one bit-width gene
 /// per workload layer; `None` reproduces the 2-objective search byte for
@@ -761,7 +772,7 @@ pub fn run_search<E, F>(
     mut on_generation: F,
 ) -> Result<SearchResult, String>
 where
-    E: Fn(&AcceleratorConfig) -> DesignPoint + Sync,
+    E: EvalSource,
     F: FnMut(&GenStat, &SweepSummary),
 {
     space.validate()?;
@@ -805,6 +816,7 @@ where
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::dse::FnEval;
     use crate::pe::PeType;
     use crate::util::prop::Prop;
 
@@ -907,7 +919,7 @@ mod tests {
             let a = run_search(
                 &space,
                 &cfg(algo, 7),
-                synth_eval,
+                FnEval(synth_eval),
                 None,
                 &SweepCtl::new(),
                 |_, _| {},
@@ -920,7 +932,7 @@ mod tests {
             let b = run_search(
                 &space,
                 &c2,
-                synth_eval,
+                FnEval(synth_eval),
                 None,
                 &SweepCtl::new(),
                 |_, _| {},
@@ -949,7 +961,7 @@ mod tests {
         let a = run_search(
             &space,
             &c,
-            synth_eval,
+            FnEval(synth_eval),
             None,
             &SweepCtl::new(),
             |_, _| {},
@@ -959,7 +971,7 @@ mod tests {
         let b = run_search(
             &space,
             &c,
-            synth_eval,
+            FnEval(synth_eval),
             None,
             &SweepCtl::new(),
             |_, _| {},
@@ -989,7 +1001,7 @@ mod tests {
             let r = run_search(
                 &space,
                 &c,
-                synth_eval,
+                FnEval(synth_eval),
                 None,
                 &SweepCtl::new(),
                 |_, _| {},
@@ -1046,7 +1058,7 @@ mod tests {
             let r = run_search(
                 &space,
                 &c,
-                synth_eval,
+                FnEval(synth_eval),
                 None,
                 &SweepCtl::new(),
                 |_, _| {},
@@ -1088,19 +1100,17 @@ mod tests {
         let r = run_search(
             &space,
             &c,
-            synth_eval,
+            FnEval(synth_eval),
             None,
             &SweepCtl::new(),
             |_, _| {},
         )
         .unwrap();
-        // Exhaustive reference front over the same grid.
-        let grid = crate::dse::stream_space_eval(
-            &space,
-            2,
-            c.objective,
-            c.top_k,
-            synth_eval,
+        // Exhaustive reference front over the same grid, through the
+        // same unified sweep entry point production uses.
+        let grid = crate::dse::sweep(
+            &crate::dse::SweepPlan::full(&space, 2, c.objective, c.top_k),
+            &FnEval(synth_eval),
             |_p| None,
             |_row| {},
             &SweepCtl::new(),
@@ -1143,11 +1153,18 @@ mod tests {
         let ctl = SweepCtl::new();
         let mut c = cfg(Algo::Nsga2, 3);
         c.generations = 50;
-        let r = run_search(&space, &c, synth_eval, None, &ctl, |stat, _| {
-            if stat.generation == 2 {
-                ctl.cancel();
-            }
-        })
+        let r = run_search(
+            &space,
+            &c,
+            FnEval(synth_eval),
+            None,
+            &ctl,
+            |stat, _| {
+                if stat.generation == 2 {
+                    ctl.cancel();
+                }
+            },
+        )
         .unwrap();
         assert!(r.cancelled);
         assert!(
@@ -1162,8 +1179,15 @@ mod tests {
         // (empty) result.
         let pre = SweepCtl::new();
         pre.cancel();
-        let r = run_search(&space, &c, synth_eval, None, &pre, |_, _| {})
-            .unwrap();
+        let r = run_search(
+            &space,
+            &c,
+            FnEval(synth_eval),
+            None,
+            &pre,
+            |_, _| {},
+        )
+        .unwrap();
         assert!(r.cancelled);
         assert_eq!(r.evals, 0);
     }
@@ -1269,7 +1293,7 @@ mod tests {
             let a = run_search(
                 &space,
                 &c1,
-                synth_eval,
+                FnEval(synth_eval),
                 Some(&proxy),
                 &SweepCtl::new(),
                 |_, _| {},
@@ -1280,7 +1304,7 @@ mod tests {
             let b = run_search(
                 &space,
                 &c8,
-                synth_eval,
+                FnEval(synth_eval),
                 Some(&proxy),
                 &SweepCtl::new(),
                 |_, _| {},
@@ -1318,7 +1342,7 @@ mod tests {
         let r = run_search(
             &space,
             &c,
-            synth_eval,
+            FnEval(synth_eval),
             Some(&proxy),
             &SweepCtl::new(),
             |_, _| {},
@@ -1353,7 +1377,7 @@ mod tests {
         let r2 = run_search(
             &space,
             &c,
-            synth_eval,
+            FnEval(synth_eval),
             None,
             &SweepCtl::new(),
             |_, _| {},
@@ -1372,7 +1396,7 @@ mod tests {
             let r = run_search(
                 &space,
                 &c,
-                synth_eval,
+                FnEval(synth_eval),
                 Some(&proxy),
                 &SweepCtl::new(),
                 |_, _| {},

@@ -611,23 +611,30 @@ fn run_sweep(
 ) -> Result<(), String> {
     let layers = state.workload(workload)?.layers.clone();
     let compiled = state.compiled_map(workload, &layers, &space.pe_types);
-    sweep::for_each_block_ctl(
-        space.len(),
-        job.spec.threads,
-        JOB_BLOCK,
-        &job.ctl,
-        |range| {
+    let source = dse::ModelEval::new(
+        &state.models,
+        &layers,
+        dse::CompiledView::PerPe(&compiled),
+    );
+    sweep::run_blocks(
+        &sweep::Plan::new(space.len(), job.spec.threads)
+            .with_block(JOB_BLOCK),
+        || (),
+        |range, _unit, _emit| {
             let mut mini = SweepSummary::new(objective, top_k);
             let mut lat = StreamingFiveNum::default();
-            for i in range {
-                let cfg = space.point(i);
-                let t0 = state.clock.now_ns();
-                let p = match compiled.get(&cfg.pe_type) {
-                    Some(c) => dse::evaluate_compiled(c, &cfg),
-                    None => dse::evaluate(&state.models, &cfg, &layers),
-                };
-                lat.observe(elapsed_us(&*state.clock, t0));
-                mini.observe(&p);
+            let cfgs: Vec<_> = range.map(|i| space.point(i)).collect();
+            let mut pts = Vec::with_capacity(cfgs.len());
+            // Points price as one SoA batch, so the eval-latency stream
+            // observes the block-amortized per-point cost (one sample
+            // per point keeps the stat's count == points evaluated).
+            let t0 = state.clock.now_ns();
+            source.eval_block(&cfgs, &mut pts);
+            let per_point =
+                elapsed_us(&*state.clock, t0) / pts.len().max(1) as f64;
+            for p in &pts {
+                lat.observe(per_point);
+                mini.observe(p);
             }
             let mut prog = super::lock(&job.progress);
             prog.eval_lat_us.merge(&lat);
@@ -636,6 +643,8 @@ fn run_sweep(
                 None => prog.summary = Some(mini),
             }
         },
+        |_row| {},
+        &job.ctl,
     );
     Ok(())
 }
@@ -707,13 +716,15 @@ fn run_search_job(
         None
     };
     let compiled = state.compiled_map(workload, &layers, &space.pe_types);
+    let source = dse::ModelEval::new(
+        &state.models,
+        &layers,
+        dse::CompiledView::PerPe(&compiled),
+    );
     let result = crate::search::run_search(
         space,
         cfg,
-        |c| match compiled.get(&c.pe_type) {
-            Some(m) => dse::evaluate_compiled(m, c),
-            None => dse::evaluate(&state.models, c, &layers),
-        },
+        source,
         proxy.as_ref(),
         &job.ctl,
         |stat, summary| {

@@ -29,7 +29,7 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 
 use crate::config::{parse_axis, AcceleratorConfig, SweepSpace};
-use crate::dse::{self, Objective};
+use crate::dse::{self, EvalSource, Objective};
 use crate::obs::clock::elapsed_s;
 use crate::pe::PeType;
 use crate::sweep::SweepCtl;
@@ -261,11 +261,16 @@ fn ppa(state: &AppState, req: &Request) -> Result<Response, ApiError> {
     })()
     .map_err(ApiError::bad_request)?;
     let net = state.workload(&workload).map_err(ApiError::bad_request)?;
-    let point = match state.compiled_for(&workload, &net.layers, cfg.pe_type)
-    {
-        Some(c) => dse::evaluate_compiled(&c, &cfg),
-        None => dse::evaluate(&state.models, &cfg, &net.layers),
-    };
+    // A 1-lane block through the shared batch context: single-point
+    // queries reuse the cached compiled models and the thread's prepared
+    // SoA scratch instead of rebuilding per-point power tables.
+    let compiled = state.compiled_for(&workload, &net.layers, cfg.pe_type);
+    let source = dse::ModelEval::new(
+        &state.models,
+        &net.layers,
+        dse::CompiledView::from_option(compiled.as_deref()),
+    );
+    let point = source.eval_one(&cfg);
     let body = Arc::new(
         Json::obj(vec![
             ("workload", Json::Str(workload)),
@@ -328,15 +333,14 @@ fn sweep_sync(
         let _watch = sink.watch_disconnect(ctl.clone());
         let t0 = state.clock.now_ns();
         let mut write_err: Option<std::io::Error> = None;
-        let summary = dse::stream_space_eval(
-            &space,
-            threads,
-            objective,
-            top_k,
-            |cfg| match compiled.get(&cfg.pe_type) {
-                Some(c) => dse::evaluate_compiled(c, cfg),
-                None => dse::evaluate(&state.models, cfg, &net.layers),
-            },
+        let source = dse::ModelEval::new(
+            &state.models,
+            &net.layers,
+            dse::CompiledView::PerPe(&compiled),
+        );
+        let summary = dse::sweep(
+            &dse::SweepPlan::full(&space, threads, objective, top_k),
+            &source,
             |p| {
                 if !points {
                     return None;
@@ -469,16 +473,20 @@ fn shard_exec(
         const PROGRESS_EVERY: usize = 4096;
         let emitted = AtomicUsize::new(0);
         let mut write_err: Option<std::io::Error> = None;
-        let summary = dse::stream_shard_eval(
-            &space,
-            range,
-            threads,
-            objective,
-            top_k,
-            |cfg| match compiled.get(&cfg.pe_type) {
-                Some(c) => dse::evaluate_compiled(c, cfg),
-                None => dse::evaluate(&state.models, cfg, &net.layers),
-            },
+        let source = dse::ModelEval::new(
+            &state.models,
+            &net.layers,
+            dse::CompiledView::PerPe(&compiled),
+        );
+        let summary = dse::sweep(
+            &dse::SweepPlan::shard(
+                &space,
+                range.clone(),
+                threads,
+                objective,
+                top_k,
+            ),
+            &source,
             |_p| {
                 // Empty rows are progress ticks; the sink renders them
                 // with the live counter (rows themselves are not

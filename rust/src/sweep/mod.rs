@@ -1,25 +1,28 @@
 //! Streaming, work-stealing sweep engine — the exploration core behind
-//! `dse::evaluate_space`, `coexplore::explore`, and the `quidam explore`
-//! CLI (DESIGN.md §4).
+//! `dse::sweep`, `coexplore::explore`, and the `quidam explore` CLI
+//! (DESIGN.md §4, §13).
 //!
 //! The paper's headline is that pre-characterized PPA models answer a
 //! design query in microseconds; at that speed the *engine* becomes the
-//! bottleneck. Two problems with the old fixed-chunk `thread::scope`
-//! loops:
+//! bottleneck. Three design rules follow:
 //!
-//!   1. Load imbalance — co-exploration items differ wildly in cost (each
-//!      architecture has a different layer count), so pre-split chunks
-//!      leave threads idle behind the slowest chunk.
-//!   2. O(space) memory — materializing every `DesignPoint` in a `Vec`
-//!      caps sweeps at what fits in RAM; a million-point grid wants
-//!      streaming reduction instead.
+//!   1. Work stealing — co-exploration items differ wildly in cost, so a
+//!      shared atomic-cursor queue hands out fixed-size index blocks and
+//!      idle threads keep pulling until it drains.
+//!   2. Streaming reduction — reducer-based drivers fold each evaluated
+//!      point into O(front)-memory online summaries
+//!      ([`reducers::ParetoFront2D`], [`reducers::TopK`],
+//!      `util::stats::StreamingFiveNum`) instead of materializing it.
+//!   3. Blocks all the way down — workers see whole index blocks, not
+//!      single indices, so batch evaluators (`ppa::batch`) get full
+//!      blocks of grid-adjacent configs and reducers fold a block per
+//!      lock acquisition instead of a point.
 //!
-//! This module fixes both: a shared atomic-counter work queue that threads
-//! *steal* fixed-size index blocks from (self-scheduling — idle threads
-//! keep pulling work until the queue drains), plus reducer-based drivers
-//! that fold each evaluated point into O(front)-memory online summaries
-//! ([`reducers::ParetoFront2D`], [`reducers::TopK`],
-//! `util::stats::StreamingFiveNum`) instead of collecting it.
+//! The call surface is one ctl-aware core, [`run_blocks`], plus thin
+//! wrappers: [`run`] (per-index map-reduce with an optional streamed row
+//! per point) and [`collect_indexed`]/[`collect_blocks`] (materialize in
+//! index order). Cancellation, progress, and streaming sinks are part of
+//! the core rather than `_ctl`/`_stream` twin entry points.
 
 pub mod reducers;
 
@@ -31,12 +34,35 @@ use std::sync::mpsc;
 pub const MAX_THREADS: usize = 64;
 
 /// Block of indices a worker steals per queue hit. Small enough to
-/// balance imbalanced items, large enough to amortize the atomic.
+/// balance imbalanced items, large enough to amortize the atomic — and
+/// equal to `ppa::batch::LANES`, so one stolen block is one SoA batch.
 pub const DEFAULT_BLOCK: usize = 64;
 
 /// Clamp a requested thread count against the work size.
 pub fn effective_threads(threads: usize, n: usize) -> usize {
     threads.clamp(1, MAX_THREADS).min(n.max(1))
+}
+
+/// Execution plan of one sweep: `n` work items handed out as
+/// `block`-sized index blocks to at most `threads` workers.
+#[derive(Debug, Clone, Copy)]
+pub struct Plan {
+    pub n: usize,
+    pub threads: usize,
+    pub block: usize,
+}
+
+impl Plan {
+    pub fn new(n: usize, threads: usize) -> Plan {
+        Plan { n, threads, block: DEFAULT_BLOCK }
+    }
+
+    /// Override the block size (the job manager uses larger blocks to
+    /// amortize its shared-state lock further).
+    pub fn with_block(mut self, block: usize) -> Plan {
+        self.block = block.max(1);
+        self
+    }
 }
 
 /// Partition `0..n` into at most `shards` contiguous, non-empty,
@@ -158,133 +184,36 @@ impl SweepCtl {
 }
 
 /// Anything that can absorb per-worker results and be folded across
-/// workers at the end of a sweep.
+/// workers at the end of a sweep. Per-worker scratch (batch contexts,
+/// row buffers) lives inside the reducer, so the engine never needs a
+/// separate session concept.
 pub trait Reducer: Send {
     /// Fold another worker's reducer into this one.
     fn merge(&mut self, other: Self);
 }
 
-/// Evaluate `f(i)` for every `i in 0..n` on the work-stealing queue and
-/// return the results **in index order**. Workers collect (block-start,
-/// block-results) pairs locally; assembly is a sort + append, so no
-/// cross-thread mutable aliasing is needed.
-pub fn collect_indexed<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
-where
-    T: Send,
-    F: Fn(usize) -> T + Sync,
-{
-    collect_indexed_ctl(n, threads, &SweepCtl::new(), f)
+/// Unit reducer for side-effecting sweeps that fold into shared state
+/// themselves (the job manager merges per-block under its own lock).
+impl Reducer for () {
+    fn merge(&mut self, _other: ()) {}
 }
 
-/// [`collect_indexed`] with cooperative cancellation: a cancelled run
-/// returns the contiguous prefix of results whose blocks completed
-/// (the queue hands blocks out in index order and a claimed block always
-/// finishes, so completed blocks form a prefix by construction).
-pub fn collect_indexed_ctl<T, F>(
-    n: usize,
-    threads: usize,
-    ctl: &SweepCtl,
-    f: F,
-) -> Vec<T>
-where
-    T: Send,
-    F: Fn(usize) -> T + Sync,
-{
-    let threads = effective_threads(threads, n);
-    if n == 0 {
-        return Vec::new();
-    }
-    if threads == 1 {
-        let mut out = Vec::with_capacity(n);
-        let mut i = 0;
-        while i < n && !ctl.is_cancelled() {
-            let end = (i + DEFAULT_BLOCK).min(n);
-            out.extend((i..end).map(&f));
-            ctl.add_done(end - i);
-            i = end;
-        }
-        return out;
-    }
-    let queue = WorkQueue::new(n, DEFAULT_BLOCK);
-    let mut blocks: Vec<(usize, Vec<T>)> = std::thread::scope(|s| {
-        let handles: Vec<_> = (0..threads)
-            .map(|_| {
-                let queue = &queue;
-                let f = &f;
-                s.spawn(move || {
-                    let mut local: Vec<(usize, Vec<T>)> = Vec::new();
-                    while !ctl.is_cancelled() {
-                        let range = match queue.claim() {
-                            Some(r) => r,
-                            None => break,
-                        };
-                        let start = range.start;
-                        let len = range.len();
-                        local.push((start, range.map(|i| f(i)).collect()));
-                        ctl.add_done(len);
-                    }
-                    local
-                })
-            })
-            .collect();
-        handles
-            .into_iter()
-            .flat_map(|h| h.join().expect("sweep worker panicked"))
-            .collect()
-    });
-    blocks.sort_by_key(|(start, _)| *start);
-    let mut out =
-        Vec::with_capacity(blocks.iter().map(|(_, b)| b.len()).sum());
-    for (_, mut b) in blocks {
-        out.append(&mut b);
-    }
-    out
-}
-
-/// Streaming map-reduce: every worker folds its stolen indices into its
-/// own reducer (`body(i, &mut r)`), and the per-worker reducers are merged
-/// at the end. Nothing per-point is retained — memory is O(threads x
-/// reducer), independent of `n`.
-pub fn map_reduce<R, I, F>(n: usize, threads: usize, init: I, body: F) -> R
-where
-    R: Reducer,
-    I: Fn() -> R + Sync,
-    F: Fn(usize, &mut R) + Sync,
-{
-    map_reduce_stream(n, threads, init, |i, r| {
-        body(i, r);
-        None
-    }, |_row| {})
-}
-
-/// [`map_reduce`] plus a streaming row sink: when `body` returns
-/// `Some(row)`, the row is forwarded over a **bounded** channel to `sink`,
-/// which runs on the calling thread (e.g. a `BufWriter` emitting CSV).
-/// The bound gives backpressure, so peak memory stays at
-/// O(threads x reducer + channel bound) even for million-point sweeps.
-pub fn map_reduce_stream<R, I, F, W>(
-    n: usize,
-    threads: usize,
-    init: I,
-    body: F,
-    sink: W,
-) -> R
-where
-    R: Reducer,
-    I: Fn() -> R + Sync,
-    F: Fn(usize, &mut R) -> Option<String> + Sync,
-    W: FnMut(String),
-{
-    map_reduce_stream_ctl(n, threads, init, body, sink, &SweepCtl::new())
-}
-
-/// [`map_reduce_stream`] with cooperative cancellation + progress: workers
-/// poll `ctl` between blocks, so a cancelled sweep returns the merge of
-/// whatever each worker had folded (a consistent partial reduction of
-/// exactly [`SweepCtl::done`] points).
-pub fn map_reduce_stream_ctl<R, I, F, W>(
-    n: usize,
-    threads: usize,
+/// The engine core: claim whole index blocks off the work-stealing queue,
+/// hand each to `body` together with this worker's reducer and a row
+/// emitter, merge the per-worker reducers at the end.
+///
+/// * `body(range, r, emit)` processes one block — batch evaluators see
+///   the full block, and reducers fold a block per call, so any locking a
+///   body does is amortized over `plan.block` points.
+/// * Emitted rows flow over a **bounded** channel to `sink` on the
+///   calling thread (backpressure keeps peak memory at O(threads ×
+///   reducer + channel bound) even for million-point sweeps). With one
+///   effective thread there is no channel: rows go straight to the sink.
+/// * `ctl` is polled between blocks, so a cancelled sweep stops within
+///   one block per worker and returns a consistent partial reduction of
+///   exactly [`SweepCtl::done`] points.
+pub fn run_blocks<R, I, F, W>(
+    plan: &Plan,
     init: I,
     body: F,
     mut sink: W,
@@ -293,11 +222,27 @@ pub fn map_reduce_stream_ctl<R, I, F, W>(
 where
     R: Reducer,
     I: Fn() -> R + Sync,
-    F: Fn(usize, &mut R) -> Option<String> + Sync,
+    F: Fn(Range<usize>, &mut R, &mut dyn FnMut(String)) + Sync,
     W: FnMut(String),
 {
-    let threads = effective_threads(threads, n);
-    let queue = WorkQueue::new(n, DEFAULT_BLOCK);
+    let n = plan.n;
+    let threads = effective_threads(plan.threads, n);
+    let block = plan.block.max(1);
+    if n == 0 {
+        return init();
+    }
+    if threads == 1 {
+        let mut r = init();
+        let mut i = 0;
+        while i < n && !ctl.is_cancelled() {
+            let end = (i + block).min(n);
+            body(i..end, &mut r, &mut |row| sink(row));
+            ctl.add_done(end - i);
+            i = end;
+        }
+        return r;
+    }
+    let queue = WorkQueue::new(n, block);
     let (tx, rx) = mpsc::sync_channel::<String>(4096);
     std::thread::scope(|s| {
         let handles: Vec<_> = (0..threads)
@@ -308,20 +253,19 @@ where
                 let tx = tx.clone();
                 s.spawn(move || {
                     let mut r = init();
+                    // Receiver outlives workers inside this scope; a send
+                    // error only means the sink was dropped early — rows
+                    // are best-effort.
+                    let mut emit = move |row: String| {
+                        let _ = tx.send(row);
+                    };
                     while !ctl.is_cancelled() {
                         let range = match queue.claim() {
                             Some(rg) => rg,
                             None => break,
                         };
                         let len = range.len();
-                        for i in range {
-                            if let Some(row) = body(i, &mut r) {
-                                // Receiver outlives workers inside this
-                                // scope; a send error only means the sink
-                                // was dropped early — rows are best-effort.
-                                let _ = tx.send(row);
-                            }
-                        }
+                        body(range, &mut r, &mut emit);
                         ctl.add_done(len);
                     }
                     r
@@ -345,42 +289,81 @@ where
     })
 }
 
-/// Claim and process whole index blocks on the work-stealing queue — the
-/// job manager's entry point: `f` folds one block into shared state
-/// (merging once per block keeps lock traffic at `1/block` of per-point
-/// locking, so mid-run observers can read live progress without stalling
-/// the sweep), while `ctl` carries cancellation + the progress counter.
-pub fn for_each_block_ctl<F>(
-    n: usize,
-    threads: usize,
-    block: usize,
-    ctl: &SweepCtl,
-    f: F,
-) where
-    F: Fn(Range<usize>) + Sync,
+/// Per-index wrapper over [`run_blocks`]: `body(i, &mut r)` folds one
+/// index into this worker's reducer and may return a row to stream to
+/// `sink`. Use when items have no batch form (per-architecture
+/// compilation, synthetic evaluators); grid point pricing should go
+/// through the block interface instead.
+pub fn run<R, I, F, W>(plan: &Plan, init: I, body: F, sink: W, ctl: &SweepCtl) -> R
+where
+    R: Reducer,
+    I: Fn() -> R + Sync,
+    F: Fn(usize, &mut R) -> Option<String> + Sync,
+    W: FnMut(String),
 {
-    let threads = effective_threads(threads, n);
-    if n == 0 {
-        return;
-    }
-    let queue = WorkQueue::new(n, block);
-    std::thread::scope(|s| {
-        for _ in 0..threads {
-            let queue = &queue;
-            let f = &f;
-            s.spawn(move || {
-                while !ctl.is_cancelled() {
-                    let range = match queue.claim() {
-                        Some(r) => r,
-                        None => break,
-                    };
-                    let len = range.len();
-                    f(range);
-                    ctl.add_done(len);
+    run_blocks(
+        plan,
+        init,
+        |range, r, emit| {
+            for i in range {
+                if let Some(row) = body(i, r) {
+                    emit(row);
                 }
-            });
-        }
-    });
+            }
+        },
+        sink,
+        ctl,
+    )
+}
+
+struct Collected<T>(Vec<(usize, Vec<T>)>);
+
+impl<T: Send> Reducer for Collected<T> {
+    fn merge(&mut self, mut other: Self) {
+        self.0.append(&mut other.0);
+    }
+}
+
+/// Evaluate `f` on whole index blocks and return the concatenated
+/// results **in index order** — the materializing driver for batch
+/// evaluators (`f` returns one result per index of its block, in order).
+/// A cancelled run returns the contiguous prefix of results whose blocks
+/// completed (the queue hands blocks out in index order and a claimed
+/// block always finishes, so completed blocks form a prefix by
+/// construction).
+pub fn collect_blocks<T, F>(plan: &Plan, ctl: &SweepCtl, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(Range<usize>) -> Vec<T> + Sync,
+{
+    let mut blocks = run_blocks(
+        plan,
+        || Collected(Vec::new()),
+        |range, r: &mut Collected<T>, _emit| {
+            let start = range.start;
+            r.0.push((start, f(range)));
+        },
+        |_row| {},
+        ctl,
+    )
+    .0;
+    blocks.sort_by_key(|(start, _)| *start);
+    let mut out = Vec::with_capacity(blocks.iter().map(|(_, b)| b.len()).sum());
+    for (_, mut b) in blocks {
+        out.append(&mut b);
+    }
+    out
+}
+
+/// Evaluate `f(i)` for every `i in 0..plan.n` and return the results in
+/// index order. Single ctl-aware entry point — pass a fresh
+/// [`SweepCtl::new`] when cancellation is not needed.
+pub fn collect_indexed<T, F>(plan: &Plan, ctl: &SweepCtl, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    collect_blocks(plan, ctl, |range| range.map(&f).collect())
 }
 
 #[cfg(test)]
@@ -397,6 +380,23 @@ mod tests {
             self.0 += other.0;
             self.1 += other.1;
         }
+    }
+
+    /// `run` with a row-less body — the old `map_reduce` shape.
+    fn reduce_indices<F>(n: usize, threads: usize, body: F) -> Sum
+    where
+        F: Fn(usize, &mut Sum) + Sync,
+    {
+        run(
+            &Plan::new(n, threads),
+            Sum::default,
+            |i, r| {
+                body(i, r);
+                None
+            },
+            |_row| {},
+            &SweepCtl::new(),
+        )
     }
 
     #[test]
@@ -416,7 +416,11 @@ mod tests {
     fn collect_indexed_matches_serial_in_order() {
         for n in [0usize, 1, 63, 64, 65, 1000] {
             for threads in [1usize, 2, 8] {
-                let got = collect_indexed(n, threads, |i| i * i);
+                let got = collect_indexed(
+                    &Plan::new(n, threads),
+                    &SweepCtl::new(),
+                    |i| i * i,
+                );
                 let want: Vec<usize> = (0..n).map(|i| i * i).collect();
                 assert_eq!(got, want, "n={n} threads={threads}");
             }
@@ -424,9 +428,22 @@ mod tests {
     }
 
     #[test]
-    fn map_reduce_sums_every_index() {
+    fn collect_blocks_concatenates_in_index_order() {
+        for threads in [1usize, 4] {
+            let got = collect_blocks(
+                &Plan::new(1000, threads).with_block(17),
+                &SweepCtl::new(),
+                |r| r.map(|i| i * 3).collect(),
+            );
+            let want: Vec<usize> = (0..1000).map(|i| i * 3).collect();
+            assert_eq!(got, want, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn run_sums_every_index() {
         let n = 10_000u64;
-        let r = map_reduce(n as usize, 8, Sum::default, |i, r| {
+        let r = reduce_indices(n as usize, 8, |i, r| {
             r.0 += i as u64;
             r.1 += 1;
         });
@@ -435,29 +452,48 @@ mod tests {
     }
 
     #[test]
-    fn map_reduce_empty_space_returns_init() {
-        let r = map_reduce(0, 4, Sum::default, |_, _| unreachable!());
+    fn run_empty_space_returns_init() {
+        let r = reduce_indices(0, 4, |_, _| unreachable!());
         assert_eq!(r.1, 0);
     }
 
     #[test]
     fn stream_sink_receives_every_emitted_row() {
-        let mut rows: Vec<String> = Vec::new();
-        let r = map_reduce_stream(
-            500,
-            4,
-            Sum::default,
-            |i, r| {
-                r.1 += 1;
-                (i % 10 == 0).then(|| format!("row-{i}"))
+        for threads in [1usize, 4] {
+            let mut rows: Vec<String> = Vec::new();
+            let r = run(
+                &Plan::new(500, threads),
+                Sum::default,
+                |i, r| {
+                    r.1 += 1;
+                    (i % 10 == 0).then(|| format!("row-{i}"))
+                },
+                |row| rows.push(row),
+                &SweepCtl::new(),
+            );
+            assert_eq!(r.1, 500);
+            assert_eq!(rows.len(), 50);
+            rows.sort();
+            assert!(rows.contains(&"row-0".to_string()));
+            assert!(rows.contains(&"row-490".to_string()));
+        }
+    }
+
+    #[test]
+    fn block_bodies_see_whole_plan_blocks() {
+        let sizes = std::sync::Mutex::new(Vec::new());
+        run_blocks(
+            &Plan::new(100, 4).with_block(32),
+            || (),
+            |range, _r, _emit| {
+                sizes.lock().unwrap().push(range.len());
             },
-            |row| rows.push(row),
+            |_row| {},
+            &SweepCtl::new(),
         );
-        assert_eq!(r.1, 500);
-        assert_eq!(rows.len(), 50);
-        rows.sort();
-        assert!(rows.contains(&"row-0".to_string()));
-        assert!(rows.contains(&"row-490".to_string()));
+        let mut sizes = sizes.into_inner().unwrap();
+        sizes.sort_unstable();
+        assert_eq!(sizes, vec![4, 32, 32, 32]);
     }
 
     #[test]
@@ -466,7 +502,7 @@ mod tests {
         // with 2 threads and items whose cost is concentrated in one
         // half, the queue should still let both threads contribute.
         let processed = AtomicU64::new(0);
-        let r = map_reduce(256, 2, Sum::default, |i, r| {
+        let r = reduce_indices(256, 2, |i, r| {
             // Imbalanced cost: late items spin longer.
             let spin = if i >= 128 { 2000 } else { 10 };
             let mut acc = 0u64;
@@ -483,9 +519,8 @@ mod tests {
     fn pre_cancelled_sweep_does_no_work() {
         let ctl = SweepCtl::new();
         ctl.cancel();
-        let r = map_reduce_stream_ctl(
-            1000,
-            4,
+        let r = run(
+            &Plan::new(1000, 4),
             Sum::default,
             |_, r| {
                 r.1 += 1;
@@ -496,16 +531,17 @@ mod tests {
         );
         assert_eq!(r.1, 0);
         assert_eq!(ctl.done(), 0);
-        assert!(collect_indexed_ctl(1000, 4, &ctl, |i| i).is_empty());
-        assert!(collect_indexed_ctl(1000, 1, &ctl, |i| i).is_empty());
+        for threads in [1usize, 4] {
+            assert!(collect_indexed(&Plan::new(1000, threads), &ctl, |i| i)
+                .is_empty());
+        }
     }
 
     #[test]
     fn cancelled_sweep_stops_within_blocks_and_counts_match() {
         let ctl = SweepCtl::new();
-        let r = map_reduce_stream_ctl(
-            1_000_000,
-            4,
+        let r = run(
+            &Plan::new(1_000_000, 4),
             Sum::default,
             |i, r| {
                 if i == 0 {
@@ -530,7 +566,7 @@ mod tests {
     fn cancelled_collect_returns_contiguous_prefix() {
         for threads in [1usize, 4] {
             let ctl = SweepCtl::new();
-            let v = collect_indexed_ctl(100_000, threads, &ctl, |i| {
+            let v = collect_indexed(&Plan::new(100_000, threads), &ctl, |i| {
                 if i == 100 {
                     ctl.cancel();
                 }
@@ -546,19 +582,29 @@ mod tests {
     }
 
     #[test]
-    fn for_each_block_covers_all_and_respects_cancel() {
+    fn unit_reducer_blocks_cover_all_and_respect_cancel() {
         let ctl = SweepCtl::new();
         let count = AtomicUsize::new(0);
-        for_each_block_ctl(1000, 4, 64, &ctl, |r| {
-            count.fetch_add(r.len(), Ordering::Relaxed);
-        });
+        run_blocks(
+            &Plan::new(1000, 4).with_block(64),
+            || (),
+            |r, _unit, _emit| {
+                count.fetch_add(r.len(), Ordering::Relaxed);
+            },
+            |_row| {},
+            &ctl,
+        );
         assert_eq!(count.load(Ordering::Relaxed), 1000);
         assert_eq!(ctl.done(), 1000);
         let pre = SweepCtl::new();
         pre.cancel();
-        for_each_block_ctl(1000, 4, 64, &pre, |_r| {
-            panic!("block ran despite pre-cancelled ctl")
-        });
+        run_blocks(
+            &Plan::new(1000, 4).with_block(64),
+            || (),
+            |_r, _unit, _emit| panic!("block ran despite pre-cancelled ctl"),
+            |_row| {},
+            &pre,
+        );
         assert_eq!(pre.done(), 0);
     }
 
@@ -607,7 +653,13 @@ mod tests {
         let ctl = SweepCtl::with_observer(move |n| {
             seen2.fetch_add(n, Ordering::Relaxed);
         });
-        for_each_block_ctl(1000, 4, 64, &ctl, |_r| {});
+        run_blocks(
+            &Plan::new(1000, 4).with_block(64),
+            || (),
+            |_r, _unit, _emit| {},
+            |_row| {},
+            &ctl,
+        );
         assert_eq!(ctl.done(), 1000);
         assert_eq!(
             seen.load(Ordering::Relaxed),

@@ -91,15 +91,18 @@ fn spec_for(space: SweepSpace) -> DistSweep {
 /// Single-process reference summary of `space` on the shared models.
 fn local_summary(space: &SweepSpace) -> SweepSummary {
     let layers = &zoo::resnet_cifar(20, Dataset::Cifar10).layers;
-    dse::stream_space(
+    let compiled = quidam::ppa::CompiledNetModel::compile(models(), layers).ok();
+    let source = dse::ModelEval::new(
         models(),
-        space,
         layers,
-        2,
-        Objective::PerfPerArea,
-        3,
+        dse::CompiledView::from_option(compiled.as_ref()),
+    );
+    dse::sweep(
+        &dse::SweepPlan::full(space, 2, Objective::PerfPerArea, 3),
+        &source,
         |_p| None,
         |_row| {},
+        &SweepCtl::new(),
     )
 }
 

@@ -257,28 +257,18 @@ fn sweep_observer_leaves_summary_bytes_identical() {
     let mut space = SweepSpace::default();
     space.set_axis("rows", vec![8, 12]).unwrap();
     space.set_axis("cols", vec![8, 14]).unwrap();
-    let eval =
-        |cfg: &quidam::config::AcceleratorConfig| dse::evaluate(m, cfg, &net.layers);
+    let source = dse::FnEval(|cfg: &quidam::config::AcceleratorConfig| {
+        dse::evaluate(m, cfg, &net.layers)
+    });
+    let plan = dse::SweepPlan::full(&space, 2, dse::Objective::PerfPerArea, 5);
 
-    let plain = dse::stream_space_eval(
-        &space,
-        2,
-        dse::Objective::PerfPerArea,
-        5,
-        &eval,
-        |_p| None,
-        |_row| {},
-        &SweepCtl::new(),
-    );
+    let plain = dse::sweep(&plan, &source, |_p| None, |_row| {}, &SweepCtl::new());
 
     let seen = Arc::new(AtomicUsize::new(0));
     let seen2 = seen.clone();
-    let observed = dse::stream_space_eval(
-        &space,
-        2,
-        dse::Objective::PerfPerArea,
-        5,
-        &eval,
+    let observed = dse::sweep(
+        &plan,
+        &source,
         |_p| None,
         |_row| {},
         &SweepCtl::with_observer(move |n| {
@@ -325,7 +315,7 @@ fn search_trace_sink_leaves_outputs_byte_identical() {
         quidam::search::run_search(
             &space,
             &cfg,
-            &eval,
+            dse::FnEval(&eval),
             None,
             &SweepCtl::new(),
             |stat, _summary| {
